@@ -1,0 +1,74 @@
+//! Quickstart: train DC-SVM on a synthetic workload, verify it reaches the
+//! same optimum as the direct exact solver, and predict.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use dcsvm::data::synthetic;
+use dcsvm::dcsvm::{train, DcSvmConfig};
+use dcsvm::harness;
+use dcsvm::kernel::KernelKind;
+use dcsvm::predict::SvmModel;
+use dcsvm::solver::{solve_svm, SmoConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: a covtype-like synthetic binary problem (see DESIGN.md §5).
+    let spec = synthetic::covtype_like();
+    let (train_set, test_set) = synthetic::generate_split(&spec, 3000, 800, 7);
+    println!(
+        "dataset: {} — {} train / {} test, dim {}",
+        spec.name,
+        train_set.len(),
+        test_set.len(),
+        train_set.dim
+    );
+
+    // 2. Kernel backend: PJRT (AOT Pallas artifacts) when built, else native.
+    let kind = KernelKind::Rbf { gamma: 16.0 };
+    let kernel = harness::make_kernel(kind, "auto", train_set.dim)?;
+    println!(
+        "backend: {}",
+        if harness::global_engine().is_some() { "pjrt" } else { "native" }
+    );
+
+    // 3. Train DC-SVM (multilevel divide-and-conquer, Algorithm 1).
+    let cfg = DcSvmConfig {
+        kind,
+        c: 4.0,
+        levels: 3,
+        k_base: 4,
+        sample_m: 128,
+        eps_final: 1e-5,
+        ..Default::default()
+    };
+    let dc = train(&train_set, kernel.as_ref(), &cfg);
+    println!(
+        "DC-SVM: {:.2}s total ({} levels), objective {:.4}, {} SVs",
+        dc.total_s,
+        dc.levels.len(),
+        dc.objective.unwrap(),
+        dc.sv_count()
+    );
+
+    // 4. Cross-check against the direct exact solver (our "LIBSVM").
+    let direct = solve_svm(
+        &train_set,
+        kernel.as_ref(),
+        SmoConfig { c: cfg.c, eps: 1e-5, ..Default::default() },
+    );
+    println!(
+        "direct: {:.2}s, objective {:.4} — DC-SVM warm start cut final-stage \
+         iterations to {} (direct: {})",
+        direct.elapsed_s, direct.objective, dc.final_iterations, direct.iterations
+    );
+
+    // 5. Predict.
+    let model = SvmModel::from_alpha(&train_set, &dc.alpha, kind);
+    let acc = model.accuracy(&test_set, kernel.as_ref());
+    println!("test accuracy: {:.2}%", 100.0 * acc);
+
+    assert!((dc.objective.unwrap() - direct.objective).abs()
+        < 1e-3 * (1.0 + direct.objective.abs()));
+    Ok(())
+}

@@ -1,0 +1,110 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+Run once via ``make artifacts`` (python -m compile.aot --out-dir ../artifacts).
+Python never runs after this; the Rust runtime loads the text with
+``HloModuleProto::from_text_file``.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. (See /opt/xla-example/README.md.)
+
+Besides the .hlo.txt files this writes artifacts/manifest.json describing
+each artifact's input order/shapes/dtypes, which the Rust artifact registry
+validates against at load time.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def catalog():
+    """The artifact catalog: name -> (graph fn, input specs).
+
+    Input order here is the runtime ABI; rust/src/runtime/exec.rs constructs
+    its Literal argument lists in exactly this order.
+    """
+    d, nqs, nqw, nd = M.D_PAD, M.NQ_SLIM, M.NQ_WIDE, M.ND_BLK
+    cat = {}
+
+    def add(name, fn, specs):
+        cat[name] = (fn, specs)
+
+    for tag, nq in (("slim", nqs), ("wide", nqw)):
+        add(f"rbf_block_{tag}", M.rbf_block_graph,
+            [_spec((nq, d)), _spec((nd, d)), _spec((nq,)), _spec((nd,)),
+             _spec((1,))])
+        add(f"poly_block_{tag}", M.poly_block_graph,
+            [_spec((nq, d)), _spec((nd, d)), _spec((1,)), _spec((1,))])
+    add("lin_block_wide", M.lin_block_graph,
+        [_spec((M.NQ_WIDE, d)), _spec((nd, d))])
+    add("rbf_decision_wide", M.rbf_decision_graph,
+        [_spec((nqw, d)), _spec((nd, d)), _spec((nqw,)), _spec((nd,)),
+         _spec((nd,)), _spec((1,))])
+    add("poly_decision_wide", M.poly_decision_graph,
+        [_spec((nqw, d)), _spec((nd, d)), _spec((nd,)), _spec((1,)),
+         _spec((1,))])
+    return cat
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, only=None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"d_pad": M.D_PAD, "nq_slim": M.NQ_SLIM, "nq_wide": M.NQ_WIDE,
+                "nd_blk": M.ND_BLK, "artifacts": {}}
+    for name, (fn, specs) in catalog().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_aval = lowered.out_info
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in specs],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of artifact names to rebuild")
+    args = ap.parse_args()
+    print(f"lowering artifacts to {args.out_dir}")
+    build(args.out_dir, args.only)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""L1 Pallas kernels: fused kernel-block x coefficient decision values.
+
+Prediction (and the warm-start gradient reconstruction in the Rust solver)
+needs decision values
+
+    dv_i = sum_j coef_j * K(xq_i, xd_j),        coef_j = alpha_j * y_j
+
+The naive path materializes the [nq, nd] kernel block in HBM and then does a
+GEMV. The fused kernel below keeps each (QT, DT) kernel tile in VMEM and
+accumulates the partial GEMV across the data-tile grid dimension, so the
+kernel block never leaves VMEM — the TPU analogue of the paper's "only touch
+the kernel entries you need". Zero-padded coef entries contribute nothing,
+which makes the Rust runtime's tile padding exact.
+
+Accumulation pattern: the output block index_map ignores the data-grid index
+j, so Pallas revisits the same output tile for j = 0..grid_j-1 (the grid is
+iterated sequentially, last dim fastest); we initialize at j == 0 and
+accumulate afterwards.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf import QT, DT
+
+
+def _rbf_decision_kernel(xq_ref, xd_ref, nq2_ref, nd2_ref, coef_ref,
+                         gamma_ref, out_ref):
+    j = pl.program_id(1)
+    cross = jax.lax.dot_general(
+        xq_ref[...], xd_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    d2 = nq2_ref[...][:, None] + nd2_ref[...][None, :] - 2.0 * cross
+    ktile = jnp.exp(-gamma_ref[0] * jnp.maximum(d2, 0.0))
+    part = ktile @ coef_ref[...]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + part
+
+
+def rbf_decision(xq, xd, nq2, nd2, coef, gamma, *, interpret=True):
+    """Fused RBF decision values -> f32[nq]."""
+    nq, d = xq.shape
+    nd, _ = xd.shape
+    grid = (nq // QT, nd // DT)
+    return pl.pallas_call(
+        _rbf_decision_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QT, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((DT, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((QT,), lambda i, j: (i,)),
+            pl.BlockSpec((DT,), lambda i, j: (j,)),
+            pl.BlockSpec((DT,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((QT,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.float32),
+        interpret=interpret,
+    )(xq, xd, nq2, nd2, coef, gamma)
+
+
+def _poly_decision_kernel(xq_ref, xd_ref, coef_ref, gamma_ref, eta_ref,
+                          out_ref):
+    j = pl.program_id(1)
+    cross = jax.lax.dot_general(
+        xq_ref[...], xd_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    g = gamma_ref[0] * cross + eta_ref[0]
+    part = (g * g * g) @ coef_ref[...]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + part
+
+
+def poly_decision(xq, xd, coef, gamma, eta, *, interpret=True):
+    """Fused degree-3 polynomial decision values -> f32[nq]."""
+    nq, d = xq.shape
+    nd, _ = xd.shape
+    grid = (nq // QT, nd // DT)
+    return pl.pallas_call(
+        _poly_decision_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QT, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((DT, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((DT,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((QT,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.float32),
+        interpret=interpret,
+    )(xq, xd, coef, gamma, eta)

@@ -1,0 +1,76 @@
+"""L1 Pallas kernels: tiled polynomial and linear kernel blocks.
+
+Polynomial: K[i, j] = (gamma * <xq_i, xd_j> + eta)^degree (paper uses
+degree 3, eta = 0 — the LIBSVM default — with gamma tuned; both eta and
+gamma are runtime inputs so one artifact covers the grid sweeps).
+
+Linear: K[i, j] = <xq_i, xd_j> (substrate for LLSVM / FastFood / LTPU whose
+second stage is a linear SVM over explicit features).
+
+Same tiling story as rbf.py: the cross term is one MXU matmul per
+(QT, DT) = (64, 512) output tile, the integer power is a VPU elementwise
+chain (g*g*g — no transcendental pow on the hot path).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf import QT, DT
+
+DEGREE = 3  # paper's polynomial experiments use degree 3
+
+
+def _poly_block_kernel(xq_ref, xd_ref, gamma_ref, eta_ref, out_ref):
+    cross = jax.lax.dot_general(
+        xq_ref[...], xd_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    g = gamma_ref[0] * cross + eta_ref[0]
+    # Integer power by explicit multiply chain (VPU-friendly, exact).
+    out_ref[...] = g * g * g
+
+
+def poly_block(xq, xd, gamma, eta, *, interpret=True):
+    """Tiled degree-3 polynomial kernel block -> f32[nq, nd]."""
+    nq, d = xq.shape
+    nd, _ = xd.shape
+    grid = (nq // QT, nd // DT)
+    return pl.pallas_call(
+        _poly_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QT, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((DT, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((QT, DT), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, nd), jnp.float32),
+        interpret=interpret,
+    )(xq, xd, gamma, eta)
+
+
+def _lin_block_kernel(xq_ref, xd_ref, out_ref):
+    out_ref[...] = jax.lax.dot_general(
+        xq_ref[...], xd_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def lin_block(xq, xd, *, interpret=True):
+    """Tiled linear kernel block -> f32[nq, nd]."""
+    nq, d = xq.shape
+    nd, _ = xd.shape
+    grid = (nq // QT, nd // DT)
+    return pl.pallas_call(
+        _lin_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QT, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((DT, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((QT, DT), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, nd), jnp.float32),
+        interpret=interpret,
+    )(xq, xd)

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: tiled RBF kernel block.
+
+Computes K[i, j] = exp(-gamma * ||xq_i - xd_j||^2) for a query block against
+a data block, using the norm decomposition
+
+    ||xq_i - xd_j||^2 = ||xq_i||^2 + ||xd_j||^2 - 2 <xq_i, xd_j>
+
+so the O(nq * nd * d) work is a single MXU matmul (the cross term); the VPU
+handles the rank-1 norm broadcasts and the exp over the output tile.
+
+TPU mapping (see DESIGN.md "Hardware adaptation"):
+- tile (QT, D) x (DT, D) -> (QT, DT) = (64, 128) x (512, 128) -> (64, 512);
+  VMEM footprint ~= 64*128 + 512*128 + 64*512 floats ~= 424 KiB << 16 MiB,
+  leaving room for double buffering of the HBM->VMEM streams;
+- both output dims are (8, 128)-lane aligned;
+- gamma is a runtime input (shape (1,)), so a single compiled artifact
+  serves every point of the paper's (C, gamma) grid.
+
+Must be lowered with interpret=True: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO ops instead.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes for the BlockSpec grid (not the artifact shape; aot.py picks
+# artifact shapes that are multiples of these).
+QT = 64    # query-rows per tile (8 sublanes * 8)
+DT = 512   # data-rows per tile (4 * 128 lanes)
+
+
+def _rbf_block_kernel(xq_ref, xd_ref, nq2_ref, nd2_ref, gamma_ref, out_ref):
+    xq = xq_ref[...]
+    xd = xd_ref[...]
+    # Cross term on the MXU; contract the feature dim of both operands so no
+    # transpose of xd ever materializes.
+    cross = jax.lax.dot_general(
+        xq, xd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = nq2_ref[...][:, None] + nd2_ref[...][None, :] - 2.0 * cross
+    # Clamp float error: d2 is mathematically >= 0.
+    d2 = jnp.maximum(d2, 0.0)
+    out_ref[...] = jnp.exp(-gamma_ref[0] * d2)
+
+
+def rbf_block(xq, xd, nq2, nd2, gamma, *, interpret=True):
+    """Tiled RBF kernel block.
+
+    Args:
+      xq:   f32[nq, d]  query rows (nq % QT == 0)
+      xd:   f32[nd, d]  data rows  (nd % DT == 0)
+      nq2:  f32[nq]     precomputed ||xq_i||^2
+      nd2:  f32[nd]     precomputed ||xd_j||^2
+      gamma: f32[1]     RBF width (runtime input, not baked)
+
+    Returns:
+      f32[nq, nd] kernel block.
+    """
+    nq, d = xq.shape
+    nd, _ = xd.shape
+    grid = (nq // QT, nd // DT)
+    return pl.pallas_call(
+        _rbf_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QT, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((DT, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((QT,), lambda i, j: (i,)),
+            pl.BlockSpec((DT,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((QT, DT), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, nd), jnp.float32),
+        interpret=interpret,
+    )(xq, xd, nq2, nd2, gamma)

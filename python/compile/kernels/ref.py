@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package must match its oracle here to float32
+tolerance under pytest (python/tests/test_kernels.py). The oracles are also
+the ground truth the Rust native backend is cross-checked against (the same
+formulas are implemented in rust/src/kernel/native.rs).
+
+Conventions
+-----------
+- ``xq``: query block, float32 [nq, d]
+- ``xd``: data block, float32 [nd, d]
+- ``nq2``/``nd2``: precomputed squared norms ||x||^2, float32 [nq]/[nd].
+  Passing norms in (rather than recomputing) makes zero-padding of the
+  feature dimension exact and saves FLOPs on the hot path.
+- scalars (gamma, eta) are runtime inputs so one AOT artifact serves the
+  whole (C, gamma) grid of the paper's Tables 7-10.
+"""
+
+import jax.numpy as jnp
+
+
+def rbf_block_ref(xq, xd, nq2, nd2, gamma):
+    """RBF kernel block: K[i,j] = exp(-gamma * ||xq_i - xd_j||^2)."""
+    d2 = nq2[:, None] + nd2[None, :] - 2.0 * jnp.dot(xq, xd.T)
+    # Squared distances are mathematically >= 0; clamp the float error so
+    # exp never sees a positive argument scaled by -gamma.
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.exp(-gamma * d2)
+
+
+def poly_block_ref(xq, xd, gamma, eta, degree=3):
+    """Polynomial kernel block: K[i,j] = (gamma * <xq_i, xd_j> + eta)^degree."""
+    g = gamma * jnp.dot(xq, xd.T) + eta
+    return g ** degree
+
+
+def linear_block_ref(xq, xd):
+    """Linear kernel block: K[i,j] = <xq_i, xd_j>."""
+    return jnp.dot(xq, xd.T)
+
+
+def rbf_decision_ref(xq, xd, nq2, nd2, coef, gamma):
+    """Fused decision values: rbf_block(...) @ coef  -> [nq].
+
+    ``coef`` holds alpha_i * y_i for the support vectors in ``xd``;
+    zero-padded entries contribute nothing, making tile padding exact.
+    """
+    return rbf_block_ref(xq, xd, nq2, nd2, gamma) @ coef
+
+
+def poly_decision_ref(xq, xd, coef, gamma, eta, degree=3):
+    """Fused decision values for the polynomial kernel -> [nq]."""
+    return poly_block_ref(xq, xd, gamma, eta, degree) @ coef

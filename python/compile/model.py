@@ -1,0 +1,112 @@
+"""L2: JAX compute graphs over the Pallas kernels, with the AOT signatures.
+
+This is the layer aot.py lowers to HLO text. Each public ``*_graph``
+function is a pure jax function whose positional signature exactly matches
+the artifact's runtime input order (documented in artifacts/manifest.json and
+mirrored by rust/src/runtime/).
+
+The graphs are intentionally thin — the paper's compute hot-spot *is* the
+kernel block evaluation, so L2's job is (a) giving the kernels stable AOT
+signatures, and (b) providing padded wrappers used by the python tests to
+exercise arbitrary (non-tile-multiple) shapes the way the Rust runtime does.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.rbf import rbf_block, QT, DT
+from .kernels.poly import poly_block, lin_block
+from .kernels.decision import rbf_decision, poly_decision
+
+# ---------------------------------------------------------------------------
+# Artifact shape catalog. Every entry becomes artifacts/<name>.hlo.txt.
+# D_PAD is the padded feature dimension all datasets are embedded into
+# (zero-padding is exact for rbf given norms are inputs, and for poly/linear
+# trivially). Two query-block variants per op: a slim one for kernel-row
+# fetches from the solver hot loop, a wide one for bulk work (kmeans
+# assignment, prediction, warm-start gradients).
+# ---------------------------------------------------------------------------
+D_PAD = 128
+NQ_SLIM = 64
+NQ_WIDE = 256
+ND_BLK = 1024
+
+assert NQ_SLIM % QT == 0 and NQ_WIDE % QT == 0 and ND_BLK % DT == 0
+
+
+def rbf_block_graph(xq, xd, nq2, nd2, gamma):
+    """AOT graph: RBF kernel block (see kernels/rbf.py)."""
+    return rbf_block(xq, xd, nq2, nd2, gamma)
+
+
+def poly_block_graph(xq, xd, gamma, eta):
+    """AOT graph: degree-3 polynomial kernel block."""
+    return poly_block(xq, xd, gamma, eta)
+
+
+def lin_block_graph(xq, xd):
+    """AOT graph: linear kernel block."""
+    return lin_block(xq, xd)
+
+
+def rbf_decision_graph(xq, xd, nq2, nd2, coef, gamma):
+    """AOT graph: fused RBF decision values."""
+    return rbf_decision(xq, xd, nq2, nd2, coef, gamma)
+
+
+def poly_decision_graph(xq, xd, coef, gamma, eta):
+    """AOT graph: fused polynomial decision values."""
+    return poly_decision(xq, xd, coef, gamma, eta)
+
+
+# ---------------------------------------------------------------------------
+# Padded wrappers: compute on arbitrary shapes by embedding into tile
+# multiples, exactly as the Rust runtime does. Used by python/tests to verify
+# that padding is exact.
+# ---------------------------------------------------------------------------
+
+def _pad2(a, rows, cols):
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+def _pad1(a, n):
+    return jnp.pad(a, (0, n - a.shape[0]))
+
+
+def _ceil_to(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def rbf_block_padded(xq, xd, gamma):
+    """RBF block of arbitrary shape via padding to tile multiples."""
+    nq, nd = xq.shape[0], xd.shape[0]
+    pq, pd_ = _ceil_to(max(nq, 1), QT), _ceil_to(max(nd, 1), DT)
+    dpad = _ceil_to(xq.shape[1], 8)
+    xqp, xdp = _pad2(xq, pq, dpad), _pad2(xd, pd_, dpad)
+    nq2 = _pad1((xq * xq).sum(axis=1), pq)
+    nd2 = _pad1((xd * xd).sum(axis=1), pd_)
+    out = rbf_block(xqp, xdp, nq2, nd2, jnp.array([gamma], jnp.float32))
+    return out[:nq, :nd]
+
+
+def poly_block_padded(xq, xd, gamma, eta):
+    """Polynomial block of arbitrary shape via padding."""
+    nq, nd = xq.shape[0], xd.shape[0]
+    pq, pd_ = _ceil_to(max(nq, 1), QT), _ceil_to(max(nd, 1), DT)
+    dpad = _ceil_to(xq.shape[1], 8)
+    out = poly_block(_pad2(xq, pq, dpad), _pad2(xd, pd_, dpad),
+                     jnp.array([gamma], jnp.float32),
+                     jnp.array([eta], jnp.float32))
+    return out[:nq, :nd]
+
+
+def rbf_decision_padded(xq, xd, coef, gamma):
+    """Fused RBF decision values of arbitrary shape via padding."""
+    nq, nd = xq.shape[0], xd.shape[0]
+    pq, pd_ = _ceil_to(max(nq, 1), QT), _ceil_to(max(nd, 1), DT)
+    dpad = _ceil_to(xq.shape[1], 8)
+    xqp, xdp = _pad2(xq, pq, dpad), _pad2(xd, pd_, dpad)
+    nq2 = _pad1((xq * xq).sum(axis=1), pq)
+    nd2 = _pad1((xd * xd).sum(axis=1), pd_)
+    out = rbf_decision(xqp, xdp, nq2, nd2, _pad1(coef, pd_),
+                       jnp.array([gamma], jnp.float32))
+    return out[:nq]

@@ -1,0 +1,92 @@
+"""AOT path tests: lowering determinism, manifest consistency, HLO sanity.
+
+These protect the Rust runtime ABI: if an artifact's input order, shape, or
+entry signature drifts, these fail before `cargo test` ever sees a bad
+artifact.
+"""
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built():
+    with tempfile.TemporaryDirectory() as td:
+        manifest = aot.build(td)
+        texts = {}
+        for name, meta in manifest["artifacts"].items():
+            with open(os.path.join(td, meta["file"])) as f:
+                texts[name] = f.read()
+        yield manifest, texts
+
+
+def test_catalog_complete(built):
+    manifest, _ = built
+    expected = {
+        "rbf_block_slim", "rbf_block_wide", "poly_block_slim",
+        "poly_block_wide", "lin_block_wide", "rbf_decision_wide",
+        "poly_decision_wide",
+    }
+    assert set(manifest["artifacts"]) == expected
+
+
+def test_manifest_tile_constants(built):
+    manifest, _ = built
+    assert manifest["d_pad"] == M.D_PAD
+    assert manifest["nq_slim"] == M.NQ_SLIM
+    assert manifest["nq_wide"] == M.NQ_WIDE
+    assert manifest["nd_blk"] == M.ND_BLK
+
+
+def test_hlo_is_text_with_entry(built):
+    _, texts = built
+    for name, text in texts.items():
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+        # No Mosaic custom-calls: interpret=True must lower to plain HLO.
+        assert "tpu_custom_call" not in text, name
+        assert "mosaic" not in text.lower(), name
+
+
+def test_parameter_counts_match_manifest(built):
+    manifest, texts = built
+    for name, meta in manifest["artifacts"].items():
+        # Count parameter(i) instructions inside the ENTRY computation body.
+        lines = texts[name].splitlines()
+        start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        body = []
+        for l in lines[start + 1:]:
+            if l.startswith("}"):
+                break
+            body.append(l)
+        nparams = sum(1 for l in body if re.search(r"parameter\(\d+\)", l))
+        assert nparams == len(meta["inputs"]), name
+
+
+def test_lowering_deterministic():
+    """Two lowers of the same graph produce identical HLO text."""
+    spec = [jax.ShapeDtypeStruct(tuple(s), jax.numpy.float32)
+            for s in [(64, 128), (1024, 128), (64,), (1024,), (1,)]]
+    t1 = aot.to_hlo_text(jax.jit(M.rbf_block_graph).lower(*spec))
+    t2 = aot.to_hlo_text(jax.jit(M.rbf_block_graph).lower(*spec))
+    assert t1 == t2
+
+
+def test_repo_artifacts_in_sync_if_present():
+    """If artifacts/ is already built, it must match the current catalog."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts/ not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert set(manifest["artifacts"]) == set(aot.catalog().keys())
+    for name, meta in manifest["artifacts"].items():
+        assert os.path.exists(os.path.join(root, meta["file"])), name

@@ -1,0 +1,177 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the core correctness signal for the compile path: if these pass, the
+HLO artifacts the Rust runtime executes compute exactly the oracle formulas.
+Hypothesis sweeps shapes and kernel parameters; fixed tests pin the exact
+tile shapes the AOT catalog uses.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+from compile.kernels.rbf import rbf_block, QT, DT
+from compile.kernels.poly import poly_block, lin_block
+from compile.kernels.decision import rbf_decision, poly_decision
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _data(nq, nd, d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    xq = (rng.normal(size=(nq, d)) * scale).astype(np.float32)
+    xd = (rng.normal(size=(nd, d)) * scale).astype(np.float32)
+    return jnp.asarray(xq), jnp.asarray(xd)
+
+
+def _norms(x):
+    return (x * x).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Exact-tile tests (the shapes the AOT artifacts are compiled at)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nq", [M.NQ_SLIM, M.NQ_WIDE])
+@pytest.mark.parametrize("gamma", [0.01, 0.5, 32.0])
+def test_rbf_block_tile_shapes(nq, gamma):
+    xq, xd = _data(nq, M.ND_BLK, M.D_PAD, seed=nq)
+    got = rbf_block(xq, xd, _norms(xq), _norms(xd),
+                    jnp.array([gamma], jnp.float32))
+    want = ref.rbf_block_ref(xq, xd, _norms(xq), _norms(xd), gamma)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("nq", [M.NQ_SLIM, M.NQ_WIDE])
+@pytest.mark.parametrize("gamma,eta", [(1.0, 0.0), (0.25, 1.0)])
+def test_poly_block_tile_shapes(nq, gamma, eta):
+    xq, xd = _data(nq, M.ND_BLK, M.D_PAD, seed=nq, scale=0.3)
+    got = poly_block(xq, xd, jnp.array([gamma], jnp.float32),
+                     jnp.array([eta], jnp.float32))
+    want = ref.poly_block_ref(xq, xd, gamma, eta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_lin_block_tile_shape():
+    xq, xd = _data(M.NQ_WIDE, M.ND_BLK, M.D_PAD)
+    got = lin_block(xq, xd)
+    np.testing.assert_allclose(got, ref.linear_block_ref(xq, xd),
+                               rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("gamma", [0.1, 2.0])
+def test_rbf_decision_tile_shape(gamma):
+    xq, xd = _data(M.NQ_WIDE, M.ND_BLK, M.D_PAD)
+    rng = np.random.default_rng(7)
+    coef = jnp.asarray(rng.normal(size=(M.ND_BLK,)).astype(np.float32))
+    got = rbf_decision(xq, xd, _norms(xq), _norms(xd), coef,
+                       jnp.array([gamma], jnp.float32))
+    want = ref.rbf_decision_ref(xq, xd, _norms(xq), _norms(xd), coef, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_poly_decision_tile_shape():
+    xq, xd = _data(M.NQ_WIDE, M.ND_BLK, M.D_PAD, scale=0.3)
+    rng = np.random.default_rng(8)
+    coef = jnp.asarray(rng.normal(size=(M.ND_BLK,)).astype(np.float32))
+    got = poly_decision(xq, xd, coef, jnp.array([0.5], jnp.float32),
+                        jnp.array([0.0], jnp.float32))
+    want = ref.poly_decision_ref(xq, xd, coef, 0.5, 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tile grid accumulation: the decision kernel must revisit its output
+# block across the data-grid dimension (j) and accumulate exactly.
+# ---------------------------------------------------------------------------
+
+def test_rbf_decision_multitile_accumulation():
+    nq, nd = 2 * QT, 2 * DT   # grid (2, 2): j-accumulation exercised
+    xq, xd = _data(nq, nd, 32, seed=3)
+    rng = np.random.default_rng(3)
+    coef = jnp.asarray(rng.normal(size=(nd,)).astype(np.float32))
+    got = rbf_decision(xq, xd, _norms(xq), _norms(xd), coef,
+                       jnp.array([1.0], jnp.float32))
+    want = ref.rbf_decision_ref(xq, xd, _norms(xq), _norms(xd), coef, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Padding exactness: the padded wrappers reproduce exactly how the Rust
+# runtime embeds arbitrary shapes into the fixed artifact tiles.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nq=st.integers(1, 140),
+    nd=st.integers(1, 600),
+    d=st.integers(1, 128),
+    gamma=st.floats(1e-3, 64.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_padding_exact(nq, nd, d, gamma, seed):
+    xq, xd = _data(nq, nd, d, seed=seed)
+    got = M.rbf_block_padded(xq, xd, gamma)
+    want = ref.rbf_block_ref(xq, xd, _norms(xq), _norms(xd), gamma)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nq=st.integers(1, 100),
+    nd=st.integers(1, 520),
+    d=st.integers(1, 64),
+    gamma=st.floats(1e-2, 4.0),
+    eta=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_poly_padding_exact(nq, nd, d, gamma, eta, seed):
+    rng = np.random.default_rng(seed)
+    xq = jnp.asarray((rng.normal(size=(nq, d)) * 0.3).astype(np.float32))
+    xd = jnp.asarray((rng.normal(size=(nd, d)) * 0.3).astype(np.float32))
+    got = M.poly_block_padded(xq, xd, gamma, eta)
+    want = ref.poly_block_ref(xq, xd, gamma, eta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nq=st.integers(1, 100),
+    nd=st.integers(1, 520),
+    d=st.integers(1, 64),
+    gamma=st.floats(1e-2, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_decision_padding_exact(nq, nd, d, gamma, seed):
+    xq, xd = _data(nq, nd, d, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    coef = jnp.asarray(rng.normal(size=(nd,)).astype(np.float32))
+    got = M.rbf_decision_padded(xq, xd, coef, gamma)
+    want = ref.rbf_decision_ref(xq, xd, _norms(xq), _norms(xd), coef, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Mathematical invariants of the kernels themselves
+# ---------------------------------------------------------------------------
+
+def test_rbf_range_and_diagonal():
+    x, _ = _data(96, 1, 16, seed=11)
+    k = M.rbf_block_padded(x, x, 0.7)
+    assert float(k.min()) >= 0.0 and float(k.max()) <= 1.0 + 1e-6
+    np.testing.assert_allclose(np.diag(np.asarray(k)), 1.0, atol=1e-5)
+
+
+def test_rbf_symmetry():
+    x, _ = _data(80, 1, 24, seed=12)
+    k = np.asarray(M.rbf_block_padded(x, x, 0.3))
+    np.testing.assert_allclose(k, k.T, atol=1e-6)
+
+
+def test_rbf_gamma_zero_is_all_ones():
+    xq, xd = _data(10, 20, 8, seed=13)
+    k = M.rbf_block_padded(xq, xd, 0.0)
+    np.testing.assert_allclose(k, 1.0, atol=1e-6)

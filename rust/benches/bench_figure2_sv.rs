@@ -1,0 +1,106 @@
+//! Figure 2: support-vector identification.
+//!
+//! (a/b/e/f) precision & recall of the SV set at every DC-SVM level vs the
+//! final SV set, against CascadeSVM's per-level SV sets.
+//! (c/d/g/h) SVs recovered over time: DC-SVM levels vs the cold solver's
+//! shrinking trajectory.
+
+use dcsvm::baselines::cascade;
+use dcsvm::bench::{banner, fmt_secs, Table};
+use dcsvm::data::synthetic::{covtype_like, generate_split, ijcnn1_like};
+use dcsvm::dcsvm::{train, DcSvmConfig};
+use dcsvm::kernel::{native::NativeKernel, KernelKind};
+use dcsvm::metrics::sv_precision_recall;
+use dcsvm::solver::{SmoConfig, SmoSolver};
+
+fn main() {
+    banner("Figure 2", "SV identification: DC-SVM levels vs CascadeSVM vs LIBSVM shrinking");
+    // ijcnn1-like stands in for the paper's webspam panel (see bench_table1).
+    for (spec, gamma) in [(covtype_like(), 32.0f32), (ijcnn1_like(), 4.0)] {
+        let (tr, _) = generate_split(&spec, 2000, 200, 11);
+        let kind = KernelKind::Rbf { gamma };
+        let kern = NativeKernel::new(kind);
+        let c = 4.0;
+        println!("\n--- dataset {} (n={}) ---", spec.name, tr.len());
+
+        // Reference SV set: high-precision solve.
+        let star = SmoSolver::new(
+            &tr,
+            &kern,
+            SmoConfig { c, eps: 1e-7, ..Default::default() },
+        )
+        .solve();
+        println!("reference SVs: {}", star.sv_count);
+
+        // DC-SVM per-level precision/recall.
+        let cfg = DcSvmConfig {
+            kind,
+            c,
+            levels: 4, // bottom level = 256 clusters, as in the paper
+            k_base: 4,
+            sample_m: 128,
+            eps_final: 1e-6,
+            keep_level_alphas: true,
+            ..Default::default()
+        };
+        let dc = train(&tr, &kern, &cfg);
+        let mut t = Table::new(&["method", "level (k)", "precision", "recall", "cum time"]);
+        for ls in &dc.levels {
+            let (p, r) = sv_precision_recall(ls.alpha.as_ref().unwrap(), &star.alpha);
+            t.row(&[
+                "DC-SVM".into(),
+                format!("{} ({})", ls.level, ls.k),
+                format!("{:.3}", p),
+                format!("{:.3}", r),
+                fmt_secs(ls.cumulative_s),
+            ]);
+        }
+
+        // CascadeSVM: per-pass SV sets (recall only grows by luck — false
+        // negatives cannot be recovered).
+        let cres = cascade::train(
+            &tr,
+            &kern,
+            &cascade::CascadeConfig { kind, c, depth: 4, ..Default::default() },
+        );
+        let (p, r) = sv_precision_recall(&cres.alpha, &star.alpha);
+        t.row(&[
+            "CascadeSVM".into(),
+            format!("root ({} passes)", cres.level_sv_counts.len()),
+            format!("{:.3}", p),
+            format!("{:.3}", r),
+            fmt_secs(cres.elapsed_s),
+        ]);
+
+        // LIBSVM shrinking trajectory: SV recall of the running α over time.
+        let mut series = Vec::new();
+        let mut solver = SmoSolver::new(
+            &tr,
+            &kern,
+            SmoConfig { c, eps: 1e-6, report_every: 500, ..Default::default() },
+        );
+        solver.solve_warm(None, &mut |p| {
+            let (_, rec) = sv_precision_recall(p.alpha, &star.alpha);
+            series.push((p.elapsed_s, rec));
+        });
+        for &(ts, rec) in series
+            .iter()
+            .step_by((series.len() / 5).max(1))
+            .chain(series.last().into_iter())
+        {
+            t.row(&[
+                "LIBSVM-shrink".into(),
+                "(running)".into(),
+                "—".into(),
+                format!("{rec:.3}"),
+                fmt_secs(ts),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "\nexpected shape: DC-SVM ≥90% precision/recall even at the bottom \
+         level and earlier in wall-clock than the shrinking trajectory; \
+         CascadeSVM recall below DC-SVM."
+    );
+}

@@ -1,0 +1,86 @@
+//! Figure 4: degree-3 polynomial kernel on covtype-like and webspam-like —
+//! objective vs time (a, c) and test accuracy vs time (b, d) for
+//! DC-SVM / LIBSVM / LaSVM.
+
+use dcsvm::baselines::lasvm;
+use dcsvm::bench::{banner, fmt_secs};
+use dcsvm::data::synthetic::{covtype_like, generate_split, webspam_like};
+use dcsvm::dcsvm::{train, DcSvmConfig};
+use dcsvm::kernel::{native::NativeKernel, KernelKind};
+use dcsvm::metrics::relative_error;
+use dcsvm::predict::SvmModel;
+use dcsvm::solver::{SmoConfig, SmoSolver};
+
+fn main() {
+    banner("Figure 4", "polynomial kernel (degree 3): objective + accuracy vs time");
+    let n = if std::env::var("FULL").is_ok() { 5000 } else { 2000 };
+    // paper: covtype C=2 γ=1, webspam C=8 γ=16, η=0
+    for (spec, c, gamma) in [(covtype_like(), 2.0, 1.0f32), (webspam_like(), 8.0, 16.0)] {
+        let (tr, te) = generate_split(&spec, n, 700, 44);
+        let kind = KernelKind::Poly { gamma, eta: 0.0 };
+        let kern = NativeKernel::new(kind);
+        println!("\n--- {} (poly³, C={c}, γ={gamma}) ---", spec.name);
+
+        // reference optimum
+        let star = SmoSolver::new(
+            &tr,
+            &kern,
+            SmoConfig { c, eps: 1e-7, ..Default::default() },
+        )
+        .solve();
+
+        // LIBSVM trace
+        let mut lib_series = Vec::new();
+        let lib = SmoSolver::new(
+            &tr,
+            &kern,
+            SmoConfig { c, eps: 1e-6, report_every: 400, ..Default::default() },
+        )
+        .solve_warm(None, &mut |p| lib_series.push((p.elapsed_s, p.objective)));
+
+        // DC-SVM
+        let cfg = DcSvmConfig {
+            kind,
+            c,
+            levels: 3,
+            sample_m: 128,
+            eps_final: 1e-6,
+            ..Default::default()
+        };
+        let dc = train(&tr, &kern, &cfg);
+
+        // LaSVM
+        let las = lasvm::train(
+            &tr,
+            &kern,
+            &lasvm::LaSvmConfig { kind, c, eps: 1e-3, ..Default::default() },
+        );
+
+        println!("objective rel-err vs time:");
+        for (name, series) in [("LIBSVM", &lib_series), ("DC-SVM", &dc.trace.points)] {
+            for &(ts, f) in series.iter().step_by((series.len() / 4).max(1)) {
+                println!(
+                    "  {name:>8} t={:>8} rel-err={:.2e}",
+                    fmt_secs(ts),
+                    relative_error(f, star.objective)
+                );
+            }
+        }
+
+        println!("final accuracy vs time:");
+        let acc = |alpha: &[f64]| {
+            SvmModel::from_alpha(&tr, alpha, kind).accuracy(&te, &kern)
+        };
+        println!("  DC-SVM   t={:>8} acc={:.2}%", fmt_secs(dc.total_s), 100.0 * acc(&dc.alpha));
+        println!("  LIBSVM   t={:>8} acc={:.2}%", fmt_secs(lib.elapsed_s), 100.0 * acc(&lib.alpha));
+        println!("  LaSVM    t={:>8} acc={:.2}%", fmt_secs(las.elapsed_s), 100.0 * acc(&las.alpha));
+
+        let rel = relative_error(dc.objective.unwrap(), star.objective);
+        assert!(rel < 1e-3, "DC-SVM poly rel err {rel}");
+    }
+    println!(
+        "\nexpected shape (paper Fig. 4): DC-SVM reduces the objective far \
+         faster than LIBSVM under the polynomial kernel (the paper reports \
+         >100x there; LIBSVM struggles to identify poly-kernel SVs)."
+    );
+}

@@ -1,0 +1,133 @@
+//! Plain euclidean kmeans (Lloyd) — substrate for the landmark/center-based
+//! baselines (LLSVM's kmeans Nyström, LTPU's RBF units).
+
+use crate::util::prng::Pcg64;
+
+/// Run Lloyd kmeans on row-major `x` ([n, d]); returns centers ([k, d]).
+pub fn kmeans_centers(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg64,
+) -> Vec<f64> {
+    assert_eq!(x.len(), n * d);
+    let k = k.min(n).max(1);
+    // kmeans++ init.
+    let mut centers = vec![0f64; k * d];
+    let first = rng.below(n);
+    for j in 0..d {
+        centers[j] = x[first * d + j] as f64;
+    }
+    let dist2 = |xi: &[f32], c: &[f64]| -> f64 {
+        xi.iter()
+            .zip(c)
+            .map(|(&v, &cv)| (v as f64 - cv) * (v as f64 - cv))
+            .sum()
+    };
+    let mut min_d: Vec<f64> = (0..n)
+        .map(|i| dist2(&x[i * d..(i + 1) * d], &centers[0..d]))
+        .collect();
+    for c in 1..k {
+        // sample proportional to distance² (kmeans++)
+        let total: f64 = min_d.iter().sum();
+        let mut target = rng.next_f64() * total.max(1e-30);
+        let mut pick = n - 1;
+        for (i, &dv) in min_d.iter().enumerate() {
+            target -= dv;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        for j in 0..d {
+            centers[c * d + j] = x[pick * d + j] as f64;
+        }
+        for i in 0..n {
+            min_d[i] = min_d[i].min(dist2(&x[i * d..(i + 1) * d], &centers[c * d..(c + 1) * d]));
+        }
+    }
+
+    let mut assign = vec![0usize; n];
+    for _ in 0..max_iter {
+        let mut changed = 0;
+        for i in 0..n {
+            let xi = &x[i * d..(i + 1) * d];
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(xi, &centers[a * d..(a + 1) * d])
+                        .total_cmp(&dist2(xi, &centers[b * d..(b + 1) * d]))
+                })
+                .unwrap();
+            if best != assign[i] {
+                assign[i] = best;
+                changed += 1;
+            }
+        }
+        // recompute centers
+        let mut counts = vec![0usize; k];
+        let mut sums = vec![0f64; k * d];
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            for j in 0..d {
+                sums[assign[i] * d + j] += x[i * d + j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // reseed at a random point
+                let p = rng.below(n);
+                for j in 0..d {
+                    centers[c * d + j] = x[p * d + j] as f64;
+                }
+            } else {
+                for j in 0..d {
+                    centers[c * d + j] = sums[c * d + j] / counts[c] as f64;
+                }
+            }
+        }
+        if changed == 0 {
+            break;
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_blob_centers() {
+        let mut rng = Pcg64::new(1);
+        let truth = [(0.0f64, 0.0f64), (10.0, 0.0), (0.0, 10.0)];
+        let mut x = Vec::new();
+        for &(cx, cy) in &truth {
+            for _ in 0..30 {
+                x.push((cx + rng.next_gaussian() * 0.2) as f32);
+                x.push((cy + rng.next_gaussian() * 0.2) as f32);
+            }
+        }
+        let centers = kmeans_centers(&x, 90, 2, 3, 50, &mut rng);
+        // every true center must be close to some found center
+        for &(cx, cy) in &truth {
+            let best = (0..3)
+                .map(|c| {
+                    let dx = centers[c * 2] - cx;
+                    let dy = centers[c * 2 + 1] - cy;
+                    dx * dx + dy * dy
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 0.05, "center ({cx},{cy}) missed: {best}");
+        }
+    }
+
+    #[test]
+    fn k_capped() {
+        let mut rng = Pcg64::new(2);
+        let x = vec![0f32, 1.0, 2.0];
+        let c = kmeans_centers(&x, 3, 1, 10, 20, &mut rng);
+        assert_eq!(c.len(), 3);
+    }
+}

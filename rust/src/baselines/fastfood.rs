@@ -1,0 +1,253 @@
+//! FastFood (Le, Sarlós, Smola — ICML 2013): loglinear-time random Fourier
+//! features for the RBF kernel, followed by a linear SVM (dual CD) — exactly
+//! the paper's FastFood comparator pipeline.
+//!
+//! Each block of d' = 2^p features is V x = (1/(σ√d')) · S·H·G·Π·H·B·x,
+//! where B is a random ±1 diagonal, H the Walsh–Hadamard transform, Π a
+//! random permutation, G a Gaussian diagonal, and S a scaling diagonal
+//! matched to the χ-distributed row norms of a Gaussian matrix. Features
+//! are [cos(Vx + b)] with random phases b (the standard RFF embedding);
+//! E[φ(x)ᵀφ(z)] → exp(−γ‖x−z‖²) with γ = 1/(2σ²).
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::solver::linear::{train_linear, LinearModel, LinearSvmConfig};
+use crate::util::prng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct FastfoodConfig {
+    /// RBF width: K = exp(−γ‖x−z‖²).
+    pub gamma: f64,
+    pub c: f64,
+    /// Total Fourier features (rounded up to blocks of the padded dim).
+    pub features: usize,
+    pub seed: u64,
+}
+
+impl Default for FastfoodConfig {
+    fn default() -> Self {
+        FastfoodConfig { gamma: 1.0, c: 1.0, features: 512, seed: 0 }
+    }
+}
+
+/// One S·H·G·Π·H·B stack producing d_pad features.
+struct FastfoodBlock {
+    b: Vec<f32>,     // ±1
+    perm: Vec<u32>,
+    g: Vec<f32>,
+    s: Vec<f32>,
+    phase: Vec<f32>, // random phases for the cos embedding
+}
+
+pub struct FastfoodModel {
+    blocks: Vec<FastfoodBlock>,
+    dim: usize,
+    d_pad: usize,
+    scale: f32, // 1/(σ√d_pad) premultiplier
+    feat_scale: f32,
+    pub linear: LinearModel,
+    pub elapsed_s: f64,
+}
+
+/// In-place Walsh–Hadamard transform (length must be a power of two).
+pub fn hadamard(v: &mut [f32]) {
+    let n = v.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let (a, b) = (v[j], v[j + h]);
+                v[j] = a + b;
+                v[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+impl FastfoodModel {
+    fn num_features(&self) -> usize {
+        self.blocks.len() * self.d_pad
+    }
+
+    /// Map one input row to its Fourier features.
+    fn features_row(&self, x: &[f32], out: &mut [f32]) {
+        let dp = self.d_pad;
+        let mut buf = vec![0f32; dp];
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            // B·x (zero-padded)
+            for t in 0..dp {
+                buf[t] = if t < x.len() { x[t] * blk.b[t] } else { 0.0 };
+            }
+            hadamard(&mut buf);
+            // Π
+            let permuted: Vec<f32> =
+                blk.perm.iter().map(|&p| buf[p as usize]).collect();
+            buf.copy_from_slice(&permuted);
+            // G
+            for t in 0..dp {
+                buf[t] *= blk.g[t];
+            }
+            hadamard(&mut buf);
+            // S + global scale, then the cos embedding
+            let dst = &mut out[bi * dp..(bi + 1) * dp];
+            for t in 0..dp {
+                let v = buf[t] * blk.s[t] * self.scale;
+                dst[t] = (v + blk.phase[t]).cos() * self.feat_scale;
+            }
+        }
+    }
+
+    /// Feature matrix for a batch ([n, features] row-major).
+    pub fn features(&self, x: &[f32], n: usize) -> Vec<f32> {
+        let nf = self.num_features();
+        let mut out = vec![0f32; n * nf];
+        for i in 0..n {
+            self.features_row(&x[i * self.dim..(i + 1) * self.dim], &mut out[i * nf..(i + 1) * nf]);
+        }
+        out
+    }
+
+    pub fn predict_batch(&self, x: &[f32], n: usize) -> Vec<i8> {
+        let nf = self.num_features();
+        let feats = self.features(x, n);
+        (0..n).map(|i| self.linear.predict(&feats[i * nf..(i + 1) * nf])).collect()
+    }
+
+    pub fn accuracy(&self, test: &Dataset) -> f64 {
+        let preds = self.predict_batch(&test.x, test.len());
+        crate::metrics::accuracy(&preds, &test.y)
+    }
+
+    /// Monte-Carlo kernel estimate ⟨φ(x), φ(z)⟩ (test hook).
+    pub fn kernel_estimate(&self, x: &[f32], z: &[f32]) -> f64 {
+        let nf = self.num_features();
+        let mut fx = vec![0f32; nf];
+        let mut fz = vec![0f32; nf];
+        self.features_row(x, &mut fx);
+        self.features_row(z, &mut fz);
+        fx.iter().zip(&fz).map(|(&a, &b)| a as f64 * b as f64).sum()
+    }
+}
+
+/// Train the FastFood pipeline.
+pub fn train(ds: &Dataset, cfg: &FastfoodConfig) -> FastfoodModel {
+    let t0 = Instant::now();
+    let dim = ds.dim;
+    let d_pad = dim.next_power_of_two().max(2);
+    let n_blocks = (cfg.features + d_pad - 1) / d_pad;
+    let mut rng = Pcg64::new(cfg.seed);
+
+    // sigma from gamma: K = exp(−γr²) = exp(−r²/(2σ²)) → σ = 1/√(2γ)
+    let sigma = 1.0 / (2.0 * cfg.gamma).sqrt();
+
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        let b: Vec<f32> = (0..d_pad)
+            .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let mut perm: Vec<u32> = (0..d_pad as u32).collect();
+        {
+            let mut p64: Vec<usize> = (0..d_pad).collect();
+            rng.shuffle(&mut p64);
+            for (t, &p) in p64.iter().enumerate() {
+                perm[t] = p as u32;
+            }
+        }
+        let g: Vec<f32> = (0..d_pad).map(|_| rng.next_gaussian() as f32).collect();
+        // S: match row norms to the χ distribution of a Gaussian matrix:
+        // s_i = r_i / ‖G‖_frob where r_i ~ chi(d) approximated by the norm
+        // of a fresh Gaussian d-vector.
+        let gnorm = (g.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()).sqrt();
+        let s: Vec<f32> = (0..d_pad)
+            .map(|_| {
+                let r: f64 = (0..d_pad)
+                    .map(|_| {
+                        let v = rng.next_gaussian();
+                        v * v
+                    })
+                    .sum::<f64>()
+                    .sqrt();
+                (r / gnorm.max(1e-12)) as f32
+            })
+            .collect();
+        let phase: Vec<f32> = (0..d_pad)
+            .map(|_| (rng.next_f64() * 2.0 * std::f64::consts::PI) as f32)
+            .collect();
+        blocks.push(FastfoodBlock { b, perm, g, s, phase });
+    }
+
+    let nf = n_blocks * d_pad;
+    let mut model = FastfoodModel {
+        blocks,
+        dim,
+        d_pad,
+        scale: (1.0 / (sigma * (d_pad as f64).sqrt())) as f32,
+        feat_scale: (2.0f64 / nf as f64).sqrt() as f32,
+        linear: LinearModel { w: vec![], alpha: vec![], epochs: 0, elapsed_s: 0.0 },
+        elapsed_s: 0.0,
+    };
+
+    let feats = model.features(&ds.x, ds.len());
+    let fds = Dataset::new(feats, ds.y.clone(), nf, format!("{}-fastfood", ds.name));
+    model.linear = train_linear(
+        &fds,
+        &LinearSvmConfig { c: cfg.c, eps: 1e-3, max_epochs: 120, seed: cfg.seed },
+    );
+    model.elapsed_s = t0.elapsed().as_secs_f64();
+    model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate_split};
+
+    #[test]
+    fn hadamard_involution() {
+        let mut v = vec![1.0f32, 2.0, -3.0, 0.5, 4.0, -1.0, 0.0, 2.5];
+        let orig = v.clone();
+        hadamard(&mut v);
+        hadamard(&mut v);
+        // H·H = n·I
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a / 8.0 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn kernel_estimate_close_to_rbf() {
+        let (tr, _) = generate_split(&covtype_like(), 50, 10, 61);
+        let gamma = 2.0;
+        let model = train(&tr, &FastfoodConfig { gamma, features: 4096, ..Default::default() });
+        let mut errs = Vec::new();
+        for &(i, j) in &[(0usize, 1usize), (2, 3), (10, 20), (7, 30)] {
+            let est = model.kernel_estimate(tr.row(i), tr.row(j));
+            let d2: f64 = tr
+                .row(i)
+                .iter()
+                .zip(tr.row(j))
+                .map(|(&a, &b)| (a as f64 - b as f64).powi(2))
+                .sum();
+            let truth = (-gamma * d2).exp();
+            errs.push((est - truth).abs());
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean < 0.08, "fastfood kernel error {mean} ({errs:?})");
+    }
+
+    #[test]
+    fn fastfood_learns() {
+        let (tr, te) = generate_split(&covtype_like(), 800, 250, 62);
+        let model = train(
+            &tr,
+            &FastfoodConfig { gamma: 16.0, c: 4.0, features: 256, ..Default::default() },
+        );
+        let acc = model.accuracy(&te);
+        assert!(acc > 0.65, "fastfood acc {acc}");
+    }
+}

@@ -1,0 +1,196 @@
+//! LLSVM — low-rank linearization with the kmeans Nyström method
+//! (Zhang et al. 2008 / Wang et al. 2011), the paper's strongest
+//! approximate-solver comparator.
+//!
+//! Landmarks U = kmeans centers of the input space; the Nyström feature map
+//!
+//! ```text
+//! φ(x) = W^(−1/2) · [K(x, u_1), …, K(x, u_m)]ᵀ,   W = K(U, U)
+//! ```
+//!
+//! gives ⟨φ(x), φ(z)⟩ = the rank-m Nyström approximation of K(x, z); a
+//! linear SVM (dual CD) on φ(x) then approximates the kernel SVM. Accuracy
+//! saturates with m — the crossover Figure 3 demonstrates against DC-SVM.
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::kernel::{native::NativeKernel, BlockKernel, KernelKind};
+use crate::linalg::inv_sqrt_psd;
+use crate::solver::linear::{train_linear, LinearModel, LinearSvmConfig};
+use crate::util::prng::Pcg64;
+
+use super::euclid_kmeans::kmeans_centers;
+
+#[derive(Clone, Debug)]
+pub struct LlsvmConfig {
+    pub kind: KernelKind,
+    pub c: f64,
+    /// Number of landmarks (Nyström rank).
+    pub landmarks: usize,
+    pub seed: u64,
+    pub linear_eps: f64,
+}
+
+impl Default for LlsvmConfig {
+    fn default() -> Self {
+        LlsvmConfig {
+            kind: KernelKind::Rbf { gamma: 1.0 },
+            c: 1.0,
+            landmarks: 64,
+            seed: 0,
+            linear_eps: 1e-3,
+        }
+    }
+}
+
+pub struct LlsvmModel {
+    /// Landmarks, row-major [m, dim] (f32 for kernel evaluation).
+    landmarks: Vec<f32>,
+    landmark_norms: Vec<f32>,
+    /// W^(−1/2), row-major m×m.
+    w_inv_sqrt: Vec<f64>,
+    dim: usize,
+    m: usize,
+    kind: KernelKind,
+    pub linear: LinearModel,
+    pub elapsed_s: f64,
+}
+
+impl LlsvmModel {
+    /// Map a batch of rows to Nyström features ([n, m] row-major f32).
+    pub fn features(&self, x: &[f32], norms: &[f32]) -> Vec<f32> {
+        let n = norms.len();
+        let kern = NativeKernel::new(self.kind);
+        let mut kxu = vec![0f32; n * self.m];
+        kern.block(x, norms, &self.landmarks, &self.landmark_norms, self.dim, &mut kxu);
+        // φ = kxu · (W^(−1/2))ᵀ ( = ·W^(−1/2), symmetric)
+        let mut out = vec![0f32; n * self.m];
+        for i in 0..n {
+            let row = &kxu[i * self.m..(i + 1) * self.m];
+            let dst = &mut out[i * self.m..(i + 1) * self.m];
+            for j in 0..self.m {
+                let mut s = 0f64;
+                for t in 0..self.m {
+                    s += row[t] as f64 * self.w_inv_sqrt[t * self.m + j];
+                }
+                dst[j] = s as f32;
+            }
+        }
+        out
+    }
+
+    pub fn predict_batch(&self, x: &[f32], norms: &[f32]) -> Vec<i8> {
+        let feats = self.features(x, norms);
+        (0..norms.len())
+            .map(|i| self.linear.predict(&feats[i * self.m..(i + 1) * self.m]))
+            .collect()
+    }
+
+    pub fn accuracy(&self, test: &Dataset) -> f64 {
+        let norms = test.sq_norms();
+        let preds = self.predict_batch(&test.x, &norms);
+        crate::metrics::accuracy(&preds, &test.y)
+    }
+}
+
+/// Train LLSVM.
+pub fn train(ds: &Dataset, cfg: &LlsvmConfig) -> LlsvmModel {
+    let t0 = Instant::now();
+    let mut rng = Pcg64::new(cfg.seed);
+    let dim = ds.dim;
+    let m = cfg.landmarks.min(ds.len());
+
+    // Landmarks: kmeans centers on (a sample of) the training data.
+    let sample = rng.sample_indices(ds.len(), (m * 20).min(ds.len()));
+    let mut sx = Vec::with_capacity(sample.len() * dim);
+    for &i in &sample {
+        sx.extend_from_slice(ds.row(i));
+    }
+    let centers64 = kmeans_centers(&sx, sample.len(), dim, m, 25, &mut rng);
+    let landmarks: Vec<f32> = centers64.iter().map(|&v| v as f32).collect();
+    let landmark_norms: Vec<f32> = landmarks
+        .chunks(dim)
+        .map(|r| r.iter().map(|&v| v * v).sum())
+        .collect();
+
+    // W = K(U, U), W^(−1/2) by symmetric eigendecomposition.
+    let kern = NativeKernel::new(cfg.kind);
+    let mut w32 = vec![0f32; m * m];
+    kern.block(&landmarks, &landmark_norms, &landmarks, &landmark_norms, dim, &mut w32);
+    let w: Vec<f64> = w32.iter().map(|&v| v as f64).collect();
+    let w_inv_sqrt = inv_sqrt_psd(&w, m, 1e-7);
+
+    let mut model = LlsvmModel {
+        landmarks,
+        landmark_norms,
+        w_inv_sqrt,
+        dim,
+        m,
+        kind: cfg.kind,
+        linear: LinearModel { w: vec![], alpha: vec![], epochs: 0, elapsed_s: 0.0 },
+        elapsed_s: 0.0,
+    };
+
+    // Linear SVM on the Nyström features.
+    let norms = ds.sq_norms();
+    let feats = model.features(&ds.x, &norms);
+    let fds = Dataset::new(feats, ds.y.clone(), m, format!("{}-nystrom", ds.name));
+    model.linear = train_linear(
+        &fds,
+        &LinearSvmConfig { c: cfg.c, eps: cfg.linear_eps, max_epochs: 200, seed: cfg.seed },
+    );
+    model.elapsed_s = t0.elapsed().as_secs_f64();
+    model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate_split};
+
+    #[test]
+    fn llsvm_learns() {
+        let (tr, te) = generate_split(&covtype_like(), 800, 250, 51);
+        let cfg = LlsvmConfig {
+            kind: KernelKind::Rbf { gamma: 16.0 },
+            c: 4.0,
+            landmarks: 48,
+            ..Default::default()
+        };
+        let model = train(&tr, &cfg);
+        let acc = model.accuracy(&te);
+        assert!(acc > 0.70, "llsvm acc {acc}");
+    }
+
+    #[test]
+    fn feature_inner_products_approximate_kernel() {
+        let (tr, _) = generate_split(&covtype_like(), 300, 50, 52);
+        let kind = KernelKind::Rbf { gamma: 4.0 };
+        let model = train(&tr, &LlsvmConfig { kind, landmarks: 100, ..Default::default() });
+        let norms = tr.sq_norms();
+        let feats = model.features(&tr.x, &norms);
+        let m = model.m;
+        let kern = NativeKernel::new(kind);
+        // compare ⟨φ_i, φ_j⟩ with K_ij on a few pairs
+        let mut errs = Vec::new();
+        for &(i, j) in &[(0usize, 1usize), (5, 9), (20, 40), (100, 200)] {
+            let dot: f64 = (0..m)
+                .map(|t| feats[i * m + t] as f64 * feats[j * m + t] as f64)
+                .sum();
+            let k = kind.eval(tr.row(i), tr.row(j)) as f64;
+            errs.push((dot - k).abs());
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean_err < 0.15, "nystrom approx error {mean_err} ({errs:?})");
+    }
+
+    #[test]
+    fn more_landmarks_no_worse() {
+        let (tr, te) = generate_split(&covtype_like(), 600, 200, 53);
+        let kind = KernelKind::Rbf { gamma: 16.0 };
+        let small = train(&tr, &LlsvmConfig { kind, c: 4.0, landmarks: 8, ..Default::default() });
+        let large = train(&tr, &LlsvmConfig { kind, c: 4.0, landmarks: 96, ..Default::default() });
+        assert!(large.accuracy(&te) + 0.03 >= small.accuracy(&te));
+    }
+}

@@ -1,0 +1,126 @@
+//! LTPU — Locally-Tuned Processing Units (Moody & Darken 1989): an RBF
+//! network whose units sit at kmeans centers, with linear output weights
+//! trained by a linear SVM (the paper sets unit width γ to the best RBF-SVM
+//! γ and fits weights with LIBLINEAR — we mirror both choices).
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::solver::linear::{train_linear, LinearModel, LinearSvmConfig};
+use crate::util::prng::Pcg64;
+
+use super::euclid_kmeans::kmeans_centers;
+
+#[derive(Clone, Debug)]
+pub struct LtpuConfig {
+    pub gamma: f64,
+    pub c: f64,
+    /// Number of RBF units (kmeans centers).
+    pub units: usize,
+    pub seed: u64,
+}
+
+impl Default for LtpuConfig {
+    fn default() -> Self {
+        LtpuConfig { gamma: 1.0, c: 1.0, units: 64, seed: 0 }
+    }
+}
+
+pub struct LtpuModel {
+    centers: Vec<f64>, // [units, dim]
+    dim: usize,
+    units: usize,
+    gamma: f64,
+    pub linear: LinearModel,
+    pub elapsed_s: f64,
+}
+
+impl LtpuModel {
+    fn unit_activations(&self, x: &[f32], out: &mut [f32]) {
+        for u in 0..self.units {
+            let c = &self.centers[u * self.dim..(u + 1) * self.dim];
+            let d2: f64 = x
+                .iter()
+                .zip(c)
+                .map(|(&xv, &cv)| (xv as f64 - cv) * (xv as f64 - cv))
+                .sum();
+            out[u] = (-self.gamma * d2).exp() as f32;
+        }
+    }
+
+    pub fn features(&self, x: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n * self.units];
+        for i in 0..n {
+            let (lo, hi) = (i * self.units, (i + 1) * self.units);
+            self.unit_activations(&x[i * self.dim..(i + 1) * self.dim], &mut out[lo..hi]);
+        }
+        out
+    }
+
+    pub fn predict_batch(&self, x: &[f32], n: usize) -> Vec<i8> {
+        let feats = self.features(x, n);
+        (0..n)
+            .map(|i| self.linear.predict(&feats[i * self.units..(i + 1) * self.units]))
+            .collect()
+    }
+
+    pub fn accuracy(&self, test: &Dataset) -> f64 {
+        let preds = self.predict_batch(&test.x, test.len());
+        crate::metrics::accuracy(&preds, &test.y)
+    }
+}
+
+/// Train the LTPU network.
+pub fn train(ds: &Dataset, cfg: &LtpuConfig) -> LtpuModel {
+    let t0 = Instant::now();
+    let mut rng = Pcg64::new(cfg.seed);
+    let units = cfg.units.min(ds.len());
+    let sample = rng.sample_indices(ds.len(), (units * 20).min(ds.len()));
+    let mut sx = Vec::with_capacity(sample.len() * ds.dim);
+    for &i in &sample {
+        sx.extend_from_slice(ds.row(i));
+    }
+    let centers = kmeans_centers(&sx, sample.len(), ds.dim, units, 25, &mut rng);
+
+    let mut model = LtpuModel {
+        centers,
+        dim: ds.dim,
+        units,
+        gamma: cfg.gamma,
+        linear: LinearModel { w: vec![], alpha: vec![], epochs: 0, elapsed_s: 0.0 },
+        elapsed_s: 0.0,
+    };
+    let feats = model.features(&ds.x, ds.len());
+    let fds = Dataset::new(feats, ds.y.clone(), units, format!("{}-ltpu", ds.name));
+    model.linear = train_linear(
+        &fds,
+        &LinearSvmConfig { c: cfg.c, eps: 1e-3, max_epochs: 150, seed: cfg.seed },
+    );
+    model.elapsed_s = t0.elapsed().as_secs_f64();
+    model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate_split};
+
+    #[test]
+    fn ltpu_learns() {
+        let (tr, te) = generate_split(&covtype_like(), 800, 250, 71);
+        let model = train(
+            &tr,
+            &LtpuConfig { gamma: 16.0, c: 4.0, units: 64, ..Default::default() },
+        );
+        let acc = model.accuracy(&te);
+        assert!(acc > 0.70, "ltpu acc {acc}");
+    }
+
+    #[test]
+    fn activations_in_unit_range() {
+        let (tr, _) = generate_split(&covtype_like(), 100, 20, 72);
+        let model = train(&tr, &LtpuConfig { gamma: 4.0, units: 16, ..Default::default() });
+        let feats = model.features(&tr.x, tr.len());
+        assert!(feats.iter().all(|&f| (0.0..=1.0 + 1e-6).contains(&f)));
+    }
+}

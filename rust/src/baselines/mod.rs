@@ -1,0 +1,22 @@
+//! Every comparator from the paper's evaluation (Tables 3–4, Figures 3–4),
+//! built on the shared substrates:
+//!
+//! | baseline | paper ref | module |
+//! |---|---|---|
+//! | CascadeSVM | Graf et al. 2005 | `cascade` |
+//! | LaSVM (online) | Bordes et al. 2005 | `lasvm` |
+//! | LLSVM (kmeans Nyström) | Zhang et al. 2008 / Wang et al. 2011 | `llsvm` |
+//! | FastFood (random Fourier) | Le et al. 2013 | `fastfood` |
+//! | LTPU (RBF network) | Moody & Darken 1989 | `ltpu` |
+//! | SpSVM (greedy basis) | Keerthi et al. 2006 | `spsvm` |
+//!
+//! ("LIBSVM" is our exact solver run cold — `crate::solver::smo` — and BCM
+//! prediction lives in `crate::predict`.)
+
+pub mod cascade;
+pub mod euclid_kmeans;
+pub mod fastfood;
+pub mod lasvm;
+pub mod llsvm;
+pub mod ltpu;
+pub mod spsvm;

@@ -1,0 +1,219 @@
+//! SpSVM — building SVMs with reduced classifier complexity
+//! (Keerthi, Chapelle, DeCoste — JMLR 2006): a greedy sparse kernel model
+//! f(x) = Σ_{j∈J} β_j K(x, b_j) grown one basis vector at a time.
+//!
+//! Faithful-in-shape implementation: at each step a random candidate pool is
+//! scored by how much a one-dimensional exact line search on the squared
+//! hinge loss would reduce the regularized objective (Keerthi's "59
+//! candidates" heuristic); the best candidate joins the basis, then the full
+//! β is refit on the kernel features of the basis with the dual-CD linear
+//! solver (ridge-equivalent squared-hinge stage replaced by hinge, as in our
+//! other feature-map baselines). Accuracy saturates with basis size — the
+//! qualitative behaviour Table 3/Figure 3 show.
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::kernel::{native::NativeKernel, BlockKernel, KernelKind};
+use crate::solver::linear::{train_linear, LinearModel, LinearSvmConfig};
+use crate::util::prng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct SpsvmConfig {
+    pub kind: KernelKind,
+    pub c: f64,
+    /// Final basis size.
+    pub basis: usize,
+    /// Candidates scored per growth step.
+    pub candidates: usize,
+    /// Basis vectors added between refits.
+    pub grow_step: usize,
+    pub seed: u64,
+}
+
+impl Default for SpsvmConfig {
+    fn default() -> Self {
+        SpsvmConfig {
+            kind: KernelKind::Rbf { gamma: 1.0 },
+            c: 1.0,
+            basis: 64,
+            candidates: 16,
+            grow_step: 8,
+            seed: 0,
+        }
+    }
+}
+
+pub struct SpsvmModel {
+    basis_x: Vec<f32>,
+    basis_norms: Vec<f32>,
+    dim: usize,
+    kind: KernelKind,
+    pub linear: LinearModel,
+    pub basis_size: usize,
+    pub elapsed_s: f64,
+}
+
+impl SpsvmModel {
+    pub fn features(&self, x: &[f32], norms: &[f32]) -> Vec<f32> {
+        let n = norms.len();
+        let kern = NativeKernel::new(self.kind);
+        let mut out = vec![0f32; n * self.basis_size];
+        kern.block(x, norms, &self.basis_x, &self.basis_norms, self.dim, &mut out);
+        out
+    }
+
+    pub fn predict_batch(&self, x: &[f32], norms: &[f32]) -> Vec<i8> {
+        let feats = self.features(x, norms);
+        (0..norms.len())
+            .map(|i| self.linear.predict(&feats[i * self.basis_size..(i + 1) * self.basis_size]))
+            .collect()
+    }
+
+    pub fn accuracy(&self, test: &Dataset) -> f64 {
+        let norms = test.sq_norms();
+        let preds = self.predict_batch(&test.x, &norms);
+        crate::metrics::accuracy(&preds, &test.y)
+    }
+}
+
+/// Train SpSVM by greedy basis growth.
+pub fn train(ds: &Dataset, cfg: &SpsvmConfig) -> SpsvmModel {
+    let t0 = Instant::now();
+    let n = ds.len();
+    let dim = ds.dim;
+    let norms = ds.sq_norms();
+    let kern = NativeKernel::new(cfg.kind);
+    let mut rng = Pcg64::new(cfg.seed);
+
+    let target = cfg.basis.min(n);
+    let mut basis_idx: Vec<usize> = Vec::with_capacity(target);
+    let mut in_basis = vec![false; n];
+
+    // Current margins y_i f(x_i) (starts at 0).
+    let mut fx = vec![0f64; n];
+    let mut model_linear: Option<LinearModel> = None;
+
+    let mut kb_col = vec![0f32; n]; // kernel column of a candidate
+
+    while basis_idx.len() < target {
+        // ---- grow: pick best of a random candidate pool -------------------
+        for _ in 0..cfg.grow_step.min(target - basis_idx.len()) {
+            let mut best: Option<(usize, f64)> = None;
+            for _ in 0..cfg.candidates {
+                let cand = rng.below(n);
+                if in_basis[cand] {
+                    continue;
+                }
+                // Score: squared-hinge objective decrease of an exact 1-D
+                // line search along the candidate's kernel column.
+                kern.block(
+                    ds.row(cand),
+                    &norms[cand..cand + 1],
+                    &ds.x,
+                    &norms,
+                    dim,
+                    &mut kb_col,
+                );
+                // minimize Σ_i max(0, 1 − y_i(f_i + β k_i))² over β: one
+                // Newton step from β=0 on the active set.
+                let mut g = 0f64;
+                let mut h = 1e-9f64;
+                for i in 0..n {
+                    let yi = ds.y[i] as f64;
+                    let m = 1.0 - yi * fx[i];
+                    if m > 0.0 {
+                        let k = kb_col[i] as f64;
+                        g += -2.0 * m * yi * k;
+                        h += 2.0 * k * k;
+                    }
+                }
+                let beta = -g / h;
+                let decrease = 0.5 * g.abs() * beta.abs(); // ≈ quadratic gain
+                if best.map(|(_, s)| decrease > s).unwrap_or(true) {
+                    best = Some((cand, decrease));
+                }
+            }
+            if let Some((cand, _)) = best {
+                in_basis[cand] = true;
+                basis_idx.push(cand);
+            } else {
+                break;
+            }
+        }
+
+        // ---- refit β on the current basis ---------------------------------
+        let bsz = basis_idx.len();
+        let mut bx = Vec::with_capacity(bsz * dim);
+        let mut bn = Vec::with_capacity(bsz);
+        for &b in &basis_idx {
+            bx.extend_from_slice(ds.row(b));
+            bn.push(norms[b]);
+        }
+        let mut feats = vec![0f32; n * bsz];
+        kern.block(&ds.x, &norms, &bx, &bn, dim, &mut feats);
+        let fds = Dataset::new(feats.clone(), ds.y.clone(), bsz, "spsvm-feats");
+        let lm = train_linear(
+            &fds,
+            &LinearSvmConfig { c: cfg.c, eps: 1e-3, max_epochs: 60, seed: cfg.seed },
+        );
+        for i in 0..n {
+            fx[i] = lm.decision(&feats[i * bsz..(i + 1) * bsz]);
+        }
+        model_linear = Some(lm);
+    }
+
+    let bsz = basis_idx.len();
+    let mut basis_x = Vec::with_capacity(bsz * dim);
+    let mut basis_norms = Vec::with_capacity(bsz);
+    for &b in &basis_idx {
+        basis_x.extend_from_slice(ds.row(b));
+        basis_norms.push(norms[b]);
+    }
+    SpsvmModel {
+        basis_x,
+        basis_norms,
+        dim,
+        kind: cfg.kind,
+        linear: model_linear.expect("at least one refit"),
+        basis_size: bsz,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate_split};
+
+    #[test]
+    fn spsvm_learns() {
+        let (tr, te) = generate_split(&covtype_like(), 700, 200, 81);
+        let model = train(
+            &tr,
+            &SpsvmConfig {
+                kind: KernelKind::Rbf { gamma: 16.0 },
+                c: 4.0,
+                basis: 48,
+                ..Default::default()
+            },
+        );
+        let acc = model.accuracy(&te);
+        assert!(acc > 0.70, "spsvm acc {acc}");
+        assert_eq!(model.basis_size, 48);
+    }
+
+    #[test]
+    fn basis_respects_budget() {
+        let (tr, _) = generate_split(&covtype_like(), 120, 30, 82);
+        let model = train(
+            &tr,
+            &SpsvmConfig {
+                kind: KernelKind::Rbf { gamma: 8.0 },
+                basis: 500, // larger than n
+                ..Default::default()
+            },
+        );
+        assert!(model.basis_size <= 120);
+    }
+}

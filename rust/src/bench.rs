@@ -1,0 +1,134 @@
+//! Micro/macro bench harness (the environment has no criterion crate).
+//!
+//! `time_fn` measures a closure with warmup + repetitions and robust stats;
+//! `Table` prints paper-style rows. Every `rust/benches/bench_*.rs` target
+//! (one per paper table/figure) builds on these.
+
+use std::time::Instant;
+
+/// Timing statistics over repetitions (seconds).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub reps: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+}
+
+/// Measure `f` with `warmup` unmeasured runs and `reps` measured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let n = times.len();
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+    BenchStats {
+        reps: n,
+        median_s: times[n / 2],
+        mean_s: mean,
+        min_s: times[0],
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            println!("{s}");
+        };
+        line(&self.headers, &self.widths);
+        let sep: Vec<String> = self.widths.iter().map(|&w| "-".repeat(w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Format seconds compactly ("12.3s", "456ms").
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}s")
+    } else if s >= 1.0 {
+        format!("{s:.1}s")
+    } else if s >= 1e-3 {
+        format!("{:.0}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Standard bench banner so logs are self-describing.
+pub fn banner(id: &str, what: &str) {
+    println!();
+    println!("=== {id}: {what} ===");
+    println!(
+        "(synthetic substitute workloads — see DESIGN.md §Substitutions; \
+         shapes/orderings reproduce the paper, absolute times are 1-core)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_reps() {
+        let mut calls = 0;
+        let st = time_fn(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(st.reps, 5);
+        assert!(st.min_s <= st.median_s);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(120.0), "120s");
+        assert_eq!(fmt_secs(2.34), "2.3s");
+        assert_eq!(fmt_secs(0.012), "12ms");
+        assert!(fmt_secs(2e-5).ends_with("us"));
+    }
+
+    #[test]
+    fn table_rows_align() {
+        let mut t = Table::new(&["a", "long-header"]);
+        t.row(&["xxxxxx".into(), "1".into()]);
+        t.print(); // smoke: no panic
+    }
+}

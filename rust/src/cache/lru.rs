@@ -1,0 +1,278 @@
+//! Byte-budgeted LRU cache of kernel rows.
+//!
+//! Keys are row indices of the *active problem* (a cluster subproblem or the
+//! whole dataset); values are `Box<[f32]>` rows of length `row_len`. The LRU
+//! order lives in an intrusive doubly-linked list over slot indices so
+//! touch/evict are O(1), and `get_or_compute` exposes the fill path the
+//! solver uses. Hit/miss counters feed EXPERIMENTS.md §Perf.
+
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    key: usize,
+    row: Box<[f32]>,
+    prev: usize,
+    next: usize,
+}
+
+/// LRU kernel-row cache with a fixed byte budget.
+pub struct RowCache {
+    map: HashMap<usize, usize>, // key -> slot index
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    head: usize, // most recently used
+    tail: usize, // least recently used
+    row_len: usize,
+    capacity_rows: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RowCache {
+    /// `budget_bytes` is the total f32 payload budget; at least one row is
+    /// always allowed.
+    pub fn new(row_len: usize, budget_bytes: usize) -> Self {
+        let capacity_rows = (budget_bytes / (row_len.max(1) * 4)).max(1);
+        RowCache {
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            row_len,
+            capacity_rows,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    pub fn capacity_rows(&self) -> usize {
+        self.capacity_rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: usize) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Fetch a row, computing and inserting it on miss. `fill` writes the
+    /// row contents into the provided buffer.
+    pub fn get_or_compute<F>(&mut self, key: usize, fill: F) -> &[f32]
+    where
+        F: FnOnce(&mut [f32]),
+    {
+        if let Some(&slot) = self.map.get(&key) {
+            self.hits += 1;
+            self.touch(slot);
+            return &self.slots[slot].row;
+        }
+        self.misses += 1;
+        let slot = self.insert_slot(key);
+        fill(&mut self.slots[slot].row);
+        &self.slots[slot].row
+    }
+
+    /// Peek without changing LRU order or counters (used by tests).
+    pub fn peek(&self, key: usize) -> Option<&[f32]> {
+        self.map.get(&key).map(|&s| &*self.slots[s].row)
+    }
+
+    /// Drop all entries, keep allocation.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        for i in 0..self.slots.len() {
+            self.free.push(i);
+        }
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    // -- intrusive list plumbing -------------------------------------------
+
+    fn detach(&mut self, slot: usize) {
+        let (p, n) = (self.slots[slot].prev, self.slots[slot].next);
+        if p != NIL {
+            self.slots[p].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.slots[n].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, slot: usize) {
+        self.slots[slot].prev = NIL;
+        self.slots[slot].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+
+    fn touch(&mut self, slot: usize) {
+        if self.head == slot {
+            return;
+        }
+        self.detach(slot);
+        self.push_front(slot);
+    }
+
+    fn insert_slot(&mut self, key: usize) -> usize {
+        let slot = if self.map.len() >= self.capacity_rows {
+            // Evict LRU.
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL);
+            self.detach(victim);
+            self.map.remove(&self.slots[victim].key);
+            self.slots[victim].key = key;
+            victim
+        } else if let Some(s) = self.free.pop() {
+            self.slots[s].key = key;
+            s
+        } else {
+            self.slots.push(Slot {
+                key,
+                row: vec![0f32; self.row_len].into_boxed_slice(),
+                prev: NIL,
+                next: NIL,
+            });
+            self.slots.len() - 1
+        };
+        self.push_front(slot);
+        self.map.insert(key, slot);
+        slot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::{prng::Pcg64, proptest::check};
+
+    #[test]
+    fn hit_returns_cached_value() {
+        let mut c = RowCache::new(4, 1024);
+        c.get_or_compute(7, |r| r.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]));
+        let row = c.get_or_compute(7, |_| panic!("should not recompute"));
+        assert_eq!(row, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn evicts_lru_not_mru() {
+        let mut c = RowCache::new(1, 3 * 4); // capacity 3 rows
+        for k in 0..3 {
+            c.get_or_compute(k, |r| r[0] = k as f32);
+        }
+        c.get_or_compute(0, |_| panic!("0 cached")); // touch 0 -> MRU
+        c.get_or_compute(3, |r| r[0] = 3.0); // evicts 1 (LRU)
+        assert!(c.contains(0));
+        assert!(!c.contains(1));
+        assert!(c.contains(2));
+        assert!(c.contains(3));
+    }
+
+    #[test]
+    fn capacity_at_least_one() {
+        let mut c = RowCache::new(1000, 1); // budget below one row
+        assert_eq!(c.capacity_rows(), 1);
+        c.get_or_compute(1, |r| r[0] = 1.0);
+        c.get_or_compute(2, |r| r[0] = 2.0);
+        assert!(!c.contains(1));
+        assert!(c.contains(2));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = RowCache::new(2, 1024);
+        c.get_or_compute(1, |r| r[0] = 1.0);
+        c.clear();
+        assert!(c.is_empty());
+        let mut recomputed = false;
+        c.get_or_compute(1, |_| recomputed = true);
+        assert!(recomputed);
+    }
+
+    /// Property: the cache behaves exactly like a reference implementation
+    /// (hash map + recency queue) over random access traces.
+    #[test]
+    fn prop_matches_reference_lru() {
+        check("lru-vs-reference", 30, |rng: &mut Pcg64| {
+            let cap = 1 + rng.below(8);
+            let keys = 1 + rng.below(16);
+            let ops = 200;
+            let mut cache = RowCache::new(1, cap * 4);
+            let mut ref_order: Vec<usize> = Vec::new(); // front = MRU
+
+            for _ in 0..ops {
+                let k = rng.below(keys);
+                let in_ref = ref_order.contains(&k);
+                let mut filled = false;
+                cache.get_or_compute(k, |r| {
+                    filled = true;
+                    r[0] = k as f32;
+                });
+                prop_assert!(
+                    filled != in_ref,
+                    "cache fill={filled} but reference contains={in_ref} for key {k}"
+                );
+                // update reference
+                ref_order.retain(|&x| x != k);
+                ref_order.insert(0, k);
+                if ref_order.len() > cap {
+                    ref_order.pop();
+                }
+                prop_assert!(
+                    cache.len() == ref_order.len(),
+                    "len {} != ref {}",
+                    cache.len(),
+                    ref_order.len()
+                );
+                for &rk in &ref_order {
+                    prop_assert!(cache.contains(rk), "missing key {rk}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let mut c = RowCache::new(1, 1024);
+        assert_eq!(c.hit_rate(), 0.0);
+        c.get_or_compute(1, |r| r[0] = 0.0);
+        c.get_or_compute(1, |r| r[0] = 0.0);
+        c.get_or_compute(1, |r| r[0] = 0.0);
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

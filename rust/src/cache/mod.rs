@@ -1,0 +1,12 @@
+//! LIBSVM-style LRU kernel-row cache.
+//!
+//! The decomposition solver touches kernel rows in a highly skewed pattern
+//! (free SVs get hit every iteration; shrunk variables never), so a
+//! byte-budgeted LRU over rows is the classic design (Chang & Lin 2011,
+//! §4.2). DC-SVM's warm start makes this even more effective: with the SV
+//! set mostly identified, the working set — and therefore the cached rows —
+//! stabilizes early (paper Figure 2).
+
+pub mod lru;
+
+pub use lru::RowCache;

@@ -1,0 +1,290 @@
+//! Typed configuration: JSON file + CLI-style `--key value` overrides.
+//!
+//! A single [`RunConfig`] describes a training run (dataset, kernel, solver,
+//! DC-SVM schedule, backend). Files and flags both funnel through
+//! [`RunConfig::apply`], so `dcsvm train --config run.json --gamma 32`
+//! behaves as expected (flags win).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dcsvm::DcSvmConfig;
+use crate::kernel::KernelKind;
+use crate::solver::SmoConfig;
+use crate::util::json::Json;
+
+/// Which algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    DcSvm,
+    DcSvmEarly,
+    Libsvm, // our exact solver, cold start
+    Cascade,
+    LaSvm,
+    Llsvm,
+    Fastfood,
+    Ltpu,
+    Spsvm,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dcsvm" | "dc-svm" => Algo::DcSvm,
+            "dcsvm-early" | "early" => Algo::DcSvmEarly,
+            "libsvm" | "smo" | "exact" => Algo::Libsvm,
+            "cascade" | "cascadesvm" => Algo::Cascade,
+            "lasvm" => Algo::LaSvm,
+            "llsvm" | "nystrom" => Algo::Llsvm,
+            "fastfood" | "rff" => Algo::Fastfood,
+            "ltpu" => Algo::Ltpu,
+            "spsvm" => Algo::Spsvm,
+            other => bail!("unknown algo '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::DcSvm => "DC-SVM",
+            Algo::DcSvmEarly => "DC-SVM (early)",
+            Algo::Libsvm => "LIBSVM",
+            Algo::Cascade => "CascadeSVM",
+            Algo::LaSvm => "LaSVM",
+            Algo::Llsvm => "LLSVM",
+            Algo::Fastfood => "FastFood",
+            Algo::Ltpu => "LTPU",
+            Algo::Spsvm => "SpSVM",
+        }
+    }
+
+    pub fn all() -> [Algo; 9] {
+        [
+            Algo::DcSvmEarly,
+            Algo::DcSvm,
+            Algo::Libsvm,
+            Algo::LaSvm,
+            Algo::Cascade,
+            Algo::Llsvm,
+            Algo::Fastfood,
+            Algo::Spsvm,
+            Algo::Ltpu,
+        ]
+    }
+}
+
+/// Full run configuration with defaults matching the paper's settings.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub algo: Algo,
+    pub dataset: String,
+    pub n_train: Option<usize>,
+    pub n_test: Option<usize>,
+    /// "rbf" | "poly" | "linear"
+    pub kernel: String,
+    pub gamma: f64,
+    pub eta: f64,
+    pub c: f64,
+    pub eps: f64,
+    pub levels: usize,
+    pub k_base: usize,
+    pub sample_m: usize,
+    pub cache_mb: usize,
+    pub seed: u64,
+    pub threads: usize,
+    /// "native" | "pjrt" | "auto"
+    pub backend: String,
+    /// approximate-solver budget (landmarks/features/units/basis)
+    pub budget: usize,
+    pub save_model: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algo: Algo::DcSvm,
+            dataset: "covtype-like".into(),
+            n_train: None,
+            n_test: None,
+            kernel: "rbf".into(),
+            gamma: 32.0,
+            eta: 0.0,
+            c: 1.0,
+            eps: 1e-3,
+            levels: 4,
+            k_base: 4,
+            sample_m: 256,
+            cache_mb: 256,
+            seed: 0,
+            threads: 1,
+            backend: "auto".into(),
+            budget: 64,
+            save_model: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse a JSON config file.
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let json = Json::parse(&text).context("parse config json")?;
+        let mut cfg = RunConfig::default();
+        let obj = json.as_obj().ok_or_else(|| anyhow!("config must be an object"))?;
+        for (k, v) in obj {
+            cfg.apply(k, &json_to_arg(v))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one key/value override (CLI flag or JSON field).
+    pub fn apply(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "algo" => self.algo = Algo::parse(val)?,
+            "dataset" => self.dataset = val.to_string(),
+            "n_train" | "n-train" => self.n_train = Some(val.parse()?),
+            "n_test" | "n-test" => self.n_test = Some(val.parse()?),
+            "kernel" => self.kernel = val.to_string(),
+            "gamma" => self.gamma = val.parse()?,
+            "eta" => self.eta = val.parse()?,
+            "c" | "C" => self.c = val.parse()?,
+            "eps" => self.eps = val.parse()?,
+            "levels" => self.levels = val.parse()?,
+            "k_base" | "k-base" | "k" => self.k_base = val.parse()?,
+            "sample_m" | "sample-m" => self.sample_m = val.parse()?,
+            "cache_mb" | "cache-mb" => self.cache_mb = val.parse()?,
+            "seed" => self.seed = val.parse()?,
+            "threads" => self.threads = val.parse()?,
+            "backend" => self.backend = val.to_string(),
+            "budget" => self.budget = val.parse()?,
+            "save_model" | "save-model" => self.save_model = Some(val.to_string()),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// The kernel this run uses.
+    pub fn kernel_kind(&self) -> Result<KernelKind> {
+        Ok(match self.kernel.as_str() {
+            "rbf" => KernelKind::Rbf { gamma: self.gamma as f32 },
+            "poly" => KernelKind::Poly { gamma: self.gamma as f32, eta: self.eta as f32 },
+            "linear" => KernelKind::Linear,
+            other => bail!("unknown kernel '{other}'"),
+        })
+    }
+
+    pub fn smo_config(&self) -> Result<SmoConfig> {
+        Ok(SmoConfig {
+            c: self.c,
+            eps: self.eps,
+            max_iter: 0,
+            cache_bytes: self.cache_mb << 20,
+            shrinking: true,
+            report_every: 2000,
+            row_batch: 0,
+        })
+    }
+
+    pub fn dcsvm_config(&self) -> Result<DcSvmConfig> {
+        Ok(DcSvmConfig {
+            kind: self.kernel_kind()?,
+            c: self.c,
+            levels: self.levels,
+            k_base: self.k_base,
+            sample_m: self.sample_m,
+            eps_sub: self.eps.max(1e-3),
+            eps_final: self.eps,
+            cache_bytes: self.cache_mb << 20,
+            adaptive: true,
+            refine: true,
+            stop_after_level: (self.algo == Algo::DcSvmEarly).then_some(1),
+            max_iter_sub: 0,
+            max_iter_final: 0,
+            seed: self.seed,
+            threads: self.threads,
+            keep_level_alphas: false,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algo", Json::from(self.algo.name())),
+            ("dataset", Json::from(self.dataset.as_str())),
+            ("kernel", Json::from(self.kernel.as_str())),
+            ("gamma", Json::from(self.gamma)),
+            ("eta", Json::from(self.eta)),
+            ("c", Json::from(self.c)),
+            ("eps", Json::from(self.eps)),
+            ("levels", Json::from(self.levels)),
+            ("k_base", Json::from(self.k_base)),
+            ("sample_m", Json::from(self.sample_m)),
+            ("cache_mb", Json::from(self.cache_mb)),
+            ("seed", Json::from(self.seed as f64)),
+            ("threads", Json::from(self.threads)),
+            ("backend", Json::from(self.backend.as_str())),
+            ("budget", Json::from(self.budget)),
+        ])
+    }
+}
+
+fn json_to_arg(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        let cfg = RunConfig::default();
+        assert!(cfg.kernel_kind().is_ok());
+        assert!(cfg.smo_config().is_ok());
+        assert!(cfg.dcsvm_config().is_ok());
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut cfg = RunConfig::default();
+        cfg.apply("gamma", "8.5").unwrap();
+        cfg.apply("algo", "cascade").unwrap();
+        cfg.apply("kernel", "poly").unwrap();
+        assert_eq!(cfg.gamma, 8.5);
+        assert_eq!(cfg.algo, Algo::Cascade);
+        assert!(matches!(cfg.kernel_kind().unwrap(), KernelKind::Poly { .. }));
+        assert!(cfg.apply("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("dcsvm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let mut cfg = RunConfig::default();
+        cfg.apply("gamma", "4.0").unwrap();
+        cfg.apply("dataset", "webspam-like").unwrap();
+        std::fs::write(&path, cfg.to_json().to_string()).unwrap();
+        let back = RunConfig::from_file(&path).unwrap();
+        assert_eq!(back.gamma, 4.0);
+        assert_eq!(back.dataset, "webspam-like");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn early_algo_sets_stop_level() {
+        let mut cfg = RunConfig::default();
+        cfg.apply("algo", "early").unwrap();
+        assert_eq!(cfg.dcsvm_config().unwrap().stop_after_level, Some(1));
+    }
+
+    #[test]
+    fn algo_names_unique() {
+        let names: std::collections::HashSet<_> =
+            Algo::all().iter().map(|a| a.name()).collect();
+        assert_eq!(names.len(), Algo::all().len());
+    }
+}

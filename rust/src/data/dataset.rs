@@ -1,0 +1,159 @@
+//! Dense dataset container: row-major f32 features + ±1 labels.
+//!
+//! Kernel SVM at our scales is compute-bound on dense kernel blocks, so rows
+//! are stored dense and padded-feature-aligned copies are produced on demand
+//! by the runtime. Labels are `i8` in {-1, +1} (the paper's binary setting;
+//! multiclass datasets are binarized by the generators exactly as the paper
+//! does for mnist8m/cifar).
+
+use crate::util::prng::Pcg64;
+
+/// A dense binary-classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major features, `n * dim`.
+    pub x: Vec<f32>,
+    /// Labels in {-1, +1}, length `n`.
+    pub y: Vec<i8>,
+    pub dim: usize,
+    /// Human-readable provenance tag (e.g. "covtype-like(seed=1)").
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<i8>, dim: usize, name: impl Into<String>) -> Self {
+        assert_eq!(x.len(), y.len() * dim, "x/y shape mismatch");
+        assert!(y.iter().all(|&l| l == 1 || l == -1), "labels must be ±1");
+        Dataset { x, y, dim, name: name.into() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Squared L2 norms of all rows (precomputed once per dataset; the RBF
+    /// kernel path consumes these).
+    pub fn sq_norms(&self) -> Vec<f32> {
+        (0..self.len())
+            .map(|i| self.row(i).iter().map(|&v| v * v).sum())
+            .collect()
+    }
+
+    /// Select a subset of rows (used for cluster subproblems).
+    pub fn subset(&self, idx: &[usize], name: impl Into<String>) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset { x, y, dim: self.dim, name: name.into() }
+    }
+
+    /// Random train/test split with the given train fraction.
+    pub fn split(&self, train_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+        let n = self.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let ntr = ((n as f64) * train_frac).round() as usize;
+        let tr = self.subset(&idx[..ntr], format!("{}-train", self.name));
+        let te = self.subset(&idx[ntr..], format!("{}-test", self.name));
+        (tr, te)
+    }
+
+    /// Linearly scale every feature to [0, 1] (the paper's preprocessing for
+    /// non-image datasets). Constant features map to 0.
+    pub fn scale_unit(&mut self) {
+        let n = self.len();
+        if n == 0 {
+            return;
+        }
+        for j in 0..self.dim {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for i in 0..n {
+                let v = self.x[i * self.dim + j];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let span = hi - lo;
+            for i in 0..n {
+                let v = &mut self.x[i * self.dim + j];
+                *v = if span > 0.0 { (*v - lo) / span } else { 0.0 };
+            }
+        }
+    }
+
+    /// Fraction of positive labels.
+    pub fn pos_frac(&self) -> f64 {
+        self.y.iter().filter(|&&l| l == 1).count() as f64 / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![1, -1, 1],
+            2,
+            "tiny",
+        )
+    }
+
+    #[test]
+    fn rows_and_norms() {
+        let d = tiny();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.row(1), &[2.0, 3.0]);
+        let n = d.sq_norms();
+        assert_eq!(n, vec![1.0, 13.0, 41.0]);
+    }
+
+    #[test]
+    fn subset_preserves_rows() {
+        let d = tiny();
+        let s = d.subset(&[2, 0], "s");
+        assert_eq!(s.row(0), d.row(2));
+        assert_eq!(s.row(1), d.row(0));
+        assert_eq!(s.y, vec![1, 1]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = tiny();
+        let mut rng = Pcg64::new(1);
+        let (tr, te) = d.split(2.0 / 3.0, &mut rng);
+        assert_eq!(tr.len() + te.len(), 3);
+        assert_eq!(tr.len(), 2);
+    }
+
+    #[test]
+    fn scale_unit_bounds() {
+        let mut d = tiny();
+        d.scale_unit();
+        for j in 0..d.dim {
+            let col: Vec<f32> = (0..d.len()).map(|i| d.x[i * d.dim + j]).collect();
+            assert!(col.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(col.iter().any(|&v| v == 0.0));
+            assert!(col.iter().any(|&v| v == 1.0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_bad_labels() {
+        Dataset::new(vec![0.0], vec![2], 1, "bad");
+    }
+}

@@ -1,0 +1,150 @@
+//! LIBSVM sparse text format reader/writer.
+//!
+//! The paper's datasets ship in this format (`label idx:val idx:val ...`,
+//! 1-based indices). The reader densifies into `Dataset` (our scales fit in
+//! RAM comfortably); the writer lets users export synthetic datasets to run
+//! against external solvers.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::dataset::Dataset;
+
+/// Parse LIBSVM text. Labels may be any two values; they are mapped to ±1
+/// by sign (0/1 labels map 0 → -1). `dim_hint` pads/validates feature count.
+pub fn read_libsvm(path: &Path, dim_hint: Option<usize>) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    parse_libsvm(BufReader::new(file), dim_hint, path.display().to_string())
+}
+
+pub fn parse_libsvm<R: BufRead>(
+    reader: R,
+    dim_hint: Option<usize>,
+    name: String,
+) -> Result<Dataset> {
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut labels: Vec<i8> = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        labels.push(if label > 0.0 { 1 } else { -1 });
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair '{tok}'", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: bad index", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: indices are 1-based", lineno + 1);
+            }
+            let val: f32 = val
+                .parse()
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push(feats);
+    }
+
+    let dim = dim_hint.unwrap_or(max_idx).max(max_idx);
+    if dim == 0 {
+        bail!("empty dataset: no features found");
+    }
+    let mut x = vec![0f32; rows.len() * dim];
+    for (i, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x[i * dim + j] = v;
+        }
+    }
+    Ok(Dataset::new(x, labels, dim, name))
+}
+
+/// Write a dataset in LIBSVM format (zeros omitted).
+pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.len() {
+        write!(w, "{}", if ds.y[i] == 1 { "+1" } else { "-1" })?;
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_basic() {
+        let txt = "+1 1:0.5 3:2.0\n-1 2:1.0\n# comment\n\n+1 1:1\n";
+        let ds = parse_libsvm(Cursor::new(txt), None, "t".into()).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim, 3);
+        assert_eq!(ds.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(ds.row(1), &[0.0, 1.0, 0.0]);
+        assert_eq!(ds.y, vec![1, -1, 1]);
+    }
+
+    #[test]
+    fn zero_one_labels_map_to_pm1() {
+        let txt = "1 1:1\n0 1:2\n";
+        let ds = parse_libsvm(Cursor::new(txt), None, "t".into()).unwrap();
+        assert_eq!(ds.y, vec![1, -1]);
+    }
+
+    #[test]
+    fn dim_hint_pads() {
+        let txt = "+1 1:1\n";
+        let ds = parse_libsvm(Cursor::new(txt), Some(5), "t".into()).unwrap();
+        assert_eq!(ds.dim, 5);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let txt = "+1 0:1\n";
+        assert!(parse_libsvm(Cursor::new(txt), None, "t".into()).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let dir = std::env::temp_dir().join("dcsvm_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.svm");
+        let ds = Dataset::new(
+            vec![1.0, 0.0, 0.25, -2.0, 0.0, 3.0],
+            vec![1, -1],
+            3,
+            "rt",
+        );
+        write_libsvm(&ds, &path).unwrap();
+        let back = read_libsvm(&path, Some(3)).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.row(0), ds.row(0));
+        assert_eq!(back.row(1), ds.row(1));
+        assert_eq!(back.y, ds.y);
+        std::fs::remove_file(&path).ok();
+    }
+}

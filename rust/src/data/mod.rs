@@ -1,0 +1,9 @@
+//! Data layer: dense dataset container (`dataset`), LIBSVM text IO
+//! (`libsvm`), and seeded synthetic counterparts of the paper's seven
+//! benchmark datasets (`synthetic`).
+
+pub mod dataset;
+pub mod libsvm;
+pub mod synthetic;
+
+pub use dataset::Dataset;

@@ -1,0 +1,403 @@
+//! DC-SVM: the paper's Algorithm 1 — multilevel divide-and-conquer kernel
+//! SVM training.
+//!
+//! ```text
+//! for l = l_max … 1:
+//!     k_l = k^l clusters
+//!     sample m points   (level l_max: from all data;
+//!                        below: from the SVs of ᾱ^{(l+1)} — adaptive clustering)
+//!     two-step kernel kmeans → partition V_1..V_{k_l}
+//!     solve each cluster subproblem warm-started from ᾱ^{(l+1)}
+//! refine: solve the SVM restricted to level-1 SVs
+//! final:  solve the whole problem warm-started from the refined ᾱ
+//! ```
+//!
+//! Early stopping after any level yields the early-prediction model
+//! (eq. 11): the level's router + per-cluster local models.
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::kernel::{BlockKernel, KernelKind};
+use crate::kmeans::{two_step_partition, Partition, Router};
+use crate::predict::{EarlyModel, SvmModel};
+use crate::solver::{SmoConfig, SmoSolver};
+use crate::util::prng::Pcg64;
+use crate::util::threadpool::scope_map;
+use crate::util::timer::Series;
+
+/// Configuration for the multilevel driver.
+#[derive(Clone, Debug)]
+pub struct DcSvmConfig {
+    pub kind: KernelKind,
+    pub c: f64,
+    /// Number of divide levels l_max (level l has k_base^l clusters).
+    /// levels = 4, k_base = 4 reproduces the paper's 256-cluster bottom.
+    pub levels: usize,
+    pub k_base: usize,
+    /// Kernel-kmeans sample size m (paper: 1000).
+    pub sample_m: usize,
+    /// Subproblem / final stopping tolerances.
+    pub eps_sub: f64,
+    pub eps_final: f64,
+    /// Kernel cache budget for the *final* solve; subproblems get a
+    /// proportional share.
+    pub cache_bytes: usize,
+    /// Sample upper-level kmeans from the current SV set (Algorithm 1).
+    pub adaptive: bool,
+    /// Solve the level-1-SV-restricted problem before the final solve.
+    pub refine: bool,
+    /// Stop after finishing this level and return the early model
+    /// (None = run to the exact solution; Some(1) = paper's DC-SVM (early)).
+    pub stop_after_level: Option<usize>,
+    /// Iteration caps (0 = unlimited).
+    pub max_iter_sub: usize,
+    pub max_iter_final: usize,
+    pub seed: u64,
+    /// Worker threads for independent cluster subproblems.
+    pub threads: usize,
+    /// Keep per-level ᾱ snapshots (Figure 2 analysis).
+    pub keep_level_alphas: bool,
+}
+
+impl Default for DcSvmConfig {
+    fn default() -> Self {
+        DcSvmConfig {
+            kind: KernelKind::Rbf { gamma: 1.0 },
+            c: 1.0,
+            levels: 4,
+            k_base: 4,
+            sample_m: 256,
+            eps_sub: 1e-3,
+            eps_final: 1e-3,
+            cache_bytes: 256 << 20,
+            adaptive: true,
+            refine: true,
+            stop_after_level: None,
+            max_iter_sub: 0,
+            max_iter_final: 0,
+            seed: 0,
+            threads: 1,
+            keep_level_alphas: false,
+        }
+    }
+}
+
+/// Per-level record (Table 6 + Figure 2 data).
+#[derive(Clone, Debug)]
+pub struct LevelStats {
+    pub level: usize,
+    pub k: usize,
+    pub clustering_s: f64,
+    pub training_s: f64,
+    pub sv_count: usize,
+    pub sub_iterations: usize,
+    /// ᾱ^{(l)} snapshot if `keep_level_alphas`.
+    pub alpha: Option<Vec<f64>>,
+    /// Cumulative wall-clock when this level finished.
+    pub cumulative_s: f64,
+}
+
+/// Training outcome.
+pub struct DcSvmResult {
+    /// Final α (exact solve) or last-level ᾱ (early stop).
+    pub alpha: Vec<f64>,
+    /// Objective of `alpha` on the *whole* problem (None if early-stopped
+    /// and not evaluated).
+    pub objective: Option<f64>,
+    pub levels: Vec<LevelStats>,
+    pub refine_s: f64,
+    pub final_s: f64,
+    pub total_s: f64,
+    pub final_iterations: usize,
+    /// Early-prediction model built from the deepest solved level.
+    pub early_model: Option<EarlyModel>,
+    /// (elapsed, objective) trace of the final whole-problem solve,
+    /// time-shifted by the divide-phase cost (Figure 3 series).
+    pub trace: Series,
+    pub early_stopped: bool,
+}
+
+impl DcSvmResult {
+    pub fn sv_count(&self) -> usize {
+        self.alpha.iter().filter(|&&a| a > 0.0).count()
+    }
+}
+
+/// Train DC-SVM.
+pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvmResult {
+    assert_eq!(kernel.kind(), cfg.kind, "kernel backend kind mismatch");
+    let n = ds.len();
+    let t0 = Instant::now();
+    let mut rng = Pcg64::new(cfg.seed);
+
+    let mut alpha = vec![0f64; n];
+    let mut levels = Vec::new();
+    let mut last_partition: Option<(Router, Partition)> = None;
+    let mut early_stopped = false;
+
+    // ---------------- divide phase: levels l_max .. 1 ----------------------
+    for level in (1..=cfg.levels).rev() {
+        let k = cfg.k_base.pow(level as u32).min(n.max(1));
+        let tl = Instant::now();
+
+        // Adaptive sampling pool: SVs of the level below (paper Alg. 1).
+        let sv_pool: Option<Vec<usize>> = if cfg.adaptive && level < cfg.levels {
+            let pool: Vec<usize> = (0..n).filter(|&i| alpha[i] > 0.0).collect();
+            if pool.len() >= cfg.k_base { Some(pool) } else { None }
+        } else {
+            None
+        };
+        let (router, part) = two_step_partition(
+            ds,
+            k,
+            cfg.sample_m,
+            sv_pool.as_deref(),
+            kernel,
+            &mut rng,
+        );
+        let clustering_s = tl.elapsed().as_secs_f64();
+
+        // Solve the k cluster subproblems independently (warm-started).
+        let tt = Instant::now();
+        // Subproblems run sequentially per worker thread and free their
+        // cache on completion, so each gets the budget divided by the
+        // number of *concurrent* solves, not by k.
+        let sub_cache = (cfg.cache_bytes / cfg.threads.max(1)).max(1 << 20);
+        let jobs: Vec<Vec<usize>> =
+            part.members.iter().filter(|m| !m.is_empty()).cloned().collect();
+        let alpha_ref = &alpha;
+        let results: Vec<(Vec<usize>, Vec<f64>, usize)> =
+            scope_map(cfg.threads, jobs, |_, members| {
+                let sub = ds.subset(&members, "cluster");
+                let a0: Vec<f64> = members.iter().map(|&i| alpha_ref[i]).collect();
+                let scfg = SmoConfig {
+                    c: cfg.c,
+                    eps: cfg.eps_sub,
+                    max_iter: cfg.max_iter_sub,
+                    cache_bytes: sub_cache,
+                    shrinking: true,
+                    report_every: 0,
+            row_batch: 0,
+                };
+                let warm = a0.iter().any(|&a| a != 0.0);
+                let res = SmoSolver::new(&sub, kernel, scfg).solve_warm(
+                    if warm { Some(&a0) } else { None },
+                    &mut |_| {},
+                );
+                (members, res.alpha, res.iterations)
+            });
+        let mut sub_iterations = 0usize;
+        for (members, sub_alpha, iters) in results {
+            sub_iterations += iters;
+            for (t, &i) in members.iter().enumerate() {
+                alpha[i] = sub_alpha[t];
+            }
+        }
+        let training_s = tt.elapsed().as_secs_f64();
+
+        let sv_count = alpha.iter().filter(|&&a| a > 0.0).count();
+        crate::debug!(
+            "level {level}: k={k} clustering {clustering_s:.2}s training {training_s:.2}s svs {sv_count}"
+        );
+        levels.push(LevelStats {
+            level,
+            k,
+            clustering_s,
+            training_s,
+            sv_count,
+            sub_iterations,
+            alpha: cfg.keep_level_alphas.then(|| alpha.clone()),
+            cumulative_s: t0.elapsed().as_secs_f64(),
+        });
+        last_partition = Some((router, part));
+
+        if cfg.stop_after_level == Some(level) {
+            early_stopped = true;
+            break;
+        }
+    }
+
+    // Early model from the deepest solved level's partition.
+    let early_model = last_partition.map(|(router, part)| {
+        let locals: Vec<SvmModel> = part
+            .members
+            .iter()
+            .map(|members| {
+                let sub = ds.subset(members, "c");
+                let a: Vec<f64> = members.iter().map(|&i| alpha[i]).collect();
+                SvmModel::from_alpha(&sub, &a, cfg.kind)
+            })
+            .collect();
+        EarlyModel::new(router, locals)
+    });
+
+    if early_stopped {
+        return DcSvmResult {
+            alpha,
+            objective: None,
+            levels,
+            refine_s: 0.0,
+            final_s: 0.0,
+            total_s: t0.elapsed().as_secs_f64(),
+            final_iterations: 0,
+            early_model,
+            trace: Series::default(),
+            early_stopped: true,
+        };
+    }
+
+    // ---------------- refine step: solve on level-1 SVs --------------------
+    let mut refine_s = 0.0;
+    if cfg.refine {
+        let tr = Instant::now();
+        let sv_idx: Vec<usize> = (0..n).filter(|&i| alpha[i] > 0.0).collect();
+        if sv_idx.len() >= 2 && sv_idx.len() < n {
+            let sub = ds.subset(&sv_idx, "refine");
+            let a0: Vec<f64> = sv_idx.iter().map(|&i| alpha[i]).collect();
+            let scfg = SmoConfig {
+                c: cfg.c,
+                eps: cfg.eps_sub,
+                max_iter: cfg.max_iter_sub,
+                cache_bytes: cfg.cache_bytes,
+                shrinking: true,
+                report_every: 0,
+            row_batch: 0,
+            };
+            let res = SmoSolver::new(&sub, kernel, scfg)
+                .solve_warm(Some(&a0), &mut |_| {});
+            for (t, &i) in sv_idx.iter().enumerate() {
+                alpha[i] = res.alpha[t];
+            }
+        }
+        refine_s = tr.elapsed().as_secs_f64();
+    }
+
+    // ---------------- conquer: final whole-problem solve -------------------
+    let offset = t0.elapsed().as_secs_f64();
+    let tf = Instant::now();
+    let mut trace = Series::default();
+    let scfg = SmoConfig {
+        c: cfg.c,
+        eps: cfg.eps_final,
+        max_iter: cfg.max_iter_final,
+        cache_bytes: cfg.cache_bytes,
+        shrinking: true,
+        report_every: 2000,
+        row_batch: 0,
+    };
+    let res = SmoSolver::new(ds, kernel, scfg).solve_warm(Some(&alpha), &mut |p| {
+        trace.push(offset + p.elapsed_s, p.objective);
+    });
+    let final_s = tf.elapsed().as_secs_f64();
+
+    DcSvmResult {
+        alpha: res.alpha,
+        objective: Some(res.objective),
+        levels,
+        refine_s,
+        final_s,
+        total_s: t0.elapsed().as_secs_f64(),
+        final_iterations: res.iterations,
+        early_model,
+        trace,
+        early_stopped: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate_split};
+    use crate::kernel::native::NativeKernel;
+    use crate::solver::solve_svm;
+
+    fn setup(n: usize) -> (Dataset, Dataset, NativeKernel, DcSvmConfig) {
+        let (tr, te) = generate_split(&covtype_like(), n, n / 4, 42);
+        let kind = KernelKind::Rbf { gamma: 16.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = DcSvmConfig {
+            kind,
+            c: 4.0,
+            levels: 2,
+            k_base: 4,
+            sample_m: 64,
+            eps_final: 1e-5,
+            eps_sub: 1e-3,
+            ..Default::default()
+        };
+        (tr, te, kern, cfg)
+    }
+
+    #[test]
+    fn reaches_global_optimum() {
+        let (tr, _, kern, cfg) = setup(500);
+        let dc = train(&tr, &kern, &cfg);
+        let direct = solve_svm(
+            &tr,
+            &kern,
+            SmoConfig { c: cfg.c, eps: 1e-5, ..Default::default() },
+        );
+        let rel = (dc.objective.unwrap() - direct.objective).abs()
+            / direct.objective.abs().max(1e-12);
+        assert!(rel < 1e-3, "dc {} direct {}", dc.objective.unwrap(), direct.objective);
+        assert!(!dc.early_stopped);
+        assert_eq!(dc.levels.len(), 2);
+    }
+
+    #[test]
+    fn early_stop_produces_working_model() {
+        let (tr, te, kern, mut cfg) = setup(600);
+        cfg.stop_after_level = Some(1);
+        let dc = train(&tr, &kern, &cfg);
+        assert!(dc.early_stopped);
+        assert!(dc.objective.is_none());
+        let em = dc.early_model.expect("early model");
+        let acc = em.accuracy(&te, &kern);
+        assert!(acc > 0.75, "early model acc {acc}");
+    }
+
+    #[test]
+    fn warm_start_reduces_final_iterations() {
+        let (tr, _, kern, cfg) = setup(500);
+        let dc = train(&tr, &kern, &cfg);
+        let direct = solve_svm(
+            &tr,
+            &kern,
+            SmoConfig { c: cfg.c, eps: 1e-5, ..Default::default() },
+        );
+        assert!(
+            dc.final_iterations < direct.iterations,
+            "final {} vs direct {}",
+            dc.final_iterations,
+            direct.iterations
+        );
+    }
+
+    #[test]
+    fn deterministic_and_thread_invariant() {
+        let (tr, _, kern, mut cfg) = setup(300);
+        cfg.stop_after_level = Some(1);
+        cfg.keep_level_alphas = true;
+        let a = train(&tr, &kern, &cfg);
+        cfg.threads = 4;
+        let b = train(&tr, &kern, &cfg);
+        assert_eq!(a.alpha, b.alpha, "thread count changed the result");
+    }
+
+    #[test]
+    fn level_stats_recorded() {
+        let (tr, _, kern, mut cfg) = setup(400);
+        cfg.levels = 3;
+        cfg.keep_level_alphas = true;
+        let dc = train(&tr, &kern, &cfg);
+        assert_eq!(dc.levels.len(), 3);
+        assert_eq!(dc.levels[0].level, 3);
+        assert_eq!(dc.levels[0].k, 64);
+        assert_eq!(dc.levels[2].k, 4);
+        for ls in &dc.levels {
+            assert!(ls.alpha.is_some());
+            assert!(ls.sv_count > 0);
+        }
+    }
+}

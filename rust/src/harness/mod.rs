@@ -1,0 +1,299 @@
+//! Run harness: one entry point that trains any [`Algo`] on a dataset pair
+//! and reports the paper's metrics (train time, test accuracy, objective,
+//! SV count). Used by the CLI, the examples, and every bench.
+
+use anyhow::{bail, Result};
+use once_cell::sync::OnceCell;
+
+use crate::baselines::{cascade, fastfood, lasvm, llsvm, ltpu, spsvm};
+use crate::config::{Algo, RunConfig};
+use crate::data::Dataset;
+use crate::dcsvm;
+use crate::kernel::{native::NativeKernel, BlockKernel, KernelKind};
+use crate::predict::SvmModel;
+use crate::runtime::{Engine, PjrtKernel};
+use crate::solver::SmoSolver;
+
+static ENGINE: OnceCell<Option<Engine>> = OnceCell::new();
+
+/// The process-wide PJRT engine (compiled once), or None when artifacts are
+/// not built / not loadable.
+pub fn global_engine() -> Option<&'static Engine> {
+    ENGINE.get_or_init(Engine::load_default).as_ref()
+}
+
+/// Build a kernel backend. `mode`: "native", "pjrt", or "auto" (pjrt when
+/// artifacts are present and the feature dim fits, else native).
+pub fn make_kernel(kind: KernelKind, mode: &str, dim: usize) -> Result<Box<dyn BlockKernel + 'static>> {
+    match mode {
+        "native" => Ok(Box::new(NativeKernel::new(kind))),
+        "pjrt" => match global_engine() {
+            Some(e) if dim <= e.abi().d_pad => Ok(Box::new(PjrtKernel::new(e, kind))),
+            Some(e) => bail!("dataset dim {dim} exceeds artifact d_pad {}", e.abi().d_pad),
+            None => bail!("pjrt backend requested but artifacts/ not available"),
+        },
+        "auto" => Ok(match global_engine() {
+            Some(e) if dim <= e.abi().d_pad => Box::new(PjrtKernel::new(e, kind)),
+            _ => Box::new(NativeKernel::new(kind)),
+        }),
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
+/// Uniform outcome record (a row of the paper's tables).
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub algo: &'static str,
+    pub train_s: f64,
+    pub accuracy: f64,
+    /// Whole-problem dual objective (exact algos only).
+    pub objective: Option<f64>,
+    pub svs: usize,
+    pub note: String,
+}
+
+/// Train `cfg.algo` on (`tr`, `te`) and measure.
+pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
+    let kind = cfg.kernel_kind()?;
+    let kernel = make_kernel(kind, &cfg.backend, tr.dim)?;
+    let t0 = std::time::Instant::now();
+
+    let outcome = match cfg.algo {
+        Algo::Libsvm => {
+            let res = SmoSolver::new(tr, kernel.as_ref(), cfg.smo_config()?).solve();
+            let model = SvmModel::from_alpha(tr, &res.alpha, kind);
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: res.elapsed_s,
+                accuracy: model.accuracy(te, kernel.as_ref()),
+                objective: Some(res.objective),
+                svs: res.sv_count,
+                note: format!("iters={} cache_hit={:.2}", res.iterations, res.cache_hit_rate),
+            }
+        }
+        Algo::DcSvm | Algo::DcSvmEarly => {
+            let dcfg = cfg.dcsvm_config()?;
+            let res = dcsvm::train(tr, kernel.as_ref(), &dcfg);
+            let (accuracy, note) = if res.early_stopped {
+                let em = res.early_model.as_ref().expect("early model");
+                (
+                    em.accuracy(te, kernel.as_ref()),
+                    format!("early@level1 local_svs={}", em.total_svs()),
+                )
+            } else {
+                let model = SvmModel::from_alpha(tr, &res.alpha, kind);
+                (
+                    model.accuracy(te, kernel.as_ref()),
+                    format!("final_iters={}", res.final_iterations),
+                )
+            };
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: res.total_s,
+                accuracy,
+                objective: res.objective,
+                svs: res.sv_count(),
+                note,
+            }
+        }
+        Algo::Cascade => {
+            let ccfg = cascade::CascadeConfig {
+                kind,
+                c: cfg.c,
+                eps: cfg.eps,
+                depth: 3,
+                cache_bytes: cfg.cache_mb << 20,
+                seed: cfg.seed,
+                threads: cfg.threads,
+                max_iter: 0,
+            };
+            let res = cascade::train(tr, kernel.as_ref(), &ccfg);
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: res.elapsed_s,
+                accuracy: res.model.accuracy(te, kernel.as_ref()),
+                objective: Some(crate::metrics::objective_of(tr, kernel.as_ref(), &res.alpha)),
+                svs: res.model.num_svs(),
+                note: format!("levels={:?}", res.level_sv_counts),
+            }
+        }
+        Algo::LaSvm => {
+            let lcfg = lasvm::LaSvmConfig {
+                kind,
+                c: cfg.c,
+                eps: cfg.eps,
+                passes: 1,
+                seed: cfg.seed,
+                max_finish_iter: 0,
+            };
+            let res = lasvm::train(tr, kernel.as_ref(), &lcfg);
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: res.elapsed_s,
+                accuracy: res.model.accuracy(te, kernel.as_ref()),
+                objective: Some(crate::metrics::objective_of(tr, kernel.as_ref(), &res.alpha)),
+                svs: res.model.num_svs(),
+                note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
+            }
+        }
+        Algo::Llsvm => {
+            let model = llsvm::train(
+                tr,
+                &llsvm::LlsvmConfig {
+                    kind,
+                    c: cfg.c,
+                    landmarks: cfg.budget,
+                    seed: cfg.seed,
+                    linear_eps: 1e-3,
+                },
+            );
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: model.elapsed_s,
+                accuracy: model.accuracy(te),
+                objective: None,
+                svs: cfg.budget,
+                note: format!("landmarks={}", cfg.budget),
+            }
+        }
+        Algo::Fastfood => {
+            let model = fastfood::train(
+                tr,
+                &fastfood::FastfoodConfig {
+                    gamma: cfg.gamma,
+                    c: cfg.c,
+                    features: cfg.budget * 8,
+                    seed: cfg.seed,
+                },
+            );
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: model.elapsed_s,
+                accuracy: model.accuracy(te),
+                objective: None,
+                svs: 0,
+                note: format!("features={}", cfg.budget * 8),
+            }
+        }
+        Algo::Ltpu => {
+            let model = ltpu::train(
+                tr,
+                &ltpu::LtpuConfig {
+                    gamma: cfg.gamma,
+                    c: cfg.c,
+                    units: cfg.budget,
+                    seed: cfg.seed,
+                },
+            );
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: model.elapsed_s,
+                accuracy: model.accuracy(te),
+                objective: None,
+                svs: 0,
+                note: format!("units={}", cfg.budget),
+            }
+        }
+        Algo::Spsvm => {
+            let model = spsvm::train(
+                tr,
+                &spsvm::SpsvmConfig {
+                    kind,
+                    c: cfg.c,
+                    basis: cfg.budget,
+                    candidates: 16,
+                    grow_step: 8,
+                    seed: cfg.seed,
+                },
+            );
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: model.elapsed_s,
+                accuracy: model.accuracy(te),
+                objective: None,
+                svs: model.basis_size,
+                note: format!("basis={}", model.basis_size),
+            }
+        }
+    };
+    let _ = t0;
+    Ok(outcome)
+}
+
+/// Load a synthetic dataset pair per the config.
+pub fn load_dataset(cfg: &RunConfig) -> Result<(Dataset, Dataset)> {
+    let spec = crate::data::synthetic::all_specs()
+        .into_iter()
+        .find(|s| s.name == cfg.dataset);
+    let Some(spec) = spec else {
+        bail!(
+            "unknown dataset '{}' (available: {})",
+            cfg.dataset,
+            crate::data::synthetic::all_specs()
+                .iter()
+                .map(|s| s.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    };
+    let (dtr, dte) = crate::data::synthetic::default_sizes(spec.name);
+    let ntr = cfg.n_train.unwrap_or(dtr);
+    let nte = cfg.n_test.unwrap_or(dte);
+    Ok(crate::data::synthetic::generate_split(&spec, ntr, nte, cfg.seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(algo: Algo) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.algo = algo;
+        cfg.dataset = "covtype-like".into();
+        cfg.n_train = Some(350);
+        cfg.n_test = Some(120);
+        cfg.gamma = 16.0;
+        cfg.c = 4.0;
+        cfg.levels = 2;
+        cfg.sample_m = 64;
+        cfg.budget = 32;
+        cfg.backend = "native".into();
+        cfg
+    }
+
+    #[test]
+    fn every_algo_runs_and_learns() {
+        for algo in Algo::all() {
+            let cfg = small_cfg(algo);
+            let (tr, te) = load_dataset(&cfg).unwrap();
+            let out = run(&cfg, &tr, &te).unwrap();
+            assert!(
+                out.accuracy > 0.60,
+                "{}: accuracy {}",
+                out.algo,
+                out.accuracy
+            );
+            assert!(out.train_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn exact_algos_reach_same_objective() {
+        let (tr, te) = load_dataset(&small_cfg(Algo::Libsvm)).unwrap();
+        let mut ocfg = small_cfg(Algo::Libsvm);
+        ocfg.eps = 1e-6;
+        let lib = run(&ocfg, &tr, &te).unwrap();
+        let mut dcfg = small_cfg(Algo::DcSvm);
+        dcfg.eps = 1e-6;
+        let dc = run(&dcfg, &tr, &te).unwrap();
+        let (a, b) = (lib.objective.unwrap(), dc.objective.unwrap());
+        assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "libsvm {a} dcsvm {b}");
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let mut cfg = small_cfg(Algo::Libsvm);
+        cfg.dataset = "not-a-dataset".into();
+        assert!(load_dataset(&cfg).is_err());
+    }
+}

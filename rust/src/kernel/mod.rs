@@ -1,0 +1,159 @@
+//! Kernel functions and the block-kernel backend abstraction.
+//!
+//! Everything expensive in kernel SVM training reduces to *kernel block*
+//! evaluation K(Xq, Xd) (see DESIGN.md §2). `BlockKernel` is the single
+//! interface the solver, kmeans, DC-SVM driver, and predictors consume; it
+//! has two implementations:
+//!
+//! - [`native::NativeKernel`]: pure-Rust blocked evaluation (reference
+//!   backend; always available, used by unit tests and as the comparator in
+//!   `bench_kernel_micro`);
+//! - [`crate::runtime::PjrtKernel`]: executes the AOT-compiled Pallas/XLA
+//!   artifacts via PJRT — the production hot path.
+
+pub mod native;
+
+/// Kernel function family + parameters. γ/η are runtime values (the PJRT
+/// artifacts take them as inputs, so no recompilation across the paper's
+/// (C, γ) grids).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelKind {
+    /// exp(-γ‖x−z‖²)
+    Rbf { gamma: f32 },
+    /// (γ·xᵀz + η)³ — the paper's degree-3 polynomial
+    Poly { gamma: f32, eta: f32 },
+    /// xᵀz
+    Linear,
+}
+
+impl KernelKind {
+    /// Evaluate on a single pair (scalar reference implementation — the
+    /// oracle for both backends' tests).
+    pub fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match *self {
+            KernelKind::Rbf { gamma } => {
+                let d2: f32 = a
+                    .iter()
+                    .zip(b)
+                    .map(|(&u, &v)| (u - v) * (u - v))
+                    .sum();
+                (-gamma * d2).exp()
+            }
+            KernelKind::Poly { gamma, eta } => {
+                let dot: f32 = a.iter().zip(b).map(|(&u, &v)| u * v).sum();
+                let g = gamma * dot + eta;
+                g * g * g
+            }
+            KernelKind::Linear => a.iter().zip(b).map(|(&u, &v)| u * v).sum(),
+        }
+    }
+
+    /// K(x, x) — needed by kernel kmeans distances and Theorem-2 bounds.
+    pub fn self_eval(&self, a: &[f32], sq_norm: f32) -> f32 {
+        match *self {
+            KernelKind::Rbf { .. } => 1.0,
+            KernelKind::Poly { gamma, eta } => {
+                let g = gamma * sq_norm + eta;
+                g * g * g
+            }
+            KernelKind::Linear => {
+                let _ = a;
+                sq_norm
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Rbf { .. } => "rbf",
+            KernelKind::Poly { .. } => "poly",
+            KernelKind::Linear => "linear",
+        }
+    }
+}
+
+/// A batched kernel-block evaluator.
+///
+/// `xq`/`xd` are row-major `[nq, dim]` / `[nd, dim]`; `q_norms`/`d_norms`
+/// are the rows' squared L2 norms (consumed by RBF; ignored otherwise);
+/// `out` is row-major `[nq, nd]`.
+pub trait BlockKernel: Sync + Send {
+    fn kind(&self) -> KernelKind;
+
+    /// Whether this backend amortizes per-call overhead across batched
+    /// kernel-row requests. The PJRT backend pays a fixed dispatch cost per
+    /// call (FFI + literal copies + XLA launch), so the solver should fetch
+    /// rows in batches; the native backend computes rows at memory speed,
+    /// where speculative batching is wasted work (measured in
+    /// bench_ablations A5).
+    fn prefers_batched_rows(&self) -> bool {
+        false
+    }
+
+    fn block(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        out: &mut [f32],
+    );
+
+    /// Fused decision values: out[i] = Σ_j coef[j]·K(xq_i, xd_j).
+    /// Default materializes the block; the PJRT backend overrides with the
+    /// fused artifact.
+    fn decision(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        coef: &[f32],
+        out: &mut [f32],
+    ) {
+        let nq = q_norms.len();
+        let nd = d_norms.len();
+        debug_assert_eq!(out.len(), nq);
+        let mut block = vec![0f32; nq * nd];
+        self.block(xq, q_norms, xd, d_norms, dim, &mut block);
+        for i in 0..nq {
+            let row = &block[i * nd..(i + 1) * nd];
+            out[i] = row.iter().zip(coef).map(|(&k, &c)| k * c).sum();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_eval_matches_formulas() {
+        let a = [1.0f32, 2.0];
+        let b = [0.0f32, 1.0];
+        let rbf = KernelKind::Rbf { gamma: 0.5 };
+        assert!((rbf.eval(&a, &b) - (-0.5f32 * 2.0).exp()).abs() < 1e-7);
+        let poly = KernelKind::Poly { gamma: 1.0, eta: 1.0 };
+        assert!((poly.eval(&a, &b) - 27.0).abs() < 1e-5); // (2+1)^3
+        assert!((KernelKind::Linear.eval(&a, &b) - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn self_eval_consistency() {
+        let a = [0.5f32, -1.5, 2.0];
+        let n: f32 = a.iter().map(|v| v * v).sum();
+        for kind in [
+            KernelKind::Rbf { gamma: 2.0 },
+            KernelKind::Poly { gamma: 0.3, eta: 0.7 },
+            KernelKind::Linear,
+        ] {
+            assert!(
+                (kind.self_eval(&a, n) - kind.eval(&a, &a)).abs() < 1e-5,
+                "{kind:?}"
+            );
+        }
+    }
+}

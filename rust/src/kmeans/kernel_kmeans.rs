@@ -1,0 +1,249 @@
+//! Kernel kmeans (Lloyd iterations in feature space) on a sample.
+//!
+//! The divide step needs a partition minimizing the between-cluster kernel
+//! mass D(π) (Theorem 1); kernel kmeans minimizes exactly the within-cluster
+//! distortion whose complement is D(π) under the normalized-kernel view.
+//! Centers live implicitly in feature space: the squared distance of point i
+//! to the mean of cluster c over members M_c is
+//!
+//! ```text
+//! ‖φ(x_i) − m_c‖² = K_ii − (2/|M_c|) Σ_{j∈M_c} K_ij
+//!                       + (1/|M_c|²) Σ_{j,l∈M_c} K_jl
+//! ```
+//!
+//! This module runs on the m-point *sample* (O(m²) kernel fits in memory;
+//! the paper uses m = 1000); `twostep` extends the partition to all n points.
+
+use crate::kernel::BlockKernel;
+use crate::util::prng::Pcg64;
+
+/// Result of kernel kmeans on the sample.
+#[derive(Clone, Debug)]
+pub struct SampleClustering {
+    /// Cluster id per sample point.
+    pub assign: Vec<u16>,
+    /// Number of clusters.
+    pub k: usize,
+    /// Per-cluster member counts.
+    pub counts: Vec<usize>,
+    /// Per-cluster (1/|M_c|²)·ΣΣ K_jl — the constant term of the distance.
+    pub self_term: Vec<f64>,
+    /// Lloyd iterations executed.
+    pub iterations: usize,
+}
+
+/// Run kernel kmeans on `m` points given their dense kernel matrix
+/// (row-major m×m). Deterministic per `rng`.
+pub fn kernel_kmeans(
+    kmat: &[f32],
+    m: usize,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg64,
+) -> SampleClustering {
+    assert_eq!(kmat.len(), m * m);
+    let k = k.min(m).max(1);
+
+    // kmeans++-style greedy init in kernel space: first center random, each
+    // next = farthest (in kernel distance) from chosen so far.
+    let mut seeds = Vec::with_capacity(k);
+    seeds.push(rng.below(m));
+    let kd = |i: usize, j: usize| -> f64 {
+        (kmat[i * m + i] + kmat[j * m + j] - 2.0 * kmat[i * m + j]) as f64
+    };
+    let mut min_d: Vec<f64> = (0..m).map(|i| kd(i, seeds[0])).collect();
+    while seeds.len() < k {
+        // pick the point with max distance to nearest seed
+        let (best, _) = min_d
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap();
+        seeds.push(best);
+        for i in 0..m {
+            min_d[i] = min_d[i].min(kd(i, best));
+        }
+    }
+    let mut assign: Vec<u16> = (0..m)
+        .map(|i| {
+            (0..k)
+                .min_by(|&a, &b| kd(i, seeds[a]).total_cmp(&kd(i, seeds[b])))
+                .unwrap() as u16
+        })
+        .collect();
+
+    let mut counts = vec![0usize; k];
+    let mut self_term = vec![0f64; k];
+    let mut iterations = 0;
+
+    for _ in 0..max_iter {
+        iterations += 1;
+        // --- recompute cluster statistics --------------------------------
+        counts.iter_mut().for_each(|c| *c = 0);
+        for &a in &assign {
+            counts[a as usize] += 1;
+        }
+        // Reseed empty clusters with the farthest point from its center.
+        for c in 0..k {
+            if counts[c] == 0 {
+                let victim = rng.below(m);
+                counts[assign[victim] as usize] -= 1;
+                assign[victim] = c as u16;
+                counts[c] = 1;
+            }
+        }
+        // self_term[c] = (1/|M_c|²) ΣΣ K_jl over members
+        self_term.iter_mut().for_each(|s| *s = 0.0);
+        for i in 0..m {
+            let ci = assign[i] as usize;
+            for j in 0..m {
+                if assign[j] as usize == ci {
+                    self_term[ci] += kmat[i * m + j] as f64;
+                }
+            }
+        }
+        for c in 0..k {
+            let n = counts[c] as f64;
+            self_term[c] /= (n * n).max(1.0);
+        }
+
+        // --- reassign ------------------------------------------------------
+        let mut changed = 0usize;
+        // cross[i][c] = Σ_{j∈M_c} K_ij
+        for i in 0..m {
+            let mut cross = vec![0f64; k];
+            for j in 0..m {
+                cross[assign[j] as usize] += kmat[i * m + j] as f64;
+            }
+            let mut best_c = assign[i];
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                if counts[c] == 0 {
+                    continue;
+                }
+                let d = kmat[i * m + i] as f64 - 2.0 * cross[c] / counts[c] as f64
+                    + self_term[c];
+                if d < best_d {
+                    best_d = d;
+                    best_c = c as u16;
+                }
+            }
+            if best_c != assign[i] {
+                assign[i] = best_c;
+                changed += 1;
+            }
+        }
+        if changed == 0 {
+            break;
+        }
+    }
+
+    // Final statistics for the converged assignment.
+    counts.iter_mut().for_each(|c| *c = 0);
+    for &a in &assign {
+        counts[a as usize] += 1;
+    }
+    self_term.iter_mut().for_each(|s| *s = 0.0);
+    for i in 0..m {
+        let ci = assign[i] as usize;
+        for j in 0..m {
+            if assign[j] as usize == ci {
+                self_term[ci] += kmat[i * m + j] as f64;
+            }
+        }
+    }
+    for c in 0..k {
+        let n = counts[c] as f64;
+        self_term[c] /= (n * n).max(1.0);
+    }
+
+    SampleClustering { assign, k, counts, self_term, iterations }
+}
+
+/// Dense kernel matrix of a row set (helper for the sample).
+pub fn dense_kernel(
+    x: &[f32],
+    norms: &[f32],
+    dim: usize,
+    kernel: &dyn BlockKernel,
+) -> Vec<f32> {
+    let m = norms.len();
+    let mut kmat = vec![0f32; m * m];
+    kernel.block(x, norms, x, norms, dim, &mut kmat);
+    kmat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{native::NativeKernel, KernelKind};
+
+    /// Three well-separated blobs in 2-D must be recovered exactly.
+    fn blob_data() -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+        let centers = [(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)];
+        let mut rng = Pcg64::new(5);
+        let mut x = Vec::new();
+        let mut truth = Vec::new();
+        for (ci, &(cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..20 {
+                x.push(cx + rng.next_gaussian() as f32 * 0.3);
+                x.push(cy + rng.next_gaussian() as f32 * 0.3);
+                truth.push(ci);
+            }
+        }
+        let norms = x.chunks(2).map(|r| r[0] * r[0] + r[1] * r[1]).collect();
+        (x, norms, truth)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (x, norms, truth) = blob_data();
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let kmat = dense_kernel(&x, &norms, 2, &kern);
+        let mut rng = Pcg64::new(1);
+        let res = kernel_kmeans(&kmat, 60, 3, 50, &mut rng);
+        // Clustering must be a relabelling of the truth.
+        let mut map = [usize::MAX; 3];
+        for i in 0..60 {
+            let c = res.assign[i] as usize;
+            if map[truth[i]] == usize::MAX {
+                map[truth[i]] = c;
+            }
+            assert_eq!(map[truth[i]], c, "point {i} misclustered");
+        }
+        assert_eq!(res.counts, vec![20, 20, 20]);
+    }
+
+    #[test]
+    fn no_empty_clusters() {
+        let (x, norms, _) = blob_data();
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let kmat = dense_kernel(&x, &norms, 2, &kern);
+        let mut rng = Pcg64::new(2);
+        // Ask for more clusters than natural blobs: still no empties.
+        let res = kernel_kmeans(&kmat, 60, 7, 50, &mut rng);
+        assert!(res.counts.iter().all(|&c| c > 0), "{:?}", res.counts);
+        assert_eq!(res.counts.iter().sum::<usize>(), 60);
+    }
+
+    #[test]
+    fn k_capped_at_m() {
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 1.0 });
+        let x = vec![0.0f32, 1.0, 2.0, 3.0];
+        let norms: Vec<f32> = x.iter().map(|v| v * v).collect();
+        let kmat = dense_kernel(&x, &norms, 1, &kern);
+        let mut rng = Pcg64::new(3);
+        let res = kernel_kmeans(&kmat, 4, 10, 20, &mut rng);
+        assert_eq!(res.k, 4);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (x, norms, _) = blob_data();
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let kmat = dense_kernel(&x, &norms, 2, &kern);
+        let a = kernel_kmeans(&kmat, 60, 3, 50, &mut Pcg64::new(7));
+        let b = kernel_kmeans(&kmat, 60, 3, 50, &mut Pcg64::new(7));
+        assert_eq!(a.assign, b.assign);
+    }
+}

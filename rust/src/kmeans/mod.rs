@@ -1,0 +1,8 @@
+//! Clustering substrate: kernel kmeans on a sample (`kernel_kmeans`) and the
+//! two-step extension to the full dataset with a reusable point router
+//! (`twostep`) — the paper's divide step and the early-prediction router.
+
+pub mod kernel_kmeans;
+pub mod twostep;
+
+pub use twostep::{off_diagonal_mass, two_step_partition, Partition, Router};

@@ -1,0 +1,316 @@
+//! Two-step kernel kmeans (Chitta et al., KDD 2011) — the paper's divide
+//! step, O(n·m·d) instead of O(n²·d).
+//!
+//! Step 1: kernel kmeans on an m-point sample (kernel_kmeans.rs).
+//! Step 2: every point is assigned to the nearest *sample-defined* center:
+//!
+//! ```text
+//! d²(x, m_c) = K(x,x) − (2/|M_c|) Σ_{j∈M_c} K(x, s_j) + self_term_c
+//! ```
+//!
+//! which needs one K(all, sample) block pass — exactly the kernel-block
+//! operator the AOT artifacts implement.
+//!
+//! The resulting [`Router`] is retained by early-prediction models to route
+//! *test* points to their cluster (paper eq. 11).
+
+use crate::data::Dataset;
+use crate::kernel::BlockKernel;
+use crate::util::prng::Pcg64;
+
+use super::kernel_kmeans::{dense_kernel, kernel_kmeans};
+
+/// A fitted two-step kernel-kmeans model: routes any point to a cluster.
+#[derive(Clone, Debug)]
+pub struct Router {
+    /// Sample rows, row-major [m, dim].
+    sample_x: Vec<f32>,
+    sample_norms: Vec<f32>,
+    dim: usize,
+    /// Cluster of each sample point.
+    sample_assign: Vec<u16>,
+    /// Per-cluster member counts within the sample.
+    counts: Vec<usize>,
+    /// Per-cluster constant term of the kernel distance.
+    self_term: Vec<f64>,
+    pub k: usize,
+}
+
+impl Router {
+    /// Fit on a sample drawn from `ds` at the given indices.
+    pub fn fit(
+        ds: &Dataset,
+        sample_idx: &[usize],
+        k: usize,
+        kernel: &dyn BlockKernel,
+        max_iter: usize,
+        rng: &mut Pcg64,
+    ) -> Router {
+        let m = sample_idx.len();
+        assert!(m > 0, "empty sample");
+        let dim = ds.dim;
+        let mut sample_x = Vec::with_capacity(m * dim);
+        for &i in sample_idx {
+            sample_x.extend_from_slice(ds.row(i));
+        }
+        let sample_norms: Vec<f32> = sample_x
+            .chunks(dim)
+            .map(|r| r.iter().map(|&v| v * v).sum())
+            .collect();
+        let kmat = dense_kernel(&sample_x, &sample_norms, dim, kernel);
+        let sc = kernel_kmeans(&kmat, m, k, max_iter, rng);
+        Router {
+            sample_x,
+            sample_norms,
+            dim,
+            sample_assign: sc.assign,
+            counts: sc.counts,
+            self_term: sc.self_term,
+            k: sc.k,
+        }
+    }
+
+    pub fn sample_size(&self) -> usize {
+        self.sample_norms.len()
+    }
+
+    /// Assign a batch of rows ([n, dim] row-major with norms) to clusters.
+    /// One K(rows, sample) block pass, chunked.
+    pub fn assign_rows(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+    ) -> Vec<u16> {
+        let n = norms.len();
+        let m = self.sample_size();
+        let mut out = Vec::with_capacity(n);
+        const CHUNK: usize = 1024;
+        let mut kblock = vec![0f32; CHUNK.min(n.max(1)) * m];
+        for (c0, chunk_norms) in norms.chunks(CHUNK).enumerate() {
+            let lo = c0 * CHUNK;
+            let take = chunk_norms.len();
+            kernel.block(
+                &x[lo * self.dim..(lo + take) * self.dim],
+                chunk_norms,
+                &self.sample_x,
+                &self.sample_norms,
+                self.dim,
+                &mut kblock[..take * m],
+            );
+            for qi in 0..take {
+                let row = &kblock[qi * m..(qi + 1) * m];
+                // cross[c] = Σ_{j∈M_c} K(x, s_j)
+                let mut cross = vec![0f64; self.k];
+                for (j, &kv) in row.iter().enumerate() {
+                    cross[self.sample_assign[j] as usize] += kv as f64;
+                }
+                let mut best = 0u16;
+                let mut best_d = f64::INFINITY;
+                for c in 0..self.k {
+                    if self.counts[c] == 0 {
+                        continue;
+                    }
+                    // K(x,x) is constant across c — drop it.
+                    let d = -2.0 * cross[c] / self.counts[c] as f64 + self.self_term[c];
+                    if d < best_d {
+                        best_d = d;
+                        best = c as u16;
+                    }
+                }
+                out.push(best);
+            }
+        }
+        out
+    }
+
+    /// Assign every row of a dataset.
+    pub fn assign_dataset(&self, ds: &Dataset, kernel: &dyn BlockKernel) -> Vec<u16> {
+        let norms = ds.sq_norms();
+        self.assign_rows(&ds.x, &norms, kernel)
+    }
+
+    /// Route a single point.
+    pub fn assign_one(&self, x: &[f32], kernel: &dyn BlockKernel) -> u16 {
+        let norm: f32 = x.iter().map(|&v| v * v).sum();
+        self.assign_rows(x, &[norm], kernel)[0]
+    }
+}
+
+/// A partition of a dataset into k clusters.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub assign: Vec<u16>,
+    pub k: usize,
+    /// Indices per cluster.
+    pub members: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn from_assign(assign: Vec<u16>, k: usize) -> Partition {
+        let mut members = vec![Vec::new(); k];
+        for (i, &c) in assign.iter().enumerate() {
+            members[c as usize].push(i);
+        }
+        Partition { assign, k, members }
+    }
+
+    /// A uniformly random partition (the Figure-1 baseline).
+    pub fn random(n: usize, k: usize, rng: &mut Pcg64) -> Partition {
+        let assign: Vec<u16> = (0..n).map(|_| rng.below(k) as u16).collect();
+        Partition::from_assign(assign, k)
+    }
+
+    pub fn largest_cluster(&self) -> usize {
+        self.members.iter().map(|m| m.len()).max().unwrap_or(0)
+    }
+}
+
+/// Full two-step pipeline: sample → kernel kmeans → assign all points.
+/// `sample_from`: indices eligible for sampling (the adaptive-clustering
+/// step samples from the current SV set — Algorithm 1).
+pub fn two_step_partition(
+    ds: &Dataset,
+    k: usize,
+    m: usize,
+    sample_from: Option<&[usize]>,
+    kernel: &dyn BlockKernel,
+    rng: &mut Pcg64,
+) -> (Router, Partition) {
+    let pool_len = sample_from.map(|s| s.len()).unwrap_or(ds.len());
+    let m_eff = m.min(pool_len).max(1);
+    let picked = rng.sample_indices(pool_len, m_eff);
+    let sample_idx: Vec<usize> = match sample_from {
+        Some(pool) => picked.iter().map(|&i| pool[i]).collect(),
+        None => picked,
+    };
+    let router = Router::fit(ds, &sample_idx, k, kernel, 30, rng);
+    let assign = router.assign_dataset(ds, kernel);
+    let part = Partition::from_assign(assign, router.k);
+    (router, part)
+}
+
+/// Between-cluster kernel mass D(π) = Σ_{π(i)≠π(j)} |K_ij| (Theorem 1).
+/// O(n²) — bench/test use on small subsets only.
+pub fn off_diagonal_mass(
+    ds: &Dataset,
+    kernel: &dyn BlockKernel,
+    assign: &[u16],
+) -> f64 {
+    let n = ds.len();
+    let norms = ds.sq_norms();
+    let mut total = 0f64;
+    const CHUNK: usize = 256;
+    let mut block = vec![0f32; CHUNK * n];
+    let mut lo = 0;
+    while lo < n {
+        let take = CHUNK.min(n - lo);
+        kernel.block(
+            &ds.x[lo * ds.dim..(lo + take) * ds.dim],
+            &norms[lo..lo + take],
+            &ds.x,
+            &norms,
+            ds.dim,
+            &mut block[..take * n],
+        );
+        for qi in 0..take {
+            let ci = assign[lo + qi];
+            let row = &block[qi * n..(qi + 1) * n];
+            for (j, &kv) in row.iter().enumerate() {
+                if assign[j] != ci {
+                    total += kv.abs() as f64;
+                }
+            }
+        }
+        lo += take;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate};
+    use crate::kernel::{native::NativeKernel, KernelKind};
+
+    fn blobs(n: usize, seed: u64) -> Dataset {
+        // 4 well-separated blobs
+        let centers = [(0.0f32, 0.0f32), (8.0, 0.0), (0.0, 8.0), (8.0, 8.0)];
+        let mut rng = Pcg64::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let (cx, cy) = centers[i % 4];
+            x.push(cx + rng.next_gaussian() as f32 * 0.3);
+            x.push(cy + rng.next_gaussian() as f32 * 0.3);
+            y.push(if i % 2 == 0 { 1 } else { -1 });
+        }
+        Dataset::new(x, y, 2, "blobs")
+    }
+
+    #[test]
+    fn twostep_recovers_blobs_and_routes_consistently() {
+        let ds = blobs(400, 1);
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let mut rng = Pcg64::new(2);
+        let (router, part) = two_step_partition(&ds, 4, 64, None, &kern, &mut rng);
+        assert_eq!(part.k, 4);
+        // Every blob should map to exactly one cluster.
+        for blob in 0..4 {
+            let ids: std::collections::HashSet<u16> = (0..ds.len())
+                .filter(|i| i % 4 == blob)
+                .map(|i| part.assign[i])
+                .collect();
+            assert_eq!(ids.len(), 1, "blob {blob} split across clusters");
+        }
+        // Routing a training point again gives its assigned cluster.
+        for i in (0..ds.len()).step_by(37) {
+            assert_eq!(router.assign_one(ds.row(i), &kern), part.assign[i]);
+        }
+    }
+
+    #[test]
+    fn kernel_partition_beats_random_on_off_diagonal_mass() {
+        let mut rng = Pcg64::new(3);
+        let ds = generate(&covtype_like(), 300, &mut rng);
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 16.0 });
+        let (_, part) = two_step_partition(&ds, 8, 100, None, &kern, &mut rng);
+        let d_kmeans = off_diagonal_mass(&ds, &kern, &part.assign);
+        let rand_part = Partition::random(ds.len(), 8, &mut rng);
+        let d_rand = off_diagonal_mass(&ds, &kern, &rand_part.assign);
+        assert!(
+            d_kmeans < d_rand,
+            "kernel kmeans D(π)={d_kmeans} not below random {d_rand}"
+        );
+    }
+
+    #[test]
+    fn adaptive_sampling_pool_respected() {
+        let ds = blobs(200, 4);
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let mut rng = Pcg64::new(5);
+        // Pool = only blob 0 and 1 points
+        let pool: Vec<usize> = (0..ds.len()).filter(|i| i % 4 < 2).collect();
+        let (router, _) = two_step_partition(&ds, 2, 32, Some(&pool), &kern, &mut rng);
+        assert_eq!(router.k, 2);
+        assert!(router.sample_size() <= 32);
+    }
+
+    #[test]
+    fn partition_members_consistent() {
+        let assign = vec![0u16, 1, 0, 2, 1];
+        let p = Partition::from_assign(assign.clone(), 3);
+        assert_eq!(p.members[0], vec![0, 2]);
+        assert_eq!(p.members[1], vec![1, 4]);
+        assert_eq!(p.members[2], vec![3]);
+        assert_eq!(p.largest_cluster(), 2);
+    }
+
+    #[test]
+    fn off_diagonal_mass_zero_for_single_cluster() {
+        let ds = blobs(50, 6);
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let assign = vec![0u16; ds.len()];
+        assert_eq!(off_diagonal_mass(&ds, &kern, &assign), 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! # DC-SVM
+//!
+//! A production-grade reproduction of *"A Divide-and-Conquer Solver for
+//! Kernel Support Vector Machines"* (Hsieh, Si, Dhillon — ICML 2014) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: the DC-SVM framework — multilevel
+//!   divide-and-conquer driver, two-step kernel kmeans, exact greedy-CD
+//!   (SMO-style) solver with shrinking and an LRU kernel cache, early
+//!   prediction, every baseline from the paper's evaluation, CLI, and bench
+//!   harness.
+//! - **runtime**: loads AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`)
+//!   and executes kernel blocks via the PJRT CPU client (`xla` crate).
+//! - **L2/L1 (python/, build-time only)**: JAX graphs over Pallas kernels,
+//!   lowered once by `make artifacts`. Python is never on the request path.
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! EXPERIMENTS.md for measured reproductions of every table and figure.
+
+pub mod baselines;
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod runtime;
+pub mod solver;
+pub mod data;
+pub mod harness;
+pub mod kernel;
+pub mod dcsvm;
+pub mod kmeans;
+pub mod linalg;
+pub mod metrics;
+pub mod multiclass;
+pub mod predict;
+pub mod util;

@@ -1,0 +1,182 @@
+//! Dense symmetric linear algebra substrate (no external BLAS/LAPACK
+//! offline): cyclic Jacobi eigendecomposition and the inverse-square-root
+//! map needed by the Nyström feature construction (LLSVM baseline).
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix `a` (row-major
+/// n×n, destroyed). Returns (eigenvalues, eigenvectors row-major n×n with
+/// eigenvector j in column j), i.e. A = V diag(λ) Vᵀ.
+pub fn jacobi_eigh(mut a: Vec<f64>, n: usize, tol: f64, max_sweeps: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n);
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += a[p * n + q] * a[p * n + q];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p, q of A.
+                for i in 0..n {
+                    let aip = a[i * n + p];
+                    let aiq = a[i * n + q];
+                    a[i * n + p] = c * aip - s * aiq;
+                    a[i * n + q] = s * aip + c * aiq;
+                }
+                for i in 0..n {
+                    let api = a[p * n + i];
+                    let aqi = a[q * n + i];
+                    a[p * n + i] = c * api - s * aqi;
+                    a[q * n + i] = s * api + c * aqi;
+                }
+                // Accumulate V.
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let eig: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    (eig, v)
+}
+
+/// Pseudo-inverse square root of a symmetric PSD matrix: W^(−1/2) =
+/// V diag(λ_i > cutoff ? λ_i^(−1/2) : 0) Vᵀ. Returns row-major n×n.
+pub fn inv_sqrt_psd(w: &[f64], n: usize, rel_cutoff: f64) -> Vec<f64> {
+    let (eig, v) = jacobi_eigh(w.to_vec(), n, 1e-12, 64);
+    let lmax = eig.iter().cloned().fold(0.0, f64::max);
+    let cutoff = lmax * rel_cutoff;
+    let mut out = vec![0f64; n * n];
+    for t in 0..n {
+        if eig[t] <= cutoff {
+            continue;
+        }
+        let s = 1.0 / eig[t].sqrt();
+        // out += s * v[:,t] v[:,t]ᵀ
+        for i in 0..n {
+            let vit = v[i * n + t] * s;
+            if vit == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[i * n + j] += vit * v[j * n + t];
+            }
+        }
+    }
+    out
+}
+
+/// y = A·x for row-major A (n×m).
+pub fn matvec(a: &[f64], n: usize, m: usize, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.len(), n * m);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    for i in 0..n {
+        y[i] = a[i * m..(i + 1) * m].iter().zip(x).map(|(&av, &xv)| av * xv).sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn random_psd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        let b: Vec<f64> = (0..n * n).map(|_| rng.next_gaussian()).collect();
+        // A = BᵀB + 0.1 I
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for t in 0..n {
+                    s += b[t * n + i] * b[t * n + j];
+                }
+                a[i * n + j] = s + if i == j { 0.1 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn eigh_reconstructs_matrix() {
+        let n = 12;
+        let a = random_psd(n, 1);
+        let (eig, v) = jacobi_eigh(a.clone(), n, 1e-12, 64);
+        // Reconstruct V diag(eig) Vᵀ.
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for t in 0..n {
+                    s += v[i * n + t] * eig[t] * v[j * n + t];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-8, "[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_orthonormal_vectors() {
+        let n = 10;
+        let a = random_psd(n, 2);
+        let (_, v) = jacobi_eigh(a, n, 1e-12, 64);
+        for s in 0..n {
+            for t in 0..n {
+                let dot: f64 = (0..n).map(|i| v[i * n + s] * v[i * n + t]).sum();
+                let want = if s == t { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-9, "[{s},{t}] dot {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_squares_to_pinv() {
+        let n = 8;
+        let a = random_psd(n, 3);
+        let h = inv_sqrt_psd(&a, n, 1e-12);
+        // h·a·h ≈ I (all eigenvalues above cutoff here)
+        let mut ha = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                ha[i * n + j] = (0..n).map(|t| h[i * n + t] * a[t * n + j]).sum();
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let s: f64 = (0..n).map(|t| ha[i * n + t] * h[t * n + j]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-6, "[{i},{j}] got {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_basic() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let x = vec![1.0, 0.0, -1.0];
+        let mut y = vec![0.0; 2];
+        matvec(&a, 2, 3, &x, &mut y);
+        assert_eq!(y, vec![-2.0, -2.0]);
+    }
+}

@@ -1,0 +1,386 @@
+//! dcsvm — CLI launcher for the DC-SVM framework.
+//!
+//! ```text
+//! dcsvm datasets                         # Table-2 counterpart statistics
+//! dcsvm train   [--algo dcsvm] [--dataset covtype-like] [--gamma 32] ...
+//! dcsvm predict --model m.json --dataset covtype-like
+//! dcsvm kmeans  [--dataset ...] [--k-base 4] # partition quality report
+//! dcsvm sweep   [--dataset ...]          # (C, γ) grid, Tables 7–10 style
+//! dcsvm info                             # backend/artifact status
+//! ```
+//!
+//! Flags are `--key value`; `--config file.json` loads a config file first,
+//! later flags override (see rust/src/config). Python is never invoked:
+//! the PJRT backend loads pre-built `artifacts/*.hlo.txt`.
+
+use anyhow::{bail, Context, Result};
+
+use dcsvm::bench::{fmt_secs, Table};
+use dcsvm::config::{Algo, RunConfig};
+use dcsvm::data::synthetic;
+use dcsvm::harness;
+use dcsvm::kernel::BlockKernel;
+use dcsvm::predict::SvmModel;
+use dcsvm::util::json::Json;
+use dcsvm::util::logging;
+use dcsvm::util::prng::Pcg64;
+
+fn main() {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "datasets" => cmd_datasets(),
+        "train" => cmd_train(rest),
+        "predict" => cmd_predict(rest),
+        "kmeans" => cmd_kmeans(rest),
+        "sweep" => cmd_sweep(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `dcsvm help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "dcsvm — divide-and-conquer kernel SVM (Hsieh, Si, Dhillon, ICML 2014)\n\
+         \n\
+         commands:\n\
+         \x20 datasets                      dataset statistics (Table 2)\n\
+         \x20 train    [--flags]            train one algorithm, report time/acc\n\
+         \x20 predict  --model M [--flags]  load a saved model, evaluate\n\
+         \x20 kmeans   [--flags]            two-step kernel kmeans report\n\
+         \x20 sweep    [--flags]            (C, γ) grid (Tables 7–10 style)\n\
+         \x20 serve    --model M [--batch B] predict LIBSVM-format rows from stdin\n\
+         \x20 info                          backend / artifact status\n\
+         \n\
+         common flags: --algo {{dcsvm,early,libsvm,cascade,lasvm,llsvm,fastfood,ltpu,spsvm}}\n\
+         \x20 --dataset NAME --n-train N --n-test N --kernel {{rbf,poly,linear}}\n\
+         \x20 --gamma G --c C --eps E --levels L --k-base K --sample-m M\n\
+         \x20 --backend {{auto,native,pjrt}} --budget B --seed S --config FILE\n\
+         \x20 --save-model FILE"
+    );
+}
+
+/// Parse `--key value` flags into a RunConfig (honoring `--config`).
+fn parse_cfg(args: &[String]) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    // First pass: --config file
+    let mut i = 0;
+    while i + 1 < args.len() {
+        if args[i] == "--config" {
+            cfg = RunConfig::from_file(std::path::Path::new(&args[i + 1]))?;
+        }
+        i += 2;
+    }
+    // Second pass: flag overrides
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("expected --flag, got '{a}'");
+        };
+        if key == "config" {
+            i += 2;
+            continue;
+        }
+        let Some(val) = args.get(i + 1) else {
+            bail!("flag --{key} needs a value");
+        };
+        cfg.apply(key, val).with_context(|| format!("flag --{key}"))?;
+        i += 2;
+    }
+    Ok(cfg)
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut t = Table::new(&["dataset", "n_train", "n_test", "dim", "pos%", "scaled"]);
+    for spec in synthetic::all_specs() {
+        let (ntr, nte) = synthetic::default_sizes(spec.name);
+        let (tr, _) = synthetic::generate_split(&spec, 2000.min(ntr), 100, 0);
+        t.row(&[
+            spec.name.to_string(),
+            ntr.to_string(),
+            nte.to_string(),
+            spec.dim.to_string(),
+            format!("{:.1}", 100.0 * tr.pos_frac()),
+            spec.scale_unit.to_string(),
+        ]);
+    }
+    t.print();
+    println!("(synthetic counterparts of the paper's Table 2 — see DESIGN.md §5)");
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let (tr, te) = harness::load_dataset(&cfg)?;
+    println!(
+        "training {} on {} (n={}, d={}, kernel={} γ={} C={}, backend={})",
+        cfg.algo.name(),
+        cfg.dataset,
+        tr.len(),
+        tr.dim,
+        cfg.kernel,
+        cfg.gamma,
+        cfg.c,
+        cfg.backend
+    );
+    let out = harness::run(&cfg, &tr, &te)?;
+    println!(
+        "{}: time={} acc={:.2}% svs={} {}",
+        out.algo,
+        fmt_secs(out.train_s),
+        100.0 * out.accuracy,
+        out.svs,
+        out.note
+    );
+    if let Some(obj) = out.objective {
+        println!("objective f(α) = {obj:.6}");
+    }
+    if let Some(path) = &cfg.save_model {
+        let kind = cfg.kernel_kind()?;
+        let kernel = harness::make_kernel(kind, &cfg.backend, tr.dim)?;
+        let model = train_model_for_save(&cfg, &tr, kernel.as_ref())?;
+        std::fs::write(path, model.to_json().to_string())?;
+        println!("model saved to {path} ({} SVs)", model.num_svs());
+    }
+    Ok(())
+}
+
+fn train_model_for_save(
+    cfg: &RunConfig,
+    tr: &dcsvm::data::Dataset,
+    kernel: &dyn BlockKernel,
+) -> Result<SvmModel> {
+    match cfg.algo {
+        Algo::Libsvm | Algo::DcSvm => {
+            let res = dcsvm::dcsvm::train(tr, kernel, &cfg.dcsvm_config()?);
+            Ok(SvmModel::from_alpha(tr, &res.alpha, cfg.kernel_kind()?))
+        }
+        _ => bail!("--save-model supports exact algos (dcsvm, libsvm)"),
+    }
+}
+
+fn cmd_predict(args: &[String]) -> Result<()> {
+    // extract --model, pass the rest to config
+    let mut model_path = None;
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--model" {
+            model_path = args.get(i + 1).cloned();
+            i += 2;
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let Some(model_path) = model_path else {
+        bail!("predict requires --model FILE");
+    };
+    let cfg = parse_cfg(&rest)?;
+    let text = std::fs::read_to_string(&model_path)
+        .with_context(|| format!("read {model_path}"))?;
+    let model = SvmModel::from_json(&Json::parse(&text)?)?;
+    let (_, te) = harness::load_dataset(&cfg)?;
+    let kernel = harness::make_kernel(model.kind, &cfg.backend, te.dim)?;
+    let t0 = std::time::Instant::now();
+    let acc = model.accuracy(&te, kernel.as_ref());
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "model {} ({} SVs): acc={:.2}% on {} ({} samples, {:.2} ms/sample)",
+        model_path,
+        model.num_svs(),
+        100.0 * acc,
+        cfg.dataset,
+        te.len(),
+        1e3 * dt / te.len().max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_kmeans(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let (tr, _) = harness::load_dataset(&cfg)?;
+    let kind = cfg.kernel_kind()?;
+    let kernel = harness::make_kernel(kind, &cfg.backend, tr.dim)?;
+    let k = cfg.k_base.max(2);
+    let mut rng = Pcg64::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let (_, part) = dcsvm::kmeans::two_step_partition(
+        &tr,
+        k,
+        cfg.sample_m,
+        None,
+        kernel.as_ref(),
+        &mut rng,
+    );
+    let dt = t0.elapsed().as_secs_f64();
+    let sizes: Vec<usize> = part.members.iter().map(|m| m.len()).collect();
+    println!(
+        "two-step kernel kmeans: k={} m={} time={} sizes={:?}",
+        part.k,
+        cfg.sample_m,
+        fmt_secs(dt),
+        sizes
+    );
+    if tr.len() <= 4000 {
+        let d = dcsvm::kmeans::off_diagonal_mass(&tr, kernel.as_ref(), &part.assign);
+        let rand_part = dcsvm::kmeans::Partition::random(tr.len(), part.k, &mut rng);
+        let dr = dcsvm::kmeans::off_diagonal_mass(&tr, kernel.as_ref(), &rand_part.assign);
+        println!("D(π) kernel-kmeans = {d:.1}, random = {dr:.1} (lower is better)");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let (tr, te) = harness::load_dataset(&cfg)?;
+    let cs = [2f64.powi(-6), 2f64.powi(1), 2f64.powi(6)];
+    let gammas = [2f64.powi(-6), 2f64.powi(1), 2f64.powi(6)];
+    let mut t = Table::new(&["C", "γ", "algo", "time", "acc%"]);
+    let mut totals: std::collections::BTreeMap<&str, f64> = Default::default();
+    for &c in &cs {
+        for &g in &gammas {
+            for algo in [Algo::DcSvmEarly, Algo::DcSvm, Algo::Libsvm] {
+                let mut rc = cfg.clone();
+                rc.algo = algo;
+                rc.c = c;
+                rc.gamma = g;
+                let out = harness::run(&rc, &tr, &te)?;
+                *totals.entry(out.algo).or_default() += out.train_s;
+                t.row(&[
+                    format!("2^{}", c.log2() as i32),
+                    format!("2^{}", g.log2() as i32),
+                    out.algo.to_string(),
+                    fmt_secs(out.train_s),
+                    format!("{:.2}", 100.0 * out.accuracy),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("accumulated grid time (Table 5 style):");
+    for (algo, total) in totals {
+        println!("  {algo}: {}", fmt_secs(total));
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("dcsvm {}", env!("CARGO_PKG_VERSION"));
+    match harness::global_engine() {
+        Some(e) => {
+            let abi = e.abi();
+            println!(
+                "PJRT backend: ACTIVE (d_pad={}, tiles slim={} wide={} x nd={})",
+                abi.d_pad,
+                abi.nq_slim,
+                abi.nq_wide,
+                abi.nd_blk
+            );
+            println!("artifact dir: {}", e.artifact_dir().display());
+        }
+        None => println!("PJRT backend: unavailable (run `make artifacts`); native fallback"),
+    }
+    println!("threads default: {}", dcsvm::util::threadpool::default_threads());
+    Ok(())
+}
+
+/// Request loop: read LIBSVM-format rows from stdin, emit one decision
+/// value + label per line. Batches up to `--batch` rows per kernel-block
+/// dispatch — the "Python never on the request path" serving demo: the
+/// whole pipeline is the saved model + the AOT artifacts.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use std::io::BufRead;
+    let mut model_path = None;
+    let mut batch = 256usize;
+    let mut backend = "auto".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--model" => {
+                model_path = args.get(i + 1).cloned();
+                i += 2;
+            }
+            "--batch" => {
+                batch = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(256);
+                i += 2;
+            }
+            "--backend" => {
+                backend = args.get(i + 1).cloned().unwrap_or_default();
+                i += 2;
+            }
+            other => bail!("serve: unknown flag '{other}'"),
+        }
+    }
+    let Some(model_path) = model_path else {
+        bail!("serve requires --model FILE");
+    };
+    let text = std::fs::read_to_string(&model_path)?;
+    let model = SvmModel::from_json(&Json::parse(&text)?)?;
+    let kernel = harness::make_kernel(model.kind, &backend, model.dim)?;
+    eprintln!(
+        "serving model {} ({} SVs, dim {}), batch {batch} — LIBSVM rows on stdin",
+        model_path,
+        model.num_svs(),
+        model.dim
+    );
+
+    let stdin = std::io::stdin();
+    let mut lines = stdin.lock().lines();
+    let mut buf: Vec<String> = Vec::with_capacity(batch);
+    let mut served = 0usize;
+    let t0 = std::time::Instant::now();
+    loop {
+        buf.clear();
+        while buf.len() < batch {
+            match lines.next() {
+                Some(Ok(l)) if !l.trim().is_empty() => buf.push(l),
+                Some(Ok(_)) => continue,
+                Some(Err(e)) => return Err(e.into()),
+                None => break,
+            }
+        }
+        if buf.is_empty() {
+            break;
+        }
+        let joined = buf.join("\n");
+        let ds = dcsvm::data::libsvm::parse_libsvm(
+            std::io::Cursor::new(joined),
+            Some(model.dim),
+            "stdin".into(),
+        )?;
+        let norms = ds.sq_norms();
+        let dv = model.decision_batch(&ds.x, &norms, kernel.as_ref());
+        let mut out = String::new();
+        for &d in &dv {
+            out.push_str(&format!("{} {:.6}\n", if d >= 0.0 { "+1" } else { "-1" }, d));
+        }
+        print!("{out}");
+        served += dv.len();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "served {served} predictions in {} ({:.0} pred/s)",
+        fmt_secs(dt),
+        served as f64 / dt.max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Evaluation metrics: accuracy, SV-set precision/recall (Figure 2),
+//! relative objective error (Figure 3), and whole-problem objective
+//! evaluation for arbitrary α (level snapshots).
+
+use crate::data::Dataset;
+use crate::kernel::BlockKernel;
+
+/// Classification accuracy of predictions vs labels.
+pub fn accuracy(preds: &[i8], labels: &[i8]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    preds.iter().zip(labels).filter(|(p, y)| p == y).count() as f64 / preds.len() as f64
+}
+
+/// Precision/recall of an estimated SV set vs the reference SV set
+/// (paper Figure 2: how well lower levels identify the true SVs).
+pub fn sv_precision_recall(alpha_est: &[f64], alpha_ref: &[f64]) -> (f64, f64) {
+    assert_eq!(alpha_est.len(), alpha_ref.len());
+    let mut tp = 0usize;
+    let mut est = 0usize;
+    let mut refn = 0usize;
+    for (&a, &r) in alpha_est.iter().zip(alpha_ref) {
+        let e = a > 0.0;
+        let t = r > 0.0;
+        est += e as usize;
+        refn += t as usize;
+        tp += (e && t) as usize;
+    }
+    let precision = if est == 0 { 1.0 } else { tp as f64 / est as f64 };
+    let recall = if refn == 0 { 1.0 } else { tp as f64 / refn as f64 };
+    (precision, recall)
+}
+
+/// Relative objective error (f − f*)/|f*| (Figure 3 y-axis).
+pub fn relative_error(f: f64, f_star: f64) -> f64 {
+    (f - f_star).abs() / f_star.abs().max(1e-30)
+}
+
+/// Whole-problem dual objective f(α) = ½αᵀQα − eᵀα evaluated from scratch.
+/// Cost O(|S|·n̂) where n̂ = |S| (only SV rows contribute to the quadratic
+/// term) — fine for snapshot evaluation.
+pub fn objective_of(ds: &Dataset, kernel: &dyn BlockKernel, alpha: &[f64]) -> f64 {
+    let n = ds.len();
+    assert_eq!(alpha.len(), n);
+    let dim = ds.dim;
+    let sv: Vec<usize> = (0..n).filter(|&i| alpha[i] != 0.0).collect();
+    let lin: f64 = alpha.iter().sum();
+    if sv.is_empty() {
+        return 0.0;
+    }
+    // Gather SV rows + coef.
+    let mut x = Vec::with_capacity(sv.len() * dim);
+    let mut norms = Vec::with_capacity(sv.len());
+    let mut coef = Vec::with_capacity(sv.len());
+    for &i in &sv {
+        x.extend_from_slice(ds.row(i));
+        norms.push(ds.row(i).iter().map(|&v| v * v).sum());
+        coef.push((alpha[i] * ds.y[i] as f64) as f32);
+    }
+    // dv_i = Σ_j coef_j K(sv_i, sv_j); quad = Σ_i coef_i · dv_i
+    let mut dv = vec![0f32; sv.len()];
+    kernel.decision(&x, &norms, &x, &norms, dim, &coef, &mut dv);
+    let quad: f64 = dv
+        .iter()
+        .zip(&coef)
+        .map(|(&d, &c)| d as f64 * c as f64)
+        .sum();
+    0.5 * quad - lin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate};
+    use crate::kernel::{native::NativeKernel, KernelKind};
+    use crate::solver::objective::{dense_q, objective_dense};
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, -1, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn precision_recall_cases() {
+        let est = [0.5, 0.0, 0.3, 0.0];
+        let rf = [0.2, 0.2, 0.0, 0.0];
+        let (p, r) = sv_precision_recall(&est, &rf);
+        assert!((p - 0.5).abs() < 1e-12); // 1 of 2 est SVs is true
+        assert!((r - 0.5).abs() < 1e-12); // 1 of 2 true SVs found
+        let (p0, r0) = sv_precision_recall(&[0.0, 0.0], &[0.0, 0.0]);
+        assert_eq!((p0, r0), (1.0, 1.0));
+    }
+
+    #[test]
+    fn objective_of_matches_dense() {
+        let mut rng = Pcg64::new(21);
+        let ds = generate(&covtype_like(), 40, &mut rng);
+        let kind = KernelKind::Rbf { gamma: 4.0 };
+        let kern = NativeKernel::new(kind);
+        let alpha: Vec<f64> = (0..40)
+            .map(|_| if rng.next_f64() < 0.5 { rng.next_f64() } else { 0.0 })
+            .collect();
+        let got = objective_of(&ds, &kern, &alpha);
+        let q = dense_q(&ds, &kern);
+        let want = objective_dense(&q, &alpha);
+        assert!(
+            (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn relative_error_basic() {
+        assert!((relative_error(-9.9, -10.0) - 0.01).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,206 @@
+//! Multiclass support: one-vs-one DC-SVM (the LIBSVM convention).
+//!
+//! The paper binarizes mnist8m/cifar for its experiments, but the released
+//! DC-SVM code — like LIBSVM — handles multiclass by training k(k−1)/2
+//! pairwise binary machines and predicting by vote. Each pairwise machine
+//! is a full DC-SVM (so the divide-and-conquer speedup applies per pair),
+//! and ties break toward the smaller class id (LIBSVM's rule).
+
+use crate::data::Dataset;
+use crate::dcsvm::{self, DcSvmConfig};
+use crate::kernel::BlockKernel;
+use crate::predict::SvmModel;
+
+/// A multiclass dataset: dense rows + integer class labels.
+#[derive(Clone, Debug)]
+pub struct MulticlassDataset {
+    pub x: Vec<f32>,
+    pub labels: Vec<u16>,
+    pub dim: usize,
+    pub num_classes: usize,
+}
+
+impl MulticlassDataset {
+    pub fn new(x: Vec<f32>, labels: Vec<u16>, dim: usize) -> Self {
+        assert_eq!(x.len(), labels.len() * dim);
+        let num_classes = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
+        MulticlassDataset { x, labels, dim, num_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Binary restriction to classes (a, b): labels a → +1, b → −1.
+    fn pair_view(&self, a: u16, b: u16) -> (Dataset, Vec<usize>) {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut idx = Vec::new();
+        for i in 0..self.len() {
+            if self.labels[i] == a || self.labels[i] == b {
+                x.extend_from_slice(self.row(i));
+                y.push(if self.labels[i] == a { 1 } else { -1 });
+                idx.push(i);
+            }
+        }
+        (Dataset::new(x, y, self.dim, format!("pair-{a}-{b}")), idx)
+    }
+}
+
+/// One-vs-one ensemble of binary DC-SVM models.
+pub struct OvoModel {
+    /// (class_a, class_b, model): model decides a (+1) vs b (−1).
+    pub machines: Vec<(u16, u16, SvmModel)>,
+    pub num_classes: usize,
+}
+
+impl OvoModel {
+    /// Predict a batch of rows by pairwise vote.
+    pub fn predict_batch(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+    ) -> Vec<u16> {
+        let n = norms.len();
+        let mut votes = vec![0u32; n * self.num_classes];
+        for (a, b, model) in &self.machines {
+            let dv = model.decision_batch(x, norms, kernel);
+            for (i, &d) in dv.iter().enumerate() {
+                let winner = if d >= 0.0 { *a } else { *b };
+                votes[i * self.num_classes + winner as usize] += 1;
+            }
+        }
+        (0..n)
+            .map(|i| {
+                let row = &votes[i * self.num_classes..(i + 1) * self.num_classes];
+                // max vote, ties toward the smaller class id
+                let mut best = 0u16;
+                for (c, &v) in row.iter().enumerate() {
+                    if v > row[best as usize] {
+                        best = c as u16;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    pub fn accuracy(&self, test: &MulticlassDataset, kernel: &dyn BlockKernel) -> f64 {
+        let norms: Vec<f32> = (0..test.len())
+            .map(|i| test.row(i).iter().map(|&v| v * v).sum())
+            .collect();
+        let preds = self.predict_batch(&test.x, &norms, kernel);
+        let correct = preds
+            .iter()
+            .zip(&test.labels)
+            .filter(|(p, y)| p == y)
+            .count();
+        correct as f64 / test.len().max(1) as f64
+    }
+}
+
+/// Train one-vs-one DC-SVM.
+pub fn train_ovo(
+    ds: &MulticlassDataset,
+    kernel: &dyn BlockKernel,
+    cfg: &DcSvmConfig,
+) -> OvoModel {
+    let mut machines = Vec::new();
+    for a in 0..ds.num_classes as u16 {
+        for b in (a + 1)..ds.num_classes as u16 {
+            let (pair, _) = ds.pair_view(a, b);
+            if pair.is_empty() || pair.pos_frac() == 0.0 || pair.pos_frac() == 1.0 {
+                continue;
+            }
+            // Scale the divide schedule to the pair size: tiny pairs don't
+            // need multilevel treatment.
+            let mut pcfg = cfg.clone();
+            while pcfg.levels > 1
+                && pair.len() / pcfg.k_base.pow(pcfg.levels as u32) < 32
+            {
+                pcfg.levels -= 1;
+            }
+            let res = dcsvm::train(&pair, kernel, &pcfg);
+            machines.push((a, b, SvmModel::from_alpha(&pair, &res.alpha, cfg.kind)));
+        }
+    }
+    OvoModel { machines, num_classes: ds.num_classes }
+}
+
+/// Synthetic multiclass mixture (digit-modes style) for tests/benches.
+pub fn synthetic_multiclass(
+    classes: usize,
+    n: usize,
+    dim: usize,
+    seed: u64,
+) -> MulticlassDataset {
+    use crate::util::prng::Pcg64;
+    let mut rng = Pcg64::new(seed);
+    let centers: Vec<f64> = (0..classes * dim).map(|_| rng.range_f64(0.0, 4.0)).collect();
+    let mut x = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(classes);
+        for j in 0..dim {
+            x.push((centers[c * dim + j] + 0.35 * rng.next_gaussian()) as f32);
+        }
+        labels.push(c as u16);
+    }
+    MulticlassDataset::new(x, labels, dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{native::NativeKernel, KernelKind};
+
+    #[test]
+    fn ovo_learns_four_classes() {
+        let tr = synthetic_multiclass(4, 600, 6, 1);
+        let te = synthetic_multiclass(4, 200, 6, 1); // same centers (same seed)
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = DcSvmConfig {
+            kind,
+            c: 4.0,
+            levels: 1,
+            sample_m: 48,
+            ..Default::default()
+        };
+        let model = train_ovo(&tr, &kern, &cfg);
+        assert_eq!(model.machines.len(), 6); // 4·3/2
+        let acc = model.accuracy(&te, &kern);
+        assert!(acc > 0.9, "ovo acc {acc}");
+    }
+
+    #[test]
+    fn pair_view_extracts_classes() {
+        let ds = synthetic_multiclass(3, 90, 2, 2);
+        let (pair, idx) = ds.pair_view(0, 2);
+        assert_eq!(pair.len(), idx.len());
+        for (t, &i) in idx.iter().enumerate() {
+            let want: i8 = if ds.labels[i] == 0 { 1 } else { -1 };
+            assert_eq!(pair.y[t], want);
+            assert!(ds.labels[i] == 0 || ds.labels[i] == 2);
+        }
+    }
+
+    #[test]
+    fn binary_case_single_machine() {
+        let ds = synthetic_multiclass(2, 200, 4, 3);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = DcSvmConfig { kind, c: 1.0, levels: 1, sample_m: 32, ..Default::default() };
+        let model = train_ovo(&ds, &kern, &cfg);
+        assert_eq!(model.machines.len(), 1);
+    }
+}

@@ -1,0 +1,303 @@
+//! Prediction paths.
+//!
+//! - [`SvmModel`]: decision over the global SV set — used for the exact
+//!   model and for "prediction by (10)" (naive use of a lower-level ᾱ).
+//! - [`EarlyModel`]: the paper's early prediction (eq. 11): route the test
+//!   point to its kernel-kmeans cluster, evaluate only that cluster's local
+//!   model — O(|S|d/k) per point.
+//! - [`BcmModel`]: Bayesian Committee Machine baseline (Tresp 2000):
+//!   calibrated log-odds combination of *all* cluster models — the Table-1
+//!   comparator that is both slower (k× kernel evaluations) and less
+//!   accurate at large k.
+
+use crate::data::Dataset;
+use crate::kernel::{BlockKernel, KernelKind};
+use crate::kmeans::Router;
+
+/// A kernel SVM decision model: f(x) = Σ_i coef_i K(x, sv_i).
+#[derive(Clone, Debug)]
+pub struct SvmModel {
+    pub sv_x: Vec<f32>,
+    pub sv_norms: Vec<f32>,
+    /// coef_i = α_i y_i
+    pub coef: Vec<f32>,
+    pub dim: usize,
+    pub kind: KernelKind,
+}
+
+impl SvmModel {
+    /// Gather the support vectors of `alpha` over `ds`.
+    pub fn from_alpha(ds: &Dataset, alpha: &[f64], kind: KernelKind) -> SvmModel {
+        let dim = ds.dim;
+        let mut sv_x = Vec::new();
+        let mut sv_norms = Vec::new();
+        let mut coef = Vec::new();
+        for i in 0..ds.len() {
+            if alpha[i] > 0.0 {
+                sv_x.extend_from_slice(ds.row(i));
+                sv_norms.push(ds.row(i).iter().map(|&v| v * v).sum());
+                coef.push((alpha[i] * ds.y[i] as f64) as f32);
+            }
+        }
+        SvmModel { sv_x, sv_norms, coef, dim, kind }
+    }
+
+    pub fn num_svs(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// Decision values for a row-major batch.
+    pub fn decision_batch(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+    ) -> Vec<f32> {
+        debug_assert_eq!(kernel.kind(), self.kind);
+        let n = norms.len();
+        let mut out = vec![0f32; n];
+        if self.coef.is_empty() {
+            return out;
+        }
+        kernel.decision(
+            x,
+            norms,
+            &self.sv_x,
+            &self.sv_norms,
+            self.dim,
+            &self.coef,
+            &mut out,
+        );
+        out
+    }
+
+    pub fn predict_batch(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+    ) -> Vec<i8> {
+        self.decision_batch(x, norms, kernel)
+            .into_iter()
+            .map(|d| if d >= 0.0 { 1 } else { -1 })
+            .collect()
+    }
+
+    /// Accuracy on a test dataset.
+    pub fn accuracy(&self, test: &Dataset, kernel: &dyn BlockKernel) -> f64 {
+        let norms = test.sq_norms();
+        let preds = self.predict_batch(&test.x, &norms, kernel);
+        let correct = preds.iter().zip(&test.y).filter(|(p, y)| p == y).count();
+        correct as f64 / test.len().max(1) as f64
+    }
+
+    /// Serialize to JSON (model persistence for the CLI train/predict flow).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let (kname, gamma, eta) = match self.kind {
+            KernelKind::Rbf { gamma } => ("rbf", gamma as f64, 0.0),
+            KernelKind::Poly { gamma, eta } => ("poly", gamma as f64, eta as f64),
+            KernelKind::Linear => ("linear", 0.0, 0.0),
+        };
+        Json::obj(vec![
+            ("kernel", Json::from(kname)),
+            ("gamma", Json::from(gamma)),
+            ("eta", Json::from(eta)),
+            ("dim", Json::from(self.dim)),
+            ("coef", Json::arr_f64(&self.coef.iter().map(|&c| c as f64).collect::<Vec<_>>())),
+            ("sv_x", Json::arr_f64(&self.sv_x.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+        ])
+    }
+
+    /// Deserialize from JSON.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<SvmModel> {
+        use anyhow::{anyhow, bail};
+        let dim = j.get("dim").as_usize().ok_or_else(|| anyhow!("model: missing dim"))?;
+        let gamma = j.get("gamma").as_f64().unwrap_or(0.0) as f32;
+        let eta = j.get("eta").as_f64().unwrap_or(0.0) as f32;
+        let kind = match j.get("kernel").as_str() {
+            Some("rbf") => KernelKind::Rbf { gamma },
+            Some("poly") => KernelKind::Poly { gamma, eta },
+            Some("linear") => KernelKind::Linear,
+            other => bail!("model: bad kernel {other:?}"),
+        };
+        let coef: Vec<f32> = j
+            .get("coef")
+            .as_arr()
+            .ok_or_else(|| anyhow!("model: missing coef"))?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+            .collect();
+        let sv_x: Vec<f32> = j
+            .get("sv_x")
+            .as_arr()
+            .ok_or_else(|| anyhow!("model: missing sv_x"))?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+            .collect();
+        if sv_x.len() != coef.len() * dim {
+            bail!("model: sv_x/coef/dim inconsistent");
+        }
+        let sv_norms = sv_x.chunks(dim).map(|r| r.iter().map(|&v| v * v).sum()).collect();
+        Ok(SvmModel { sv_x, sv_norms, coef, dim, kind })
+    }
+}
+
+/// Early prediction (paper eq. 11): local model of the routed cluster only.
+pub struct EarlyModel {
+    pub router: Router,
+    /// One local model per cluster (possibly empty: no SVs in cluster).
+    pub locals: Vec<SvmModel>,
+}
+
+impl EarlyModel {
+    /// Build from a partition's cluster models.
+    pub fn new(router: Router, locals: Vec<SvmModel>) -> EarlyModel {
+        EarlyModel { router, locals }
+    }
+
+    pub fn predict_batch(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+    ) -> Vec<i8> {
+        let n = norms.len();
+        let dim = self.locals.first().map(|m| m.dim).unwrap_or(1);
+        let assign = self.router.assign_rows(x, norms, kernel);
+        // Batch per cluster for efficiency.
+        let mut out = vec![0i8; n];
+        for c in 0..self.locals.len() {
+            let idx: Vec<usize> =
+                (0..n).filter(|&i| assign[i] as usize == c).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let mut cx = Vec::with_capacity(idx.len() * dim);
+            let mut cn = Vec::with_capacity(idx.len());
+            for &i in &idx {
+                cx.extend_from_slice(&x[i * dim..(i + 1) * dim]);
+                cn.push(norms[i]);
+            }
+            let preds = self.locals[c].predict_batch(&cx, &cn, kernel);
+            for (t, &i) in idx.iter().enumerate() {
+                out[i] = preds[t];
+            }
+        }
+        out
+    }
+
+    pub fn accuracy(&self, test: &Dataset, kernel: &dyn BlockKernel) -> f64 {
+        let norms = test.sq_norms();
+        let preds = self.predict_batch(&test.x, &norms, kernel);
+        let correct = preds.iter().zip(&test.y).filter(|(p, y)| p == y).count();
+        correct as f64 / test.len().max(1) as f64
+    }
+
+    /// Total SVs across local models (test cost is |S|/k per point).
+    pub fn total_svs(&self) -> usize {
+        self.locals.iter().map(|m| m.num_svs()).sum()
+    }
+}
+
+/// Bayesian Committee Machine combination of the k cluster models
+/// (Tresp 2000), adapted to SVM decisions via sigmoid calibration: each
+/// committee member emits p_c(y=1|x) = σ(a·f_c(x)); members are combined in
+/// log-odds space (product of experts with the uniform-prior correction).
+pub struct BcmModel {
+    pub locals: Vec<SvmModel>,
+    /// Sigmoid calibration slope.
+    pub slope: f64,
+}
+
+impl BcmModel {
+    pub fn new(locals: Vec<SvmModel>) -> BcmModel {
+        BcmModel { locals, slope: 2.0 }
+    }
+
+    pub fn predict_batch(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+    ) -> Vec<i8> {
+        let n = norms.len();
+        let mut logodds = vec![0f64; n];
+        for m in &self.locals {
+            if m.num_svs() == 0 {
+                continue;
+            }
+            let dv = m.decision_batch(x, norms, kernel);
+            for (i, &d) in dv.iter().enumerate() {
+                // log(σ(af)/(1−σ(af))) = a·f — the calibrated log-odds.
+                logodds[i] += self.slope * d as f64;
+            }
+        }
+        logodds
+            .into_iter()
+            .map(|l| if l >= 0.0 { 1 } else { -1 })
+            .collect()
+    }
+
+    pub fn accuracy(&self, test: &Dataset, kernel: &dyn BlockKernel) -> f64 {
+        let norms = test.sq_norms();
+        let preds = self.predict_batch(&test.x, &norms, kernel);
+        let correct = preds.iter().zip(&test.y).filter(|(p, y)| p == y).count();
+        correct as f64 / test.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate_split};
+    use crate::kernel::native::NativeKernel;
+    use crate::solver::{SmoConfig, SmoSolver};
+
+    #[test]
+    fn exact_model_learns() {
+        let (tr, te) = generate_split(&covtype_like(), 400, 150, 11);
+        let kind = KernelKind::Rbf { gamma: 16.0 };
+        let kern = NativeKernel::new(kind);
+        let res = SmoSolver::new(
+            &tr,
+            &kern,
+            SmoConfig { c: 8.0, eps: 1e-4, ..Default::default() },
+        )
+        .solve();
+        let model = SvmModel::from_alpha(&tr, &res.alpha, kind);
+        assert_eq!(model.num_svs(), res.sv_count);
+        let acc = model.accuracy(&te, &kern);
+        assert!(acc > 0.80, "exact model acc {acc}");
+    }
+
+    #[test]
+    fn empty_model_predicts_negative() {
+        let (tr, _) = generate_split(&covtype_like(), 20, 5, 12);
+        let kind = KernelKind::Rbf { gamma: 1.0 };
+        let kern = NativeKernel::new(kind);
+        let model = SvmModel::from_alpha(&tr, &vec![0.0; tr.len()], kind);
+        assert_eq!(model.num_svs(), 0);
+        let norms = tr.sq_norms();
+        let preds = model.predict_batch(&tr.x, &norms, &kern);
+        assert!(preds.iter().all(|&p| p == 1)); // decision 0.0 -> sign +1
+    }
+
+    #[test]
+    fn bcm_with_single_member_equals_that_member() {
+        let (tr, te) = generate_split(&covtype_like(), 300, 100, 13);
+        let kind = KernelKind::Rbf { gamma: 16.0 };
+        let kern = NativeKernel::new(kind);
+        let res = SmoSolver::new(
+            &tr,
+            &kern,
+            SmoConfig { c: 4.0, eps: 1e-3, ..Default::default() },
+        )
+        .solve();
+        let m = SvmModel::from_alpha(&tr, &res.alpha, kind);
+        let norms = te.sq_norms();
+        let single = m.predict_batch(&te.x, &norms, &kern);
+        let bcm = BcmModel::new(vec![m]);
+        assert_eq!(bcm.predict_batch(&te.x, &norms, &kern), single);
+    }
+}

@@ -1,0 +1,264 @@
+//! Tiled executor: implements [`BlockKernel`] on top of the fixed-shape AOT
+//! artifacts.
+//!
+//! The artifacts compute (nq_tile × nd_blk) kernel tiles at a padded feature
+//! dim; this module embeds arbitrary `(nq, nd, dim)` requests into those
+//! tiles (zero-padding is exact — see python/compile/model.py padded
+//! wrappers, which the python tests verify against the oracle) and masks the
+//! padded slots on the way out.
+//!
+//! Two query-tile variants exist per kernel: "slim" (64 rows) for the
+//! solver's kernel-row fetches, "wide" (256 rows) for bulk work. The fused
+//! decision artifacts accumulate across data tiles (coef-padding with zeros
+//! keeps the sum exact).
+
+use anyhow::Result;
+
+use super::{Engine, TileAbi};
+use crate::kernel::{BlockKernel, KernelKind};
+
+/// PJRT-backed block kernel (the production hot path).
+pub struct PjrtKernel<'e> {
+    engine: &'e Engine,
+    kind: KernelKind,
+    abi: TileAbi,
+}
+
+impl<'e> PjrtKernel<'e> {
+    pub fn new(engine: &'e Engine, kind: KernelKind) -> Self {
+        let abi = engine.abi();
+        PjrtKernel { engine, kind, abi }
+    }
+
+    fn pad_rows(x: &[f32], n: usize, dim: usize, n_pad: usize, d_pad: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n_pad * d_pad];
+        for i in 0..n {
+            out[i * d_pad..i * d_pad + dim].copy_from_slice(&x[i * dim..(i + 1) * dim]);
+        }
+        out
+    }
+
+    fn pad_vec(v: &[f32], n_pad: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n_pad];
+        out[..v.len()].copy_from_slice(v);
+        out
+    }
+
+    /// Pick the query-tile size for a request of `nq` rows.
+    fn q_tile(&self, nq: usize) -> (usize, &'static str) {
+        if nq <= self.abi.nq_slim {
+            (self.abi.nq_slim, "slim")
+        } else {
+            (self.abi.nq_wide, "wide")
+        }
+    }
+
+    fn block_artifact(&self, tag: &str) -> String {
+        match self.kind {
+            // The linear artifact is named `lin_block_wide` in the catalog.
+            KernelKind::Linear => "lin_block_wide".to_string(),
+            _ => format!("{}_block_{}", self.kind.name(), tag),
+        }
+    }
+
+    fn decision_artifact(&self) -> String {
+        format!("{}_decision_wide", self.kind.name())
+    }
+
+    /// One padded (q_tile × nd_blk) block execution; returns the flat tile.
+    #[allow(clippy::too_many_arguments)]
+    fn run_block_tile(
+        &self,
+        xq_pad: &[f32],
+        qn_pad: &[f32],
+        q_tile: usize,
+        tag: &str,
+        xd_pad: &[f32],
+        dn_pad: &[f32],
+    ) -> Result<Vec<f32>> {
+        let d = self.abi.d_pad as i64;
+        let (qt, ndb) = (q_tile as i64, self.abi.nd_blk as i64);
+        let name = self.block_artifact(tag);
+        match self.kind {
+            KernelKind::Rbf { gamma } => self.engine.execute(
+                &name,
+                &[
+                    (xq_pad, &[qt, d]),
+                    (xd_pad, &[ndb, d]),
+                    (qn_pad, &[qt]),
+                    (dn_pad, &[ndb]),
+                    (&[gamma], &[1]),
+                ],
+            ),
+            KernelKind::Poly { gamma, eta } => self.engine.execute(
+                &name,
+                &[
+                    (xq_pad, &[qt, d]),
+                    (xd_pad, &[ndb, d]),
+                    (&[gamma], &[1]),
+                    (&[eta], &[1]),
+                ],
+            ),
+            KernelKind::Linear => self.engine.execute(
+                &name,
+                &[(xq_pad, &[qt, d]), (xd_pad, &[ndb, d])],
+            ),
+        }
+    }
+}
+
+impl BlockKernel for PjrtKernel<'_> {
+    fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    fn prefers_batched_rows(&self) -> bool {
+        true // per-dispatch overhead must be amortized (bench_kernel_micro)
+    }
+
+    fn block(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let nq = q_norms.len();
+        let nd = d_norms.len();
+        assert!(dim <= self.abi.d_pad, "dim {dim} > padded dim {}", self.abi.d_pad);
+        assert_eq!(out.len(), nq * nd);
+        let (ndb, dp) = (self.abi.nd_blk, self.abi.d_pad);
+
+        // Linear-kind requests fall back to wide only (no slim artifact).
+        let mut q0 = 0;
+        while q0 < nq {
+            let (q_tile, tag) = match self.kind {
+                KernelKind::Linear => (self.abi.nq_wide, "wide"),
+                _ => self.q_tile(nq - q0),
+            };
+            let q_take = q_tile.min(nq - q0);
+            let xq_pad =
+                Self::pad_rows(&xq[q0 * dim..(q0 + q_take) * dim], q_take, dim, q_tile, dp);
+            let qn_pad = Self::pad_vec(&q_norms[q0..q0 + q_take], q_tile);
+
+            let mut d0 = 0;
+            while d0 < nd {
+                let d_take = ndb.min(nd - d0);
+                let xd_pad =
+                    Self::pad_rows(&xd[d0 * dim..(d0 + d_take) * dim], d_take, dim, ndb, dp);
+                let dn_pad = Self::pad_vec(&d_norms[d0..d0 + d_take], ndb);
+                let tile = self
+                    .run_block_tile(&xq_pad, &qn_pad, q_tile, tag, &xd_pad, &dn_pad)
+                    .expect("PJRT block execution failed");
+                for qi in 0..q_take {
+                    let src = &tile[qi * ndb..qi * ndb + d_take];
+                    let dst = &mut out[(q0 + qi) * nd + d0..(q0 + qi) * nd + d0 + d_take];
+                    dst.copy_from_slice(src);
+                }
+                d0 += d_take;
+            }
+            q0 += q_take;
+        }
+    }
+
+    /// Fused decision via the `*_decision_wide` artifacts (RBF/poly);
+    /// linear falls back to the default block-then-GEMV path.
+    fn decision(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        coef: &[f32],
+        out: &mut [f32],
+    ) {
+        if matches!(self.kind, KernelKind::Linear) {
+            // No fused linear artifact; use the trait default.
+            return default_decision(self, xq, q_norms, xd, d_norms, dim, coef, out);
+        }
+        let nq = q_norms.len();
+        let nd = d_norms.len();
+        assert!(dim <= self.abi.d_pad);
+        assert_eq!(out.len(), nq);
+        assert_eq!(coef.len(), nd);
+        let (ndb, dp, qw) = (self.abi.nd_blk, self.abi.d_pad, self.abi.nq_wide);
+        let name = self.decision_artifact();
+
+        let mut q0 = 0;
+        while q0 < nq {
+            let q_take = qw.min(nq - q0);
+            let xq_pad =
+                Self::pad_rows(&xq[q0 * dim..(q0 + q_take) * dim], q_take, dim, qw, dp);
+            let qn_pad = Self::pad_vec(&q_norms[q0..q0 + q_take], qw);
+            let mut acc = vec![0f64; q_take];
+
+            let mut d0 = 0;
+            while d0 < nd {
+                let d_take = ndb.min(nd - d0);
+                let xd_pad =
+                    Self::pad_rows(&xd[d0 * dim..(d0 + d_take) * dim], d_take, dim, ndb, dp);
+                let dn_pad = Self::pad_vec(&d_norms[d0..d0 + d_take], ndb);
+                let coef_pad = Self::pad_vec(&coef[d0..d0 + d_take], ndb);
+                let (qt, ndbi, d) = (qw as i64, ndb as i64, dp as i64);
+                let dv = match self.kind {
+                    KernelKind::Rbf { gamma } => self.engine.execute(
+                        &name,
+                        &[
+                            (&xq_pad, &[qt, d]),
+                            (&xd_pad, &[ndbi, d]),
+                            (&qn_pad, &[qt]),
+                            (&dn_pad, &[ndbi]),
+                            (&coef_pad, &[ndbi]),
+                            (&[gamma], &[1]),
+                        ],
+                    ),
+                    KernelKind::Poly { gamma, eta } => self.engine.execute(
+                        &name,
+                        &[
+                            (&xq_pad, &[qt, d]),
+                            (&xd_pad, &[ndbi, d]),
+                            (&coef_pad, &[ndbi]),
+                            (&[gamma], &[1]),
+                            (&[eta], &[1]),
+                        ],
+                    ),
+                    KernelKind::Linear => unreachable!(),
+                }
+                .expect("PJRT decision execution failed");
+                for qi in 0..q_take {
+                    acc[qi] += dv[qi] as f64;
+                }
+                d0 += d_take;
+            }
+            for qi in 0..q_take {
+                out[q0 + qi] = acc[qi] as f32;
+            }
+            q0 += q_take;
+        }
+    }
+}
+
+/// The `BlockKernel::decision` default body, callable from an override.
+#[allow(clippy::too_many_arguments)]
+fn default_decision(
+    k: &dyn BlockKernel,
+    xq: &[f32],
+    q_norms: &[f32],
+    xd: &[f32],
+    d_norms: &[f32],
+    dim: usize,
+    coef: &[f32],
+    out: &mut [f32],
+) {
+    let nq = q_norms.len();
+    let nd = d_norms.len();
+    let mut block = vec![0f32; nq * nd];
+    k.block(xq, q_norms, xd, d_norms, dim, &mut block);
+    for i in 0..nq {
+        let row = &block[i * nd..(i + 1) * nd];
+        out[i] = row.iter().zip(coef).map(|(&kv, &c)| kv * c).sum();
+    }
+}

@@ -1,0 +1,224 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them on
+//! the CPU PJRT client via the `xla` crate.
+//!
+//! This is the bridge between L3 (Rust coordinator) and L2/L1 (JAX/Pallas,
+//! build-time only): `make artifacts` lowers the kernels to
+//! `artifacts/*.hlo.txt` + `manifest.json`, and this module
+//! - parses the manifest (shape ABI) with the in-repo JSON parser,
+//! - compiles each HLO text module once (`HloModuleProto::from_text_file`
+//!   → `XlaComputation::from_proto` → `PjRtClient::compile`),
+//! - exposes `Engine::execute(name, args)` for the tiled executor
+//!   ([`exec::PjrtKernel`]) that implements [`crate::kernel::BlockKernel`].
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that the bundled xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py).
+
+pub mod exec;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub use exec::PjrtKernel;
+
+/// Tile-shape ABI read from artifacts/manifest.json.
+#[derive(Clone, Copy, Debug)]
+pub struct TileAbi {
+    pub d_pad: usize,
+    pub nq_slim: usize,
+    pub nq_wide: usize,
+    pub nd_blk: usize,
+}
+
+struct EngineInner {
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per artifact (perf accounting).
+    calls: HashMap<String, u64>,
+}
+
+/// A compiled-artifact registry bound to one PJRT CPU client.
+///
+/// SAFETY of `Send + Sync`: the `xla` crate's wrappers hold raw pointers
+/// without marking them Send/Sync, but the underlying PJRT CPU client is
+/// internally synchronized (it is the same client the multi-threaded XLA
+/// runtime uses). We additionally serialize *all* access through one Mutex,
+/// so no two threads ever enter the FFI concurrently through this type.
+pub struct Engine {
+    inner: Mutex<EngineInner>,
+    abi: TileAbi,
+    dir: PathBuf,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load and compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parse manifest.json")?;
+        let abi = TileAbi {
+            d_pad: manifest
+                .get("d_pad")
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing d_pad"))?,
+            nq_slim: manifest
+                .get("nq_slim")
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing nq_slim"))?,
+            nq_wide: manifest
+                .get("nq_wide")
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing nq_wide"))?,
+            nd_blk: manifest
+                .get("nd_blk")
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing nd_blk"))?,
+        };
+
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        let artifacts = manifest
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, meta) in artifacts {
+            let file = meta
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        if exes.is_empty() {
+            bail!("no artifacts found in {}", dir.display());
+        }
+        crate::info!(
+            "runtime: compiled {} artifacts from {} (d_pad={}, tiles {}x{}/{}x{})",
+            exes.len(),
+            dir.display(),
+            abi.d_pad,
+            abi.nq_slim,
+            abi.nd_blk,
+            abi.nq_wide,
+            abi.nd_blk
+        );
+        Ok(Engine {
+            inner: Mutex::new(EngineInner { exes, calls: HashMap::new() }),
+            abi,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Default artifact directory: `$DCSVM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DCSVM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load from the default directory; `None` if artifacts are not built
+    /// (callers fall back to the native backend).
+    pub fn load_default() -> Option<Engine> {
+        let dir = Self::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        match Engine::load(&dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                crate::warn_!("runtime: failed to load artifacts: {err:#}");
+                None
+            }
+        }
+    }
+
+    pub fn abi(&self) -> TileAbi {
+        self.abi
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().exes.contains_key(name)
+    }
+
+    /// Execute an artifact. `args` are f32 buffers with their shapes; the
+    /// single (tuple-wrapped) output is returned as a flat f32 vector.
+    pub fn execute(&self, name: &str, args: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let mut inner = self.inner.lock().unwrap();
+        let exe = inner
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                if dims.len() == 1 {
+                    Ok(lit)
+                } else {
+                    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1 {name}: {e:?}"))?;
+        let v = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {name}: {e:?}"))?;
+        *inner.calls.entry(name.to_string()).or_insert(0) += 1;
+        Ok(v)
+    }
+
+    /// Per-artifact execution counts (perf accounting).
+    pub fn call_counts(&self) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<_> = inner.calls.iter().map(|(k, &c)| (k.clone(), c)).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need compiled artifacts live in rust/tests/
+    // (integration), where they skip gracefully if artifacts/ is absent.
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("DCSVM_ARTIFACTS", "/tmp/nope-artifacts");
+        assert_eq!(Engine::default_dir(), PathBuf::from("/tmp/nope-artifacts"));
+        std::env::remove_var("DCSVM_ARTIFACTS");
+        assert_eq!(Engine::default_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(Engine::load(Path::new("/definitely/not/here")).is_err());
+    }
+}

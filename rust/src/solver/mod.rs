@@ -1,0 +1,11 @@
+//! SVM solvers: the exact greedy-CD (SMO-style) dual solver (`smo`) — our
+//! LIBSVM-equivalent and the DC-SVM sub/whole-problem solver — plus a
+//! LIBLINEAR-style linear dual CD (`linear`) used by the feature-map
+//! baselines, and exact objective/KKT utilities with a brute-force
+//! reference QP (`objective`).
+
+pub mod linear;
+pub mod objective;
+pub mod smo;
+
+pub use smo::{solve_svm, SmoConfig, SmoResult, SmoSolver};

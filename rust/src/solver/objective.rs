@@ -1,0 +1,191 @@
+//! Exact objective / gradient / KKT utilities and a brute-force reference
+//! QP solver.
+//!
+//! The dual problem (paper eq. 1, no bias term):
+//!
+//! ```text
+//! min_α f(α) = ½ αᵀQα − eᵀα   s.t. 0 ≤ α ≤ C,   Q_ij = y_i y_j K(x_i, x_j)
+//! ```
+//!
+//! `dense_q` materializes Q for small problems; `ProjGradRef` is an O(n²)
+//! projected-gradient solver used purely as a test oracle for the SMO
+//! solver; `objective_from_grad` is the O(n) identity
+//! f(α) = ½ Σ α_i (g_i − 1) the production solver uses.
+
+use crate::data::Dataset;
+use crate::kernel::BlockKernel;
+
+/// Materialize the full Q matrix (f64) — test/bench use only (O(n²) memory).
+pub fn dense_q(ds: &Dataset, kernel: &dyn BlockKernel) -> Vec<f64> {
+    let n = ds.len();
+    let norms = ds.sq_norms();
+    let mut k = vec![0f32; n * n];
+    kernel.block(&ds.x, &norms, &ds.x, &norms, ds.dim, &mut k);
+    let mut q = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            q[i * n + j] = (ds.y[i] as f64) * (ds.y[j] as f64) * (k[i * n + j] as f64);
+        }
+    }
+    q
+}
+
+/// f(α) from a dense Q.
+pub fn objective_dense(q: &[f64], alpha: &[f64]) -> f64 {
+    let n = alpha.len();
+    let mut f = 0.0;
+    for i in 0..n {
+        let mut qa = 0.0;
+        for j in 0..n {
+            qa += q[i * n + j] * alpha[j];
+        }
+        f += alpha[i] * (0.5 * qa - 1.0);
+    }
+    f
+}
+
+/// f(α) = ½ Σ α_i (g_i − 1) given the maintained gradient g = Qα − e.
+pub fn objective_from_grad(alpha: &[f64], grad: &[f64]) -> f64 {
+    alpha.iter().zip(grad).map(|(&a, &g)| 0.5 * a * (g - 1.0)).sum()
+}
+
+/// Projected KKT violation of coordinate i: the magnitude of the projected
+/// gradient (0 iff i satisfies its KKT condition).
+#[inline]
+pub fn projected_violation(alpha_i: f64, grad_i: f64, c: f64) -> f64 {
+    if alpha_i <= 0.0 {
+        (-grad_i).max(0.0)
+    } else if alpha_i >= c {
+        grad_i.max(0.0)
+    } else {
+        grad_i.abs()
+    }
+}
+
+/// Max projected KKT violation over all coordinates.
+pub fn max_violation(alpha: &[f64], grad: &[f64], c: f64) -> f64 {
+    alpha
+        .iter()
+        .zip(grad)
+        .map(|(&a, &g)| projected_violation(a, g, c))
+        .fold(0.0, f64::max)
+}
+
+/// Brute-force projected-gradient reference solver (test oracle).
+/// Converges linearly; only for n ≤ a few hundred.
+pub struct ProjGradRef {
+    pub max_iter: usize,
+    pub tol: f64,
+}
+
+impl Default for ProjGradRef {
+    fn default() -> Self {
+        ProjGradRef { max_iter: 200_000, tol: 1e-10 }
+    }
+}
+
+impl ProjGradRef {
+    /// Solve with dense Q; returns (alpha, objective).
+    pub fn solve(&self, q: &[f64], n: usize, c: f64) -> (Vec<f64>, f64) {
+        // Lipschitz constant of the gradient: ||Q||_inf row-sum bound.
+        let lip = (0..n)
+            .map(|i| q[i * n..(i + 1) * n].iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+            .max(1e-12);
+        let step = 1.0 / lip;
+        let mut alpha = vec![0f64; n];
+        let mut grad = vec![-1f64; n]; // Qα − e at α = 0
+        for _ in 0..self.max_iter {
+            // gradient step + projection
+            let mut moved = 0.0f64;
+            for i in 0..n {
+                let target = (alpha[i] - step * grad[i]).clamp(0.0, c);
+                let delta = target - alpha[i];
+                if delta != 0.0 {
+                    alpha[i] = target;
+                    moved = moved.max(delta.abs());
+                    for j in 0..n {
+                        grad[j] += delta * q[j * n + i];
+                    }
+                }
+            }
+            if moved < self.tol {
+                break;
+            }
+        }
+        let obj = objective_from_grad(&alpha, &grad);
+        (alpha, obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate};
+    use crate::kernel::{native::NativeKernel, KernelKind};
+    use crate::util::prng::Pcg64;
+
+    fn small_problem(n: usize, seed: u64) -> (Dataset, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let spec = covtype_like();
+        let ds = generate(&spec, n, &mut rng);
+        let k = NativeKernel::new(KernelKind::Rbf { gamma: 8.0 });
+        let q = dense_q(&ds, &k);
+        (ds, q)
+    }
+
+    #[test]
+    fn objective_identities_agree() {
+        let (_, q) = small_problem(24, 1);
+        let n = 24;
+        let mut rng = Pcg64::new(2);
+        let alpha: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let mut grad = vec![0f64; n];
+        for i in 0..n {
+            grad[i] = (0..n).map(|j| q[i * n + j] * alpha[j]).sum::<f64>() - 1.0;
+        }
+        let f1 = objective_dense(&q, &alpha);
+        let f2 = objective_from_grad(&alpha, &grad);
+        assert!((f1 - f2).abs() < 1e-10, "{f1} vs {f2}");
+    }
+
+    #[test]
+    fn projgrad_satisfies_kkt() {
+        let (_, q) = small_problem(32, 3);
+        let c = 1.0;
+        let (alpha, _) = ProjGradRef::default().solve(&q, 32, c);
+        let n = 32;
+        let mut grad = vec![0f64; n];
+        for i in 0..n {
+            grad[i] = (0..n).map(|j| q[i * n + j] * alpha[j]).sum::<f64>() - 1.0;
+        }
+        let viol = max_violation(&alpha, &grad, c);
+        assert!(viol < 1e-5, "KKT violation {viol}");
+        assert!(alpha.iter().all(|&a| (0.0..=c).contains(&a)));
+    }
+
+    #[test]
+    fn projgrad_beats_feasible_points() {
+        let (_, q) = small_problem(20, 4);
+        let c = 0.7;
+        let (_, obj) = ProjGradRef::default().solve(&q, 20, c);
+        // optimal objective must be <= objective at any feasible point
+        let mut rng = Pcg64::new(5);
+        for _ in 0..20 {
+            let alpha: Vec<f64> = (0..20).map(|_| rng.next_f64() * c).collect();
+            assert!(obj <= objective_dense(&q, &alpha) + 1e-8);
+        }
+        // and <= 0 (alpha=0 is feasible with f=0)
+        assert!(obj <= 1e-12);
+    }
+
+    #[test]
+    fn violation_cases() {
+        let c = 1.0;
+        assert_eq!(projected_violation(0.0, 1.0, c), 0.0); // at 0, grad>0: satisfied
+        assert_eq!(projected_violation(0.0, -2.0, c), 2.0);
+        assert_eq!(projected_violation(c, -1.0, c), 0.0); // at C, grad<0: satisfied
+        assert_eq!(projected_violation(c, 3.0, c), 3.0);
+        assert_eq!(projected_violation(0.5, -0.25, c), 0.25); // interior
+    }
+}

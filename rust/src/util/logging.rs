@@ -1,0 +1,89 @@
+//! Leveled stderr logger (no `log`/`env_logger` facade needed).
+//!
+//! Level is process-global, set once from the CLI (`-v`/`-q`) or the
+//! `DCSVM_LOG` env var (error|warn|info|debug|trace). Benches default to
+//! `warn` so timing output stays clean.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("DCSVM_LOG") {
+        set_level(match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        });
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+#[doc(hidden)]
+pub fn log_at(l: Level, args: std::fmt::Arguments) {
+    if enabled(l) {
+        eprintln!("[{:5}] {}", format!("{l:?}").to_ascii_lowercase(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logging::log_at($crate::util::logging::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::logging::log_at($crate::util::logging::Level::Warn, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::logging::log_at($crate::util::logging::Level::Debug, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! trace {
+    ($($t:tt)*) => { $crate::util::logging::log_at($crate::util::logging::Level::Trace, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

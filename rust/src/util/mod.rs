@@ -1,0 +1,11 @@
+//! Self-contained substrates the offline environment forces us to carry:
+//! PRNG (`prng`), JSON (`json`), thread pool (`threadpool`), timers
+//! (`timer`), logging (`logging`), and a mini property-test harness
+//! (`proptest`).
+
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod proptest;
+pub mod threadpool;
+pub mod timer;

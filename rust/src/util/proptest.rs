@@ -1,0 +1,90 @@
+//! Mini property-testing harness (no `proptest` crate offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a property closure over `cases`
+//! independently seeded PRNGs. On failure it reports the failing case's seed
+//! so the case replays deterministically with `replay(seed, f)`. No
+//! shrinking — properties here are written over small sizes already.
+
+use super::prng::Pcg64;
+
+/// Run `f` for `cases` random cases. Each case gets a fresh `Pcg64` seeded
+/// from `(name hash, case index)`. `f` returns `Err(msg)` to fail.
+pub fn check<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Pcg64) -> Result<(), String>,
+{
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, f: F)
+where
+    F: Fn(&mut Pcg64) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper for properties: formats a labelled failure message.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            prop_assert!((a + b - (b + a)).abs() < 1e-15, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_get_distinct_seeds() {
+        use std::cell::RefCell;
+        let seen = RefCell::new(Vec::new());
+        check("distinct", 10, |rng| {
+            seen.borrow_mut().push(rng.next_u64());
+            Ok(())
+        });
+        let v = seen.borrow();
+        let set: std::collections::HashSet<_> = v.iter().collect();
+        assert_eq!(set.len(), v.len());
+    }
+}

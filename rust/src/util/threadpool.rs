@@ -1,0 +1,145 @@
+//! Scoped thread pool for per-cluster subproblem solving.
+//!
+//! No `rayon`/`tokio` offline, so the framework carries a small
+//! work-stealing-free pool: a fixed set of workers pulling indexed jobs from
+//! a shared queue. The API is deliberately minimal — `scope_map` runs one
+//! closure per item and returns outputs in item order, which is exactly what
+//! the DC-SVM divide step needs (solve k cluster subproblems, keep results
+//! indexed by cluster).
+//!
+//! Determinism: outputs depend only on per-item computation, never on
+//! scheduling order, so results are identical for any `threads` value —
+//! property-tested in dcsvm tests.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: the `DCSVM_THREADS` env var if set,
+/// otherwise available parallelism (1 in this container).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DCSVM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to each item of `items` on up to `threads` worker threads;
+/// returns outputs in input order. Panics in workers propagate.
+pub fn scope_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        // Fast path, also keeps stack traces simple under tests.
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let inputs: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<Mutex<Option<R>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().unwrap();
+                let out = f(i, item);
+                *outputs[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker produced no output"))
+        .collect()
+}
+
+/// Parallel-for over `0..n` chunked ranges; used for bulk array work
+/// (e.g. assigning n points to clusters).
+pub fn par_chunks<F>(threads: usize, n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1);
+    if n == 0 {
+        return;
+    }
+    let chunk = ((n + threads - 1) / threads).max(min_chunk.max(1));
+    let ranges: Vec<_> = (0..n)
+        .step_by(chunk)
+        .map(|lo| lo..(lo + chunk).min(n))
+        .collect();
+    if ranges.len() == 1 {
+        f(ranges.into_iter().next().unwrap());
+        return;
+    }
+    std::thread::scope(|s| {
+        for r in ranges {
+            let f = &f;
+            s.spawn(move || f(r));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let out = scope_map(4, items, |i, x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..97).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn same_result_any_thread_count() {
+        let compute = |threads: usize| {
+            scope_map(threads, (0..50).collect::<Vec<u64>>(), |_, x| {
+                // some non-trivial per-item work
+                (0..x).map(|v| v.wrapping_mul(2654435761)).sum::<u64>()
+            })
+        };
+        let base = compute(1);
+        for t in [2, 3, 8] {
+            assert_eq!(compute(t), base);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<u32> = scope_map(4, Vec::<u32>::new(), |_, x| x);
+        assert!(out.is_empty());
+        assert_eq!(scope_map(4, vec![9], |_, x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn par_chunks_covers_all() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        par_chunks(4, 1000, 16, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,134 @@
+//! Wall-clock timers and per-phase accounting.
+//!
+//! The paper's Table 6 reports clustering-vs-training time per level and
+//! Figures 2–4 are time-series; `PhaseTimer` provides named accumulators and
+//! `Stopwatch` provides trace timestamps relative to a run's start.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch anchored at construction.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Named phase accumulators (e.g. "clustering.l3", "training.l3").
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    acc: BTreeMap<String, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`, accumulating across calls.
+    pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.add(name, t.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        *self.acc.entry(name.to_string()).or_default() += d;
+    }
+
+    pub fn secs(&self, name: &str) -> f64 {
+        self.acc.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.acc.iter().map(|(k, v)| (k.as_str(), v.as_secs_f64()))
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k.clone()).or_default() += *v;
+        }
+    }
+}
+
+/// A recorded (time, value) series, e.g. objective vs seconds (Figure 3).
+#[derive(Default, Debug, Clone)]
+pub struct Series {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+    pub fn last_value(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+    /// Earliest time at which value <= threshold (for "time to reach X").
+    pub fn time_to_reach_below(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|&&(_, v)| v <= threshold).map(|&(t, _)| t)
+    }
+    pub fn to_csv(&self, header: (&str, &str)) -> String {
+        let mut s = format!("{},{}\n", header.0, header.1);
+        for &(t, v) in &self.points {
+            s.push_str(&format!("{t:.6},{v:.8}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("a", Duration::from_millis(10));
+        pt.add("a", Duration::from_millis(15));
+        pt.add("b", Duration::from_millis(5));
+        assert!((pt.secs("a") - 0.025).abs() < 1e-9);
+        assert!((pt.secs("b") - 0.005).abs() < 1e-9);
+        assert_eq!(pt.secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn series_threshold() {
+        let mut s = Series::default();
+        s.push(0.0, 1.0);
+        s.push(1.0, 0.1);
+        s.push(2.0, 0.01);
+        assert_eq!(s.time_to_reach_below(0.05), Some(2.0));
+        assert_eq!(s.time_to_reach_below(0.5), Some(1.0));
+        assert_eq!(s.time_to_reach_below(1e-9), None);
+    }
+
+    #[test]
+    fn timer_time_runs_closure() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(pt.secs("work") >= 0.0);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut s = Series::default();
+        s.push(0.5, 2.0);
+        let csv = s.to_csv(("t", "obj"));
+        assert!(csv.starts_with("t,obj\n"));
+        assert!(csv.contains("0.5"));
+    }
+}

@@ -1,0 +1,166 @@
+//! Integration: CLI binary round-trips — train → save model → predict,
+//! config file handling, and every subcommand smoke-tested.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target dir of the test binary: target/debug/deps/... → target/debug
+    let mut p = std::env::current_exe().unwrap();
+    p.pop();
+    if p.ends_with("deps") {
+        p.pop();
+    }
+    p.join("dcsvm")
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .env("DCSVM_LOG", "warn")
+        .output()
+        .expect("spawn dcsvm");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn datasets_lists_all_seven() {
+    let (ok, text) = run(&["datasets"]);
+    assert!(ok, "{text}");
+    for name in [
+        "ijcnn1-like",
+        "cifar-like",
+        "census-like",
+        "covtype-like",
+        "webspam-like",
+        "kddcup99-like",
+        "mnist8m-like",
+    ] {
+        assert!(text.contains(name), "missing {name}: {text}");
+    }
+}
+
+#[test]
+fn train_save_predict_roundtrip() {
+    let dir = std::env::temp_dir().join("dcsvm_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    let (ok, text) = run(&[
+        "train",
+        "--algo",
+        "dcsvm",
+        "--dataset",
+        "covtype-like",
+        "--n-train",
+        "400",
+        "--n-test",
+        "150",
+        "--gamma",
+        "16",
+        "--c",
+        "4",
+        "--levels",
+        "2",
+        "--sample-m",
+        "64",
+        "--backend",
+        "native",
+        "--save-model",
+        model.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("model saved"), "{text}");
+
+    let (ok, text) = run(&[
+        "predict",
+        "--model",
+        model.to_str().unwrap(),
+        "--dataset",
+        "covtype-like",
+        "--n-train",
+        "400",
+        "--n-test",
+        "150",
+        "--backend",
+        "native",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("acc="), "{text}");
+    std::fs::remove_file(&model).ok();
+}
+
+#[test]
+fn config_file_plus_override() {
+    let dir = std::env::temp_dir().join("dcsvm_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.json");
+    std::fs::write(
+        &cfg,
+        r#"{"dataset": "ijcnn1-like", "gamma": 2.0, "c": 32.0, "n_train": 300, "n_test": 100, "backend": "native", "levels": 2, "sample_m": 64}"#,
+    )
+    .unwrap();
+    let (ok, text) = run(&[
+        "train",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--algo",
+        "libsvm",
+        "--gamma",
+        "8", // override the file
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("γ=8"), "override lost: {text}");
+    assert!(text.contains("ijcnn1-like"), "{text}");
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
+fn kmeans_subcommand_reports_partition() {
+    let (ok, text) = run(&[
+        "kmeans",
+        "--dataset",
+        "covtype-like",
+        "--n-train",
+        "500",
+        "--n-test",
+        "50",
+        "--k-base",
+        "4",
+        "--sample-m",
+        "64",
+        "--backend",
+        "native",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("two-step kernel kmeans"), "{text}");
+    assert!(text.contains("D(π)"), "{text}");
+}
+
+#[test]
+fn info_and_help_work() {
+    let (ok, text) = run(&["info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("PJRT backend"), "{text}");
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    assert!(text.contains("commands:"));
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"), "{text}");
+}
+
+#[test]
+fn bad_flag_rejected() {
+    let (ok, text) = run(&["train", "--nonsense", "1"]);
+    assert!(!ok);
+    assert!(text.contains("unknown config key"), "{text}");
+}

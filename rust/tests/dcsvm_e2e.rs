@@ -1,0 +1,193 @@
+//! Integration: multilevel DC-SVM end-to-end against the direct solver,
+//! Lemma-1 / Theorem-1 invariants, and early prediction floors.
+
+use dcsvm::data::synthetic::{covtype_like, generate, generate_split, webspam_like};
+use dcsvm::dcsvm::{train, DcSvmConfig};
+use dcsvm::kernel::{native::NativeKernel, KernelKind};
+use dcsvm::kmeans::{off_diagonal_mass, two_step_partition, Partition};
+use dcsvm::metrics::objective_of;
+use dcsvm::solver::{solve_svm, SmoConfig, SmoSolver};
+use dcsvm::util::prng::Pcg64;
+
+fn kind() -> KernelKind {
+    KernelKind::Rbf { gamma: 16.0 }
+}
+
+/// Lemma 1: the concatenation of subproblem optima is the optimum of the
+/// block-diagonal-kernel problem; equivalently, per-cluster solves of the
+/// full problem restricted to clusters are KKT-optimal for K̄.
+#[test]
+fn lemma1_blockdiag_optimality() {
+    let mut rng = Pcg64::new(100);
+    let ds = generate(&covtype_like(), 240, &mut rng);
+    let kern = NativeKernel::new(kind());
+    let c = 2.0;
+    let (_, part) = two_step_partition(&ds, 4, 60, None, &kern, &mut rng);
+
+    // Solve each cluster subproblem exactly.
+    let mut alpha_bar = vec![0f64; ds.len()];
+    for members in &part.members {
+        if members.is_empty() {
+            continue;
+        }
+        let sub = ds.subset(members, "c");
+        let res = solve_svm(&sub, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
+        for (t, &i) in members.iter().enumerate() {
+            alpha_bar[i] = res.alpha[t];
+        }
+    }
+
+    // KKT of the block-diagonal problem: within each cluster, gradient of
+    // the *cluster* subproblem satisfies the box optimality conditions.
+    for members in &part.members {
+        if members.is_empty() {
+            continue;
+        }
+        let sub = ds.subset(members, "c");
+        let a: Vec<f64> = members.iter().map(|&i| alpha_bar[i]).collect();
+        let q = dcsvm::solver::objective::dense_q(&sub, &kern);
+        let m = sub.len();
+        for i in 0..m {
+            let g: f64 = (0..m).map(|j| q[i * m + j] * a[j]).sum::<f64>() - 1.0;
+            let viol = dcsvm::solver::objective::projected_violation(a[i], g, c);
+            assert!(viol < 1e-6, "cluster KKT violation {viol}");
+        }
+    }
+}
+
+/// Theorem 1: 0 <= f(ᾱ) − f(α*) <= ½ C² D(π).
+#[test]
+fn theorem1_bound_holds() {
+    let mut rng = Pcg64::new(101);
+    let ds = generate(&covtype_like(), 300, &mut rng);
+    let kern = NativeKernel::new(kind());
+    let c = 1.0;
+    for k in [2usize, 4, 8] {
+        let (_, part) = two_step_partition(&ds, k, 80, None, &kern, &mut rng);
+        let mut alpha_bar = vec![0f64; ds.len()];
+        for members in &part.members {
+            if members.is_empty() {
+                continue;
+            }
+            let sub = ds.subset(members, "c");
+            let res =
+                solve_svm(&sub, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
+            for (t, &i) in members.iter().enumerate() {
+                alpha_bar[i] = res.alpha[t];
+            }
+        }
+        let f_bar = objective_of(&ds, &kern, &alpha_bar);
+        let star = solve_svm(&ds, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
+        let gap = f_bar - star.objective;
+        let bound = 0.5 * c * c * off_diagonal_mass(&ds, &kern, &part.assign);
+        assert!(gap >= -1e-5, "k={k}: f(ᾱ) below optimum?! gap={gap}");
+        assert!(
+            gap <= bound + 1e-6,
+            "k={k}: Theorem-1 bound violated: gap {gap} > bound {bound}"
+        );
+    }
+}
+
+/// Kernel-kmeans partitions must beat random partitions in the actual
+/// objective gap (Figure 1's message).
+#[test]
+fn kernel_partition_tightens_gap_vs_random() {
+    let mut rng = Pcg64::new(102);
+    let ds = generate(&covtype_like(), 300, &mut rng);
+    let kern = NativeKernel::new(kind());
+    let c = 1.0;
+    let solve_part = |part: &Partition| -> f64 {
+        let mut alpha = vec![0f64; ds.len()];
+        for members in &part.members {
+            if members.is_empty() {
+                continue;
+            }
+            let sub = ds.subset(members, "c");
+            let res =
+                solve_svm(&sub, &kern, SmoConfig { c, eps: 1e-7, ..Default::default() });
+            for (t, &i) in members.iter().enumerate() {
+                alpha[i] = res.alpha[t];
+            }
+        }
+        objective_of(&ds, &kern, &alpha)
+    };
+    let (_, kpart) = two_step_partition(&ds, 8, 80, None, &kern, &mut rng);
+    let rpart = Partition::random(ds.len(), 8, &mut rng);
+    let f_k = solve_part(&kpart);
+    let f_r = solve_part(&rpart);
+    let star = solve_svm(&ds, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
+    let gap_k = f_k - star.objective;
+    let gap_r = f_r - star.objective;
+    assert!(
+        gap_k < gap_r,
+        "kernel partition gap {gap_k} not below random {gap_r}"
+    );
+}
+
+/// Full multilevel pipeline on two datasets: exact optimum + decent early
+/// accuracy + no more final iterations than cold.
+#[test]
+fn multilevel_pipeline_two_datasets() {
+    for (spec, seed) in [(covtype_like(), 1u64), (webspam_like(), 2u64)] {
+        let (tr, te) = generate_split(&spec, 700, 200, seed);
+        let kern = NativeKernel::new(kind());
+        let cfg = DcSvmConfig {
+            kind: kind(),
+            c: 4.0,
+            levels: 3,
+            k_base: 4,
+            sample_m: 96,
+            eps_final: 1e-5,
+            keep_level_alphas: true,
+            ..Default::default()
+        };
+        let dc = train(&tr, &kern, &cfg);
+        let cold = SmoSolver::new(
+            &tr,
+            &kern,
+            SmoConfig { c: 4.0, eps: 1e-5, ..Default::default() },
+        )
+        .solve();
+        let rel = (dc.objective.unwrap() - cold.objective).abs()
+            / (1.0 + cold.objective.abs());
+        assert!(rel < 1e-3, "{}: rel {rel}", spec.name);
+        assert!(
+            dc.final_iterations <= cold.iterations,
+            "{}: warm {} > cold {}",
+            spec.name,
+            dc.final_iterations,
+            cold.iterations
+        );
+        let em = dc.early_model.as_ref().unwrap();
+        let acc = em.accuracy(&te, &kern);
+        assert!(acc > 0.70, "{}: early acc {acc}", spec.name);
+    }
+}
+
+/// SV identification (Figure 2): divide levels already recover most of the
+/// final SV set, with high precision.
+#[test]
+fn lower_levels_identify_svs() {
+    let (tr, _) = generate_split(&covtype_like(), 600, 100, 5);
+    let kern = NativeKernel::new(kind());
+    let cfg = DcSvmConfig {
+        kind: kind(),
+        c: 4.0,
+        levels: 3,
+        sample_m: 96,
+        eps_final: 1e-6,
+        keep_level_alphas: true,
+        ..Default::default()
+    };
+    let dc = train(&tr, &kern, &cfg);
+    let final_alpha = &dc.alpha;
+    let mut last_recall = 0.0;
+    for ls in &dc.levels {
+        let a = ls.alpha.as_ref().unwrap();
+        let (prec, rec) = dcsvm::metrics::sv_precision_recall(a, final_alpha);
+        assert!(rec > 0.6, "level {} recall {rec}", ls.level);
+        assert!(prec > 0.6, "level {} precision {prec}", ls.level);
+        last_recall = rec;
+    }
+    assert!(last_recall > 0.8, "top divide level recall {last_recall}");
+}

@@ -1,0 +1,135 @@
+//! Integration: the PJRT-backed kernel must agree with the native backend
+//! (which is itself verified against the scalar formulas and, through the
+//! python tests, against the pure-jnp oracle). Skips gracefully when
+//! `artifacts/` has not been built (`make artifacts`).
+
+use dcsvm::kernel::{native::NativeKernel, BlockKernel, KernelKind};
+use dcsvm::runtime::{Engine, PjrtKernel};
+use dcsvm::util::prng::Pcg64;
+
+fn engine() -> Option<Engine> {
+    // Tests run from the crate root, so ./artifacts is correct.
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(dir).expect("artifacts present but failed to load"))
+}
+
+fn rand_rows(rng: &mut Pcg64, n: usize, d: usize, scale: f32) -> (Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32 * scale).collect();
+    let norms = x.chunks(d).map(|r| r.iter().map(|&v| v * v).sum()).collect();
+    (x, norms)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: len");
+    for (i, (&u, &v)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (u - v).abs() <= tol * (1.0 + v.abs()),
+            "{what}[{i}]: pjrt={u} native={v}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_block_matches_native_across_shapes_and_kernels() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::new(42);
+    // (nq, nd, dim) cases spanning slim/wide tiles, multi-tile columns,
+    // ragged edges, and tiny requests.
+    let cases = [
+        (1usize, 1usize, 1usize),
+        (3, 50, 10),
+        (64, 1024, 128),   // exact slim tile
+        (65, 1030, 54),    // just past tile edges
+        (256, 2048, 128),  // exact wide tiles, 2 column blocks
+        (300, 1500, 22),
+    ];
+    for kind in [
+        KernelKind::Rbf { gamma: 0.7 },
+        KernelKind::Poly { gamma: 0.05, eta: 0.5 },
+        KernelKind::Linear,
+    ] {
+        let pjrt = PjrtKernel::new(&engine, kind);
+        let native = NativeKernel::new(kind);
+        for &(nq, nd, dim) in &cases {
+            let (xq, qn) = rand_rows(&mut rng, nq, dim, 0.5);
+            let (xd, dn) = rand_rows(&mut rng, nd, dim, 0.5);
+            let mut got = vec![0f32; nq * nd];
+            let mut want = vec![0f32; nq * nd];
+            pjrt.block(&xq, &qn, &xd, &dn, dim, &mut got);
+            native.block(&xq, &qn, &xd, &dn, dim, &mut want);
+            assert_close(&got, &want, 2e-4, &format!("{kind:?} block {nq}x{nd}x{dim}"));
+        }
+    }
+}
+
+#[test]
+fn pjrt_decision_matches_native() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::new(7);
+    for kind in [
+        KernelKind::Rbf { gamma: 1.3 },
+        KernelKind::Poly { gamma: 0.1, eta: 0.0 },
+    ] {
+        let pjrt = PjrtKernel::new(&engine, kind);
+        let native = NativeKernel::new(kind);
+        for &(nq, nd, dim) in &[(5usize, 80usize, 16usize), (130, 1500, 54), (256, 1024, 128)] {
+            let (xq, qn) = rand_rows(&mut rng, nq, dim, 0.4);
+            let (xd, dn) = rand_rows(&mut rng, nd, dim, 0.4);
+            let coef: Vec<f32> =
+                (0..nd).map(|_| rng.next_gaussian() as f32).collect();
+            let mut got = vec![0f32; nq];
+            let mut want = vec![0f32; nq];
+            pjrt.decision(&xq, &qn, &xd, &dn, dim, &coef, &mut got);
+            native.decision(&xq, &qn, &xd, &dn, dim, &coef, &mut want);
+            assert_close(&got, &want, 5e-4, &format!("{kind:?} decision {nq}x{nd}x{dim}"));
+        }
+    }
+}
+
+#[test]
+fn pjrt_property_random_shapes() {
+    let Some(engine) = engine() else { return };
+    let kind = KernelKind::Rbf { gamma: 2.0 };
+    let pjrt = PjrtKernel::new(&engine, kind);
+    let native = NativeKernel::new(kind);
+    let mut rng = Pcg64::new(1234);
+    for case in 0..10 {
+        let nq = 1 + rng.below(90);
+        let nd = 1 + rng.below(700);
+        let dim = 1 + rng.below(128);
+        let (xq, qn) = rand_rows(&mut rng, nq, dim, 0.6);
+        let (xd, dn) = rand_rows(&mut rng, nd, dim, 0.6);
+        let mut got = vec![0f32; nq * nd];
+        let mut want = vec![0f32; nq * nd];
+        pjrt.block(&xq, &qn, &xd, &dn, dim, &mut got);
+        native.block(&xq, &qn, &xd, &dn, dim, &mut want);
+        assert_close(&got, &want, 2e-4, &format!("case {case}: {nq}x{nd}x{dim}"));
+    }
+}
+
+#[test]
+fn smo_solver_runs_on_pjrt_backend() {
+    let Some(engine) = engine() else { return };
+    use dcsvm::data::synthetic::{covtype_like, generate};
+    use dcsvm::solver::{SmoConfig, SmoSolver};
+
+    let mut rng = Pcg64::new(9);
+    let ds = generate(&covtype_like(), 120, &mut rng);
+    let kind = KernelKind::Rbf { gamma: 8.0 };
+    let cfg = SmoConfig { c: 1.0, eps: 1e-6, ..Default::default() };
+
+    let pjrt = PjrtKernel::new(&engine, kind);
+    let res_pjrt = SmoSolver::new(&ds, &pjrt, cfg.clone()).solve();
+
+    let native = NativeKernel::new(kind);
+    let res_native = SmoSolver::new(&ds, &native, cfg).solve();
+
+    let rel = (res_pjrt.objective - res_native.objective).abs()
+        / (1.0 + res_native.objective.abs());
+    assert!(rel < 1e-4, "pjrt {} vs native {}", res_pjrt.objective, res_native.objective);
+    assert!(res_pjrt.final_violation < 1e-5);
+}

