@@ -1,0 +1,20 @@
+# Repo task runner. `make verify` is the tier-1 gate (mirrors ci.yml for
+# environments without GitHub Actions).
+
+.PHONY: verify fmt test build artifacts
+
+verify: build test
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --check
+
+# AOT-compile the Pallas/XLA kernel artifacts (requires the python/ stack;
+# the Rust side runs on the native backend without them).
+artifacts:
+	python3 -m python.compile.aot

@@ -10,11 +10,12 @@
 //! vs the reference optimum, early-model accuracy where applicable.
 
 use dcsvm::bench::{banner, fmt_secs, Table};
+use dcsvm::cache::KernelContext;
 use dcsvm::data::synthetic::{covtype_like, generate_split};
 use dcsvm::dcsvm::{train, DcSvmConfig};
 use dcsvm::kernel::{native::NativeKernel, KernelKind};
 use dcsvm::metrics::relative_error;
-use dcsvm::solver::{SmoConfig, SmoSolver};
+use dcsvm::solver::{solve_svm, SmoConfig, SmoSolver};
 
 fn main() {
     banner("Ablations", "DC-SVM design choices, one knob at a time");
@@ -25,12 +26,7 @@ fn main() {
     let c = 1.0;
     let cache = 16usize << 20;
 
-    let star = SmoSolver::new(
-        &tr,
-        &kern,
-        SmoConfig { c, eps: 1e-8, ..Default::default() },
-    )
-    .solve();
+    let star = solve_svm(&tr, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
     println!("n={n}, f* = {:.4}, SVs = {}", star.objective, star.sv_count);
 
     let base = DcSvmConfig {
@@ -76,16 +72,12 @@ fn main() {
     // solve (warm-start shrink only acts on warm starts; row batching acts
     // everywhere).
     for (name, batch) in [("A5 row_batch=1 (no prefetch)", 1usize), ("A5 row_batch=64", 64)] {
+        // Fresh constrained-budget context per setting: A5 measures the
+        // solver's own prefetch policy, not cross-run cache reuse.
+        let ctx = KernelContext::new(&tr, &kern, cache);
         let res = SmoSolver::new(
-            &tr,
-            &kern,
-            SmoConfig {
-                c,
-                eps: 1e-5,
-                cache_bytes: cache,
-                row_batch: batch,
-                ..Default::default()
-            },
+            ctx.view_full(),
+            SmoConfig { c, eps: 1e-5, row_batch: batch, ..Default::default() },
         )
         .solve();
         t.row(&[

@@ -8,26 +8,25 @@
 //! (c) — kernel kmeans is what makes ᾱ a good warm start.
 
 use dcsvm::bench::{banner, Table};
+use dcsvm::cache::KernelContext;
 use dcsvm::data::synthetic::{covtype_like, generate};
 use dcsvm::kernel::{native::NativeKernel, KernelKind};
 use dcsvm::kmeans::{off_diagonal_mass, two_step_partition, Partition};
 use dcsvm::metrics::objective_of;
-use dcsvm::solver::{solve_svm, SmoConfig};
+use dcsvm::solver::{solve_svm, SmoConfig, SmoSolver};
 use dcsvm::util::prng::Pcg64;
 
-fn solve_partition(
-    ds: &dcsvm::data::Dataset,
-    kern: &NativeKernel,
-    part: &Partition,
-    c: f64,
-) -> Vec<f64> {
-    let mut alpha = vec![0f64; ds.len()];
+fn solve_partition(ctx: &KernelContext, part: &Partition, c: f64) -> Vec<f64> {
+    let mut alpha = vec![0f64; ctx.len()];
     for members in &part.members {
         if members.is_empty() {
             continue;
         }
-        let sub = ds.subset(members, "c");
-        let res = solve_svm(&sub, kern, SmoConfig { c, eps: 1e-7, ..Default::default() });
+        let res = SmoSolver::new(
+            ctx.view(members),
+            SmoConfig { c, eps: 1e-7, ..Default::default() },
+        )
+        .solve();
         for (t, &i) in members.iter().enumerate() {
             alpha[i] = res.alpha[t];
         }
@@ -42,6 +41,7 @@ fn main() {
     let mut rng = Pcg64::new(7);
     let ds = generate(&covtype_like(), n, &mut rng);
     let kern = NativeKernel::new(KernelKind::Rbf { gamma: 32.0 });
+    let ctx = KernelContext::new(&ds, &kern, 256 << 20);
 
     let star = solve_svm(&ds, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
     println!("n={n}, f(α*) = {:.4}", star.objective);
@@ -54,13 +54,13 @@ fn main() {
         "bound/gap",
     ]);
     for k in [2usize, 4, 8, 16, 32] {
-        let (_, part) = two_step_partition(&ds, k, 128, None, &kern, &mut rng);
-        let alpha_k = solve_partition(&ds, &kern, &part, c);
+        let (_, part) = two_step_partition(&ctx, k, 128, None, &mut rng);
+        let alpha_k = solve_partition(&ctx, &part, c);
         let gap_k = objective_of(&ds, &kern, &alpha_k) - star.objective;
-        let bound = 0.5 * c * c * off_diagonal_mass(&ds, &kern, &part.assign);
+        let bound = 0.5 * c * c * off_diagonal_mass(&ctx, &part.assign);
 
         let rpart = Partition::random(n, k, &mut rng);
-        let alpha_r = solve_partition(&ds, &kern, &rpart, c);
+        let alpha_r = solve_partition(&ctx, &rpart, c);
         let gap_r = objective_of(&ds, &kern, &alpha_r) - star.objective;
 
         t.row(&[

@@ -7,11 +7,12 @@
 
 use dcsvm::baselines::cascade;
 use dcsvm::bench::{banner, fmt_secs, Table};
+use dcsvm::cache::KernelContext;
 use dcsvm::data::synthetic::{covtype_like, generate_split, ijcnn1_like};
 use dcsvm::dcsvm::{train, DcSvmConfig};
 use dcsvm::kernel::{native::NativeKernel, KernelKind};
 use dcsvm::metrics::sv_precision_recall;
-use dcsvm::solver::{SmoConfig, SmoSolver};
+use dcsvm::solver::{solve_svm, SmoConfig, SmoSolver};
 
 fn main() {
     banner("Figure 2", "SV identification: DC-SVM levels vs CascadeSVM vs LIBSVM shrinking");
@@ -24,12 +25,7 @@ fn main() {
         println!("\n--- dataset {} (n={}) ---", spec.name, tr.len());
 
         // Reference SV set: high-precision solve.
-        let star = SmoSolver::new(
-            &tr,
-            &kern,
-            SmoConfig { c, eps: 1e-7, ..Default::default() },
-        )
-        .solve();
+        let star = solve_svm(&tr, &kern, SmoConfig { c, eps: 1e-7, ..Default::default() });
         println!("reference SVs: {}", star.sv_count);
 
         // DC-SVM per-level precision/recall.
@@ -74,9 +70,9 @@ fn main() {
 
         // LIBSVM shrinking trajectory: SV recall of the running α over time.
         let mut series = Vec::new();
+        let ctx = KernelContext::new(&tr, &kern, 256 << 20);
         let mut solver = SmoSolver::new(
-            &tr,
-            &kern,
+            ctx.view_full(),
             SmoConfig { c, eps: 1e-6, report_every: 500, ..Default::default() },
         );
         solver.solve_warm(None, &mut |p| {

@@ -8,13 +8,14 @@
 
 use dcsvm::baselines::cascade;
 use dcsvm::bench::{banner, fmt_secs};
+use dcsvm::cache::KernelContext;
 use dcsvm::config::{Algo, RunConfig};
 use dcsvm::data::synthetic::{covtype_like, generate_split};
 use dcsvm::dcsvm::{train, DcSvmConfig};
 use dcsvm::harness;
 use dcsvm::kernel::{native::NativeKernel, KernelKind};
 use dcsvm::metrics::relative_error;
-use dcsvm::solver::{SmoConfig, SmoSolver};
+use dcsvm::solver::{solve_svm, SmoConfig, SmoSolver};
 
 fn main() {
     banner("Figure 3", "objective rel-err vs time (a–c) and test accuracy vs time (d–f)");
@@ -26,22 +27,18 @@ fn main() {
     let cache = 16usize << 20; // constrained cache: the paper's regime
 
     // Reference optimum.
-    let star = SmoSolver::new(
-        &tr,
-        &kern,
-        SmoConfig { c, eps: 1e-8, ..Default::default() },
-    )
-    .solve();
+    let star = solve_svm(&tr, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
     let f_star = star.objective;
     println!("n={n}, f* = {f_star:.4}");
 
     // ---- (a–c): objective vs time ---------------------------------------
     println!("\n[objective rel-err vs time]");
     let mut libsvm_series = Vec::new();
+    // Constrained-budget context: the paper's memory regime.
+    let lib_ctx = KernelContext::new(&tr, &kern, cache);
     SmoSolver::new(
-        &tr,
-        &kern,
-        SmoConfig { c, eps: 1e-6, cache_bytes: cache, report_every: 200, ..Default::default() },
+        lib_ctx.view_full(),
+        SmoConfig { c, eps: 1e-6, report_every: 200, ..Default::default() },
     )
     .solve_warm(None, &mut |p| libsvm_series.push((p.elapsed_s, p.objective)));
 

@@ -4,12 +4,13 @@
 
 use dcsvm::baselines::lasvm;
 use dcsvm::bench::{banner, fmt_secs};
+use dcsvm::cache::KernelContext;
 use dcsvm::data::synthetic::{covtype_like, generate_split, webspam_like};
 use dcsvm::dcsvm::{train, DcSvmConfig};
 use dcsvm::kernel::{native::NativeKernel, KernelKind};
 use dcsvm::metrics::relative_error;
 use dcsvm::predict::SvmModel;
-use dcsvm::solver::{SmoConfig, SmoSolver};
+use dcsvm::solver::{solve_svm, SmoConfig, SmoSolver};
 
 fn main() {
     banner("Figure 4", "polynomial kernel (degree 3): objective + accuracy vs time");
@@ -22,18 +23,13 @@ fn main() {
         println!("\n--- {} (poly³, C={c}, γ={gamma}) ---", spec.name);
 
         // reference optimum
-        let star = SmoSolver::new(
-            &tr,
-            &kern,
-            SmoConfig { c, eps: 1e-7, ..Default::default() },
-        )
-        .solve();
+        let star = solve_svm(&tr, &kern, SmoConfig { c, eps: 1e-7, ..Default::default() });
 
         // LIBSVM trace
+        let tr_ctx = KernelContext::new(&tr, &kern, 256 << 20);
         let mut lib_series = Vec::new();
         let lib = SmoSolver::new(
-            &tr,
-            &kern,
+            tr_ctx.view_full(),
             SmoConfig { c, eps: 1e-6, report_every: 400, ..Default::default() },
         )
         .solve_warm(None, &mut |p| lib_series.push((p.elapsed_s, p.objective)));
@@ -51,8 +47,7 @@ fn main() {
 
         // LaSVM
         let las = lasvm::train(
-            &tr,
-            &kern,
+            &tr_ctx,
             &lasvm::LaSvmConfig { kind, c, eps: 1e-3, ..Default::default() },
         );
 

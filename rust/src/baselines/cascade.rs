@@ -10,6 +10,7 @@
 
 use std::time::Instant;
 
+use crate::cache::KernelContext;
 use crate::data::Dataset;
 use crate::kernel::{BlockKernel, KernelKind};
 use crate::predict::SvmModel;
@@ -54,11 +55,15 @@ pub struct CascadeResult {
     pub level_sv_counts: Vec<usize>,
 }
 
-/// Train CascadeSVM.
+/// Train CascadeSVM. One [`KernelContext`] is shared by every node of the
+/// partition tree: rows computed at the leaves stay resident for the upper
+/// SV-union solves.
 pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> CascadeResult {
+    assert_eq!(kernel.kind(), cfg.kind, "kernel backend kind mismatch");
     let t0 = Instant::now();
     let n = ds.len();
     let mut rng = Pcg64::new(cfg.seed);
+    let ctx = KernelContext::new(ds, kernel, cfg.cache_bytes);
 
     // Random leaf shards.
     let mut perm: Vec<usize> = (0..n).collect();
@@ -74,10 +79,9 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> Cas
         c: cfg.c,
         eps: cfg.eps,
         max_iter: cfg.max_iter,
-        cache_bytes: cfg.cache_bytes,
         shrinking: true,
         report_every: 0,
-            row_batch: 0,
+        row_batch: 0,
     };
 
     let mut alpha = vec![0f64; n];
@@ -88,11 +92,11 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> Cas
     loop {
         let results: Vec<(Vec<usize>, Vec<f64>)> = {
             let alpha_ref = &alpha;
+            let ctx_ref = &ctx;
             scope_map(cfg.threads, std::mem::take(&mut groups), |_, members| {
-                let sub = ds.subset(&members, "cascade");
                 let a0: Vec<f64> = members.iter().map(|&i| alpha_ref[i]).collect();
                 let warm = a0.iter().any(|&a| a != 0.0);
-                let res = SmoSolver::new(&sub, kernel, scfg.clone()).solve_warm(
+                let res = SmoSolver::new(ctx_ref.view(&members), scfg.clone()).solve_warm(
                     if warm { Some(&a0) } else { None },
                     &mut |_| {},
                 );
@@ -126,7 +130,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> Cas
             .collect();
     }
 
-    let model = SvmModel::from_alpha(ds, &alpha, cfg.kind);
+    let model = SvmModel::from_ctx_alpha(&ctx, &alpha);
     CascadeResult { model, alpha, elapsed_s: t0.elapsed().as_secs_f64(), level_sv_counts }
 }
 

@@ -16,6 +16,7 @@
 
 use std::time::Instant;
 
+use crate::cache::KernelContext;
 use crate::data::Dataset;
 use crate::kernel::{BlockKernel, KernelKind};
 use crate::predict::SvmModel;
@@ -176,17 +177,19 @@ impl<'a> Expansion<'a> {
     }
 }
 
-/// Train LaSVM.
-pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &LaSvmConfig) -> LaSvmResult {
+/// Train LaSVM on a [`KernelContext`] (dataset, backend and precomputed
+/// norms all come from the context).
+pub fn train(ctx: &KernelContext, cfg: &LaSvmConfig) -> LaSvmResult {
     let t0 = Instant::now();
+    let ds = ctx.ds();
+    let kernel = ctx.kernel();
     let n = ds.len();
-    let norms = ds.sq_norms();
     let mut rng = Pcg64::new(cfg.seed);
 
     let mut exp = Expansion {
         ds,
         kernel,
-        norms: &norms,
+        norms: ctx.norms(),
         idx: Vec::new(),
         grad: Vec::new(),
         alpha: Vec::new(),
@@ -264,7 +267,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &LaSvmConfig) -> LaSvm
     for (t, &i) in exp.idx.iter().enumerate() {
         alpha[i] = exp.alpha[t];
     }
-    let model = SvmModel::from_alpha(ds, &alpha, cfg.kind);
+    let model = SvmModel::from_ctx_alpha(ctx, &alpha);
     LaSvmResult {
         model,
         alpha,
@@ -285,7 +288,8 @@ mod tests {
         let (tr, te) = generate_split(&kddcup99_like(), 500, 200, 41);
         let kind = KernelKind::Rbf { gamma: 8.0 };
         let kern = NativeKernel::new(kind);
-        let res = train(&tr, &kern, &LaSvmConfig { kind, c: 4.0, ..Default::default() });
+        let ctx = KernelContext::new(&tr, &kern, 1 << 20);
+        let res = train(&ctx, &LaSvmConfig { kind, c: 4.0, ..Default::default() });
         let acc = res.model.accuracy(&te, &kern);
         assert!(acc > 0.93, "lasvm acc {acc}");
     }
@@ -295,8 +299,9 @@ mod tests {
         let (tr, _) = generate_split(&covtype_like(), 300, 80, 42);
         let kind = KernelKind::Rbf { gamma: 16.0 };
         let kern = NativeKernel::new(kind);
+        let ctx = KernelContext::new(&tr, &kern, 1 << 20);
         let cfg = LaSvmConfig { kind, c: 2.0, ..Default::default() };
-        let res = train(&tr, &kern, &cfg);
+        let res = train(&ctx, &cfg);
         assert!(res.alpha.iter().all(|&a| (0.0..=cfg.c).contains(&a)));
         assert!(res.process_steps > 0);
     }
@@ -306,14 +311,13 @@ mod tests {
         let (tr, _) = generate_split(&covtype_like(), 250, 60, 43);
         let kind = KernelKind::Rbf { gamma: 16.0 };
         let kern = NativeKernel::new(kind);
+        let ctx = KernelContext::new(&tr, &kern, 1 << 20);
         let one = train(
-            &tr,
-            &kern,
+            &ctx,
             &LaSvmConfig { kind, c: 2.0, passes: 1, max_finish_iter: 1, ..Default::default() },
         );
         let two = train(
-            &tr,
-            &kern,
+            &ctx,
             &LaSvmConfig { kind, c: 2.0, passes: 3, ..Default::default() },
         );
         let f1 = crate::metrics::objective_of(&tr, &kern, &one.alpha);

@@ -89,13 +89,21 @@ impl LlsvmModel {
 
     pub fn accuracy(&self, test: &Dataset) -> f64 {
         let norms = test.sq_norms();
-        let preds = self.predict_batch(&test.x, &norms);
+        self.accuracy_with_norms(test, &norms)
+    }
+
+    /// Accuracy with precomputed test norms (e.g. from a
+    /// [`crate::cache::KernelContext`] the harness already built).
+    pub fn accuracy_with_norms(&self, test: &Dataset, norms: &[f32]) -> f64 {
+        let preds = self.predict_batch(&test.x, norms);
         crate::metrics::accuracy(&preds, &test.y)
     }
 }
 
-/// Train LLSVM.
-pub fn train(ds: &Dataset, cfg: &LlsvmConfig) -> LlsvmModel {
+/// Train LLSVM. `norms` are the squared L2 norms of `ds`'s rows —
+/// precomputed once by the caller (a [`crate::cache::KernelContext`] when
+/// one exists for the dataset).
+pub fn train(ds: &Dataset, norms: &[f32], cfg: &LlsvmConfig) -> LlsvmModel {
     let t0 = Instant::now();
     let mut rng = Pcg64::new(cfg.seed);
     let dim = ds.dim;
@@ -133,8 +141,8 @@ pub fn train(ds: &Dataset, cfg: &LlsvmConfig) -> LlsvmModel {
     };
 
     // Linear SVM on the Nyström features.
-    let norms = ds.sq_norms();
-    let feats = model.features(&ds.x, &norms);
+    debug_assert_eq!(norms.len(), ds.len());
+    let feats = model.features(&ds.x, norms);
     let fds = Dataset::new(feats, ds.y.clone(), m, format!("{}-nystrom", ds.name));
     model.linear = train_linear(
         &fds,
@@ -158,7 +166,7 @@ mod tests {
             landmarks: 48,
             ..Default::default()
         };
-        let model = train(&tr, &cfg);
+        let model = train(&tr, &tr.sq_norms(), &cfg);
         let acc = model.accuracy(&te);
         assert!(acc > 0.70, "llsvm acc {acc}");
     }
@@ -167,8 +175,8 @@ mod tests {
     fn feature_inner_products_approximate_kernel() {
         let (tr, _) = generate_split(&covtype_like(), 300, 50, 52);
         let kind = KernelKind::Rbf { gamma: 4.0 };
-        let model = train(&tr, &LlsvmConfig { kind, landmarks: 100, ..Default::default() });
         let norms = tr.sq_norms();
+        let model = train(&tr, &norms, &LlsvmConfig { kind, landmarks: 100, ..Default::default() });
         let feats = model.features(&tr.x, &norms);
         let m = model.m;
         let kern = NativeKernel::new(kind);
@@ -189,8 +197,11 @@ mod tests {
     fn more_landmarks_no_worse() {
         let (tr, te) = generate_split(&covtype_like(), 600, 200, 53);
         let kind = KernelKind::Rbf { gamma: 16.0 };
-        let small = train(&tr, &LlsvmConfig { kind, c: 4.0, landmarks: 8, ..Default::default() });
-        let large = train(&tr, &LlsvmConfig { kind, c: 4.0, landmarks: 96, ..Default::default() });
+        let norms = tr.sq_norms();
+        let small =
+            train(&tr, &norms, &LlsvmConfig { kind, c: 4.0, landmarks: 8, ..Default::default() });
+        let large =
+            train(&tr, &norms, &LlsvmConfig { kind, c: 4.0, landmarks: 96, ..Default::default() });
         assert!(large.accuracy(&te) + 0.03 >= small.accuracy(&te));
     }
 }

@@ -72,17 +72,25 @@ impl SpsvmModel {
 
     pub fn accuracy(&self, test: &Dataset) -> f64 {
         let norms = test.sq_norms();
-        let preds = self.predict_batch(&test.x, &norms);
+        self.accuracy_with_norms(test, &norms)
+    }
+
+    /// Accuracy with precomputed test norms (e.g. from a
+    /// [`crate::cache::KernelContext`] the harness already built).
+    pub fn accuracy_with_norms(&self, test: &Dataset, norms: &[f32]) -> f64 {
+        let preds = self.predict_batch(&test.x, norms);
         crate::metrics::accuracy(&preds, &test.y)
     }
 }
 
-/// Train SpSVM by greedy basis growth.
-pub fn train(ds: &Dataset, cfg: &SpsvmConfig) -> SpsvmModel {
+/// Train SpSVM by greedy basis growth. `norms` are the squared L2 norms of
+/// `ds`'s rows — precomputed once by the caller (a
+/// [`crate::cache::KernelContext`] when one exists for the dataset).
+pub fn train(ds: &Dataset, norms: &[f32], cfg: &SpsvmConfig) -> SpsvmModel {
     let t0 = Instant::now();
     let n = ds.len();
     let dim = ds.dim;
-    let norms = ds.sq_norms();
+    debug_assert_eq!(norms.len(), n);
     let kern = NativeKernel::new(cfg.kind);
     let mut rng = Pcg64::new(cfg.seed);
 
@@ -111,7 +119,7 @@ pub fn train(ds: &Dataset, cfg: &SpsvmConfig) -> SpsvmModel {
                     ds.row(cand),
                     &norms[cand..cand + 1],
                     &ds.x,
-                    &norms,
+                    norms,
                     dim,
                     &mut kb_col,
                 );
@@ -151,7 +159,7 @@ pub fn train(ds: &Dataset, cfg: &SpsvmConfig) -> SpsvmModel {
             bn.push(norms[b]);
         }
         let mut feats = vec![0f32; n * bsz];
-        kern.block(&ds.x, &norms, &bx, &bn, dim, &mut feats);
+        kern.block(&ds.x, norms, &bx, &bn, dim, &mut feats);
         let fds = Dataset::new(feats.clone(), ds.y.clone(), bsz, "spsvm-feats");
         let lm = train_linear(
             &fds,
@@ -191,6 +199,7 @@ mod tests {
         let (tr, te) = generate_split(&covtype_like(), 700, 200, 81);
         let model = train(
             &tr,
+            &tr.sq_norms(),
             &SpsvmConfig {
                 kind: KernelKind::Rbf { gamma: 16.0 },
                 c: 4.0,
@@ -208,6 +217,7 @@ mod tests {
         let (tr, _) = generate_split(&covtype_like(), 120, 30, 82);
         let model = train(
             &tr,
+            &tr.sq_norms(),
             &SpsvmConfig {
                 kind: KernelKind::Rbf { gamma: 8.0 },
                 basis: 500, // larger than n

@@ -1,0 +1,366 @@
+//! The unified kernel-access layer: one [`KernelContext`] per dataset.
+//!
+//! A context owns everything every consumer of kernel values needs and used
+//! to recompute privately: the dataset reference, its precomputed squared
+//! row norms (previously recomputed via `sq_norms()` at 15+ call sites), the
+//! [`BlockKernel`] backend, and the shared [`ShardedRowCache`] of full
+//! kernel rows keyed by **global row index**.
+//!
+//! [`KernelView`] is a cheap subset view (local → global index map) used for
+//! cluster subproblems: a view routes its kernel-row requests through the
+//! shared cache, so rows computed while solving one cluster at level l are
+//! still resident for level l−1, the refine solve, and the final conquer
+//! solve — the cache analogue of the paper's α warm start. Views therefore
+//! compute *full* rows (against the whole dataset) rather than
+//! cluster-local rows: a subproblem pays up to k× more per cache miss, but
+//! each row is computed once per training run instead of once per phase,
+//! and the conquer solve starts with the SV rows already resident
+//! (`tests/dcsvm_e2e.rs::shared_context_prewarms_conquer_solve`).
+//!
+//! Batched dispatch lives here too ([`KernelContext::compute_rows`]): the
+//! PJRT backend pays a fixed per-call cost, so the solver's row prefetch,
+//! kernel-kmeans assignment and batch prediction all funnel multi-row
+//! requests into single backend calls.
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::kernel::{BlockKernel, KernelKind};
+
+use super::sharded::{CacheStats, ShardedRowCache};
+
+/// Default row-cache budget when a caller does not care (tests, one-shot
+/// convenience solves): 256 MB, the LIBSVM-style default.
+pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
+
+/// Default shard count: enough to keep `scope_map` cluster workers from
+/// serializing on fills without oversharding tiny budgets.
+const DEFAULT_SHARDS: usize = 16;
+
+/// Kernel-access context for one dataset: rows, norms, backend, shared
+/// row cache.
+pub struct KernelContext<'a> {
+    ds: &'a Dataset,
+    kernel: &'a dyn BlockKernel,
+    norms: Vec<f32>,
+    cache: ShardedRowCache,
+}
+
+impl<'a> KernelContext<'a> {
+    /// Build a context with the default shard count. Computes `sq_norms`
+    /// once — consumers read them via [`Self::norms`] / [`Self::norm`].
+    pub fn new(ds: &'a Dataset, kernel: &'a dyn BlockKernel, cache_bytes: usize) -> Self {
+        Self::with_shards(ds, kernel, cache_bytes, DEFAULT_SHARDS)
+    }
+
+    pub fn with_shards(
+        ds: &'a Dataset,
+        kernel: &'a dyn BlockKernel,
+        cache_bytes: usize,
+        shards: usize,
+    ) -> Self {
+        let norms = ds.sq_norms();
+        let cache = ShardedRowCache::new(ds.len(), cache_bytes, shards);
+        KernelContext { ds, kernel, norms, cache }
+    }
+
+    pub fn ds(&self) -> &'a Dataset {
+        self.ds
+    }
+
+    pub fn kernel(&self) -> &'a dyn BlockKernel {
+        self.kernel
+    }
+
+    pub fn kind(&self) -> KernelKind {
+        self.kernel.kind()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ds.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.ds.dim
+    }
+
+    /// Precomputed squared L2 norms of all rows.
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    #[inline]
+    pub fn norm(&self, i: usize) -> f32 {
+        self.norms[i]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> i8 {
+        self.ds.y[i]
+    }
+
+    /// The shared row cache (tests / diagnostics).
+    pub fn cache(&self) -> &ShardedRowCache {
+        &self.cache
+    }
+
+    pub fn is_row_cached(&self, i: usize) -> bool {
+        self.cache.contains(i)
+    }
+
+    /// Full kernel row K(x_i, ·) against the whole dataset, through the
+    /// shared cache (single-row backend dispatch on miss).
+    pub fn row(&self, i: usize) -> Arc<[f32]> {
+        self.cache.get_or_compute(i, |out| {
+            self.kernel.block(
+                self.ds.row(i),
+                &self.norms[i..i + 1],
+                &self.ds.x,
+                &self.norms,
+                self.ds.dim,
+                out,
+            );
+        })
+    }
+
+    /// Compute all currently uncached rows of `rows` in ONE backend
+    /// dispatch and insert them into the shared cache; returns how many
+    /// rows were computed. This is the batched prefetch path: on the PJRT
+    /// backend one call amortizes the fixed dispatch cost across the batch.
+    pub fn compute_rows(&self, rows: &[usize]) -> usize {
+        let missing: Vec<usize> = rows
+            .iter()
+            .copied()
+            .filter(|&p| !self.cache.contains(p))
+            .collect();
+        if missing.is_empty() {
+            return 0;
+        }
+        let n = self.ds.len();
+        let dim = self.ds.dim;
+        let mut xq = Vec::with_capacity(missing.len() * dim);
+        let mut qn = Vec::with_capacity(missing.len());
+        for &p in &missing {
+            xq.extend_from_slice(self.ds.row(p));
+            qn.push(self.norms[p]);
+        }
+        let mut block = vec![0f32; missing.len() * n];
+        self.kernel
+            .block(&xq, &qn, &self.ds.x, &self.norms, dim, &mut block);
+        for (t, &p) in missing.iter().enumerate() {
+            self.cache.insert_computed(p, &block[t * n..(t + 1) * n]);
+        }
+        missing.len()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+
+    /// Identity view over the whole dataset (refine-free solves, the final
+    /// conquer solve, the LIBSVM comparator).
+    pub fn view_full(&self) -> KernelView<'_> {
+        KernelView { ctx: self, map: None }
+    }
+
+    /// Subset view for a cluster subproblem: local index t ↦ global index
+    /// `members[t]`. Rows the subproblem computes land in the shared cache
+    /// under their global keys.
+    pub fn view(&self, members: &[usize]) -> KernelView<'_> {
+        debug_assert!(members.iter().all(|&i| i < self.ds.len()));
+        KernelView { ctx: self, map: Some(members.to_vec()) }
+    }
+}
+
+/// A subset (or identity) view of a [`KernelContext`]: the solver-facing
+/// handle for one subproblem. Kernel rows fetched through a view are always
+/// **full dataset-length rows** — index them with [`Self::global`] indices.
+pub struct KernelView<'a> {
+    ctx: &'a KernelContext<'a>,
+    /// local → global; `None` = identity (whole dataset).
+    map: Option<Vec<usize>>,
+}
+
+impl<'a> KernelView<'a> {
+    pub fn ctx(&self) -> &'a KernelContext<'a> {
+        self.ctx
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.map {
+            Some(m) => m.len(),
+            None => self.ctx.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this view is the identity over the whole dataset.
+    pub fn is_full(&self) -> bool {
+        self.map.is_none()
+    }
+
+    /// The local → global index map (`None` = identity).
+    pub fn map(&self) -> Option<&[usize]> {
+        self.map.as_deref()
+    }
+
+    #[inline]
+    pub fn global(&self, local: usize) -> usize {
+        match &self.map {
+            Some(m) => m[local],
+            None => local,
+        }
+    }
+
+    /// Feature row of local point `local`.
+    #[inline]
+    pub fn x_row(&self, local: usize) -> &'a [f32] {
+        self.ctx.ds.row(self.global(local))
+    }
+
+    #[inline]
+    pub fn norm(&self, local: usize) -> f32 {
+        self.ctx.norms[self.global(local)]
+    }
+
+    #[inline]
+    pub fn label(&self, local: usize) -> i8 {
+        self.ctx.ds.y[self.global(local)]
+    }
+
+    /// All local labels, gathered (hot-loop friendly).
+    pub fn labels(&self) -> Vec<i8> {
+        match &self.map {
+            Some(m) => m.iter().map(|&g| self.ctx.ds.y[g]).collect(),
+            None => self.ctx.ds.y.clone(),
+        }
+    }
+
+    pub fn is_row_cached(&self, local: usize) -> bool {
+        self.ctx.is_row_cached(self.global(local))
+    }
+
+    /// Full (dataset-length) kernel row of local point `local`, via the
+    /// shared cache. Index the result with **global** indices.
+    pub fn global_row(&self, local: usize) -> Arc<[f32]> {
+        self.ctx.row(self.global(local))
+    }
+
+    /// Batch-compute the uncached rows of the given local points in one
+    /// backend dispatch; returns how many were computed.
+    pub fn ensure_rows(&self, locals: &[usize]) -> usize {
+        match &self.map {
+            Some(m) => {
+                let globals: Vec<usize> = locals.iter().map(|&l| m[l]).collect();
+                self.ctx.compute_rows(&globals)
+            }
+            None => self.ctx.compute_rows(locals),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate};
+    use crate::kernel::native::NativeKernel;
+    use crate::util::prng::Pcg64;
+
+    fn setup(n: usize) -> (Dataset, NativeKernel) {
+        let mut rng = Pcg64::new(3);
+        let ds = generate(&covtype_like(), n, &mut rng);
+        let k = NativeKernel::new(KernelKind::Rbf { gamma: 8.0 });
+        (ds, k)
+    }
+
+    #[test]
+    fn norms_match_dataset() {
+        let (ds, k) = setup(40);
+        let ctx = KernelContext::new(&ds, &k, 1 << 20);
+        assert_eq!(ctx.norms(), &ds.sq_norms()[..]);
+        assert_eq!(ctx.len(), 40);
+        assert_eq!(ctx.dim(), ds.dim);
+    }
+
+    #[test]
+    fn row_matches_direct_kernel_eval() {
+        let (ds, k) = setup(30);
+        let ctx = KernelContext::new(&ds, &k, 1 << 20);
+        let row = ctx.row(7);
+        assert_eq!(row.len(), 30);
+        for j in 0..30 {
+            let want = ctx.kind().eval(ds.row(7), ds.row(j));
+            assert!((row[j] - want).abs() < 1e-5, "row[{j}]: {} vs {want}", row[j]);
+        }
+        // Second fetch is a hit.
+        let s0 = ctx.stats();
+        ctx.row(7);
+        let d = ctx.stats().since(&s0);
+        assert_eq!((d.hits, d.misses), (1, 0));
+    }
+
+    #[test]
+    fn compute_rows_batches_and_skips_resident() {
+        let (ds, k) = setup(25);
+        let ctx = KernelContext::new(&ds, &k, 1 << 20);
+        assert_eq!(ctx.compute_rows(&[1, 3, 5]), 3);
+        assert_eq!(ctx.compute_rows(&[3, 5, 7]), 1); // only 7 is new
+        for &i in &[1, 3, 5, 7] {
+            assert!(ctx.is_row_cached(i));
+        }
+        // Batched rows agree with the single-row path.
+        let via_batch = ctx.row(3);
+        let fresh_ctx = KernelContext::new(&ds, &k, 1 << 20);
+        let direct = fresh_ctx.row(3);
+        assert_eq!(&*via_batch, &*direct);
+    }
+
+    #[test]
+    fn subset_view_maps_local_to_global() {
+        let (ds, k) = setup(20);
+        let ctx = KernelContext::new(&ds, &k, 1 << 20);
+        let members = vec![4usize, 9, 17];
+        let view = ctx.view(&members);
+        assert_eq!(view.len(), 3);
+        assert!(!view.is_full());
+        for (local, &g) in members.iter().enumerate() {
+            assert_eq!(view.global(local), g);
+            assert_eq!(view.x_row(local), ds.row(g));
+            assert_eq!(view.norm(local), ctx.norm(g));
+            assert_eq!(view.label(local), ds.y[g]);
+        }
+        assert_eq!(view.labels(), members.iter().map(|&g| ds.y[g]).collect::<Vec<_>>());
+        // A row fetched through the view is cached under the GLOBAL key —
+        // visible to the full view afterwards.
+        let row = view.global_row(1); // global 9
+        assert!(ctx.is_row_cached(9));
+        let full = ctx.view_full();
+        let again = full.global_row(9);
+        assert_eq!(&*row, &*again);
+        let s = ctx.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn view_ensure_rows_uses_shared_cache() {
+        let (ds, k) = setup(18);
+        let ctx = KernelContext::new(&ds, &k, 1 << 20);
+        let view = ctx.view(&[2, 6, 11]);
+        assert_eq!(view.ensure_rows(&[0, 2]), 2); // globals 2 and 11
+        assert!(ctx.is_row_cached(2));
+        assert!(ctx.is_row_cached(11));
+        assert!(!ctx.is_row_cached(6));
+        assert_eq!(view.ensure_rows(&[0, 1, 2]), 1); // only global 6 is new
+    }
+}

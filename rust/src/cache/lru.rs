@@ -1,18 +1,23 @@
-//! Byte-budgeted LRU cache of kernel rows.
+//! Byte-budgeted LRU cache of kernel rows — the single-shard building block
+//! of [`super::sharded::ShardedRowCache`].
 //!
-//! Keys are row indices of the *active problem* (a cluster subproblem or the
-//! whole dataset); values are `Box<[f32]>` rows of length `row_len`. The LRU
-//! order lives in an intrusive doubly-linked list over slot indices so
-//! touch/evict are O(1), and `get_or_compute` exposes the fill path the
-//! solver uses. Hit/miss counters feed EXPERIMENTS.md §Perf.
+//! Keys are *global* row indices of the dataset owned by a
+//! [`super::KernelContext`]; values are `Arc<[f32]>` rows of length
+//! `row_len`. Rows are reference-counted so a caller can keep using a row
+//! after it has been evicted (and so the sharded wrapper can hand rows out
+//! across its shard lock). The LRU order lives in an intrusive
+//! doubly-linked list over slot indices so touch/evict are O(1), and
+//! `get_or_compute` exposes the fill path the solver uses. Hit/miss
+//! counters feed EXPERIMENTS.md §Perf and the harness `Outcome.note`.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 const NIL: usize = usize::MAX;
 
 struct Slot {
     key: usize,
-    row: Box<[f32]>,
+    row: Arc<[f32]>,
     prev: usize,
     next: usize,
 }
@@ -74,15 +79,48 @@ impl RowCache {
     where
         F: FnOnce(&mut [f32]),
     {
+        let slot = self.slot_or_compute(key, fill);
+        &self.slots[slot].row
+    }
+
+    /// Like [`Self::get_or_compute`] but returns a shared handle that stays
+    /// valid after eviction — the form the concurrent sharded cache needs.
+    pub fn get_arc_or_compute<F>(&mut self, key: usize, fill: F) -> Arc<[f32]>
+    where
+        F: FnOnce(&mut [f32]),
+    {
+        let slot = self.slot_or_compute(key, fill);
+        Arc::clone(&self.slots[slot].row)
+    }
+
+    fn slot_or_compute<F>(&mut self, key: usize, fill: F) -> usize
+    where
+        F: FnOnce(&mut [f32]),
+    {
         if let Some(&slot) = self.map.get(&key) {
             self.hits += 1;
             self.touch(slot);
-            return &self.slots[slot].row;
+            return slot;
         }
         self.misses += 1;
-        let slot = self.insert_slot(key);
-        fill(&mut self.slots[slot].row);
-        &self.slots[slot].row
+        let mut buf = vec![0f32; self.row_len];
+        fill(&mut buf);
+        self.insert_slot(key, buf.into())
+    }
+
+    /// Insert an externally computed row (batched fill path). Counts a miss
+    /// when the key is new — the caller did compute the row — and a hit
+    /// (plus an LRU touch) when the key is already resident, in which case
+    /// the existing row is kept.
+    pub fn insert_arc(&mut self, key: usize, row: Arc<[f32]>) {
+        debug_assert_eq!(row.len(), self.row_len);
+        if let Some(&slot) = self.map.get(&key) {
+            self.hits += 1;
+            self.touch(slot);
+            return;
+        }
+        self.misses += 1;
+        self.insert_slot(key, row);
     }
 
     /// Peek without changing LRU order or counters (used by tests).
@@ -90,12 +128,11 @@ impl RowCache {
         self.map.get(&key).map(|&s| &*self.slots[s].row)
     }
 
-    /// Drop all entries, keep allocation.
+    /// Drop all entries, keep slot allocation.
     pub fn clear(&mut self) {
         self.map.clear();
-        for i in 0..self.slots.len() {
-            self.free.push(i);
-        }
+        self.free.clear();
+        self.free.extend(0..self.slots.len());
         self.head = NIL;
         self.tail = NIL;
     }
@@ -145,7 +182,7 @@ impl RowCache {
         self.push_front(slot);
     }
 
-    fn insert_slot(&mut self, key: usize) -> usize {
+    fn insert_slot(&mut self, key: usize, row: Arc<[f32]>) -> usize {
         let slot = if self.map.len() >= self.capacity_rows {
             // Evict LRU.
             let victim = self.tail;
@@ -153,17 +190,14 @@ impl RowCache {
             self.detach(victim);
             self.map.remove(&self.slots[victim].key);
             self.slots[victim].key = key;
+            self.slots[victim].row = row;
             victim
         } else if let Some(s) = self.free.pop() {
             self.slots[s].key = key;
+            self.slots[s].row = row;
             s
         } else {
-            self.slots.push(Slot {
-                key,
-                row: vec![0f32; self.row_len].into_boxed_slice(),
-                prev: NIL,
-                next: NIL,
-            });
+            self.slots.push(Slot { key, row, prev: NIL, next: NIL });
             self.slots.len() - 1
         };
         self.push_front(slot);
@@ -221,6 +255,26 @@ mod tests {
         let mut recomputed = false;
         c.get_or_compute(1, |_| recomputed = true);
         assert!(recomputed);
+    }
+
+    #[test]
+    fn arc_rows_survive_eviction() {
+        let mut c = RowCache::new(1, 4); // capacity 1 row
+        let first = c.get_arc_or_compute(10, |r| r[0] = 10.0);
+        c.get_arc_or_compute(11, |r| r[0] = 11.0); // evicts key 10
+        assert!(!c.contains(10));
+        assert_eq!(first[0], 10.0); // handle still valid
+    }
+
+    #[test]
+    fn insert_arc_counts_and_keeps_existing() {
+        let mut c = RowCache::new(1, 1024);
+        c.insert_arc(5, vec![5.0f32].into());
+        assert_eq!((c.hits, c.misses), (0, 1));
+        // Re-insert of a resident key: hit, existing row kept.
+        c.insert_arc(5, vec![99.0f32].into());
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(c.peek(5).unwrap(), &[5.0]);
     }
 
     /// Property: the cache behaves exactly like a reference implementation

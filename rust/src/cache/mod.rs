@@ -1,12 +1,37 @@
-//! LIBSVM-style LRU kernel-row cache.
+//! Kernel-access layer: context, views, and the shared kernel-row cache.
 //!
 //! The decomposition solver touches kernel rows in a highly skewed pattern
 //! (free SVs get hit every iteration; shrunk variables never), so a
 //! byte-budgeted LRU over rows is the classic design (Chang & Lin 2011,
-//! §4.2). DC-SVM's warm start makes this even more effective: with the SV
-//! set mostly identified, the working set — and therefore the cached rows —
-//! stabilizes early (paper Figure 2).
+//! §4.2). DC-SVM makes sharing that cache *across* solves the real win:
+//! the divide phase already computes the rows of (most of) the final SV set
+//! (paper Figure 2 — the SV set is identified early), so a per-solve
+//! private cache throws away exactly the rows the refine and conquer solves
+//! are about to ask for.
+//!
+//! Layering, bottom-up:
+//!
+//! - [`lru::RowCache`] — single-threaded byte-budgeted LRU over
+//!   reference-counted rows; the per-shard building block.
+//! - [`sharded::ShardedRowCache`] — thread-safe sharded wrapper, keyed by
+//!   **global row index**, budget split across independently locked shards;
+//!   concurrent cluster subproblems from `scope_map` fill it in parallel.
+//! - [`context::KernelContext`] — one per dataset: owns the precomputed
+//!   squared norms, the [`crate::kernel::BlockKernel`] backend and the
+//!   shared cache; all batched dispatches (row prefetch, assignment,
+//!   prediction) funnel through it.
+//! - [`context::KernelView`] — cheap local→global subset view handed to
+//!   cluster subproblem solvers; rows computed through a view survive into
+//!   later phases (the cache analogue of the α warm start).
+//!
+//! `dcsvm::train` builds exactly one context per training run and threads
+//! views through levels → refine → final; the harness builds contexts for
+//! its train/test datasets so norms are computed once per dataset.
 
+pub mod context;
 pub mod lru;
+pub mod sharded;
 
+pub use context::{KernelContext, KernelView, DEFAULT_CACHE_BYTES};
 pub use lru::RowCache;
+pub use sharded::{CacheStats, ShardedRowCache};

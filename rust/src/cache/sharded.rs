@@ -1,0 +1,276 @@
+//! Thread-safe sharded byte-budgeted LRU kernel-row cache.
+//!
+//! One [`super::KernelContext`] owns one of these for its dataset; keys are
+//! **global row indices**, values are full kernel rows (`Arc<[f32]>` of
+//! length n). The byte budget is split evenly across shards, each an
+//! independently locked [`RowCache`], and a key maps to shard `key % k` —
+//! global row indices are dense integers, so adjacent keys (which cluster
+//! subproblems touch together) spread across shards and concurrent
+//! subproblem solves rarely contend.
+//!
+//! Concurrency contract:
+//! - `get_or_compute` holds the owning shard's lock across the fill, so a
+//!   given key is computed at most once; concurrent requests for the same
+//!   key serialize and all but the first hit.
+//! - Returned rows are `Arc` handles: they stay valid after eviction, so no
+//!   lock is held while a caller consumes a row.
+//! - Counters are maintained per shard under its lock; `stats()` aggregates,
+//!   and `hits + misses` exactly equals the number of
+//!   `get_or_compute`/`insert_computed` calls (property-tested below under
+//!   concurrent access from `scope_map` workers).
+
+use std::sync::{Arc, Mutex};
+
+use super::lru::RowCache;
+
+/// Aggregated hit/miss counters of a sharded cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+
+    /// Counter deltas since an earlier snapshot (per-solve attribution).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+        }
+    }
+}
+
+/// Sharded thread-safe LRU row cache with a global byte budget.
+pub struct ShardedRowCache {
+    shards: Vec<Mutex<RowCache>>,
+    row_len: usize,
+    /// Total row capacity across shards, fixed at construction (hot-path
+    /// readers like the solver's prefetch cap read it lock-free).
+    capacity_rows: usize,
+}
+
+impl ShardedRowCache {
+    /// `budget_bytes` is the total f32 payload budget, split evenly across
+    /// `shards`; each shard always admits at least one row.
+    pub fn new(row_len: usize, budget_bytes: usize, shards: usize) -> Self {
+        let shards_n = shards.max(1);
+        let per_shard = budget_bytes / shards_n;
+        let shards: Vec<Mutex<RowCache>> = (0..shards_n)
+            .map(|_| Mutex::new(RowCache::new(row_len, per_shard)))
+            .collect();
+        let capacity_rows = shards
+            .iter()
+            .map(|s| s.lock().unwrap().capacity_rows())
+            .sum();
+        ShardedRowCache { shards, row_len, capacity_rows }
+    }
+
+    #[inline]
+    fn shard(&self, key: usize) -> &Mutex<RowCache> {
+        &self.shards[key % self.shards.len()]
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// Total row capacity across shards (the byte budget in rows, with the
+    /// one-row-per-shard floor). Constant after construction; lock-free.
+    pub fn capacity_rows(&self) -> usize {
+        self.capacity_rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Residency probe; does not touch LRU order or counters.
+    pub fn contains(&self, key: usize) -> bool {
+        self.shard(key).lock().unwrap().contains(key)
+    }
+
+    /// Fetch a row, computing it under the shard lock on miss. Exactly one
+    /// hit or miss is recorded per call.
+    pub fn get_or_compute<F>(&self, key: usize, fill: F) -> Arc<[f32]>
+    where
+        F: FnOnce(&mut [f32]),
+    {
+        self.shard(key).lock().unwrap().get_arc_or_compute(key, fill)
+    }
+
+    /// Insert a row computed outside the lock (batched dispatch path).
+    /// Records a miss when the key is new, a hit when already resident (the
+    /// resident row is kept — row contents are a pure function of the key).
+    pub fn insert_computed(&self, key: usize, row: &[f32]) {
+        self.shard(key).lock().unwrap().insert_arc(key, Arc::from(row));
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for shard in &self.shards {
+            let c = shard.lock().unwrap();
+            s.hits += c.hits;
+            s.misses += c.misses;
+        }
+        s
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        self.stats().hit_rate()
+    }
+
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Pcg64;
+    use crate::util::proptest::check;
+    use crate::util::threadpool::scope_map;
+
+    #[test]
+    fn basic_get_insert_and_budget() {
+        let c = ShardedRowCache::new(2, 4 * 2 * 4, 2); // 4 rows total, 2 shards
+        assert_eq!(c.capacity_rows(), 4);
+        for k in 0..8 {
+            let row = c.get_or_compute(k, |r| r.fill(k as f32));
+            assert_eq!(&*row, &[k as f32, k as f32]);
+        }
+        assert!(c.len() <= c.capacity_rows());
+        let s = c.stats();
+        assert_eq!(s.misses, 8); // 8 distinct keys, all cold
+        assert_eq!(s.hits, 0);
+        // Re-fetch of the most recent key per shard must hit.
+        c.get_or_compute(6, |_| panic!("6 must be resident"));
+        c.get_or_compute(7, |_| panic!("7 must be resident"));
+        assert_eq!(c.stats().hits, 2);
+    }
+
+    #[test]
+    fn insert_computed_then_get_hits() {
+        let c = ShardedRowCache::new(3, 1 << 20, 4);
+        c.insert_computed(11, &[1.0, 2.0, 3.0]);
+        assert!(c.contains(11));
+        let row = c.get_or_compute(11, |_| panic!("resident"));
+        assert_eq!(&*row, &[1.0, 2.0, 3.0]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn stats_since_snapshot() {
+        let c = ShardedRowCache::new(1, 1 << 10, 2);
+        c.get_or_compute(0, |r| r[0] = 0.0);
+        let snap = c.stats();
+        c.get_or_compute(0, |_| panic!("resident"));
+        c.get_or_compute(1, |r| r[0] = 1.0);
+        let d = c.stats().since(&snap);
+        assert_eq!((d.hits, d.misses), (1, 1));
+    }
+
+    /// Property (ISSUE satellite): under concurrent `get_or_compute` from
+    /// `scope_map` workers, the byte budget holds, every returned row holds
+    /// the value its key demands, and hits + misses equals the exact number
+    /// of calls.
+    #[test]
+    fn prop_concurrent_budget_and_counters() {
+        check("sharded-concurrent", 10, |rng: &mut Pcg64| {
+            let row_len = 1 + rng.below(8);
+            let cap_rows = 1 + rng.below(24);
+            let shards = 1 + rng.below(8);
+            let threads = 2 + rng.below(6);
+            let keys = 1 + rng.below(48);
+            let ops_per_worker = 200usize;
+            let cache = ShardedRowCache::new(row_len, cap_rows * row_len * 4, shards);
+
+            let seeds: Vec<u64> = (0..threads).map(|_| rng.next_u64()).collect();
+            let cache_ref = &cache;
+            let ok_counts: Vec<usize> = scope_map(threads, seeds, |_, seed| {
+                let mut r = Pcg64::new(seed);
+                let mut ok = 0usize;
+                for _ in 0..ops_per_worker {
+                    let k = r.below(keys);
+                    let row = cache_ref.get_or_compute(k, |buf| buf.fill(k as f32));
+                    if row.len() == row_len && row.iter().all(|&v| v == k as f32) {
+                        ok += 1;
+                    }
+                }
+                ok
+            });
+
+            let total_ops = (threads * ops_per_worker) as u64;
+            prop_assert!(
+                ok_counts.iter().sum::<usize>() as u64 == total_ops,
+                "some rows held wrong contents"
+            );
+            let s = cache.stats();
+            prop_assert!(
+                s.hits + s.misses == total_ops,
+                "hits {} + misses {} != ops {total_ops}",
+                s.hits,
+                s.misses
+            );
+            prop_assert!(
+                cache.len() <= cache.capacity_rows(),
+                "budget violated: {} rows > capacity {}",
+                cache.len(),
+                cache.capacity_rows()
+            );
+            // Every resident row must have been computed at least once.
+            prop_assert!(
+                s.misses >= cache.len() as u64,
+                "misses {} < resident rows {}",
+                s.misses,
+                cache.len()
+            );
+            Ok(())
+        });
+    }
+
+    /// Same-key contention: concurrent workers hammering ONE key must
+    /// compute it exactly once (fill serializes under the shard lock).
+    #[test]
+    fn concurrent_same_key_computes_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cache = ShardedRowCache::new(4, 1 << 20, 8);
+        let fills = AtomicUsize::new(0);
+        let (cache_ref, fills_ref) = (&cache, &fills);
+        scope_map(8, (0..64).collect::<Vec<u32>>(), |_, _| {
+            let row = cache_ref.get_or_compute(3, |buf| {
+                fills_ref.fetch_add(1, Ordering::Relaxed);
+                buf.fill(3.0);
+            });
+            assert_eq!(&*row, &[3.0; 4]);
+        });
+        assert_eq!(fills.load(Ordering::Relaxed), 1);
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 63);
+    }
+}

@@ -89,8 +89,12 @@ pub struct RunConfig {
     pub levels: usize,
     pub k_base: usize,
     pub sample_m: usize,
+    /// Byte budget (in MB) of the per-run shared kernel-row cache
+    /// ([`crate::cache::KernelContext`]).
     pub cache_mb: usize,
     pub seed: u64,
+    /// Worker threads for independent subproblems (`--threads`; default:
+    /// `DCSVM_THREADS` env var or available parallelism).
     pub threads: usize,
     /// "native" | "pjrt" | "auto"
     pub backend: String,
@@ -116,7 +120,7 @@ impl Default for RunConfig {
             sample_m: 256,
             cache_mb: 256,
             seed: 0,
-            threads: 1,
+            threads: crate::util::threadpool::default_threads(),
             backend: "auto".into(),
             budget: 64,
             save_model: None,
@@ -179,7 +183,6 @@ impl RunConfig {
             c: self.c,
             eps: self.eps,
             max_iter: 0,
-            cache_bytes: self.cache_mb << 20,
             shrinking: true,
             report_every: 2000,
             row_batch: 0,
@@ -272,6 +275,16 @@ mod tests {
         assert_eq!(back.gamma, 4.0);
         assert_eq!(back.dataset, "webspam-like");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn threads_default_and_flag_flow_end_to_end() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.threads, crate::util::threadpool::default_threads());
+        let mut cfg = RunConfig::default();
+        cfg.apply("threads", "3").unwrap();
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.dcsvm_config().unwrap().threads, 3);
     }
 
     #[test]

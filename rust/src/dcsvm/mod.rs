@@ -12,18 +12,25 @@
 //! final:  solve the whole problem warm-started from the refined ᾱ
 //! ```
 //!
+//! The whole run shares **one** [`KernelContext`]: cluster subproblems are
+//! solved through [`KernelContext::view`] subset views, so kernel rows they
+//! compute stay resident (keyed by global row index) for later levels, the
+//! refine solve and the final conquer solve — the cache analogue of the α
+//! warm start. `final_rows_computed` in the result quantifies the effect.
+//!
 //! Early stopping after any level yields the early-prediction model
 //! (eq. 11): the level's router + per-cluster local models.
 
 use std::time::Instant;
 
+use crate::cache::KernelContext;
 use crate::data::Dataset;
 use crate::kernel::{BlockKernel, KernelKind};
 use crate::kmeans::{two_step_partition, Partition, Router};
 use crate::predict::{EarlyModel, SvmModel};
 use crate::solver::{SmoConfig, SmoSolver};
 use crate::util::prng::Pcg64;
-use crate::util::threadpool::scope_map;
+use crate::util::threadpool::{default_threads, scope_map};
 use crate::util::timer::Series;
 
 /// Configuration for the multilevel driver.
@@ -40,8 +47,8 @@ pub struct DcSvmConfig {
     /// Subproblem / final stopping tolerances.
     pub eps_sub: f64,
     pub eps_final: f64,
-    /// Kernel cache budget for the *final* solve; subproblems get a
-    /// proportional share.
+    /// Byte budget of the run's shared kernel-row cache (one
+    /// [`KernelContext`] serves the divide, refine and final solves).
     pub cache_bytes: usize,
     /// Sample upper-level kmeans from the current SV set (Algorithm 1).
     pub adaptive: bool,
@@ -54,9 +61,10 @@ pub struct DcSvmConfig {
     pub max_iter_sub: usize,
     pub max_iter_final: usize,
     pub seed: u64,
-    /// Worker threads for independent cluster subproblems.
+    /// Worker threads for independent cluster subproblems
+    /// (default: [`default_threads`]).
     pub threads: usize,
-    /// Keep per-level ᾱ snapshots (Figure 2 analysis).
+    /// Keep per-level ᾱ snapshots (Figure 2 analysis) and the pre-final ᾱ.
     pub keep_level_alphas: bool,
 }
 
@@ -77,9 +85,23 @@ impl Default for DcSvmConfig {
             max_iter_sub: 0,
             max_iter_final: 0,
             seed: 0,
-            threads: 1,
+            threads: default_threads(),
             keep_level_alphas: false,
         }
+    }
+}
+
+/// The one place all three solver configurations (cluster subproblem,
+/// refine, final) are built — they differ only in tolerance, iteration cap
+/// and progress cadence.
+fn solver_cfg(cfg: &DcSvmConfig, eps: f64, max_iter: usize, report_every: usize) -> SmoConfig {
+    SmoConfig {
+        c: cfg.c,
+        eps,
+        max_iter,
+        shrinking: true,
+        report_every,
+        row_batch: 0,
     }
 }
 
@@ -110,6 +132,16 @@ pub struct DcSvmResult {
     pub final_s: f64,
     pub total_s: f64,
     pub final_iterations: usize,
+    /// Kernel rows the final (conquer) solve had to compute — strictly
+    /// lower than a cold-cache solve because the divide/refine phases left
+    /// their rows in the shared context cache.
+    pub final_rows_computed: u64,
+    /// Shared-cache counters over the whole run (note/bench reporting).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// ᾱ as handed to the final solve (kept with `keep_level_alphas`;
+    /// lets tests/benches replay the conquer solve on a cold cache).
+    pub pre_final_alpha: Option<Vec<f64>>,
     /// Early-prediction model built from the deepest solved level.
     pub early_model: Option<EarlyModel>,
     /// (elapsed, objective) trace of the final whole-problem solve,
@@ -122,14 +154,26 @@ impl DcSvmResult {
     pub fn sv_count(&self) -> usize {
         self.alpha.iter().filter(|&&a| a > 0.0).count()
     }
+
+    /// Hit rate of the run's shared kernel-row cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
 }
 
-/// Train DC-SVM.
+/// Train DC-SVM. Builds exactly one [`KernelContext`] for the run and
+/// threads views through levels → refine → final.
 pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvmResult {
     assert_eq!(kernel.kind(), cfg.kind, "kernel backend kind mismatch");
     let n = ds.len();
     let t0 = Instant::now();
     let mut rng = Pcg64::new(cfg.seed);
+    let ctx = KernelContext::new(ds, kernel, cfg.cache_bytes);
 
     let mut alpha = vec![0f64; n];
     let mut levels = Vec::new();
@@ -148,40 +192,24 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         } else {
             None
         };
-        let (router, part) = two_step_partition(
-            ds,
-            k,
-            cfg.sample_m,
-            sv_pool.as_deref(),
-            kernel,
-            &mut rng,
-        );
+        let (router, part) =
+            two_step_partition(&ctx, k, cfg.sample_m, sv_pool.as_deref(), &mut rng);
         let clustering_s = tl.elapsed().as_secs_f64();
 
-        // Solve the k cluster subproblems independently (warm-started).
+        // Solve the k cluster subproblems independently (warm-started)
+        // through subset views of the shared context: no dataset copies,
+        // and computed rows survive into later phases.
         let tt = Instant::now();
-        // Subproblems run sequentially per worker thread and free their
-        // cache on completion, so each gets the budget divided by the
-        // number of *concurrent* solves, not by k.
-        let sub_cache = (cfg.cache_bytes / cfg.threads.max(1)).max(1 << 20);
+        let scfg = solver_cfg(cfg, cfg.eps_sub, cfg.max_iter_sub, 0);
         let jobs: Vec<Vec<usize>> =
             part.members.iter().filter(|m| !m.is_empty()).cloned().collect();
         let alpha_ref = &alpha;
+        let ctx_ref = &ctx;
         let results: Vec<(Vec<usize>, Vec<f64>, usize)> =
             scope_map(cfg.threads, jobs, |_, members| {
-                let sub = ds.subset(&members, "cluster");
                 let a0: Vec<f64> = members.iter().map(|&i| alpha_ref[i]).collect();
-                let scfg = SmoConfig {
-                    c: cfg.c,
-                    eps: cfg.eps_sub,
-                    max_iter: cfg.max_iter_sub,
-                    cache_bytes: sub_cache,
-                    shrinking: true,
-                    report_every: 0,
-            row_batch: 0,
-                };
                 let warm = a0.iter().any(|&a| a != 0.0);
-                let res = SmoSolver::new(&sub, kernel, scfg).solve_warm(
+                let res = SmoSolver::new(ctx_ref.view(&members), scfg.clone()).solve_warm(
                     if warm { Some(&a0) } else { None },
                     &mut |_| {},
                 );
@@ -218,21 +246,19 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         }
     }
 
-    // Early model from the deepest solved level's partition.
+    // Early model from the deepest solved level's partition (SV rows and
+    // norms gathered straight from the context — no subset copies).
     let early_model = last_partition.map(|(router, part)| {
         let locals: Vec<SvmModel> = part
             .members
             .iter()
-            .map(|members| {
-                let sub = ds.subset(members, "c");
-                let a: Vec<f64> = members.iter().map(|&i| alpha[i]).collect();
-                SvmModel::from_alpha(&sub, &a, cfg.kind)
-            })
+            .map(|members| SvmModel::from_alpha_subset(&ctx, members, &alpha))
             .collect();
         EarlyModel::new(router, locals)
     });
 
     if early_stopped {
+        let cs = ctx.stats();
         return DcSvmResult {
             alpha,
             objective: None,
@@ -241,6 +267,10 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
             final_s: 0.0,
             total_s: t0.elapsed().as_secs_f64(),
             final_iterations: 0,
+            final_rows_computed: 0,
+            cache_hits: cs.hits,
+            cache_misses: cs.misses,
+            pre_final_alpha: None,
             early_model,
             trace: Series::default(),
             early_stopped: true,
@@ -253,19 +283,12 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         let tr = Instant::now();
         let sv_idx: Vec<usize> = (0..n).filter(|&i| alpha[i] > 0.0).collect();
         if sv_idx.len() >= 2 && sv_idx.len() < n {
-            let sub = ds.subset(&sv_idx, "refine");
             let a0: Vec<f64> = sv_idx.iter().map(|&i| alpha[i]).collect();
-            let scfg = SmoConfig {
-                c: cfg.c,
-                eps: cfg.eps_sub,
-                max_iter: cfg.max_iter_sub,
-                cache_bytes: cfg.cache_bytes,
-                shrinking: true,
-                report_every: 0,
-            row_batch: 0,
-            };
-            let res = SmoSolver::new(&sub, kernel, scfg)
-                .solve_warm(Some(&a0), &mut |_| {});
+            let res = SmoSolver::new(
+                ctx.view(&sv_idx),
+                solver_cfg(cfg, cfg.eps_sub, cfg.max_iter_sub, 0),
+            )
+            .solve_warm(Some(&a0), &mut |_| {});
             for (t, &i) in sv_idx.iter().enumerate() {
                 alpha[i] = res.alpha[t];
             }
@@ -277,20 +300,17 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
     let offset = t0.elapsed().as_secs_f64();
     let tf = Instant::now();
     let mut trace = Series::default();
-    let scfg = SmoConfig {
-        c: cfg.c,
-        eps: cfg.eps_final,
-        max_iter: cfg.max_iter_final,
-        cache_bytes: cfg.cache_bytes,
-        shrinking: true,
-        report_every: 2000,
-        row_batch: 0,
-    };
-    let res = SmoSolver::new(ds, kernel, scfg).solve_warm(Some(&alpha), &mut |p| {
+    let pre_final_alpha = cfg.keep_level_alphas.then(|| alpha.clone());
+    let res = SmoSolver::new(
+        ctx.view_full(),
+        solver_cfg(cfg, cfg.eps_final, cfg.max_iter_final, 2000),
+    )
+    .solve_warm(Some(&alpha), &mut |p| {
         trace.push(offset + p.elapsed_s, p.objective);
     });
     let final_s = tf.elapsed().as_secs_f64();
 
+    let cs = ctx.stats();
     DcSvmResult {
         alpha: res.alpha,
         objective: Some(res.objective),
@@ -299,6 +319,10 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         final_s,
         total_s: t0.elapsed().as_secs_f64(),
         final_iterations: res.iterations,
+        final_rows_computed: res.rows_computed,
+        cache_hits: cs.hits,
+        cache_misses: cs.misses,
+        pre_final_alpha,
         early_model,
         trace,
         early_stopped: false,
@@ -343,6 +367,8 @@ mod tests {
         assert!(rel < 1e-3, "dc {} direct {}", dc.objective.unwrap(), direct.objective);
         assert!(!dc.early_stopped);
         assert_eq!(dc.levels.len(), 2);
+        // The shared context saw cross-phase reuse.
+        assert!(dc.cache_hits > 0, "no cache hits across phases");
     }
 
     #[test]
@@ -379,6 +405,7 @@ mod tests {
         let (tr, _, kern, mut cfg) = setup(300);
         cfg.stop_after_level = Some(1);
         cfg.keep_level_alphas = true;
+        cfg.threads = 1;
         let a = train(&tr, &kern, &cfg);
         cfg.threads = 4;
         let b = train(&tr, &kern, &cfg);
@@ -399,5 +426,6 @@ mod tests {
             assert!(ls.alpha.is_some());
             assert!(ls.sv_count > 0);
         }
+        assert!(dc.pre_final_alpha.is_some());
     }
 }

@@ -1,11 +1,18 @@
 //! Run harness: one entry point that trains any [`Algo`] on a dataset pair
 //! and reports the paper's metrics (train time, test accuracy, objective,
 //! SV count). Used by the CLI, the examples, and every bench.
+//!
+//! The harness builds [`KernelContext`]s for the datasets it touches: one
+//! per training set where the algorithm consumes kernel rows/norms, and one
+//! per test set so prediction paths read precomputed norms and dispatch
+//! batched kernel blocks through the same backend.
+
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
-use once_cell::sync::OnceCell;
 
 use crate::baselines::{cascade, fastfood, lasvm, llsvm, ltpu, spsvm};
+use crate::cache::KernelContext;
 use crate::config::{Algo, RunConfig};
 use crate::data::Dataset;
 use crate::dcsvm;
@@ -14,7 +21,7 @@ use crate::predict::SvmModel;
 use crate::runtime::{Engine, PjrtKernel};
 use crate::solver::SmoSolver;
 
-static ENGINE: OnceCell<Option<Engine>> = OnceCell::new();
+static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
 
 /// The process-wide PJRT engine (compiled once), or None when artifacts are
 /// not built / not loadable.
@@ -56,35 +63,56 @@ pub struct Outcome {
 pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
     let kind = cfg.kernel_kind()?;
     let kernel = make_kernel(kind, &cfg.backend, tr.dim)?;
+    let cache_bytes = cfg.cache_mb << 20;
+    // Test-set context: precomputed norms + batched dispatch for the
+    // kernel-model prediction paths (the row cache is unused on the predict
+    // side, so the budget is nominal). The random-feature baselines
+    // (fastfood/ltpu) never consume test norms, so skip it for them.
+    let te_ctx_opt = match cfg.algo {
+        Algo::Fastfood | Algo::Ltpu => None,
+        _ => Some(KernelContext::new(te, kernel.as_ref(), 1 << 20)),
+    };
     let t0 = std::time::Instant::now();
 
     let outcome = match cfg.algo {
         Algo::Libsvm => {
-            let res = SmoSolver::new(tr, kernel.as_ref(), cfg.smo_config()?).solve();
-            let model = SvmModel::from_alpha(tr, &res.alpha, kind);
+            let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
+            let tr_ctx = KernelContext::new(tr, kernel.as_ref(), cache_bytes);
+            let res = SmoSolver::new(tr_ctx.view_full(), cfg.smo_config()?).solve();
+            let model = SvmModel::from_ctx_alpha(&tr_ctx, &res.alpha);
             Outcome {
                 algo: cfg.algo.name(),
                 train_s: res.elapsed_s,
-                accuracy: model.accuracy(te, kernel.as_ref()),
+                accuracy: model.accuracy_ctx(te_ctx),
                 objective: Some(res.objective),
                 svs: res.sv_count,
                 note: format!("iters={} cache_hit={:.2}", res.iterations, res.cache_hit_rate),
             }
         }
         Algo::DcSvm | Algo::DcSvmEarly => {
+            let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
             let dcfg = cfg.dcsvm_config()?;
             let res = dcsvm::train(tr, kernel.as_ref(), &dcfg);
+            // Cross-phase reuse of the run's shared kernel context — the
+            // bench JSONs capture this going forward.
+            let hit_rate = res.cache_hit_rate();
             let (accuracy, note) = if res.early_stopped {
                 let em = res.early_model.as_ref().expect("early model");
                 (
-                    em.accuracy(te, kernel.as_ref()),
-                    format!("early@level1 local_svs={}", em.total_svs()),
+                    em.accuracy_ctx(te_ctx),
+                    format!(
+                        "early@level1 local_svs={} cache_hit={hit_rate:.2}",
+                        em.total_svs()
+                    ),
                 )
             } else {
                 let model = SvmModel::from_alpha(tr, &res.alpha, kind);
                 (
-                    model.accuracy(te, kernel.as_ref()),
-                    format!("final_iters={}", res.final_iterations),
+                    model.accuracy_ctx(te_ctx),
+                    format!(
+                        "final_iters={} final_rows={} cache_hit={hit_rate:.2}",
+                        res.final_iterations, res.final_rows_computed
+                    ),
                 )
             };
             Outcome {
@@ -97,12 +125,13 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
             }
         }
         Algo::Cascade => {
+            let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
             let ccfg = cascade::CascadeConfig {
                 kind,
                 c: cfg.c,
                 eps: cfg.eps,
                 depth: 3,
-                cache_bytes: cfg.cache_mb << 20,
+                cache_bytes,
                 seed: cfg.seed,
                 threads: cfg.threads,
                 max_iter: 0,
@@ -111,13 +140,15 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
             Outcome {
                 algo: cfg.algo.name(),
                 train_s: res.elapsed_s,
-                accuracy: res.model.accuracy(te, kernel.as_ref()),
+                accuracy: res.model.accuracy_ctx(te_ctx),
                 objective: Some(crate::metrics::objective_of(tr, kernel.as_ref(), &res.alpha)),
                 svs: res.model.num_svs(),
                 note: format!("levels={:?}", res.level_sv_counts),
             }
         }
         Algo::LaSvm => {
+            let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
+            let tr_ctx = KernelContext::new(tr, kernel.as_ref(), cache_bytes);
             let lcfg = lasvm::LaSvmConfig {
                 kind,
                 c: cfg.c,
@@ -126,19 +157,22 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 seed: cfg.seed,
                 max_finish_iter: 0,
             };
-            let res = lasvm::train(tr, kernel.as_ref(), &lcfg);
+            let res = lasvm::train(&tr_ctx, &lcfg);
             Outcome {
                 algo: cfg.algo.name(),
                 train_s: res.elapsed_s,
-                accuracy: res.model.accuracy(te, kernel.as_ref()),
+                accuracy: res.model.accuracy_ctx(te_ctx),
                 objective: Some(crate::metrics::objective_of(tr, kernel.as_ref(), &res.alpha)),
                 svs: res.model.num_svs(),
                 note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
             }
         }
         Algo::Llsvm => {
+            let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
+            let tr_ctx = KernelContext::new(tr, kernel.as_ref(), 1 << 20);
             let model = llsvm::train(
                 tr,
+                tr_ctx.norms(),
                 &llsvm::LlsvmConfig {
                     kind,
                     c: cfg.c,
@@ -150,7 +184,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
             Outcome {
                 algo: cfg.algo.name(),
                 train_s: model.elapsed_s,
-                accuracy: model.accuracy(te),
+                accuracy: model.accuracy_with_norms(te, te_ctx.norms()),
                 objective: None,
                 svs: cfg.budget,
                 note: format!("landmarks={}", cfg.budget),
@@ -195,8 +229,11 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
             }
         }
         Algo::Spsvm => {
+            let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
+            let tr_ctx = KernelContext::new(tr, kernel.as_ref(), 1 << 20);
             let model = spsvm::train(
                 tr,
+                tr_ctx.norms(),
                 &spsvm::SpsvmConfig {
                     kind,
                     c: cfg.c,
@@ -209,7 +246,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
             Outcome {
                 algo: cfg.algo.name(),
                 train_s: model.elapsed_s,
-                accuracy: model.accuracy(te),
+                accuracy: model.accuracy_with_norms(te, te_ctx.norms()),
                 objective: None,
                 svs: model.basis_size,
                 note: format!("basis={}", model.basis_size),
@@ -288,6 +325,14 @@ mod tests {
         let dc = run(&dcfg, &tr, &te).unwrap();
         let (a, b) = (lib.objective.unwrap(), dc.objective.unwrap());
         assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "libsvm {a} dcsvm {b}");
+    }
+
+    #[test]
+    fn dcsvm_note_reports_cache_hit_rate() {
+        let cfg = small_cfg(Algo::DcSvm);
+        let (tr, te) = load_dataset(&cfg).unwrap();
+        let out = run(&cfg, &tr, &te).unwrap();
+        assert!(out.note.contains("cache_hit="), "note: {}", out.note);
     }
 
     #[test]

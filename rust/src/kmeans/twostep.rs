@@ -9,11 +9,12 @@
 //! ```
 //!
 //! which needs one K(all, sample) block pass — exactly the kernel-block
-//! operator the AOT artifacts implement.
-//!
-//! The resulting [`Router`] is retained by early-prediction models to route
-//! *test* points to their cluster (paper eq. 11).
+//! operator the AOT artifacts implement. Training-time entry points consume
+//! a [`KernelContext`] (shared norms, batched dispatch); the fitted
+//! [`Router`] stays backend-agnostic so early-prediction models can route
+//! *test* points (paper eq. 11) with whatever kernel backend serves them.
 
+use crate::cache::KernelContext;
 use crate::data::Dataset;
 use crate::kernel::BlockKernel;
 use crate::util::prng::Pcg64;
@@ -37,27 +38,27 @@ pub struct Router {
 }
 
 impl Router {
-    /// Fit on a sample drawn from `ds` at the given indices.
+    /// Fit on a sample drawn from the context's dataset at the given
+    /// indices. Sample norms come from the context (computed once per
+    /// dataset, never per fit).
     pub fn fit(
-        ds: &Dataset,
+        ctx: &KernelContext,
         sample_idx: &[usize],
         k: usize,
-        kernel: &dyn BlockKernel,
         max_iter: usize,
         rng: &mut Pcg64,
     ) -> Router {
         let m = sample_idx.len();
         assert!(m > 0, "empty sample");
+        let ds = ctx.ds();
         let dim = ds.dim;
         let mut sample_x = Vec::with_capacity(m * dim);
+        let mut sample_norms = Vec::with_capacity(m);
         for &i in sample_idx {
             sample_x.extend_from_slice(ds.row(i));
+            sample_norms.push(ctx.norm(i));
         }
-        let sample_norms: Vec<f32> = sample_x
-            .chunks(dim)
-            .map(|r| r.iter().map(|&v| v * v).sum())
-            .collect();
-        let kmat = dense_kernel(&sample_x, &sample_norms, dim, kernel);
+        let kmat = dense_kernel(&sample_x, &sample_norms, dim, ctx.kernel());
         let sc = kernel_kmeans(&kmat, m, k, max_iter, rng);
         Router {
             sample_x,
@@ -124,10 +125,9 @@ impl Router {
         out
     }
 
-    /// Assign every row of a dataset.
-    pub fn assign_dataset(&self, ds: &Dataset, kernel: &dyn BlockKernel) -> Vec<u16> {
-        let norms = ds.sq_norms();
-        self.assign_rows(&ds.x, &norms, kernel)
+    /// Assign every row of the context's dataset (norms from the context).
+    pub fn assign_all(&self, ctx: &KernelContext) -> Vec<u16> {
+        self.assign_rows(&ctx.ds().x, ctx.norms(), ctx.kernel())
     }
 
     /// Route a single point.
@@ -170,46 +170,42 @@ impl Partition {
 /// `sample_from`: indices eligible for sampling (the adaptive-clustering
 /// step samples from the current SV set — Algorithm 1).
 pub fn two_step_partition(
-    ds: &Dataset,
+    ctx: &KernelContext,
     k: usize,
     m: usize,
     sample_from: Option<&[usize]>,
-    kernel: &dyn BlockKernel,
     rng: &mut Pcg64,
 ) -> (Router, Partition) {
-    let pool_len = sample_from.map(|s| s.len()).unwrap_or(ds.len());
+    let pool_len = sample_from.map(|s| s.len()).unwrap_or(ctx.len());
     let m_eff = m.min(pool_len).max(1);
     let picked = rng.sample_indices(pool_len, m_eff);
     let sample_idx: Vec<usize> = match sample_from {
         Some(pool) => picked.iter().map(|&i| pool[i]).collect(),
         None => picked,
     };
-    let router = Router::fit(ds, &sample_idx, k, kernel, 30, rng);
-    let assign = router.assign_dataset(ds, kernel);
+    let router = Router::fit(ctx, &sample_idx, k, 30, rng);
+    let assign = router.assign_all(ctx);
     let part = Partition::from_assign(assign, router.k);
     (router, part)
 }
 
 /// Between-cluster kernel mass D(π) = Σ_{π(i)≠π(j)} |K_ij| (Theorem 1).
 /// O(n²) — bench/test use on small subsets only.
-pub fn off_diagonal_mass(
-    ds: &Dataset,
-    kernel: &dyn BlockKernel,
-    assign: &[u16],
-) -> f64 {
+pub fn off_diagonal_mass(ctx: &KernelContext, assign: &[u16]) -> f64 {
+    let ds = ctx.ds();
     let n = ds.len();
-    let norms = ds.sq_norms();
+    let norms = ctx.norms();
     let mut total = 0f64;
     const CHUNK: usize = 256;
     let mut block = vec![0f32; CHUNK * n];
     let mut lo = 0;
     while lo < n {
         let take = CHUNK.min(n - lo);
-        kernel.block(
+        ctx.kernel().block(
             &ds.x[lo * ds.dim..(lo + take) * ds.dim],
             &norms[lo..lo + take],
             &ds.x,
-            &norms,
+            norms,
             ds.dim,
             &mut block[..take * n],
         );
@@ -252,8 +248,9 @@ mod tests {
     fn twostep_recovers_blobs_and_routes_consistently() {
         let ds = blobs(400, 1);
         let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let ctx = KernelContext::new(&ds, &kern, 1 << 20);
         let mut rng = Pcg64::new(2);
-        let (router, part) = two_step_partition(&ds, 4, 64, None, &kern, &mut rng);
+        let (router, part) = two_step_partition(&ctx, 4, 64, None, &mut rng);
         assert_eq!(part.k, 4);
         // Every blob should map to exactly one cluster.
         for blob in 0..4 {
@@ -274,10 +271,11 @@ mod tests {
         let mut rng = Pcg64::new(3);
         let ds = generate(&covtype_like(), 300, &mut rng);
         let kern = NativeKernel::new(KernelKind::Rbf { gamma: 16.0 });
-        let (_, part) = two_step_partition(&ds, 8, 100, None, &kern, &mut rng);
-        let d_kmeans = off_diagonal_mass(&ds, &kern, &part.assign);
+        let ctx = KernelContext::new(&ds, &kern, 1 << 20);
+        let (_, part) = two_step_partition(&ctx, 8, 100, None, &mut rng);
+        let d_kmeans = off_diagonal_mass(&ctx, &part.assign);
         let rand_part = Partition::random(ds.len(), 8, &mut rng);
-        let d_rand = off_diagonal_mass(&ds, &kern, &rand_part.assign);
+        let d_rand = off_diagonal_mass(&ctx, &rand_part.assign);
         assert!(
             d_kmeans < d_rand,
             "kernel kmeans D(π)={d_kmeans} not below random {d_rand}"
@@ -288,10 +286,11 @@ mod tests {
     fn adaptive_sampling_pool_respected() {
         let ds = blobs(200, 4);
         let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let ctx = KernelContext::new(&ds, &kern, 1 << 20);
         let mut rng = Pcg64::new(5);
         // Pool = only blob 0 and 1 points
         let pool: Vec<usize> = (0..ds.len()).filter(|i| i % 4 < 2).collect();
-        let (router, _) = two_step_partition(&ds, 2, 32, Some(&pool), &kern, &mut rng);
+        let (router, _) = two_step_partition(&ctx, 2, 32, Some(&pool), &mut rng);
         assert_eq!(router.k, 2);
         assert!(router.sample_size() <= 32);
     }
@@ -310,7 +309,8 @@ mod tests {
     fn off_diagonal_mass_zero_for_single_cluster() {
         let ds = blobs(50, 6);
         let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let ctx = KernelContext::new(&ds, &kern, 1 << 20);
         let assign = vec![0u16; ds.len()];
-        assert_eq!(off_diagonal_mass(&ds, &kern, &assign), 0.0);
+        assert_eq!(off_diagonal_mass(&ctx, &assign), 0.0);
     }
 }

@@ -21,6 +21,14 @@ pub mod baselines;
 pub mod bench;
 pub mod cache;
 pub mod config;
+/// PJRT runtime: the real implementation needs the `xla` FFI crate, which
+/// the offline build cannot vendor. With the `pjrt` feature off (default)
+/// a stub with the same API takes its place — artifacts never load, and
+/// every consumer falls back to the native backend.
+#[cfg(feature = "pjrt")]
+pub mod runtime;
+#[cfg(not(feature = "pjrt"))]
+#[path = "runtime_stub.rs"]
 pub mod runtime;
 pub mod solver;
 pub mod data;

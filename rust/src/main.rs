@@ -73,6 +73,7 @@ fn print_usage() {
          \x20 --dataset NAME --n-train N --n-test N --kernel {{rbf,poly,linear}}\n\
          \x20 --gamma G --c C --eps E --levels L --k-base K --sample-m M\n\
          \x20 --backend {{auto,native,pjrt}} --budget B --seed S --config FILE\n\
+         \x20 --threads T (default: DCSVM_THREADS or all cores) --cache-mb MB\n\
          \x20 --save-model FILE"
     );
 }
@@ -222,15 +223,10 @@ fn cmd_kmeans(args: &[String]) -> Result<()> {
     let kernel = harness::make_kernel(kind, &cfg.backend, tr.dim)?;
     let k = cfg.k_base.max(2);
     let mut rng = Pcg64::new(cfg.seed);
+    let ctx = dcsvm::cache::KernelContext::new(&tr, kernel.as_ref(), cfg.cache_mb << 20);
     let t0 = std::time::Instant::now();
-    let (_, part) = dcsvm::kmeans::two_step_partition(
-        &tr,
-        k,
-        cfg.sample_m,
-        None,
-        kernel.as_ref(),
-        &mut rng,
-    );
+    let (_, part) =
+        dcsvm::kmeans::two_step_partition(&ctx, k, cfg.sample_m, None, &mut rng);
     let dt = t0.elapsed().as_secs_f64();
     let sizes: Vec<usize> = part.members.iter().map(|m| m.len()).collect();
     println!(
@@ -241,9 +237,9 @@ fn cmd_kmeans(args: &[String]) -> Result<()> {
         sizes
     );
     if tr.len() <= 4000 {
-        let d = dcsvm::kmeans::off_diagonal_mass(&tr, kernel.as_ref(), &part.assign);
+        let d = dcsvm::kmeans::off_diagonal_mass(&ctx, &part.assign);
         let rand_part = dcsvm::kmeans::Partition::random(tr.len(), part.k, &mut rng);
-        let dr = dcsvm::kmeans::off_diagonal_mass(&tr, kernel.as_ref(), &rand_part.assign);
+        let dr = dcsvm::kmeans::off_diagonal_mass(&ctx, &rand_part.assign);
         println!("D(π) kernel-kmeans = {d:.1}, random = {dr:.1} (lower is better)");
     }
     Ok(())
@@ -367,8 +363,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Some(model.dim),
             "stdin".into(),
         )?;
-        let norms = ds.sq_norms();
-        let dv = model.decision_batch(&ds.x, &norms, kernel.as_ref());
+        // Per-batch context: precomputed norms + one batched decision
+        // dispatch for the whole request batch.
+        let bctx = dcsvm::cache::KernelContext::new(&ds, kernel.as_ref(), 1 << 10);
+        let dv = model.decision_batch(&ds.x, bctx.norms(), kernel.as_ref());
         let mut out = String::new();
         for &d in &dv {
             out.push_str(&format!("{} {:.6}\n", if d >= 0.0 { "+1" } else { "-1" }, d));

@@ -9,7 +9,14 @@
 //!   calibrated log-odds combination of *all* cluster models — the Table-1
 //!   comparator that is both slower (k× kernel evaluations) and less
 //!   accurate at large k.
+//!
+//! Construction and evaluation prefer a [`KernelContext`]
+//! (`from_ctx_alpha`, `from_alpha_subset`, `accuracy_ctx`): SV norms are
+//! gathered from the context's precomputed norms and batch decisions run
+//! through the context's backend — no `sq_norms()` recomputation for
+//! datasets that already have a context.
 
+use crate::cache::KernelContext;
 use crate::data::Dataset;
 use crate::kernel::{BlockKernel, KernelKind};
 use crate::kmeans::Router;
@@ -26,7 +33,9 @@ pub struct SvmModel {
 }
 
 impl SvmModel {
-    /// Gather the support vectors of `alpha` over `ds`.
+    /// Gather the support vectors of `alpha` over `ds` (standalone path:
+    /// norms are computed per SV row; prefer [`Self::from_ctx_alpha`] when a
+    /// context exists).
     pub fn from_alpha(ds: &Dataset, alpha: &[f64], kind: KernelKind) -> SvmModel {
         let dim = ds.dim;
         let mut sv_x = Vec::new();
@@ -40,6 +49,48 @@ impl SvmModel {
             }
         }
         SvmModel { sv_x, sv_norms, coef, dim, kind }
+    }
+
+    /// Gather the support vectors of `alpha` through a [`KernelContext`]:
+    /// SV norms come from the context's precomputed norms.
+    pub fn from_ctx_alpha(ctx: &KernelContext, alpha: &[f64]) -> SvmModel {
+        let ds = ctx.ds();
+        assert_eq!(alpha.len(), ds.len());
+        let dim = ds.dim;
+        let mut sv_x = Vec::new();
+        let mut sv_norms = Vec::new();
+        let mut coef = Vec::new();
+        for i in 0..ds.len() {
+            if alpha[i] > 0.0 {
+                sv_x.extend_from_slice(ds.row(i));
+                sv_norms.push(ctx.norm(i));
+                coef.push((alpha[i] * ds.y[i] as f64) as f32);
+            }
+        }
+        SvmModel { sv_x, sv_norms, coef, dim, kind: ctx.kind() }
+    }
+
+    /// Local model of a cluster: the SVs of globally indexed `alpha`
+    /// restricted to `members`, gathered through the context (no subset
+    /// dataset materialization).
+    pub fn from_alpha_subset(
+        ctx: &KernelContext,
+        members: &[usize],
+        alpha: &[f64],
+    ) -> SvmModel {
+        let ds = ctx.ds();
+        let dim = ds.dim;
+        let mut sv_x = Vec::new();
+        let mut sv_norms = Vec::new();
+        let mut coef = Vec::new();
+        for &i in members {
+            if alpha[i] > 0.0 {
+                sv_x.extend_from_slice(ds.row(i));
+                sv_norms.push(ctx.norm(i));
+                coef.push((alpha[i] * ds.y[i] as f64) as f32);
+            }
+        }
+        SvmModel { sv_x, sv_norms, coef, dim, kind: ctx.kind() }
     }
 
     pub fn num_svs(&self) -> usize {
@@ -83,12 +134,18 @@ impl SvmModel {
             .collect()
     }
 
-    /// Accuracy on a test dataset.
+    /// Accuracy on a test dataset (standalone path — computes test norms).
     pub fn accuracy(&self, test: &Dataset, kernel: &dyn BlockKernel) -> f64 {
         let norms = test.sq_norms();
         let preds = self.predict_batch(&test.x, &norms, kernel);
-        let correct = preds.iter().zip(&test.y).filter(|(p, y)| p == y).count();
-        correct as f64 / test.len().max(1) as f64
+        crate::metrics::accuracy(&preds, &test.y)
+    }
+
+    /// Accuracy on a dataset that already has a [`KernelContext`] (norms
+    /// and backend come from the context).
+    pub fn accuracy_ctx(&self, ctx: &KernelContext) -> f64 {
+        let preds = self.predict_batch(&ctx.ds().x, ctx.norms(), ctx.kernel());
+        crate::metrics::accuracy(&preds, &ctx.ds().y)
     }
 
     /// Serialize to JSON (model persistence for the CLI train/predict flow).
@@ -165,7 +222,7 @@ impl EarlyModel {
         let n = norms.len();
         let dim = self.locals.first().map(|m| m.dim).unwrap_or(1);
         let assign = self.router.assign_rows(x, norms, kernel);
-        // Batch per cluster for efficiency.
+        // Batch per cluster for efficiency (one backend dispatch each).
         let mut out = vec![0i8; n];
         for c in 0..self.locals.len() {
             let idx: Vec<usize> =
@@ -187,11 +244,17 @@ impl EarlyModel {
         out
     }
 
+    /// Accuracy on a test dataset (standalone path — computes test norms).
     pub fn accuracy(&self, test: &Dataset, kernel: &dyn BlockKernel) -> f64 {
         let norms = test.sq_norms();
         let preds = self.predict_batch(&test.x, &norms, kernel);
-        let correct = preds.iter().zip(&test.y).filter(|(p, y)| p == y).count();
-        correct as f64 / test.len().max(1) as f64
+        crate::metrics::accuracy(&preds, &test.y)
+    }
+
+    /// Accuracy through an existing [`KernelContext`].
+    pub fn accuracy_ctx(&self, ctx: &KernelContext) -> f64 {
+        let preds = self.predict_batch(&ctx.ds().x, ctx.norms(), ctx.kernel());
+        crate::metrics::accuracy(&preds, &ctx.ds().y)
     }
 
     /// Total SVs across local models (test cost is |S|/k per point).
@@ -239,17 +302,24 @@ impl BcmModel {
             .collect()
     }
 
+    /// Accuracy on a test dataset (standalone path — computes test norms).
     pub fn accuracy(&self, test: &Dataset, kernel: &dyn BlockKernel) -> f64 {
         let norms = test.sq_norms();
         let preds = self.predict_batch(&test.x, &norms, kernel);
-        let correct = preds.iter().zip(&test.y).filter(|(p, y)| p == y).count();
-        correct as f64 / test.len().max(1) as f64
+        crate::metrics::accuracy(&preds, &test.y)
+    }
+
+    /// Accuracy through an existing [`KernelContext`].
+    pub fn accuracy_ctx(&self, ctx: &KernelContext) -> f64 {
+        let preds = self.predict_batch(&ctx.ds().x, ctx.norms(), ctx.kernel());
+        crate::metrics::accuracy(&preds, &ctx.ds().y)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::KernelContext;
     use crate::data::synthetic::{covtype_like, generate_split};
     use crate::kernel::native::NativeKernel;
     use crate::solver::{SmoConfig, SmoSolver};
@@ -259,16 +329,39 @@ mod tests {
         let (tr, te) = generate_split(&covtype_like(), 400, 150, 11);
         let kind = KernelKind::Rbf { gamma: 16.0 };
         let kern = NativeKernel::new(kind);
+        let ctx = KernelContext::new(&tr, &kern, 64 << 20);
         let res = SmoSolver::new(
-            &tr,
-            &kern,
+            ctx.view_full(),
             SmoConfig { c: 8.0, eps: 1e-4, ..Default::default() },
         )
         .solve();
-        let model = SvmModel::from_alpha(&tr, &res.alpha, kind);
+        let model = SvmModel::from_ctx_alpha(&ctx, &res.alpha);
         assert_eq!(model.num_svs(), res.sv_count);
-        let acc = model.accuracy(&te, &kern);
+        let te_ctx = KernelContext::new(&te, &kern, 1 << 20);
+        let acc = model.accuracy_ctx(&te_ctx);
         assert!(acc > 0.80, "exact model acc {acc}");
+        // ctx path and standalone path agree exactly.
+        assert_eq!(acc, model.accuracy(&te, &kern));
+    }
+
+    #[test]
+    fn ctx_and_standalone_construction_agree() {
+        let (tr, _) = generate_split(&covtype_like(), 200, 50, 14);
+        let kind = KernelKind::Rbf { gamma: 8.0 };
+        let kern = NativeKernel::new(kind);
+        let ctx = KernelContext::new(&tr, &kern, 1 << 20);
+        let alpha: Vec<f64> =
+            (0..tr.len()).map(|i| if i % 3 == 0 { 0.5 } else { 0.0 }).collect();
+        let a = SvmModel::from_alpha(&tr, &alpha, kind);
+        let b = SvmModel::from_ctx_alpha(&ctx, &alpha);
+        assert_eq!(a.sv_x, b.sv_x);
+        assert_eq!(a.coef, b.coef);
+        assert_eq!(a.sv_norms, b.sv_norms);
+        // Subset construction over all indices equals the global one.
+        let all: Vec<usize> = (0..tr.len()).collect();
+        let c = SvmModel::from_alpha_subset(&ctx, &all, &alpha);
+        assert_eq!(a.sv_x, c.sv_x);
+        assert_eq!(a.coef, c.coef);
     }
 
     #[test]
@@ -288,13 +381,13 @@ mod tests {
         let (tr, te) = generate_split(&covtype_like(), 300, 100, 13);
         let kind = KernelKind::Rbf { gamma: 16.0 };
         let kern = NativeKernel::new(kind);
+        let ctx = KernelContext::new(&tr, &kern, 64 << 20);
         let res = SmoSolver::new(
-            &tr,
-            &kern,
+            ctx.view_full(),
             SmoConfig { c: 4.0, eps: 1e-3, ..Default::default() },
         )
         .solve();
-        let m = SvmModel::from_alpha(&tr, &res.alpha, kind);
+        let m = SvmModel::from_ctx_alpha(&ctx, &res.alpha);
         let norms = te.sq_norms();
         let single = m.predict_batch(&te.x, &norms, &kern);
         let bcm = BcmModel::new(vec![m]);

@@ -1,0 +1,123 @@
+//! Stub PJRT runtime, compiled when the `pjrt` feature is off.
+//!
+//! The real `runtime` module executes AOT artifacts through the `xla` FFI
+//! crate, which cannot be vendored into the offline build. This stub
+//! mirrors its public surface so every consumer compiles unchanged:
+//! [`Engine::load_default`] always returns `None`, so the harness's "auto"
+//! backend selection falls back to [`crate::kernel::native::NativeKernel`],
+//! and the `pjrt` backend mode reports artifacts as unavailable. No
+//! [`Engine`] value can ever be constructed, so the [`PjrtKernel`] methods
+//! are unreachable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::kernel::{BlockKernel, KernelKind};
+
+/// Tile-shape ABI read from artifacts/manifest.json (mirror of the real
+/// runtime's type).
+#[derive(Clone, Copy, Debug)]
+pub struct TileAbi {
+    pub d_pad: usize,
+    pub nq_slim: usize,
+    pub nq_wide: usize,
+    pub nd_blk: usize,
+}
+
+/// Stub engine: can never be constructed.
+pub struct Engine {
+    abi: TileAbi,
+    dir: PathBuf,
+}
+
+impl Engine {
+    pub fn load(dir: &Path) -> Result<Engine> {
+        bail!(
+            "pjrt feature disabled: cannot load artifacts from {} (rebuild with --features pjrt and the xla dependency)",
+            dir.display()
+        )
+    }
+
+    /// Default artifact directory: `$DCSVM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DCSVM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Always `None`: callers fall back to the native backend.
+    pub fn load_default() -> Option<Engine> {
+        None
+    }
+
+    pub fn abi(&self) -> TileAbi {
+        self.abi
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has_artifact(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn execute(&self, name: &str, _args: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        bail!("pjrt feature disabled: cannot execute artifact '{name}'")
+    }
+
+    pub fn call_counts(&self) -> Vec<(String, u64)> {
+        Vec::new()
+    }
+}
+
+/// Stub PJRT-backed kernel. Unreachable: constructing one requires an
+/// [`Engine`], which the stub never produces.
+pub struct PjrtKernel<'e> {
+    _engine: &'e Engine,
+    _kind: KernelKind,
+}
+
+impl<'e> PjrtKernel<'e> {
+    pub fn new(engine: &'e Engine, kind: KernelKind) -> Self {
+        PjrtKernel { _engine: engine, _kind: kind }
+    }
+}
+
+impl BlockKernel for PjrtKernel<'_> {
+    fn kind(&self) -> KernelKind {
+        unreachable!("stub PjrtKernel cannot exist: no Engine can be constructed")
+    }
+
+    fn block(
+        &self,
+        _xq: &[f32],
+        _q_norms: &[f32],
+        _xd: &[f32],
+        _d_norms: &[f32],
+        _dim: usize,
+        _out: &mut [f32],
+    ) {
+        unreachable!("stub PjrtKernel cannot exist: no Engine can be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_never_loads() {
+        assert!(Engine::load_default().is_none());
+        assert!(Engine::load(Path::new("artifacts")).is_err());
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("DCSVM_ARTIFACTS", "/tmp/nope-artifacts");
+        assert_eq!(Engine::default_dir(), PathBuf::from("/tmp/nope-artifacts"));
+        std::env::remove_var("DCSVM_ARTIFACTS");
+        assert_eq!(Engine::default_dir(), PathBuf::from("artifacts"));
+    }
+}

@@ -1,32 +1,43 @@
-//! Exact dual solver: greedy coordinate descent with shrinking and an LRU
-//! kernel cache — the algorithm class of LIBSVM, specialized to the paper's
-//! no-bias formulation (dual box constraints only, no equality constraint).
+//! Exact dual solver: greedy coordinate descent with shrinking over a
+//! [`KernelView`] — the algorithm class of LIBSVM, specialized to the
+//! paper's no-bias formulation (dual box constraints only, no equality
+//! constraint).
 //!
 //! This solver plays two roles in the reproduction:
-//! 1. run cold on the whole problem, it **is** the "LIBSVM" comparator of
-//!    the paper's tables (same greedy working-set selection, shrinking,
-//!    cache-bounded kernel access, ε-KKT stopping);
+//! 1. run cold on the whole problem (an identity view), it **is** the
+//!    "LIBSVM" comparator of the paper's tables (same greedy working-set
+//!    selection, shrinking, cache-bounded kernel access, ε-KKT stopping);
 //! 2. warm-started from ᾱ, it is the conquer step of DC-SVM, and it solves
-//!    every cluster subproblem in the divide step.
+//!    every cluster subproblem in the divide step through a subset view.
+//!
+//! Kernel access goes through the view's shared [`KernelContext`]: rows are
+//! full dataset-length rows keyed by global index, so rows computed while
+//! solving a cluster subproblem are still resident for the refine and final
+//! solves (cross-phase reuse — the cache analogue of the α warm start). The
+//! solver owns no cache; `rows_computed`/`cache_hit_rate` are per-solve
+//! counter deltas of the shared cache (attribution is exact for solves that
+//! run alone, approximate for concurrent divide-phase solves).
 //!
 //! Iteration: pick i with the largest projected-KKT violation, fetch kernel
-//! row i (LRU cache → block-kernel backend → AOT artifact via PJRT), take
-//! the exact coordinate minimizer δ = clip(α_i − g_i/Q_ii) − α_i, update the
-//! maintained gradient g = Qα − e over the active set. Shrinking removes
-//! bound variables whose KKT conditions are strongly satisfied; on apparent
-//! convergence the full gradient is reconstructed from the support vectors
-//! (O(n·|S|) via the fused decision kernel) and optimality is re-verified on
-//! the full set — so the returned solution is an exact ε-solution of the
-//! *unshrunk* problem.
+//! row i (shared cache → block-kernel backend → AOT artifact via PJRT),
+//! take the exact coordinate minimizer δ = clip(α_i − g_i/Q_ii) − α_i,
+//! update the maintained gradient g = Qα − e over the active set. Shrinking
+//! removes bound variables whose KKT conditions are strongly satisfied; on
+//! apparent convergence the full gradient is reconstructed from the support
+//! vectors (O(n·|S|) via the fused decision kernel) and optimality is
+//! re-verified on the full set — so the returned solution is an exact
+//! ε-solution of the *unshrunk* problem.
 
 use std::time::Instant;
 
-use crate::cache::RowCache;
+use crate::cache::{KernelContext, KernelView, DEFAULT_CACHE_BYTES};
 use crate::data::Dataset;
 use crate::kernel::BlockKernel;
 use crate::solver::objective::{max_violation, objective_from_grad, projected_violation};
 
-/// Solver configuration.
+/// Solver configuration. The kernel-row cache budget lives on the
+/// [`KernelContext`] now, not here — one budget per dataset, shared by
+/// every solve.
 #[derive(Clone, Debug)]
 pub struct SmoConfig {
     /// Box constraint C.
@@ -35,19 +46,17 @@ pub struct SmoConfig {
     pub eps: f64,
     /// Hard iteration cap (0 = unlimited).
     pub max_iter: usize,
-    /// Kernel-row cache budget in bytes.
-    pub cache_bytes: usize,
     /// Enable shrinking.
     pub shrinking: bool,
     /// Invoke the progress callback every this many iterations.
     pub report_every: usize,
     /// On a kernel-row cache miss, prefetch rows for this many of the most
-    /// violating active variables in ONE block dispatch. Amortizes the
-    /// per-call overhead of the PJRT backend (the working set stabilizes
-    /// early — paper Figure 2 — so prefetched rows get reused). 1 disables;
-    /// 0 = auto: 64 when the backend `prefers_batched_rows()`, else 1
-    /// (speculative rows are wasted work on the native backend —
-    /// bench_ablations A5).
+    /// violating active variables in ONE block dispatch (through
+    /// [`KernelContext::compute_rows`]). Amortizes the per-call overhead of
+    /// the PJRT backend (the working set stabilizes early — paper Figure 2
+    /// — so prefetched rows get reused). 1 disables; 0 = auto: 64 when the
+    /// backend `prefers_batched_rows()`, else 1 (speculative rows are
+    /// wasted work on the native backend — bench_ablations A5).
     pub row_batch: usize,
 }
 
@@ -57,7 +66,6 @@ impl Default for SmoConfig {
             c: 1.0,
             eps: 1e-3,
             max_iter: 0,
-            cache_bytes: 256 << 20,
             shrinking: true,
             report_every: 2_000,
             row_batch: 0,
@@ -84,28 +92,26 @@ pub struct SmoResult {
     pub bounded_sv_count: usize,
     pub final_violation: f64,
     pub elapsed_s: f64,
-    /// Kernel rows computed (cache misses).
+    /// Kernel rows computed during this solve (shared-cache miss delta).
     pub rows_computed: u64,
+    /// Shared-cache hit rate over this solve's accesses.
     pub cache_hit_rate: f64,
     /// True if stopped by max_iter instead of ε-optimality.
     pub hit_iter_cap: bool,
 }
 
-/// The solver. Borrows the dataset and kernel backend; owns its cache.
+/// The solver. Borrows a view of a kernel context; owns no cache.
 pub struct SmoSolver<'a> {
-    ds: &'a Dataset,
-    kernel: &'a dyn BlockKernel,
-    norms: Vec<f32>,
+    view: KernelView<'a>,
+    /// Local labels, gathered once (hot-loop friendly).
+    y: Vec<i8>,
     cfg: SmoConfig,
-    cache: RowCache,
 }
 
 impl<'a> SmoSolver<'a> {
-    pub fn new(ds: &'a Dataset, kernel: &'a dyn BlockKernel, cfg: SmoConfig) -> Self {
-        let n = ds.len();
-        let cache = RowCache::new(n, cfg.cache_bytes);
-        let norms = ds.sq_norms();
-        SmoSolver { ds, kernel, norms, cfg, cache }
+    pub fn new(view: KernelView<'a>, cfg: SmoConfig) -> Self {
+        let y = view.labels();
+        SmoSolver { view, y, cfg }
     }
 
     /// Solve from zero.
@@ -119,9 +125,10 @@ impl<'a> SmoSolver<'a> {
         alpha0: Option<&[f64]>,
         on_progress: &mut dyn FnMut(&SmoProgress),
     ) -> SmoResult {
-        let n = self.ds.len();
+        let n = self.view.len();
         let c = self.cfg.c;
         let t0 = Instant::now();
+        let stats0 = self.view.ctx().stats();
 
         // --- initialize alpha and gradient -------------------------------
         let mut alpha = match alpha0 {
@@ -173,8 +180,6 @@ impl<'a> SmoSolver<'a> {
 
         let mut iter = 0usize;
         let mut hit_cap = false;
-        let mut rows_before = self.cache.misses;
-        let _ = &mut rows_before;
 
         loop {
             // ---- greedy working-variable selection over active set -------
@@ -208,12 +213,14 @@ impl<'a> SmoSolver<'a> {
 
             // ---- coordinate update --------------------------------------
             let i = best;
-            let yi = self.ds.y[i] as f64;
+            let yi = self.y[i] as f64;
             let qii = {
                 let kii = self
-                    .kernel
+                    .view
+                    .ctx()
                     .kind()
-                    .self_eval(self.ds.row(i), self.norms[i]) as f64;
+                    .self_eval(self.view.x_row(i), self.view.norm(i))
+                    as f64;
                 kii.max(1e-12)
             };
             let delta = (alpha[i] - grad[i] / qii).clamp(0.0, c) - alpha[i];
@@ -221,16 +228,23 @@ impl<'a> SmoSolver<'a> {
                 obj += delta * (grad[i] + 0.5 * delta * qii);
                 alpha[i] += delta;
                 // g_j += δ Q_ij over the active set (+ self handled inside)
-                if !self.cache.contains(i) {
+                if !self.view.is_row_cached(i) {
                     self.prefetch_rows(i, &active, &alpha, &grad, c);
                 }
-                let row = self
-                    .cache
-                    .get_or_compute(i, |_| unreachable!("prefetched above"));
-                let y = &self.ds.y;
+                // Full dataset-length row — indexed by GLOBAL j below.
+                let row = self.view.global_row(i);
                 let dyi = delta * yi;
-                for &j in &active {
-                    grad[j] += dyi * (y[j] as f64) * (row[j] as f64);
+                match self.view.map() {
+                    None => {
+                        for &j in &active {
+                            grad[j] += dyi * (self.y[j] as f64) * (row[j] as f64);
+                        }
+                    }
+                    Some(map) => {
+                        for &j in &active {
+                            grad[j] += dyi * (self.y[j] as f64) * (row[map[j]] as f64);
+                        }
+                    }
                 }
             }
 
@@ -284,6 +298,7 @@ impl<'a> SmoSolver<'a> {
             active: active.len(),
         });
 
+        let delta_stats = self.view.ctx().stats().since(&stats0);
         SmoResult {
             alpha,
             objective,
@@ -292,8 +307,8 @@ impl<'a> SmoSolver<'a> {
             bounded_sv_count: bounded,
             final_violation,
             elapsed_s,
-            rows_computed: self.cache.misses,
-            cache_hit_rate: self.cache.hit_rate(),
+            rows_computed: delta_stats.misses,
+            cache_hit_rate: delta_stats.hit_rate(),
             hit_iter_cap: hit_cap,
         }
     }
@@ -303,7 +318,7 @@ impl<'a> SmoSolver<'a> {
     /// dispatch (amortizes PJRT call overhead; the working set stabilizes
     /// early so the speculative rows get reused).
     fn prefetch_rows(
-        &mut self,
+        &self,
         i: usize,
         active: &[usize],
         alpha: &[f64],
@@ -312,17 +327,23 @@ impl<'a> SmoSolver<'a> {
     ) {
         // Never prefetch more rows than a fraction of the cache can hold —
         // otherwise a tight cache budget turns speculative rows into
-        // immediate evictions of the working set.
-        let auto = if self.kernel.prefers_batched_rows() { 64 } else { 1 };
+        // immediate evictions of the working set. Eviction is per shard, so
+        // also cap at one shard's capacity: even if every pick collides on
+        // one shard (key % shards), the batch cannot evict its own rows.
+        let ctx = self.view.ctx();
+        let cache = ctx.cache();
+        let per_shard = (cache.capacity_rows() / cache.shard_count()).max(1);
+        let auto = if ctx.kernel().prefers_batched_rows() { 64 } else { 1 };
         let batch = (if self.cfg.row_batch == 0 { auto } else { self.cfg.row_batch })
-            .min((self.cache.capacity_rows() / 8).max(1))
+            .min((cache.capacity_rows() / 8).max(1))
+            .min(per_shard)
             .max(1);
         let mut picks: Vec<usize> = vec![i];
         if batch > 1 {
             // Top-(batch-1) violating uncached active variables.
             let mut cands: Vec<(f64, usize)> = active
                 .iter()
-                .filter(|&&j| j != i && !self.cache.contains(j))
+                .filter(|&&j| j != i && !self.view.is_row_cached(j))
                 .map(|&j| (projected_violation(alpha[j], grad[j], c), j))
                 .filter(|&(v, _)| v > 0.0)
                 .collect();
@@ -332,37 +353,23 @@ impl<'a> SmoSolver<'a> {
                 picks.extend(cands[..take].iter().map(|&(_, j)| j));
             }
         }
-        let n = self.ds.len();
-        let dim = self.ds.dim;
-        let mut xq = Vec::with_capacity(picks.len() * dim);
-        let mut qn = Vec::with_capacity(picks.len());
-        for &p in &picks {
-            xq.extend_from_slice(self.ds.row(p));
-            qn.push(self.norms[p]);
-        }
-        let mut block = vec![0f32; picks.len() * n];
-        self.kernel
-            .block(&xq, &qn, &self.ds.x, &self.norms, dim, &mut block);
-        for (t, &p) in picks.iter().enumerate() {
-            let src = &block[t * n..(t + 1) * n];
-            self.cache.get_or_compute(p, |buf| buf.copy_from_slice(src));
-        }
+        self.view.ensure_rows(&picks);
     }
 
     /// g = Qα − e computed from scratch using only the SVs of `alpha`
     /// (cost O(n·|S|) through the fused decision path).
     fn init_gradient_from(&self, alpha: &[f64], grad: &mut [f64]) {
-        let n = self.ds.len();
+        let n = self.view.len();
         let sv: Vec<usize> = (0..n).filter(|&i| alpha[i] != 0.0).collect();
         self.decision_into(&sv, alpha, (0..n).collect::<Vec<_>>().as_slice(), grad);
         for (j, g) in grad.iter_mut().enumerate() {
-            *g = (self.ds.y[j] as f64) * *g - 1.0;
+            *g = (self.y[j] as f64) * *g - 1.0;
         }
     }
 
     /// Rebuild grad for variables outside `active` (the shrunk ones).
     fn reconstruct_gradient(&self, alpha: &[f64], grad: &mut [f64], active: &[usize]) {
-        let n = self.ds.len();
+        let n = self.view.len();
         let mut in_active = vec![false; n];
         for &i in active {
             in_active[i] = true;
@@ -375,27 +382,29 @@ impl<'a> SmoSolver<'a> {
         let mut dv = vec![0f64; todo.len()];
         self.decision_into(&sv, alpha, &todo, &mut dv);
         for (t, &j) in todo.iter().enumerate() {
-            grad[j] = (self.ds.y[j] as f64) * dv[t] - 1.0;
+            grad[j] = (self.y[j] as f64) * dv[t] - 1.0;
         }
     }
 
     /// dv[t] = Σ_{i∈sv} α_i y_i K(x_{query[t]}, x_i), chunked through the
-    /// backend's (possibly fused) decision path.
+    /// backend's (possibly fused) decision path. `sv`/`query` are local
+    /// indices of the view.
     fn decision_into(&self, sv: &[usize], alpha: &[f64], query: &[usize], out: &mut [f64]) {
         debug_assert_eq!(query.len(), out.len());
         if sv.is_empty() {
             out.iter_mut().for_each(|v| *v = 0.0);
             return;
         }
-        let dim = self.ds.dim;
+        let dim = self.view.ctx().dim();
+        let kernel = self.view.ctx().kernel();
         // Gather SV matrix + coef once.
         let mut xd = Vec::with_capacity(sv.len() * dim);
         let mut dnorms = Vec::with_capacity(sv.len());
         let mut coef = Vec::with_capacity(sv.len());
         for &i in sv {
-            xd.extend_from_slice(self.ds.row(i));
-            dnorms.push(self.norms[i]);
-            coef.push((alpha[i] * self.ds.y[i] as f64) as f32);
+            xd.extend_from_slice(self.view.x_row(i));
+            dnorms.push(self.view.norm(i));
+            coef.push((alpha[i] * self.y[i] as f64) as f32);
         }
         const CHUNK: usize = 512;
         let mut xq = Vec::with_capacity(CHUNK * dim);
@@ -405,10 +414,10 @@ impl<'a> SmoSolver<'a> {
             xq.clear();
             qnorms.clear();
             for &qi in chunk {
-                xq.extend_from_slice(self.ds.row(qi));
-                qnorms.push(self.norms[qi]);
+                xq.extend_from_slice(self.view.x_row(qi));
+                qnorms.push(self.view.norm(qi));
             }
-            self.kernel.decision(
+            kernel.decision(
                 &xq,
                 &qnorms,
                 &xd,
@@ -425,13 +434,12 @@ impl<'a> SmoSolver<'a> {
     }
 }
 
-/// Convenience: cold solve with default-configured solver.
-pub fn solve_svm(
-    ds: &Dataset,
-    kernel: &dyn BlockKernel,
-    cfg: SmoConfig,
-) -> SmoResult {
-    SmoSolver::new(ds, kernel, cfg).solve()
+/// Convenience: cold solve with a throwaway default-budget context. Callers
+/// that already own a [`KernelContext`] should use
+/// `SmoSolver::new(ctx.view_full(), cfg)` to share cached rows instead.
+pub fn solve_svm(ds: &Dataset, kernel: &dyn BlockKernel, cfg: SmoConfig) -> SmoResult {
+    let ctx = KernelContext::new(ds, kernel, DEFAULT_CACHE_BYTES);
+    SmoSolver::new(ctx.view_full(), cfg).solve()
 }
 
 #[cfg(test)]
@@ -456,7 +464,8 @@ mod tests {
         let mut rng = Pcg64::new(10);
         let ds = generate(&covtype_like(), 60, &mut rng);
         let k = kernel();
-        let mut solver = SmoSolver::new(&ds, &k, cfg(1.0, 1e-8));
+        let ctx = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
+        let mut solver = SmoSolver::new(ctx.view_full(), cfg(1.0, 1e-8));
         let res = solver.solve();
         let q = dense_q(&ds, &k);
         let (_, ref_obj) = ProjGradRef::default().solve(&q, ds.len(), 1.0);
@@ -477,7 +486,7 @@ mod tests {
         let ds = generate(&ijcnn1_like(), 120, &mut rng);
         let k = kernel();
         let c = 4.0;
-        let res = SmoSolver::new(&ds, &k, cfg(c, 1e-6)).solve();
+        let res = solve_svm(&ds, &k, cfg(c, 1e-6));
         assert!(res.final_violation < 1e-6, "viol {}", res.final_violation);
         assert!(res.alpha.iter().all(|&a| (0.0..=c).contains(&a)));
         assert!(!res.hit_iter_cap);
@@ -488,14 +497,15 @@ mod tests {
         let mut rng = Pcg64::new(12);
         let ds = generate(&covtype_like(), 150, &mut rng);
         let k = kernel();
-        let cold = SmoSolver::new(&ds, &k, cfg(1.0, 1e-7)).solve();
+        let ctx = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
+        let cold = SmoSolver::new(ctx.view_full(), cfg(1.0, 1e-7)).solve();
         // warm start from a *slightly perturbed* optimum
         let mut a0 = cold.alpha.clone();
         let mut prng = Pcg64::new(13);
         for a in a0.iter_mut() {
             *a = (*a + 0.01 * prng.next_f64()).clamp(0.0, 1.0);
         }
-        let warm = SmoSolver::new(&ds, &k, cfg(1.0, 1e-7))
+        let warm = SmoSolver::new(ctx.view_full(), cfg(1.0, 1e-7))
             .solve_warm(Some(&a0), &mut |_| {});
         assert!(
             (warm.objective - cold.objective).abs() < 1e-5 * (1.0 + cold.objective.abs()),
@@ -509,6 +519,13 @@ mod tests {
             warm.iterations,
             cold.iterations
         );
+        // Cross-solve cache reuse: the second solve found rows resident.
+        assert!(
+            warm.rows_computed < cold.rows_computed,
+            "warm computed {} rows, cold {}",
+            warm.rows_computed,
+            cold.rows_computed
+        );
     }
 
     #[test]
@@ -516,9 +533,8 @@ mod tests {
         let mut rng = Pcg64::new(14);
         let ds = generate(&covtype_like(), 140, &mut rng);
         let k = kernel();
-        let with = SmoSolver::new(&ds, &k, SmoConfig { shrinking: true, ..cfg(1.0, 1e-7) }).solve();
-        let without =
-            SmoSolver::new(&ds, &k, SmoConfig { shrinking: false, ..cfg(1.0, 1e-7) }).solve();
+        let with = solve_svm(&ds, &k, SmoConfig { shrinking: true, ..cfg(1.0, 1e-7) });
+        let without = solve_svm(&ds, &k, SmoConfig { shrinking: false, ..cfg(1.0, 1e-7) });
         assert!(
             (with.objective - without.objective).abs()
                 < 1e-5 * (1.0 + without.objective.abs()),
@@ -533,12 +549,7 @@ mod tests {
         let mut rng = Pcg64::new(15);
         let ds = generate(&covtype_like(), 200, &mut rng);
         let k = kernel();
-        let res = SmoSolver::new(
-            &ds,
-            &k,
-            SmoConfig { max_iter: 10, ..cfg(1.0, 1e-9) },
-        )
-        .solve();
+        let res = solve_svm(&ds, &k, SmoConfig { max_iter: 10, ..cfg(1.0, 1e-9) });
         assert!(res.hit_iter_cap);
         assert_eq!(res.iterations, 10);
     }
@@ -548,10 +559,10 @@ mod tests {
         let mut rng = Pcg64::new(16);
         let ds = generate(&covtype_like(), 150, &mut rng);
         let k = kernel();
+        let ctx = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
         let mut objs = Vec::new();
         let mut solver = SmoSolver::new(
-            &ds,
-            &k,
+            ctx.view_full(),
             SmoConfig { report_every: 50, ..cfg(1.0, 1e-7) },
         );
         solver.solve_warm(None, &mut |p| objs.push(p.objective));
@@ -559,6 +570,24 @@ mod tests {
         // objective is monotone nonincreasing in CD
         for w in objs.windows(2) {
             assert!(w[1] <= w[0] + 1e-9, "{objs:?}");
+        }
+    }
+
+    /// A subset view solve must agree exactly with solving the materialized
+    /// subset dataset (same math, shared-cache rows notwithstanding).
+    #[test]
+    fn subset_view_solve_matches_materialized_subset() {
+        let mut rng = Pcg64::new(17);
+        let ds = generate(&covtype_like(), 120, &mut rng);
+        let k = kernel();
+        let members: Vec<usize> = (0..ds.len()).filter(|i| i % 3 != 0).collect();
+        let ctx = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
+        let via_view = SmoSolver::new(ctx.view(&members), cfg(2.0, 1e-7)).solve();
+        let sub = ds.subset(&members, "sub");
+        let via_subset = solve_svm(&sub, &k, cfg(2.0, 1e-7));
+        assert_eq!(via_view.iterations, via_subset.iterations);
+        for (a, b) in via_view.alpha.iter().zip(&via_subset.alpha) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
     }
 
@@ -572,7 +601,7 @@ mod tests {
             let c = 0.25 + 2.0 * rng.next_f64();
             let ds = generate(&covtype_like(), n, rng);
             let k = NativeKernel::new(KernelKind::Rbf { gamma: gamma as f32 });
-            let res = SmoSolver::new(&ds, &k, cfg(c, 1e-8)).solve();
+            let res = solve_svm(&ds, &k, cfg(c, 1e-8));
             prop_assert!(
                 res.alpha.iter().all(|&a| (-1e-12..=c + 1e-12).contains(&a)),
                 "infeasible alpha"

@@ -1,6 +1,8 @@
 //! Integration: multilevel DC-SVM end-to-end against the direct solver,
-//! Lemma-1 / Theorem-1 invariants, and early prediction floors.
+//! Lemma-1 / Theorem-1 invariants, early prediction floors, and the
+//! cross-phase kernel-cache reuse regression.
 
+use dcsvm::cache::KernelContext;
 use dcsvm::data::synthetic::{covtype_like, generate, generate_split, webspam_like};
 use dcsvm::dcsvm::{train, DcSvmConfig};
 use dcsvm::kernel::{native::NativeKernel, KernelKind};
@@ -21,8 +23,9 @@ fn lemma1_blockdiag_optimality() {
     let mut rng = Pcg64::new(100);
     let ds = generate(&covtype_like(), 240, &mut rng);
     let kern = NativeKernel::new(kind());
+    let ctx = KernelContext::new(&ds, &kern, 64 << 20);
     let c = 2.0;
-    let (_, part) = two_step_partition(&ds, 4, 60, None, &kern, &mut rng);
+    let (_, part) = two_step_partition(&ctx, 4, 60, None, &mut rng);
 
     // Solve each cluster subproblem exactly.
     let mut alpha_bar = vec![0f64; ds.len()];
@@ -61,17 +64,22 @@ fn theorem1_bound_holds() {
     let mut rng = Pcg64::new(101);
     let ds = generate(&covtype_like(), 300, &mut rng);
     let kern = NativeKernel::new(kind());
+    let ctx = KernelContext::new(&ds, &kern, 64 << 20);
     let c = 1.0;
     for k in [2usize, 4, 8] {
-        let (_, part) = two_step_partition(&ds, k, 80, None, &kern, &mut rng);
+        let (_, part) = two_step_partition(&ctx, k, 80, None, &mut rng);
         let mut alpha_bar = vec![0f64; ds.len()];
         for members in &part.members {
             if members.is_empty() {
                 continue;
             }
-            let sub = ds.subset(members, "c");
-            let res =
-                solve_svm(&sub, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
+            // Subset views of the shared context: the divide-phase solve
+            // path the production driver uses.
+            let res = SmoSolver::new(
+                ctx.view(members),
+                SmoConfig { c, eps: 1e-8, ..Default::default() },
+            )
+            .solve();
             for (t, &i) in members.iter().enumerate() {
                 alpha_bar[i] = res.alpha[t];
             }
@@ -79,7 +87,7 @@ fn theorem1_bound_holds() {
         let f_bar = objective_of(&ds, &kern, &alpha_bar);
         let star = solve_svm(&ds, &kern, SmoConfig { c, eps: 1e-8, ..Default::default() });
         let gap = f_bar - star.objective;
-        let bound = 0.5 * c * c * off_diagonal_mass(&ds, &kern, &part.assign);
+        let bound = 0.5 * c * c * off_diagonal_mass(&ctx, &part.assign);
         assert!(gap >= -1e-5, "k={k}: f(ᾱ) below optimum?! gap={gap}");
         assert!(
             gap <= bound + 1e-6,
@@ -95,6 +103,7 @@ fn kernel_partition_tightens_gap_vs_random() {
     let mut rng = Pcg64::new(102);
     let ds = generate(&covtype_like(), 300, &mut rng);
     let kern = NativeKernel::new(kind());
+    let ctx = KernelContext::new(&ds, &kern, 64 << 20);
     let c = 1.0;
     let solve_part = |part: &Partition| -> f64 {
         let mut alpha = vec![0f64; ds.len()];
@@ -102,16 +111,18 @@ fn kernel_partition_tightens_gap_vs_random() {
             if members.is_empty() {
                 continue;
             }
-            let sub = ds.subset(members, "c");
-            let res =
-                solve_svm(&sub, &kern, SmoConfig { c, eps: 1e-7, ..Default::default() });
+            let res = SmoSolver::new(
+                ctx.view(members),
+                SmoConfig { c, eps: 1e-7, ..Default::default() },
+            )
+            .solve();
             for (t, &i) in members.iter().enumerate() {
                 alpha[i] = res.alpha[t];
             }
         }
         objective_of(&ds, &kern, &alpha)
     };
-    let (_, kpart) = two_step_partition(&ds, 8, 80, None, &kern, &mut rng);
+    let (_, kpart) = two_step_partition(&ctx, 8, 80, None, &mut rng);
     let rpart = Partition::random(ds.len(), 8, &mut rng);
     let f_k = solve_part(&kpart);
     let f_r = solve_part(&rpart);
@@ -142,12 +153,11 @@ fn multilevel_pipeline_two_datasets() {
             ..Default::default()
         };
         let dc = train(&tr, &kern, &cfg);
-        let cold = SmoSolver::new(
+        let cold = solve_svm(
             &tr,
             &kern,
             SmoConfig { c: 4.0, eps: 1e-5, ..Default::default() },
-        )
-        .solve();
+        );
         let rel = (dc.objective.unwrap() - cold.objective).abs()
             / (1.0 + cold.objective.abs());
         assert!(rel < 1e-3, "{}: rel {rel}", spec.name);
@@ -190,4 +200,53 @@ fn lower_levels_identify_svs() {
         last_recall = rec;
     }
     assert!(last_recall > 0.8, "top divide level recall {last_recall}");
+}
+
+/// Regression (ISSUE satellite): the conquer solve must start with the
+/// divide/refine phases' kernel rows already resident in the run's shared
+/// context, so it computes strictly fewer rows than the *same* warm-started
+/// solve on a cold cache (the old per-solve cold-cache path).
+#[test]
+fn shared_context_prewarms_conquer_solve() {
+    let (tr, _) = generate_split(&covtype_like(), 700, 100, 9);
+    let kern = NativeKernel::new(kind());
+    let cfg = DcSvmConfig {
+        kind: kind(),
+        c: 4.0,
+        levels: 2,
+        k_base: 4,
+        sample_m: 96,
+        eps_sub: 1e-3,
+        eps_final: 1e-5,
+        keep_level_alphas: true,
+        ..Default::default()
+    };
+    let dc = train(&tr, &kern, &cfg);
+    assert!(!dc.early_stopped);
+    let warm0 = dc.pre_final_alpha.clone().expect("kept with keep_level_alphas");
+
+    // Replay the exact final solve on a fresh (cold) context — identical
+    // math (same warm start, same tolerances), different cache state.
+    let cold_ctx = KernelContext::new(&tr, &kern, 256 << 20);
+    let cold = SmoSolver::new(
+        cold_ctx.view_full(),
+        SmoConfig { c: 4.0, eps: 1e-5, ..Default::default() },
+    )
+    .solve_warm(Some(&warm0), &mut |_| {});
+
+    // Identical trajectory...
+    assert_eq!(
+        dc.final_iterations, cold.iterations,
+        "cache state must not change the solve trajectory"
+    );
+    // ...but the shared-context conquer solve found its rows resident.
+    assert!(cold.rows_computed > 0, "cold final solve computed no rows");
+    assert!(
+        dc.final_rows_computed < cold.rows_computed,
+        "shared-context final solve computed {} rows, cold-cache {}",
+        dc.final_rows_computed,
+        cold.rows_computed
+    );
+    // The run saw real cross-phase reuse overall.
+    assert!(dc.cache_hits > 0);
 }

@@ -1,7 +1,11 @@
 //! Integration: the PJRT-backed kernel must agree with the native backend
 //! (which is itself verified against the scalar formulas and, through the
 //! python tests, against the pure-jnp oracle). Skips gracefully when
-//! `artifacts/` has not been built (`make artifacts`).
+//! `artifacts/` has not been built (`make artifacts`). The whole file is
+//! gated on the `pjrt` feature — without it the runtime is a stub that can
+//! never load artifacts.
+
+#![cfg(feature = "pjrt")]
 
 use dcsvm::kernel::{native::NativeKernel, BlockKernel, KernelKind};
 use dcsvm::runtime::{Engine, PjrtKernel};
@@ -114,6 +118,7 @@ fn pjrt_property_random_shapes() {
 #[test]
 fn smo_solver_runs_on_pjrt_backend() {
     let Some(engine) = engine() else { return };
+    use dcsvm::cache::KernelContext;
     use dcsvm::data::synthetic::{covtype_like, generate};
     use dcsvm::solver::{SmoConfig, SmoSolver};
 
@@ -123,10 +128,12 @@ fn smo_solver_runs_on_pjrt_backend() {
     let cfg = SmoConfig { c: 1.0, eps: 1e-6, ..Default::default() };
 
     let pjrt = PjrtKernel::new(&engine, kind);
-    let res_pjrt = SmoSolver::new(&ds, &pjrt, cfg.clone()).solve();
+    let pjrt_ctx = KernelContext::new(&ds, &pjrt, 64 << 20);
+    let res_pjrt = SmoSolver::new(pjrt_ctx.view_full(), cfg.clone()).solve();
 
     let native = NativeKernel::new(kind);
-    let res_native = SmoSolver::new(&ds, &native, cfg).solve();
+    let native_ctx = KernelContext::new(&ds, &native, 64 << 20);
+    let res_native = SmoSolver::new(native_ctx.view_full(), cfg).solve();
 
     let rel = (res_pjrt.objective - res_native.objective).abs()
         / (1.0 + res_native.objective.abs());

@@ -2,6 +2,7 @@
 //! DC-SVM *exact* (not approximate), checked over randomized instances with
 //! the in-repo property harness (seeded; failures print a replay seed).
 
+use dcsvm::cache::KernelContext;
 use dcsvm::data::synthetic::{covtype_like, generate, ijcnn1_like, MixtureSpec};
 use dcsvm::data::Dataset;
 use dcsvm::dcsvm::{train, DcSvmConfig};
@@ -35,7 +36,8 @@ fn prop_warm_start_never_worse() {
         let (ds, kind, c) = random_instance(rng, 160);
         let kern = NativeKernel::new(kind);
         let cfg = SmoConfig { c, eps: 1e-7, ..Default::default() };
-        let cold = SmoSolver::new(&ds, &kern, cfg.clone()).solve();
+        let ctx = KernelContext::new(&ds, &kern, 64 << 20);
+        let cold = SmoSolver::new(ctx.view_full(), cfg.clone()).solve();
         // Feasible warm start: perturbation of the optimum (the DC-SVM use
         // case — ᾱ is close to α*). A *fully random* start accumulates f32
         // kernel-row drift in the maintained gradient over the long
@@ -46,7 +48,7 @@ fn prop_warm_start_never_worse() {
             .iter()
             .map(|&a| (a + 0.1 * c * (rng.next_f64() - 0.5)).clamp(0.0, c))
             .collect();
-        let warm = SmoSolver::new(&ds, &kern, cfg.clone()).solve_warm(Some(&a0), &mut |_| {});
+        let warm = SmoSolver::new(ctx.view_full(), cfg.clone()).solve_warm(Some(&a0), &mut |_| {});
         prop_assert!(
             (warm.objective - cold.objective).abs() < 1e-4 * (1.0 + cold.objective.abs()),
             "warm {} vs cold {}",
@@ -57,7 +59,8 @@ fn prop_warm_start_never_worse() {
         // (On ill-conditioned instances the recomputed exact warm-start
         // gradient exposes residual f32 drift, so "instant" convergence is
         // not guaranteed — but it can never be *worse* than from zero.)
-        let at_opt = SmoSolver::new(&ds, &kern, cfg).solve_warm(Some(&cold.alpha), &mut |_| {});
+        let at_opt =
+            SmoSolver::new(ctx.view_full(), cfg).solve_warm(Some(&cold.alpha), &mut |_| {});
         prop_assert!(
             at_opt.iterations <= cold.iterations + 4,
             "restart from optimum took {} iters (cold {})",
@@ -109,7 +112,8 @@ fn prop_divide_step_objective_sandwich() {
         let (ds, kind, c) = random_instance(rng, 240);
         let kern = NativeKernel::new(kind);
         let k = 2 + rng.below(6);
-        let (_, part) = two_step_partition(&ds, k, 48, None, &kern, rng);
+        let ctx = KernelContext::new(&ds, &kern, 64 << 20);
+        let (_, part) = two_step_partition(&ctx, k, 48, None, rng);
         let mut alpha_bar = vec![0f64; ds.len()];
         for members in &part.members {
             if members.is_empty() {
@@ -145,9 +149,10 @@ fn prop_router_deterministic_and_batch_consistent() {
         let (ds, kind, _) = random_instance(rng, 200);
         let kern = NativeKernel::new(kind);
         let k = 2 + rng.below(5);
-        let (router, part) = two_step_partition(&ds, k, 32, None, &kern, rng);
-        let norms = ds.sq_norms();
-        let batch = router.assign_rows(&ds.x, &norms, &kern);
+        let ctx = KernelContext::new(&ds, &kern, 64 << 20);
+        let (router, part) = two_step_partition(&ctx, k, 32, None, rng);
+        let norms = ctx.norms();
+        let batch = router.assign_rows(&ds.x, norms, &kern);
         prop_assert!(batch == part.assign, "batch assign != training assign");
         for probe in 0..5 {
             let i = rng.below(ds.len());

@@ -1,0 +1,151 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build container has no registry access, so the few external crates
+//! this repository uses are vendored as API-compatible shims (same crate
+//! name, path dependency). This one covers exactly the subset the codebase
+//! consumes: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros, and
+//! the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! An [`Error`] is a chain of display strings, outermost context first.
+//! Plain `{}` prints the outermost message; `{:#}` and `{:?}` print the
+//! whole chain joined by `": "` — matching how the real crate is used in
+//! `main.rs` (`error: {e:#}`).
+
+use std::fmt;
+
+/// A lightweight error: a chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::Error::msg(::std::format!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let err = io_fail().unwrap_err();
+        let plain = format!("{err}");
+        let alt = format!("{err:#}");
+        assert_eq!(plain, "reading config");
+        assert!(alt.starts_with("reading config: "), "{alt}");
+        assert!(alt.len() > plain.len());
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        fn inner(x: Option<u32>) -> Result<u32> {
+            let v = x.context("missing value")?;
+            if v == 0 {
+                bail!("zero not allowed (got {v})");
+            }
+            Ok(v)
+        }
+        assert_eq!(inner(Some(3)).unwrap(), 3);
+        assert_eq!(format!("{}", inner(None).unwrap_err()), "missing value");
+        let e = inner(Some(0)).unwrap_err();
+        assert_eq!(format!("{e}"), "zero not allowed (got 0)");
+        let direct: Error = anyhow!("plain {}", 42);
+        assert_eq!(format!("{direct}"), "plain 42");
+    }
+}
