@@ -1,15 +1,20 @@
-# Repo task runner. `make verify` is the tier-1 gate (mirrors ci.yml for
-# environments without GitHub Actions).
+# Repo task runner. `make verify` is the tier-1 gate plus the doc gate
+# (mirrors ci.yml for environments without GitHub Actions).
 
-.PHONY: verify fmt test build artifacts
+.PHONY: verify fmt test build doc artifacts
 
-verify: build test
+verify: build test doc
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# Rustdoc gate: broken intra-doc links (and any other rustdoc warning)
+# fail the build. `--lib` because the bin target shares the crate name.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib
 
 fmt:
 	cargo fmt --check

@@ -8,7 +8,8 @@
 //! across its shard lock). The LRU order lives in an intrusive
 //! doubly-linked list over slot indices so touch/evict are O(1), and
 //! `get_or_compute` exposes the fill path the solver uses. Hit/miss
-//! counters feed EXPERIMENTS.md §Perf and the harness `Outcome.note`.
+//! counters feed EXPERIMENTS.md and the harness `Outcome` structured
+//! fields (`cache_hit_rate`, `final_rows`).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -91,6 +92,34 @@ impl RowCache {
     {
         let slot = self.slot_or_compute(key, fill);
         Arc::clone(&self.slots[slot].row)
+    }
+
+    /// Probe half of a caller-batched fill: return the resident row
+    /// (recording a hit and an LRU touch), or record a miss and return
+    /// `None`. The caller computes the missing rows in one batched dispatch
+    /// and stores them with [`Self::put_arc`], which does **not** count
+    /// again — together one probe+fill records exactly one hit or miss.
+    pub fn get_arc(&mut self, key: usize) -> Option<Arc<[f32]>> {
+        if let Some(&slot) = self.map.get(&key) {
+            self.hits += 1;
+            self.touch(slot);
+            Some(Arc::clone(&self.slots[slot].row))
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Insert a row whose miss was already recorded by [`Self::get_arc`];
+    /// counters are left untouched. A resident key keeps its existing row
+    /// (row contents are a pure function of the key) and is only touched.
+    pub fn put_arc(&mut self, key: usize, row: Arc<[f32]>) {
+        debug_assert_eq!(row.len(), self.row_len);
+        if let Some(&slot) = self.map.get(&key) {
+            self.touch(slot);
+            return;
+        }
+        self.insert_slot(key, row);
     }
 
     fn slot_or_compute<F>(&mut self, key: usize, fill: F) -> usize
@@ -264,6 +293,34 @@ mod tests {
         c.get_arc_or_compute(11, |r| r[0] = 11.0); // evicts key 10
         assert!(!c.contains(10));
         assert_eq!(first[0], 10.0); // handle still valid
+    }
+
+    #[test]
+    fn get_arc_put_arc_count_once_per_probe() {
+        let mut c = RowCache::new(2, 1024);
+        assert!(c.get_arc(3).is_none()); // miss recorded
+        assert_eq!((c.hits, c.misses), (0, 1));
+        c.put_arc(3, vec![1.0f32, 2.0].into()); // quiet insert
+        assert_eq!((c.hits, c.misses), (0, 1));
+        let row = c.get_arc(3).expect("resident");
+        assert_eq!(&*row, &[1.0, 2.0]);
+        assert_eq!((c.hits, c.misses), (1, 1));
+        // Quiet re-insert of a resident key keeps the existing row.
+        c.put_arc(3, vec![9.0f32, 9.0].into());
+        assert_eq!(c.peek(3).unwrap(), &[1.0, 2.0]);
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn put_arc_touches_lru_order() {
+        let mut c = RowCache::new(1, 2 * 4); // capacity 2 rows
+        c.put_arc(0, vec![0.0f32].into());
+        c.put_arc(1, vec![1.0f32].into());
+        c.put_arc(0, vec![0.0f32].into()); // touch 0 -> MRU
+        c.put_arc(2, vec![2.0f32].into()); // evicts 1 (LRU)
+        assert!(c.contains(0));
+        assert!(!c.contains(1));
+        assert!(c.contains(2));
     }
 
     #[test]

@@ -125,6 +125,21 @@ impl ShardedRowCache {
         self.shard(key).lock().unwrap().insert_arc(key, Arc::from(row));
     }
 
+    /// Probe for a resident row: a hit (plus LRU touch) returns the handle,
+    /// absence records a miss and returns `None`. Pair with [`Self::put`]
+    /// for caller-batched fills — the probe counts, the store does not, so
+    /// one probe+fill records exactly one hit or miss (the serving path's
+    /// contract; see `serving`).
+    pub fn get(&self, key: usize) -> Option<Arc<[f32]>> {
+        self.shard(key).lock().unwrap().get_arc(key)
+    }
+
+    /// Store a row whose miss was already recorded by [`Self::get`];
+    /// counters unchanged. A resident key keeps its existing row.
+    pub fn put(&self, key: usize, row: Arc<[f32]>) {
+        self.shard(key).lock().unwrap().put_arc(key, row);
+    }
+
     pub fn stats(&self) -> CacheStats {
         let mut s = CacheStats::default();
         for shard in &self.shards {
@@ -181,6 +196,22 @@ mod tests {
         assert_eq!(&*row, &[1.0, 2.0, 3.0]);
         let s = c.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn get_put_probe_then_fill_counts_once() {
+        let c = ShardedRowCache::new(2, 1 << 20, 4);
+        assert!(c.get(9).is_none());
+        c.put(9, vec![1.0f32, 2.0].into());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 1)); // put is quiet
+        let row = c.get(9).expect("resident");
+        assert_eq!(&*row, &[1.0, 2.0]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        // put on a resident key keeps the first row.
+        c.put(9, vec![7.0f32, 7.0].into());
+        assert_eq!(&*c.get(9).unwrap(), &[1.0, 2.0]);
     }
 
     #[test]

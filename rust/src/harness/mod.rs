@@ -20,6 +20,7 @@ use crate::kernel::{native::NativeKernel, BlockKernel, KernelKind};
 use crate::predict::SvmModel;
 use crate::runtime::{Engine, PjrtKernel};
 use crate::solver::SmoSolver;
+use crate::util::json::Json;
 
 static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
 
@@ -56,7 +57,73 @@ pub struct Outcome {
     /// Whole-problem dual objective (exact algos only).
     pub objective: Option<f64>,
     pub svs: usize,
+    /// Hit rate of the run's shared kernel-row cache (kernel-model algos
+    /// that solve through a [`KernelContext`]).
+    pub cache_hit_rate: Option<f64>,
+    /// Kernel rows the final conquer solve computed (exact DC-SVM runs) —
+    /// the cross-phase-reuse metric: strictly lower than a cold-cache
+    /// solve because divide/refine left their rows resident.
+    pub final_rows: Option<u64>,
+    /// Free-text extras (iteration counts, per-algo details). Structured
+    /// metrics live in the typed fields above, not here.
     pub note: String,
+}
+
+impl Outcome {
+    /// Structured record for bench result files: `cache_hit_rate` and
+    /// `final_rows` are first-class fields (not `note` text), so
+    /// EXPERIMENTS.md can track cross-phase reuse over time. See
+    /// [`record_result_to`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algo", Json::from(self.algo)),
+            ("train_s", Json::from(self.train_s)),
+            ("accuracy", Json::from(self.accuracy)),
+            ("objective", self.objective.map(Json::from).unwrap_or(Json::Null)),
+            ("svs", Json::from(self.svs)),
+            (
+                "cache_hit_rate",
+                self.cache_hit_rate.map(Json::from).unwrap_or(Json::Null),
+            ),
+            (
+                "final_rows",
+                self.final_rows.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            ("note", Json::from(self.note.as_str())),
+        ])
+    }
+}
+
+/// Append `{config, outcome}` as one JSON line to `<dir>/results.jsonl`
+/// (creating the directory if needed) — the bench result files
+/// EXPERIMENTS.md ingests.
+pub fn record_result_to(
+    dir: &std::path::Path,
+    cfg: &RunConfig,
+    out: &Outcome,
+) -> std::io::Result<()> {
+    use std::io::Write;
+    std::fs::create_dir_all(dir)?;
+    let line = Json::obj(vec![
+        ("config", cfg.to_json()),
+        ("outcome", out.to_json()),
+    ]);
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join("results.jsonl"))?;
+    writeln!(f, "{line}")
+}
+
+/// Honor `DCSVM_RESULTS_DIR`: when set, every [`run`] appends its outcome
+/// there (benches set it to collect structured result JSONs). Failures are
+/// non-fatal — result recording never kills a run.
+fn record_result(cfg: &RunConfig, out: &Outcome) {
+    if let Ok(dir) = std::env::var("DCSVM_RESULTS_DIR") {
+        if !dir.is_empty() {
+            let _ = record_result_to(std::path::Path::new(&dir), cfg, out);
+        }
+    }
 }
 
 /// Train `cfg.algo` on (`tr`, `te`) and measure.
@@ -86,33 +153,31 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 accuracy: model.accuracy_ctx(te_ctx),
                 objective: Some(res.objective),
                 svs: res.sv_count,
-                note: format!("iters={} cache_hit={:.2}", res.iterations, res.cache_hit_rate),
+                cache_hit_rate: Some(res.cache_hit_rate),
+                final_rows: None,
+                note: format!("iters={}", res.iterations),
             }
         }
         Algo::DcSvm | Algo::DcSvmEarly => {
             let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
             let dcfg = cfg.dcsvm_config()?;
             let res = dcsvm::train(tr, kernel.as_ref(), &dcfg);
-            // Cross-phase reuse of the run's shared kernel context — the
-            // bench JSONs capture this going forward.
+            // Cross-phase reuse of the run's shared kernel context lands in
+            // the structured fields (the bench result JSONs capture it).
             let hit_rate = res.cache_hit_rate();
-            let (accuracy, note) = if res.early_stopped {
+            let (accuracy, final_rows, note) = if res.early_stopped {
                 let em = res.early_model.as_ref().expect("early model");
                 (
                     em.accuracy_ctx(te_ctx),
-                    format!(
-                        "early@level1 local_svs={} cache_hit={hit_rate:.2}",
-                        em.total_svs()
-                    ),
+                    None,
+                    format!("early@level1 local_svs={}", em.total_svs()),
                 )
             } else {
                 let model = SvmModel::from_alpha(tr, &res.alpha, kind);
                 (
                     model.accuracy_ctx(te_ctx),
-                    format!(
-                        "final_iters={} final_rows={} cache_hit={hit_rate:.2}",
-                        res.final_iterations, res.final_rows_computed
-                    ),
+                    Some(res.final_rows_computed),
+                    format!("final_iters={}", res.final_iterations),
                 )
             };
             Outcome {
@@ -121,6 +186,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 accuracy,
                 objective: res.objective,
                 svs: res.sv_count(),
+                cache_hit_rate: Some(hit_rate),
+                final_rows,
                 note,
             }
         }
@@ -143,6 +210,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 accuracy: res.model.accuracy_ctx(te_ctx),
                 objective: Some(crate::metrics::objective_of(tr, kernel.as_ref(), &res.alpha)),
                 svs: res.model.num_svs(),
+                cache_hit_rate: None,
+                final_rows: None,
                 note: format!("levels={:?}", res.level_sv_counts),
             }
         }
@@ -164,6 +233,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 accuracy: res.model.accuracy_ctx(te_ctx),
                 objective: Some(crate::metrics::objective_of(tr, kernel.as_ref(), &res.alpha)),
                 svs: res.model.num_svs(),
+                cache_hit_rate: Some(tr_ctx.hit_rate()),
+                final_rows: None,
                 note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
             }
         }
@@ -187,6 +258,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 accuracy: model.accuracy_with_norms(te, te_ctx.norms()),
                 objective: None,
                 svs: cfg.budget,
+                cache_hit_rate: None,
+                final_rows: None,
                 note: format!("landmarks={}", cfg.budget),
             }
         }
@@ -206,6 +279,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 accuracy: model.accuracy(te),
                 objective: None,
                 svs: 0,
+                cache_hit_rate: None,
+                final_rows: None,
                 note: format!("features={}", cfg.budget * 8),
             }
         }
@@ -225,6 +300,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 accuracy: model.accuracy(te),
                 objective: None,
                 svs: 0,
+                cache_hit_rate: None,
+                final_rows: None,
                 note: format!("units={}", cfg.budget),
             }
         }
@@ -249,11 +326,14 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 accuracy: model.accuracy_with_norms(te, te_ctx.norms()),
                 objective: None,
                 svs: model.basis_size,
+                cache_hit_rate: None,
+                final_rows: None,
                 note: format!("basis={}", model.basis_size),
             }
         }
     };
     let _ = t0;
+    record_result(cfg, &outcome);
     Ok(outcome)
 }
 
@@ -328,11 +408,39 @@ mod tests {
     }
 
     #[test]
-    fn dcsvm_note_reports_cache_hit_rate() {
+    fn dcsvm_reports_structured_cache_stats() {
         let cfg = small_cfg(Algo::DcSvm);
         let (tr, te) = load_dataset(&cfg).unwrap();
         let out = run(&cfg, &tr, &te).unwrap();
-        assert!(out.note.contains("cache_hit="), "note: {}", out.note);
+        // Promoted out of the free-text note into typed fields.
+        let hit = out.cache_hit_rate.expect("cache_hit_rate recorded");
+        assert!((0.0..=1.0).contains(&hit), "hit rate {hit}");
+        assert!(out.final_rows.is_some(), "final_rows recorded for exact dcsvm");
+        assert!(!out.note.contains("cache_hit="), "note: {}", out.note);
+        let j = out.to_json();
+        assert_eq!(j.get("cache_hit_rate").as_f64(), Some(hit));
+        assert!(j.get("final_rows").as_f64().is_some());
+    }
+
+    #[test]
+    fn record_result_appends_structured_jsonl() {
+        let cfg = small_cfg(Algo::DcSvmEarly);
+        let (tr, te) = load_dataset(&cfg).unwrap();
+        let out = run(&cfg, &tr, &te).unwrap();
+        let dir = std::env::temp_dir().join("dcsvm_results_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        record_result_to(&dir, &cfg, &out).unwrap();
+        record_result_to(&dir, &cfg, &out).unwrap();
+        let text = std::fs::read_to_string(dir.join("results.jsonl")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("config").get("dataset").as_str(), Some("covtype-like"));
+            assert_eq!(j.get("outcome").get("algo").as_str(), Some(out.algo));
+            assert!(j.get("outcome").get("cache_hit_rate").as_f64().is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

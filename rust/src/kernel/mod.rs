@@ -101,7 +101,7 @@ pub trait BlockKernel: Sync + Send {
         out: &mut [f32],
     );
 
-    /// Fused decision values: out[i] = Σ_j coef[j]·K(xq_i, xd_j).
+    /// Fused decision values: `out[i] = Σ_j coef[j]·K(xq_i, xd_j)`.
     /// Default materializes the block; the PJRT backend overrides with the
     /// fused artifact.
     fn decision(

@@ -20,8 +20,8 @@ impl NativeKernel {
     }
 }
 
-/// Register-blocked dot-product panel: computes out[i*nd+j] = <q_i, d_j> for
-/// a 4-row query panel, letting the compiler keep 4 accumulators live.
+/// Register-blocked dot-product panel: computes `out[i*nd+j] = <q_i, d_j>`
+/// for a 4-row query panel, letting the compiler keep 4 accumulators live.
 #[inline]
 fn dot_panel4(xq: &[f32], xd: &[f32], dim: usize, nd: usize, out: &mut [f32]) {
     // xq: [4, dim], out: [4, nd]

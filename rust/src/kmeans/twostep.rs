@@ -135,6 +135,75 @@ impl Router {
         let norm: f32 = x.iter().map(|&v| v * v).sum();
         self.assign_rows(x, &[norm], kernel)[0]
     }
+
+    /// Feature dimension the router was fitted on.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Serialize for model persistence (the early-prediction serving path).
+    /// Sample norms are recomputed on load, exactly as [`Router::fit`]
+    /// computes them, so a round-tripped router assigns identically.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("dim", Json::from(self.dim)),
+            ("k", Json::from(self.k)),
+            (
+                "sample_x",
+                Json::arr_f64(&self.sample_x.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "sample_assign",
+                Json::arr_f64(
+                    &self.sample_assign.iter().map(|&c| c as f64).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "counts",
+                Json::arr_f64(&self.counts.iter().map(|&c| c as f64).collect::<Vec<_>>()),
+            ),
+            ("self_term", Json::arr_f64(&self.self_term)),
+        ])
+    }
+
+    /// Deserialize a router saved by [`Router::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Router> {
+        use anyhow::{anyhow, bail};
+        let dim = j.get("dim").as_usize().ok_or_else(|| anyhow!("router: missing dim"))?;
+        let k = j.get("k").as_usize().ok_or_else(|| anyhow!("router: missing k"))?;
+        let f64s = |key: &str| -> anyhow::Result<Vec<f64>> {
+            Ok(j.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("router: missing {key}"))?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0))
+                .collect())
+        };
+        let sample_x: Vec<f32> = f64s("sample_x")?.iter().map(|&v| v as f32).collect();
+        let sample_assign: Vec<u16> =
+            f64s("sample_assign")?.iter().map(|&v| v as u16).collect();
+        let counts: Vec<usize> = f64s("counts")?.iter().map(|&v| v as usize).collect();
+        let self_term = f64s("self_term")?;
+        if dim == 0 || k == 0 {
+            bail!("router: dim/k must be positive");
+        }
+        let m = sample_assign.len();
+        if m == 0 || sample_x.len() != m * dim {
+            bail!("router: sample_x/sample_assign/dim inconsistent");
+        }
+        if counts.len() != k || self_term.len() != k {
+            bail!("router: counts/self_term must have k entries");
+        }
+        if sample_assign.iter().any(|&c| c as usize >= k) {
+            bail!("router: sample assignment out of range");
+        }
+        let sample_norms: Vec<f32> = sample_x
+            .chunks(dim)
+            .map(|r| r.iter().map(|&v| v * v).sum())
+            .collect();
+        Ok(Router { sample_x, sample_norms, dim, sample_assign, counts, self_term, k })
+    }
 }
 
 /// A partition of a dataset into k clusters.
@@ -293,6 +362,41 @@ mod tests {
         let (router, _) = two_step_partition(&ctx, 2, 32, Some(&pool), &mut rng);
         assert_eq!(router.k, 2);
         assert!(router.sample_size() <= 32);
+    }
+
+    #[test]
+    fn router_json_roundtrip_routes_identically() {
+        let ds = blobs(240, 7);
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let ctx = KernelContext::new(&ds, &kern, 1 << 20);
+        let mut rng = Pcg64::new(8);
+        let (router, _) = two_step_partition(&ctx, 4, 48, None, &mut rng);
+        let text = router.to_json().to_string();
+        let back =
+            Router::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.k, router.k);
+        assert_eq!(back.dim(), router.dim());
+        assert_eq!(back.sample_size(), router.sample_size());
+        let norms = ds.sq_norms();
+        assert_eq!(
+            back.assign_rows(&ds.x, &norms, &kern),
+            router.assign_rows(&ds.x, &norms, &kern)
+        );
+    }
+
+    #[test]
+    fn router_from_json_rejects_inconsistent_shapes() {
+        let ds = blobs(60, 9);
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let ctx = KernelContext::new(&ds, &kern, 1 << 20);
+        let mut rng = Pcg64::new(10);
+        let (router, _) = two_step_partition(&ctx, 2, 16, None, &mut rng);
+        let good = router.to_json().to_string();
+        // Drop a required field.
+        let broken = good.replace("\"sample_x\"", "\"nope\"");
+        assert!(
+            Router::from_json(&crate::util::json::Json::parse(&broken).unwrap()).is_err()
+        );
     }
 
     #[test]

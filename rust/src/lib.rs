@@ -7,8 +7,8 @@
 //! - **L3 (this crate)**: the DC-SVM framework — multilevel
 //!   divide-and-conquer driver, two-step kernel kmeans, exact greedy-CD
 //!   (SMO-style) solver with shrinking and an LRU kernel cache, early
-//!   prediction, every baseline from the paper's evaluation, CLI, and bench
-//!   harness.
+//!   prediction, every baseline from the paper's evaluation, the
+//!   persistent serving subsystem (`serving`), CLI, and bench harness.
 //! - **runtime**: loads AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`)
 //!   and executes kernel blocks via the PJRT CPU client (`xla` crate).
 //! - **L2/L1 (python/, build-time only)**: JAX graphs over Pallas kernels,
@@ -40,4 +40,5 @@ pub mod linalg;
 pub mod metrics;
 pub mod multiclass;
 pub mod predict;
+pub mod serving;
 pub mod util;

@@ -6,6 +6,7 @@
 //! dcsvm predict --model m.json --dataset covtype-like
 //! dcsvm kmeans  [--dataset ...] [--k-base 4] # partition quality report
 //! dcsvm sweep   [--dataset ...]          # (C, γ) grid, Tables 7–10 style
+//! dcsvm serve   --model m.json [--batch 256] [--workers 4] [--cache-mb 64]
 //! dcsvm info                             # backend/artifact status
 //! ```
 //!
@@ -13,7 +14,7 @@
 //! later flags override (see rust/src/config). Python is never invoked:
 //! the PJRT backend loads pre-built `artifacts/*.hlo.txt`.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use dcsvm::bench::{fmt_secs, Table};
 use dcsvm::config::{Algo, RunConfig};
@@ -21,6 +22,7 @@ use dcsvm::data::synthetic;
 use dcsvm::harness;
 use dcsvm::kernel::BlockKernel;
 use dcsvm::predict::SvmModel;
+use dcsvm::serving::{ServingContext, ServingModel};
 use dcsvm::util::json::Json;
 use dcsvm::util::logging;
 use dcsvm::util::prng::Pcg64;
@@ -66,7 +68,9 @@ fn print_usage() {
          \x20 predict  --model M [--flags]  load a saved model, evaluate\n\
          \x20 kmeans   [--flags]            two-step kernel kmeans report\n\
          \x20 sweep    [--flags]            (C, γ) grid (Tables 7–10 style)\n\
-         \x20 serve    --model M [--batch B] predict LIBSVM-format rows from stdin\n\
+         \x20 serve    --model M [--batch B] [--workers N] [--cache-mb MB]\n\
+         \x20                               persistent server: LIBSVM rows on stdin,\n\
+         \x20                               per-batch JSON stats on stderr\n\
          \x20 info                          backend / artifact status\n\
          \n\
          common flags: --algo {{dcsvm,early,libsvm,cascade,lasvm,llsvm,fastfood,ltpu,spsvm}}\n\
@@ -143,12 +147,20 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.backend
     );
     let out = harness::run(&cfg, &tr, &te)?;
+    let mut extra = String::new();
+    if let Some(h) = out.cache_hit_rate {
+        extra.push_str(&format!(" cache_hit={h:.2}"));
+    }
+    if let Some(r) = out.final_rows {
+        extra.push_str(&format!(" final_rows={r}"));
+    }
     println!(
-        "{}: time={} acc={:.2}% svs={} {}",
+        "{}: time={} acc={:.2}% svs={}{} {}",
         out.algo,
         fmt_secs(out.train_s),
         100.0 * out.accuracy,
         out.svs,
+        extra,
         out.note
     );
     if let Some(obj) = out.objective {
@@ -157,24 +169,40 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(path) = &cfg.save_model {
         let kind = cfg.kernel_kind()?;
         let kernel = harness::make_kernel(kind, &cfg.backend, tr.dim)?;
-        let model = train_model_for_save(&cfg, &tr, kernel.as_ref())?;
-        std::fs::write(path, model.to_json().to_string())?;
-        println!("model saved to {path} ({} SVs)", model.num_svs());
+        let (json, svs) = train_model_for_save(&cfg, &tr, kernel.as_ref())?;
+        std::fs::write(path, json.to_string())?;
+        println!("model saved to {path} ({svs} SVs)");
     }
     Ok(())
 }
 
+/// Train and serialize the model `--save-model` writes: an exact
+/// [`SvmModel`] for dcsvm/libsvm, the early-prediction model (router +
+/// local models) for `--algo early` — both loadable by `dcsvm serve`.
+/// Note: this trains a second time after `harness::run`'s measured run
+/// (the harness reports metrics, not models); threading models out of
+/// the harness to avoid the retrain is future work.
 fn train_model_for_save(
     cfg: &RunConfig,
     tr: &dcsvm::data::Dataset,
     kernel: &dyn BlockKernel,
-) -> Result<SvmModel> {
+) -> Result<(Json, usize)> {
     match cfg.algo {
         Algo::Libsvm | Algo::DcSvm => {
             let res = dcsvm::dcsvm::train(tr, kernel, &cfg.dcsvm_config()?);
-            Ok(SvmModel::from_alpha(tr, &res.alpha, cfg.kernel_kind()?))
+            let model = SvmModel::from_alpha(tr, &res.alpha, cfg.kernel_kind()?);
+            let svs = model.num_svs();
+            Ok((model.to_json(), svs))
         }
-        _ => bail!("--save-model supports exact algos (dcsvm, libsvm)"),
+        Algo::DcSvmEarly => {
+            let res = dcsvm::dcsvm::train(tr, kernel, &cfg.dcsvm_config()?);
+            let em = res
+                .early_model
+                .ok_or_else(|| anyhow!("early run produced no early model"))?;
+            let svs = em.total_svs();
+            Ok((em.to_json(), svs))
+        }
+        _ => bail!("--save-model supports kernel-expansion algos (dcsvm, early, libsvm)"),
     }
 }
 
@@ -300,49 +328,73 @@ fn cmd_info() -> Result<()> {
 }
 
 /// Request loop: read LIBSVM-format rows from stdin, emit one decision
-/// value + label per line. Batches up to `--batch` rows per kernel-block
-/// dispatch — the "Python never on the request path" serving demo: the
-/// whole pipeline is the saved model + the AOT artifacts.
+/// value + label per line on stdout and one JSON stats line per request
+/// batch on stderr. The whole pipeline is the saved model + the AOT
+/// artifacts ("Python never on the request path"), and all state —
+/// deserialized model, SV norms, kernel backend, the serving row cache —
+/// lives in one persistent [`ServingContext`]: kernel rows against the SV
+/// set computed for one batch are reused by every later batch.
 fn cmd_serve(args: &[String]) -> Result<()> {
     use std::io::BufRead;
-    let mut model_path = None;
+
+    const USAGE: &str = "usage: dcsvm serve --model FILE [--batch N] [--workers N] \
+                         [--cache-mb MB] [--backend auto|native|pjrt]";
+    let mut model_path: Option<String> = None;
     let mut batch = 256usize;
+    let mut workers = dcsvm::util::threadpool::default_threads();
+    let mut cache_mb = 64usize;
     let mut backend = "auto".to_string();
     let mut i = 0;
     while i < args.len() {
-        match args[i].as_str() {
-            "--model" => {
-                model_path = args.get(i + 1).cloned();
-                i += 2;
-            }
-            "--batch" => {
-                batch = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(256);
-                i += 2;
-            }
-            "--backend" => {
-                backend = args.get(i + 1).cloned().unwrap_or_default();
-                i += 2;
-            }
-            other => bail!("serve: unknown flag '{other}'"),
+        let key = args[i].as_str();
+        // Reject unknown flags before demanding a value, so `--verbose`
+        // errors as unknown rather than "needs a value".
+        if !matches!(key, "--model" | "--batch" | "--workers" | "--cache-mb" | "--backend") {
+            bail!("serve: unknown flag '{key}'\n{USAGE}");
         }
+        let Some(val) = args.get(i + 1) else {
+            bail!("serve: flag {key} needs a value\n{USAGE}");
+        };
+        let positive = |flag: &str| -> Result<usize> {
+            let n: usize = val.parse().map_err(|_| {
+                anyhow!("serve: {flag} needs a positive integer, got '{val}'\n{USAGE}")
+            })?;
+            if n == 0 {
+                bail!("serve: {flag} must be at least 1\n{USAGE}");
+            }
+            Ok(n)
+        };
+        match key {
+            "--model" => model_path = Some(val.clone()),
+            "--batch" => batch = positive("--batch")?,
+            "--workers" => workers = positive("--workers")?,
+            "--cache-mb" => cache_mb = positive("--cache-mb")?,
+            _ => backend = val.clone(),
+        }
+        i += 2;
     }
     let Some(model_path) = model_path else {
-        bail!("serve requires --model FILE");
+        bail!("serve requires --model FILE\n{USAGE}");
     };
-    let text = std::fs::read_to_string(&model_path)?;
-    let model = SvmModel::from_json(&Json::parse(&text)?)?;
-    let kernel = harness::make_kernel(model.kind, &backend, model.dim)?;
+    let text = std::fs::read_to_string(&model_path)
+        .with_context(|| format!("read {model_path}"))?;
+    let model = ServingModel::from_json(&Json::parse(&text)?)?;
+    let kernel = harness::make_kernel(model.kind(), &backend, model.dim())?;
+    let ctx = ServingContext::new(model, kernel, cache_mb << 20);
     eprintln!(
-        "serving model {} ({} SVs, dim {}), batch {batch} — LIBSVM rows on stdin",
+        "serving {} model {} ({} SVs, dim {}), batch {batch}, {workers} workers, \
+         cache {cache_mb} MB — LIBSVM rows on stdin",
+        ctx.model().describe(),
         model_path,
-        model.num_svs(),
-        model.dim
+        ctx.num_svs(),
+        ctx.dim()
     );
 
     let stdin = std::io::stdin();
     let mut lines = stdin.lock().lines();
     let mut buf: Vec<String> = Vec::with_capacity(batch);
     let mut served = 0usize;
+    let mut batches = 0usize;
     let t0 = std::time::Instant::now();
     loop {
         buf.clear();
@@ -360,25 +412,32 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         let joined = buf.join("\n");
         let ds = dcsvm::data::libsvm::parse_libsvm(
             std::io::Cursor::new(joined),
-            Some(model.dim),
+            Some(ctx.dim()),
             "stdin".into(),
         )?;
-        // Per-batch context: precomputed norms + one batched decision
-        // dispatch for the whole request batch.
-        let bctx = dcsvm::cache::KernelContext::new(&ds, kernel.as_ref(), 1 << 10);
-        let dv = model.decision_batch(&ds.x, bctx.norms(), kernel.as_ref());
+        let (dv, stats) = ctx.decide(&ds.x, workers);
         let mut out = String::new();
         for &d in &dv {
             out.push_str(&format!("{} {:.6}\n", if d >= 0.0 { "+1" } else { "-1" }, d));
         }
         print!("{out}");
         served += dv.len();
+        eprintln!("{}", stats.to_json(batches));
+        batches += 1;
     }
     let dt = t0.elapsed().as_secs_f64();
-    eprintln!(
-        "served {served} predictions in {} ({:.0} pred/s)",
-        fmt_secs(dt),
-        served as f64 / dt.max(1e-9)
-    );
+    let totals = ctx.stats();
+    let summary = Json::obj(vec![
+        ("batches", Json::from(batches)),
+        ("served", Json::from(served)),
+        ("total_s", Json::from(dt)),
+        ("pred_per_s", Json::from(served as f64 / dt.max(1e-9))),
+        ("cache_hits", Json::from(totals.hits as f64)),
+        ("cache_misses", Json::from(totals.misses as f64)),
+        ("hit_rate", Json::from(totals.hit_rate())),
+        ("workers", Json::from(workers)),
+        ("batch", Json::from(batch)),
+    ]);
+    eprintln!("{summary}");
     Ok(())
 }

@@ -15,6 +15,11 @@
 //! gathered from the context's precomputed norms and batch decisions run
 //! through the context's backend — no `sq_norms()` recomputation for
 //! datasets that already have a context.
+//!
+//! [`SvmModel`] and [`EarlyModel`] serialize to JSON (`to_json` /
+//! `from_json`) for the CLI train→save→serve flow; the serving layer
+//! ([`crate::serving::ServingModel`]) distinguishes the two by the
+//! early model's `"router"` field.
 
 use crate::cache::KernelContext;
 use crate::data::Dataset;
@@ -93,6 +98,7 @@ impl SvmModel {
         SvmModel { sv_x, sv_norms, coef, dim, kind: ctx.kind() }
     }
 
+    /// Number of support vectors in the expansion.
     pub fn num_svs(&self) -> usize {
         self.coef.len()
     }
@@ -122,6 +128,8 @@ impl SvmModel {
         out
     }
 
+    /// ±1 predictions for a row-major batch (sign of the decision value,
+    /// 0 ↦ +1).
     pub fn predict_batch(
         &self,
         x: &[f32],
@@ -157,6 +165,7 @@ impl SvmModel {
             KernelKind::Linear => ("linear", 0.0, 0.0),
         };
         Json::obj(vec![
+            ("type", Json::from("svm")),
             ("kernel", Json::from(kname)),
             ("gamma", Json::from(gamma)),
             ("eta", Json::from(eta)),
@@ -213,6 +222,9 @@ impl EarlyModel {
         EarlyModel { router, locals }
     }
 
+    /// ±1 predictions: each query is routed to its cluster and evaluated
+    /// by that cluster's local model only (one backend dispatch per
+    /// non-empty cluster).
     pub fn predict_batch(
         &self,
         x: &[f32],
@@ -260,6 +272,60 @@ impl EarlyModel {
     /// Total SVs across local models (test cost is |S|/k per point).
     pub fn total_svs(&self) -> usize {
         self.locals.iter().map(|m| m.num_svs()).sum()
+    }
+
+    /// Feature dimension (every local model shares it).
+    pub fn dim(&self) -> usize {
+        self.locals.first().map(|m| m.dim).unwrap_or_else(|| self.router.dim())
+    }
+
+    /// Kernel of the local models (shared; locals with zero SVs still carry
+    /// the kind they were built with).
+    pub fn kind(&self) -> KernelKind {
+        self.locals.first().expect("early model has at least one local").kind
+    }
+
+    /// Serialize (router + per-cluster local models) for model persistence.
+    /// The `"router"` key distinguishes early models from plain
+    /// [`SvmModel`] files when loading.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("type", Json::from("early")),
+            ("router", self.router.to_json()),
+            ("locals", Json::Arr(self.locals.iter().map(|m| m.to_json()).collect())),
+        ])
+    }
+
+    /// Deserialize a model saved by [`EarlyModel::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<EarlyModel> {
+        use anyhow::{anyhow, bail};
+        let router = Router::from_json(j.get("router"))?;
+        let locals: Vec<SvmModel> = j
+            .get("locals")
+            .as_arr()
+            .ok_or_else(|| anyhow!("early model: missing locals"))?
+            .iter()
+            .map(SvmModel::from_json)
+            .collect::<anyhow::Result<_>>()?;
+        if locals.is_empty() {
+            bail!("early model: locals must be non-empty");
+        }
+        if locals.len() != router.k {
+            bail!(
+                "early model: {} locals for a k={} router",
+                locals.len(),
+                router.k
+            );
+        }
+        let (dim, kind) = (locals[0].dim, locals[0].kind);
+        if locals.iter().any(|m| m.dim != dim || m.kind != kind) {
+            bail!("early model: locals disagree on dim/kernel");
+        }
+        if router.dim() != dim {
+            bail!("early model: router dim {} != model dim {dim}", router.dim());
+        }
+        Ok(EarlyModel { router, locals })
     }
 }
 
@@ -374,6 +440,35 @@ mod tests {
         let norms = tr.sq_norms();
         let preds = model.predict_batch(&tr.x, &norms, &kern);
         assert!(preds.iter().all(|&p| p == 1)); // decision 0.0 -> sign +1
+    }
+
+    #[test]
+    fn early_model_json_roundtrip_predicts_identically() {
+        let (tr, te) = generate_split(&covtype_like(), 500, 120, 21);
+        let kind = KernelKind::Rbf { gamma: 16.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = crate::dcsvm::DcSvmConfig {
+            kind,
+            c: 4.0,
+            levels: 2,
+            k_base: 4,
+            sample_m: 64,
+            stop_after_level: Some(1),
+            ..Default::default()
+        };
+        let res = crate::dcsvm::train(&tr, &kern, &cfg);
+        let em = res.early_model.expect("early model");
+        let text = em.to_json().to_string();
+        let back =
+            EarlyModel::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.dim(), em.dim());
+        assert_eq!(back.kind(), em.kind());
+        assert_eq!(back.total_svs(), em.total_svs());
+        let norms = te.sq_norms();
+        assert_eq!(
+            back.predict_batch(&te.x, &norms, &kern),
+            em.predict_batch(&te.x, &norms, &kern)
+        );
     }
 
     #[test]

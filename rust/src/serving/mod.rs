@@ -1,0 +1,613 @@
+//! Persistent serving subsystem: cross-request kernel reuse for
+//! `dcsvm serve`.
+//!
+//! The paper's headline serving result (early prediction: ~96% covtype
+//! accuracy at ~100× LIBSVM's prediction speed) is only reachable if the
+//! request path stops re-paying per-batch setup. The old serve loop built a
+//! throwaway [`crate::cache::KernelContext`] per stdin batch, so every
+//! batch recomputed SV norms and every kernel value — the serving-path
+//! twin of the training-side waste the shared context removed.
+//!
+//! [`ServingContext`] is built **once** per loaded model and lives for the
+//! whole process:
+//!
+//! - it owns the deserialized [`ServingModel`] (exact [`SvmModel`] or the
+//!   early-prediction [`EarlyModel`]), whose SV rows/norms/coefficients are
+//!   the dataset the kernel runs against;
+//! - it owns the [`BlockKernel`] backend (native or PJRT), so backend
+//!   selection and artifact lookup happen once;
+//! - it owns one byte-budgeted [`ShardedRowCache`] per decision component
+//!   (one for an exact model, one per cluster for an early model) holding
+//!   **kernel rows against that component's SV set**: entry =
+//!   `[query (dim) | K(query, sv_0..sv_s)]`, keyed by a 64-bit content
+//!   fingerprint of the query row. Repeated queries — health probes, hot
+//!   keys, retried requests, replayed batches — hit instead of recompute,
+//!   across request batches, for the life of the process.
+//!
+//! Decisions are evaluated from the cached row (`Σ_j coef_j · row_j`, fixed
+//! order), so a hit is bit-identical to the original computation: two
+//! identical batches produce identical decision values while the second
+//! computes zero kernel rows against the SV set
+//! (`tests/serving_roundtrip.rs`). Early-model *routing* (one
+//! K(batch, sample) dispatch, O(n·m·d)) is recomputed per batch — it is
+//! not covered by the row cache; caching routed components per
+//! fingerprint is a ROADMAP follow-up.
+//!
+//! Correctness under fingerprint collisions: the query itself is stored as
+//! the entry prefix and verified on every hit. A colliding key (probability
+//! ~2⁻⁶⁴ per pair) degrades to an uncached recompute — never a wrong row.
+//!
+//! Request batches are micro-batched across a `--workers` scoped pool
+//! ([`scope_map`]); the sharded cache admits concurrent fills, and outputs
+//! are returned in input order regardless of worker count. Each
+//! [`ServingContext::decide`] call returns a [`BatchStats`] —
+//! latency/throughput/hit counters serialized as one JSON line per request
+//! batch by the CLI.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cache::{CacheStats, ShardedRowCache};
+use crate::kernel::{BlockKernel, KernelKind};
+use crate::predict::{EarlyModel, SvmModel};
+use crate::util::json::Json;
+use crate::util::threadpool::scope_map;
+
+/// Shard count of each serving cache: enough to keep `--workers` request
+/// threads from serializing on fills.
+const SERVE_SHARDS: usize = 16;
+
+/// A deserialized model the serving layer can evaluate.
+pub enum ServingModel {
+    /// The exact global model: one SV set, one decision function.
+    Exact(SvmModel),
+    /// The paper's early-prediction model (eq. 11): route to a cluster,
+    /// evaluate only that cluster's local model.
+    Early(EarlyModel),
+}
+
+impl ServingModel {
+    /// Load from model-file JSON. Early-model files carry a `"router"`
+    /// object ([`EarlyModel::to_json`]); everything else parses as a plain
+    /// [`SvmModel`] (including pre-`"type"`-field files).
+    pub fn from_json(j: &Json) -> Result<ServingModel> {
+        if j.get("router").as_obj().is_some() {
+            Ok(ServingModel::Early(EarlyModel::from_json(j)?))
+        } else {
+            Ok(ServingModel::Exact(SvmModel::from_json(j)?))
+        }
+    }
+
+    /// Feature dimension queries must have.
+    pub fn dim(&self) -> usize {
+        match self {
+            ServingModel::Exact(m) => m.dim,
+            ServingModel::Early(em) => em.dim(),
+        }
+    }
+
+    /// Kernel family + parameters the backend must implement.
+    pub fn kind(&self) -> KernelKind {
+        match self {
+            ServingModel::Exact(m) => m.kind,
+            ServingModel::Early(em) => em.kind(),
+        }
+    }
+
+    /// Total support vectors (across locals for an early model).
+    pub fn num_svs(&self) -> usize {
+        match self {
+            ServingModel::Exact(m) => m.num_svs(),
+            ServingModel::Early(em) => em.total_svs(),
+        }
+    }
+
+    /// Short human-readable tag for logs ("exact" / "early(k=16)").
+    pub fn describe(&self) -> String {
+        match self {
+            ServingModel::Exact(_) => "exact".to_string(),
+            ServingModel::Early(em) => format!("early(k={})", em.locals.len()),
+        }
+    }
+}
+
+/// Per-request-batch serving statistics: one [`ServingContext::decide`]
+/// call produces one of these, and the CLI emits it as a JSON line.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Queries in the batch.
+    pub rows: usize,
+    /// Wall-clock of the whole decide call (routing + kernel + reduction).
+    pub latency_s: f64,
+    /// Serving-cache hits this batch (queries answered without any kernel
+    /// computation).
+    pub cache_hits: u64,
+    /// Serving-cache misses this batch.
+    pub cache_misses: u64,
+    /// Kernel rows (query × SV-set) actually computed this batch; a fully
+    /// warm batch computes zero.
+    pub rows_computed: u64,
+}
+
+impl BatchStats {
+    /// Hit fraction of this batch's cache probes.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Predictions per second.
+    pub fn throughput(&self) -> f64 {
+        self.rows as f64 / self.latency_s.max(1e-9)
+    }
+
+    /// The structured per-request summary line (`--workers`/latency/cache
+    /// plumbing for dashboards and EXPERIMENTS.md).
+    pub fn to_json(&self, batch_index: usize) -> Json {
+        Json::obj(vec![
+            ("batch", Json::from(batch_index)),
+            ("rows", Json::from(self.rows)),
+            ("latency_ms", Json::from(self.latency_s * 1e3)),
+            ("pred_per_s", Json::from(self.throughput())),
+            ("cache_hits", Json::from(self.cache_hits as f64)),
+            ("cache_misses", Json::from(self.cache_misses as f64)),
+            ("hit_rate", Json::from(self.hit_rate())),
+            ("rows_computed", Json::from(self.rows_computed as f64)),
+        ])
+    }
+}
+
+/// Persistent per-model serving state: model + backend + per-component
+/// serving caches. Construct once per loaded model; share across all
+/// request batches (it is `Sync` — workers only need `&self`).
+pub struct ServingContext {
+    model: ServingModel,
+    kernel: Box<dyn BlockKernel>,
+    dim: usize,
+    /// One cache per decision component: index 0 for an exact model, index
+    /// c for early-model cluster c. Entry layout:
+    /// `[query (dim) | K(query, component SVs)]`.
+    caches: Vec<ShardedRowCache>,
+}
+
+impl ServingContext {
+    /// Build the persistent context. `cache_bytes` is the total serving
+    /// cache budget, split across components proportional to their entry
+    /// length (an empty component still gets the one-row-per-shard floor).
+    pub fn new(
+        model: ServingModel,
+        kernel: Box<dyn BlockKernel>,
+        cache_bytes: usize,
+    ) -> ServingContext {
+        assert_eq!(
+            kernel.kind(),
+            model.kind(),
+            "kernel backend kind mismatch with model"
+        );
+        let dim = model.dim();
+        let comp_svs: Vec<usize> = match &model {
+            ServingModel::Exact(m) => vec![m.num_svs()],
+            ServingModel::Early(em) => em.locals.iter().map(|m| m.num_svs()).collect(),
+        };
+        let total_len: usize = comp_svs.iter().map(|&s| dim + s).sum::<usize>().max(1);
+        let caches = comp_svs
+            .iter()
+            .map(|&s| {
+                let row_len = dim + s;
+                let budget =
+                    (cache_bytes as u128 * row_len as u128 / total_len as u128) as usize;
+                ShardedRowCache::new(row_len, budget, SERVE_SHARDS)
+            })
+            .collect();
+        ServingContext { model, kernel, dim, caches }
+    }
+
+    /// The model being served.
+    pub fn model(&self) -> &ServingModel {
+        &self.model
+    }
+
+    /// Feature dimension queries must have.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Total support vectors of the served model.
+    pub fn num_svs(&self) -> usize {
+        self.model.num_svs()
+    }
+
+    /// Lifetime hit/miss counters aggregated over all component caches.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for c in &self.caches {
+            let cs = c.stats();
+            s.hits += cs.hits;
+            s.misses += cs.misses;
+        }
+        s
+    }
+
+    /// Decision values for a row-major query batch (`x.len() == n · dim`).
+    /// Queries are routed (early models), micro-batched across `workers`
+    /// threads, and answered through the persistent serving cache; outputs
+    /// are in input order for any worker count.
+    pub fn decide(&self, x: &[f32], workers: usize) -> (Vec<f32>, BatchStats) {
+        let t0 = std::time::Instant::now();
+        assert_eq!(x.len() % self.dim.max(1), 0, "query batch/dim mismatch");
+        let n = x.len() / self.dim.max(1);
+        if n == 0 {
+            return (
+                Vec::new(),
+                BatchStats { latency_s: t0.elapsed().as_secs_f64(), ..Default::default() },
+            );
+        }
+        // Route every query to its decision component. (Routing for early
+        // models is one K(batch, sample) dispatch recomputed per batch —
+        // the serving cache eliminates kernel rows against the SV set,
+        // not routing; see the module docs.)
+        let assign: Vec<u16> = match &self.model {
+            ServingModel::Exact(_) => vec![0u16; n],
+            ServingModel::Early(em) => {
+                let norms: Vec<f32> = x
+                    .chunks(self.dim)
+                    .map(|r| r.iter().map(|&v| v * v).sum())
+                    .collect();
+                em.router.assign_rows(x, &norms, self.kernel.as_ref())
+            }
+        };
+
+        // Micro-batch across workers; scope_map returns in input order.
+        let workers = workers.max(1).min(n);
+        let chunk = (n + workers - 1) / workers;
+        let jobs: Vec<(usize, usize)> =
+            (0..n).step_by(chunk).map(|lo| (lo, (lo + chunk).min(n))).collect();
+        let assign_ref = &assign;
+        let parts: Vec<(Vec<f32>, RangeStats)> = scope_map(workers, jobs, |_, (lo, hi)| {
+            self.decide_range(x, assign_ref, lo, hi)
+        });
+
+        // Counters are threaded per worker (not derived from global cache
+        // deltas), so concurrent decide() calls on the shared context each
+        // report only their own batch's hits/misses.
+        let mut dv = Vec::with_capacity(n);
+        let mut agg = RangeStats::default();
+        for (part, rs) in parts {
+            dv.extend_from_slice(&part);
+            agg.computed += rs.computed;
+            agg.hits += rs.hits;
+            agg.misses += rs.misses;
+        }
+        (
+            dv,
+            BatchStats {
+                rows: n,
+                latency_s: t0.elapsed().as_secs_f64(),
+                cache_hits: agg.hits,
+                cache_misses: agg.misses,
+                rows_computed: agg.computed,
+            },
+        )
+    }
+
+    /// ±1 predictions (sign of [`Self::decide`], decision 0 ↦ +1).
+    pub fn predict(&self, x: &[f32], workers: usize) -> (Vec<i8>, BatchStats) {
+        let (dv, stats) = self.decide(x, workers);
+        (dv.into_iter().map(|d| if d >= 0.0 { 1 } else { -1 }).collect(), stats)
+    }
+
+    /// SV rows / norms / coefficients of decision component `c`.
+    fn component(&self, c: usize) -> (&[f32], &[f32], &[f32]) {
+        let m = match &self.model {
+            ServingModel::Exact(m) => m,
+            ServingModel::Early(em) => &em.locals[c],
+        };
+        (&m.sv_x, &m.sv_norms, &m.coef)
+    }
+
+    /// Decide queries `lo..hi` (one worker's micro-batch): probe the
+    /// component cache per query, batch-compute all misses of a component
+    /// in ONE backend dispatch, store the new entries, reduce to decisions.
+    fn decide_range(
+        &self,
+        x: &[f32],
+        assign: &[u16],
+        lo: usize,
+        hi: usize,
+    ) -> (Vec<f32>, RangeStats) {
+        let dim = self.dim;
+        let mut dv = vec![0f32; hi - lo];
+        let mut rs = RangeStats::default();
+        for c in 0..self.caches.len() {
+            let idx: Vec<usize> = (lo..hi).filter(|&i| assign[i] as usize == c).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let (sv_x, sv_norms, coef) = self.component(c);
+            let n_svs = coef.len();
+            let cache = &self.caches[c];
+
+            // Probe pass: resident entries (verified against the stored
+            // query prefix) are reused; the rest are batched misses.
+            let mut rows: Vec<Option<Arc<[f32]>>> = vec![None; idx.len()];
+            let mut missing: Vec<usize> = Vec::new(); // positions into idx
+            for (t, &i) in idx.iter().enumerate() {
+                let q = &x[i * dim..(i + 1) * dim];
+                if let Some(entry) = cache.get(fingerprint(q)) {
+                    if &entry[..dim] == q {
+                        rs.hits += 1;
+                        rows[t] = Some(entry);
+                        continue;
+                    }
+                    // Fingerprint collision: recompute below, uncached.
+                }
+                rs.misses += 1;
+                missing.push(t);
+            }
+
+            // Fill pass: dedupe identical queries within the micro-batch
+            // (the probe pass ran before any fill, so batch-internal
+            // repeats all missed), then one kernel dispatch for the unique
+            // missing queries.
+            if !missing.is_empty() {
+                let query = |t: usize| &x[idx[t] * dim..(idx[t] + 1) * dim];
+                let mut first: HashMap<usize, usize> = HashMap::new(); // key -> uniq slot
+                let mut uniq: Vec<usize> = Vec::new(); // representative positions
+                let mut rep: Vec<usize> = Vec::with_capacity(missing.len());
+                for &t in &missing {
+                    let key = fingerprint(query(t));
+                    match first.get(&key).copied() {
+                        Some(u) if query(uniq[u]) == query(t) => rep.push(u),
+                        _ => {
+                            first.insert(key, uniq.len());
+                            uniq.push(t);
+                            rep.push(uniq.len() - 1);
+                        }
+                    }
+                }
+                rs.computed += uniq.len() as u64;
+                let mut xq = Vec::with_capacity(uniq.len() * dim);
+                let mut qn = Vec::with_capacity(uniq.len());
+                for &t in &uniq {
+                    let q = query(t);
+                    xq.extend_from_slice(q);
+                    qn.push(q.iter().map(|&v| v * v).sum());
+                }
+                let mut block = vec![0f32; uniq.len() * n_svs];
+                if n_svs > 0 {
+                    self.kernel.block(&xq, &qn, sv_x, sv_norms, dim, &mut block);
+                }
+                let mut entries: Vec<Arc<[f32]>> = Vec::with_capacity(uniq.len());
+                for (s, &t) in uniq.iter().enumerate() {
+                    let q = query(t);
+                    let mut entry = Vec::with_capacity(dim + n_svs);
+                    entry.extend_from_slice(q);
+                    entry.extend_from_slice(&block[s * n_svs..(s + 1) * n_svs]);
+                    let entry: Arc<[f32]> = entry.into();
+                    cache.put(fingerprint(q), Arc::clone(&entry));
+                    entries.push(entry);
+                }
+                for (&t, &u) in missing.iter().zip(&rep) {
+                    rows[t] = Some(Arc::clone(&entries[u]));
+                }
+            }
+
+            // Reduce: fixed-order dot product, so cached and fresh rows
+            // yield bit-identical decisions.
+            for (t, &i) in idx.iter().enumerate() {
+                let entry = rows[t].as_ref().expect("serving row filled");
+                let krow = &entry[dim..];
+                dv[i - lo] = krow.iter().zip(coef).map(|(&k, &w)| k * w).sum();
+            }
+        }
+        (dv, rs)
+    }
+}
+
+/// Per-micro-batch counters, threaded through `decide_range` so a batch's
+/// [`BatchStats`] never includes another concurrent batch's probes.
+#[derive(Clone, Copy, Debug, Default)]
+struct RangeStats {
+    computed: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// FNV-1a over the query's f32 bit patterns: the stable content key of the
+/// serving cache. Entries store the query itself as a prefix and hits are
+/// verified against it, so a collision degrades to an uncached recompute,
+/// never a wrong row.
+fn fingerprint(q: &[f32]) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &v in q {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::KernelContext;
+    use crate::data::synthetic::{covtype_like, generate_split};
+    use crate::dcsvm::DcSvmConfig;
+    use crate::kernel::native::NativeKernel;
+    use crate::solver::{SmoConfig, SmoSolver};
+
+    fn exact_model(n: usize, seed: u64) -> (SvmModel, crate::data::Dataset) {
+        let (tr, te) = generate_split(&covtype_like(), n, n / 3, seed);
+        let kind = KernelKind::Rbf { gamma: 16.0 };
+        let kern = NativeKernel::new(kind);
+        let ctx = KernelContext::new(&tr, &kern, 32 << 20);
+        let res = SmoSolver::new(
+            ctx.view_full(),
+            SmoConfig { c: 4.0, eps: 1e-3, ..Default::default() },
+        )
+        .solve();
+        (SvmModel::from_ctx_alpha(&ctx, &res.alpha), te)
+    }
+
+    fn serve_ctx(model: ServingModel) -> ServingContext {
+        let kern = NativeKernel::new(model.kind());
+        ServingContext::new(model, Box::new(kern), 8 << 20)
+    }
+
+    #[test]
+    fn warm_batch_hits_and_matches_cold_batch_exactly() {
+        let (model, te) = exact_model(300, 5);
+        let ctx = serve_ctx(ServingModel::Exact(model));
+        let (dv1, s1) = ctx.decide(&te.x, 1);
+        assert_eq!(s1.rows, te.len());
+        assert_eq!(s1.cache_hits, 0, "cold batch must not hit");
+        assert_eq!(s1.rows_computed, te.len() as u64);
+        let (dv2, s2) = ctx.decide(&te.x, 1);
+        assert_eq!(dv1, dv2, "warm decisions must be bit-identical");
+        assert_eq!(s2.rows_computed, 0, "warm batch must compute nothing");
+        assert!(s2.cache_hits > s1.cache_hits);
+        assert_eq!(s2.cache_hits, te.len() as u64);
+        assert!((s2.hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serving_decisions_match_model_signs() {
+        let (model, te) = exact_model(300, 6);
+        let kern = NativeKernel::new(model.kind);
+        let norms = te.sq_norms();
+        let want = model.predict_batch(&te.x, &norms, &kern);
+        let ctx = serve_ctx(ServingModel::Exact(model));
+        let (preds, _) = ctx.predict(&te.x, 2);
+        assert_eq!(preds, want);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_decisions() {
+        let (model, te) = exact_model(200, 7);
+        let a = serve_ctx(ServingModel::Exact(model));
+        let (dv1, _) = a.decide(&te.x, 1);
+        let (dv4, _) = a.decide(&te.x, 4); // second pass: all cached
+        assert_eq!(dv1, dv4);
+        // And from a cold cache with 3 workers.
+        let (model2, _) = exact_model(200, 7);
+        let b = serve_ctx(ServingModel::Exact(model2));
+        let (dv3, _) = b.decide(&te.x, 3);
+        assert_eq!(dv1, dv3);
+    }
+
+    #[test]
+    fn duplicate_queries_hit_within_one_batch() {
+        let (model, te) = exact_model(250, 8);
+        let ctx = serve_ctx(ServingModel::Exact(model));
+        // Batch = the same query row repeated 5 times.
+        let q = &te.x[..ctx.dim()];
+        let mut x = Vec::new();
+        for _ in 0..5 {
+            x.extend_from_slice(q);
+        }
+        let (dv, stats) = ctx.decide(&x, 1);
+        assert!(dv.windows(2).all(|w| w[0] == w[1]));
+        // Probes all miss (the probe pass runs before any fill), but the
+        // kernel computes the repeated query exactly once.
+        assert_eq!(stats.rows_computed, 1);
+        assert_eq!(stats.cache_misses, 5);
+        let (_, s2) = ctx.decide(&x, 1);
+        assert_eq!(s2.cache_hits, 5);
+        assert_eq!(s2.rows_computed, 0);
+    }
+
+    #[test]
+    fn early_model_serves_and_reuses_across_batches() {
+        let (tr, te) = generate_split(&covtype_like(), 600, 150, 9);
+        let kind = KernelKind::Rbf { gamma: 16.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = DcSvmConfig {
+            kind,
+            c: 4.0,
+            levels: 2,
+            k_base: 4,
+            sample_m: 64,
+            stop_after_level: Some(1),
+            ..Default::default()
+        };
+        let res = crate::dcsvm::train(&tr, &kern, &cfg);
+        let em = res.early_model.expect("early model");
+        let norms = te.sq_norms();
+        let want = em.predict_batch(&te.x, &norms, &kern);
+
+        // Roundtrip through JSON, as the CLI does.
+        let text = em.to_json().to_string();
+        let model = ServingModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(matches!(model, ServingModel::Early(_)));
+        let ctx = serve_ctx(model);
+        let (preds, s1) = ctx.predict(&te.x, 2);
+        assert_eq!(preds, want, "serving path disagrees with EarlyModel");
+        let (preds2, s2) = ctx.predict(&te.x, 2);
+        assert_eq!(preds, preds2);
+        assert_eq!(s2.rows_computed, 0);
+        assert!(s2.cache_hits > s1.cache_hits);
+    }
+
+    #[test]
+    fn exact_json_loads_as_exact() {
+        let (model, _) = exact_model(120, 10);
+        let text = model.to_json().to_string();
+        let back = ServingModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(matches!(back, ServingModel::Exact(_)));
+        assert_eq!(back.num_svs(), model.num_svs());
+        assert_eq!(back.dim(), model.dim);
+        assert_eq!(back.kind(), model.kind);
+    }
+
+    #[test]
+    fn empty_model_serves_zero_decisions() {
+        let (tr, _) = generate_split(&covtype_like(), 40, 10, 11);
+        let kind = KernelKind::Rbf { gamma: 1.0 };
+        let model = SvmModel::from_alpha(&tr, &vec![0.0; tr.len()], kind);
+        let ctx = serve_ctx(ServingModel::Exact(model));
+        let (dv, stats) = ctx.decide(&tr.x, 2);
+        assert!(dv.iter().all(|&d| d == 0.0));
+        assert_eq!(stats.rows, tr.len());
+        // Second pass still hits (entries are query-only rows).
+        let (_, s2) = ctx.decide(&tr.x, 2);
+        assert_eq!(s2.rows_computed, 0);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let (model, _) = exact_model(80, 12);
+        let ctx = serve_ctx(ServingModel::Exact(model));
+        let (dv, stats) = ctx.decide(&[], 4);
+        assert!(dv.is_empty());
+        assert_eq!(stats.rows, 0);
+        assert_eq!(stats.cache_hits + stats.cache_misses, 0);
+    }
+
+    #[test]
+    fn batch_stats_json_shape() {
+        let s = BatchStats {
+            rows: 10,
+            latency_s: 0.5,
+            cache_hits: 6,
+            cache_misses: 4,
+            rows_computed: 4,
+        };
+        let j = s.to_json(3);
+        assert_eq!(j.get("batch").as_usize(), Some(3));
+        assert_eq!(j.get("rows").as_usize(), Some(10));
+        assert_eq!(j.get("cache_hits").as_f64(), Some(6.0));
+        assert!((j.get("hit_rate").as_f64().unwrap() - 0.6).abs() < 1e-12);
+        assert!((j.get("pred_per_s").as_f64().unwrap() - 20.0).abs() < 1e-9);
+        // Emits as a single parseable line.
+        let line = j.to_string();
+        assert!(!line.contains('\n'));
+        assert!(Json::parse(&line).is_ok());
+    }
+}

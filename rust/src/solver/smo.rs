@@ -386,7 +386,7 @@ impl<'a> SmoSolver<'a> {
         }
     }
 
-    /// dv[t] = Σ_{i∈sv} α_i y_i K(x_{query[t]}, x_i), chunked through the
+    /// `dv[t] = Σ_{i∈sv} α_i y_i K(x_{query[t]}, x_i)`, chunked through the
     /// backend's (possibly fused) decision path. `sv`/`query` are local
     /// indices of the view.
     fn decision_into(&self, sv: &[usize], alpha: &[f64], query: &[usize], out: &mut [f64]) {

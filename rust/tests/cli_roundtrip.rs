@@ -152,6 +152,198 @@ fn info_and_help_work() {
 }
 
 #[test]
+fn serve_rejects_bad_flags() {
+    // Missing value for --backend used to silently become "".
+    let (ok, text) = run(&["serve", "--model", "m.json", "--backend"]);
+    assert!(!ok);
+    assert!(text.contains("needs a value"), "{text}");
+    // Unparsable --batch used to silently fall back to 256.
+    let (ok, text) = run(&["serve", "--model", "m.json", "--batch", "abc"]);
+    assert!(!ok);
+    assert!(text.contains("--batch"), "{text}");
+    assert!(text.contains("usage:"), "{text}");
+    let (ok, text) = run(&["serve", "--model", "m.json", "--workers", "0"]);
+    assert!(!ok);
+    assert!(text.contains("--workers"), "{text}");
+    let (ok, text) = run(&["serve", "--batch", "8"]);
+    assert!(!ok);
+    assert!(text.contains("requires --model"), "{text}");
+}
+
+#[test]
+fn serve_roundtrip_emits_predictions_and_warm_batch_stats() {
+    use std::io::Write;
+    use std::process::{Command, Stdio};
+
+    let dir = std::env::temp_dir().join("dcsvm_cli_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("serve_model.json");
+    let (ok, text) = run(&[
+        "train",
+        "--algo",
+        "dcsvm",
+        "--dataset",
+        "covtype-like",
+        "--n-train",
+        "300",
+        "--n-test",
+        "100",
+        "--gamma",
+        "16",
+        "--c",
+        "4",
+        "--levels",
+        "2",
+        "--sample-m",
+        "64",
+        "--backend",
+        "native",
+        "--save-model",
+        model.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+
+    // Build a small LIBSVM request batch and send it TWICE: the second
+    // batch must be served from the persistent cross-request cache.
+    let spec = dcsvm::data::synthetic::all_specs()
+        .into_iter()
+        .find(|s| s.name == "covtype-like")
+        .unwrap();
+    let (_, te) = dcsvm::data::synthetic::generate_split(&spec, 50, 16, 0);
+    let mut batch = String::new();
+    for i in 0..te.len() {
+        batch.push_str(&format!("{}", te.y[i]));
+        for (j, v) in te.row(i).iter().enumerate() {
+            batch.push_str(&format!(" {}:{}", j + 1, v));
+        }
+        batch.push('\n');
+    }
+    let n = te.len();
+
+    let mut child = Command::new(bin())
+        .args([
+            "serve",
+            "--model",
+            model.to_str().unwrap(),
+            "--batch",
+            &n.to_string(),
+            "--workers",
+            "2",
+            "--backend",
+            "native",
+        ])
+        .env("DCSVM_LOG", "warn")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn dcsvm serve");
+    {
+        let mut stdin = child.stdin.take().unwrap();
+        stdin.write_all(batch.as_bytes()).unwrap();
+        stdin.write_all(batch.as_bytes()).unwrap();
+    } // dropped → EOF
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Two identical batches → 2n prediction lines, pairwise identical.
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let preds: Vec<&str> = stdout.lines().collect();
+    assert_eq!(preds.len(), 2 * n, "stdout: {stdout}");
+    assert_eq!(&preds[..n], &preds[n..], "identical batches must serve identically");
+
+    // Per-batch JSON stats on stderr: batch 0 cold, batch 1 fully warm.
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let stats: Vec<dcsvm::util::json::Json> = stderr
+        .lines()
+        .filter(|l| l.starts_with('{'))
+        .map(|l| dcsvm::util::json::Json::parse(l).expect("stats line parses"))
+        .collect();
+    assert!(stats.len() >= 3, "expected 2 batch lines + summary: {stderr}");
+    let (b0, b1) = (&stats[0], &stats[1]);
+    assert_eq!(b0.get("rows").as_usize(), Some(n));
+    let hits0 = b0.get("cache_hits").as_f64().unwrap();
+    let hits1 = b1.get("cache_hits").as_f64().unwrap();
+    assert!(hits1 > hits0, "warm batch hits {hits1} !> cold {hits0}");
+    assert_eq!(b1.get("rows_computed").as_f64(), Some(0.0), "{stderr}");
+    let summary = stats.last().unwrap();
+    assert_eq!(summary.get("served").as_usize(), Some(2 * n));
+    assert_eq!(summary.get("batches").as_usize(), Some(2));
+
+    std::fs::remove_file(&model).ok();
+}
+
+#[test]
+fn train_saves_and_serves_early_model() {
+    use std::io::Write;
+    use std::process::{Command, Stdio};
+
+    let dir = std::env::temp_dir().join("dcsvm_cli_early");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("early_model.json");
+    let (ok, text) = run(&[
+        "train",
+        "--algo",
+        "early",
+        "--dataset",
+        "covtype-like",
+        "--n-train",
+        "400",
+        "--n-test",
+        "100",
+        "--gamma",
+        "16",
+        "--c",
+        "4",
+        "--levels",
+        "2",
+        "--sample-m",
+        "64",
+        "--backend",
+        "native",
+        "--save-model",
+        model.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("model saved"), "{text}");
+
+    let spec = dcsvm::data::synthetic::all_specs()
+        .into_iter()
+        .find(|s| s.name == "covtype-like")
+        .unwrap();
+    let (_, te) = dcsvm::data::synthetic::generate_split(&spec, 50, 8, 3);
+    let mut batch = String::new();
+    for i in 0..te.len() {
+        batch.push_str(&format!("{}", te.y[i]));
+        for (j, v) in te.row(i).iter().enumerate() {
+            batch.push_str(&format!(" {}:{}", j + 1, v));
+        }
+        batch.push('\n');
+    }
+
+    let mut child = Command::new(bin())
+        .args(["serve", "--model", model.to_str().unwrap(), "--backend", "native"])
+        .env("DCSVM_LOG", "warn")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn dcsvm serve");
+    {
+        let mut stdin = child.stdin.take().unwrap();
+        stdin.write_all(batch.as_bytes()).unwrap();
+    } // dropped → EOF
+    let out = child.wait_with_output().unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "{stderr}");
+    assert!(stderr.contains("early(k="), "not served as an early model: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.lines().count(), te.len(), "{stdout}");
+
+    std::fs::remove_file(&model).ok();
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let (ok, text) = run(&["frobnicate"]);
     assert!(!ok);

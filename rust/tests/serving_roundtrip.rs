@@ -1,0 +1,108 @@
+//! Regression (ISSUE 2 acceptance): serialize a trained model, push two
+//! identical request batches through a persistent `ServingContext`, and
+//! prove the second batch computes strictly fewer kernel rows (cache hits
+//! > 0, zero rows computed) while producing bit-identical decisions.
+
+use dcsvm::data::synthetic::{covtype_like, generate_split};
+use dcsvm::dcsvm::DcSvmConfig;
+use dcsvm::kernel::{native::NativeKernel, KernelKind};
+use dcsvm::predict::SvmModel;
+use dcsvm::serving::{ServingContext, ServingModel};
+use dcsvm::util::json::Json;
+
+fn serve_roundtrip(model_json: Json, queries: &[f32], workers: usize) {
+    let model = ServingModel::from_json(&model_json).expect("model json loads");
+    let kernel = Box::new(NativeKernel::new(model.kind()));
+    let ctx = ServingContext::new(model, kernel, 16 << 20);
+
+    let (dv1, s1) = ctx.decide(queries, workers);
+    assert!(s1.rows > 0);
+    assert_eq!(s1.cache_hits, 0, "cold batch must not hit the serving cache");
+    assert!(s1.rows_computed > 0, "cold batch must compute kernel rows");
+
+    let (dv2, s2) = ctx.decide(queries, workers);
+    assert_eq!(dv1, dv2, "identical batches must produce bit-identical decisions");
+    assert!(
+        s2.cache_hits > s1.cache_hits,
+        "second batch hits ({}) must exceed first ({})",
+        s2.cache_hits,
+        s1.cache_hits
+    );
+    assert!(
+        s2.rows_computed < s1.rows_computed,
+        "second batch must compute strictly fewer kernel rows ({} vs {})",
+        s2.rows_computed,
+        s1.rows_computed
+    );
+    assert_eq!(s2.rows_computed, 0, "fully warm batch computes nothing");
+}
+
+#[test]
+fn exact_model_reuses_kernel_rows_across_request_batches() {
+    let (tr, te) = generate_split(&covtype_like(), 500, 160, 42);
+    let kind = KernelKind::Rbf { gamma: 16.0 };
+    let kern = NativeKernel::new(kind);
+    let cfg = DcSvmConfig {
+        kind,
+        c: 4.0,
+        levels: 2,
+        k_base: 4,
+        sample_m: 64,
+        ..Default::default()
+    };
+    let res = dcsvm::dcsvm::train(&tr, &kern, &cfg);
+    let model = SvmModel::from_alpha(&tr, &res.alpha, kind);
+    assert!(model.num_svs() > 0);
+
+    // Serialize → reparse, exactly as `dcsvm train --save-model` +
+    // `dcsvm serve` do.
+    let json = Json::parse(&model.to_json().to_string()).unwrap();
+    serve_roundtrip(json, &te.x, 2);
+}
+
+#[test]
+fn early_model_reuses_kernel_rows_across_request_batches() {
+    let (tr, te) = generate_split(&covtype_like(), 600, 150, 17);
+    let kind = KernelKind::Rbf { gamma: 16.0 };
+    let kern = NativeKernel::new(kind);
+    let cfg = DcSvmConfig {
+        kind,
+        c: 4.0,
+        levels: 2,
+        k_base: 4,
+        sample_m: 64,
+        stop_after_level: Some(1),
+        ..Default::default()
+    };
+    let res = dcsvm::dcsvm::train(&tr, &kern, &cfg);
+    let em = res.early_model.expect("early model");
+    let json = Json::parse(&em.to_json().to_string()).unwrap();
+    serve_roundtrip(json, &te.x, 3);
+}
+
+/// The serving path must agree with the offline prediction path on signs
+/// (accuracy parity between `dcsvm predict` and `dcsvm serve`).
+#[test]
+fn serving_predictions_match_offline_model() {
+    let (tr, te) = generate_split(&covtype_like(), 400, 120, 7);
+    let kind = KernelKind::Rbf { gamma: 16.0 };
+    let kern = NativeKernel::new(kind);
+    let cfg = DcSvmConfig {
+        kind,
+        c: 4.0,
+        levels: 2,
+        k_base: 4,
+        sample_m: 64,
+        ..Default::default()
+    };
+    let res = dcsvm::dcsvm::train(&tr, &kern, &cfg);
+    let model = SvmModel::from_alpha(&tr, &res.alpha, kind);
+    let norms = te.sq_norms();
+    let offline = model.predict_batch(&te.x, &norms, &kern);
+
+    let serving = ServingModel::from_json(&Json::parse(&model.to_json().to_string()).unwrap())
+        .unwrap();
+    let ctx = ServingContext::new(serving, Box::new(NativeKernel::new(kind)), 8 << 20);
+    let (preds, _) = ctx.predict(&te.x, 2);
+    assert_eq!(preds, offline);
+}
