@@ -1,9 +1,9 @@
-# Repo task runner. `make verify` is the tier-1 gate plus the doc gate
+# Repo task runner. `make verify` is the tier-1 gate plus the doc gates
 # (mirrors ci.yml for environments without GitHub Actions).
 
-.PHONY: verify fmt test build doc artifacts
+.PHONY: verify fmt test build doc linkcheck artifacts
 
-verify: build test doc
+verify: build test doc linkcheck
 
 build:
 	cargo build --release
@@ -15,6 +15,10 @@ test:
 # fail the build. `--lib` because the bin target shares the crate name.
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib
+
+# Dead intra-repo links/anchors in the top-level docs fail the build.
+linkcheck:
+	python3 scripts/check_links.py README.md ARCHITECTURE.md EXPERIMENTS.md PROTOCOL.md
 
 fmt:
 	cargo fmt --check

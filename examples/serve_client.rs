@@ -1,0 +1,58 @@
+//! Multi-client serving demo: drive a running `dcsvm serve --listen`
+//! server over the newline-delimited JSON protocol (PROTOCOL.md) and
+//! watch the shared serving cache warm across requests.
+//!
+//! ```bash
+//! # Terminal 1: train a covtype-like model and serve it over TCP.
+//! cargo run --release -- train --algo dcsvm --dataset covtype-like \
+//!     --n-train 2000 --n-test 500 --gamma 32 --backend native \
+//!     --save-model model.json
+//! cargo run --release -- serve --model model.json --listen 127.0.0.1:7878
+//!
+//! # Terminal 2: replay one query batch twice through a client connection.
+//! cargo run --release --offline --example serve_client -- 127.0.0.1:7878 32
+//! ```
+//!
+//! The second pass replays the same batch: `rows_computed` drops to 0 and
+//! `hit_rate` rises to 1.0. Run the example again (a new connection, even
+//! a new process): its "cold" pass is *already warm* — every connection
+//! shares the server's one `ServingContext`, so kernel rows computed for
+//! one client answer every other client's repeats.
+
+use anyhow::{bail, Result};
+use dcsvm::data::synthetic::{covtype_like, generate_split};
+use dcsvm::serving::transport::ServeClient;
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let addr = args.next().unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(32);
+
+    // The same synthetic batch every run: replays hit the server's cache
+    // across example invocations, not just across passes.
+    let (_, te) = generate_split(&covtype_like(), 50, n, 0);
+    let rows: Vec<Vec<f32>> = te.x.chunks(te.dim).map(|r| r.to_vec()).collect();
+
+    let mut client = ServeClient::connect(addr.as_str())?;
+    println!("connected to {addr}; sending {n} covtype-like queries twice");
+    for pass in ["first pass", "replay"] {
+        let resp = client.decide(&rows)?;
+        if resp.get("error").as_obj().is_some() {
+            bail!(
+                "server error: {} (is the served model covtype-like, dim {}?)",
+                resp.get("error"),
+                te.dim
+            );
+        }
+        let stats = resp.get("stats");
+        println!(
+            "{pass}: rows={} rows_computed={} hit_rate={:.2} latency_ms={:.3}",
+            stats.get("rows"),
+            stats.get("rows_computed"),
+            stats.get("hit_rate").as_f64().unwrap_or(0.0),
+            stats.get("latency_ms").as_f64().unwrap_or(0.0),
+        );
+    }
+    println!("(rerun this example: the new connection starts warm — the cache is shared)");
+    Ok(())
+}

@@ -75,19 +75,41 @@ pub fn parse_libsvm<R: BufRead>(
     Ok(Dataset::new(x, labels, dim, name))
 }
 
-/// Write a dataset in LIBSVM format (zeros omitted).
+/// Append one LIBSVM line (`±1 idx:val ...\n`, zeros omitted, 1-based):
+/// the single row serializer behind [`format_libsvm`] and [`write_libsvm`].
+fn format_libsvm_row(out: &mut String, y: i8, row: &[f32]) {
+    use std::fmt::Write as _;
+    let _ = write!(out, "{}", if y == 1 { "+1" } else { "-1" });
+    for (j, &v) in row.iter().enumerate() {
+        if v != 0.0 {
+            let _ = write!(out, " {}:{}", j + 1, v);
+        }
+    }
+    out.push('\n');
+}
+
+/// Render a dataset as LIBSVM-format text (zeros omitted): the in-memory
+/// counterpart of [`write_libsvm`], and the one serializer test harnesses
+/// use to build `dcsvm serve` request batches.
+pub fn format_libsvm(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for i in 0..ds.len() {
+        format_libsvm_row(&mut out, ds.y[i], ds.row(i));
+    }
+    out
+}
+
+/// Write a dataset in LIBSVM format (zeros omitted), streaming row by row
+/// (peak memory stays O(row), not O(file)).
 pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<()> {
     let file = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(file);
+    let mut line = String::new();
     for i in 0..ds.len() {
-        write!(w, "{}", if ds.y[i] == 1 { "+1" } else { "-1" })?;
-        for (j, &v) in ds.row(i).iter().enumerate() {
-            if v != 0.0 {
-                write!(w, " {}:{}", j + 1, v)?;
-            }
-        }
-        writeln!(w)?;
+        line.clear();
+        format_libsvm_row(&mut line, ds.y[i], ds.row(i));
+        w.write_all(line.as_bytes())?;
     }
     Ok(())
 }

@@ -6,7 +6,7 @@
 //! dcsvm predict --model m.json --dataset covtype-like
 //! dcsvm kmeans  [--dataset ...] [--k-base 4] # partition quality report
 //! dcsvm sweep   [--dataset ...]          # (C, γ) grid, Tables 7–10 style
-//! dcsvm serve   --model m.json [--batch 256] [--workers 4] [--cache-mb 64]
+//! dcsvm serve   --model m.json [--listen ADDR] [--batch 256] [--workers 4]
 //! dcsvm info                             # backend/artifact status
 //! ```
 //!
@@ -68,9 +68,9 @@ fn print_usage() {
          \x20 predict  --model M [--flags]  load a saved model, evaluate\n\
          \x20 kmeans   [--flags]            two-step kernel kmeans report\n\
          \x20 sweep    [--flags]            (C, γ) grid (Tables 7–10 style)\n\
-         \x20 serve    --model M [--batch B] [--workers N] [--cache-mb MB]\n\
-         \x20                               persistent server: LIBSVM rows on stdin,\n\
-         \x20                               per-batch JSON stats on stderr\n\
+         \x20 serve    --model M [--flags]  persistent server: LIBSVM rows on stdin\n\
+         \x20                               or NDJSON over TCP with --listen ADDR\n\
+         \x20                               (flags: `dcsvm serve --help`)\n\
          \x20 info                          backend / artifact status\n\
          \n\
          common flags: --algo {{dcsvm,early,libsvm,cascade,lasvm,llsvm,fastfood,ltpu,spsvm}}\n\
@@ -327,54 +327,72 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-/// Request loop: read LIBSVM-format rows from stdin, emit one decision
-/// value + label per line on stdout and one JSON stats line per request
-/// batch on stderr. The whole pipeline is the saved model + the AOT
-/// artifacts ("Python never on the request path"), and all state —
-/// deserialized model, SV norms, kernel backend, the serving row cache —
-/// lives in one persistent [`ServingContext`]: kernel rows against the SV
-/// set computed for one batch are reused by every later batch.
+/// Request loop over one persistent [`ServingContext`], behind two
+/// transports sharing one request core
+/// ([`dcsvm::serving::transport::ServeCore`]):
+///
+/// - **stdio** (default): LIBSVM rows on stdin, one `±1 decision` line per
+///   row on stdout, one JSON stats line per request batch on stderr.
+/// - **socket** (`--listen ADDR`): newline-delimited JSON over TCP (see
+///   PROTOCOL.md) serving N concurrent connections — kernel rows computed
+///   for one client warm the shared cache for every other client.
+///
+/// Flags, defaults, and the usage text all come from one table
+/// ([`dcsvm::serving::transport::SERVE_FLAGS`]) shared with README.md, so
+/// docs and CLI cannot drift (`tests/docs_sync.rs` enforces it).
 fn cmd_serve(args: &[String]) -> Result<()> {
-    use std::io::BufRead;
+    use dcsvm::serving::transport::{self, ServeCore};
 
-    const USAGE: &str = "usage: dcsvm serve --model FILE [--batch N] [--workers N] \
-                         [--cache-mb MB] [--backend auto|native|pjrt]";
+    let usage = transport::serve_usage();
     let mut model_path: Option<String> = None;
+    let mut listen: Option<String> = None;
     let mut batch = 256usize;
     let mut workers = dcsvm::util::threadpool::default_threads();
+    let mut conns = 8usize;
     let mut cache_mb = 64usize;
     let mut backend = "auto".to_string();
     let mut i = 0;
     while i < args.len() {
         let key = args[i].as_str();
+        if matches!(key, "--help" | "-h" | "help") {
+            println!("{usage}");
+            return Ok(());
+        }
         // Reject unknown flags before demanding a value, so `--verbose`
         // errors as unknown rather than "needs a value".
-        if !matches!(key, "--model" | "--batch" | "--workers" | "--cache-mb" | "--backend") {
-            bail!("serve: unknown flag '{key}'\n{USAGE}");
+        if !matches!(
+            key,
+            "--model" | "--listen" | "--batch" | "--workers" | "--conns" | "--cache-mb"
+                | "--backend"
+        ) {
+            bail!("serve: unknown flag '{key}'\n{usage}");
         }
         let Some(val) = args.get(i + 1) else {
-            bail!("serve: flag {key} needs a value\n{USAGE}");
+            bail!("serve: flag {key} needs a value\n{usage}");
         };
         let positive = |flag: &str| -> Result<usize> {
             let n: usize = val.parse().map_err(|_| {
-                anyhow!("serve: {flag} needs a positive integer, got '{val}'\n{USAGE}")
+                anyhow!("serve: {flag} needs a positive integer, got '{val}'\n{usage}")
             })?;
             if n == 0 {
-                bail!("serve: {flag} must be at least 1\n{USAGE}");
+                bail!("serve: {flag} must be at least 1\n{usage}");
             }
             Ok(n)
         };
         match key {
             "--model" => model_path = Some(val.clone()),
+            "--listen" => listen = Some(val.clone()),
             "--batch" => batch = positive("--batch")?,
             "--workers" => workers = positive("--workers")?,
+            "--conns" => conns = positive("--conns")?,
             "--cache-mb" => cache_mb = positive("--cache-mb")?,
-            _ => backend = val.clone(),
+            "--backend" => backend = val.clone(),
+            _ => unreachable!("flag allow-list above covers every match arm"),
         }
         i += 2;
     }
     let Some(model_path) = model_path else {
-        bail!("serve requires --model FILE\n{USAGE}");
+        bail!("serve requires --model FILE\n{usage}");
     };
     let text = std::fs::read_to_string(&model_path)
         .with_context(|| format!("read {model_path}"))?;
@@ -382,62 +400,34 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let kernel = harness::make_kernel(model.kind(), &backend, model.dim())?;
     let ctx = ServingContext::new(model, kernel, cache_mb << 20);
     eprintln!(
-        "serving {} model {} ({} SVs, dim {}), batch {batch}, {workers} workers, \
-         cache {cache_mb} MB — LIBSVM rows on stdin",
+        "serving {} model {} ({} SVs, dim {}), {workers} workers, cache {cache_mb} MB",
         ctx.model().describe(),
         model_path,
         ctx.num_svs(),
         ctx.dim()
     );
-
-    let stdin = std::io::stdin();
-    let mut lines = stdin.lock().lines();
-    let mut buf: Vec<String> = Vec::with_capacity(batch);
-    let mut served = 0usize;
-    let mut batches = 0usize;
-    let t0 = std::time::Instant::now();
-    loop {
-        buf.clear();
-        while buf.len() < batch {
-            match lines.next() {
-                Some(Ok(l)) if !l.trim().is_empty() => buf.push(l),
-                Some(Ok(_)) => continue,
-                Some(Err(e)) => return Err(e.into()),
-                None => break,
-            }
+    let core = ServeCore::new(ctx, workers);
+    match &listen {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr.as_str())
+                .with_context(|| format!("serve: bind {addr}"))?;
+            // One parseable line announcing the bound address (binding
+            // port 0 picks an ephemeral port; clients and tests discover
+            // it from this line).
+            eprintln!(
+                "{}",
+                Json::obj(vec![
+                    ("listening", Json::from(listener.local_addr()?.to_string())),
+                    ("conns", Json::from(conns)),
+                ])
+            );
+            transport::run_listener(&core, listener, conns)?;
         }
-        if buf.is_empty() {
-            break;
+        None => {
+            eprintln!("stdio mode: LIBSVM rows on stdin, batch {batch}");
+            transport::run_stdio(&core, batch)?;
         }
-        let joined = buf.join("\n");
-        let ds = dcsvm::data::libsvm::parse_libsvm(
-            std::io::Cursor::new(joined),
-            Some(ctx.dim()),
-            "stdin".into(),
-        )?;
-        let (dv, stats) = ctx.decide(&ds.x, workers);
-        let mut out = String::new();
-        for &d in &dv {
-            out.push_str(&format!("{} {:.6}\n", if d >= 0.0 { "+1" } else { "-1" }, d));
-        }
-        print!("{out}");
-        served += dv.len();
-        eprintln!("{}", stats.to_json(batches));
-        batches += 1;
     }
-    let dt = t0.elapsed().as_secs_f64();
-    let totals = ctx.stats();
-    let summary = Json::obj(vec![
-        ("batches", Json::from(batches)),
-        ("served", Json::from(served)),
-        ("total_s", Json::from(dt)),
-        ("pred_per_s", Json::from(served as f64 / dt.max(1e-9))),
-        ("cache_hits", Json::from(totals.hits as f64)),
-        ("cache_misses", Json::from(totals.misses as f64)),
-        ("hit_rate", Json::from(totals.hit_rate())),
-        ("workers", Json::from(workers)),
-        ("batch", Json::from(batch)),
-    ]);
-    eprintln!("{summary}");
+    eprintln!("{}", core.summary_json());
     Ok(())
 }

@@ -28,10 +28,11 @@
 //! order), so a hit is bit-identical to the original computation: two
 //! identical batches produce identical decision values while the second
 //! computes zero kernel rows against the SV set
-//! (`tests/serving_roundtrip.rs`). Early-model *routing* (one
-//! K(batch, sample) dispatch, O(n·m·d)) is recomputed per batch — it is
-//! not covered by the row cache; caching routed components per
-//! fingerprint is a ROADMAP follow-up.
+//! (`tests/serving_roundtrip.rs`). Early-model *routing* is cached the
+//! same way: a per-fingerprint routing cache stores each query's decision
+//! component (`[query | component]`), so a fully warm batch skips the
+//! `K(batch, sample)` routing dispatch entirely and performs **zero**
+//! kernel work of any kind ([`BatchStats::routing_dispatches`] is 0).
 //!
 //! Correctness under fingerprint collisions: the query itself is stored as
 //! the entry prefix and verified on every hit. A colliding key (probability
@@ -43,6 +44,14 @@
 //! [`ServingContext::decide`] call returns a [`BatchStats`] —
 //! latency/throughput/hit counters serialized as one JSON line per request
 //! batch by the CLI.
+//!
+//! Transports: the CLI's stdio loop and the `--listen` TCP socket
+//! front-end both delegate to one request-handling core in [`transport`],
+//! so N concurrent connections share ONE context — kernel rows computed
+//! for one client warm the cache for every other client (PROTOCOL.md
+//! documents the wire format).
+
+pub mod transport;
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -129,6 +138,16 @@ pub struct BatchStats {
     /// Kernel rows (query × SV-set) actually computed this batch; a fully
     /// warm batch computes zero.
     pub rows_computed: u64,
+    /// Early-model routing decisions answered from the per-fingerprint
+    /// routing cache (always 0 for exact models, which need no routing).
+    pub routing_hits: u64,
+    /// Early-model routing cache misses (queries whose component had to be
+    /// computed); always 0 for exact models.
+    pub routing_misses: u64,
+    /// `K(batch, sample)` routing kernel dispatches this batch: 0 or 1.
+    /// A fully warm early-model batch — and every exact-model batch —
+    /// dispatches none.
+    pub routing_dispatches: u64,
 }
 
 impl BatchStats {
@@ -159,7 +178,24 @@ impl BatchStats {
             ("cache_misses", Json::from(self.cache_misses as f64)),
             ("hit_rate", Json::from(self.hit_rate())),
             ("rows_computed", Json::from(self.rows_computed as f64)),
+            ("routing_hits", Json::from(self.routing_hits as f64)),
+            ("routing_misses", Json::from(self.routing_misses as f64)),
+            ("routing_dispatches", Json::from(self.routing_dispatches as f64)),
         ])
+    }
+
+    /// Fold another batch's counters into an aggregate (the serve
+    /// transport's per-connection and global totals). Rows and latencies
+    /// add; rates are recomputed from the summed counters.
+    pub fn merge(&mut self, other: &BatchStats) {
+        self.rows += other.rows;
+        self.latency_s += other.latency_s;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.rows_computed += other.rows_computed;
+        self.routing_hits += other.routing_hits;
+        self.routing_misses += other.routing_misses;
+        self.routing_dispatches += other.routing_dispatches;
     }
 }
 
@@ -174,6 +210,11 @@ pub struct ServingContext {
     /// c for early-model cluster c. Entry layout:
     /// `[query (dim) | K(query, component SVs)]`.
     caches: Vec<ShardedRowCache>,
+    /// Early-model routing cache: `[query (dim) | component id]`, keyed by
+    /// the same content fingerprint as the row caches (stored query
+    /// verified on hit). `None` for exact models — their routing is
+    /// trivial.
+    route_cache: Option<ShardedRowCache>,
 }
 
 impl ServingContext {
@@ -195,17 +236,26 @@ impl ServingContext {
             ServingModel::Exact(m) => vec![m.num_svs()],
             ServingModel::Early(em) => em.locals.iter().map(|m| m.num_svs()).collect(),
         };
-        let total_len: usize = comp_svs.iter().map(|&s| dim + s).sum::<usize>().max(1);
+        // Early models also carry a routing cache (`[query | component]`,
+        // row length dim+1); it takes its proportional — tiny — share of
+        // the same byte budget.
+        let route_len = match &model {
+            ServingModel::Exact(_) => None,
+            ServingModel::Early(_) => Some(dim + 1),
+        };
+        let total_len: usize = (comp_svs.iter().map(|&s| dim + s).sum::<usize>()
+            + route_len.unwrap_or(0))
+        .max(1);
+        let share = |row_len: usize| {
+            (cache_bytes as u128 * row_len as u128 / total_len as u128) as usize
+        };
         let caches = comp_svs
             .iter()
-            .map(|&s| {
-                let row_len = dim + s;
-                let budget =
-                    (cache_bytes as u128 * row_len as u128 / total_len as u128) as usize;
-                ShardedRowCache::new(row_len, budget, SERVE_SHARDS)
-            })
+            .map(|&s| ShardedRowCache::new(dim + s, share(dim + s), SERVE_SHARDS))
             .collect();
-        ServingContext { model, kernel, dim, caches }
+        let route_cache =
+            route_len.map(|len| ShardedRowCache::new(len, share(len), SERVE_SHARDS));
+        ServingContext { model, kernel, dim, caches, route_cache }
     }
 
     /// The model being served.
@@ -248,20 +298,11 @@ impl ServingContext {
                 BatchStats { latency_s: t0.elapsed().as_secs_f64(), ..Default::default() },
             );
         }
-        // Route every query to its decision component. (Routing for early
-        // models is one K(batch, sample) dispatch recomputed per batch —
-        // the serving cache eliminates kernel rows against the SV set,
-        // not routing; see the module docs.)
-        let assign: Vec<u16> = match &self.model {
-            ServingModel::Exact(_) => vec![0u16; n],
-            ServingModel::Early(em) => {
-                let norms: Vec<f32> = x
-                    .chunks(self.dim)
-                    .map(|r| r.iter().map(|&v| v * v).sum())
-                    .collect();
-                em.router.assign_rows(x, &norms, self.kernel.as_ref())
-            }
-        };
+        // Route every query to its decision component. Early-model routing
+        // goes through the per-fingerprint routing cache: only queries
+        // never seen before enter the (single) K(misses, sample) dispatch,
+        // so a fully warm batch dispatches no routing kernel at all.
+        let (assign, route) = self.route(x, n);
 
         // Micro-batch across workers; scope_map returns in input order.
         let workers = workers.max(1).min(n);
@@ -292,8 +333,87 @@ impl ServingContext {
                 cache_hits: agg.hits,
                 cache_misses: agg.misses,
                 rows_computed: agg.computed,
+                routing_hits: route.hits,
+                routing_misses: route.misses,
+                routing_dispatches: route.dispatches,
             },
         )
+    }
+
+    /// Component assignment for each of the `n` queries in `x`, with
+    /// routing-cache counters. Exact models route trivially (component 0,
+    /// no counters). Early models probe the routing cache per query
+    /// fingerprint (hit verified against the stored query, like the row
+    /// caches) and batch all misses into one `K(misses, sample)` dispatch
+    /// whose results are cached for every later batch on the shared
+    /// context — including other clients' batches under the socket
+    /// transport.
+    fn route(&self, x: &[f32], n: usize) -> (Vec<u16>, RouteStats) {
+        let em = match &self.model {
+            ServingModel::Exact(_) => return (vec![0u16; n], RouteStats::default()),
+            ServingModel::Early(em) => em,
+        };
+        let dim = self.dim;
+        let cache =
+            self.route_cache.as_ref().expect("early model carries a routing cache");
+        let mut assign = vec![0u16; n];
+        let mut rs = RouteStats::default();
+        let mut missing: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let q = &x[i * dim..(i + 1) * dim];
+            if let Some(entry) = cache.get(fingerprint(q)) {
+                if &entry[..dim] == q {
+                    assign[i] = entry[dim] as u16;
+                    rs.hits += 1;
+                    continue;
+                }
+                // Fingerprint collision: recompute below, uncached.
+            }
+            rs.misses += 1;
+            missing.push(i);
+        }
+        if !missing.is_empty() {
+            // Routing is per-row independent (nearest sample centroid), so
+            // dispatching only the misses assigns each query exactly as
+            // routing the full batch would. Identical unseen queries are
+            // deduped within the batch (the same discipline as the row
+            // path): one routing row per unique query.
+            rs.dispatches = 1;
+            let query = |i: usize| &x[i * dim..(i + 1) * dim];
+            let mut first: HashMap<usize, usize> = HashMap::new(); // key -> uniq slot
+            let mut uniq: Vec<usize> = Vec::new(); // representative indices
+            let mut rep: Vec<usize> = Vec::with_capacity(missing.len());
+            for &i in &missing {
+                let key = fingerprint(query(i));
+                match first.get(&key).copied() {
+                    Some(u) if query(uniq[u]) == query(i) => rep.push(u),
+                    _ => {
+                        first.insert(key, uniq.len());
+                        uniq.push(i);
+                        rep.push(uniq.len() - 1);
+                    }
+                }
+            }
+            let mut xq = Vec::with_capacity(uniq.len() * dim);
+            let mut qn = Vec::with_capacity(uniq.len());
+            for &i in &uniq {
+                let q = query(i);
+                xq.extend_from_slice(q);
+                qn.push(q.iter().map(|&v| v * v).sum());
+            }
+            let got = em.router.assign_rows(&xq, &qn, self.kernel.as_ref());
+            for (s, &i) in uniq.iter().enumerate() {
+                let q = query(i);
+                let mut entry = Vec::with_capacity(dim + 1);
+                entry.extend_from_slice(q);
+                entry.push(got[s] as f32);
+                cache.put(fingerprint(q), entry.into());
+            }
+            for (&i, &u) in missing.iter().zip(&rep) {
+                assign[i] = got[u];
+            }
+        }
+        (assign, rs)
     }
 
     /// ±1 predictions (sign of [`Self::decide`], decision 0 ↦ +1).
@@ -419,6 +539,14 @@ struct RangeStats {
     misses: u64,
 }
 
+/// Routing-cache counters of one [`ServingContext::decide`] call.
+#[derive(Clone, Copy, Debug, Default)]
+struct RouteStats {
+    hits: u64,
+    misses: u64,
+    dispatches: u64,
+}
+
 /// FNV-1a over the query's f32 bit patterns: the stable content key of the
 /// serving cache. Entries store the query itself as a prefix and hits are
 /// verified against it, so a collision degrades to an uncached recompute,
@@ -475,6 +603,9 @@ mod tests {
         assert!(s2.cache_hits > s1.cache_hits);
         assert_eq!(s2.cache_hits, te.len() as u64);
         assert!((s2.hit_rate() - 1.0).abs() < 1e-12);
+        // Exact models never dispatch routing.
+        assert_eq!(s1.routing_dispatches, 0);
+        assert_eq!(s1.routing_hits + s1.routing_misses, 0);
     }
 
     #[test]
@@ -549,10 +680,18 @@ mod tests {
         let ctx = serve_ctx(model);
         let (preds, s1) = ctx.predict(&te.x, 2);
         assert_eq!(preds, want, "serving path disagrees with EarlyModel");
+        assert_eq!(s1.routing_dispatches, 1, "cold batch routes in one dispatch");
+        assert_eq!(s1.routing_hits, 0);
+        assert_eq!(s1.routing_misses, te.len() as u64);
         let (preds2, s2) = ctx.predict(&te.x, 2);
         assert_eq!(preds, preds2);
         assert_eq!(s2.rows_computed, 0);
         assert!(s2.cache_hits > s1.cache_hits);
+        // Warm batch: routing answered entirely from the routing cache —
+        // zero kernel dispatches of any kind.
+        assert_eq!(s2.routing_dispatches, 0, "warm batch must skip routing dispatch");
+        assert_eq!(s2.routing_hits, te.len() as u64);
+        assert_eq!(s2.routing_misses, 0);
     }
 
     #[test]
@@ -598,6 +737,9 @@ mod tests {
             cache_hits: 6,
             cache_misses: 4,
             rows_computed: 4,
+            routing_hits: 7,
+            routing_misses: 3,
+            routing_dispatches: 1,
         };
         let j = s.to_json(3);
         assert_eq!(j.get("batch").as_usize(), Some(3));
@@ -605,9 +747,82 @@ mod tests {
         assert_eq!(j.get("cache_hits").as_f64(), Some(6.0));
         assert!((j.get("hit_rate").as_f64().unwrap() - 0.6).abs() < 1e-12);
         assert!((j.get("pred_per_s").as_f64().unwrap() - 20.0).abs() < 1e-9);
+        assert_eq!(j.get("routing_hits").as_f64(), Some(7.0));
+        assert_eq!(j.get("routing_misses").as_f64(), Some(3.0));
+        assert_eq!(j.get("routing_dispatches").as_f64(), Some(1.0));
         // Emits as a single parseable line.
         let line = j.to_string();
         assert!(!line.contains('\n'));
         assert!(Json::parse(&line).is_ok());
+    }
+
+    #[test]
+    fn batch_stats_merge_sums_counters() {
+        let mut a = BatchStats {
+            rows: 2,
+            latency_s: 0.25,
+            cache_hits: 1,
+            cache_misses: 1,
+            rows_computed: 1,
+            routing_hits: 2,
+            routing_misses: 0,
+            routing_dispatches: 0,
+        };
+        let b = BatchStats {
+            rows: 3,
+            latency_s: 0.5,
+            cache_hits: 0,
+            cache_misses: 3,
+            rows_computed: 3,
+            routing_hits: 0,
+            routing_misses: 3,
+            routing_dispatches: 1,
+        };
+        a.merge(&b);
+        assert_eq!(a.rows, 5);
+        assert!((a.latency_s - 0.75).abs() < 1e-12);
+        assert_eq!(a.cache_hits, 1);
+        assert_eq!(a.cache_misses, 4);
+        assert_eq!(a.rows_computed, 4);
+        assert_eq!(a.routing_hits, 2);
+        assert_eq!(a.routing_misses, 3);
+        assert_eq!(a.routing_dispatches, 1);
+    }
+
+    #[test]
+    fn routing_cache_reuse_is_per_query_not_per_batch() {
+        // Serve overlapping batches: queries routed in batch 1 must not be
+        // re-dispatched when they reappear in batch 2 alongside new ones.
+        let (tr, te) = generate_split(&covtype_like(), 600, 120, 13);
+        let kind = KernelKind::Rbf { gamma: 16.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = DcSvmConfig {
+            kind,
+            c: 4.0,
+            levels: 2,
+            k_base: 4,
+            sample_m: 64,
+            stop_after_level: Some(1),
+            ..Default::default()
+        };
+        let res = crate::dcsvm::train(&tr, &kern, &cfg);
+        let em = res.early_model.expect("early model");
+        let ctx = serve_ctx(ServingModel::Early(em));
+        let dim = ctx.dim();
+        let half = (te.len() / 2) * dim;
+        let (first, all) = (&te.x[..half], &te.x[..]);
+        let (_, s1) = ctx.decide(first, 2);
+        assert_eq!(s1.routing_misses, (half / dim) as u64);
+        // Second batch = first half (already routed) + second half (new):
+        // one dispatch covering only the new queries.
+        let (_, s2) = ctx.decide(all, 2);
+        assert_eq!(s2.routing_hits, (half / dim) as u64);
+        assert_eq!(s2.routing_misses, (te.len() - half / dim) as u64);
+        assert_eq!(s2.routing_dispatches, 1);
+        // Third pass over everything: fully warm.
+        let (_, s3) = ctx.decide(all, 2);
+        assert_eq!(s3.routing_dispatches, 0);
+        assert_eq!(s3.routing_hits, te.len() as u64);
+        assert_eq!(s3.rows_computed, 0);
     }
 }

@@ -1,0 +1,825 @@
+//! Serve transports: one request-handling core, two wire front-ends.
+//!
+//! The paper's early-prediction result only matters at deployment scale if
+//! one trained model can answer many clients at once, and the whole point
+//! of [`ServingContext`] is that kernel state amortizes across *all* the
+//! work the process ever does. This module is the front-end that makes the
+//! sharing real:
+//!
+//! - [`ServeCore`] — the transport-independent request core: one shared
+//!   [`ServingContext`], the `--workers` setting, global batch/served
+//!   counters, and an aggregate [`BatchStats`] total. Both transports
+//!   delegate every batch to [`ServeCore::decide_tracked`], so their
+//!   decisions (and their stats lines) are byte-for-byte comparable.
+//! - **stdio** ([`run_stdio`]) — the original single-connection loop:
+//!   LIBSVM rows on stdin, one `±1 decision` line per row on stdout, one
+//!   JSON stats line per batch on stderr.
+//! - **socket** ([`run_listener`]) — a TCP listener speaking
+//!   newline-delimited JSON (one request object per line, one response
+//!   object per line — PROTOCOL.md is the reference). An accept loop hands
+//!   connections to a fixed pool of connection workers over a bounded
+//!   [`WorkQueue`] (backpressure instead of unbounded queueing); each
+//!   connection is served sequentially, N connections concurrently, all
+//!   from the ONE shared context — kernel rows computed for one client
+//!   warm the cache for every other client. Malformed input produces a
+//!   structured error object ([`ERROR_CODES`]) instead of a process exit;
+//!   EOF and broken pipes end the connection gracefully with a
+//!   per-connection stats summary on stderr.
+//!
+//! [`ServeClient`] is a tiny blocking client for the socket protocol —
+//! the test/example harness, not a production SDK.
+//!
+//! The `dcsvm serve` flag set lives here too ([`SERVE_FLAGS`]): the CLI
+//! usage text ([`serve_usage`]) and README's flag table ([`readme_row`])
+//! are both rendered from that one table, and `tests/docs_sync.rs` fails
+//! the build when they drift.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{BatchStats, ServingContext};
+use crate::util::json::Json;
+use crate::util::threadpool::WorkQueue;
+
+// ---------------------------------------------------------------------------
+// Flag table — the single source of truth for `dcsvm serve` flags.
+
+/// One `dcsvm serve` flag: name, value placeholder, default, one-line help.
+pub struct FlagSpec {
+    pub flag: &'static str,
+    pub value: &'static str,
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+/// Every `dcsvm serve` flag. The CLI usage text ([`serve_usage`]) and the
+/// README flag table ([`readme_row`]) are both rendered from this list, so
+/// docs and CLI cannot drift (`tests/docs_sync.rs` +
+/// `tests/cli_roundtrip.rs` enforce it).
+pub const SERVE_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        flag: "--model",
+        value: "FILE",
+        default: "required",
+        help: "model JSON written by train --save-model",
+    },
+    FlagSpec {
+        flag: "--listen",
+        value: "ADDR",
+        default: "stdio mode",
+        help: "serve newline-delimited JSON over TCP on ADDR (see PROTOCOL.md)",
+    },
+    FlagSpec {
+        flag: "--batch",
+        value: "N",
+        default: "256",
+        help: "stdio mode: LIBSVM rows per request batch",
+    },
+    FlagSpec {
+        flag: "--workers",
+        value: "N",
+        default: "all cores",
+        help: "threads each request batch is micro-batched across",
+    },
+    FlagSpec {
+        flag: "--conns",
+        value: "N",
+        default: "8",
+        help: "socket mode: connection-handler threads (bounds concurrent clients)",
+    },
+    FlagSpec {
+        flag: "--cache-mb",
+        value: "MB",
+        default: "64",
+        help: "serving-cache byte budget, split across decision components and the routing cache",
+    },
+    FlagSpec {
+        flag: "--backend",
+        value: "KIND",
+        default: "auto",
+        help: "kernel backend: auto, native, or pjrt",
+    },
+];
+
+/// The `dcsvm serve` usage text, rendered from [`SERVE_FLAGS`].
+pub fn serve_usage() -> String {
+    let mut s = String::from("usage: dcsvm serve --model FILE [flags]\n");
+    for f in SERVE_FLAGS {
+        let head = format!("{} {}", f.flag, f.value);
+        s.push_str(&format!("  {head:<26} {}  [{}]\n", f.help, f.default));
+    }
+    s
+}
+
+/// One README flag-table row, rendered from a [`FlagSpec`]. README.md must
+/// contain this exact line for every flag (`tests/docs_sync.rs`).
+pub fn readme_row(f: &FlagSpec) -> String {
+    format!("| `{} {}` | {} | {} |", f.flag, f.value, f.default, f.help)
+}
+
+// ---------------------------------------------------------------------------
+// Error-object catalogue (socket transport).
+
+/// The request line was not valid JSON.
+pub const ERR_PARSE: &str = "parse";
+/// The request was JSON but not a valid request object (e.g. no `"x"`).
+pub const ERR_BAD_REQUEST: &str = "bad_request";
+/// A query row's length does not match the served model's dimension.
+pub const ERR_DIM_MISMATCH: &str = "dim_mismatch";
+/// Every `code` an error object can carry; PROTOCOL.md catalogues each
+/// (`tests/docs_sync.rs` enforces the catalogue).
+pub const ERROR_CODES: &[&str] = &[ERR_PARSE, ERR_BAD_REQUEST, ERR_DIM_MISMATCH];
+
+/// Hard cap on one socket request line. A client exceeding it gets a
+/// `bad_request` error object and its connection is closed (line framing
+/// is unrecoverable mid-line), so a single malicious or buggy client
+/// cannot grow the server's read buffer without bound (PROTOCOL.md §2).
+pub const MAX_REQUEST_BYTES: usize = 8 << 20;
+
+/// How often a connection worker's blocking read wakes to re-check the
+/// shutdown flag: bounds how long an idle connection can delay a graceful
+/// shutdown (PROTOCOL.md §2).
+pub const READ_POLL: Duration = Duration::from_millis(250);
+
+/// Response-object builder applying the id-echo rule once: the request's
+/// `id` is included iff the request carried one (absent → no `"id"` key,
+/// never a spurious null).
+fn with_id(id: Json, rest: Vec<(&str, Json)>) -> Json {
+    let mut pairs = Vec::with_capacity(rest.len() + 1);
+    if !matches!(id, Json::Null) {
+        pairs.push(("id", id));
+    }
+    pairs.extend(rest);
+    Json::obj(pairs)
+}
+
+fn error_response(id: Json, code: &str, message: &str) -> Json {
+    with_id(
+        id,
+        vec![(
+            "error",
+            Json::obj(vec![("code", Json::from(code)), ("message", Json::from(message))]),
+        )],
+    )
+}
+
+// ---------------------------------------------------------------------------
+// The shared request core.
+
+/// Transport-independent serving state: ONE [`ServingContext`] plus the
+/// process-lifetime counters every transport reports. Built once by
+/// `cmd_serve` (or a test) and shared by reference across all connection
+/// workers — it is `Sync` because the context is.
+pub struct ServeCore {
+    ctx: ServingContext,
+    workers: usize,
+    t0: Instant,
+    /// Global batch-index allocator; total queries served comes from
+    /// `totals.rows` (no second counter to keep in sync).
+    batches: AtomicUsize,
+    conn_ids: AtomicUsize,
+    totals: Mutex<BatchStats>,
+    shutdown: AtomicBool,
+}
+
+impl ServeCore {
+    /// Wrap a serving context; `workers` is the per-batch micro-batching
+    /// width handed to [`ServingContext::decide`].
+    pub fn new(ctx: ServingContext, workers: usize) -> ServeCore {
+        ServeCore {
+            ctx,
+            workers: workers.max(1),
+            t0: Instant::now(),
+            batches: AtomicUsize::new(0),
+            conn_ids: AtomicUsize::new(0),
+            totals: Mutex::new(BatchStats::default()),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// The shared serving context.
+    pub fn ctx(&self) -> &ServingContext {
+        &self.ctx
+    }
+
+    /// Decide one query batch through the shared context, assign it the
+    /// next global batch index, and fold its counters into the process
+    /// totals. Every transport routes every batch through here.
+    pub fn decide_tracked(&self, x: &[f32]) -> (Vec<f32>, BatchStats, usize) {
+        let (dv, stats) = self.ctx.decide(x, self.workers);
+        let index = self.batches.fetch_add(1, Ordering::Relaxed);
+        self.totals.lock().unwrap().merge(&stats);
+        (dv, stats, index)
+    }
+
+    /// Request a graceful server stop: the socket accept loop stops taking
+    /// new connections; in-flight connections drain.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    fn next_conn_id(&self) -> usize {
+        self.conn_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// The process-lifetime summary line (PROTOCOL.md §stats glossary):
+    /// batch counts, throughput, lifetime component-cache hit rate, and the
+    /// aggregated per-batch counters.
+    pub fn summary_json(&self) -> Json {
+        let dt = self.t0.elapsed().as_secs_f64();
+        let cache = self.ctx.stats();
+        let totals = *self.totals.lock().unwrap();
+        let served = totals.rows;
+        Json::obj(vec![
+            ("batches", Json::from(self.batches.load(Ordering::Relaxed))),
+            ("served", Json::from(served)),
+            ("total_s", Json::from(dt)),
+            ("pred_per_s", Json::from(served as f64 / dt.max(1e-9))),
+            ("cache_hits", Json::from(cache.hits as f64)),
+            ("cache_misses", Json::from(cache.misses as f64)),
+            ("hit_rate", Json::from(cache.hit_rate())),
+            ("rows_computed", Json::from(totals.rows_computed as f64)),
+            ("routing_hits", Json::from(totals.routing_hits as f64)),
+            ("routing_misses", Json::from(totals.routing_misses as f64)),
+            ("routing_dispatches", Json::from(totals.routing_dispatches as f64)),
+            ("workers", Json::from(self.workers)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket transport: newline-delimited JSON requests.
+
+/// Outcome of one request line: the response to write back, the batch
+/// stats to fold into per-connection totals (None for control/error
+/// requests), and whether the request asked the server to shut down.
+pub struct RequestOutcome {
+    pub response: Json,
+    pub stats: Option<BatchStats>,
+    pub shutdown: bool,
+}
+
+/// Build a v1 decide request (`{"id": ..., "x": [[f32; dim], ...]}`).
+pub fn decide_request(id: Option<Json>, rows: &[Vec<f32>]) -> Json {
+    let x = Json::Arr(
+        rows.iter()
+            .map(|r| Json::Arr(r.iter().map(|&v| Json::Num(v as f64)).collect()))
+            .collect(),
+    );
+    let mut pairs = Vec::new();
+    if let Some(id) = id {
+        pairs.push(("id", id));
+    }
+    pairs.push(("x", x));
+    Json::obj(pairs)
+}
+
+fn outcome(response: Json) -> RequestOutcome {
+    RequestOutcome { response, stats: None, shutdown: false }
+}
+
+/// Handle one request line of the socket protocol (PROTOCOL.md): parse,
+/// validate, decide through the shared core, and build the response
+/// object. Never panics on client input — malformed requests map to
+/// structured error objects and the connection stays usable.
+pub fn handle_request(core: &ServeCore, line: &str) -> RequestOutcome {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return outcome(error_response(Json::Null, ERR_PARSE, &e.to_string()));
+        }
+    };
+    let id = req.get("id").clone();
+    if req.get("shutdown").as_bool() == Some(true) {
+        core.request_shutdown();
+        return RequestOutcome {
+            response: with_id(
+                id,
+                vec![("ok", Json::from(true)), ("shutdown", Json::from(true))],
+            ),
+            stats: None,
+            shutdown: true,
+        };
+    }
+    if req.get("stats").as_bool() == Some(true) {
+        return outcome(with_id(id, vec![("stats_total", core.summary_json())]));
+    }
+    let Some(rows) = req.get("x").as_arr() else {
+        return outcome(error_response(
+            id,
+            ERR_BAD_REQUEST,
+            "request needs \"x\": [[f32; dim], ...] (or \"shutdown\"/\"stats\")",
+        ));
+    };
+    let dim = core.ctx().dim();
+    // No up-front reserve from the untrusted row count: a request line of
+    // millions of empty arrays must not allocate rows.len()·dim floats
+    // before the first row fails validation. Push-growth is amortized.
+    let mut x: Vec<f32> = Vec::new();
+    for (r, row) in rows.iter().enumerate() {
+        let Some(vals) = row.as_arr() else {
+            return outcome(error_response(
+                id,
+                ERR_BAD_REQUEST,
+                &format!("x[{r}] is not an array of numbers"),
+            ));
+        };
+        if vals.len() != dim {
+            return outcome(error_response(
+                id,
+                ERR_DIM_MISMATCH,
+                &format!("x[{r}] has {} features, served model has dim {dim}", vals.len()),
+            ));
+        }
+        for (c, v) in vals.iter().enumerate() {
+            // Non-finite features are rejected up front: NaN/inf would
+            // poison the kernel AND serialize as invalid JSON (the writer
+            // has no token for them).
+            let Some(f) = v.as_f64().filter(|f| f.is_finite()) else {
+                return outcome(error_response(
+                    id,
+                    ERR_BAD_REQUEST,
+                    &format!("x[{r}][{c}] is not a finite number"),
+                ));
+            };
+            x.push(f as f32);
+        }
+    }
+    let (dv, stats, index) = core.decide_tracked(&x);
+    let predictions = Json::Arr(
+        dv.iter().map(|&d| Json::from(if d >= 0.0 { 1.0 } else { -1.0 })).collect(),
+    );
+    // f32 → f64 is exact and the JSON writer emits round-trip decimals, so
+    // a client recovers bit-identical f32 decision values. A non-finite
+    // decision (possible when e.g. a polynomial kernel overflows on finite
+    // inputs) serializes as null — the response line must stay valid JSON.
+    let decisions = Json::Arr(
+        dv.iter()
+            .map(|&d| if d.is_finite() { Json::from(d as f64) } else { Json::Null })
+            .collect(),
+    );
+    RequestOutcome {
+        response: with_id(
+            id,
+            vec![
+                ("predictions", predictions),
+                ("decisions", decisions),
+                ("stats", stats.to_json(index)),
+            ],
+        ),
+        stats: Some(stats),
+        shutdown: false,
+    }
+}
+
+/// Serve one accepted connection to completion: one response line per
+/// request line, until EOF, a write failure (client went away — the
+/// SIGPIPE-as-EPIPE path), an oversized request line, or a shutdown
+/// request. Reads poll on [`READ_POLL`] so a worker parked on an idle
+/// connection still notices a shutdown requested elsewhere, and line
+/// length is bounded by [`MAX_REQUEST_BYTES`]. Emits a per-connection
+/// stats summary line on stderr when the connection ends.
+fn handle_connection(core: &ServeCore, stream: TcpStream, conn_id: usize) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    let Ok(read_half) = stream.try_clone() else { return };
+    let _ = read_half.set_read_timeout(Some(READ_POLL));
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut conn_totals = BatchStats::default();
+    let mut requests = 0u64;
+    // Raw bytes, not a String: `read_line`'s UTF-8 guard would DISCARD
+    // bytes already consumed from the socket if a read-timeout tick fired
+    // while the buffer ended mid-multibyte character. `read_until` keeps
+    // every consumed byte across ticks; UTF-8 is validated once per
+    // complete line.
+    let mut buf: Vec<u8> = Vec::new();
+    'conn: loop {
+        // A back-to-back sender never hits the read-timeout branch, so the
+        // shutdown flag must also be checked between served requests or a
+        // busy client could stall a graceful shutdown forever.
+        if core.shutdown_requested() {
+            break;
+        }
+        buf.clear();
+        // Read one request line: accumulate across read-timeout ticks
+        // (partial reads stay in `buf`), bail out on shutdown while
+        // idle, and cap the line length.
+        loop {
+            let budget = (MAX_REQUEST_BYTES - buf.len()) as u64 + 1;
+            match reader.by_ref().take(budget).read_until(b'\n', &mut buf) {
+                Ok(0) => {
+                    if buf.is_empty() {
+                        break 'conn; // clean EOF between requests
+                    }
+                    break; // final request line without trailing newline
+                }
+                Ok(_) => {
+                    if buf.len() > MAX_REQUEST_BYTES {
+                        let resp = error_response(
+                            Json::Null,
+                            ERR_BAD_REQUEST,
+                            &format!("request line exceeds {MAX_REQUEST_BYTES} bytes"),
+                        );
+                        let mut text = resp.to_string();
+                        text.push('\n');
+                        let _ = writer.write_all(text.as_bytes());
+                        break 'conn; // line framing lost mid-line: close
+                    }
+                    if buf.ends_with(b"\n") {
+                        break;
+                    }
+                    // No newline and under budget: EOF mid-line — the next
+                    // read returns Ok(0) and serves this final line.
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if core.shutdown_requested() {
+                        break 'conn; // idle at shutdown: close and drain
+                    }
+                }
+                Err(_) => break 'conn,
+            }
+        }
+        let Ok(line) = std::str::from_utf8(&buf) else {
+            // Framing is intact (we read to a newline), so answer with a
+            // structured error and keep the connection usable.
+            let resp =
+                error_response(Json::Null, ERR_PARSE, "request line is not valid UTF-8");
+            let mut text = resp.to_string();
+            text.push('\n');
+            if writer.write_all(text.as_bytes()).is_err() || writer.flush().is_err() {
+                break;
+            }
+            continue;
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let out = handle_request(core, line);
+        if let Some(stats) = &out.stats {
+            conn_totals.merge(stats);
+        }
+        requests += 1;
+        let mut text = out.response.to_string();
+        text.push('\n');
+        if writer.write_all(text.as_bytes()).is_err() || writer.flush().is_err() {
+            break;
+        }
+        if out.shutdown {
+            break;
+        }
+    }
+    eprintln!(
+        "{}",
+        Json::obj(vec![
+            ("conn", Json::from(conn_id)),
+            ("peer", Json::from(peer)),
+            ("requests", Json::from(requests as f64)),
+            ("rows", Json::from(conn_totals.rows)),
+            ("cache_hits", Json::from(conn_totals.cache_hits as f64)),
+            ("cache_misses", Json::from(conn_totals.cache_misses as f64)),
+            ("rows_computed", Json::from(conn_totals.rows_computed as f64)),
+            ("routing_dispatches", Json::from(conn_totals.routing_dispatches as f64)),
+            ("latency_ms", Json::from(conn_totals.latency_s * 1e3)),
+        ])
+    );
+}
+
+/// Accept connections on `listener` and serve them from `conn_workers`
+/// worker threads, all sharing `core`'s one [`ServingContext`]. The
+/// accept loop hands each connection to the pool over a bounded
+/// [`WorkQueue`] (capacity `2 × conn_workers`): when every worker is busy
+/// and the queue is full, accepting blocks — backpressure, not unbounded
+/// buffering. Returns after a graceful shutdown request
+/// (`{"shutdown": true}` on any connection): new connections stop being
+/// accepted, queued and in-flight requests drain, and connections
+/// sitting idle are closed at their next [`READ_POLL`] tick.
+pub fn run_listener(
+    core: &ServeCore,
+    listener: TcpListener,
+    conn_workers: usize,
+) -> Result<()> {
+    let conn_workers = conn_workers.max(1);
+    let mut wake_addr = listener.local_addr().context("serve: listener local_addr")?;
+    // A wildcard bind (0.0.0.0 / [::]) is not connectable on every
+    // platform; the shutdown wake-up dials loopback on the bound port.
+    if wake_addr.ip().is_unspecified() {
+        wake_addr.set_ip(match wake_addr.ip() {
+            std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        });
+    }
+    let queue: WorkQueue<TcpStream> = WorkQueue::new(conn_workers * 2);
+    std::thread::scope(|s| {
+        for _ in 0..conn_workers {
+            s.spawn(|| {
+                while let Some(stream) = queue.pop() {
+                    handle_connection(core, stream, core.next_conn_id());
+                    if core.shutdown_requested() {
+                        queue.close();
+                        // The accept loop may be parked in accept();
+                        // a throwaway local connection wakes it so it can
+                        // observe the flag and exit.
+                        let _ = TcpStream::connect(wake_addr);
+                    }
+                }
+            });
+        }
+        loop {
+            if core.shutdown_requested() {
+                break;
+            }
+            let stream = match listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(_) => {
+                    if core.shutdown_requested() {
+                        break;
+                    }
+                    // Persistent accept errors (e.g. EMFILE under fd
+                    // pressure) must not busy-spin the loop.
+                    std::thread::sleep(Duration::from_millis(50));
+                    continue;
+                }
+            };
+            // A post-shutdown accept is (usually) the wake-up connection —
+            // either way, stop accepting and let the pool drain.
+            if core.shutdown_requested() {
+                break;
+            }
+            if !queue.push(stream) {
+                break;
+            }
+        }
+        queue.close();
+    });
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Stdio transport: LIBSVM rows in, prediction lines out.
+
+/// The stdio serve loop against arbitrary reader/writers (the testable
+/// core of [`run_stdio`]): read LIBSVM rows from `reader` in batches of
+/// `batch` lines, decide each batch through the shared core, write one
+/// `±1 decision` line per row to `out` (decision values in round-trip
+/// decimal — parsing them back yields the exact f32), and one JSON stats
+/// line per batch to `err`. A broken pipe on `out` ends the loop
+/// gracefully, mirroring the socket transport's disconnect handling.
+pub fn run_stdio_io<R: BufRead, W: Write, E: Write>(
+    core: &ServeCore,
+    batch: usize,
+    reader: R,
+    mut out: W,
+    mut err: E,
+) -> Result<()> {
+    let batch = batch.max(1);
+    let mut lines = reader.lines();
+    let mut buf: Vec<String> = Vec::with_capacity(batch);
+    loop {
+        buf.clear();
+        while buf.len() < batch {
+            match lines.next() {
+                Some(Ok(l)) if !l.trim().is_empty() => buf.push(l),
+                Some(Ok(_)) => continue,
+                Some(Err(e)) => return Err(e.into()),
+                None => break,
+            }
+        }
+        if buf.is_empty() {
+            break;
+        }
+        let joined = buf.join("\n");
+        let ds = crate::data::libsvm::parse_libsvm(
+            std::io::Cursor::new(joined),
+            Some(core.ctx().dim()),
+            "stdin".into(),
+        )?;
+        let (dv, stats, index) = core.decide_tracked(&ds.x);
+        let mut text = String::new();
+        for &d in &dv {
+            text.push_str(&format!("{} {}\n", if d >= 0.0 { "+1" } else { "-1" }, d));
+        }
+        if let Err(e) = out.write_all(text.as_bytes()).and_then(|()| out.flush()) {
+            if e.kind() == std::io::ErrorKind::BrokenPipe {
+                break;
+            }
+            return Err(e.into());
+        }
+        let _ = writeln!(err, "{}", stats.to_json(index));
+    }
+    Ok(())
+}
+
+/// [`run_stdio_io`] wired to the process's stdin/stdout/stderr.
+pub fn run_stdio(core: &ServeCore, batch: usize) -> Result<()> {
+    let stdin = std::io::stdin();
+    run_stdio_io(core, batch, stdin.lock(), std::io::stdout(), std::io::stderr())
+}
+
+// ---------------------------------------------------------------------------
+// Blocking client (tests + examples/serve_client.rs).
+
+/// Minimal blocking client for the socket protocol: one request line out,
+/// one response line back. Test and example harness — not a production
+/// SDK (no timeouts, no reconnects).
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ServeClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr).context("connect to serve socket")?;
+        let reader =
+            BufReader::new(stream.try_clone().context("clone serve socket")?);
+        Ok(ServeClient { reader, writer: stream })
+    }
+
+    /// One request/response round trip; returns the parsed response object
+    /// (which may be an error object — the caller inspects `"error"`).
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Json::parse(resp.trim_end()).map_err(|e| anyhow!("bad response line: {e}"))
+    }
+
+    /// Decide a batch of query rows (each of the served model's dim).
+    pub fn decide(&mut self, rows: &[Vec<f32>]) -> Result<Json> {
+        self.request(&decide_request(None, rows))
+    }
+
+    /// Ask the server to shut down gracefully (stop accepting, drain).
+    pub fn shutdown_server(&mut self) -> Result<Json> {
+        self.request(&Json::obj(vec![("shutdown", Json::from(true))]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate_split};
+    use crate::kernel::native::NativeKernel;
+    use crate::kernel::KernelKind;
+    use crate::predict::SvmModel;
+    use crate::serving::ServingModel;
+
+    /// A core around a zero-SV exact model (decisions are all 0.0): cheap
+    /// to build, exercises the full request path.
+    fn tiny_core() -> ServeCore {
+        let (tr, _) = generate_split(&covtype_like(), 40, 10, 1);
+        let kind = KernelKind::Rbf { gamma: 1.0 };
+        let model = SvmModel::from_alpha(&tr, &vec![0.0; tr.len()], kind);
+        let ctx = ServingContext::new(
+            ServingModel::Exact(model),
+            Box::new(NativeKernel::new(kind)),
+            1 << 20,
+        );
+        ServeCore::new(ctx, 1)
+    }
+
+    #[test]
+    fn usage_and_readme_rows_cover_every_flag() {
+        let usage = serve_usage();
+        assert!(usage.starts_with("usage: dcsvm serve"));
+        for f in SERVE_FLAGS {
+            assert!(usage.contains(f.flag), "usage missing {}", f.flag);
+            assert!(usage.contains(f.help), "usage missing help for {}", f.flag);
+            let row = readme_row(f);
+            assert!(row.starts_with("| `"), "{row}");
+            assert!(row.contains(f.default), "{row}");
+            // A raw pipe inside a cell would break the README table.
+            let cells = [f.flag, f.value, f.default, f.help];
+            assert!(
+                cells.iter().all(|c| !c.contains('|')),
+                "markdown table cells must not contain raw pipes: {}",
+                f.flag
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_requests_get_structured_errors() {
+        let core = tiny_core();
+        let out = handle_request(&core, "this is not json");
+        assert_eq!(out.response.get("error").get("code").as_str(), Some(ERR_PARSE));
+        assert!(!out.shutdown);
+        assert!(out.stats.is_none());
+
+        let out = handle_request(&core, r#"{"id": 3, "rows": []}"#);
+        assert_eq!(
+            out.response.get("error").get("code").as_str(),
+            Some(ERR_BAD_REQUEST)
+        );
+        assert_eq!(out.response.get("id").as_f64(), Some(3.0), "id echoed on errors");
+
+        let out = handle_request(&core, r#"{"x": [[1.0, 2.0]]}"#);
+        assert_eq!(
+            out.response.get("error").get("code").as_str(),
+            Some(ERR_DIM_MISMATCH)
+        );
+
+        // Non-finite features are rejected before touching the kernel
+        // ("1e999" parses as +inf, which JSON could not serialize back).
+        let mut features: Vec<String> = vec!["0.5".to_string(); core.ctx().dim()];
+        features[0] = "1e999".to_string();
+        let line = format!("{{\"x\": [[{}]]}}", features.join(","));
+        let out = handle_request(&core, &line);
+        assert_eq!(
+            out.response.get("error").get("code").as_str(),
+            Some(ERR_BAD_REQUEST)
+        );
+
+        // The shutdown flag must be untouched by bad requests.
+        assert!(!core.shutdown_requested());
+    }
+
+    #[test]
+    fn decide_request_roundtrips_through_the_core() {
+        let core = tiny_core();
+        let dim = core.ctx().dim();
+        let rows = vec![vec![0.5f32; dim], vec![0.25f32; dim]];
+        let line = decide_request(Some(Json::from(7usize)), &rows).to_string();
+        let out = handle_request(&core, &line);
+        assert_eq!(out.response.get("error"), &Json::Null, "{}", out.response);
+        assert_eq!(out.response.get("id").as_usize(), Some(7));
+        let decisions = out.response.get("decisions").as_arr().unwrap();
+        assert_eq!(decisions.len(), 2);
+        let preds = out.response.get("predictions").as_arr().unwrap();
+        assert!(preds.iter().all(|p| matches!(p.as_f64(), Some(v) if v.abs() == 1.0)));
+        assert_eq!(out.response.get("stats").get("rows").as_usize(), Some(2));
+        assert!(out.stats.is_some());
+    }
+
+    #[test]
+    fn shutdown_request_flags_the_core() {
+        let core = tiny_core();
+        assert!(!core.shutdown_requested());
+        let out = handle_request(&core, r#"{"shutdown": true}"#);
+        assert!(out.shutdown);
+        assert!(core.shutdown_requested());
+        assert_eq!(out.response.get("ok").as_bool(), Some(true));
+        assert_eq!(out.response.get("shutdown").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn stats_request_reports_core_totals() {
+        let core = tiny_core();
+        let dim = core.ctx().dim();
+        let rows = vec![vec![0.125f32; dim]];
+        handle_request(&core, &decide_request(None, &rows).to_string());
+        let out = handle_request(&core, r#"{"id": "s", "stats": true}"#);
+        let total = out.response.get("stats_total");
+        assert_eq!(total.get("batches").as_usize(), Some(1));
+        assert_eq!(total.get("served").as_usize(), Some(1));
+        assert_eq!(out.response.get("id").as_str(), Some("s"));
+    }
+
+    #[test]
+    fn stdio_loop_emits_predictions_and_stats() {
+        let core = tiny_core();
+        let dim = core.ctx().dim();
+        let mut text = String::new();
+        for r in 0..2 {
+            text.push('1'); // label: required by the LIBSVM format, ignored
+            for j in 0..dim {
+                text.push_str(&format!(" {}:{}", j + 1, (r + j) as f32 * 0.1));
+            }
+            text.push('\n');
+        }
+        let mut out = Vec::new();
+        let mut err = Vec::new();
+        run_stdio_io(&core, 8, std::io::Cursor::new(text), &mut out, &mut err)
+            .unwrap();
+        let out = String::from_utf8(out).unwrap();
+        assert_eq!(out.lines().count(), 2, "{out}");
+        assert!(out.lines().all(|l| l.starts_with("+1 ") || l.starts_with("-1 ")));
+        let err = String::from_utf8(err).unwrap();
+        assert!(err.lines().any(|l| l.starts_with('{')), "{err}");
+        let summary = core.summary_json();
+        assert_eq!(summary.get("served").as_usize(), Some(2));
+        assert_eq!(summary.get("batches").as_usize(), Some(1));
+    }
+}

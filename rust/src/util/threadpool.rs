@@ -5,14 +5,17 @@
 //! a shared queue. The API is deliberately minimal — `scope_map` runs one
 //! closure per item and returns outputs in item order, which is exactly what
 //! the DC-SVM divide step needs (solve k cluster subproblems, keep results
-//! indexed by cluster).
+//! indexed by cluster) — plus [`WorkQueue`], the bounded open-ended
+//! counterpart for work discovered at runtime (the serve transport's
+//! accepted connections).
 //!
 //! Determinism: outputs depend only on per-item computation, never on
 //! scheduling order, so results are identical for any `threads` value —
 //! property-tested in dcsvm tests.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Number of worker threads to use: the `DCSVM_THREADS` env var if set,
 /// otherwise available parallelism (1 in this container).
@@ -96,6 +99,96 @@ where
     });
 }
 
+/// Bounded multi-producer/multi-consumer job queue (Mutex + Condvar): the
+/// handoff between a producer that discovers work and a fixed set of worker
+/// threads that drain it. The serve transport uses one to pass accepted
+/// TCP connections from the accept loop to its connection workers; the
+/// bound gives backpressure (bounded in-flight work) instead of unbounded
+/// queueing.
+///
+/// Semantics:
+/// - [`WorkQueue::push`] blocks while the queue is at capacity; returns
+///   `false` (dropping the item) once the queue is closed.
+/// - [`WorkQueue::pop`] blocks until an item arrives; after
+///   [`WorkQueue::close`] it drains the remaining items, then returns
+///   `None` — workers exit by `while let Some(job) = q.pop()`.
+/// - [`WorkQueue::close`] is idempotent and wakes every blocked caller.
+pub struct WorkQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> WorkQueue<T> {
+    /// A queue admitting at most `cap.max(1)` pending items.
+    pub fn new(cap: usize) -> WorkQueue<T> {
+        WorkQueue {
+            inner: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue one item, blocking while the queue is full. Returns `false`
+    /// if the queue was closed (the item is dropped).
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.items.len() < self.cap {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Dequeue one item, blocking until one arrives. Returns `None` once
+    /// the queue is closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: pending items remain poppable, further pushes are
+    /// refused, and every blocked push/pop wakes.
+    pub fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued (racy under concurrency; for tests/metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +222,61 @@ mod tests {
         let out: Vec<u32> = scope_map(4, Vec::<u32>::new(), |_, x| x);
         assert!(out.is_empty());
         assert_eq!(scope_map(4, vec![9], |_, x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn work_queue_delivers_every_item_once() {
+        use std::sync::atomic::AtomicU64;
+        let q: WorkQueue<usize> = WorkQueue::new(4);
+        let seen: Vec<AtomicU64> = (0..200).map(|_| AtomicU64::new(0)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while let Some(i) = q.pop() {
+                        seen[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            for i in 0..200 {
+                assert!(q.push(i), "queue closed early");
+            }
+            q.close();
+        });
+        assert!(seen.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn work_queue_close_drains_then_ends() {
+        let q: WorkQueue<u32> = WorkQueue::new(8);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        q.close();
+        assert!(!q.push(3), "push after close must be refused");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None, "pop stays None after drain");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn work_queue_bounds_pending_items() {
+        let q: WorkQueue<u32> = WorkQueue::new(2);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        // A third push must block until a consumer pops.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(q.push(3)); // blocks until the pop below
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert_eq!(q.pop(), Some(1));
+            assert_eq!(q.pop(), Some(2));
+            assert_eq!(q.pop(), Some(3));
+        });
+        q.close();
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

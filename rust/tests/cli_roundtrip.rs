@@ -168,6 +168,157 @@ fn serve_rejects_bad_flags() {
     let (ok, text) = run(&["serve", "--batch", "8"]);
     assert!(!ok);
     assert!(text.contains("requires --model"), "{text}");
+    // --listen is a KNOWN flag (the stale-usage bug): a missing value must
+    // error with the generated usage, never as "unknown flag".
+    let (ok, text) = run(&["serve", "--model", "m.json", "--listen"]);
+    assert!(!ok);
+    assert!(text.contains("needs a value"), "{text}");
+    assert!(!text.contains("unknown flag"), "{text}");
+    let (ok, text) = run(&["serve", "--model", "m.json", "--conns", "0"]);
+    assert!(!ok);
+    assert!(text.contains("--conns"), "{text}");
+    let (ok, text) = run(&["serve", "--model", "m.json", "--verbose", "1"]);
+    assert!(!ok);
+    assert!(text.contains("unknown flag"), "{text}");
+}
+
+#[test]
+fn serve_help_lists_every_flag_from_the_shared_table() {
+    let (ok, text) = run(&["serve", "--help"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("usage: dcsvm serve"), "{text}");
+    // The usage text is generated from the same table README renders, so
+    // neither can drift from the parser (which tests/docs_sync.rs pins to
+    // README.md).
+    for f in dcsvm::serving::transport::SERVE_FLAGS {
+        assert!(text.contains(f.flag), "usage missing {}: {text}", f.flag);
+        assert!(text.contains(f.help), "usage missing help for {}: {text}", f.flag);
+    }
+}
+
+#[test]
+fn serve_listen_socket_matches_stdio_transport() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::process::{Command, Stdio};
+
+    let dir = std::env::temp_dir().join("dcsvm_cli_listen");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("listen_model.json");
+    let (ok, text) = run(&[
+        "train",
+        "--algo",
+        "dcsvm",
+        "--dataset",
+        "covtype-like",
+        "--n-train",
+        "300",
+        "--n-test",
+        "100",
+        "--gamma",
+        "16",
+        "--c",
+        "4",
+        "--levels",
+        "2",
+        "--sample-m",
+        "64",
+        "--backend",
+        "native",
+        "--save-model",
+        model.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+
+    // One small batch, shared by both transports.
+    let spec = dcsvm::data::synthetic::all_specs()
+        .into_iter()
+        .find(|s| s.name == "covtype-like")
+        .unwrap();
+    let (_, te) = dcsvm::data::synthetic::generate_split(&spec, 50, 12, 5);
+    let libsvm = dcsvm::data::libsvm::format_libsvm(&te);
+
+    // 1) stdio transport.
+    let mut child = Command::new(bin())
+        .args([
+            "serve",
+            "--model",
+            model.to_str().unwrap(),
+            "--backend",
+            "native",
+            "--workers",
+            "2",
+        ])
+        .env("DCSVM_LOG", "warn")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn dcsvm serve (stdio)");
+    child.stdin.take().unwrap().write_all(libsvm.as_bytes()).unwrap();
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdio_bits: Vec<u32> = String::from_utf8_lossy(&out.stdout)
+        .lines()
+        .map(|l| l.split_whitespace().nth(1).unwrap().parse::<f32>().unwrap().to_bits())
+        .collect();
+    assert_eq!(stdio_bits.len(), te.len());
+
+    // 2) socket transport: bind an ephemeral port and discover it from the
+    //    {"listening": ...} stderr line.
+    let mut child = Command::new(bin())
+        .args([
+            "serve",
+            "--model",
+            model.to_str().unwrap(),
+            "--backend",
+            "native",
+            "--workers",
+            "2",
+            "--listen",
+            "127.0.0.1:0",
+        ])
+        .env("DCSVM_LOG", "warn")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn dcsvm serve (socket)");
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        assert!(
+            stderr.read_line(&mut line).unwrap() > 0,
+            "server exited before announcing its address"
+        );
+        if let Ok(j) = dcsvm::util::json::Json::parse(line.trim_end()) {
+            if let Some(a) = j.get("listening").as_str() {
+                break a.to_string();
+            }
+        }
+    };
+    let rows: Vec<Vec<f32>> = te.x.chunks(te.dim).map(|r| r.to_vec()).collect();
+    let mut client =
+        dcsvm::serving::transport::ServeClient::connect(addr.as_str()).unwrap();
+    let resp = client.decide(&rows).unwrap();
+    assert_eq!(resp.get("error"), &dcsvm::util::json::Json::Null, "{resp}");
+    let socket_bits: Vec<u32> = resp
+        .get("decisions")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+        .collect();
+    assert_eq!(
+        socket_bits, stdio_bits,
+        "socket and stdio transports must serve bit-identical decisions"
+    );
+
+    let bye = client.shutdown_server().unwrap();
+    assert_eq!(bye.get("shutdown").as_bool(), Some(true));
+    drop(client);
+    let status = child.wait().unwrap();
+    assert!(status.success());
+    std::fs::remove_file(&model).ok();
 }
 
 #[test]
@@ -210,14 +361,7 @@ fn serve_roundtrip_emits_predictions_and_warm_batch_stats() {
         .find(|s| s.name == "covtype-like")
         .unwrap();
     let (_, te) = dcsvm::data::synthetic::generate_split(&spec, 50, 16, 0);
-    let mut batch = String::new();
-    for i in 0..te.len() {
-        batch.push_str(&format!("{}", te.y[i]));
-        for (j, v) in te.row(i).iter().enumerate() {
-            batch.push_str(&format!(" {}:{}", j + 1, v));
-        }
-        batch.push('\n');
-    }
+    let batch = dcsvm::data::libsvm::format_libsvm(&te);
     let n = te.len();
 
     let mut child = Command::new(bin())
@@ -312,14 +456,7 @@ fn train_saves_and_serves_early_model() {
         .find(|s| s.name == "covtype-like")
         .unwrap();
     let (_, te) = dcsvm::data::synthetic::generate_split(&spec, 50, 8, 3);
-    let mut batch = String::new();
-    for i in 0..te.len() {
-        batch.push_str(&format!("{}", te.y[i]));
-        for (j, v) in te.row(i).iter().enumerate() {
-            batch.push_str(&format!(" {}:{}", j + 1, v));
-        }
-        batch.push('\n');
-    }
+    let batch = dcsvm::data::libsvm::format_libsvm(&te);
 
     let mut child = Command::new(bin())
         .args(["serve", "--model", model.to_str().unwrap(), "--backend", "native"])

@@ -1,0 +1,58 @@
+//! Docs ↔ code consistency gates. The serve flag table, the stats-field
+//! glossary, and the error-object catalogue each have ONE source of truth
+//! in the code (`serving::transport`); these tests fail the build when a
+//! top-level doc drifts from it.
+
+use dcsvm::serving::transport::{readme_row, ERROR_CODES, SERVE_FLAGS};
+use dcsvm::serving::BatchStats;
+
+/// Read a repo-root file (the manifest dir is `rust/`).
+fn repo_file(name: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// README's serve flag table must contain the exact row `readme_row`
+/// renders for every flag — the same table `dcsvm serve --help` is
+/// generated from (`cli_roundtrip.rs` checks that side), so the CLI and
+/// README cannot drift apart.
+#[test]
+fn readme_serve_flag_table_matches_the_cli_table() {
+    let readme = repo_file("README.md");
+    for f in SERVE_FLAGS {
+        let row = readme_row(f);
+        assert!(
+            readme.contains(&row),
+            "README.md serve-flag table is stale; expected the exact row:\n{row}\n\
+             (regenerate from serving::transport::SERVE_FLAGS)"
+        );
+    }
+}
+
+/// Every stats field `BatchStats::to_json` emits must be glossed in
+/// PROTOCOL.md (backticked, so it renders as a field name).
+#[test]
+fn protocol_doc_glosses_every_stats_field() {
+    let proto = repo_file("PROTOCOL.md");
+    let stats = BatchStats::default().to_json(0);
+    for key in stats.as_obj().expect("stats json is an object").keys() {
+        assert!(
+            proto.contains(&format!("`{key}`")),
+            "PROTOCOL.md stats glossary is missing `{key}`"
+        );
+    }
+}
+
+/// Every error code the socket transport can return must be catalogued in
+/// PROTOCOL.md.
+#[test]
+fn protocol_doc_catalogues_every_error_code() {
+    let proto = repo_file("PROTOCOL.md");
+    for code in ERROR_CODES {
+        assert!(
+            proto.contains(&format!("`{code}`")),
+            "PROTOCOL.md error catalogue is missing `{code}`"
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Integration (ISSUE 3 acceptance): the socket transport serves N
+//! concurrent connections from ONE shared `ServingContext`. Two clients
+//! sending identical batches: the second computes zero SV-set kernel rows
+//! (and, for early models, zero routing dispatches), and socket decisions
+//! are bit-identical to the stdio transport's output for the same model.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use dcsvm::data::synthetic::{covtype_like, generate_split};
+use dcsvm::dcsvm::DcSvmConfig;
+use dcsvm::kernel::{native::NativeKernel, KernelKind};
+use dcsvm::predict::SvmModel;
+use dcsvm::serving::transport::{self, ServeClient, ServeCore};
+use dcsvm::serving::{ServingContext, ServingModel};
+use dcsvm::util::json::Json;
+
+fn context_from_json(json: &Json, cache_mb: usize) -> ServingContext {
+    let model = ServingModel::from_json(json).expect("model json loads");
+    let kernel = Box::new(NativeKernel::new(model.kind()));
+    ServingContext::new(model, kernel, cache_mb << 20)
+}
+
+/// Bind an ephemeral port and serve `core` from a background thread.
+fn spawn_server(
+    core: &Arc<ServeCore>,
+    conn_workers: usize,
+) -> (std::net::SocketAddr, JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap();
+    let core = Arc::clone(core);
+    let handle =
+        std::thread::spawn(move || transport::run_listener(&core, listener, conn_workers));
+    (addr, handle)
+}
+
+fn decision_bits(resp: &Json) -> Vec<u32> {
+    resp.get("decisions")
+        .as_arr()
+        .expect("decisions array")
+        .iter()
+        .map(|v| (v.as_f64().expect("decision number") as f32).to_bits())
+        .collect()
+}
+
+fn rows_of(x: &[f32], dim: usize) -> Vec<Vec<f32>> {
+    x.chunks(dim).map(|r| r.to_vec()).collect()
+}
+
+#[test]
+fn concurrent_clients_share_one_serving_cache() {
+    let (tr, te) = generate_split(&covtype_like(), 400, 60, 21);
+    let kind = KernelKind::Rbf { gamma: 16.0 };
+    let kern = NativeKernel::new(kind);
+    let cfg = DcSvmConfig {
+        kind,
+        c: 4.0,
+        levels: 2,
+        k_base: 4,
+        sample_m: 64,
+        ..Default::default()
+    };
+    let res = dcsvm::dcsvm::train(&tr, &kern, &cfg);
+    let model = SvmModel::from_alpha(&tr, &res.alpha, kind);
+    assert!(model.num_svs() > 0);
+    let json = Json::parse(&model.to_json().to_string()).unwrap();
+    let dim = te.dim;
+    let n = te.len();
+
+    // Stdio-transport reference output for the same model (cold cache):
+    // the socket transport must serve bit-identical decision values.
+    let stdio_core = ServeCore::new(context_from_json(&json, 16), 2);
+    let mut out = Vec::new();
+    let mut err = Vec::new();
+    transport::run_stdio_io(
+        &stdio_core,
+        n,
+        std::io::Cursor::new(dcsvm::data::libsvm::format_libsvm(&te)),
+        &mut out,
+        &mut err,
+    )
+    .unwrap();
+    let stdio_text = String::from_utf8(out).unwrap();
+    let stdio_bits: Vec<u32> = stdio_text
+        .lines()
+        .map(|l| l.split_whitespace().nth(1).unwrap().parse::<f32>().unwrap().to_bits())
+        .collect();
+    assert_eq!(stdio_bits.len(), n);
+
+    // Socket server with one shared context, two concurrent connections.
+    let core = Arc::new(ServeCore::new(context_from_json(&json, 16), 2));
+    let (addr, server) = spawn_server(&core, 2);
+    let rows = rows_of(&te.x, dim);
+    let mut c1 = ServeClient::connect(addr).unwrap();
+    let mut c2 = ServeClient::connect(addr).unwrap();
+    let r1 = c1.decide(&rows).unwrap();
+    let r2 = c2.decide(&rows).unwrap();
+    assert_eq!(r1.get("error"), &Json::Null, "{r1}");
+    assert_eq!(r2.get("error"), &Json::Null, "{r2}");
+
+    // Client 1 paid the kernel work; client 2's identical batch computed
+    // ZERO SV-set rows — served entirely from rows client 1 warmed.
+    assert_eq!(r1.get("stats").get("rows_computed").as_f64(), Some(n as f64));
+    assert_eq!(r1.get("stats").get("cache_hits").as_f64(), Some(0.0));
+    assert_eq!(r2.get("stats").get("rows_computed").as_f64(), Some(0.0));
+    assert_eq!(r2.get("stats").get("cache_hits").as_f64(), Some(n as f64));
+
+    // Decisions: bit-identical across clients AND to the stdio transport.
+    let (bits1, bits2) = (decision_bits(&r1), decision_bits(&r2));
+    assert_eq!(bits1, bits2, "clients disagree");
+    assert_eq!(bits1, stdio_bits, "socket and stdio transports disagree");
+
+    // Graceful shutdown over the protocol. Client 2 stays CONNECTED and
+    // idle: the server must close it at the next read-poll tick rather
+    // than hang waiting for it (join would deadlock otherwise).
+    let bye = c1.shutdown_server().unwrap();
+    assert_eq!(bye.get("shutdown").as_bool(), Some(true));
+    server.join().unwrap().unwrap();
+    drop(c1);
+    drop(c2);
+
+    let summary = core.summary_json();
+    assert_eq!(summary.get("batches").as_usize(), Some(2));
+    assert_eq!(summary.get("served").as_usize(), Some(2 * n));
+}
+
+#[test]
+fn warm_early_batches_skip_routing_dispatch_over_socket() {
+    let (tr, te) = generate_split(&covtype_like(), 500, 80, 33);
+    let kind = KernelKind::Rbf { gamma: 16.0 };
+    let kern = NativeKernel::new(kind);
+    let cfg = DcSvmConfig {
+        kind,
+        c: 4.0,
+        levels: 2,
+        k_base: 4,
+        sample_m: 64,
+        stop_after_level: Some(1),
+        ..Default::default()
+    };
+    let res = dcsvm::dcsvm::train(&tr, &kern, &cfg);
+    let em = res.early_model.expect("early model");
+    let json = Json::parse(&em.to_json().to_string()).unwrap();
+
+    let core = Arc::new(ServeCore::new(context_from_json(&json, 16), 2));
+    let (addr, server) = spawn_server(&core, 2);
+    let rows = rows_of(&te.x, te.dim);
+    let mut c1 = ServeClient::connect(addr).unwrap();
+    let mut c2 = ServeClient::connect(addr).unwrap();
+
+    // Cold batch: exactly one K(batch, sample) routing dispatch.
+    let r1 = c1.decide(&rows).unwrap();
+    assert_eq!(r1.get("stats").get("routing_dispatches").as_f64(), Some(1.0));
+    assert_eq!(r1.get("stats").get("routing_hits").as_f64(), Some(0.0));
+
+    // Client 2 replays the batch: zero kernel work of ANY kind — no
+    // SV-set rows and no routing dispatch.
+    let r2 = c2.decide(&rows).unwrap();
+    assert_eq!(r2.get("stats").get("rows_computed").as_f64(), Some(0.0));
+    assert_eq!(r2.get("stats").get("routing_dispatches").as_f64(), Some(0.0));
+    assert_eq!(
+        r2.get("stats").get("routing_hits").as_f64(),
+        Some(te.len() as f64)
+    );
+    assert_eq!(decision_bits(&r1), decision_bits(&r2));
+
+    let bye = c1.shutdown_server().unwrap();
+    assert_eq!(bye.get("ok").as_bool(), Some(true));
+    drop(c1);
+    drop(c2);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_error_objects_not_disconnects() {
+    use std::io::{BufRead, BufReader, Write};
+
+    // Zero-SV exact model: cheap, full request path.
+    let (tr, _) = generate_split(&covtype_like(), 40, 10, 2);
+    let kind = KernelKind::Rbf { gamma: 1.0 };
+    let model = SvmModel::from_alpha(&tr, &vec![0.0; tr.len()], kind);
+    let json = Json::parse(&model.to_json().to_string()).unwrap();
+    let core = Arc::new(ServeCore::new(context_from_json(&json, 4), 1));
+    let (addr, server) = spawn_server(&core, 1);
+    let dim = core.ctx().dim();
+
+    fn roundtrip(
+        reader: &mut BufReader<std::net::TcpStream>,
+        stream: &mut std::net::TcpStream,
+        req: &[u8],
+    ) -> Json {
+        stream.write_all(req).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim_end()).unwrap()
+    }
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Invalid JSON → structured `parse` error, connection survives.
+    let resp = roundtrip(&mut reader, &mut stream, b"this is not json\n");
+    assert_eq!(resp.get("error").get("code").as_str(), Some("parse"));
+
+    // Wrong dimension → `dim_mismatch`.
+    let resp = roundtrip(&mut reader, &mut stream, b"{\"x\": [[1.0, 2.0, 3.0]]}\n");
+    assert_eq!(resp.get("error").get("code").as_str(), Some("dim_mismatch"));
+
+    // Missing "x" → `bad_request`, id echoed.
+    let resp = roundtrip(&mut reader, &mut stream, b"{\"id\": 9, \"y\": []}\n");
+    assert_eq!(resp.get("error").get("code").as_str(), Some("bad_request"));
+    assert_eq!(resp.get("id").as_f64(), Some(9.0));
+
+    // The SAME connection still serves valid requests after the errors.
+    let req = transport::decide_request(None, &[vec![0.5f32; dim]]).to_string() + "\n";
+    let resp = roundtrip(&mut reader, &mut stream, req.as_bytes());
+    assert_eq!(resp.get("error"), &Json::Null, "{resp}");
+    assert_eq!(resp.get("stats").get("rows").as_usize(), Some(1));
+
+    let resp = roundtrip(&mut reader, &mut stream, b"{\"shutdown\": true}\n");
+    assert_eq!(resp.get("shutdown").as_bool(), Some(true));
+    drop(stream);
+    server.join().unwrap().unwrap();
+}

@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Intra-repo markdown link/anchor checker (CI `docs` job, `make linkcheck`).
+
+Usage: check_links.py FILE.md [FILE.md ...]
+
+Checks every inline link `[text](target)` in the given markdown files:
+
+- `http(s)://` and `mailto:` targets are skipped (CI runs offline);
+- relative file targets must exist (resolved against the linking file's
+  directory);
+- `#anchor` fragments must match a heading in the target markdown file
+  (GitHub slug rules: lowercase, punctuation stripped, spaces to
+  hyphens, duplicate headings suffixed -1, -2, ...).
+
+Fenced code blocks and inline code spans are ignored, so example
+snippets containing bracket syntax are not treated as links.
+
+Exits non-zero listing every dead link/anchor found.
+"""
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$")
+FENCE = re.compile(r"```.*?```", re.S)
+CODE_SPAN = re.compile(r"`[^`\n]*`")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading slug."""
+    heading = CODE_SPAN.sub(lambda m: m.group(0).strip("`"), heading)
+    out = []
+    for ch in heading.strip().lower():
+        if ch.isalnum():
+            out.append(ch)
+        elif ch in " -":
+            out.append("-")
+        elif ch == "_":
+            out.append("_")
+        # other punctuation: dropped
+    return "".join(out)
+
+
+def heading_slugs(path: str) -> set:
+    counts = {}
+    slugs = set()
+    with open(path, encoding="utf-8") as f:
+        text = FENCE.sub("", f.read())
+    for line in text.splitlines():
+        m = HEADING.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check(files):
+    errors = []
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        text = FENCE.sub("", text)
+        text = CODE_SPAN.sub("", text)
+        for m in LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, frag = target.partition("#")
+            base = (
+                os.path.join(os.path.dirname(path) or ".", file_part)
+                if file_part
+                else path
+            )
+            if file_part and not os.path.exists(base):
+                errors.append(f"{path}: dead link {target} (no such file)")
+                continue
+            if frag:
+                if not (os.path.isfile(base) and base.endswith(".md")):
+                    continue  # cannot anchor-check non-markdown targets
+                if frag.lower() not in heading_slugs(base):
+                    errors.append(f"{path}: dead anchor {target}")
+    return errors
+
+
+def main(argv):
+    files = argv[1:]
+    if not files:
+        print(__doc__)
+        return 2
+    missing = [f for f in files if not os.path.isfile(f)]
+    if missing:
+        print("no such file(s): " + ", ".join(missing))
+        return 2
+    errors = check(files)
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"FAIL: {len(errors)} dead link(s)/anchor(s)")
+        return 1
+    print(f"OK: {len(files)} file(s), no dead intra-repo links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
