@@ -1,15 +1,20 @@
-# Repo task runner. `make verify` is the tier-1 gate plus the doc gates
-# (mirrors ci.yml for environments without GitHub Actions).
+# Repo task runner. `make verify` is the tier-1 gate plus the lint and doc
+# gates (mirrors ci.yml for environments without GitHub Actions).
 
-.PHONY: verify fmt test build doc linkcheck artifacts
+.PHONY: verify fmt test build clippy doc linkcheck bench-smoke artifacts
 
-verify: build test doc linkcheck
+verify: build test clippy doc linkcheck
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# Lint gate: clippy across every target; any warning fails (mirrors the CI
+# `clippy` job).
+clippy:
+	cargo clippy --all-targets -- -D warnings
 
 # Rustdoc gate: broken intra-doc links (and any other rustdoc warning)
 # fail the build. `--lib` because the bin target shares the crate name.
@@ -22,6 +27,12 @@ linkcheck:
 
 fmt:
 	cargo fmt --check
+
+# CI perf smoke: train + serve a small synthetic workload and emit
+# BENCH_ci.json; fails if any structured counter is missing (mirrors the
+# CI `bench-smoke` job).
+bench-smoke: build
+	python3 scripts/bench_smoke.py --binary target/release/dcsvm --out BENCH_ci.json
 
 # AOT-compile the Pallas/XLA kernel artifacts (requires the python/ stack;
 # the Rust side runs on the native backend without them).

@@ -69,7 +69,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> Cas
     let mut perm: Vec<usize> = (0..n).collect();
     rng.shuffle(&mut perm);
     let leaves = 1usize << cfg.depth;
-    let shard = (n + leaves - 1) / leaves;
+    let shard = n.div_ceil(leaves);
     let mut groups: Vec<Vec<usize>> = perm
         .chunks(shard.max(1))
         .map(|c| c.to_vec())
@@ -96,7 +96,15 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> Cas
             scope_map(cfg.threads, std::mem::take(&mut groups), |_, members| {
                 let a0: Vec<f64> = members.iter().map(|&i| alpha_ref[i]).collect();
                 let warm = a0.iter().any(|&a| a != 0.0);
-                let res = SmoSolver::new(ctx_ref.view(&members), scfg.clone()).solve_warm(
+                // Unsegmented (full-row, global-keyed) views on purpose:
+                // cascade re-partitions survivors every merge pass, so
+                // pass-p member sets never recur in pass p+1 — per-pass
+                // segments would get zero cross-pass hits while gathering
+                // a dataset-sized feature copy per pass. Full rows keyed
+                // by global index stay resident across merges (the merged
+                // solve finds its SV rows already cached).
+                let view = ctx_ref.view_unsegmented(&members);
+                let res = SmoSolver::new(view, scfg.clone()).solve_warm(
                     if warm { Some(&a0) } else { None },
                     &mut |_| {},
                 );

@@ -139,7 +139,7 @@ pub fn train(ds: &Dataset, cfg: &FastfoodConfig) -> FastfoodModel {
     let t0 = Instant::now();
     let dim = ds.dim;
     let d_pad = dim.next_power_of_two().max(2);
-    let n_blocks = (cfg.features + d_pad - 1) / d_pad;
+    let n_blocks = cfg.features.div_ceil(d_pad);
     let mut rng = Pcg64::new(cfg.seed);
 
     // sigma from gamma: K = exp(−γr²) = exp(−r²/(2σ²)) → σ = 1/√(2γ)

@@ -1,28 +1,50 @@
-//! The unified kernel-access layer: one [`KernelContext`] per dataset.
+//! The unified kernel-access layer: one [`KernelContext`] per dataset,
+//! **segment-granular** since cache v2.
 //!
 //! A context owns everything every consumer of kernel values needs and used
 //! to recompute privately: the dataset reference, its precomputed squared
 //! row norms (previously recomputed via `sq_norms()` at 15+ call sites), the
-//! [`BlockKernel`] backend, and the shared [`ShardedRowCache`] of full
-//! kernel rows keyed by **global row index**.
+//! [`BlockKernel`] backend, and the shared [`ShardedRowCache`].
 //!
-//! [`KernelView`] is a cheap subset view (local → global index map) used for
-//! cluster subproblems: a view routes its kernel-row requests through the
-//! shared cache, so rows computed while solving one cluster at level l are
-//! still resident for level l−1, the refine solve, and the final conquer
-//! solve — the cache analogue of the paper's α warm start. Views therefore
-//! compute *full* rows (against the whole dataset) rather than
-//! cluster-local rows: a subproblem pays up to k× more per cache miss, but
-//! each row is computed once per training run instead of once per phase,
-//! and the conquer solve starts with the SV rows already resident
-//! (`tests/dcsvm_e2e.rs::shared_context_prewarms_conquer_solve`).
+//! **Segment keying.** Cache keys are `(segment, row)` composites
+//! (`seg_key`): a *segment* is a registered set of global column indices
+//! — the full span `0..n` (segment 0, always present) or a cluster's member
+//! set registered by [`KernelContext::view`] during the divide phase. The
+//! entry under `(s, i)` is the partial kernel row `K(x_i, cols(s))`, so a
+//! cluster subproblem at k clusters computes and caches rows of length
+//! ~n/k instead of n — the divide-phase compute and cache bytes shrink by
+//! roughly the cluster factor (the structure block-minimization methods
+//! exploit; see PAPERS.md).
 //!
-//! Batched dispatch lives here too ([`KernelContext::compute_rows`]): the
-//! PJRT backend pays a fixed per-call cost, so the solver's row prefetch,
-//! kernel-kmeans assignment and batch prediction all funnel multi-row
-//! requests into single backend calls.
+//! **Stitching.** Cross-phase reuse survives the narrower keys: a full-row
+//! request ([`KernelContext::row`]) that misses consults every registered
+//! segment's entry for that row, copies the covered columns (bit-identical
+//! — each kernel entry is a pure elementwise function of `(x_i, x_j)`, so
+//! a value computed inside a segment dispatch equals the one a full-row
+//! dispatch would produce), and computes only the uncovered columns in one
+//! gathered dispatch. The conquer solve therefore starts from the divide
+//! and refine phases' partial rows exactly as it used to start from their
+//! full rows (`tests/dcsvm_e2e.rs`).
+//!
+//! [`KernelView`] is a cheap subset view (local → global index map) for
+//! cluster subproblems. A segmented view's rows are **segment-length and
+//! local-indexed** (`cols[t] == members[t]`), which also removes the
+//! local→global indirection from the solver's gradient loop.
+//! [`KernelContext::view_unsegmented`] keeps the v1 behavior (full
+//! dataset-length rows under the full-span key) as the ablation baseline —
+//! `dcsvm_e2e` proves the segmented divide computes ≥2× fewer kernel
+//! values at k ≥ 4 with bit-identical final α.
+//!
+//! Batched dispatch lives here too: the PJRT backend pays a fixed per-call
+//! cost, so the solver's row prefetch, kernel-kmeans assignment and batch
+//! prediction all funnel multi-row requests into single backend calls.
+//! [`ValueStats`] counts every kernel entry the context computes, copies
+//! via stitching, or is told about ([`KernelContext::count_external_values`]
+//! — kmeans/predict block passes), feeding the `segment_rows` /
+//! `divide_values` fields of the harness `Outcome` and `BENCH_ci.json`.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::data::Dataset;
 use crate::kernel::{BlockKernel, KernelKind};
@@ -37,13 +59,103 @@ pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
 /// serializing on fills without oversharding tiny budgets.
 const DEFAULT_SHARDS: usize = 16;
 
+/// The full-span segment id (columns `0..n`).
+const FULL_SEGMENT: u32 = 0;
+
+/// Compose the cache key of segment `seg`, row `row`. Row indices occupy
+/// the low 40 bits (datasets are far below 2⁴⁰ rows), so `key % shards`
+/// still spreads adjacent rows across shards.
+#[inline]
+fn seg_key(seg: u32, row: usize) -> u64 {
+    debug_assert!(row < (1usize << 40));
+    ((seg as u64) << 40) | row as u64
+}
+
+/// A registered column set: the unit of kernel-cache granularity.
+pub struct SegmentData {
+    id: u32,
+    /// Global column indices (distinct, aligned with the owning view's
+    /// local order); `None` = the full span `0..n`.
+    cols: Option<Vec<usize>>,
+    /// Gathered column features `[len, dim]` (`None` for the full span —
+    /// the dataset matrix is used directly).
+    xs: Option<Vec<f32>>,
+    /// Gathered column norms (`None` for the full span).
+    norms: Option<Vec<f32>>,
+    /// Column count (cached; `ds.len()` for the full span).
+    len: usize,
+}
+
+impl SegmentData {
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Column count of this segment.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether this is the full-span segment.
+    pub fn is_full(&self) -> bool {
+        self.cols.is_none()
+    }
+}
+
+/// Shared handle to a registered segment.
+pub type SegmentRef = Arc<SegmentData>;
+
+/// Kernel-value accounting of one context: entries computed by backend
+/// dispatches, entries reused by full-row stitching, and partial/full rows
+/// materialized. Snapshot-and-`since` like [`CacheStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ValueStats {
+    /// Kernel entries evaluated by backend dispatches through this context
+    /// (plus externally counted block passes — kmeans routing, batch
+    /// prediction).
+    pub values_computed: u64,
+    /// Entries copied out of cached segment rows while stitching full rows.
+    pub values_stitched: u64,
+    /// Partial (non-full-span) segment rows computed.
+    pub segment_rows: u64,
+    /// Full-span rows materialized (computed or stitched).
+    pub full_rows: u64,
+}
+
+impl ValueStats {
+    /// Counter deltas since an earlier snapshot.
+    pub fn since(&self, earlier: &ValueStats) -> ValueStats {
+        ValueStats {
+            values_computed: self.values_computed.saturating_sub(earlier.values_computed),
+            values_stitched: self.values_stitched.saturating_sub(earlier.values_stitched),
+            segment_rows: self.segment_rows.saturating_sub(earlier.segment_rows),
+            full_rows: self.full_rows.saturating_sub(earlier.full_rows),
+        }
+    }
+}
+
+#[derive(Default)]
+struct ValueCounters {
+    values_computed: AtomicU64,
+    values_stitched: AtomicU64,
+    segment_rows: AtomicU64,
+    full_rows: AtomicU64,
+}
+
 /// Kernel-access context for one dataset: rows, norms, backend, shared
-/// row cache.
+/// segment-granular row cache, segment registry, value counters.
 pub struct KernelContext<'a> {
     ds: &'a Dataset,
     kernel: &'a dyn BlockKernel,
     norms: Vec<f32>,
     cache: ShardedRowCache,
+    /// Registered segments; index = id; `[0]` is always the full span.
+    segments: Mutex<Vec<SegmentRef>>,
+    counters: ValueCounters,
 }
 
 impl<'a> KernelContext<'a> {
@@ -60,8 +172,22 @@ impl<'a> KernelContext<'a> {
         shards: usize,
     ) -> Self {
         let norms = ds.sq_norms();
-        let cache = ShardedRowCache::new(ds.len(), cache_bytes, shards);
-        KernelContext { ds, kernel, norms, cache }
+        let cache = ShardedRowCache::new(cache_bytes, shards);
+        let full: SegmentRef = Arc::new(SegmentData {
+            id: FULL_SEGMENT,
+            cols: None,
+            xs: None,
+            norms: None,
+            len: ds.len(),
+        });
+        KernelContext {
+            ds,
+            kernel,
+            norms,
+            cache,
+            segments: Mutex::new(vec![full]),
+            counters: ValueCounters::default(),
+        }
     }
 
     pub fn ds(&self) -> &'a Dataset {
@@ -103,62 +229,281 @@ impl<'a> KernelContext<'a> {
         self.ds.y[i]
     }
 
-    /// The shared row cache (tests / diagnostics).
+    /// The shared segment cache (tests / diagnostics).
     pub fn cache(&self) -> &ShardedRowCache {
         &self.cache
     }
 
+    /// Whether the **full-span** row of `i` is resident.
     pub fn is_row_cached(&self, i: usize) -> bool {
-        self.cache.contains(i)
+        self.cache.contains(seg_key(FULL_SEGMENT, i))
+    }
+
+    /// The always-present full-span segment.
+    pub fn full_segment(&self) -> SegmentRef {
+        Arc::clone(&self.segments.lock().unwrap()[0])
+    }
+
+    /// Register (or find) the segment with exactly these columns. `cols`
+    /// must be distinct in-range indices; order defines the segment row's
+    /// layout (`row[t] = K(x_i, x_{cols[t]})`). The identity column set
+    /// resolves to the full-span segment.
+    pub fn register_segment(&self, cols: &[usize]) -> SegmentRef {
+        debug_assert!(cols.iter().all(|&c| c < self.ds.len()));
+        let identity =
+            cols.len() == self.ds.len() && cols.iter().enumerate().all(|(t, &c)| t == c);
+        let mut reg = self.segments.lock().unwrap();
+        if identity {
+            return Arc::clone(&reg[0]);
+        }
+        if let Some(existing) = reg.iter().find(|s| s.cols.as_deref() == Some(cols)) {
+            return Arc::clone(existing);
+        }
+        let dim = self.ds.dim;
+        let mut xs = Vec::with_capacity(cols.len() * dim);
+        let mut cnorms = Vec::with_capacity(cols.len());
+        for &c in cols {
+            xs.extend_from_slice(self.ds.row(c));
+            cnorms.push(self.norms[c]);
+        }
+        let seg: SegmentRef = Arc::new(SegmentData {
+            id: reg.len() as u32,
+            cols: Some(cols.to_vec()),
+            xs: Some(xs),
+            norms: Some(cnorms),
+            len: cols.len(),
+        });
+        reg.push(Arc::clone(&seg));
+        seg
+    }
+
+    /// Registered segments including the full span (diagnostics/tests).
+    pub fn segment_count(&self) -> usize {
+        self.segments.lock().unwrap().len()
+    }
+
+    /// Whether segment `seg`'s row of `i` is resident.
+    pub fn is_segment_row_cached(&self, seg: &SegmentRef, i: usize) -> bool {
+        self.cache.contains(seg_key(seg.id, i))
+    }
+
+    /// Segment row `K(x_i, cols(seg))` through the shared cache (one
+    /// backend dispatch on miss). For the full-span segment this is
+    /// [`Self::row`] — including its stitching path.
+    pub fn segment_row(&self, seg: &SegmentRef, i: usize) -> Arc<[f32]> {
+        if seg.is_full() {
+            return self.row(i);
+        }
+        let xs = seg.xs.as_ref().expect("partial segment has gathered columns");
+        let snorms = seg.norms.as_ref().expect("partial segment has gathered norms");
+        self.cache.get_or_compute(seg_key(seg.id, i), seg.len, |out| {
+            self.kernel.block(
+                self.ds.row(i),
+                &self.norms[i..i + 1],
+                xs,
+                snorms,
+                self.ds.dim,
+                out,
+            );
+            self.counters
+                .values_computed
+                .fetch_add(seg.len as u64, Ordering::Relaxed);
+            self.counters.segment_rows.fetch_add(1, Ordering::Relaxed);
+        })
     }
 
     /// Full kernel row K(x_i, ·) against the whole dataset, through the
-    /// shared cache (single-row backend dispatch on miss).
+    /// shared cache. On a miss the row is **stitched**: cached segment
+    /// entries of row i cover their columns by copy (bit-identical), and
+    /// only the uncovered columns enter the backend dispatch.
     pub fn row(&self, i: usize) -> Arc<[f32]> {
-        self.cache.get_or_compute(i, |out| {
+        let key = seg_key(FULL_SEGMENT, i);
+        if let Some(row) = self.cache.get(key) {
+            return row;
+        }
+        // Miss already recorded by the probe; assemble outside any shard
+        // lock (stitch probes touch other shards — never nest shard locks).
+        let n = self.ds.len();
+        let dim = self.ds.dim;
+        let mut buf = vec![0f32; n];
+        let mut covered = vec![false; n];
+        let mut covered_n = 0usize;
+        let partials: Vec<SegmentRef> = {
+            let reg = self.segments.lock().unwrap();
+            reg.iter().skip(1).cloned().collect()
+        };
+        for seg in &partials {
+            if covered_n == n {
+                break;
+            }
+            let Some(part) = self.cache.get_quiet(seg_key(seg.id, i)) else {
+                continue;
+            };
+            let cols = seg.cols.as_ref().expect("partial segment has columns");
+            for (t, &c) in cols.iter().enumerate() {
+                if !covered[c] {
+                    buf[c] = part[t];
+                    covered[c] = true;
+                    covered_n += 1;
+                }
+            }
+        }
+        if covered_n == 0 {
+            // Cold row: one contiguous full-span dispatch.
             self.kernel.block(
                 self.ds.row(i),
                 &self.norms[i..i + 1],
                 &self.ds.x,
                 &self.norms,
-                self.ds.dim,
-                out,
+                dim,
+                &mut buf,
             );
-        })
+            self.counters.values_computed.fetch_add(n as u64, Ordering::Relaxed);
+        } else if covered_n < n {
+            // Stitch: gather the uncovered columns into one dispatch.
+            let missing: Vec<usize> = (0..n).filter(|&c| !covered[c]).collect();
+            let mut xs = Vec::with_capacity(missing.len() * dim);
+            let mut mnorms = Vec::with_capacity(missing.len());
+            for &c in &missing {
+                xs.extend_from_slice(self.ds.row(c));
+                mnorms.push(self.norms[c]);
+            }
+            let mut out = vec![0f32; missing.len()];
+            self.kernel.block(
+                self.ds.row(i),
+                &self.norms[i..i + 1],
+                &xs,
+                &mnorms,
+                dim,
+                &mut out,
+            );
+            for (t, &c) in missing.iter().enumerate() {
+                buf[c] = out[t];
+            }
+            self.counters
+                .values_computed
+                .fetch_add(missing.len() as u64, Ordering::Relaxed);
+        }
+        self.counters
+            .values_stitched
+            .fetch_add(covered_n as u64, Ordering::Relaxed);
+        self.counters.full_rows.fetch_add(1, Ordering::Relaxed);
+        let row: Arc<[f32]> = buf.into();
+        self.cache.put(key, Arc::clone(&row));
+        row
     }
 
-    /// Compute all currently uncached rows of `rows` in ONE backend
-    /// dispatch and insert them into the shared cache; returns how many
-    /// rows were computed. This is the batched prefetch path: on the PJRT
-    /// backend one call amortizes the fixed dispatch cost across the batch.
+    /// Compute all currently uncached **full-span** rows of `rows`; rows
+    /// with no cached partial coverage go into ONE backend dispatch (the
+    /// batched prefetch path — on the PJRT backend one call amortizes the
+    /// fixed dispatch cost), rows with partial coverage are stitched
+    /// individually. Returns how many rows were materialized.
     pub fn compute_rows(&self, rows: &[usize]) -> usize {
         let missing: Vec<usize> = rows
             .iter()
             .copied()
-            .filter(|&p| !self.cache.contains(p))
+            .filter(|&p| !self.cache.contains(seg_key(FULL_SEGMENT, p)))
             .collect();
         if missing.is_empty() {
             return 0;
         }
-        let n = self.ds.len();
+        let partials: Vec<SegmentRef> = {
+            let reg = self.segments.lock().unwrap();
+            reg.iter().skip(1).cloned().collect()
+        };
+        let has_partial = |p: usize| {
+            partials.iter().any(|s| self.cache.contains(seg_key(s.id, p)))
+        };
+        let (stitchable, cold): (Vec<usize>, Vec<usize>) =
+            missing.iter().copied().partition(|&p| has_partial(p));
+        // Stitchable rows dispatch one gathered block each; on a backend
+        // with per-call overhead (PJRT) a batch of warm rows pays that
+        // cost per row. Batching rows by coverage pattern into shared
+        // dispatches is the known follow-up (ROADMAP); the native backend
+        // — where prefetch batches are size 1 — is unaffected.
+        for &p in &stitchable {
+            self.row(p);
+        }
+        if !cold.is_empty() {
+            let n = self.ds.len();
+            let dim = self.ds.dim;
+            let mut xq = Vec::with_capacity(cold.len() * dim);
+            let mut qn = Vec::with_capacity(cold.len());
+            for &p in &cold {
+                xq.extend_from_slice(self.ds.row(p));
+                qn.push(self.norms[p]);
+            }
+            let mut block = vec![0f32; cold.len() * n];
+            self.kernel.block(&xq, &qn, &self.ds.x, &self.norms, dim, &mut block);
+            for (t, &p) in cold.iter().enumerate() {
+                self.cache
+                    .insert_computed(seg_key(FULL_SEGMENT, p), &block[t * n..(t + 1) * n]);
+            }
+            self.counters
+                .values_computed
+                .fetch_add((cold.len() * n) as u64, Ordering::Relaxed);
+            self.counters.full_rows.fetch_add(cold.len() as u64, Ordering::Relaxed);
+        }
+        missing.len()
+    }
+
+    /// Batch-compute the uncached rows of `seg` for the given global rows
+    /// in ONE backend dispatch; returns how many were computed.
+    pub fn compute_segment_rows(&self, seg: &SegmentRef, rows: &[usize]) -> usize {
+        if seg.is_full() {
+            return self.compute_rows(rows);
+        }
+        let missing: Vec<usize> = rows
+            .iter()
+            .copied()
+            .filter(|&p| !self.cache.contains(seg_key(seg.id, p)))
+            .collect();
+        if missing.is_empty() {
+            return 0;
+        }
         let dim = self.ds.dim;
+        let xs = seg.xs.as_ref().expect("partial segment has gathered columns");
+        let snorms = seg.norms.as_ref().expect("partial segment has gathered norms");
         let mut xq = Vec::with_capacity(missing.len() * dim);
         let mut qn = Vec::with_capacity(missing.len());
         for &p in &missing {
             xq.extend_from_slice(self.ds.row(p));
             qn.push(self.norms[p]);
         }
-        let mut block = vec![0f32; missing.len() * n];
-        self.kernel
-            .block(&xq, &qn, &self.ds.x, &self.norms, dim, &mut block);
+        let mut block = vec![0f32; missing.len() * seg.len];
+        self.kernel.block(&xq, &qn, xs, snorms, dim, &mut block);
         for (t, &p) in missing.iter().enumerate() {
-            self.cache.insert_computed(p, &block[t * n..(t + 1) * n]);
+            self.cache
+                .insert_computed(seg_key(seg.id, p), &block[t * seg.len..(t + 1) * seg.len]);
         }
+        self.counters
+            .values_computed
+            .fetch_add((missing.len() * seg.len) as u64, Ordering::Relaxed);
+        self.counters
+            .segment_rows
+            .fetch_add(missing.len() as u64, Ordering::Relaxed);
         missing.len()
+    }
+
+    /// Record kernel entries computed by a block pass that bypasses the
+    /// cache (kernel-kmeans sample/assignment passes, batch prediction):
+    /// keeps [`ValueStats::values_computed`] an honest whole-run total.
+    pub fn count_external_values(&self, entries: u64) {
+        self.counters.values_computed.fetch_add(entries, Ordering::Relaxed);
     }
 
     pub fn stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Kernel-value accounting snapshot.
+    pub fn value_stats(&self) -> ValueStats {
+        ValueStats {
+            values_computed: self.counters.values_computed.load(Ordering::Relaxed),
+            values_stitched: self.counters.values_stitched.load(Ordering::Relaxed),
+            segment_rows: self.counters.segment_rows.load(Ordering::Relaxed),
+            full_rows: self.counters.full_rows.load(Ordering::Relaxed),
+        }
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -166,27 +511,50 @@ impl<'a> KernelContext<'a> {
     }
 
     /// Identity view over the whole dataset (refine-free solves, the final
-    /// conquer solve, the LIBSVM comparator).
+    /// conquer solve, the LIBSVM comparator). Rows are full-span (stitched
+    /// from divide-phase segments where cached).
     pub fn view_full(&self) -> KernelView<'_> {
-        KernelView { ctx: self, map: None }
+        KernelView { ctx: self, map: None, seg: None }
     }
 
-    /// Subset view for a cluster subproblem: local index t ↦ global index
-    /// `members[t]`. Rows the subproblem computes land in the shared cache
-    /// under their global keys.
+    /// Segmented subset view for a cluster subproblem: local index t ↦
+    /// global index `members[t]`, and kernel rows are **segment rows**
+    /// `K(x_i, members)` — local-indexed, cluster-length, cached under the
+    /// member set's segment key.
     pub fn view(&self, members: &[usize]) -> KernelView<'_> {
+        let seg = self.register_segment(members);
+        if seg.is_full() {
+            // Identity member set: behave exactly like the full view, but
+            // keep the map so local/global bookkeeping stays valid.
+            return KernelView { ctx: self, map: Some(members.to_vec()), seg: None };
+        }
+        KernelView { ctx: self, map: Some(members.to_vec()), seg: Some(seg) }
+    }
+
+    /// v1-style subset view: full dataset-length rows under the full-span
+    /// key, indexed globally. Kept as the ablation baseline
+    /// (`DcSvmConfig::segment_views = false`) and for callers that need
+    /// whole rows through a subset lens.
+    pub fn view_unsegmented(&self, members: &[usize]) -> KernelView<'_> {
         debug_assert!(members.iter().all(|&i| i < self.ds.len()));
-        KernelView { ctx: self, map: Some(members.to_vec()) }
+        KernelView { ctx: self, map: Some(members.to_vec()), seg: None }
     }
 }
 
 /// A subset (or identity) view of a [`KernelContext`]: the solver-facing
-/// handle for one subproblem. Kernel rows fetched through a view are always
-/// **full dataset-length rows** — index them with [`Self::global`] indices.
+/// handle for one subproblem.
+///
+/// Row access contract ([`Self::local_row`]):
+/// - segmented view → rows have length `self.len()` and are **local**
+///   indexed (`row[t] = K(x_i, x_{members[t]})`);
+/// - full or unsegmented view → rows have length `ctx.len()` and are
+///   **global** indexed; [`Self::unsegmented_map`] returns the map to apply.
 pub struct KernelView<'a> {
     ctx: &'a KernelContext<'a>,
     /// local → global; `None` = identity (whole dataset).
     map: Option<Vec<usize>>,
+    /// Segment backing this view's rows; `None` = full-span rows.
+    seg: Option<SegmentRef>,
 }
 
 impl<'a> KernelView<'a> {
@@ -202,7 +570,10 @@ impl<'a> KernelView<'a> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        match &self.map {
+            Some(m) => m.is_empty(),
+            None => self.ctx.is_empty(),
+        }
     }
 
     /// Whether this view is the identity over the whole dataset.
@@ -210,9 +581,33 @@ impl<'a> KernelView<'a> {
         self.map.is_none()
     }
 
+    /// Whether this view's rows are segment rows (local-indexed).
+    pub fn is_segmented(&self) -> bool {
+        self.seg.is_some()
+    }
+
     /// The local → global index map (`None` = identity).
     pub fn map(&self) -> Option<&[usize]> {
         self.map.as_deref()
+    }
+
+    /// `Some(map)` iff rows from [`Self::local_row`] are full-length and
+    /// must be indexed through `map` (the v1 unsegmented-subset case);
+    /// `None` when rows are directly indexed by local position.
+    pub fn unsegmented_map(&self) -> Option<&[usize]> {
+        if self.seg.is_some() {
+            None
+        } else {
+            self.map.as_deref()
+        }
+    }
+
+    /// Length of the rows [`Self::local_row`] returns.
+    pub fn row_len(&self) -> usize {
+        match &self.seg {
+            Some(s) => s.len(),
+            None => self.ctx.len(),
+        }
     }
 
     #[inline]
@@ -247,12 +642,29 @@ impl<'a> KernelView<'a> {
         }
     }
 
+    /// Whether this view's row for `local` is resident (segment row for
+    /// segmented views, full-span row otherwise).
     pub fn is_row_cached(&self, local: usize) -> bool {
-        self.ctx.is_row_cached(self.global(local))
+        let g = self.global(local);
+        match &self.seg {
+            Some(s) => self.ctx.is_segment_row_cached(s, g),
+            None => self.ctx.is_row_cached(g),
+        }
+    }
+
+    /// This view's kernel row of local point `local` — see the indexing
+    /// contract in the type docs.
+    pub fn local_row(&self, local: usize) -> Arc<[f32]> {
+        let g = self.global(local);
+        match &self.seg {
+            Some(s) => self.ctx.segment_row(s, g),
+            None => self.ctx.row(g),
+        }
     }
 
     /// Full (dataset-length) kernel row of local point `local`, via the
-    /// shared cache. Index the result with **global** indices.
+    /// shared cache (stitched from segments where possible). Index the
+    /// result with **global** indices.
     pub fn global_row(&self, local: usize) -> Arc<[f32]> {
         self.ctx.row(self.global(local))
     }
@@ -260,12 +672,13 @@ impl<'a> KernelView<'a> {
     /// Batch-compute the uncached rows of the given local points in one
     /// backend dispatch; returns how many were computed.
     pub fn ensure_rows(&self, locals: &[usize]) -> usize {
-        match &self.map {
-            Some(m) => {
-                let globals: Vec<usize> = locals.iter().map(|&l| m[l]).collect();
-                self.ctx.compute_rows(&globals)
-            }
-            None => self.ctx.compute_rows(locals),
+        let globals: Vec<usize> = match &self.map {
+            Some(m) => locals.iter().map(|&l| m[l]).collect(),
+            None => locals.to_vec(),
+        };
+        match &self.seg {
+            Some(s) => self.ctx.compute_segment_rows(s, &globals),
+            None => self.ctx.compute_rows(&globals),
         }
     }
 }
@@ -275,7 +688,9 @@ mod tests {
     use super::*;
     use crate::data::synthetic::{covtype_like, generate};
     use crate::kernel::native::NativeKernel;
+    use crate::prop_assert;
     use crate::util::prng::Pcg64;
+    use crate::util::proptest::check;
 
     fn setup(n: usize) -> (Dataset, NativeKernel) {
         let mut rng = Pcg64::new(3);
@@ -291,6 +706,7 @@ mod tests {
         assert_eq!(ctx.norms(), &ds.sq_norms()[..]);
         assert_eq!(ctx.len(), 40);
         assert_eq!(ctx.dim(), ds.dim);
+        assert_eq!(ctx.segment_count(), 1); // the full span
     }
 
     #[test]
@@ -308,6 +724,9 @@ mod tests {
         ctx.row(7);
         let d = ctx.stats().since(&s0);
         assert_eq!((d.hits, d.misses), (1, 0));
+        let v = ctx.value_stats();
+        assert_eq!(v.values_computed, 30);
+        assert_eq!(v.full_rows, 1);
     }
 
     #[test]
@@ -319,11 +738,12 @@ mod tests {
         for &i in &[1, 3, 5, 7] {
             assert!(ctx.is_row_cached(i));
         }
-        // Batched rows agree with the single-row path.
+        // Batched rows agree with the single-row path bit-for-bit.
         let via_batch = ctx.row(3);
         let fresh_ctx = KernelContext::new(&ds, &k, 1 << 20);
         let direct = fresh_ctx.row(3);
         assert_eq!(&*via_batch, &*direct);
+        assert_eq!(ctx.value_stats().values_computed, 4 * 25);
     }
 
     #[test]
@@ -334,6 +754,8 @@ mod tests {
         let view = ctx.view(&members);
         assert_eq!(view.len(), 3);
         assert!(!view.is_full());
+        assert!(view.is_segmented());
+        assert_eq!(view.row_len(), 3);
         for (local, &g) in members.iter().enumerate() {
             assert_eq!(view.global(local), g);
             assert_eq!(view.x_row(local), ds.row(g));
@@ -341,15 +763,18 @@ mod tests {
             assert_eq!(view.label(local), ds.y[g]);
         }
         assert_eq!(view.labels(), members.iter().map(|&g| ds.y[g]).collect::<Vec<_>>());
-        // A row fetched through the view is cached under the GLOBAL key —
-        // visible to the full view afterwards.
-        let row = view.global_row(1); // global 9
-        assert!(ctx.is_row_cached(9));
-        let full = ctx.view_full();
-        let again = full.global_row(9);
-        assert_eq!(&*row, &*again);
-        let s = ctx.stats();
-        assert_eq!((s.hits, s.misses), (1, 1));
+        // A segment row is local-indexed and matches the full row's values
+        // at the member columns bit-for-bit.
+        let srow = view.local_row(1); // global 9, columns = members
+        assert_eq!(srow.len(), 3);
+        assert!(view.is_row_cached(1));
+        assert!(!ctx.is_row_cached(9), "segment fetch must not fill the full key");
+        let full = ctx.view_full().global_row(9);
+        for (t, &g) in members.iter().enumerate() {
+            assert_eq!(srow[t], full[g], "segment col {t} (global {g})");
+        }
+        let v = ctx.value_stats();
+        assert_eq!(v.segment_rows, 1);
     }
 
     #[test]
@@ -358,9 +783,123 @@ mod tests {
         let ctx = KernelContext::new(&ds, &k, 1 << 20);
         let view = ctx.view(&[2, 6, 11]);
         assert_eq!(view.ensure_rows(&[0, 2]), 2); // globals 2 and 11
-        assert!(ctx.is_row_cached(2));
-        assert!(ctx.is_row_cached(11));
-        assert!(!ctx.is_row_cached(6));
+        assert!(view.is_row_cached(0));
+        assert!(view.is_row_cached(2));
+        assert!(!view.is_row_cached(1));
         assert_eq!(view.ensure_rows(&[0, 1, 2]), 1); // only global 6 is new
+        // The batched segment path agrees with the single-row path.
+        let batched = view.local_row(0);
+        let fresh = KernelContext::new(&ds, &k, 1 << 20);
+        let single = fresh.view(&[2, 6, 11]).local_row(0);
+        assert_eq!(&*batched, &*single);
+    }
+
+    #[test]
+    fn identity_member_set_resolves_to_full_span() {
+        let (ds, k) = setup(12);
+        let ctx = KernelContext::new(&ds, &k, 1 << 20);
+        let all: Vec<usize> = (0..ds.len()).collect();
+        let view = ctx.view(&all);
+        assert!(!view.is_segmented());
+        assert_eq!(view.row_len(), ds.len());
+        assert_eq!(ctx.segment_count(), 1);
+        let row = view.local_row(5);
+        assert!(ctx.is_row_cached(5));
+        assert_eq!(row.len(), ds.len());
+    }
+
+    #[test]
+    fn register_segment_dedupes() {
+        let (ds, k) = setup(16);
+        let ctx = KernelContext::new(&ds, &k, 1 << 20);
+        let a = ctx.register_segment(&[1, 5, 9]);
+        let b = ctx.register_segment(&[1, 5, 9]);
+        assert_eq!(a.id(), b.id());
+        assert_eq!(ctx.segment_count(), 2);
+        let c = ctx.register_segment(&[2, 5, 9]);
+        assert_ne!(a.id(), c.id());
+        assert_eq!(ctx.segment_count(), 3);
+    }
+
+    /// Property (ISSUE satellite): segment rows are bit-identical to the
+    /// matching slice of full-row computation, across random subsets — and
+    /// full rows stitched from segment entries are bit-identical to
+    /// cold-computed full rows.
+    #[test]
+    fn prop_segment_and_stitched_rows_bit_identical() {
+        check("segment-bit-identical", 12, |rng: &mut Pcg64| {
+            let n = 12 + rng.below(40);
+            let ds = generate(&covtype_like(), n, rng);
+            let kind = if rng.next_f64() < 0.6 {
+                KernelKind::Rbf { gamma: (0.5 + 8.0 * rng.next_f64()) as f32 }
+            } else {
+                KernelKind::Poly { gamma: (0.1 + rng.next_f64()) as f32, eta: 0.3 }
+            };
+            let k = NativeKernel::new(kind);
+
+            // Random subset (sorted, distinct, non-empty, proper).
+            let mut members: Vec<usize> =
+                (0..n).filter(|_| rng.next_f64() < 0.45).collect();
+            if members.is_empty() {
+                members.push(rng.below(n));
+            }
+            if members.len() == n {
+                members.pop();
+            }
+
+            // Reference: cold full rows, no segments registered.
+            let ref_ctx = KernelContext::new(&ds, &k, 8 << 20);
+            let seg_ctx = KernelContext::new(&ds, &k, 8 << 20);
+            let view = seg_ctx.view(&members);
+            let probe = rng.below(members.len());
+            let srow = view.local_row(probe);
+            let frow = ref_ctx.row(members[probe]);
+            for (t, &g) in members.iter().enumerate() {
+                prop_assert!(
+                    srow[t].to_bits() == frow[g].to_bits(),
+                    "segment row not bit-identical at col {t} (global {g})"
+                );
+            }
+
+            // Stitched full row (segment entry resident) == cold full row.
+            let stitched = seg_ctx.row(members[probe]);
+            for j in 0..n {
+                prop_assert!(
+                    stitched[j].to_bits() == frow[j].to_bits(),
+                    "stitched row differs at col {j}"
+                );
+            }
+            // And the stitch actually reused the segment's values.
+            let v = seg_ctx.value_stats();
+            prop_assert!(
+                v.values_stitched >= members.len() as u64,
+                "no stitching recorded ({} stitched)",
+                v.values_stitched
+            );
+            // Exactly |M| (segment row) + (n − |M|) (uncovered stitch fill)
+            // kernel entries were evaluated — the covered columns were
+            // copied, not recomputed.
+            prop_assert!(
+                v.values_computed == n as u64,
+                "stitch recomputed covered columns: {} values for |M|={} n={n}",
+                v.values_computed,
+                members.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unsegmented_view_keeps_full_rows() {
+        let (ds, k) = setup(24);
+        let ctx = KernelContext::new(&ds, &k, 1 << 20);
+        let members = vec![1usize, 8, 15, 21];
+        let view = ctx.view_unsegmented(&members);
+        assert!(!view.is_segmented());
+        assert_eq!(view.unsegmented_map(), Some(&members[..]));
+        assert_eq!(view.row_len(), ds.len());
+        let row = view.local_row(2); // global 15, full-length
+        assert_eq!(row.len(), ds.len());
+        assert!(ctx.is_row_cached(15));
     }
 }

@@ -1,65 +1,84 @@
-//! Byte-budgeted LRU cache of kernel rows — the single-shard building block
-//! of [`super::sharded::ShardedRowCache`].
+//! Byte-budgeted CLOCK (second-chance) cache of kernel-row segments — the
+//! single-shard building block of [`super::sharded::ShardedRowCache`].
 //!
-//! Keys are *global* row indices of the dataset owned by a
-//! [`super::KernelContext`]; values are `Arc<[f32]>` rows of length
-//! `row_len`. Rows are reference-counted so a caller can keep using a row
-//! after it has been evicted (and so the sharded wrapper can hand rows out
-//! across its shard lock). The LRU order lives in an intrusive
-//! doubly-linked list over slot indices so touch/evict are O(1), and
-//! `get_or_compute` exposes the fill path the solver uses. Hit/miss
-//! counters feed EXPERIMENTS.md and the harness `Outcome` structured
-//! fields (`cache_hit_rate`, `final_rows`).
+//! v2 of the per-shard policy. The v1 cache was a fixed-row-length LRU;
+//! two properties of the segment-granular kernel layer forced a redesign:
+//!
+//! - **Variable-length entries.** Keys are now `(row, segment)` composites
+//!   (see [`super::context`]), and a segment row's length is the segment's
+//!   column count — a cluster-aligned segment at k clusters is ~n/k long
+//!   while a full-span row is n long. The budget is therefore tracked in
+//!   **bytes actually resident**, not row slots.
+//! - **Skewed reuse.** The solver hits free-SV rows every iteration and
+//!   shrunk-variable rows never (paper Figure 2). Plain LRU evicts a hot SV
+//!   row the moment a burst of one-shot rows sweeps through. CLOCK keeps a
+//!   *referenced* bit per entry: the sweep hand clears the bit on first
+//!   pass and evicts only entries that were not touched since the previous
+//!   pass — one-bit frequency information at O(1) per access, no list
+//!   surgery on the hit path.
+//!
+//! Entries are `Arc<[f32]>` so a caller can keep using a row after it has
+//! been evicted (and so the sharded wrapper hands rows out across its shard
+//! lock). Hit/miss counters feed EXPERIMENTS.md and the harness `Outcome`
+//! structured fields.
+//!
+//! Budget invariant (property-tested here and in the sharded wrapper):
+//! after any operation, `bytes_used() <= budget_bytes()` **or** the cache
+//! holds exactly one entry (a single entry larger than the whole budget is
+//! always admitted, mirroring v1's one-row-per-shard floor).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-const NIL: usize = usize::MAX;
-
 struct Slot {
-    key: usize,
+    key: u64,
     row: Arc<[f32]>,
-    prev: usize,
-    next: usize,
+    /// Second-chance bit: set on every access, cleared by the sweep hand.
+    referenced: bool,
+    live: bool,
 }
 
-/// LRU kernel-row cache with a fixed byte budget.
+/// CLOCK (second-chance) kernel-segment cache with a byte budget.
 pub struct RowCache {
-    map: HashMap<usize, usize>, // key -> slot index
+    map: HashMap<u64, usize>, // key -> slot index
     slots: Vec<Slot>,
     free: Vec<usize>,
-    head: usize, // most recently used
-    tail: usize, // least recently used
-    row_len: usize,
-    capacity_rows: usize,
+    /// Sweep position of the CLOCK hand (index into `slots`).
+    hand: usize,
+    budget_bytes: usize,
+    used_bytes: usize,
     pub hits: u64,
     pub misses: u64,
 }
 
+/// f32 payload bytes of one entry.
+#[inline]
+fn entry_bytes(row: &[f32]) -> usize {
+    row.len() * 4
+}
+
 impl RowCache {
-    /// `budget_bytes` is the total f32 payload budget; at least one row is
-    /// always allowed.
-    pub fn new(row_len: usize, budget_bytes: usize) -> Self {
-        let capacity_rows = (budget_bytes / (row_len.max(1) * 4)).max(1);
+    /// `budget_bytes` is the f32 payload budget; one entry is always
+    /// admitted even if it alone exceeds the budget.
+    pub fn new(budget_bytes: usize) -> Self {
         RowCache {
             map: HashMap::new(),
             slots: Vec::new(),
             free: Vec::new(),
-            head: NIL,
-            tail: NIL,
-            row_len,
-            capacity_rows,
+            hand: 0,
+            budget_bytes,
+            used_bytes: 0,
             hits: 0,
             misses: 0,
         }
     }
 
-    pub fn row_len(&self) -> usize {
-        self.row_len
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
     }
 
-    pub fn capacity_rows(&self) -> usize {
-        self.capacity_rows
+    pub fn bytes_used(&self) -> usize {
+        self.used_bytes
     }
 
     pub fn len(&self) -> usize {
@@ -70,39 +89,48 @@ impl RowCache {
         self.map.is_empty()
     }
 
-    pub fn contains(&self, key: usize) -> bool {
+    pub fn contains(&self, key: u64) -> bool {
         self.map.contains_key(&key)
     }
 
-    /// Fetch a row, computing and inserting it on miss. `fill` writes the
-    /// row contents into the provided buffer.
-    pub fn get_or_compute<F>(&mut self, key: usize, fill: F) -> &[f32]
+    /// Retarget the byte budget (shard rebalancing), evicting down to the
+    /// new budget immediately (the one-entry floor still applies).
+    pub fn set_budget(&mut self, budget_bytes: usize) {
+        self.budget_bytes = budget_bytes;
+        while self.used_bytes > self.budget_bytes && self.map.len() > 1 {
+            self.evict_one();
+        }
+    }
+
+    /// Fetch an entry, computing and inserting it on miss. `len` is the
+    /// entry length to allocate; `fill` writes the contents.
+    pub fn get_arc_or_compute<F>(&mut self, key: u64, len: usize, fill: F) -> Arc<[f32]>
     where
         F: FnOnce(&mut [f32]),
     {
-        let slot = self.slot_or_compute(key, fill);
-        &self.slots[slot].row
-    }
-
-    /// Like [`Self::get_or_compute`] but returns a shared handle that stays
-    /// valid after eviction — the form the concurrent sharded cache needs.
-    pub fn get_arc_or_compute<F>(&mut self, key: usize, fill: F) -> Arc<[f32]>
-    where
-        F: FnOnce(&mut [f32]),
-    {
-        let slot = self.slot_or_compute(key, fill);
-        Arc::clone(&self.slots[slot].row)
-    }
-
-    /// Probe half of a caller-batched fill: return the resident row
-    /// (recording a hit and an LRU touch), or record a miss and return
-    /// `None`. The caller computes the missing rows in one batched dispatch
-    /// and stores them with [`Self::put_arc`], which does **not** count
-    /// again — together one probe+fill records exactly one hit or miss.
-    pub fn get_arc(&mut self, key: usize) -> Option<Arc<[f32]>> {
         if let Some(&slot) = self.map.get(&key) {
             self.hits += 1;
-            self.touch(slot);
+            self.slots[slot].referenced = true;
+            return Arc::clone(&self.slots[slot].row);
+        }
+        self.misses += 1;
+        let mut buf = vec![0f32; len];
+        fill(&mut buf);
+        let row: Arc<[f32]> = buf.into();
+        self.insert_new(key, Arc::clone(&row));
+        row
+    }
+
+    /// Probe half of a caller-batched fill: return the resident entry
+    /// (recording a hit and setting its referenced bit), or record a miss
+    /// and return `None`. The caller computes the missing entries in one
+    /// batched dispatch and stores them with [`Self::put_arc`], which does
+    /// **not** count again — together one probe+fill records exactly one
+    /// hit or miss.
+    pub fn get_arc(&mut self, key: u64) -> Option<Arc<[f32]>> {
+        if let Some(&slot) = self.map.get(&key) {
+            self.hits += 1;
+            self.slots[slot].referenced = true;
             Some(Arc::clone(&self.slots[slot].row))
         } else {
             self.misses += 1;
@@ -110,50 +138,44 @@ impl RowCache {
         }
     }
 
-    /// Insert a row whose miss was already recorded by [`Self::get_arc`];
-    /// counters are left untouched. A resident key keeps its existing row
-    /// (row contents are a pure function of the key) and is only touched.
-    pub fn put_arc(&mut self, key: usize, row: Arc<[f32]>) {
-        debug_assert_eq!(row.len(), self.row_len);
+    /// Counter-free probe (sets the referenced bit on a find): the full-row
+    /// *stitching* path uses it to consult sibling segment entries without
+    /// perturbing the `hits + misses == probe calls` accounting contract.
+    pub fn get_quiet(&mut self, key: u64) -> Option<Arc<[f32]>> {
         if let Some(&slot) = self.map.get(&key) {
-            self.touch(slot);
+            self.slots[slot].referenced = true;
+            Some(Arc::clone(&self.slots[slot].row))
+        } else {
+            None
+        }
+    }
+
+    /// Insert an entry whose miss was already recorded by [`Self::get_arc`];
+    /// counters are left untouched. A resident key keeps its existing entry
+    /// (contents are a pure function of the key) and is only re-referenced.
+    pub fn put_arc(&mut self, key: u64, row: Arc<[f32]>) {
+        if let Some(&slot) = self.map.get(&key) {
+            self.slots[slot].referenced = true;
             return;
         }
-        self.insert_slot(key, row);
+        self.insert_new(key, row);
     }
 
-    fn slot_or_compute<F>(&mut self, key: usize, fill: F) -> usize
-    where
-        F: FnOnce(&mut [f32]),
-    {
+    /// Insert an externally computed entry (batched fill path). Counts a
+    /// miss when the key is new — the caller did compute it — and a hit
+    /// when already resident, in which case the existing entry is kept.
+    pub fn insert_arc(&mut self, key: u64, row: Arc<[f32]>) {
         if let Some(&slot) = self.map.get(&key) {
             self.hits += 1;
-            self.touch(slot);
-            return slot;
-        }
-        self.misses += 1;
-        let mut buf = vec![0f32; self.row_len];
-        fill(&mut buf);
-        self.insert_slot(key, buf.into())
-    }
-
-    /// Insert an externally computed row (batched fill path). Counts a miss
-    /// when the key is new — the caller did compute the row — and a hit
-    /// (plus an LRU touch) when the key is already resident, in which case
-    /// the existing row is kept.
-    pub fn insert_arc(&mut self, key: usize, row: Arc<[f32]>) {
-        debug_assert_eq!(row.len(), self.row_len);
-        if let Some(&slot) = self.map.get(&key) {
-            self.hits += 1;
-            self.touch(slot);
+            self.slots[slot].referenced = true;
             return;
         }
         self.misses += 1;
-        self.insert_slot(key, row);
+        self.insert_new(key, row);
     }
 
-    /// Peek without changing LRU order or counters (used by tests).
-    pub fn peek(&self, key: usize) -> Option<&[f32]> {
+    /// Peek without touching the referenced bit or counters (tests).
+    pub fn peek(&self, key: u64) -> Option<&[f32]> {
         self.map.get(&key).map(|&s| &*self.slots[s].row)
     }
 
@@ -161,9 +183,12 @@ impl RowCache {
     pub fn clear(&mut self) {
         self.map.clear();
         self.free.clear();
-        self.free.extend(0..self.slots.len());
-        self.head = NIL;
-        self.tail = NIL;
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            s.live = false;
+            self.free.push(i);
+        }
+        self.used_bytes = 0;
+        self.hand = 0;
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -175,63 +200,52 @@ impl RowCache {
         }
     }
 
-    // -- intrusive list plumbing -------------------------------------------
+    // -- CLOCK plumbing ----------------------------------------------------
 
-    fn detach(&mut self, slot: usize) {
-        let (p, n) = (self.slots[slot].prev, self.slots[slot].next);
-        if p != NIL {
-            self.slots[p].next = n;
-        } else {
-            self.head = n;
-        }
-        if n != NIL {
-            self.slots[n].prev = p;
-        } else {
-            self.tail = p;
-        }
-    }
-
-    fn push_front(&mut self, slot: usize) {
-        self.slots[slot].prev = NIL;
-        self.slots[slot].next = self.head;
-        if self.head != NIL {
-            self.slots[self.head].prev = slot;
-        }
-        self.head = slot;
-        if self.tail == NIL {
-            self.tail = slot;
-        }
-    }
-
-    fn touch(&mut self, slot: usize) {
-        if self.head == slot {
+    /// Advance the hand to the next victim and evict it: a live entry whose
+    /// referenced bit is clear; entries passed with the bit set get their
+    /// second chance (bit cleared, skipped).
+    fn evict_one(&mut self) {
+        debug_assert!(!self.map.is_empty());
+        loop {
+            if self.hand >= self.slots.len() {
+                self.hand = 0;
+            }
+            let s = self.hand;
+            self.hand += 1;
+            if !self.slots[s].live {
+                continue;
+            }
+            if self.slots[s].referenced {
+                self.slots[s].referenced = false;
+                continue;
+            }
+            self.map.remove(&self.slots[s].key);
+            self.used_bytes -= entry_bytes(&self.slots[s].row);
+            self.slots[s].live = false;
+            self.slots[s].row = Arc::from(Vec::<f32>::new());
+            self.free.push(s);
             return;
         }
-        self.detach(slot);
-        self.push_front(slot);
     }
 
-    fn insert_slot(&mut self, key: usize, row: Arc<[f32]>) -> usize {
-        let slot = if self.map.len() >= self.capacity_rows {
-            // Evict LRU.
-            let victim = self.tail;
-            debug_assert_ne!(victim, NIL);
-            self.detach(victim);
-            self.map.remove(&self.slots[victim].key);
-            self.slots[victim].key = key;
-            self.slots[victim].row = row;
-            victim
-        } else if let Some(s) = self.free.pop() {
-            self.slots[s].key = key;
-            self.slots[s].row = row;
-            s
+    /// Insert a key known to be absent, evicting until the entry fits (or
+    /// the cache is empty — the one-entry floor).
+    fn insert_new(&mut self, key: u64, row: Arc<[f32]>) {
+        let bytes = entry_bytes(&row);
+        while self.used_bytes + bytes > self.budget_bytes && !self.map.is_empty() {
+            self.evict_one();
+        }
+        self.used_bytes += bytes;
+        let slot = Slot { key, row, referenced: true, live: true };
+        let idx = if let Some(i) = self.free.pop() {
+            self.slots[i] = slot;
+            i
         } else {
-            self.slots.push(Slot { key, row, prev: NIL, next: NIL });
+            self.slots.push(slot);
             self.slots.len() - 1
         };
-        self.push_front(slot);
-        self.map.insert(key, slot);
-        slot
+        self.map.insert(key, idx);
     }
 }
 
@@ -241,149 +255,190 @@ mod tests {
     use crate::prop_assert;
     use crate::util::{prng::Pcg64, proptest::check};
 
+    fn row(vals: &[f32]) -> Arc<[f32]> {
+        Arc::from(vals)
+    }
+
     #[test]
     fn hit_returns_cached_value() {
-        let mut c = RowCache::new(4, 1024);
-        c.get_or_compute(7, |r| r.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]));
-        let row = c.get_or_compute(7, |_| panic!("should not recompute"));
-        assert_eq!(row, &[1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(c.hits, 1);
-        assert_eq!(c.misses, 1);
+        let mut c = RowCache::new(1024);
+        c.get_arc_or_compute(7, 4, |r| r.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]));
+        let got = c.get_arc_or_compute(7, 4, |_| panic!("should not recompute"));
+        assert_eq!(&*got, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!((c.hits, c.misses), (1, 1));
     }
 
     #[test]
-    fn evicts_lru_not_mru() {
-        let mut c = RowCache::new(1, 3 * 4); // capacity 3 rows
-        for k in 0..3 {
-            c.get_or_compute(k, |r| r[0] = k as f32);
+    fn budget_is_byte_accurate_with_variable_lengths() {
+        let mut c = RowCache::new(10 * 4); // 40 bytes = 10 f32s
+        c.put_arc(0, row(&[0.0; 4])); // 16 bytes
+        c.put_arc(1, row(&[1.0; 4])); // 32 bytes
+        assert_eq!(c.bytes_used(), 32);
+        assert_eq!(c.len(), 2);
+        // A 3rd 4-long entry (would be 48 bytes) forces an eviction.
+        c.put_arc(2, row(&[2.0; 4]));
+        assert!(c.bytes_used() <= c.budget_bytes());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn oversized_entry_admitted_alone() {
+        let mut c = RowCache::new(4); // 1 f32 budget
+        c.put_arc(1, row(&[1.0; 100]));
+        assert_eq!(c.len(), 1);
+        assert!(c.bytes_used() > c.budget_bytes());
+        // The next insert evicts it (floor: exactly one entry resident).
+        c.put_arc(2, row(&[2.0; 100]));
+        assert_eq!(c.len(), 1);
+        assert!(!c.contains(1));
+        assert!(c.contains(2));
+    }
+
+    #[test]
+    fn second_chance_protects_referenced_entries() {
+        let mut c = RowCache::new(3 * 4); // room for 3 one-float entries
+        for k in 0..3u64 {
+            c.put_arc(k, row(&[k as f32]));
         }
-        c.get_or_compute(0, |_| panic!("0 cached")); // touch 0 -> MRU
-        c.get_or_compute(3, |r| r[0] = 3.0); // evicts 1 (LRU)
-        assert!(c.contains(0));
-        assert!(!c.contains(1));
-        assert!(c.contains(2));
-        assert!(c.contains(3));
+        // Sweep once so every inserted entry's bit has been cleared, then
+        // re-reference key 0 only.
+        c.put_arc(3, row(&[3.0])); // evicts one of 0,1,2 after clearing bits
+        assert_eq!(c.len(), 3);
+        let survivor = (0..3u64).find(|&k| c.contains(k)).unwrap();
+        assert!(c.get_quiet(survivor).is_some()); // referenced = true
+        // Next eviction must pass over `survivor` (second chance) and take
+        // the unreferenced newcomer's neighbor instead.
+        c.put_arc(4, row(&[4.0]));
+        assert!(
+            c.contains(survivor),
+            "referenced entry was evicted before unreferenced ones"
+        );
     }
 
     #[test]
-    fn capacity_at_least_one() {
-        let mut c = RowCache::new(1000, 1); // budget below one row
-        assert_eq!(c.capacity_rows(), 1);
-        c.get_or_compute(1, |r| r[0] = 1.0);
-        c.get_or_compute(2, |r| r[0] = 2.0);
-        assert!(!c.contains(1));
-        assert!(c.contains(2));
+    fn set_budget_shrinks_immediately() {
+        let mut c = RowCache::new(8 * 4);
+        for k in 0..8u64 {
+            c.put_arc(k, row(&[k as f32]));
+        }
+        assert_eq!(c.len(), 8);
+        c.set_budget(3 * 4);
+        assert!(c.bytes_used() <= 3 * 4);
+        assert_eq!(c.len(), 3);
+        // Growing back does not resurrect anything.
+        c.set_budget(8 * 4);
+        assert_eq!(c.len(), 3);
     }
 
     #[test]
     fn clear_resets() {
-        let mut c = RowCache::new(2, 1024);
-        c.get_or_compute(1, |r| r[0] = 1.0);
+        let mut c = RowCache::new(1024);
+        c.put_arc(1, row(&[1.0, 2.0]));
         c.clear();
         assert!(c.is_empty());
+        assert_eq!(c.bytes_used(), 0);
         let mut recomputed = false;
-        c.get_or_compute(1, |_| recomputed = true);
+        c.get_arc_or_compute(1, 2, |_| recomputed = true);
         assert!(recomputed);
     }
 
     #[test]
     fn arc_rows_survive_eviction() {
-        let mut c = RowCache::new(1, 4); // capacity 1 row
-        let first = c.get_arc_or_compute(10, |r| r[0] = 10.0);
-        c.get_arc_or_compute(11, |r| r[0] = 11.0); // evicts key 10
+        let mut c = RowCache::new(4); // one f32
+        let first = c.get_arc_or_compute(10, 1, |r| r[0] = 10.0);
+        c.get_arc_or_compute(11, 1, |r| r[0] = 11.0); // evicts key 10
         assert!(!c.contains(10));
         assert_eq!(first[0], 10.0); // handle still valid
     }
 
     #[test]
     fn get_arc_put_arc_count_once_per_probe() {
-        let mut c = RowCache::new(2, 1024);
+        let mut c = RowCache::new(1024);
         assert!(c.get_arc(3).is_none()); // miss recorded
         assert_eq!((c.hits, c.misses), (0, 1));
-        c.put_arc(3, vec![1.0f32, 2.0].into()); // quiet insert
+        c.put_arc(3, row(&[1.0, 2.0])); // quiet insert
         assert_eq!((c.hits, c.misses), (0, 1));
-        let row = c.get_arc(3).expect("resident");
-        assert_eq!(&*row, &[1.0, 2.0]);
+        let got = c.get_arc(3).expect("resident");
+        assert_eq!(&*got, &[1.0, 2.0]);
         assert_eq!((c.hits, c.misses), (1, 1));
-        // Quiet re-insert of a resident key keeps the existing row.
-        c.put_arc(3, vec![9.0f32, 9.0].into());
+        // Quiet re-insert of a resident key keeps the existing entry.
+        c.put_arc(3, row(&[9.0, 9.0]));
         assert_eq!(c.peek(3).unwrap(), &[1.0, 2.0]);
         assert_eq!((c.hits, c.misses), (1, 1));
     }
 
     #[test]
-    fn put_arc_touches_lru_order() {
-        let mut c = RowCache::new(1, 2 * 4); // capacity 2 rows
-        c.put_arc(0, vec![0.0f32].into());
-        c.put_arc(1, vec![1.0f32].into());
-        c.put_arc(0, vec![0.0f32].into()); // touch 0 -> MRU
-        c.put_arc(2, vec![2.0f32].into()); // evicts 1 (LRU)
-        assert!(c.contains(0));
-        assert!(!c.contains(1));
-        assert!(c.contains(2));
+    fn get_quiet_finds_without_counting() {
+        let mut c = RowCache::new(1024);
+        assert!(c.get_quiet(5).is_none());
+        c.put_arc(5, row(&[5.0]));
+        assert_eq!(&*c.get_quiet(5).unwrap(), &[5.0]);
+        assert_eq!((c.hits, c.misses), (0, 0));
     }
 
     #[test]
     fn insert_arc_counts_and_keeps_existing() {
-        let mut c = RowCache::new(1, 1024);
-        c.insert_arc(5, vec![5.0f32].into());
+        let mut c = RowCache::new(1024);
+        c.insert_arc(5, row(&[5.0]));
         assert_eq!((c.hits, c.misses), (0, 1));
-        // Re-insert of a resident key: hit, existing row kept.
-        c.insert_arc(5, vec![99.0f32].into());
+        c.insert_arc(5, row(&[99.0]));
         assert_eq!((c.hits, c.misses), (1, 1));
         assert_eq!(c.peek(5).unwrap(), &[5.0]);
     }
 
-    /// Property: the cache behaves exactly like a reference implementation
-    /// (hash map + recency queue) over random access traces.
+    /// Property: over random mixed-length traces the byte-budget invariant
+    /// holds after every operation, resident entries always return the
+    /// value their key demands, and counters add up.
     #[test]
-    fn prop_matches_reference_lru() {
-        check("lru-vs-reference", 30, |rng: &mut Pcg64| {
-            let cap = 1 + rng.below(8);
-            let keys = 1 + rng.below(16);
-            let ops = 200;
-            let mut cache = RowCache::new(1, cap * 4);
-            let mut ref_order: Vec<usize> = Vec::new(); // front = MRU
-
-            for _ in 0..ops {
-                let k = rng.below(keys);
-                let in_ref = ref_order.contains(&k);
-                let mut filled = false;
-                cache.get_or_compute(k, |r| {
-                    filled = true;
-                    r[0] = k as f32;
-                });
+    fn prop_budget_and_contents_random_traces() {
+        check("clock-budget", 30, |rng: &mut Pcg64| {
+            let budget = (1 + rng.below(64)) * 4;
+            let keys = 1 + rng.below(24) as u64;
+            let max_len = 1 + rng.below(12);
+            let mut c = RowCache::new(budget);
+            let mut probes = 0u64;
+            for _ in 0..300 {
+                let k = rng.below(keys as usize) as u64;
+                let len = 1 + (k as usize) % max_len;
+                let got = c.get_arc_or_compute(k, len, |r| r.fill(k as f32));
+                probes += 1;
                 prop_assert!(
-                    filled != in_ref,
-                    "cache fill={filled} but reference contains={in_ref} for key {k}"
+                    got.len() == len && got.iter().all(|&v| v == k as f32),
+                    "wrong contents for key {k}"
                 );
-                // update reference
-                ref_order.retain(|&x| x != k);
-                ref_order.insert(0, k);
-                if ref_order.len() > cap {
-                    ref_order.pop();
-                }
                 prop_assert!(
-                    cache.len() == ref_order.len(),
-                    "len {} != ref {}",
-                    cache.len(),
-                    ref_order.len()
+                    c.bytes_used() <= c.budget_bytes() || c.len() == 1,
+                    "budget violated: {} bytes > {} with {} entries",
+                    c.bytes_used(),
+                    c.budget_bytes(),
+                    c.len()
                 );
-                for &rk in &ref_order {
-                    prop_assert!(cache.contains(rk), "missing key {rk}");
-                }
+                let resident: usize =
+                    (0..keys).filter_map(|k| c.peek(k).map(|r| r.len() * 4)).sum();
+                prop_assert!(
+                    resident == c.bytes_used(),
+                    "bytes_used {} out of sync with resident {}",
+                    c.bytes_used(),
+                    resident
+                );
             }
+            prop_assert!(
+                c.hits + c.misses == probes,
+                "hits {} + misses {} != probes {probes}",
+                c.hits,
+                c.misses
+            );
             Ok(())
         });
     }
 
     #[test]
     fn hit_rate_math() {
-        let mut c = RowCache::new(1, 1024);
+        let mut c = RowCache::new(1024);
         assert_eq!(c.hit_rate(), 0.0);
-        c.get_or_compute(1, |r| r[0] = 0.0);
-        c.get_or_compute(1, |r| r[0] = 0.0);
-        c.get_or_compute(1, |r| r[0] = 0.0);
+        for _ in 0..3 {
+            c.get_arc_or_compute(1, 1, |r| r[0] = 0.0);
+        }
         assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
     }
 }

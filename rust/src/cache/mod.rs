@@ -1,28 +1,41 @@
-//! Kernel-access layer: context, views, and the shared kernel-row cache.
+//! Kernel-access layer: context, views, and the shared segment-granular
+//! kernel cache (v2).
 //!
 //! The decomposition solver touches kernel rows in a highly skewed pattern
 //! (free SVs get hit every iteration; shrunk variables never), so a
-//! byte-budgeted LRU over rows is the classic design (Chang & Lin 2011,
-//! §4.2). DC-SVM makes sharing that cache *across* solves the real win:
-//! the divide phase already computes the rows of (most of) the final SV set
-//! (paper Figure 2 — the SV set is identified early), so a per-solve
-//! private cache throws away exactly the rows the refine and conquer solves
-//! are about to ask for.
+//! byte-budgeted cache over rows is the classic design (Chang & Lin 2011,
+//! §4.2). DC-SVM adds two structural twists the v2 layer exploits:
+//!
+//! 1. **Sharing across solves** (v1): the divide phase already computes
+//!    the rows of (most of) the final SV set (paper Figure 2 — the SV set
+//!    is identified early), so a per-solve private cache throws away
+//!    exactly the rows the refine and conquer solves are about to ask for.
+//! 2. **Subproblem locality** (v2): a cluster subproblem only ever reads
+//!    the within-cluster block of K, so caching full dataset-length rows
+//!    for it wastes ~(k−1)/k of every computed byte at k clusters. Keys
+//!    are therefore `(segment, row)` composites — cluster-aligned partial
+//!    rows during divide, the full span for conquer/serving — and full
+//!    rows are *stitched* from cached segments on demand.
 //!
 //! Layering, bottom-up:
 //!
-//! - [`lru::RowCache`] — single-threaded byte-budgeted LRU over
-//!   reference-counted rows; the per-shard building block.
-//! - [`sharded::ShardedRowCache`] — thread-safe sharded wrapper, keyed by
-//!   **global row index**, budget split across independently locked shards;
-//!   concurrent cluster subproblems from `scope_map` fill it in parallel.
+//! - [`lru::RowCache`] — single-threaded byte-budgeted **CLOCK
+//!   (second-chance)** cache over reference-counted variable-length
+//!   entries; the per-shard building block. Frequency-aware: a referenced
+//!   bit per entry protects hot SV rows from one-shot sweeps.
+//! - [`sharded::ShardedRowCache`] — thread-safe sharded wrapper keyed by
+//!   `u64`; the byte budget starts evenly split and is periodically
+//!   **rebalanced** toward miss pressure (hot shards grow, cold shards
+//!   shrink, the global budget is conserved).
 //! - [`context::KernelContext`] — one per dataset: owns the precomputed
-//!   squared norms, the [`crate::kernel::BlockKernel`] backend and the
-//!   shared cache; all batched dispatches (row prefetch, assignment,
-//!   prediction) funnel through it.
+//!   squared norms, the [`crate::kernel::BlockKernel`] backend, the shared
+//!   cache, the segment registry, and the kernel-value counters
+//!   ([`context::ValueStats`]); all batched dispatches (row prefetch,
+//!   assignment, prediction) funnel through it.
 //! - [`context::KernelView`] — cheap local→global subset view handed to
-//!   cluster subproblem solvers; rows computed through a view survive into
-//!   later phases (the cache analogue of the α warm start).
+//!   cluster subproblem solvers; segmented views fetch local-indexed
+//!   partial rows, and everything a view computes survives into later
+//!   phases (the cache analogue of the α warm start).
 //!
 //! `dcsvm::train` builds exactly one context per training run and threads
 //! views through levels → refine → final; the harness builds contexts for
@@ -32,6 +45,8 @@ pub mod context;
 pub mod lru;
 pub mod sharded;
 
-pub use context::{KernelContext, KernelView, DEFAULT_CACHE_BYTES};
+pub use context::{
+    KernelContext, KernelView, SegmentData, SegmentRef, ValueStats, DEFAULT_CACHE_BYTES,
+};
 pub use lru::RowCache;
-pub use sharded::{CacheStats, ShardedRowCache};
+pub use sharded::{CacheStats, ShardInfo, ShardedRowCache};

@@ -1,12 +1,24 @@
-//! Thread-safe sharded byte-budgeted LRU kernel-row cache.
+//! Thread-safe sharded byte-budgeted CLOCK cache of kernel-row segments.
 //!
 //! One [`super::KernelContext`] owns one of these for its dataset; keys are
-//! **global row indices**, values are full kernel rows (`Arc<[f32]>` of
-//! length n). The byte budget is split evenly across shards, each an
-//! independently locked [`RowCache`], and a key maps to shard `key % k` —
-//! global row indices are dense integers, so adjacent keys (which cluster
-//! subproblems touch together) spread across shards and concurrent
-//! subproblem solves rarely contend.
+//! 64-bit **(segment, row)** composites (see `super::context::seg_key`) and
+//! values are `Arc<[f32]>` segment rows — full dataset-length rows for the
+//! full-span segment, cluster-length partial rows for divide-phase
+//! segments. The serving layer reuses the same type with content
+//! fingerprints as keys. Each shard is an independently locked
+//! [`RowCache`] (CLOCK second-chance, byte-budgeted) and a key maps to
+//! shard `key % k` — row indices occupy the low key bits, so adjacent rows
+//! (which cluster subproblems touch together) spread across shards and
+//! concurrent subproblem solves rarely contend.
+//!
+//! **Budget rebalancing.** The total byte budget starts evenly split, but
+//! skewed access (a hot cluster hammering one shard while another idles)
+//! wastes budget on cold shards. Every `REBALANCE_OPS` counted
+//! operations, per-shard miss deltas since the previous rebalance reweight
+//! the split: shard i gets `total · (1 + missesΔ_i) / Σ(1 + missesΔ)`,
+//! floored at a quarter of the even share, then scaled so the shard
+//! budgets never sum above the configured total. Shards over their new
+//! budget evict down immediately.
 //!
 //! Concurrency contract:
 //! - `get_or_compute` holds the owning shard's lock across the fill, so a
@@ -15,13 +27,20 @@
 //! - Returned rows are `Arc` handles: they stay valid after eviction, so no
 //!   lock is held while a caller consumes a row.
 //! - Counters are maintained per shard under its lock; `stats()` aggregates,
-//!   and `hits + misses` exactly equals the number of
-//!   `get_or_compute`/`insert_computed` calls (property-tested below under
-//!   concurrent access from `scope_map` workers).
+//!   and `hits + misses` exactly equals the number of counting calls
+//!   (`get_or_compute`/`insert_computed`/`get` — quiet probes and `put` are
+//!   excluded), property-tested below under concurrent `scope_map` workers.
+//! - Rebalancing locks one shard at a time (never two), so it cannot
+//!   deadlock against fills or against a concurrent rebalance attempt
+//!   (excluded via an atomic flag).
 
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::lru::RowCache;
+
+/// Counted operations between budget rebalances.
+const REBALANCE_OPS: u64 = 8192;
 
 /// Aggregated hit/miss counters of a sharded cache.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -52,48 +71,91 @@ impl CacheStats {
     }
 }
 
-/// Sharded thread-safe LRU row cache with a global byte budget.
+/// Per-shard snapshot (diagnostics + budget-invariant tests).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardInfo {
+    pub entries: usize,
+    pub bytes_used: usize,
+    pub budget_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Sharded thread-safe CLOCK segment cache with a global byte budget and
+/// periodic hot/cold budget rebalancing.
 pub struct ShardedRowCache {
     shards: Vec<Mutex<RowCache>>,
-    row_len: usize,
-    /// Total row capacity across shards, fixed at construction (hot-path
-    /// readers like the solver's prefetch cap read it lock-free).
-    capacity_rows: usize,
+    /// Configured total byte budget (shard budgets never sum above it).
+    total_budget: usize,
+    /// Smallest current per-shard budget (lock-free read for the solver's
+    /// prefetch cap; updated on rebalance).
+    min_shard_budget: AtomicUsize,
+    /// Counted operations since construction (rebalance trigger).
+    ops: AtomicU64,
+    /// Rebalance cadence in counted operations; 0 disables rebalancing.
+    rebalance_every: u64,
+    /// At most one rebalance runs at a time.
+    rebalancing: AtomicBool,
+    /// Per-shard miss counts at the previous rebalance.
+    last_misses: Mutex<Vec<u64>>,
 }
 
 impl ShardedRowCache {
     /// `budget_bytes` is the total f32 payload budget, split evenly across
-    /// `shards`; each shard always admits at least one row.
-    pub fn new(row_len: usize, budget_bytes: usize, shards: usize) -> Self {
+    /// `shards` to start; rebalancing reweights the split every
+    /// `REBALANCE_OPS` operations.
+    pub fn new(budget_bytes: usize, shards: usize) -> Self {
+        Self::with_rebalance_interval(budget_bytes, shards, REBALANCE_OPS)
+    }
+
+    /// Like [`Self::new`] with an explicit rebalance cadence (tests);
+    /// `rebalance_every == 0` disables rebalancing.
+    pub fn with_rebalance_interval(
+        budget_bytes: usize,
+        shards: usize,
+        rebalance_every: u64,
+    ) -> Self {
         let shards_n = shards.max(1);
         let per_shard = budget_bytes / shards_n;
-        let shards: Vec<Mutex<RowCache>> = (0..shards_n)
-            .map(|_| Mutex::new(RowCache::new(row_len, per_shard)))
-            .collect();
-        let capacity_rows = shards
-            .iter()
-            .map(|s| s.lock().unwrap().capacity_rows())
-            .sum();
-        ShardedRowCache { shards, row_len, capacity_rows }
+        let shards: Vec<Mutex<RowCache>> =
+            (0..shards_n).map(|_| Mutex::new(RowCache::new(per_shard))).collect();
+        ShardedRowCache {
+            shards,
+            total_budget: budget_bytes,
+            min_shard_budget: AtomicUsize::new(per_shard),
+            ops: AtomicU64::new(0),
+            rebalance_every,
+            rebalancing: AtomicBool::new(false),
+            last_misses: Mutex::new(vec![0; shards_n]),
+        }
     }
 
     #[inline]
-    fn shard(&self, key: usize) -> &Mutex<RowCache> {
-        &self.shards[key % self.shards.len()]
+    fn shard(&self, key: u64) -> &Mutex<RowCache> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
     }
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
 
-    pub fn row_len(&self) -> usize {
-        self.row_len
+    /// Configured total byte budget. Constant after construction;
+    /// lock-free.
+    pub fn budget_bytes(&self) -> usize {
+        self.total_budget
     }
 
-    /// Total row capacity across shards (the byte budget in rows, with the
-    /// one-row-per-shard floor). Constant after construction; lock-free.
-    pub fn capacity_rows(&self) -> usize {
-        self.capacity_rows
+    /// Smallest current per-shard byte budget (prefetch sizing); lock-free.
+    pub fn min_shard_budget_bytes(&self) -> usize {
+        self.min_shard_budget.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes currently resident across shards.
+    pub fn bytes_used(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().bytes_used())
+            .sum()
     }
 
     pub fn len(&self) -> usize {
@@ -101,42 +163,53 @@ impl ShardedRowCache {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
     }
 
-    /// Residency probe; does not touch LRU order or counters.
-    pub fn contains(&self, key: usize) -> bool {
+    /// Residency probe; does not touch CLOCK state or counters.
+    pub fn contains(&self, key: u64) -> bool {
         self.shard(key).lock().unwrap().contains(key)
     }
 
-    /// Fetch a row, computing it under the shard lock on miss. Exactly one
-    /// hit or miss is recorded per call.
-    pub fn get_or_compute<F>(&self, key: usize, fill: F) -> Arc<[f32]>
+    /// Fetch an entry of length `len`, computing it under the shard lock on
+    /// miss. Exactly one hit or miss is recorded per call.
+    pub fn get_or_compute<F>(&self, key: u64, len: usize, fill: F) -> Arc<[f32]>
     where
         F: FnOnce(&mut [f32]),
     {
-        self.shard(key).lock().unwrap().get_arc_or_compute(key, fill)
+        let row = self.shard(key).lock().unwrap().get_arc_or_compute(key, len, fill);
+        self.count_op();
+        row
     }
 
-    /// Insert a row computed outside the lock (batched dispatch path).
+    /// Insert an entry computed outside the lock (batched dispatch path).
     /// Records a miss when the key is new, a hit when already resident (the
-    /// resident row is kept — row contents are a pure function of the key).
-    pub fn insert_computed(&self, key: usize, row: &[f32]) {
+    /// resident entry is kept — contents are a pure function of the key).
+    pub fn insert_computed(&self, key: u64, row: &[f32]) {
         self.shard(key).lock().unwrap().insert_arc(key, Arc::from(row));
+        self.count_op();
     }
 
-    /// Probe for a resident row: a hit (plus LRU touch) returns the handle,
-    /// absence records a miss and returns `None`. Pair with [`Self::put`]
-    /// for caller-batched fills — the probe counts, the store does not, so
-    /// one probe+fill records exactly one hit or miss (the serving path's
-    /// contract; see `serving`).
-    pub fn get(&self, key: usize) -> Option<Arc<[f32]>> {
-        self.shard(key).lock().unwrap().get_arc(key)
+    /// Probe for a resident entry: a hit (plus a CLOCK touch) returns the
+    /// handle, absence records a miss and returns `None`. Pair with
+    /// [`Self::put`] for caller-batched fills — the probe counts, the store
+    /// does not, so one probe+fill records exactly one hit or miss (the
+    /// serving path's contract; see `serving`).
+    pub fn get(&self, key: u64) -> Option<Arc<[f32]>> {
+        let row = self.shard(key).lock().unwrap().get_arc(key);
+        self.count_op();
+        row
     }
 
-    /// Store a row whose miss was already recorded by [`Self::get`];
-    /// counters unchanged. A resident key keeps its existing row.
-    pub fn put(&self, key: usize, row: Arc<[f32]>) {
+    /// Counter-free probe (still sets the entry's referenced bit): the
+    /// full-row stitching path consults sibling segment entries with it.
+    pub fn get_quiet(&self, key: u64) -> Option<Arc<[f32]>> {
+        self.shard(key).lock().unwrap().get_quiet(key)
+    }
+
+    /// Store an entry whose miss was already recorded by [`Self::get`];
+    /// counters unchanged. A resident key keeps its existing entry.
+    pub fn put(&self, key: u64, row: Arc<[f32]>) {
         self.shard(key).lock().unwrap().put_arc(key, row);
     }
 
@@ -150,6 +223,23 @@ impl ShardedRowCache {
         s
     }
 
+    /// Per-shard snapshots (diagnostics; budget-invariant tests).
+    pub fn shard_infos(&self) -> Vec<ShardInfo> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let c = s.lock().unwrap();
+                ShardInfo {
+                    entries: c.len(),
+                    bytes_used: c.bytes_used(),
+                    budget_bytes: c.budget_bytes(),
+                    hits: c.hits,
+                    misses: c.misses,
+                }
+            })
+            .collect()
+    }
+
     pub fn hit_rate(&self) -> f64 {
         self.stats().hit_rate()
     }
@@ -158,6 +248,66 @@ impl ShardedRowCache {
         for shard in &self.shards {
             shard.lock().unwrap().clear();
         }
+    }
+
+    /// Count one operation toward the rebalance cadence and run a
+    /// rebalance when due (at most one at a time; shards are locked one at
+    /// a time, never nested).
+    fn count_op(&self) {
+        if self.rebalance_every == 0 || self.shards.len() < 2 {
+            return;
+        }
+        let n = self.ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.rebalance_every != 0 {
+            return;
+        }
+        if self.rebalancing.swap(true, Ordering::Acquire) {
+            return; // another thread is already rebalancing
+        }
+        self.rebalance();
+        self.rebalancing.store(false, Ordering::Release);
+    }
+
+    /// Reweight shard budgets by miss pressure since the last rebalance.
+    fn rebalance(&self) {
+        let k = self.shards.len();
+        let mut misses = Vec::with_capacity(k);
+        for s in &self.shards {
+            misses.push(s.lock().unwrap().misses);
+        }
+        let mut last = self.last_misses.lock().unwrap();
+        let deltas: Vec<u64> = misses
+            .iter()
+            .zip(last.iter())
+            .map(|(&m, &l)| m.saturating_sub(l))
+            .collect();
+        last.clone_from(&misses);
+        drop(last);
+
+        let even = (self.total_budget / k).max(1);
+        let floor = (even / 4).max(1);
+        let sum_w: u128 = deltas.iter().map(|&d| 1 + d as u128).sum();
+        let mut budgets: Vec<usize> = deltas
+            .iter()
+            .map(|&d| {
+                let raw = (self.total_budget as u128 * (1 + d as u128) / sum_w) as usize;
+                raw.max(floor)
+            })
+            .collect();
+        // The floor can push the sum above the configured total; scale the
+        // whole vector back down so shard budgets never sum above it.
+        let sum_b: u128 = budgets.iter().map(|&b| b as u128).sum();
+        if sum_b > self.total_budget as u128 && sum_b > 0 {
+            for b in budgets.iter_mut() {
+                *b = ((*b as u128 * self.total_budget as u128 / sum_b) as usize).max(1);
+            }
+        }
+        let mut min_budget = usize::MAX;
+        for (shard, &b) in self.shards.iter().zip(&budgets) {
+            shard.lock().unwrap().set_budget(b);
+            min_budget = min_budget.min(b);
+        }
+        self.min_shard_budget.store(min_budget, Ordering::Relaxed);
     }
 }
 
@@ -171,28 +321,28 @@ mod tests {
 
     #[test]
     fn basic_get_insert_and_budget() {
-        let c = ShardedRowCache::new(2, 4 * 2 * 4, 2); // 4 rows total, 2 shards
-        assert_eq!(c.capacity_rows(), 4);
-        for k in 0..8 {
-            let row = c.get_or_compute(k, |r| r.fill(k as f32));
+        // 4 one-float entries total, 2 shards.
+        let c = ShardedRowCache::new(4 * 4, 2);
+        for k in 0..8u64 {
+            let row = c.get_or_compute(k, 2, |r| r.fill(k as f32));
             assert_eq!(&*row, &[k as f32, k as f32]);
         }
-        assert!(c.len() <= c.capacity_rows());
+        assert!(c.bytes_used() <= c.budget_bytes());
         let s = c.stats();
         assert_eq!(s.misses, 8); // 8 distinct keys, all cold
         assert_eq!(s.hits, 0);
         // Re-fetch of the most recent key per shard must hit.
-        c.get_or_compute(6, |_| panic!("6 must be resident"));
-        c.get_or_compute(7, |_| panic!("7 must be resident"));
+        c.get_or_compute(6, 2, |_| panic!("6 must be resident"));
+        c.get_or_compute(7, 2, |_| panic!("7 must be resident"));
         assert_eq!(c.stats().hits, 2);
     }
 
     #[test]
     fn insert_computed_then_get_hits() {
-        let c = ShardedRowCache::new(3, 1 << 20, 4);
+        let c = ShardedRowCache::new(1 << 20, 4);
         c.insert_computed(11, &[1.0, 2.0, 3.0]);
         assert!(c.contains(11));
-        let row = c.get_or_compute(11, |_| panic!("resident"));
+        let row = c.get_or_compute(11, 3, |_| panic!("resident"));
         assert_eq!(&*row, &[1.0, 2.0, 3.0]);
         let s = c.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
@@ -200,7 +350,7 @@ mod tests {
 
     #[test]
     fn get_put_probe_then_fill_counts_once() {
-        let c = ShardedRowCache::new(2, 1 << 20, 4);
+        let c = ShardedRowCache::new(1 << 20, 4);
         assert!(c.get(9).is_none());
         c.put(9, vec![1.0f32, 2.0].into());
         let s = c.stats();
@@ -215,20 +365,60 @@ mod tests {
     }
 
     #[test]
+    fn get_quiet_does_not_count() {
+        let c = ShardedRowCache::new(1 << 20, 2);
+        assert!(c.get_quiet(3).is_none());
+        c.put(3, vec![3.0f32].into());
+        assert_eq!(&*c.get_quiet(3).unwrap(), &[3.0]);
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
     fn stats_since_snapshot() {
-        let c = ShardedRowCache::new(1, 1 << 10, 2);
-        c.get_or_compute(0, |r| r[0] = 0.0);
+        let c = ShardedRowCache::new(1 << 10, 2);
+        c.get_or_compute(0, 1, |r| r[0] = 0.0);
         let snap = c.stats();
-        c.get_or_compute(0, |_| panic!("resident"));
-        c.get_or_compute(1, |r| r[0] = 1.0);
+        c.get_or_compute(0, 1, |_| panic!("resident"));
+        c.get_or_compute(1, 1, |r| r[0] = 1.0);
         let d = c.stats().since(&snap);
         assert_eq!((d.hits, d.misses), (1, 1));
     }
 
+    #[test]
+    fn rebalance_moves_budget_toward_miss_pressure() {
+        // 2 shards, rebalance every 64 counted ops. Keys are chosen so all
+        // traffic lands on shard 1 (odd keys): its miss pressure must earn
+        // it more than the even split after a rebalance.
+        let c = ShardedRowCache::with_rebalance_interval(1 << 16, 2, 64);
+        let even = (1 << 16) / 2;
+        let mut key = 1u64;
+        for _ in 0..256 {
+            c.get_or_compute(key, 4, |r| r.fill(0.5));
+            key += 2; // stays odd -> shard 1
+        }
+        let infos = c.shard_infos();
+        assert!(
+            infos[1].budget_bytes > even,
+            "hot shard budget {} not above even split {even}",
+            infos[1].budget_bytes
+        );
+        assert!(
+            infos[0].budget_bytes < even,
+            "cold shard budget {} not below even split {even}",
+            infos[0].budget_bytes
+        );
+        // Global budget conserved.
+        let total: usize = infos.iter().map(|i| i.budget_bytes).sum();
+        assert!(total <= c.budget_bytes(), "budgets sum {total} over configured");
+        assert_eq!(c.min_shard_budget_bytes(), infos[0].budget_bytes);
+    }
+
     /// Property (ISSUE satellite): under concurrent `get_or_compute` from
-    /// `scope_map` workers, the byte budget holds, every returned row holds
-    /// the value its key demands, and hits + misses equals the exact number
-    /// of calls.
+    /// `scope_map` workers — with rebalancing forced on a short cadence —
+    /// every returned row holds the value its key demands, hits + misses
+    /// equals the exact number of calls, and every shard obeys the CLOCK
+    /// byte-budget invariant (bytes ≤ budget, or a single oversized
+    /// entry).
     #[test]
     fn prop_concurrent_budget_and_counters() {
         check("sharded-concurrent", 10, |rng: &mut Pcg64| {
@@ -238,7 +428,11 @@ mod tests {
             let threads = 2 + rng.below(6);
             let keys = 1 + rng.below(48);
             let ops_per_worker = 200usize;
-            let cache = ShardedRowCache::new(row_len, cap_rows * row_len * 4, shards);
+            let cache = ShardedRowCache::with_rebalance_interval(
+                cap_rows * row_len * 4,
+                shards,
+                64,
+            );
 
             let seeds: Vec<u64> = (0..threads).map(|_| rng.next_u64()).collect();
             let cache_ref = &cache;
@@ -246,8 +440,10 @@ mod tests {
                 let mut r = Pcg64::new(seed);
                 let mut ok = 0usize;
                 for _ in 0..ops_per_worker {
-                    let k = r.below(keys);
-                    let row = cache_ref.get_or_compute(k, |buf| buf.fill(k as f32));
+                    let k = r.below(keys) as u64;
+                    let row = cache_ref.get_or_compute(k, row_len, |buf| {
+                        buf.fill(k as f32)
+                    });
                     if row.len() == row_len && row.iter().all(|&v| v == k as f32) {
                         ok += 1;
                     }
@@ -267,16 +463,19 @@ mod tests {
                 s.hits,
                 s.misses
             );
-            prop_assert!(
-                cache.len() <= cache.capacity_rows(),
-                "budget violated: {} rows > capacity {}",
-                cache.len(),
-                cache.capacity_rows()
-            );
-            // Every resident row must have been computed at least once.
+            for (i, info) in cache.shard_infos().iter().enumerate() {
+                prop_assert!(
+                    info.bytes_used <= info.budget_bytes || info.entries == 1,
+                    "shard {i} budget violated: {} bytes > {} with {} entries",
+                    info.bytes_used,
+                    info.budget_bytes,
+                    info.entries
+                );
+            }
+            // Every resident entry must have been computed at least once.
             prop_assert!(
                 s.misses >= cache.len() as u64,
-                "misses {} < resident rows {}",
+                "misses {} < resident entries {}",
                 s.misses,
                 cache.len()
             );
@@ -288,12 +487,12 @@ mod tests {
     /// compute it exactly once (fill serializes under the shard lock).
     #[test]
     fn concurrent_same_key_computes_once() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        let cache = ShardedRowCache::new(4, 1 << 20, 8);
+        use std::sync::atomic::AtomicUsize;
+        let cache = ShardedRowCache::new(1 << 20, 8);
         let fills = AtomicUsize::new(0);
         let (cache_ref, fills_ref) = (&cache, &fills);
         scope_map(8, (0..64).collect::<Vec<u32>>(), |_, _| {
-            let row = cache_ref.get_or_compute(3, |buf| {
+            let row = cache_ref.get_or_compute(3, 4, |buf| {
                 fills_ref.fetch_add(1, Ordering::Relaxed);
                 buf.fill(3.0);
             });

@@ -100,6 +100,9 @@ pub struct RunConfig {
     pub backend: String,
     /// approximate-solver budget (landmarks/features/units/basis)
     pub budget: usize,
+    /// Segment-granular divide-phase kernel caching (`--segments false`
+    /// replays the v1 full-row behavior as an ablation baseline).
+    pub segment_views: bool,
     pub save_model: Option<String>,
 }
 
@@ -123,6 +126,7 @@ impl Default for RunConfig {
             threads: crate::util::threadpool::default_threads(),
             backend: "auto".into(),
             budget: 64,
+            segment_views: true,
             save_model: None,
         }
     }
@@ -162,6 +166,13 @@ impl RunConfig {
             "threads" => self.threads = val.parse()?,
             "backend" => self.backend = val.to_string(),
             "budget" => self.budget = val.parse()?,
+            "segments" | "segment_views" | "segment-views" => {
+                self.segment_views = match val {
+                    "1" => true,
+                    "0" => false,
+                    other => other.parse()?,
+                }
+            }
             "save_model" | "save-model" => self.save_model = Some(val.to_string()),
             other => bail!("unknown config key '{other}'"),
         }
@@ -207,6 +218,7 @@ impl RunConfig {
             seed: self.seed,
             threads: self.threads,
             keep_level_alphas: false,
+            segment_views: self.segment_views,
         })
     }
 
@@ -227,6 +239,7 @@ impl RunConfig {
             ("threads", Json::from(self.threads)),
             ("backend", Json::from(self.backend.as_str())),
             ("budget", Json::from(self.budget)),
+            ("segments", Json::from(self.segment_views)),
         ])
     }
 }
@@ -285,6 +298,19 @@ mod tests {
         cfg.apply("threads", "3").unwrap();
         assert_eq!(cfg.threads, 3);
         assert_eq!(cfg.dcsvm_config().unwrap().threads, 3);
+    }
+
+    #[test]
+    fn segments_flag_parses_and_flows() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.segment_views, "segment views default on");
+        cfg.apply("segments", "false").unwrap();
+        assert!(!cfg.segment_views);
+        assert!(!cfg.dcsvm_config().unwrap().segment_views);
+        cfg.apply("segments", "1").unwrap();
+        assert!(cfg.segment_views);
+        assert!(cfg.apply("segments", "maybe").is_err());
+        assert_eq!(cfg.to_json().get("segments").as_bool(), Some(true));
     }
 
     #[test]

@@ -13,10 +13,17 @@
 //! ```
 //!
 //! The whole run shares **one** [`KernelContext`]: cluster subproblems are
-//! solved through [`KernelContext::view`] subset views, so kernel rows they
-//! compute stay resident (keyed by global row index) for later levels, the
-//! refine solve and the final conquer solve — the cache analogue of the α
-//! warm start. `final_rows_computed` in the result quantifies the effect.
+//! solved through [`KernelContext::view`] **segmented** subset views —
+//! each cluster's kernel rows are cluster-length partial rows cached under
+//! the cluster's `(segment, row)` keys, so the divide phase computes ~n/k
+//! kernel values per row instead of n. Everything stays resident for later
+//! levels, the refine solve and the final conquer solve, whose full rows
+//! are *stitched* from the cached segments (copy the covered columns,
+//! compute only the rest) — the cache analogue of the α warm start.
+//! `final_rows_computed` / `divide_values_computed` /
+//! `segment_rows_computed` in the result quantify the effect, and
+//! `segment_views = false` replays the v1 full-row behavior as an ablation
+//! baseline (bit-identical α either way — `tests/dcsvm_e2e.rs`).
 //!
 //! Early stopping after any level yields the early-prediction model
 //! (eq. 11): the level's router + per-cluster local models.
@@ -66,6 +73,10 @@ pub struct DcSvmConfig {
     pub threads: usize,
     /// Keep per-level ᾱ snapshots (Figure 2 analysis) and the pre-final ᾱ.
     pub keep_level_alphas: bool,
+    /// Solve cluster subproblems over segmented views (cluster-length
+    /// kernel rows). `false` replays the v1 full-row behavior — the
+    /// ablation baseline; the final α is bit-identical either way.
+    pub segment_views: bool,
 }
 
 impl Default for DcSvmConfig {
@@ -87,6 +98,7 @@ impl Default for DcSvmConfig {
             seed: 0,
             threads: default_threads(),
             keep_level_alphas: false,
+            segment_views: true,
         }
     }
 }
@@ -114,6 +126,9 @@ pub struct LevelStats {
     pub training_s: f64,
     pub sv_count: usize,
     pub sub_iterations: usize,
+    /// Kernel entries evaluated by this level's cluster solves (segmented
+    /// views make this ~n/k per computed row instead of n).
+    pub values_computed: u64,
     /// ᾱ^{(l)} snapshot if `keep_level_alphas`.
     pub alpha: Option<Vec<f64>>,
     /// Cumulative wall-clock when this level finished.
@@ -136,6 +151,19 @@ pub struct DcSvmResult {
     /// lower than a cold-cache solve because the divide/refine phases left
     /// their rows in the shared context cache.
     pub final_rows_computed: u64,
+    /// Kernel entries the final solve evaluated (stitching makes this
+    /// lower than `final_rows_computed · n`: covered columns are copied
+    /// from divide/refine segment entries, not recomputed).
+    pub final_values_computed: u64,
+    /// Kernel entries evaluated by divide-phase cluster solves (all
+    /// levels; clustering/routing passes excluded). The segment-granularity
+    /// headline metric: ≥2× lower at k ≥ 4 than with `segment_views =
+    /// false` (`tests/dcsvm_e2e.rs`).
+    pub divide_values_computed: u64,
+    /// Partial (cluster-segment) kernel rows computed over the run.
+    pub segment_rows_computed: u64,
+    /// Kernel entries reused by full-row stitching over the run.
+    pub stitched_values: u64,
     /// Shared-cache counters over the whole run (note/bench reporting).
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -179,6 +207,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
     let mut levels = Vec::new();
     let mut last_partition: Option<(Router, Partition)> = None;
     let mut early_stopped = false;
+    let mut divide_values = 0u64;
 
     // ---------------- divide phase: levels l_max .. 1 ----------------------
     for level in (1..=cfg.levels).rev() {
@@ -198,18 +227,27 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
 
         // Solve the k cluster subproblems independently (warm-started)
         // through subset views of the shared context: no dataset copies,
-        // and computed rows survive into later phases.
+        // and computed rows survive into later phases. Segmented views
+        // (the default) fetch cluster-length rows — the divide-phase
+        // kernel bill shrinks by roughly the cluster factor.
         let tt = Instant::now();
+        let vals0 = ctx.value_stats();
         let scfg = solver_cfg(cfg, cfg.eps_sub, cfg.max_iter_sub, 0);
         let jobs: Vec<Vec<usize>> =
             part.members.iter().filter(|m| !m.is_empty()).cloned().collect();
         let alpha_ref = &alpha;
         let ctx_ref = &ctx;
+        let segment_views = cfg.segment_views;
         let results: Vec<(Vec<usize>, Vec<f64>, usize)> =
             scope_map(cfg.threads, jobs, |_, members| {
                 let a0: Vec<f64> = members.iter().map(|&i| alpha_ref[i]).collect();
                 let warm = a0.iter().any(|&a| a != 0.0);
-                let res = SmoSolver::new(ctx_ref.view(&members), scfg.clone()).solve_warm(
+                let view = if segment_views {
+                    ctx_ref.view(&members)
+                } else {
+                    ctx_ref.view_unsegmented(&members)
+                };
+                let res = SmoSolver::new(view, scfg.clone()).solve_warm(
                     if warm { Some(&a0) } else { None },
                     &mut |_| {},
                 );
@@ -223,6 +261,8 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
             }
         }
         let training_s = tt.elapsed().as_secs_f64();
+        let level_values = ctx.value_stats().since(&vals0).values_computed;
+        divide_values += level_values;
 
         let sv_count = alpha.iter().filter(|&&a| a > 0.0).count();
         crate::debug!(
@@ -235,6 +275,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
             training_s,
             sv_count,
             sub_iterations,
+            values_computed: level_values,
             alpha: cfg.keep_level_alphas.then(|| alpha.clone()),
             cumulative_s: t0.elapsed().as_secs_f64(),
         });
@@ -259,6 +300,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
 
     if early_stopped {
         let cs = ctx.stats();
+        let vs = ctx.value_stats();
         return DcSvmResult {
             alpha,
             objective: None,
@@ -268,6 +310,10 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
             total_s: t0.elapsed().as_secs_f64(),
             final_iterations: 0,
             final_rows_computed: 0,
+            final_values_computed: 0,
+            divide_values_computed: divide_values,
+            segment_rows_computed: vs.segment_rows,
+            stitched_values: vs.values_stitched,
             cache_hits: cs.hits,
             cache_misses: cs.misses,
             pre_final_alpha: None,
@@ -284,8 +330,16 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         let sv_idx: Vec<usize> = (0..n).filter(|&i| alpha[i] > 0.0).collect();
         if sv_idx.len() >= 2 && sv_idx.len() < n {
             let a0: Vec<f64> = sv_idx.iter().map(|&i| alpha[i]).collect();
+            // The refine solve gets its own SV-set segment: it computes
+            // K(SV, SV) instead of K(SV, ·), and the final solve stitches
+            // those columns back out of the cache.
+            let refine_view = if cfg.segment_views {
+                ctx.view(&sv_idx)
+            } else {
+                ctx.view_unsegmented(&sv_idx)
+            };
             let res = SmoSolver::new(
-                ctx.view(&sv_idx),
+                refine_view,
                 solver_cfg(cfg, cfg.eps_sub, cfg.max_iter_sub, 0),
             )
             .solve_warm(Some(&a0), &mut |_| {});
@@ -311,6 +365,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
     let final_s = tf.elapsed().as_secs_f64();
 
     let cs = ctx.stats();
+    let vs = ctx.value_stats();
     DcSvmResult {
         alpha: res.alpha,
         objective: Some(res.objective),
@@ -320,6 +375,10 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         total_s: t0.elapsed().as_secs_f64(),
         final_iterations: res.iterations,
         final_rows_computed: res.rows_computed,
+        final_values_computed: res.values_computed,
+        divide_values_computed: divide_values,
+        segment_rows_computed: vs.segment_rows,
+        stitched_values: vs.values_stitched,
         cache_hits: cs.hits,
         cache_misses: cs.misses,
         pre_final_alpha,
@@ -412,6 +471,30 @@ mod tests {
         assert_eq!(a.alpha, b.alpha, "thread count changed the result");
     }
 
+    /// Segment-granular divide must not change the math: the full run
+    /// (levels → refine → final) produces bit-identical α with
+    /// `segment_views` on and off, while computing strictly fewer kernel
+    /// values in the divide phase.
+    #[test]
+    fn segment_views_bit_identical_and_cheaper() {
+        let (tr, _, kern, mut cfg) = setup(500);
+        cfg.segment_views = true;
+        let seg = train(&tr, &kern, &cfg);
+        cfg.segment_views = false;
+        let full = train(&tr, &kern, &cfg);
+        assert_eq!(seg.alpha, full.alpha, "segmented run changed the solution");
+        assert_eq!(seg.final_iterations, full.final_iterations);
+        assert!(
+            seg.divide_values_computed < full.divide_values_computed,
+            "segmented divide computed {} values, full-row {}",
+            seg.divide_values_computed,
+            full.divide_values_computed
+        );
+        assert!(seg.segment_rows_computed > 0, "no segment rows recorded");
+        assert_eq!(full.segment_rows_computed, 0, "baseline must not use segments");
+        assert!(seg.stitched_values > 0, "final solve never stitched");
+    }
+
     #[test]
     fn level_stats_recorded() {
         let (tr, _, kern, mut cfg) = setup(400);
@@ -425,6 +508,7 @@ mod tests {
         for ls in &dc.levels {
             assert!(ls.alpha.is_some());
             assert!(ls.sv_count > 0);
+            assert!(ls.values_computed > 0, "level {} computed no values", ls.level);
         }
         assert!(dc.pre_final_alpha.is_some());
     }

@@ -64,6 +64,14 @@ pub struct Outcome {
     /// the cross-phase-reuse metric: strictly lower than a cold-cache
     /// solve because divide/refine left their rows resident.
     pub final_rows: Option<u64>,
+    /// Partial (cluster-segment) kernel rows computed (DC-SVM runs over
+    /// segmented views) — the cache-v2 granularity metric.
+    pub segment_rows: Option<u64>,
+    /// Kernel entries evaluated by divide-phase cluster solves (DC-SVM):
+    /// ~k× lower with segmented views than with full rows.
+    pub divide_values: Option<u64>,
+    /// Kernel entries reused by full-row stitching (DC-SVM).
+    pub stitched_values: Option<u64>,
     /// Free-text extras (iteration counts, per-algo details). Structured
     /// metrics live in the typed fields above, not here.
     pub note: String,
@@ -88,6 +96,18 @@ impl Outcome {
             (
                 "final_rows",
                 self.final_rows.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "segment_rows",
+                self.segment_rows.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "divide_values",
+                self.divide_values.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "stitched_values",
+                self.stitched_values.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
             ),
             ("note", Json::from(self.note.as_str())),
         ])
@@ -155,6 +175,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 svs: res.sv_count,
                 cache_hit_rate: Some(res.cache_hit_rate),
                 final_rows: None,
+                segment_rows: None,
+                divide_values: None,
+                stitched_values: None,
                 note: format!("iters={}", res.iterations),
             }
         }
@@ -188,6 +211,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 svs: res.sv_count(),
                 cache_hit_rate: Some(hit_rate),
                 final_rows,
+                segment_rows: Some(res.segment_rows_computed),
+                divide_values: Some(res.divide_values_computed),
+                stitched_values: Some(res.stitched_values),
                 note,
             }
         }
@@ -212,6 +238,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 svs: res.model.num_svs(),
                 cache_hit_rate: None,
                 final_rows: None,
+                segment_rows: None,
+                divide_values: None,
+                stitched_values: None,
                 note: format!("levels={:?}", res.level_sv_counts),
             }
         }
@@ -235,6 +264,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 svs: res.model.num_svs(),
                 cache_hit_rate: Some(tr_ctx.hit_rate()),
                 final_rows: None,
+                segment_rows: None,
+                divide_values: None,
+                stitched_values: None,
                 note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
             }
         }
@@ -260,6 +292,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 svs: cfg.budget,
                 cache_hit_rate: None,
                 final_rows: None,
+                segment_rows: None,
+                divide_values: None,
+                stitched_values: None,
                 note: format!("landmarks={}", cfg.budget),
             }
         }
@@ -281,6 +316,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 svs: 0,
                 cache_hit_rate: None,
                 final_rows: None,
+                segment_rows: None,
+                divide_values: None,
+                stitched_values: None,
                 note: format!("features={}", cfg.budget * 8),
             }
         }
@@ -302,6 +340,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 svs: 0,
                 cache_hit_rate: None,
                 final_rows: None,
+                segment_rows: None,
+                divide_values: None,
+                stitched_values: None,
                 note: format!("units={}", cfg.budget),
             }
         }
@@ -328,6 +369,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 svs: model.basis_size,
                 cache_hit_rate: None,
                 final_rows: None,
+                segment_rows: None,
+                divide_values: None,
+                stitched_values: None,
                 note: format!("basis={}", model.basis_size),
             }
         }
@@ -364,18 +408,19 @@ mod tests {
     use super::*;
 
     fn small_cfg(algo: Algo) -> RunConfig {
-        let mut cfg = RunConfig::default();
-        cfg.algo = algo;
-        cfg.dataset = "covtype-like".into();
-        cfg.n_train = Some(350);
-        cfg.n_test = Some(120);
-        cfg.gamma = 16.0;
-        cfg.c = 4.0;
-        cfg.levels = 2;
-        cfg.sample_m = 64;
-        cfg.budget = 32;
-        cfg.backend = "native".into();
-        cfg
+        RunConfig {
+            algo,
+            dataset: "covtype-like".into(),
+            n_train: Some(350),
+            n_test: Some(120),
+            gamma: 16.0,
+            c: 4.0,
+            levels: 2,
+            sample_m: 64,
+            budget: 32,
+            backend: "native".into(),
+            ..RunConfig::default()
+        }
     }
 
     #[test]
@@ -416,10 +461,17 @@ mod tests {
         let hit = out.cache_hit_rate.expect("cache_hit_rate recorded");
         assert!((0.0..=1.0).contains(&hit), "hit rate {hit}");
         assert!(out.final_rows.is_some(), "final_rows recorded for exact dcsvm");
+        assert!(out.segment_rows.is_some(), "segment_rows recorded for dcsvm");
+        assert!(out.divide_values.is_some(), "divide_values recorded for dcsvm");
+        assert!(out.stitched_values.is_some(), "stitched_values recorded for dcsvm");
+        assert!(out.segment_rows.unwrap() > 0, "segmented divide recorded no rows");
         assert!(!out.note.contains("cache_hit="), "note: {}", out.note);
         let j = out.to_json();
         assert_eq!(j.get("cache_hit_rate").as_f64(), Some(hit));
         assert!(j.get("final_rows").as_f64().is_some());
+        assert!(j.get("segment_rows").as_f64().is_some());
+        assert!(j.get("divide_values").as_f64().is_some());
+        assert!(j.get("stitched_values").as_f64().is_some());
     }
 
     #[test]

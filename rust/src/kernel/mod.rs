@@ -77,7 +77,9 @@ impl KernelKind {
 ///
 /// `xq`/`xd` are row-major `[nq, dim]` / `[nd, dim]`; `q_norms`/`d_norms`
 /// are the rows' squared L2 norms (consumed by RBF; ignored otherwise);
-/// `out` is row-major `[nq, nd]`.
+/// `out` is row-major `[nq, nd]`. The flat argument lists mirror the AOT
+/// artifact ABI (matrices + norms + outputs), hence the allow.
+#[allow(clippy::too_many_arguments)]
 pub trait BlockKernel: Sync + Send {
     fn kind(&self) -> KernelKind;
 

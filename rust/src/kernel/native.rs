@@ -87,6 +87,7 @@ pub fn cross_products(
     }
 }
 
+#[allow(clippy::too_many_arguments)] // flat block ABI; see the trait docs
 impl BlockKernel for NativeKernel {
     fn kind(&self) -> KernelKind {
         self.kind

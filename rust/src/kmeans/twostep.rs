@@ -15,7 +15,6 @@
 //! *test* points (paper eq. 11) with whatever kernel backend serves them.
 
 use crate::cache::KernelContext;
-use crate::data::Dataset;
 use crate::kernel::BlockKernel;
 use crate::util::prng::Pcg64;
 
@@ -59,6 +58,9 @@ impl Router {
             sample_norms.push(ctx.norm(i));
         }
         let kmat = dense_kernel(&sample_x, &sample_norms, dim, ctx.kernel());
+        // The m×m sample kernel bypasses the row cache; keep the context's
+        // whole-run kernel-value accounting honest.
+        ctx.count_external_values((m * m) as u64);
         let sc = kernel_kmeans(&kmat, m, k, max_iter, rng);
         Router {
             sample_x,
@@ -127,6 +129,9 @@ impl Router {
 
     /// Assign every row of the context's dataset (norms from the context).
     pub fn assign_all(&self, ctx: &KernelContext) -> Vec<u16> {
+        // One K(all, sample) pass outside the row cache — counted so
+        // `ValueStats::values_computed` reflects the whole run.
+        ctx.count_external_values((ctx.len() * self.sample_size()) as u64);
         self.assign_rows(&ctx.ds().x, ctx.norms(), ctx.kernel())
     }
 
@@ -264,6 +269,7 @@ pub fn off_diagonal_mass(ctx: &KernelContext, assign: &[u16]) -> f64 {
     let ds = ctx.ds();
     let n = ds.len();
     let norms = ctx.norms();
+    ctx.count_external_values((n * n) as u64);
     let mut total = 0f64;
     const CHUNK: usize = 256;
     let mut block = vec![0f32; CHUNK * n];
@@ -296,6 +302,7 @@ pub fn off_diagonal_mass(ctx: &KernelContext, assign: &[u16]) -> f64 {
 mod tests {
     use super::*;
     use crate::data::synthetic::{covtype_like, generate};
+    use crate::data::Dataset;
     use crate::kernel::{native::NativeKernel, KernelKind};
 
     fn blobs(n: usize, seed: u64) -> Dataset {

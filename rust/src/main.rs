@@ -78,6 +78,7 @@ fn print_usage() {
          \x20 --gamma G --c C --eps E --levels L --k-base K --sample-m M\n\
          \x20 --backend {{auto,native,pjrt}} --budget B --seed S --config FILE\n\
          \x20 --threads T (default: DCSVM_THREADS or all cores) --cache-mb MB\n\
+         \x20 --segments {{true,false}} (segment-granular divide cache; default true)\n\
          \x20 --save-model FILE"
     );
 }

@@ -152,6 +152,9 @@ impl SvmModel {
     /// Accuracy on a dataset that already has a [`KernelContext`] (norms
     /// and backend come from the context).
     pub fn accuracy_ctx(&self, ctx: &KernelContext) -> f64 {
+        // One K(test, SV) decision pass outside the row cache; counted so
+        // the context's kernel-value accounting covers prediction too.
+        ctx.count_external_values((ctx.len() * self.num_svs()) as u64);
         let preds = self.predict_batch(&ctx.ds().x, ctx.norms(), ctx.kernel());
         crate::metrics::accuracy(&preds, &ctx.ds().y)
     }
@@ -265,6 +268,9 @@ impl EarlyModel {
 
     /// Accuracy through an existing [`KernelContext`].
     pub fn accuracy_ctx(&self, ctx: &KernelContext) -> f64 {
+        // Count the K(test, sample) routing pass; the per-cluster local
+        // decisions are O(|S|/k) per point on top.
+        ctx.count_external_values((ctx.len() * self.router.sample_size()) as u64);
         let preds = self.predict_batch(&ctx.ds().x, ctx.norms(), ctx.kernel());
         crate::metrics::accuracy(&preds, &ctx.ds().y)
     }

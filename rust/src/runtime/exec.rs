@@ -107,6 +107,7 @@ impl<'e> PjrtKernel<'e> {
     }
 }
 
+#[allow(clippy::too_many_arguments)] // flat block ABI; see the trait docs
 impl BlockKernel for PjrtKernel<'_> {
     fn kind(&self) -> KernelKind {
         self.kind

@@ -18,14 +18,23 @@
 //!   selection and artifact lookup happen once;
 //! - it owns one byte-budgeted [`ShardedRowCache`] per decision component
 //!   (one for an exact model, one per cluster for an early model) holding
-//!   **kernel rows against that component's SV set**: entry =
-//!   `[query (dim) | K(query, sv_0..sv_s)]`, keyed by a 64-bit content
-//!   fingerprint of the query row. Repeated queries — health probes, hot
-//!   keys, retried requests, replayed batches — hit instead of recompute,
-//!   across request batches, for the life of the process.
+//!   **SV-block segments** of kernel rows against that component's SV set:
+//!   the SV set is split into contiguous blocks of [`DEFAULT_SV_BLOCK`]
+//!   vectors and each cache entry is
+//!   `[query (dim) | K(query, sv_block)]`, keyed by the 64-bit content
+//!   fingerprint of the query row mixed with the block index. Repeated
+//!   queries — health probes, hot keys, retried requests, replayed batches
+//!   — hit instead of recompute, across request batches, for the life of
+//!   the process; the block granularity is the serving twin of the
+//!   training cache's `(row, segment)` keys and the substrate for
+//!   near-duplicate reuse (a future quantized fingerprint can share
+//!   unchanged blocks between similar queries).
 //!
-//! Decisions are evaluated from the cached row (`Σ_j coef_j · row_j`, fixed
-//! order), so a hit is bit-identical to the original computation: two
+//! Decisions are evaluated from the cached blocks (`Σ_j coef_j · row_j`,
+//! accumulated block by block in ascending SV order — the exact operation
+//! sequence of a single pass over the whole SV set), so a hit is
+//! bit-identical to the original computation and the block split never
+//! changes a decision value: two
 //! identical batches produce identical decision values while the second
 //! computes zero kernel rows against the SV set
 //! (`tests/serving_roundtrip.rs`). Early-model *routing* is cached the
@@ -67,6 +76,20 @@ use crate::util::threadpool::scope_map;
 /// Shard count of each serving cache: enough to keep `--workers` request
 /// threads from serializing on fills.
 const SERVE_SHARDS: usize = 16;
+
+/// SV vectors per cache block: components with more SVs split their
+/// `[query | K(query, SV-set)]` entries into per-block segments (tests
+/// shrink it via [`ServingContext::with_block_size`]; small models fit one
+/// block and behave exactly as before).
+pub const DEFAULT_SV_BLOCK: usize = 512;
+
+/// Cache key of one (query fingerprint, SV block) pair. Distinct blocks of
+/// the same query always get distinct keys; cross-query collisions are
+/// caught by the stored-query verification on hit.
+#[inline]
+fn block_key(fp: u64, block: usize) -> u64 {
+    fp.wrapping_add((block as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
 
 /// A deserialized model the serving layer can evaluate.
 pub enum ServingModel {
@@ -206,9 +229,11 @@ pub struct ServingContext {
     model: ServingModel,
     kernel: Box<dyn BlockKernel>,
     dim: usize,
+    /// SV vectors per cache block (see [`DEFAULT_SV_BLOCK`]).
+    sv_block: usize,
     /// One cache per decision component: index 0 for an exact model, index
-    /// c for early-model cluster c. Entry layout:
-    /// `[query (dim) | K(query, component SVs)]`.
+    /// c for early-model cluster c. Entry layout, per SV block b:
+    /// `[query (dim) | K(query, sv_{b·B} .. sv_{min((b+1)·B, s)})]`.
     caches: Vec<ShardedRowCache>,
     /// Early-model routing cache: `[query (dim) | component id]`, keyed by
     /// the same content fingerprint as the row caches (stored query
@@ -219,31 +244,49 @@ pub struct ServingContext {
 
 impl ServingContext {
     /// Build the persistent context. `cache_bytes` is the total serving
-    /// cache budget, split across components proportional to their entry
-    /// length (an empty component still gets the one-row-per-shard floor).
+    /// cache budget, split across components proportional to their
+    /// per-query entry bytes (an empty component still gets a floor
+    /// share). SV sets larger than [`DEFAULT_SV_BLOCK`] are cached as
+    /// per-block segments.
     pub fn new(
         model: ServingModel,
         kernel: Box<dyn BlockKernel>,
         cache_bytes: usize,
+    ) -> ServingContext {
+        Self::with_block_size(model, kernel, cache_bytes, DEFAULT_SV_BLOCK)
+    }
+
+    /// [`Self::new`] with an explicit SV-block size (tests force multi-block
+    /// layouts on small models with it). Decisions are bit-identical for
+    /// every block size.
+    pub fn with_block_size(
+        model: ServingModel,
+        kernel: Box<dyn BlockKernel>,
+        cache_bytes: usize,
+        sv_block: usize,
     ) -> ServingContext {
         assert_eq!(
             kernel.kind(),
             model.kind(),
             "kernel backend kind mismatch with model"
         );
+        let sv_block = sv_block.max(1);
         let dim = model.dim();
         let comp_svs: Vec<usize> = match &model {
             ServingModel::Exact(m) => vec![m.num_svs()],
             ServingModel::Early(em) => em.locals.iter().map(|m| m.num_svs()).collect(),
         };
-        // Early models also carry a routing cache (`[query | component]`,
-        // row length dim+1); it takes its proportional — tiny — share of
-        // the same byte budget.
+        // Per-query entry bytes of a component: one [query | K-block] entry
+        // per SV block. Early models also carry a routing cache
+        // (`[query | component]`, row length dim+1); it takes its
+        // proportional — tiny — share of the same byte budget.
+        let blocks = |svs: usize| svs.div_ceil(sv_block).max(1);
+        let comp_len = |svs: usize| blocks(svs) * dim + svs;
         let route_len = match &model {
             ServingModel::Exact(_) => None,
             ServingModel::Early(_) => Some(dim + 1),
         };
-        let total_len: usize = (comp_svs.iter().map(|&s| dim + s).sum::<usize>()
+        let total_len: usize = (comp_svs.iter().map(|&s| comp_len(s)).sum::<usize>()
             + route_len.unwrap_or(0))
         .max(1);
         let share = |row_len: usize| {
@@ -251,11 +294,18 @@ impl ServingContext {
         };
         let caches = comp_svs
             .iter()
-            .map(|&s| ShardedRowCache::new(dim + s, share(dim + s), SERVE_SHARDS))
+            .map(|&s| ShardedRowCache::new(share(comp_len(s)), SERVE_SHARDS))
             .collect();
         let route_cache =
-            route_len.map(|len| ShardedRowCache::new(len, share(len), SERVE_SHARDS));
-        ServingContext { model, kernel, dim, caches, route_cache }
+            route_len.map(|len| ShardedRowCache::new(share(len), SERVE_SHARDS));
+        ServingContext { model, kernel, dim, sv_block, caches, route_cache }
+    }
+
+    /// Number of SV blocks of a component with `n_svs` support vectors
+    /// (always at least one, so empty components still cache query-only
+    /// entries).
+    fn component_blocks(&self, n_svs: usize) -> usize {
+        n_svs.div_ceil(self.sv_block).max(1)
     }
 
     /// The model being served.
@@ -306,7 +356,7 @@ impl ServingContext {
 
         // Micro-batch across workers; scope_map returns in input order.
         let workers = workers.max(1).min(n);
-        let chunk = (n + workers - 1) / workers;
+        let chunk = n.div_ceil(workers);
         let jobs: Vec<(usize, usize)> =
             (0..n).step_by(chunk).map(|lo| (lo, (lo + chunk).min(n))).collect();
         let assign_ref = &assign;
@@ -380,7 +430,7 @@ impl ServingContext {
             // path): one routing row per unique query.
             rs.dispatches = 1;
             let query = |i: usize| &x[i * dim..(i + 1) * dim];
-            let mut first: HashMap<usize, usize> = HashMap::new(); // key -> uniq slot
+            let mut first: HashMap<u64, usize> = HashMap::new(); // fp -> uniq slot
             let mut uniq: Vec<usize> = Vec::new(); // representative indices
             let mut rep: Vec<usize> = Vec::with_capacity(missing.len());
             for &i in &missing {
@@ -431,9 +481,13 @@ impl ServingContext {
         (&m.sv_x, &m.sv_norms, &m.coef)
     }
 
-    /// Decide queries `lo..hi` (one worker's micro-batch): probe the
-    /// component cache per query, batch-compute all misses of a component
-    /// in ONE backend dispatch, store the new entries, reduce to decisions.
+    /// Decide queries `lo..hi` (one worker's micro-batch): per SV block of
+    /// each component, probe the cache per query, batch-compute all misses
+    /// in ONE backend dispatch against the block's contiguous SV slice,
+    /// store the new entries, and fold the block into the running
+    /// decisions. Blocks are folded in ascending SV order with a single
+    /// accumulator per query — the exact operation sequence of a one-pass
+    /// reduction, so decisions are bit-identical for every block size.
     fn decide_range(
         &self,
         x: &[f32],
@@ -452,78 +506,107 @@ impl ServingContext {
             let (sv_x, sv_norms, coef) = self.component(c);
             let n_svs = coef.len();
             let cache = &self.caches[c];
+            let query = |t: usize| &x[idx[t] * dim..(idx[t] + 1) * dim];
+            // Fingerprints are block-independent (block_key mixes the
+            // block index in separately); hash each query once, not once
+            // per block per pass.
+            let fps: Vec<u64> = (0..idx.len()).map(|t| fingerprint(query(t))).collect();
+            let mut acc = vec![0f32; idx.len()];
 
-            // Probe pass: resident entries (verified against the stored
-            // query prefix) are reused; the rest are batched misses.
-            let mut rows: Vec<Option<Arc<[f32]>>> = vec![None; idx.len()];
-            let mut missing: Vec<usize> = Vec::new(); // positions into idx
-            for (t, &i) in idx.iter().enumerate() {
-                let q = &x[i * dim..(i + 1) * dim];
-                if let Some(entry) = cache.get(fingerprint(q)) {
-                    if &entry[..dim] == q {
-                        rs.hits += 1;
-                        rows[t] = Some(entry);
-                        continue;
+            for b in 0..self.component_blocks(n_svs) {
+                let b_lo = (b * self.sv_block).min(n_svs);
+                let b_hi = ((b + 1) * self.sv_block).min(n_svs);
+                let blen = b_hi - b_lo;
+
+                // Probe pass: resident entries (verified against the
+                // stored query prefix) are reused; the rest are batched
+                // misses.
+                let mut rows: Vec<Option<Arc<[f32]>>> = vec![None; idx.len()];
+                let mut missing: Vec<usize> = Vec::new(); // positions into idx
+                for (t, &i) in idx.iter().enumerate() {
+                    let q = &x[i * dim..(i + 1) * dim];
+                    if let Some(entry) = cache.get(block_key(fps[t], b)) {
+                        if &entry[..dim] == q {
+                            rs.hits += 1;
+                            rows[t] = Some(entry);
+                            continue;
+                        }
+                        // Fingerprint collision: recompute below, uncached.
                     }
-                    // Fingerprint collision: recompute below, uncached.
+                    rs.misses += 1;
+                    missing.push(t);
                 }
-                rs.misses += 1;
-                missing.push(t);
-            }
 
-            // Fill pass: dedupe identical queries within the micro-batch
-            // (the probe pass ran before any fill, so batch-internal
-            // repeats all missed), then one kernel dispatch for the unique
-            // missing queries.
-            if !missing.is_empty() {
-                let query = |t: usize| &x[idx[t] * dim..(idx[t] + 1) * dim];
-                let mut first: HashMap<usize, usize> = HashMap::new(); // key -> uniq slot
-                let mut uniq: Vec<usize> = Vec::new(); // representative positions
-                let mut rep: Vec<usize> = Vec::with_capacity(missing.len());
-                for &t in &missing {
-                    let key = fingerprint(query(t));
-                    match first.get(&key).copied() {
-                        Some(u) if query(uniq[u]) == query(t) => rep.push(u),
-                        _ => {
-                            first.insert(key, uniq.len());
-                            uniq.push(t);
-                            rep.push(uniq.len() - 1);
+                // Fill pass: dedupe identical queries within the
+                // micro-batch (the probe pass ran before any fill, so
+                // batch-internal repeats all missed), then one kernel
+                // dispatch for the unique missing queries against this
+                // block's SV slice.
+                if !missing.is_empty() {
+                    let mut first: HashMap<u64, usize> = HashMap::new(); // fp -> uniq slot
+                    let mut uniq: Vec<usize> = Vec::new(); // representative positions
+                    let mut rep: Vec<usize> = Vec::with_capacity(missing.len());
+                    for &t in &missing {
+                        let fp = fps[t];
+                        match first.get(&fp).copied() {
+                            Some(u) if query(uniq[u]) == query(t) => rep.push(u),
+                            _ => {
+                                first.insert(fp, uniq.len());
+                                uniq.push(t);
+                                rep.push(uniq.len() - 1);
+                            }
                         }
                     }
+                    rs.computed += uniq.len() as u64;
+                    let mut xq = Vec::with_capacity(uniq.len() * dim);
+                    let mut qn = Vec::with_capacity(uniq.len());
+                    for &t in &uniq {
+                        let q = query(t);
+                        xq.extend_from_slice(q);
+                        qn.push(q.iter().map(|&v| v * v).sum());
+                    }
+                    let mut kblock = vec![0f32; uniq.len() * blen];
+                    if blen > 0 {
+                        self.kernel.block(
+                            &xq,
+                            &qn,
+                            &sv_x[b_lo * dim..b_hi * dim],
+                            &sv_norms[b_lo..b_hi],
+                            dim,
+                            &mut kblock,
+                        );
+                    }
+                    let mut entries: Vec<Arc<[f32]>> = Vec::with_capacity(uniq.len());
+                    for (s, &t) in uniq.iter().enumerate() {
+                        let q = query(t);
+                        let mut entry = Vec::with_capacity(dim + blen);
+                        entry.extend_from_slice(q);
+                        entry.extend_from_slice(&kblock[s * blen..(s + 1) * blen]);
+                        let entry: Arc<[f32]> = entry.into();
+                        cache.put(block_key(fps[t], b), Arc::clone(&entry));
+                        entries.push(entry);
+                    }
+                    for (&t, &u) in missing.iter().zip(&rep) {
+                        rows[t] = Some(Arc::clone(&entries[u]));
+                    }
                 }
-                rs.computed += uniq.len() as u64;
-                let mut xq = Vec::with_capacity(uniq.len() * dim);
-                let mut qn = Vec::with_capacity(uniq.len());
-                for &t in &uniq {
-                    let q = query(t);
-                    xq.extend_from_slice(q);
-                    qn.push(q.iter().map(|&v| v * v).sum());
-                }
-                let mut block = vec![0f32; uniq.len() * n_svs];
-                if n_svs > 0 {
-                    self.kernel.block(&xq, &qn, sv_x, sv_norms, dim, &mut block);
-                }
-                let mut entries: Vec<Arc<[f32]>> = Vec::with_capacity(uniq.len());
-                for (s, &t) in uniq.iter().enumerate() {
-                    let q = query(t);
-                    let mut entry = Vec::with_capacity(dim + n_svs);
-                    entry.extend_from_slice(q);
-                    entry.extend_from_slice(&block[s * n_svs..(s + 1) * n_svs]);
-                    let entry: Arc<[f32]> = entry.into();
-                    cache.put(fingerprint(q), Arc::clone(&entry));
-                    entries.push(entry);
-                }
-                for (&t, &u) in missing.iter().zip(&rep) {
-                    rows[t] = Some(Arc::clone(&entries[u]));
+
+                // Fold this block into the accumulators (fixed order, so
+                // cached and fresh entries yield bit-identical decisions).
+                let bcoef = &coef[b_lo..b_hi];
+                for (t, slot) in rows.iter().enumerate() {
+                    let entry = slot.as_ref().expect("serving block filled");
+                    let krow = &entry[dim..];
+                    let mut a = acc[t];
+                    for (&k, &w) in krow.iter().zip(bcoef) {
+                        a += k * w;
+                    }
+                    acc[t] = a;
                 }
             }
 
-            // Reduce: fixed-order dot product, so cached and fresh rows
-            // yield bit-identical decisions.
             for (t, &i) in idx.iter().enumerate() {
-                let entry = rows[t].as_ref().expect("serving row filled");
-                let krow = &entry[dim..];
-                dv[i - lo] = krow.iter().zip(coef).map(|(&k, &w)| k * w).sum();
+                dv[i - lo] = acc[t];
             }
         }
         (dv, rs)
@@ -551,7 +634,7 @@ struct RouteStats {
 /// serving cache. Entries store the query itself as a prefix and hits are
 /// verified against it, so a collision degrades to an uncached recompute,
 /// never a wrong row.
-fn fingerprint(q: &[f32]) -> usize {
+fn fingerprint(q: &[f32]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &v in q {
         for b in v.to_bits().to_le_bytes() {
@@ -559,7 +642,7 @@ fn fingerprint(q: &[f32]) -> usize {
             h = h.wrapping_mul(0x100000001b3);
         }
     }
-    h as usize
+    h
 }
 
 #[cfg(test)]
@@ -652,6 +735,43 @@ mod tests {
         let (_, s2) = ctx.decide(&x, 1);
         assert_eq!(s2.cache_hits, 5);
         assert_eq!(s2.rows_computed, 0);
+    }
+
+    /// SV-block segmentation (cache v2): decisions are bit-identical for
+    /// every block size, counters scale with the block count, and a warm
+    /// multi-block batch computes nothing.
+    #[test]
+    fn sv_blocks_bit_identical_across_block_sizes() {
+        let (model, te) = exact_model(300, 14);
+        let n_svs = model.num_svs();
+        assert!(n_svs > 4, "model too small to exercise multiple blocks");
+        let kern_a = NativeKernel::new(model.kind);
+        let kern_b = NativeKernel::new(model.kind);
+        let single = ServingContext::new(
+            ServingModel::Exact(model.clone()),
+            Box::new(kern_a),
+            8 << 20,
+        );
+        let blocked = ServingContext::with_block_size(
+            ServingModel::Exact(model),
+            Box::new(kern_b),
+            8 << 20,
+            3,
+        );
+        let (dv1, s1) = single.decide(&te.x, 2);
+        let (dv2, s2) = blocked.decide(&te.x, 2);
+        assert_eq!(dv1, dv2, "block size changed decision values");
+        let blocks = n_svs.div_ceil(3);
+        assert!(blocks > 1);
+        assert_eq!(s1.cache_misses, te.len() as u64);
+        assert_eq!(s2.cache_misses, (te.len() * blocks) as u64);
+        assert_eq!(s2.rows_computed, (te.len() * blocks) as u64);
+        // Warm pass over the blocked context: every block hits.
+        let (dv3, s3) = blocked.decide(&te.x, 2);
+        assert_eq!(dv1, dv3);
+        assert_eq!(s3.rows_computed, 0);
+        assert_eq!(s3.cache_hits, (te.len() * blocks) as u64);
+        assert!((s3.hit_rate() - 1.0).abs() < 1e-12);
     }
 
     #[test]

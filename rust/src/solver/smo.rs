@@ -10,13 +10,17 @@
 //! 2. warm-started from ᾱ, it is the conquer step of DC-SVM, and it solves
 //!    every cluster subproblem in the divide step through a subset view.
 //!
-//! Kernel access goes through the view's shared [`KernelContext`]: rows are
-//! full dataset-length rows keyed by global index, so rows computed while
-//! solving a cluster subproblem are still resident for the refine and final
-//! solves (cross-phase reuse — the cache analogue of the α warm start). The
-//! solver owns no cache; `rows_computed`/`cache_hit_rate` are per-solve
-//! counter deltas of the shared cache (attribution is exact for solves that
-//! run alone, approximate for concurrent divide-phase solves).
+//! Kernel access goes through the view's shared [`KernelContext`]. A
+//! **segmented** view (cluster subproblem) fetches local-indexed partial
+//! rows `K(x_i, members)` — cluster-length, so the divide phase computes
+//! and caches ~n/k values per row instead of n; a full or unsegmented view
+//! fetches full dataset-length rows (stitched from cached segments where
+//! possible). Either way, everything a solve computes stays resident for
+//! the refine and final solves (cross-phase reuse — the cache analogue of
+//! the α warm start). The solver owns no cache;
+//! `rows_computed`/`values_computed`/`cache_hit_rate` are per-solve counter
+//! deltas of the shared cache (attribution is exact for solves that run
+//! alone, approximate for concurrent divide-phase solves).
 //!
 //! Iteration: pick i with the largest projected-KKT violation, fetch kernel
 //! row i (shared cache → block-kernel backend → AOT artifact via PJRT),
@@ -92,8 +96,13 @@ pub struct SmoResult {
     pub bounded_sv_count: usize,
     pub final_violation: f64,
     pub elapsed_s: f64,
-    /// Kernel rows computed during this solve (shared-cache miss delta).
+    /// Kernel rows (full or segment) computed during this solve
+    /// (shared-cache miss delta).
     pub rows_computed: u64,
+    /// Kernel **entries** evaluated during this solve (context
+    /// `values_computed` delta) — the segment-aware cost metric: a
+    /// segmented cluster solve pays ~n/k per row, a full-row solve pays n.
+    pub values_computed: u64,
     /// Shared-cache hit rate over this solve's accesses.
     pub cache_hit_rate: f64,
     /// True if stopped by max_iter instead of ε-optimality.
@@ -129,6 +138,7 @@ impl<'a> SmoSolver<'a> {
         let c = self.cfg.c;
         let t0 = Instant::now();
         let stats0 = self.view.ctx().stats();
+        let vals0 = self.view.ctx().value_stats();
 
         // --- initialize alpha and gradient -------------------------------
         let mut alpha = match alpha0 {
@@ -231,15 +241,18 @@ impl<'a> SmoSolver<'a> {
                 if !self.view.is_row_cached(i) {
                     self.prefetch_rows(i, &active, &alpha, &grad, c);
                 }
-                // Full dataset-length row — indexed by GLOBAL j below.
-                let row = self.view.global_row(i);
+                let row = self.view.local_row(i);
                 let dyi = delta * yi;
-                match self.view.map() {
+                match self.view.unsegmented_map() {
+                    // Segmented or full view: the row is directly indexed
+                    // by the same local indices the solver iterates.
                     None => {
                         for &j in &active {
                             grad[j] += dyi * (self.y[j] as f64) * (row[j] as f64);
                         }
                     }
+                    // Unsegmented subset view: full dataset-length row,
+                    // indexed through the local→global map.
                     Some(map) => {
                         for &j in &active {
                             grad[j] += dyi * (self.y[j] as f64) * (row[map[j]] as f64);
@@ -299,6 +312,7 @@ impl<'a> SmoSolver<'a> {
         });
 
         let delta_stats = self.view.ctx().stats().since(&stats0);
+        let delta_vals = self.view.ctx().value_stats().since(&vals0);
         SmoResult {
             alpha,
             objective,
@@ -308,6 +322,7 @@ impl<'a> SmoSolver<'a> {
             final_violation,
             elapsed_s,
             rows_computed: delta_stats.misses,
+            values_computed: delta_vals.values_computed,
             cache_hit_rate: delta_stats.hit_rate(),
             hit_iter_cap: hit_cap,
         }
@@ -328,15 +343,18 @@ impl<'a> SmoSolver<'a> {
         // Never prefetch more rows than a fraction of the cache can hold —
         // otherwise a tight cache budget turns speculative rows into
         // immediate evictions of the working set. Eviction is per shard, so
-        // also cap at one shard's capacity: even if every pick collides on
-        // one shard (key % shards), the batch cannot evict its own rows.
+        // also cap at one shard's budget (the smallest, post-rebalance):
+        // even if every pick collides on one shard (key % shards), the
+        // batch cannot evict its own rows. Budgets are bytes now, so the
+        // caps scale with this view's row length — a segmented cluster
+        // solve can prefetch k× deeper than a full-row solve.
         let ctx = self.view.ctx();
         let cache = ctx.cache();
-        let per_shard = (cache.capacity_rows() / cache.shard_count()).max(1);
+        let row_bytes = (self.view.row_len() * 4).max(1);
         let auto = if ctx.kernel().prefers_batched_rows() { 64 } else { 1 };
         let batch = (if self.cfg.row_batch == 0 { auto } else { self.cfg.row_batch })
-            .min((cache.capacity_rows() / 8).max(1))
-            .min(per_shard)
+            .min((cache.budget_bytes() / 8 / row_bytes).max(1))
+            .min((cache.min_shard_budget_bytes() / row_bytes).max(1))
             .max(1);
         let mut picks: Vec<usize> = vec![i];
         if batch > 1 {
@@ -571,6 +589,30 @@ mod tests {
         for w in objs.windows(2) {
             assert!(w[1] <= w[0] + 1e-9, "{objs:?}");
         }
+    }
+
+    /// Segmented and unsegmented subset views must produce bit-identical
+    /// solves (same iterates — kernel entries are pure elementwise
+    /// functions), while the segmented solve evaluates strictly fewer
+    /// kernel entries (cluster-length rows instead of full rows).
+    #[test]
+    fn segmented_view_solve_matches_unsegmented_bitwise() {
+        let mut rng = Pcg64::new(18);
+        let ds = generate(&covtype_like(), 140, &mut rng);
+        let k = kernel();
+        let members: Vec<usize> = (0..ds.len()).filter(|i| i % 4 != 1).collect();
+        let ctx_seg = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
+        let ctx_v1 = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
+        let seg = SmoSolver::new(ctx_seg.view(&members), cfg(2.0, 1e-7)).solve();
+        let v1 = SmoSolver::new(ctx_v1.view_unsegmented(&members), cfg(2.0, 1e-7)).solve();
+        assert_eq!(seg.iterations, v1.iterations);
+        assert_eq!(seg.alpha, v1.alpha, "segment rows changed the trajectory");
+        assert!(
+            seg.values_computed < v1.values_computed,
+            "segmented solve computed {} kernel values, unsegmented {}",
+            seg.values_computed,
+            v1.values_computed
+        );
     }
 
     /// A subset view solve must agree exactly with solving the materialized

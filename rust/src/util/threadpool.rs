@@ -82,7 +82,7 @@ where
     if n == 0 {
         return;
     }
-    let chunk = ((n + threads - 1) / threads).max(min_chunk.max(1));
+    let chunk = n.div_ceil(threads).max(min_chunk.max(1));
     let ranges: Vec<_> = (0..n)
         .step_by(chunk)
         .map(|lo| lo..(lo + chunk).min(n))
@@ -185,7 +185,7 @@ impl<T> WorkQueue<T> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.lock().unwrap().items.is_empty()
     }
 }
 

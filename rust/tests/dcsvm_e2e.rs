@@ -8,6 +8,7 @@ use dcsvm::dcsvm::{train, DcSvmConfig};
 use dcsvm::kernel::{native::NativeKernel, KernelKind};
 use dcsvm::kmeans::{off_diagonal_mass, two_step_partition, Partition};
 use dcsvm::metrics::objective_of;
+use dcsvm::predict::SvmModel;
 use dcsvm::solver::{solve_svm, SmoConfig, SmoSolver};
 use dcsvm::util::prng::Pcg64;
 
@@ -203,9 +204,11 @@ fn lower_levels_identify_svs() {
 }
 
 /// Regression (ISSUE satellite): the conquer solve must start with the
-/// divide/refine phases' kernel rows already resident in the run's shared
-/// context, so it computes strictly fewer rows than the *same* warm-started
-/// solve on a cold cache (the old per-solve cold-cache path).
+/// divide/refine phases' kernel values already resident in the run's
+/// shared context — its full rows are *stitched* from the cached cluster
+/// segments — so it evaluates strictly fewer kernel entries than the
+/// *same* warm-started solve on a cold cache (the old per-solve
+/// cold-cache path).
 #[test]
 fn shared_context_prewarms_conquer_solve() {
     let (tr, _) = generate_split(&covtype_like(), 700, 100, 9);
@@ -239,14 +242,62 @@ fn shared_context_prewarms_conquer_solve() {
         dc.final_iterations, cold.iterations,
         "cache state must not change the solve trajectory"
     );
-    // ...but the shared-context conquer solve found its rows resident.
-    assert!(cold.rows_computed > 0, "cold final solve computed no rows");
+    // ...but the shared-context conquer solve stitched divide/refine
+    // segment values instead of recomputing them.
+    assert!(cold.values_computed > 0, "cold final solve computed no values");
     assert!(
-        dc.final_rows_computed < cold.rows_computed,
-        "shared-context final solve computed {} rows, cold-cache {}",
-        dc.final_rows_computed,
-        cold.rows_computed
+        dc.final_values_computed < cold.values_computed,
+        "shared-context final solve computed {} kernel values, cold-cache {}",
+        dc.final_values_computed,
+        cold.values_computed
     );
+    assert!(dc.stitched_values > 0, "conquer solve never stitched a segment");
     // The run saw real cross-phase reuse overall.
     assert!(dc.cache_hits > 0);
+}
+
+/// Acceptance regression (ISSUE): with cluster-aligned segments the divide
+/// phase computes ≥ 2× fewer kernel values at k ≥ 4 than the full-row
+/// baseline (`segment_views = false`), with bit-identical final α and
+/// bit-identical test decisions.
+#[test]
+fn divide_phase_segment_savings_at_k4() {
+    let (tr, te) = generate_split(&covtype_like(), 800, 150, 11);
+    let kern = NativeKernel::new(kind());
+    let mut cfg = DcSvmConfig {
+        kind: kind(),
+        c: 4.0,
+        levels: 2, // k = 16 then k = 4 — both levels ≥ 4 clusters
+        k_base: 4,
+        sample_m: 96,
+        eps_sub: 1e-3,
+        eps_final: 1e-5,
+        ..Default::default()
+    };
+    cfg.segment_views = true;
+    let seg = train(&tr, &kern, &cfg);
+    cfg.segment_views = false;
+    let full = train(&tr, &kern, &cfg);
+
+    // Bit-identical solution and decisions: segment rows hold the exact
+    // same kernel values full rows do, so the solver trajectory is
+    // unchanged.
+    assert_eq!(seg.alpha, full.alpha, "segmented divide changed the final α");
+    assert_eq!(seg.final_iterations, full.final_iterations);
+    let m_seg = SvmModel::from_alpha(&tr, &seg.alpha, kind());
+    let m_full = SvmModel::from_alpha(&tr, &full.alpha, kind());
+    let norms = te.sq_norms();
+    let dv_seg = m_seg.decision_batch(&te.x, &norms, &kern);
+    let dv_full = m_full.decision_batch(&te.x, &norms, &kern);
+    assert_eq!(dv_seg, dv_full, "test decisions differ");
+
+    // ≥ 2× divide-phase kernel-value savings (counter-based).
+    assert!(seg.segment_rows_computed > 0, "no segment rows computed");
+    assert_eq!(full.segment_rows_computed, 0, "baseline must not use segments");
+    assert!(
+        full.divide_values_computed >= 2 * seg.divide_values_computed,
+        "divide-phase values: segmented {} vs full-row {} (< 2× saving)",
+        seg.divide_values_computed,
+        full.divide_values_computed
+    );
 }

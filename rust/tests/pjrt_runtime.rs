@@ -2,10 +2,10 @@
 //! (which is itself verified against the scalar formulas and, through the
 //! python tests, against the pure-jnp oracle). Skips gracefully when
 //! `artifacts/` has not been built (`make artifacts`). The whole file is
-//! gated on the `pjrt` feature — without it the runtime is a stub that can
-//! never load artifacts.
+//! gated on the real runtime (`pjrt` + `pjrt-xla`) — with either feature
+//! missing the runtime is a stub that can never load artifacts.
 
-#![cfg(feature = "pjrt")]
+#![cfg(all(feature = "pjrt", feature = "pjrt-xla"))]
 
 use dcsvm::kernel::{native::NativeKernel, BlockKernel, KernelKind};
 use dcsvm::runtime::{Engine, PjrtKernel};

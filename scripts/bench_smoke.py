@@ -1,0 +1,188 @@
+#!/usr/bin/env python3
+"""CI perf-smoke: train + serve a small synthetic workload, emit BENCH_ci.json.
+
+Runs the built `dcsvm` binary through the same harness path users hit:
+
+1. `dcsvm train --algo dcsvm ... --save-model model.json` with
+   `DCSVM_RESULTS_DIR` set, so the harness appends its structured
+   `{config, outcome}` record to `results.jsonl`.
+2. `dcsvm serve --model model.json` over stdio, replaying one LIBSVM batch
+   twice: the first per-batch stats line is the cold profile, the second
+   must be fully warm (`rows_computed == 0`).
+
+The script then assembles BENCH_ci.json:
+
+    {
+      "train": {"wall_s", "train_s", "accuracy", "cache_hit_rate",
+                "final_rows", "segment_rows", "divide_values",
+                "stitched_values", ...},
+      "serve": {"cold": {...}, "warm": {...}}
+    }
+
+and exits non-zero if any REQUIRED counter is missing or null — a CI guard
+that the instrumentation the perf trajectory depends on never silently
+disappears.
+
+Usage: bench_smoke.py [--binary target/release/dcsvm] [--out BENCH_ci.json]
+"""
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+# Outcome fields BENCH_ci.json must carry, and that must be non-null for an
+# exact DC-SVM run (see rust/src/harness Outcome::to_json).
+REQUIRED_TRAIN = [
+    "train_s",
+    "accuracy",
+    "cache_hit_rate",
+    "final_rows",
+    "segment_rows",
+    "divide_values",
+    "stitched_values",
+]
+# Per-batch serving stats fields (see rust/src/serving BatchStats::to_json).
+REQUIRED_SERVE = ["rows", "latency_ms", "cache_hits", "cache_misses", "rows_computed", "hit_rate"]
+
+TRAIN_FLAGS = [
+    "--algo", "dcsvm",
+    "--dataset", "covtype-like",
+    "--n-train", "600",
+    "--n-test", "150",
+    "--gamma", "16",
+    "--c", "4",
+    "--levels", "2",
+    "--k-base", "4",
+    "--sample-m", "64",
+    "--backend", "native",
+    "--seed", "0",
+]
+
+
+def fail(msg: str) -> None:
+    print(f"bench_smoke: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def run(cmd, **kw):
+    print("bench_smoke: $", " ".join(cmd), file=sys.stderr)
+    return subprocess.run(cmd, check=False, **kw)
+
+
+def require(obj: dict, keys, what: str) -> dict:
+    out = {}
+    for k in keys:
+        if k not in obj or obj[k] is None:
+            fail(f"{what}: required counter '{k}' missing or null in {json.dumps(obj)[:400]}")
+        out[k] = obj[k]
+    return out
+
+
+def libsvm_batch(dim: int, rows: int) -> str:
+    """Deterministic synthetic LIBSVM rows (values only feed the kernel)."""
+    lines = []
+    for r in range(rows):
+        feats = " ".join(f"{j + 1}:{((r * 31 + j * 7) % 19 - 9) / 10.0:.1f}" for j in range(dim))
+        lines.append(f"{1 if r % 2 == 0 else -1} {feats}")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--binary", default="target/release/dcsvm")
+    ap.add_argument("--out", default="BENCH_ci.json")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.binary):
+        fail(f"binary not found: {args.binary} (run `cargo build --release` first)")
+
+    workdir = tempfile.mkdtemp(prefix="dcsvm_bench_smoke_")
+    results_dir = os.path.join(workdir, "results")
+    model_path = os.path.join(workdir, "model.json")
+    env = dict(os.environ, DCSVM_RESULTS_DIR=results_dir, DCSVM_THREADS="2")
+
+    # ---- train (harness path; records results.jsonl) ---------------------
+    t0 = time.monotonic()
+    p = run(
+        [args.binary, "train", *TRAIN_FLAGS, "--save-model", model_path],
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+    wall_s = time.monotonic() - t0
+    if p.returncode != 0:
+        fail(f"train exited {p.returncode}\nstdout:\n{p.stdout}\nstderr:\n{p.stderr}")
+
+    results_path = os.path.join(results_dir, "results.jsonl")
+    if not os.path.exists(results_path):
+        fail(f"DCSVM_RESULTS_DIR produced no {results_path}")
+    with open(results_path, encoding="utf-8") as f:
+        records = [json.loads(line) for line in f if line.strip()]
+    if not records:
+        fail("results.jsonl is empty")
+    outcome = records[-1].get("outcome")
+    if not isinstance(outcome, dict):
+        fail("results.jsonl record carries no outcome object")
+    train_stats = require(outcome, REQUIRED_TRAIN, "train outcome")
+    train_stats["wall_s"] = round(wall_s, 3)
+    train_stats["algo"] = outcome.get("algo")
+    train_stats["svs"] = outcome.get("svs")
+    train_stats["objective"] = outcome.get("objective")
+
+    # ---- serve (stdio transport; cold batch then warm replay) ------------
+    with open(model_path, encoding="utf-8") as f:
+        dim = json.load(f).get("dim")
+    if not isinstance(dim, int) or dim <= 0:
+        fail(f"model.json has no usable dim (got {dim!r})")
+    batch = libsvm_batch(dim, 64)
+    p = run(
+        [args.binary, "serve", "--model", model_path, "--batch", "64", "--workers", "2",
+         "--backend", "native"],
+        env=env,
+        input=batch + batch,  # same 64-row batch twice: cold, then warm
+        capture_output=True,
+        text=True,
+    )
+    if p.returncode != 0:
+        fail(f"serve exited {p.returncode}\nstderr:\n{p.stderr}")
+    stats_lines = []
+    for line in p.stderr.splitlines():
+        line = line.strip()
+        if not line.startswith("{"):
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if "batch" in obj and "rows" in obj:
+            stats_lines.append(obj)
+    if len(stats_lines) < 2:
+        fail(f"expected 2 per-batch stats lines on stderr, got {len(stats_lines)}:\n{p.stderr}")
+    cold = require(stats_lines[0], REQUIRED_SERVE, "cold serve batch")
+    warm = require(stats_lines[1], REQUIRED_SERVE, "warm serve batch")
+    if warm["rows_computed"] != 0:
+        fail(f"warm replay computed {warm['rows_computed']} rows; cross-request cache broken")
+    if cold["rows_computed"] <= 0:
+        fail("cold batch computed no rows; stats are not being recorded")
+
+    bench = {
+        "suite": "ci-perf-smoke",
+        "dataset": "covtype-like",
+        "train": train_stats,
+        "serve": {"cold": cold, "warm": warm},
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench_smoke: OK -> {args.out}", file=sys.stderr)
+    print(json.dumps(bench, indent=2, sort_keys=True))
+    shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()
