@@ -1,7 +1,7 @@
 # Repo task runner. `make verify` is the tier-1 gate plus the lint and doc
 # gates (mirrors ci.yml for environments without GitHub Actions).
 
-.PHONY: verify fmt test build clippy doc linkcheck bench-smoke artifacts
+.PHONY: verify fmt test build clippy doc linkcheck bench-smoke bench-diff artifacts
 
 verify: build test clippy doc linkcheck
 
@@ -33,6 +33,16 @@ fmt:
 # CI `bench-smoke` job).
 bench-smoke: build
 	python3 scripts/bench_smoke.py --binary target/release/dcsvm --out BENCH_ci.json
+
+# Thread-invariance check: bench_smoke at 1 and 2 threads must emit
+# bit-identical serve decisions (mirrors the CI `bench-smoke` job's
+# verification step; `bench_diff.py diff` runs in CI against the previous
+# run's cached artifact).
+bench-diff: build
+	python3 scripts/bench_smoke.py --binary target/release/dcsvm --out BENCH_ci.json --threads 2
+	python3 scripts/bench_smoke.py --binary target/release/dcsvm --out BENCH_ci_t1.json --threads 1
+	python3 scripts/bench_diff.py identical BENCH_ci_t1.json BENCH_ci.json \
+	  --fields serve.decisions train.accuracy train.svs train.objective
 
 # AOT-compile the Pallas/XLA kernel artifacts (requires the python/ stack;
 # the Rust side runs on the native backend without them).

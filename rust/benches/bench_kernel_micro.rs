@@ -6,6 +6,7 @@ use dcsvm::bench::{banner, fmt_secs, time_fn, Table};
 use dcsvm::harness;
 use dcsvm::kernel::{native::NativeKernel, BlockKernel, KernelKind};
 use dcsvm::util::prng::Pcg64;
+use dcsvm::util::threadpool::default_threads;
 
 fn rand_rows(rng: &mut Pcg64, n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
     let x: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
@@ -71,4 +72,45 @@ fn main() {
          amortizes and the same HLO maps to MXU tiles on a real TPU \
          (DESIGN.md §Hardware-Adaptation)."
     );
+
+    // ---- ISSUE satellite: 1-thread vs N-thread row-panel dispatch -------
+    // Large blocks fan out over output-row panels (`block_par`); results
+    // are bit-identical (verified per shape below), only wall time moves.
+    // Expected: ≥1.5× at 4 threads on the large shapes (machine-dependent;
+    // tiny shapes stay below the parallel threshold and report 1.00x).
+    let threads = default_threads().clamp(4, 8);
+    banner(
+        "thread scaling",
+        "native block dispatch, 1 thread vs row-panel parallel (bit-identical)",
+    );
+    let th_header = format!("{threads} threads");
+    let mut ts = Table::new(&["nq x nd x d", "1 thread", &th_header, "speedup"]);
+    for &(nq, nd, d) in &[
+        (64usize, 2000usize, 54usize), // batched warm prefetch
+        (256, 4096, 128),              // bulk kmeans/predict shape
+        (512, 8192, 54),               // large bulk
+        (1024, 8192, 128),             // saturating block
+    ] {
+        let (xq, qn) = rand_rows(&mut rng, nq, d);
+        let (xd, dn) = rand_rows(&mut rng, nd, d);
+        let mut serial = vec![0f32; nq * nd];
+        let mut par = vec![0f32; nq * nd];
+        let one = time_fn(1, 3, || {
+            native.block_par(&xq, &qn, &xd, &dn, d, 1, &mut serial);
+        });
+        let many = time_fn(1, 3, || {
+            native.block_par(&xq, &qn, &xd, &dn, d, threads, &mut par);
+        });
+        assert!(
+            serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "block_par not bit-identical at {nq}x{nd}x{d}"
+        );
+        ts.row(&[
+            format!("{nq}x{nd}x{d}"),
+            fmt_secs(one.median_s),
+            fmt_secs(many.median_s),
+            format!("{:.2}x", one.median_s / many.median_s),
+        ]);
+    }
+    ts.print();
 }

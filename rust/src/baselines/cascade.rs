@@ -63,7 +63,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> Cas
     let t0 = Instant::now();
     let n = ds.len();
     let mut rng = Pcg64::new(cfg.seed);
-    let ctx = KernelContext::new(ds, kernel, cfg.cache_bytes);
+    let ctx = KernelContext::new(ds, kernel, cfg.cache_bytes).with_threads(cfg.threads);
 
     // Random leaf shards.
     let mut perm: Vec<usize> = (0..n).collect();
@@ -93,7 +93,14 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> Cas
         let results: Vec<(Vec<usize>, Vec<f64>)> = {
             let alpha_ref = &alpha;
             let ctx_ref = &ctx;
-            scope_map(cfg.threads, std::mem::take(&mut groups), |_, members| {
+            let jobs = std::mem::take(&mut groups);
+            // Concurrent group solvers split the dispatch thread budget
+            // (same guard as dcsvm::train — uncapped nesting would put
+            // threads² workers on the machine); the final single-group
+            // pass gets the whole budget.
+            let concurrent = cfg.threads.min(jobs.len()).max(1);
+            ctx.set_threads((cfg.threads / concurrent).max(1));
+            scope_map(cfg.threads, jobs, |_, members| {
                 let a0: Vec<f64> = members.iter().map(|&i| alpha_ref[i]).collect();
                 let warm = a0.iter().any(|&a| a != 0.0);
                 // Unsegmented (full-row, global-keyed) views on purpose:
@@ -111,6 +118,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &CascadeConfig) -> Cas
                 (members, res.alpha)
             })
         };
+        ctx.set_threads(cfg.threads);
         // keep only SVs of each group
         let mut sv_groups: Vec<Vec<usize>> = Vec::with_capacity(results.len());
         alpha.iter_mut().for_each(|a| *a = 0.0);

@@ -35,19 +35,40 @@
 //! `dcsvm_e2e` proves the segmented divide computes ≥2× fewer kernel
 //! values at k ≥ 4 with bit-identical final α.
 //!
+//! **Grouped stitching.** Warm prefetches ([`KernelContext::compute_rows`])
+//! group the stitchable rows by *segment-coverage pattern*: rows whose
+//! resident partial entries come from the same segment set share one
+//! uncovered-column list, so one gathered dispatch fills the whole group
+//! instead of one dispatch per row ([`ValueStats::stitch_groups`] vs
+//! [`ValueStats::stitched_rows`] quantifies the collapse).
+//!
 //! Batched dispatch lives here too: the PJRT backend pays a fixed per-call
 //! cost, so the solver's row prefetch, kernel-kmeans assignment and batch
-//! prediction all funnel multi-row requests into single backend calls.
-//! [`ValueStats`] counts every kernel entry the context computes, copies
-//! via stitching, or is told about ([`KernelContext::count_external_values`]
-//! — kmeans/predict block passes), feeding the `segment_rows` /
-//! `divide_values` fields of the harness `Outcome` and `BENCH_ci.json`.
+//! prediction all funnel multi-row requests into single backend calls — and
+//! large native dispatches fan out over row panels
+//! ([`crate::kernel::BlockKernel::block_par`]) across the context's
+//! [`KernelContext::threads`] budget, bit-identically to the
+//! single-threaded sweep. [`ValueStats`] counts every kernel entry the
+//! context computes, copies via stitching, or is told about
+//! ([`KernelContext::count_external_values`] — kmeans/predict block
+//! passes), feeding the `segment_rows` / `divide_values` /
+//! `parallel_dispatches` / `stitch_groups` fields of the harness `Outcome`
+//! and `BENCH_ci.json`.
+//!
+//! **Registry GC.** Partial segments keep a gathered copy of their column
+//! features for contiguous dispatch; [`KernelContext::with_registry_cap`]
+//! bounds those bytes — once a level is solved and the next level's
+//! registrations push past the cap, the oldest segments' gathered copies
+//! are dropped (column lists are always retained, so stitching is
+//! unaffected) and transparently re-gathered if ever needed again.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::Dataset;
 use crate::kernel::{BlockKernel, KernelKind};
+use crate::util::threadpool::default_threads;
 
 use super::sharded::{CacheStats, ShardedRowCache};
 
@@ -71,17 +92,32 @@ fn seg_key(seg: u32, row: usize) -> u64 {
     ((seg as u64) << 40) | row as u64
 }
 
+/// Gathered column features (`[len, dim]`) + norms of a partial segment:
+/// the contiguous operand of segment-row dispatches. Handed out as an
+/// `Arc` so the registry GC can drop its copy while in-flight dispatches
+/// finish on theirs.
+struct GatheredCols {
+    xs: Vec<f32>,
+    norms: Vec<f32>,
+}
+
+impl GatheredCols {
+    fn bytes(&self) -> usize {
+        (self.xs.len() + self.norms.len()) * 4
+    }
+}
+
 /// A registered column set: the unit of kernel-cache granularity.
 pub struct SegmentData {
     id: u32,
     /// Global column indices (distinct, aligned with the owning view's
-    /// local order); `None` = the full span `0..n`.
+    /// local order); `None` = the full span `0..n`. Always retained — the
+    /// stitching paths only need the column lists.
     cols: Option<Vec<usize>>,
-    /// Gathered column features `[len, dim]` (`None` for the full span —
-    /// the dataset matrix is used directly).
-    xs: Option<Vec<f32>>,
-    /// Gathered column norms (`None` for the full span).
-    norms: Option<Vec<f32>>,
+    /// Gathered column features + norms (`None` for the full span — the
+    /// dataset matrix is used directly — or after the registry GC dropped
+    /// them; re-gathered on demand).
+    gathered: Mutex<Option<Arc<GatheredCols>>>,
     /// Column count (cached; `ds.len()` for the full span).
     len: usize,
 }
@@ -104,10 +140,26 @@ impl SegmentData {
     pub fn is_full(&self) -> bool {
         self.cols.is_none()
     }
+
+    /// Whether the gathered feature copy is currently resident (tests /
+    /// diagnostics; the full span never gathers).
+    pub fn has_gathered(&self) -> bool {
+        self.gathered.lock().unwrap().is_some()
+    }
+
+    /// Drop the gathered feature copy (registry GC); returns the bytes
+    /// released (0 if already dropped or full-span). Column lists stay.
+    fn release_gathered(&self) -> usize {
+        self.gathered.lock().unwrap().take().map(|g| g.bytes()).unwrap_or(0)
+    }
 }
 
 /// Shared handle to a registered segment.
 pub type SegmentRef = Arc<SegmentData>;
+
+/// One stitchable row in a coverage group: its global index plus its
+/// pinned `(index into partials, entry)` pairs.
+type StitchRow = (usize, Vec<(usize, Arc<[f32]>)>);
 
 /// Kernel-value accounting of one context: entries computed by backend
 /// dispatches, entries reused by full-row stitching, and partial/full rows
@@ -124,6 +176,14 @@ pub struct ValueStats {
     pub segment_rows: u64,
     /// Full-span rows materialized (computed or stitched).
     pub full_rows: u64,
+    /// Full rows assembled by stitching (≥1 covered column copied).
+    pub stitched_rows: u64,
+    /// Gathered stitch-fill dispatches: the per-row path pays one per
+    /// stitched row, the grouped prefetch path one per coverage group —
+    /// `stitch_groups < stitched_rows` is the batching win.
+    pub stitch_groups: u64,
+    /// Backend dispatches that fanned out over row panels (> 1 worker).
+    pub parallel_dispatches: u64,
 }
 
 impl ValueStats {
@@ -134,6 +194,11 @@ impl ValueStats {
             values_stitched: self.values_stitched.saturating_sub(earlier.values_stitched),
             segment_rows: self.segment_rows.saturating_sub(earlier.segment_rows),
             full_rows: self.full_rows.saturating_sub(earlier.full_rows),
+            stitched_rows: self.stitched_rows.saturating_sub(earlier.stitched_rows),
+            stitch_groups: self.stitch_groups.saturating_sub(earlier.stitch_groups),
+            parallel_dispatches: self
+                .parallel_dispatches
+                .saturating_sub(earlier.parallel_dispatches),
         }
     }
 }
@@ -144,6 +209,9 @@ struct ValueCounters {
     values_stitched: AtomicU64,
     segment_rows: AtomicU64,
     full_rows: AtomicU64,
+    stitched_rows: AtomicU64,
+    stitch_groups: AtomicU64,
+    parallel_dispatches: AtomicU64,
 }
 
 /// Kernel-access context for one dataset: rows, norms, backend, shared
@@ -156,6 +224,18 @@ pub struct KernelContext<'a> {
     /// Registered segments; index = id; `[0]` is always the full span.
     segments: Mutex<Vec<SegmentRef>>,
     counters: ValueCounters,
+    /// Worker budget for row-panel-parallel backend dispatches
+    /// ([`crate::kernel::BlockKernel::block_par`]); 1 = always serial.
+    /// Atomic so phases that already run concurrent solvers can shrink the
+    /// per-dispatch share for their duration ([`Self::set_threads`]).
+    threads: AtomicUsize,
+    /// Byte cap on gathered segment features (0 = unlimited).
+    registry_cap: usize,
+    /// Gathered segment-feature bytes currently resident / their peak.
+    registry_bytes: AtomicUsize,
+    registry_peak: AtomicUsize,
+    /// Segments whose gathered features were dropped and rebuilt on demand.
+    regathers: AtomicU64,
 }
 
 impl<'a> KernelContext<'a> {
@@ -176,8 +256,7 @@ impl<'a> KernelContext<'a> {
         let full: SegmentRef = Arc::new(SegmentData {
             id: FULL_SEGMENT,
             cols: None,
-            xs: None,
-            norms: None,
+            gathered: Mutex::new(None),
             len: ds.len(),
         });
         KernelContext {
@@ -187,7 +266,60 @@ impl<'a> KernelContext<'a> {
             cache,
             segments: Mutex::new(vec![full]),
             counters: ValueCounters::default(),
+            threads: AtomicUsize::new(default_threads()),
+            registry_cap: 0,
+            registry_bytes: AtomicUsize::new(0),
+            registry_peak: AtomicUsize::new(0),
+            regathers: AtomicU64::new(0),
         }
+    }
+
+    /// Set the worker budget for row-panel-parallel dispatches (defaults
+    /// to [`default_threads`]; 1 keeps every dispatch single-threaded).
+    /// Dispatch results are bit-identical for every value.
+    pub fn with_threads(self, threads: usize) -> Self {
+        self.set_threads(threads);
+        self
+    }
+
+    /// Retarget the dispatch worker budget mid-run: a phase that runs N
+    /// solvers concurrently shrinks the per-dispatch share to
+    /// `budget / N` for its duration so nesting cannot put `threads²`
+    /// workers on the machine (dispatch results are bit-identical for
+    /// every value — only wall-clock moves).
+    pub fn set_threads(&self, threads: usize) {
+        self.threads.store(threads.max(1), Ordering::Relaxed);
+    }
+
+    /// The context's parallel-dispatch worker budget.
+    pub fn threads(&self) -> usize {
+        self.threads.load(Ordering::Relaxed)
+    }
+
+    /// Cap the bytes held by gathered segment features (0 = unlimited,
+    /// the default). When a registration pushes past the cap, the oldest
+    /// partial segments' gathered copies are dropped — their column lists
+    /// stay, so stitching is unaffected and a later dispatch re-gathers
+    /// transparently (counted by [`Self::segment_regathers`]).
+    pub fn with_registry_cap(mut self, bytes: usize) -> Self {
+        self.registry_cap = bytes;
+        self
+    }
+
+    /// Gathered segment-feature bytes currently resident.
+    pub fn registry_bytes(&self) -> usize {
+        self.registry_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Peak of [`Self::registry_bytes`] over the context's lifetime (the
+    /// `registry_bytes` counter of the harness `Outcome`).
+    pub fn registry_peak_bytes(&self) -> usize {
+        self.registry_peak.load(Ordering::Relaxed)
+    }
+
+    /// How many times a GC-dropped segment had to re-gather its features.
+    pub fn segment_regathers(&self) -> u64 {
+        self.regathers.load(Ordering::Relaxed)
     }
 
     pub fn ds(&self) -> &'a Dataset {
@@ -252,29 +384,131 @@ impl<'a> KernelContext<'a> {
         debug_assert!(cols.iter().all(|&c| c < self.ds.len()));
         let identity =
             cols.len() == self.ds.len() && cols.iter().enumerate().all(|(t, &c)| t == c);
-        let mut reg = self.segments.lock().unwrap();
-        if identity {
-            return Arc::clone(&reg[0]);
-        }
-        if let Some(existing) = reg.iter().find(|s| s.cols.as_deref() == Some(cols)) {
-            return Arc::clone(existing);
-        }
+        let seg = {
+            let mut reg = self.segments.lock().unwrap();
+            if identity {
+                return Arc::clone(&reg[0]);
+            }
+            if let Some(existing) = reg.iter().find(|s| s.cols.as_deref() == Some(cols)) {
+                return Arc::clone(existing);
+            }
+            let gathered = self.gather_cols(cols);
+            self.add_registry_bytes(gathered.bytes());
+            let seg: SegmentRef = Arc::new(SegmentData {
+                id: reg.len() as u32,
+                cols: Some(cols.to_vec()),
+                gathered: Mutex::new(Some(Arc::new(gathered))),
+                len: cols.len(),
+            });
+            reg.push(Arc::clone(&seg));
+            seg
+        };
+        self.enforce_registry_cap(seg.id);
+        seg
+    }
+
+    /// Gather the features + norms of `cols` into contiguous buffers.
+    fn gather_cols(&self, cols: &[usize]) -> GatheredCols {
         let dim = self.ds.dim;
         let mut xs = Vec::with_capacity(cols.len() * dim);
-        let mut cnorms = Vec::with_capacity(cols.len());
+        let mut norms = Vec::with_capacity(cols.len());
         for &c in cols {
             xs.extend_from_slice(self.ds.row(c));
-            cnorms.push(self.norms[c]);
+            norms.push(self.norms[c]);
         }
-        let seg: SegmentRef = Arc::new(SegmentData {
-            id: reg.len() as u32,
-            cols: Some(cols.to_vec()),
-            xs: Some(xs),
-            norms: Some(cnorms),
-            len: cols.len(),
-        });
-        reg.push(Arc::clone(&seg));
-        seg
+        GatheredCols { xs, norms }
+    }
+
+    fn add_registry_bytes(&self, bytes: usize) {
+        let now = self.registry_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.registry_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// The gathered columns of a partial segment, rebuilding them if the
+    /// registry GC dropped the copy. The returned handle stays valid even
+    /// if a concurrent GC drops the registry's copy mid-dispatch.
+    fn gathered(&self, seg: &SegmentData) -> Arc<GatheredCols> {
+        let cols = seg.cols.as_ref().expect("partial segment has columns");
+        let g = {
+            let mut slot = seg.gathered.lock().unwrap();
+            if let Some(g) = slot.as_ref() {
+                return Arc::clone(g);
+            }
+            let g = Arc::new(self.gather_cols(cols));
+            self.add_registry_bytes(g.bytes());
+            self.regathers.fetch_add(1, Ordering::Relaxed);
+            *slot = Some(Arc::clone(&g));
+            g
+        };
+        self.enforce_registry_cap(seg.id);
+        g
+    }
+
+    /// Drop gathered feature copies, oldest segment first, until the
+    /// registry fits its cap. Oldest-first is the solved-level order: the
+    /// divide phase registers one generation of segments per level, so by
+    /// the time a new level's registrations overflow the cap, the oldest
+    /// generations are already solved. `keep` (the segment that triggered
+    /// enforcement) is never dropped.
+    fn enforce_registry_cap(&self, keep: u32) {
+        if self.registry_cap == 0
+            || self.registry_bytes.load(Ordering::Relaxed) <= self.registry_cap
+        {
+            return;
+        }
+        let candidates: Vec<SegmentRef> = {
+            let reg = self.segments.lock().unwrap();
+            reg.iter().skip(1).filter(|s| s.id != keep).cloned().collect()
+        };
+        for seg in candidates {
+            if self.registry_bytes.load(Ordering::Relaxed) <= self.registry_cap {
+                break;
+            }
+            let freed = seg.release_gathered();
+            if freed > 0 {
+                self.registry_bytes.fetch_sub(freed, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Backend block dispatch through the context's thread budget: large
+    /// blocks fan out over row panels (bit-identically), and the fan-out
+    /// is counted in [`ValueStats::parallel_dispatches`]. Shapes are the
+    /// caller's — kmeans assignment and prediction passes use this with
+    /// their own operand matrices.
+    pub fn block_dispatch(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let used = self.kernel.block_par(xq, q_norms, xd, d_norms, dim, self.threads(), out);
+        if used > 1 {
+            self.counters.parallel_dispatches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fused decision dispatch through the context's thread budget (the
+    /// batch-prediction analogue of [`Self::block_dispatch`]).
+    #[allow(clippy::too_many_arguments)] // flat block ABI; see BlockKernel
+    pub fn decision_dispatch(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        coef: &[f32],
+        out: &mut [f32],
+    ) {
+        let used =
+            self.kernel.decision_par(xq, q_norms, xd, d_norms, dim, coef, self.threads(), out);
+        if used > 1 {
+            self.counters.parallel_dispatches.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Registered segments including the full span (diagnostics/tests).
@@ -294,14 +528,13 @@ impl<'a> KernelContext<'a> {
         if seg.is_full() {
             return self.row(i);
         }
-        let xs = seg.xs.as_ref().expect("partial segment has gathered columns");
-        let snorms = seg.norms.as_ref().expect("partial segment has gathered norms");
+        let g = self.gathered(seg);
         self.cache.get_or_compute(seg_key(seg.id, i), seg.len, |out| {
             self.kernel.block(
                 self.ds.row(i),
                 &self.norms[i..i + 1],
-                xs,
-                snorms,
+                &g.xs,
+                &g.norms,
                 self.ds.dim,
                 out,
             );
@@ -383,6 +616,13 @@ impl<'a> KernelContext<'a> {
             self.counters
                 .values_computed
                 .fetch_add(missing.len() as u64, Ordering::Relaxed);
+            // The per-row path pays one gathered dispatch per stitched row
+            // (a degenerate group); the grouped prefetch path collapses
+            // same-coverage rows into one.
+            self.counters.stitch_groups.fetch_add(1, Ordering::Relaxed);
+        }
+        if covered_n > 0 {
+            self.counters.stitched_rows.fetch_add(1, Ordering::Relaxed);
         }
         self.counters
             .values_stitched
@@ -393,11 +633,16 @@ impl<'a> KernelContext<'a> {
         row
     }
 
-    /// Compute all currently uncached **full-span** rows of `rows`; rows
+    /// Compute all currently uncached **full-span** rows of `rows`. Rows
     /// with no cached partial coverage go into ONE backend dispatch (the
     /// batched prefetch path — on the PJRT backend one call amortizes the
-    /// fixed dispatch cost), rows with partial coverage are stitched
-    /// individually. Returns how many rows were materialized.
+    /// fixed dispatch cost); rows with partial coverage are **grouped by
+    /// segment-coverage pattern** and each group's shared uncovered
+    /// columns are filled in one gathered dispatch (closing the old
+    /// per-row-stitching gap — `stitch_groups` counts the dispatches,
+    /// `stitched_rows` the rows they cover). Large dispatches fan out over
+    /// row panels across [`Self::threads`] workers. Returns how many rows
+    /// were materialized.
     pub fn compute_rows(&self, rows: &[usize]) -> usize {
         let missing: Vec<usize> = rows
             .iter()
@@ -411,18 +656,30 @@ impl<'a> KernelContext<'a> {
             let reg = self.segments.lock().unwrap();
             reg.iter().skip(1).cloned().collect()
         };
-        let has_partial = |p: usize| {
-            partials.iter().any(|s| self.cache.contains(seg_key(s.id, p)))
-        };
-        let (stitchable, cold): (Vec<usize>, Vec<usize>) =
-            missing.iter().copied().partition(|&p| has_partial(p));
-        // Stitchable rows dispatch one gathered block each; on a backend
-        // with per-call overhead (PJRT) a batch of warm rows pays that
-        // cost per row. Batching rows by coverage pattern into shared
-        // dispatches is the known follow-up (ROADMAP); the native backend
-        // — where prefetch batches are size 1 — is unaffected.
-        for &p in &stitchable {
-            self.row(p);
+        // Bucket rows by coverage pattern (the ordered list of segment ids
+        // holding a resident entry for the row). Entry handles are pinned
+        // now so assembly stays valid if the entries are evicted before
+        // their group is processed. BTreeMap keeps group order — and hence
+        // cache-insertion order — deterministic.
+        let mut cold: Vec<usize> = Vec::new();
+        let mut groups: BTreeMap<Vec<u32>, Vec<StitchRow>> = BTreeMap::new();
+        for &p in &missing {
+            let mut pattern: Vec<u32> = Vec::new();
+            let mut parts: Vec<(usize, Arc<[f32]>)> = Vec::new();
+            for (si, seg) in partials.iter().enumerate() {
+                if let Some(entry) = self.cache.get_quiet(seg_key(seg.id, p)) {
+                    pattern.push(seg.id);
+                    parts.push((si, entry));
+                }
+            }
+            if pattern.is_empty() {
+                cold.push(p);
+            } else {
+                groups.entry(pattern).or_default().push((p, parts));
+            }
+        }
+        for group in groups.values() {
+            self.stitch_group(&partials, group);
         }
         if !cold.is_empty() {
             let n = self.ds.len();
@@ -434,7 +691,7 @@ impl<'a> KernelContext<'a> {
                 qn.push(self.norms[p]);
             }
             let mut block = vec![0f32; cold.len() * n];
-            self.kernel.block(&xq, &qn, &self.ds.x, &self.norms, dim, &mut block);
+            self.block_dispatch(&xq, &qn, &self.ds.x, &self.norms, dim, &mut block);
             for (t, &p) in cold.iter().enumerate() {
                 self.cache
                     .insert_computed(seg_key(FULL_SEGMENT, p), &block[t * n..(t + 1) * n]);
@@ -445,6 +702,76 @@ impl<'a> KernelContext<'a> {
             self.counters.full_rows.fetch_add(cold.len() as u64, Ordering::Relaxed);
         }
         missing.len()
+    }
+
+    /// Materialize one coverage group's full rows: the group shares a
+    /// covered-column set, so the uncovered columns are gathered ONCE and
+    /// filled for every row in a single dispatch; covered columns are
+    /// copied from the pinned segment entries in registration order —
+    /// exactly the per-row stitching order, so grouped assembly is
+    /// bit-identical to [`Self::row`]'s.
+    fn stitch_group(&self, partials: &[SegmentRef], group: &[StitchRow]) {
+        let n = self.ds.len();
+        let dim = self.ds.dim;
+        // Resolve the covered columns ONCE from the first row's parts —
+        // the pattern (and hence the winning (part, local-index) per
+        // column under first-writer-wins in registration order) is
+        // identical for every row of the group; each row then just copies
+        // through the plan.
+        let mut covered = vec![false; n];
+        let mut covered_n = 0usize;
+        let mut plan: Vec<(usize, usize, usize)> = Vec::new(); // (col, part, local)
+        for (pi, &(si, _)) in group[0].1.iter().enumerate() {
+            let cols = partials[si].cols.as_ref().expect("partial segment has columns");
+            for (u, &c) in cols.iter().enumerate() {
+                if !covered[c] {
+                    covered[c] = true;
+                    covered_n += 1;
+                    plan.push((c, pi, u));
+                }
+            }
+        }
+        let missing_cols: Vec<usize> = (0..n).filter(|&c| !covered[c]).collect();
+        let m = missing_cols.len();
+        let g = group.len();
+        let mut fills = vec![0f32; g * m];
+        if m > 0 {
+            let mut xs = Vec::with_capacity(m * dim);
+            let mut mnorms = Vec::with_capacity(m);
+            for &c in &missing_cols {
+                xs.extend_from_slice(self.ds.row(c));
+                mnorms.push(self.norms[c]);
+            }
+            let mut xq = Vec::with_capacity(g * dim);
+            let mut qn = Vec::with_capacity(g);
+            for &(p, _) in group {
+                xq.extend_from_slice(self.ds.row(p));
+                qn.push(self.norms[p]);
+            }
+            self.block_dispatch(&xq, &qn, &xs, &mnorms, dim, &mut fills);
+            self.counters.stitch_groups.fetch_add(1, Ordering::Relaxed);
+            self.counters
+                .values_computed
+                .fetch_add((g * m) as u64, Ordering::Relaxed);
+        }
+        for (t, (p, parts)) in group.iter().enumerate() {
+            let mut buf = vec![0f32; n];
+            // The plan IS first-writer-wins in registration order, exactly
+            // like the per-row path (overlapping segments hold identical
+            // values anyway — kernel entries are pure in (x_i, x_j)).
+            for &(c, pi, u) in &plan {
+                buf[c] = parts[pi].1[u];
+            }
+            for (u, &c) in missing_cols.iter().enumerate() {
+                buf[c] = fills[t * m + u];
+            }
+            self.cache.insert_computed(seg_key(FULL_SEGMENT, *p), &buf);
+        }
+        self.counters
+            .values_stitched
+            .fetch_add((covered_n * g) as u64, Ordering::Relaxed);
+        self.counters.stitched_rows.fetch_add(g as u64, Ordering::Relaxed);
+        self.counters.full_rows.fetch_add(g as u64, Ordering::Relaxed);
     }
 
     /// Batch-compute the uncached rows of `seg` for the given global rows
@@ -462,8 +789,7 @@ impl<'a> KernelContext<'a> {
             return 0;
         }
         let dim = self.ds.dim;
-        let xs = seg.xs.as_ref().expect("partial segment has gathered columns");
-        let snorms = seg.norms.as_ref().expect("partial segment has gathered norms");
+        let g = self.gathered(seg);
         let mut xq = Vec::with_capacity(missing.len() * dim);
         let mut qn = Vec::with_capacity(missing.len());
         for &p in &missing {
@@ -471,7 +797,7 @@ impl<'a> KernelContext<'a> {
             qn.push(self.norms[p]);
         }
         let mut block = vec![0f32; missing.len() * seg.len];
-        self.kernel.block(&xq, &qn, xs, snorms, dim, &mut block);
+        self.block_dispatch(&xq, &qn, &g.xs, &g.norms, dim, &mut block);
         for (t, &p) in missing.iter().enumerate() {
             self.cache
                 .insert_computed(seg_key(seg.id, p), &block[t * seg.len..(t + 1) * seg.len]);
@@ -503,6 +829,9 @@ impl<'a> KernelContext<'a> {
             values_stitched: self.counters.values_stitched.load(Ordering::Relaxed),
             segment_rows: self.counters.segment_rows.load(Ordering::Relaxed),
             full_rows: self.counters.full_rows.load(Ordering::Relaxed),
+            stitched_rows: self.counters.stitched_rows.load(Ordering::Relaxed),
+            stitch_groups: self.counters.stitch_groups.load(Ordering::Relaxed),
+            parallel_dispatches: self.counters.parallel_dispatches.load(Ordering::Relaxed),
         }
     }
 
@@ -901,5 +1230,173 @@ mod tests {
         let row = view.local_row(2); // global 15, full-length
         assert_eq!(row.len(), ds.len());
         assert!(ctx.is_row_cached(15));
+    }
+
+    /// Tentpole: warm prefetch groups same-coverage rows into ONE gathered
+    /// dispatch — fewer `stitch_groups` than `stitched_rows` — and grouped
+    /// rows are bit-identical to the per-row stitching path.
+    #[test]
+    fn grouped_stitching_collapses_dispatches_bit_identically() {
+        let (ds, k) = setup(36);
+        let n = ds.len();
+        let grouped = KernelContext::new(&ds, &k, 4 << 20);
+        let perrow = KernelContext::new(&ds, &k, 4 << 20);
+        // Three disjoint column clusters; warm each cluster's own rows so
+        // row i is covered exactly by its cluster's segment.
+        for ctx in [&grouped, &perrow] {
+            for r in 0..3usize {
+                let members: Vec<usize> = (0..n).filter(|i| i % 3 == r).collect();
+                let seg = ctx.register_segment(&members);
+                assert_eq!(ctx.compute_segment_rows(&seg, &members), members.len());
+            }
+        }
+        let all: Vec<usize> = (0..n).collect();
+        assert_eq!(grouped.compute_rows(&all), n);
+        for &p in &all {
+            perrow.row(p); // the old per-row stitching path
+        }
+        for &p in &all {
+            let a = grouped.row(p);
+            let b = perrow.row(p);
+            for j in 0..n {
+                assert_eq!(a[j].to_bits(), b[j].to_bits(), "row {p} col {j}");
+            }
+        }
+        let gv = grouped.value_stats();
+        let pv = perrow.value_stats();
+        assert_eq!(gv.stitched_rows, n as u64);
+        assert_eq!(gv.stitch_groups, 3, "one dispatch per coverage pattern");
+        assert!(gv.stitch_groups < gv.stitched_rows);
+        assert_eq!(pv.stitch_groups, pv.stitched_rows, "per-row = 1 dispatch/row");
+        // Same kernel work either way — grouping only batches it.
+        assert_eq!(gv.values_computed, pv.values_computed);
+        assert_eq!(gv.values_stitched, pv.values_stitched);
+    }
+
+    /// Property (ISSUE satellite): grouped stitching over random segment
+    /// layouts and random warm sets is bit-identical to the per-row path,
+    /// never performs more gathered dispatches than rows stitched, and a
+    /// fully-covered group dispatches nothing.
+    #[test]
+    fn prop_grouped_stitch_matches_per_row_random_subsets() {
+        check("grouped-stitch-bit-identical", 10, |rng: &mut Pcg64| {
+            let n = 16 + rng.below(36);
+            let ds = generate(&covtype_like(), n, rng);
+            let k = NativeKernel::new(KernelKind::Rbf {
+                gamma: (0.5 + 8.0 * rng.next_f64()) as f32,
+            });
+            let grouped = KernelContext::new(&ds, &k, 8 << 20);
+            let perrow = KernelContext::new(&ds, &k, 8 << 20);
+            let nsegs = 1 + rng.below(3);
+            for _ in 0..nsegs {
+                let members: Vec<usize> = (0..n).filter(|_| rng.next_f64() < 0.4).collect();
+                if members.is_empty() || members.len() == n {
+                    continue;
+                }
+                // Warm a random subset of each segment's rows.
+                let warm: Vec<usize> = (0..n).filter(|_| rng.next_f64() < 0.5).collect();
+                for ctx in [&grouped, &perrow] {
+                    let seg = ctx.register_segment(&members);
+                    ctx.compute_segment_rows(&seg, &warm);
+                }
+            }
+            let rows: Vec<usize> = (0..n).filter(|_| rng.next_f64() < 0.7).collect();
+            grouped.compute_rows(&rows);
+            for &p in &rows {
+                perrow.row(p);
+            }
+            for &p in &rows {
+                let a = grouped.row(p);
+                let b = perrow.row(p);
+                for j in 0..n {
+                    prop_assert!(
+                        a[j].to_bits() == b[j].to_bits(),
+                        "row {p} col {j}: {} vs {}",
+                        a[j],
+                        b[j]
+                    );
+                }
+            }
+            let gv = grouped.value_stats();
+            prop_assert!(
+                gv.stitch_groups <= gv.stitched_rows,
+                "groups {} > stitched rows {}",
+                gv.stitch_groups,
+                gv.stitched_rows
+            );
+            prop_assert!(
+                gv.values_computed == perrow.value_stats().values_computed,
+                "grouping changed the kernel work: {} vs {}",
+                gv.values_computed,
+                perrow.value_stats().values_computed
+            );
+            Ok(())
+        });
+    }
+
+    /// Satellite: the registry byte cap drops old segments' gathered
+    /// features (column lists survive for stitching), the peak counter
+    /// records the high-water mark, and a dropped segment transparently
+    /// re-gathers with bit-identical rows.
+    #[test]
+    fn registry_cap_drops_and_regathers_gathered_features() {
+        let (ds, k) = setup(32);
+        let n = ds.len();
+        // Each segment gathers 16 rows × (54 floats + 1 norm) ≈ 3.5 KB;
+        // cap at ~1.5 segments so the third registration must evict.
+        let seg_bytes = 16 * (ds.dim + 1) * 4;
+        let ctx = KernelContext::new(&ds, &k, 4 << 20).with_registry_cap(seg_bytes * 3 / 2);
+        let uncapped = KernelContext::new(&ds, &k, 4 << 20);
+        let halves: Vec<Vec<usize>> = vec![
+            (0..n).filter(|i| i % 2 == 0).collect(),
+            (0..n).filter(|i| i % 2 == 1).collect(),
+            (0..n).filter(|i| i / 2 % 2 == 0).collect(),
+        ];
+        let mut segs = Vec::new();
+        for members in &halves {
+            segs.push((ctx.register_segment(members), uncapped.register_segment(members)));
+        }
+        assert!(
+            ctx.registry_bytes() <= seg_bytes * 3 / 2,
+            "cap violated: {} bytes",
+            ctx.registry_bytes()
+        );
+        assert!(ctx.registry_peak_bytes() >= ctx.registry_bytes());
+        assert!(
+            uncapped.registry_bytes() > ctx.registry_bytes(),
+            "uncapped registry should hold more gathered bytes"
+        );
+        // The oldest segment's gathered copy was dropped, the newest kept.
+        assert!(!segs[0].0.has_gathered(), "oldest segment kept its features");
+        assert!(segs[2].0.has_gathered(), "newest segment lost its features");
+        // A dropped segment still serves rows — re-gather, bit-identical.
+        let row_capped = ctx.segment_row(&segs[0].0, 5);
+        let row_uncapped = uncapped.segment_row(&segs[0].1, 5);
+        assert_eq!(&*row_capped, &*row_uncapped);
+        assert!(ctx.segment_regathers() >= 1, "re-gather not counted");
+        assert_eq!(uncapped.segment_regathers(), 0);
+    }
+
+    /// Large dispatches fan out over row panels (counted), bit-identically
+    /// to a single-threaded context.
+    #[test]
+    fn parallel_dispatch_counted_and_bit_identical() {
+        let (ds, _) = setup(40);
+        let n = ds.len();
+        // Force the parallel path on small blocks.
+        let forced = NativeKernel::with_par_threshold(KernelKind::Rbf { gamma: 8.0 }, 1);
+        let par = KernelContext::new(&ds, &forced, 4 << 20).with_threads(4);
+        let serial = KernelContext::new(&ds, &forced, 4 << 20).with_threads(1);
+        let rows: Vec<usize> = (0..n).collect();
+        assert_eq!(par.compute_rows(&rows), n);
+        assert_eq!(serial.compute_rows(&rows), n);
+        for &p in &rows {
+            assert_eq!(&*par.row(p), &*serial.row(p), "thread count changed row {p}");
+        }
+        assert!(par.value_stats().parallel_dispatches > 0, "fan-out not counted");
+        assert_eq!(serial.value_stats().parallel_dispatches, 0);
+        assert_eq!(par.threads(), 4);
+        assert_eq!(serial.threads(), 1);
+        assert_eq!(par.value_stats().values_computed, serial.value_stats().values_computed);
     }
 }

@@ -103,6 +103,9 @@ pub struct RunConfig {
     /// Segment-granular divide-phase kernel caching (`--segments false`
     /// replays the v1 full-row behavior as an ablation baseline).
     pub segment_views: bool,
+    /// Cap (in MB) on gathered segment features (`--registry-cap-mb`;
+    /// 0 = keep every solved level's gathered copy — the default).
+    pub registry_cap_mb: usize,
     pub save_model: Option<String>,
 }
 
@@ -127,6 +130,7 @@ impl Default for RunConfig {
             backend: "auto".into(),
             budget: 64,
             segment_views: true,
+            registry_cap_mb: 0,
             save_model: None,
         }
     }
@@ -173,6 +177,7 @@ impl RunConfig {
                     other => other.parse()?,
                 }
             }
+            "registry_cap_mb" | "registry-cap-mb" => self.registry_cap_mb = val.parse()?,
             "save_model" | "save-model" => self.save_model = Some(val.to_string()),
             other => bail!("unknown config key '{other}'"),
         }
@@ -219,6 +224,7 @@ impl RunConfig {
             threads: self.threads,
             keep_level_alphas: false,
             segment_views: self.segment_views,
+            registry_cap_bytes: self.registry_cap_mb << 20,
         })
     }
 
@@ -240,6 +246,7 @@ impl RunConfig {
             ("backend", Json::from(self.backend.as_str())),
             ("budget", Json::from(self.budget)),
             ("segments", Json::from(self.segment_views)),
+            ("registry_cap_mb", Json::from(self.registry_cap_mb)),
         ])
     }
 }
@@ -311,6 +318,17 @@ mod tests {
         assert!(cfg.segment_views);
         assert!(cfg.apply("segments", "maybe").is_err());
         assert_eq!(cfg.to_json().get("segments").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn registry_cap_flag_parses_and_flows() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.registry_cap_mb, 0, "registry cap defaults off");
+        cfg.apply("registry-cap-mb", "8").unwrap();
+        assert_eq!(cfg.registry_cap_mb, 8);
+        assert_eq!(cfg.dcsvm_config().unwrap().registry_cap_bytes, 8 << 20);
+        assert_eq!(cfg.to_json().get("registry_cap_mb").as_usize(), Some(8));
+        assert!(cfg.apply("registry_cap_mb", "lots").is_err());
     }
 
     #[test]

@@ -77,6 +77,11 @@ pub struct DcSvmConfig {
     /// kernel rows). `false` replays the v1 full-row behavior — the
     /// ablation baseline; the final α is bit-identical either way.
     pub segment_views: bool,
+    /// Byte cap on the context's gathered segment features (0 =
+    /// unlimited): once a level is solved and the next level's
+    /// registrations push past the cap, the oldest segments drop their
+    /// gathered copies (column lists stay, so stitching is unaffected).
+    pub registry_cap_bytes: usize,
 }
 
 impl Default for DcSvmConfig {
@@ -99,6 +104,7 @@ impl Default for DcSvmConfig {
             threads: default_threads(),
             keep_level_alphas: false,
             segment_views: true,
+            registry_cap_bytes: 0,
         }
     }
 }
@@ -164,6 +170,16 @@ pub struct DcSvmResult {
     pub segment_rows_computed: u64,
     /// Kernel entries reused by full-row stitching over the run.
     pub stitched_values: u64,
+    /// Backend dispatches that fanned out over row panels (> 1 worker).
+    pub parallel_dispatches: u64,
+    /// Gathered stitch-fill dispatches (grouped prefetch collapses many
+    /// stitched rows into one — compare with `stitched_rows` counters in
+    /// the context's `ValueStats`).
+    pub stitch_groups: u64,
+    /// Peak bytes of gathered segment features over the run (the registry
+    /// GC's high-water mark; equals the total gathered bytes when no cap
+    /// is set).
+    pub registry_peak_bytes: u64,
     /// Shared-cache counters over the whole run (note/bench reporting).
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -201,7 +217,9 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
     let n = ds.len();
     let t0 = Instant::now();
     let mut rng = Pcg64::new(cfg.seed);
-    let ctx = KernelContext::new(ds, kernel, cfg.cache_bytes);
+    let ctx = KernelContext::new(ds, kernel, cfg.cache_bytes)
+        .with_threads(cfg.threads)
+        .with_registry_cap(cfg.registry_cap_bytes);
 
     let mut alpha = vec![0f64; n];
     let mut levels = Vec::new();
@@ -235,6 +253,13 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         let scfg = solver_cfg(cfg, cfg.eps_sub, cfg.max_iter_sub, 0);
         let jobs: Vec<Vec<usize>> =
             part.members.iter().filter(|m| !m.is_empty()).cloned().collect();
+        // Concurrent cluster solvers split the dispatch thread budget
+        // between them — solver-level parallelism already occupies those
+        // cores, and uncapped nesting would put threads² workers on the
+        // machine. Refine and final (single solves) get the full budget
+        // back below.
+        let concurrent = cfg.threads.min(jobs.len()).max(1);
+        ctx.set_threads((cfg.threads / concurrent).max(1));
         let alpha_ref = &alpha;
         let ctx_ref = &ctx;
         let segment_views = cfg.segment_views;
@@ -253,6 +278,7 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
                 );
                 (members, res.alpha, res.iterations)
             });
+        ctx.set_threads(cfg.threads);
         let mut sub_iterations = 0usize;
         for (members, sub_alpha, iters) in results {
             sub_iterations += iters;
@@ -314,6 +340,9 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
             divide_values_computed: divide_values,
             segment_rows_computed: vs.segment_rows,
             stitched_values: vs.values_stitched,
+            parallel_dispatches: vs.parallel_dispatches,
+            stitch_groups: vs.stitch_groups,
+            registry_peak_bytes: ctx.registry_peak_bytes() as u64,
             cache_hits: cs.hits,
             cache_misses: cs.misses,
             pre_final_alpha: None,
@@ -379,6 +408,9 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         divide_values_computed: divide_values,
         segment_rows_computed: vs.segment_rows,
         stitched_values: vs.values_stitched,
+        parallel_dispatches: vs.parallel_dispatches,
+        stitch_groups: vs.stitch_groups,
+        registry_peak_bytes: ctx.registry_peak_bytes() as u64,
         cache_hits: cs.hits,
         cache_misses: cs.misses,
         pre_final_alpha,
@@ -493,6 +525,26 @@ mod tests {
         assert!(seg.segment_rows_computed > 0, "no segment rows recorded");
         assert_eq!(full.segment_rows_computed, 0, "baseline must not use segments");
         assert!(seg.stitched_values > 0, "final solve never stitched");
+    }
+
+    /// Satellite: a registry byte cap drops solved levels' gathered
+    /// features without changing a single bit of the solution, and the
+    /// peak counter records the (lower) high-water mark.
+    #[test]
+    fn registry_cap_preserves_solution() {
+        let (tr, _, kern, mut cfg) = setup(400);
+        let full = train(&tr, &kern, &cfg);
+        cfg.registry_cap_bytes = 64 << 10; // well below the run's gathered total
+        let capped = train(&tr, &kern, &cfg);
+        assert_eq!(full.alpha, capped.alpha, "registry GC changed the solution");
+        assert_eq!(full.final_iterations, capped.final_iterations);
+        assert!(full.registry_peak_bytes > 0, "uncapped peak not recorded");
+        assert!(
+            capped.registry_peak_bytes < full.registry_peak_bytes,
+            "cap did not lower the registry peak: {} vs {}",
+            capped.registry_peak_bytes,
+            full.registry_peak_bytes
+        );
     }
 
     #[test]

@@ -72,6 +72,15 @@ pub struct Outcome {
     pub divide_values: Option<u64>,
     /// Kernel entries reused by full-row stitching (DC-SVM).
     pub stitched_values: Option<u64>,
+    /// Backend dispatches that fanned out over row panels (kernel-context
+    /// algos; 0 under `--threads 1` or below the parallel threshold).
+    pub parallel_dispatches: Option<u64>,
+    /// Gathered stitch-fill dispatches (grouped warm prefetch — collapses
+    /// many stitched rows into one dispatch).
+    pub stitch_groups: Option<u64>,
+    /// Peak bytes of gathered segment features (the registry-GC
+    /// high-water mark; DC-SVM runs).
+    pub registry_bytes: Option<u64>,
     /// Free-text extras (iteration counts, per-algo details). Structured
     /// metrics live in the typed fields above, not here.
     pub note: String,
@@ -108,6 +117,18 @@ impl Outcome {
             (
                 "stitched_values",
                 self.stitched_values.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "parallel_dispatches",
+                self.parallel_dispatches.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "stitch_groups",
+                self.stitch_groups.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "registry_bytes",
+                self.registry_bytes.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
             ),
             ("note", Json::from(self.note.as_str())),
         ])
@@ -157,16 +178,18 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
     // (fastfood/ltpu) never consume test norms, so skip it for them.
     let te_ctx_opt = match cfg.algo {
         Algo::Fastfood | Algo::Ltpu => None,
-        _ => Some(KernelContext::new(te, kernel.as_ref(), 1 << 20)),
+        _ => Some(KernelContext::new(te, kernel.as_ref(), 1 << 20).with_threads(cfg.threads)),
     };
     let t0 = std::time::Instant::now();
 
     let outcome = match cfg.algo {
         Algo::Libsvm => {
             let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
-            let tr_ctx = KernelContext::new(tr, kernel.as_ref(), cache_bytes);
+            let tr_ctx =
+                KernelContext::new(tr, kernel.as_ref(), cache_bytes).with_threads(cfg.threads);
             let res = SmoSolver::new(tr_ctx.view_full(), cfg.smo_config()?).solve();
             let model = SvmModel::from_ctx_alpha(&tr_ctx, &res.alpha);
+            let vs = tr_ctx.value_stats();
             Outcome {
                 algo: cfg.algo.name(),
                 train_s: res.elapsed_s,
@@ -178,6 +201,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 segment_rows: None,
                 divide_values: None,
                 stitched_values: None,
+                parallel_dispatches: Some(vs.parallel_dispatches),
+                stitch_groups: Some(vs.stitch_groups),
+                registry_bytes: None,
                 note: format!("iters={}", res.iterations),
             }
         }
@@ -214,6 +240,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 segment_rows: Some(res.segment_rows_computed),
                 divide_values: Some(res.divide_values_computed),
                 stitched_values: Some(res.stitched_values),
+                parallel_dispatches: Some(res.parallel_dispatches),
+                stitch_groups: Some(res.stitch_groups),
+                registry_bytes: Some(res.registry_peak_bytes),
                 note,
             }
         }
@@ -241,12 +270,16 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 segment_rows: None,
                 divide_values: None,
                 stitched_values: None,
+                parallel_dispatches: None,
+                stitch_groups: None,
+                registry_bytes: None,
                 note: format!("levels={:?}", res.level_sv_counts),
             }
         }
         Algo::LaSvm => {
             let te_ctx = te_ctx_opt.as_ref().expect("te context for kernel-model algo");
-            let tr_ctx = KernelContext::new(tr, kernel.as_ref(), cache_bytes);
+            let tr_ctx =
+                KernelContext::new(tr, kernel.as_ref(), cache_bytes).with_threads(cfg.threads);
             let lcfg = lasvm::LaSvmConfig {
                 kind,
                 c: cfg.c,
@@ -267,6 +300,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 segment_rows: None,
                 divide_values: None,
                 stitched_values: None,
+                parallel_dispatches: None,
+                stitch_groups: None,
+                registry_bytes: None,
                 note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
             }
         }
@@ -295,6 +331,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 segment_rows: None,
                 divide_values: None,
                 stitched_values: None,
+                parallel_dispatches: None,
+                stitch_groups: None,
+                registry_bytes: None,
                 note: format!("landmarks={}", cfg.budget),
             }
         }
@@ -319,6 +358,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 segment_rows: None,
                 divide_values: None,
                 stitched_values: None,
+                parallel_dispatches: None,
+                stitch_groups: None,
+                registry_bytes: None,
                 note: format!("features={}", cfg.budget * 8),
             }
         }
@@ -343,6 +385,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 segment_rows: None,
                 divide_values: None,
                 stitched_values: None,
+                parallel_dispatches: None,
+                stitch_groups: None,
+                registry_bytes: None,
                 note: format!("units={}", cfg.budget),
             }
         }
@@ -372,6 +417,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 segment_rows: None,
                 divide_values: None,
                 stitched_values: None,
+                parallel_dispatches: None,
+                stitch_groups: None,
+                registry_bytes: None,
                 note: format!("basis={}", model.basis_size),
             }
         }
@@ -466,12 +514,22 @@ mod tests {
         assert!(out.stitched_values.is_some(), "stitched_values recorded for dcsvm");
         assert!(out.segment_rows.unwrap() > 0, "segmented divide recorded no rows");
         assert!(!out.note.contains("cache_hit="), "note: {}", out.note);
+        assert!(out.parallel_dispatches.is_some(), "parallel_dispatches recorded for dcsvm");
+        assert!(out.stitch_groups.is_some(), "stitch_groups recorded for dcsvm");
+        assert!(
+            out.registry_bytes.map(|b| b > 0).unwrap_or(false),
+            "registry peak not recorded: {:?}",
+            out.registry_bytes
+        );
         let j = out.to_json();
         assert_eq!(j.get("cache_hit_rate").as_f64(), Some(hit));
         assert!(j.get("final_rows").as_f64().is_some());
         assert!(j.get("segment_rows").as_f64().is_some());
         assert!(j.get("divide_values").as_f64().is_some());
         assert!(j.get("stitched_values").as_f64().is_some());
+        assert!(j.get("parallel_dispatches").as_f64().is_some());
+        assert!(j.get("stitch_groups").as_f64().is_some());
+        assert!(j.get("registry_bytes").as_f64().is_some());
     }
 
     #[test]

@@ -13,6 +13,38 @@
 
 pub mod native;
 
+use crate::util::threadpool::scope_map;
+
+/// Split a row-major dispatch into per-chunk jobs of `chunk` query rows:
+/// the rows' features, their norms, and the matching disjoint `&mut`
+/// output slice (`row_stride` output values per row — `nd` for block
+/// dispatches, 1 for decision values). The one splitter both
+/// [`BlockKernel::decision_par`] and the native backend's
+/// [`BlockKernel::block_par`] use, so the two dispatch paths cannot
+/// drift.
+fn split_row_jobs<'j>(
+    xq: &'j [f32],
+    q_norms: &'j [f32],
+    out: &'j mut [f32],
+    dim: usize,
+    row_stride: usize,
+    chunk: usize,
+) -> Vec<(&'j [f32], &'j [f32], &'j mut [f32])> {
+    let nq = q_norms.len();
+    let chunk = chunk.max(1);
+    let mut jobs = Vec::with_capacity(nq.div_ceil(chunk));
+    let mut out_rest: &'j mut [f32] = out;
+    let mut lo = 0usize;
+    while lo < nq {
+        let take = chunk.min(nq - lo);
+        let (o, rest) = std::mem::take(&mut out_rest).split_at_mut(take * row_stride);
+        jobs.push((&xq[lo * dim..(lo + take) * dim], &q_norms[lo..lo + take], o));
+        out_rest = rest;
+        lo += take;
+    }
+    jobs
+}
+
 /// Kernel function family + parameters. γ/η are runtime values (the PJRT
 /// artifacts take them as inputs, so no recompilation across the paper's
 /// (C, γ) grids).
@@ -93,6 +125,18 @@ pub trait BlockKernel: Sync + Send {
         false
     }
 
+    /// How many row-panel chunks [`Self::block_par`] would split an
+    /// `nq × nd` dispatch over `dim` features into at the given thread
+    /// budget — 1 means the dispatch stays single-threaded. Callers use it
+    /// to size speculative row batches (the solver's prefetch) so that
+    /// batching is only turned on where the fan-out actually pays for it.
+    /// Backends without an in-process parallel path (PJRT parallelizes
+    /// inside XLA) keep the default of 1.
+    fn dispatch_fanout(&self, nq: usize, nd: usize, dim: usize, threads: usize) -> usize {
+        let _ = (nq, nd, dim, threads);
+        1
+    }
+
     fn block(
         &self,
         xq: &[f32],
@@ -102,6 +146,29 @@ pub trait BlockKernel: Sync + Send {
         dim: usize,
         out: &mut [f32],
     );
+
+    /// [`Self::block`] with an in-process thread budget: backends that
+    /// compute on the calling thread may partition the **output rows** into
+    /// panels and evaluate them on up to `threads` workers. The guarantee
+    /// is bit-identity: each output row's arithmetic is unchanged, only
+    /// which thread computes it varies, so results are identical for every
+    /// `threads` value. Returns the number of row-panel chunks actually
+    /// used (1 = the dispatch ran single-threaded). The default ignores
+    /// `threads` and delegates to [`Self::block`].
+    fn block_par(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        threads: usize,
+        out: &mut [f32],
+    ) -> usize {
+        let _ = threads;
+        self.block(xq, q_norms, xd, d_norms, dim, out);
+        1
+    }
 
     /// Fused decision values: `out[i] = Σ_j coef[j]·K(xq_i, xd_j)`.
     /// Default materializes the block; the PJRT backend overrides with the
@@ -125,6 +192,39 @@ pub trait BlockKernel: Sync + Send {
             let row = &block[i * nd..(i + 1) * nd];
             out[i] = row.iter().zip(coef).map(|(&k, &c)| k * c).sum();
         }
+    }
+
+    /// [`Self::decision`] with an in-process thread budget: decision values
+    /// are per-row independent, so queries are partitioned into chunks and
+    /// each chunk runs through the backend's (possibly fused) decision path
+    /// on its own worker. Bit-identical to the single-threaded call for
+    /// every `threads` value; returns the number of chunks used (1 =
+    /// single-threaded). Backends whose [`Self::dispatch_fanout`] stays at
+    /// the default of 1 never split.
+    fn decision_par(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        coef: &[f32],
+        threads: usize,
+        out: &mut [f32],
+    ) -> usize {
+        let nq = q_norms.len();
+        debug_assert_eq!(out.len(), nq);
+        let fanout = self.dispatch_fanout(nq, d_norms.len(), dim, threads);
+        if fanout <= 1 {
+            self.decision(xq, q_norms, xd, d_norms, dim, coef, out);
+            return 1;
+        }
+        let jobs = split_row_jobs(xq, q_norms, out, dim, 1, nq.div_ceil(fanout));
+        let used = jobs.len();
+        scope_map(used, jobs, |_, (q, qn, o)| {
+            self.decision(q, qn, xd, d_norms, dim, coef, o);
+        });
+        used
     }
 }
 

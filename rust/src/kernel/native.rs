@@ -7,54 +7,100 @@
 //! against, and the comparator in `bench_kernel_micro`.
 
 use super::{BlockKernel, KernelKind};
+use crate::util::threadpool::scope_map;
+
+/// Output-row panel width: the register-blocked micro-kernel processes 4
+/// query rows at a time, and parallel row chunks are cut at multiples of
+/// this so every chunk panels exactly like the serial sweep.
+const PANEL: usize = 4;
+
+/// Independent accumulator lanes of [`dot1`] (fixed — part of the
+/// arithmetic contract, see the `dot1` docs).
+const LANES: usize = 4;
+
+/// Multiply-add count (`nq · nd · dim`) below which a block dispatch stays
+/// single-threaded: small dispatches (the solver's per-row fetches, tiny
+/// cluster blocks) finish faster than scoped workers spawn.
+pub const PAR_MIN_MADDS: usize = 1 << 20;
 
 /// Native (CPU, pure Rust) block kernel.
 #[derive(Clone, Copy, Debug)]
 pub struct NativeKernel {
     pub kind: KernelKind,
+    /// Madds threshold for row-panel parallel dispatch
+    /// ([`PAR_MIN_MADDS`]; tests force tiny blocks parallel by lowering it).
+    par_min_madds: usize,
 }
 
 impl NativeKernel {
     pub fn new(kind: KernelKind) -> Self {
-        NativeKernel { kind }
+        NativeKernel { kind, par_min_madds: PAR_MIN_MADDS }
+    }
+
+    /// [`Self::new`] with an explicit parallel-dispatch threshold in
+    /// multiply-adds (`nq · nd · dim`); tests use 1 to force the parallel
+    /// path on small blocks.
+    pub fn with_par_threshold(kind: KernelKind, par_min_madds: usize) -> Self {
+        NativeKernel { kind, par_min_madds: par_min_madds.max(1) }
+    }
+
+    /// Rows per parallel chunk for an `nq`-row dispatch at `threads`
+    /// workers: the even split rounded up to a [`PANEL`] multiple, so
+    /// chunked sweeps panel rows exactly like the serial sweep.
+    fn row_chunk(nq: usize, threads: usize) -> usize {
+        nq.div_ceil(threads.max(1).min(nq.max(1))).div_ceil(PANEL) * PANEL
     }
 }
 
+/// One dot product `<q, d>` — THE inner kernel every block evaluation in
+/// this backend funnels through, whatever the dispatch shape, panel
+/// position, or thread. `chunks_exact` gives the compiler fixed-length
+/// bounds-check-free bodies it can unroll/vectorize, and the [`LANES`]
+/// independent accumulators (reduced pairwise, then the remainder added
+/// sequentially) make the accumulation order a pure function of
+/// `(q, d, dim)` — which is exactly why kernel entries are bit-identical
+/// across full-row vs segment dispatches and 1 vs N threads.
+#[inline]
+fn dot1(q: &[f32], d: &[f32]) -> f32 {
+    debug_assert_eq!(q.len(), d.len());
+    let mut lanes = [0f32; LANES];
+    let mut qc = q.chunks_exact(LANES);
+    let mut dc = d.chunks_exact(LANES);
+    for (qs, ds) in qc.by_ref().zip(dc.by_ref()) {
+        for ((lane, &qv), &dv) in lanes.iter_mut().zip(qs).zip(ds) {
+            *lane += qv * dv;
+        }
+    }
+    let mut acc = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for (&qv, &dv) in qc.remainder().iter().zip(dc.remainder()) {
+        acc += qv * dv;
+    }
+    acc
+}
+
 /// Register-blocked dot-product panel: computes `out[i*nd+j] = <q_i, d_j>`
-/// for a 4-row query panel, letting the compiler keep 4 accumulators live.
+/// for a 4-row query panel — `dj` stays hot in L1 across the 4 rows. Each
+/// row's arithmetic is [`dot1`], so panel membership never changes a bit.
 #[inline]
 fn dot_panel4(xq: &[f32], xd: &[f32], dim: usize, nd: usize, out: &mut [f32]) {
     // xq: [4, dim], out: [4, nd]
+    let q0 = &xq[0..dim];
+    let q1 = &xq[dim..2 * dim];
+    let q2 = &xq[2 * dim..3 * dim];
+    let q3 = &xq[3 * dim..4 * dim];
     for j in 0..nd {
         let dj = &xd[j * dim..(j + 1) * dim];
-        let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
-        let q0 = &xq[0..dim];
-        let q1 = &xq[dim..2 * dim];
-        let q2 = &xq[2 * dim..3 * dim];
-        let q3 = &xq[3 * dim..4 * dim];
-        for t in 0..dim {
-            let d = dj[t];
-            a0 += q0[t] * d;
-            a1 += q1[t] * d;
-            a2 += q2[t] * d;
-            a3 += q3[t] * d;
-        }
-        out[j] = a0;
-        out[nd + j] = a1;
-        out[2 * nd + j] = a2;
-        out[3 * nd + j] = a3;
+        out[j] = dot1(q0, dj);
+        out[nd + j] = dot1(q1, dj);
+        out[2 * nd + j] = dot1(q2, dj);
+        out[3 * nd + j] = dot1(q3, dj);
     }
 }
 
 #[inline]
 fn dot_row(q: &[f32], xd: &[f32], dim: usize, nd: usize, out: &mut [f32]) {
     for j in 0..nd {
-        let dj = &xd[j * dim..(j + 1) * dim];
-        let mut acc = 0f32;
-        for t in 0..dim {
-            acc += q[t] * dj[t];
-        }
-        out[j] = acc;
+        out[j] = dot1(q, &xd[j * dim..(j + 1) * dim]);
     }
 }
 
@@ -91,6 +137,48 @@ pub fn cross_products(
 impl BlockKernel for NativeKernel {
     fn kind(&self) -> KernelKind {
         self.kind
+    }
+
+    fn dispatch_fanout(&self, nq: usize, nd: usize, dim: usize, threads: usize) -> usize {
+        if threads <= 1 || nq < 2 {
+            return 1;
+        }
+        if nq.saturating_mul(nd).saturating_mul(dim) < self.par_min_madds {
+            return 1;
+        }
+        nq.div_ceil(Self::row_chunk(nq, threads))
+    }
+
+    /// Row-panel parallel block evaluation: the output rows are cut into
+    /// [`PANEL`]-aligned chunks and each chunk runs the ordinary
+    /// [`BlockKernel::block`] on its own scoped worker, writing a disjoint
+    /// `&mut` slice of `out`. Every row's arithmetic funnels through
+    /// [`dot1`] regardless of chunk or thread, so the result is
+    /// bit-identical to the single-threaded sweep (property-tested below).
+    fn block_par(
+        &self,
+        xq: &[f32],
+        q_norms: &[f32],
+        xd: &[f32],
+        d_norms: &[f32],
+        dim: usize,
+        threads: usize,
+        out: &mut [f32],
+    ) -> usize {
+        let nq = q_norms.len();
+        let nd = d_norms.len();
+        debug_assert_eq!(out.len(), nq * nd);
+        let fanout = self.dispatch_fanout(nq, nd, dim, threads);
+        if fanout <= 1 {
+            self.block(xq, q_norms, xd, d_norms, dim, out);
+            return 1;
+        }
+        let jobs = super::split_row_jobs(xq, q_norms, out, dim, nd, Self::row_chunk(nq, threads));
+        debug_assert_eq!(jobs.len(), fanout);
+        scope_map(fanout, jobs, |_, (q, qn, o)| {
+            self.block(q, qn, xd, d_norms, dim, o);
+        });
+        fanout
     }
 
     fn block(
@@ -181,8 +269,94 @@ mod tests {
             let mut row = vec![0f32; nd];
             dot_row(&xq[i * d..(i + 1) * d], &xd, d, nd, &mut row);
             for j in 0..nd {
-                assert!((out[i * nd + j] - row[j]).abs() < 1e-5);
+                // Panel and tail paths share dot1: exact equality, not
+                // tolerance — the backend's bit-stability contract.
+                assert_eq!(out[i * nd + j].to_bits(), row[j].to_bits(), "[{i},{j}]");
             }
+        }
+    }
+
+    /// Tentpole guarantee: the row-panel parallel dispatch is bit-identical
+    /// to the single-threaded sweep for every thread count, across random
+    /// shapes (including rows that land in panel tails and chunk tails),
+    /// and actually fans out when asked to.
+    #[test]
+    fn prop_block_par_bit_identical_any_thread_count() {
+        use crate::prop_assert;
+        use crate::util::proptest::check;
+        check("block-par-bit-identity", 10, |rng: &mut Pcg64| {
+            let nq = 1 + rng.below(40);
+            let nd = 1 + rng.below(30);
+            let d = 1 + rng.below(24);
+            let threads = 1 + rng.below(8);
+            let kind = if rng.next_f64() < 0.5 {
+                KernelKind::Rbf { gamma: (0.2 + 4.0 * rng.next_f64()) as f32 }
+            } else {
+                KernelKind::Poly { gamma: (0.1 + rng.next_f64()) as f32, eta: 0.4 }
+            };
+            // Threshold 1 forces the parallel path on these small blocks.
+            let k = NativeKernel::with_par_threshold(kind, 1);
+            let xq = rand_matrix(rng, nq, d);
+            let xd = rand_matrix(rng, nd, d);
+            let (qn, dn) = (norms(&xq, d), norms(&xd, d));
+            let mut serial = vec![0f32; nq * nd];
+            k.block(&xq, &qn, &xd, &dn, d, &mut serial);
+            let mut par = vec![0f32; nq * nd];
+            let used = k.block_par(&xq, &qn, &xd, &dn, d, threads, &mut par);
+            prop_assert!(
+                used == k.dispatch_fanout(nq, nd, d, threads),
+                "block_par used {used} chunks, fanout promised {}",
+                k.dispatch_fanout(nq, nd, d, threads)
+            );
+            for (t, (a, b)) in serial.iter().zip(&par).enumerate() {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "entry {t} differs at {threads} threads: {a} vs {b}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_par_fans_out_above_threshold_only() {
+        let mut rng = Pcg64::new(6);
+        let kind = KernelKind::Rbf { gamma: 1.0 };
+        let (nq, nd, d) = (16, 8, 5);
+        let xq = rand_matrix(&mut rng, nq, d);
+        let xd = rand_matrix(&mut rng, nd, d);
+        let (qn, dn) = (norms(&xq, d), norms(&xd, d));
+        let mut out = vec![0f32; nq * nd];
+        // Default threshold: this block is far too small to fan out.
+        let k = NativeKernel::new(kind);
+        assert_eq!(k.block_par(&xq, &qn, &xd, &dn, d, 4, &mut out), 1);
+        assert_eq!(k.dispatch_fanout(nq, nd, d, 4), 1);
+        // Forced threshold: 16 rows at 4 threads = 4 panel-aligned chunks.
+        let k = NativeKernel::with_par_threshold(kind, 1);
+        assert_eq!(k.dispatch_fanout(nq, nd, d, 4), 4);
+        assert_eq!(k.block_par(&xq, &qn, &xd, &dn, d, 4, &mut out), 4);
+        // One thread or one row never fans out, threshold notwithstanding.
+        assert_eq!(k.dispatch_fanout(nq, nd, d, 1), 1);
+        assert_eq!(k.dispatch_fanout(1, nd, d, 4), 1);
+    }
+
+    #[test]
+    fn decision_par_bit_identical_to_decision() {
+        let mut rng = Pcg64::new(7);
+        let kind = KernelKind::Rbf { gamma: 0.8 };
+        let (nq, nd, d) = (23, 17, 9);
+        let xq = rand_matrix(&mut rng, nq, d);
+        let xd = rand_matrix(&mut rng, nd, d);
+        let (qn, dn) = (norms(&xq, d), norms(&xd, d));
+        let coef: Vec<f32> = (0..nd).map(|_| rng.next_gaussian() as f32).collect();
+        let k = NativeKernel::with_par_threshold(kind, 1);
+        let mut serial = vec![0f32; nq];
+        k.decision(&xq, &qn, &xd, &dn, d, &coef, &mut serial);
+        let mut par = vec![0f32; nq];
+        let used = k.decision_par(&xq, &qn, &xd, &dn, d, &coef, 4, &mut par);
+        assert!(used > 1, "decision_par stayed serial with a forced threshold");
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

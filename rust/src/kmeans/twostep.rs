@@ -85,6 +85,35 @@ impl Router {
         norms: &[f32],
         kernel: &dyn BlockKernel,
     ) -> Vec<u16> {
+        self.assign_rows_impl(x, norms, |xq, qn, out| {
+            kernel.block(xq, qn, &self.sample_x, &self.sample_norms, self.dim, out)
+        })
+    }
+
+    /// [`Self::assign_rows`] with an in-process thread budget: large
+    /// K(rows, sample) chunks fan out over row panels
+    /// ([`BlockKernel::block_par`]). Assignments are bit-identical for any
+    /// `threads` value.
+    pub fn assign_rows_par(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+        threads: usize,
+    ) -> Vec<u16> {
+        self.assign_rows_impl(x, norms, |xq, qn, out| {
+            kernel.block_par(xq, qn, &self.sample_x, &self.sample_norms, self.dim, threads, out);
+        })
+    }
+
+    /// Shared assignment core: `block` fills `out` with one
+    /// K(chunk, sample) pass — callers choose the dispatch path (plain
+    /// backend, thread-budgeted, or a [`KernelContext`] that also counts
+    /// parallel dispatches).
+    fn assign_rows_impl<F>(&self, x: &[f32], norms: &[f32], block: F) -> Vec<u16>
+    where
+        F: Fn(&[f32], &[f32], &mut [f32]),
+    {
         let n = norms.len();
         let m = self.sample_size();
         let mut out = Vec::with_capacity(n);
@@ -93,12 +122,9 @@ impl Router {
         for (c0, chunk_norms) in norms.chunks(CHUNK).enumerate() {
             let lo = c0 * CHUNK;
             let take = chunk_norms.len();
-            kernel.block(
+            block(
                 &x[lo * self.dim..(lo + take) * self.dim],
                 chunk_norms,
-                &self.sample_x,
-                &self.sample_norms,
-                self.dim,
                 &mut kblock[..take * m],
             );
             for qi in 0..take {
@@ -128,11 +154,15 @@ impl Router {
     }
 
     /// Assign every row of the context's dataset (norms from the context).
+    /// Dispatches through the context, so large assignment passes fan out
+    /// over its thread budget and are counted in its `ValueStats`.
     pub fn assign_all(&self, ctx: &KernelContext) -> Vec<u16> {
         // One K(all, sample) pass outside the row cache — counted so
         // `ValueStats::values_computed` reflects the whole run.
         ctx.count_external_values((ctx.len() * self.sample_size()) as u64);
-        self.assign_rows(&ctx.ds().x, ctx.norms(), ctx.kernel())
+        self.assign_rows_impl(&ctx.ds().x, ctx.norms(), |xq, qn, out| {
+            ctx.block_dispatch(xq, qn, &self.sample_x, &self.sample_norms, self.dim, out)
+        })
     }
 
     /// Route a single point.
@@ -276,7 +306,7 @@ pub fn off_diagonal_mass(ctx: &KernelContext, assign: &[u16]) -> f64 {
     let mut lo = 0;
     while lo < n {
         let take = CHUNK.min(n - lo);
-        ctx.kernel().block(
+        ctx.block_dispatch(
             &ds.x[lo * ds.dim..(lo + take) * ds.dim],
             &norms[lo..lo + take],
             &ds.x,

@@ -77,8 +77,11 @@ fn print_usage() {
          \x20 --dataset NAME --n-train N --n-test N --kernel {{rbf,poly,linear}}\n\
          \x20 --gamma G --c C --eps E --levels L --k-base K --sample-m M\n\
          \x20 --backend {{auto,native,pjrt}} --budget B --seed S --config FILE\n\
-         \x20 --threads T (default: DCSVM_THREADS or all cores) --cache-mb MB\n\
+         \x20 --threads T (default: DCSVM_THREADS or all cores; also fans large\n\
+         \x20              kernel dispatches out over row panels, bit-identically)\n\
+         \x20 --cache-mb MB\n\
          \x20 --segments {{true,false}} (segment-granular divide cache; default true)\n\
+         \x20 --registry-cap-mb MB (gathered segment-feature cap; 0 = unlimited)\n\
          \x20 --save-model FILE"
     );
 }
@@ -252,7 +255,8 @@ fn cmd_kmeans(args: &[String]) -> Result<()> {
     let kernel = harness::make_kernel(kind, &cfg.backend, tr.dim)?;
     let k = cfg.k_base.max(2);
     let mut rng = Pcg64::new(cfg.seed);
-    let ctx = dcsvm::cache::KernelContext::new(&tr, kernel.as_ref(), cfg.cache_mb << 20);
+    let ctx = dcsvm::cache::KernelContext::new(&tr, kernel.as_ref(), cfg.cache_mb << 20)
+        .with_threads(cfg.threads);
     let t0 = std::time::Instant::now();
     let (_, part) =
         dcsvm::kmeans::two_step_partition(&ctx, k, cfg.sample_m, None, &mut rng);

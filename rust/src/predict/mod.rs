@@ -110,19 +110,34 @@ impl SvmModel {
         norms: &[f32],
         kernel: &dyn BlockKernel,
     ) -> Vec<f32> {
+        self.decision_batch_par(x, norms, kernel, 1)
+    }
+
+    /// [`Self::decision_batch`] with an in-process thread budget: large
+    /// query batches fan out over per-query chunks
+    /// ([`BlockKernel::decision_par`]) — decision values are bit-identical
+    /// for any `threads` value.
+    pub fn decision_batch_par(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+        threads: usize,
+    ) -> Vec<f32> {
         debug_assert_eq!(kernel.kind(), self.kind);
         let n = norms.len();
         let mut out = vec![0f32; n];
         if self.coef.is_empty() {
             return out;
         }
-        kernel.decision(
+        kernel.decision_par(
             x,
             norms,
             &self.sv_x,
             &self.sv_norms,
             self.dim,
             &self.coef,
+            threads,
             &mut out,
         );
         out
@@ -136,7 +151,18 @@ impl SvmModel {
         norms: &[f32],
         kernel: &dyn BlockKernel,
     ) -> Vec<i8> {
-        self.decision_batch(x, norms, kernel)
+        self.predict_batch_par(x, norms, kernel, 1)
+    }
+
+    /// [`Self::predict_batch`] with an in-process thread budget.
+    pub fn predict_batch_par(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+        threads: usize,
+    ) -> Vec<i8> {
+        self.decision_batch_par(x, norms, kernel, threads)
             .into_iter()
             .map(|d| if d >= 0.0 { 1 } else { -1 })
             .collect()
@@ -150,12 +176,27 @@ impl SvmModel {
     }
 
     /// Accuracy on a dataset that already has a [`KernelContext`] (norms
-    /// and backend come from the context).
+    /// and backend come from the context; large batches fan out over the
+    /// context's thread budget — bit-identically — and the dispatch is
+    /// counted in its `ValueStats`).
     pub fn accuracy_ctx(&self, ctx: &KernelContext) -> f64 {
+        debug_assert_eq!(ctx.kind(), self.kind);
         // One K(test, SV) decision pass outside the row cache; counted so
         // the context's kernel-value accounting covers prediction too.
         ctx.count_external_values((ctx.len() * self.num_svs()) as u64);
-        let preds = self.predict_batch(&ctx.ds().x, ctx.norms(), ctx.kernel());
+        let mut dv = vec![0f32; ctx.len()];
+        if !self.coef.is_empty() {
+            ctx.decision_dispatch(
+                &ctx.ds().x,
+                ctx.norms(),
+                &self.sv_x,
+                &self.sv_norms,
+                self.dim,
+                &self.coef,
+                &mut dv,
+            );
+        }
+        let preds: Vec<i8> = dv.into_iter().map(|d| if d >= 0.0 { 1 } else { -1 }).collect();
         crate::metrics::accuracy(&preds, &ctx.ds().y)
     }
 
@@ -234,9 +275,22 @@ impl EarlyModel {
         norms: &[f32],
         kernel: &dyn BlockKernel,
     ) -> Vec<i8> {
+        self.predict_batch_par(x, norms, kernel, 1)
+    }
+
+    /// [`Self::predict_batch`] with an in-process thread budget: the
+    /// routing pass and each cluster's decision dispatch fan out over row
+    /// panels. Predictions are bit-identical for any `threads` value.
+    pub fn predict_batch_par(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+        threads: usize,
+    ) -> Vec<i8> {
         let n = norms.len();
         let dim = self.locals.first().map(|m| m.dim).unwrap_or(1);
-        let assign = self.router.assign_rows(x, norms, kernel);
+        let assign = self.router.assign_rows_par(x, norms, kernel, threads);
         // Batch per cluster for efficiency (one backend dispatch each).
         let mut out = vec![0i8; n];
         for c in 0..self.locals.len() {
@@ -251,7 +305,7 @@ impl EarlyModel {
                 cx.extend_from_slice(&x[i * dim..(i + 1) * dim]);
                 cn.push(norms[i]);
             }
-            let preds = self.locals[c].predict_batch(&cx, &cn, kernel);
+            let preds = self.locals[c].predict_batch_par(&cx, &cn, kernel, threads);
             for (t, &i) in idx.iter().enumerate() {
                 out[i] = preds[t];
             }
@@ -266,12 +320,13 @@ impl EarlyModel {
         crate::metrics::accuracy(&preds, &test.y)
     }
 
-    /// Accuracy through an existing [`KernelContext`].
+    /// Accuracy through an existing [`KernelContext`] (dispatches fan out
+    /// over the context's thread budget, bit-identically).
     pub fn accuracy_ctx(&self, ctx: &KernelContext) -> f64 {
         // Count the K(test, sample) routing pass; the per-cluster local
         // decisions are O(|S|/k) per point on top.
         ctx.count_external_values((ctx.len() * self.router.sample_size()) as u64);
-        let preds = self.predict_batch(&ctx.ds().x, ctx.norms(), ctx.kernel());
+        let preds = self.predict_batch_par(&ctx.ds().x, ctx.norms(), ctx.kernel(), ctx.threads());
         crate::metrics::accuracy(&preds, &ctx.ds().y)
     }
 

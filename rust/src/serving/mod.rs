@@ -350,18 +350,26 @@ impl ServingContext {
         }
         // Route every query to its decision component. Early-model routing
         // goes through the per-fingerprint routing cache: only queries
-        // never seen before enter the (single) K(misses, sample) dispatch,
-        // so a fully warm batch dispatches no routing kernel at all.
-        let (assign, route) = self.route(x, n);
+        // never seen before enter the (single) K(misses, sample) dispatch
+        // — which fans out over row panels across the worker budget — so a
+        // fully warm batch dispatches no routing kernel at all.
+        let budget = workers.max(1);
+        let workers = budget.min(n);
+        let (assign, route) = self.route(x, n, budget);
 
         // Micro-batch across workers; scope_map returns in input order.
-        let workers = workers.max(1).min(n);
         let chunk = n.div_ceil(workers);
         let jobs: Vec<(usize, usize)> =
             (0..n).step_by(chunk).map(|lo| (lo, (lo + chunk).min(n))).collect();
+        // Fill dispatches go through the row-panel-parallel path with
+        // whatever worker budget the micro-batch split leaves idle (only
+        // batches smaller than the budget leave any; the micro-batch
+        // workers are the primary parallelism). Routing above gets the
+        // full budget — its single dispatch runs before the split.
+        let fill_threads = (budget / jobs.len().max(1)).max(1);
         let assign_ref = &assign;
         let parts: Vec<(Vec<f32>, RangeStats)> = scope_map(workers, jobs, |_, (lo, hi)| {
-            self.decide_range(x, assign_ref, lo, hi)
+            self.decide_range(x, assign_ref, lo, hi, fill_threads)
         });
 
         // Counters are threaded per worker (not derived from global cache
@@ -398,7 +406,7 @@ impl ServingContext {
     /// whose results are cached for every later batch on the shared
     /// context — including other clients' batches under the socket
     /// transport.
-    fn route(&self, x: &[f32], n: usize) -> (Vec<u16>, RouteStats) {
+    fn route(&self, x: &[f32], n: usize, threads: usize) -> (Vec<u16>, RouteStats) {
         let em = match &self.model {
             ServingModel::Exact(_) => return (vec![0u16; n], RouteStats::default()),
             ServingModel::Early(em) => em,
@@ -451,7 +459,7 @@ impl ServingContext {
                 xq.extend_from_slice(q);
                 qn.push(q.iter().map(|&v| v * v).sum());
             }
-            let got = em.router.assign_rows(&xq, &qn, self.kernel.as_ref());
+            let got = em.router.assign_rows_par(&xq, &qn, self.kernel.as_ref(), threads);
             for (s, &i) in uniq.iter().enumerate() {
                 let q = query(i);
                 let mut entry = Vec::with_capacity(dim + 1);
@@ -483,17 +491,20 @@ impl ServingContext {
 
     /// Decide queries `lo..hi` (one worker's micro-batch): per SV block of
     /// each component, probe the cache per query, batch-compute all misses
-    /// in ONE backend dispatch against the block's contiguous SV slice,
-    /// store the new entries, and fold the block into the running
-    /// decisions. Blocks are folded in ascending SV order with a single
-    /// accumulator per query — the exact operation sequence of a one-pass
-    /// reduction, so decisions are bit-identical for every block size.
+    /// in ONE backend dispatch against the block's contiguous SV slice
+    /// (fanned out over row panels when `fill_threads > 1` — the
+    /// single-micro-batch case), store the new entries, and fold the block
+    /// into the running decisions. Blocks are folded in ascending SV order
+    /// with a single accumulator per query — the exact operation sequence
+    /// of a one-pass reduction, so decisions are bit-identical for every
+    /// block size, worker count, and fill-thread count.
     fn decide_range(
         &self,
         x: &[f32],
         assign: &[u16],
         lo: usize,
         hi: usize,
+        fill_threads: usize,
     ) -> (Vec<f32>, RangeStats) {
         let dim = self.dim;
         let mut dv = vec![0f32; hi - lo];
@@ -567,12 +578,13 @@ impl ServingContext {
                     }
                     let mut kblock = vec![0f32; uniq.len() * blen];
                     if blen > 0 {
-                        self.kernel.block(
+                        self.kernel.block_par(
                             &xq,
                             &qn,
                             &sv_x[b_lo * dim..b_hi * dim],
                             &sv_norms[b_lo..b_hi],
                             dim,
+                            fill_threads,
                             &mut kblock,
                         );
                     }
@@ -772,6 +784,36 @@ mod tests {
         assert_eq!(s3.rows_computed, 0);
         assert_eq!(s3.cache_hits, (te.len() * blocks) as u64);
         assert!((s3.hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    /// Tentpole: SV-block fill and routing dispatches route through the
+    /// row-panel-parallel path (`block_par`) — decisions stay bit-identical
+    /// between a forced-parallel-threshold kernel under many workers and
+    /// plain single-worker serial evaluation.
+    #[test]
+    fn parallel_sv_block_fills_bit_identical() {
+        let (model, te) = exact_model(250, 15);
+        let serial = serve_ctx(ServingModel::Exact(model.clone()));
+        // Threshold 1 forces every dispatch that CAN fan out down the
+        // parallel path (fills in the under-budget small-batch case, and
+        // any multi-row dispatch).
+        let forced = NativeKernel::with_par_threshold(model.kind, 1);
+        let par = ServingContext::new(ServingModel::Exact(model), Box::new(forced), 8 << 20);
+        // A batch smaller than the worker budget: leftover budget flows
+        // to the fill dispatches (fill_threads > 1).
+        let small = &te.x[..16 * par.dim()];
+        let (dv_serial, _) = serial.decide(small, 1);
+        let (dv_par, s) = par.decide(small, 32);
+        assert_eq!(dv_serial, dv_par, "parallel fills changed decision bits");
+        assert_eq!(s.rows, 16);
+        // A full batch across many workers agrees too, and a warm replay
+        // still computes nothing.
+        let (dv_all_serial, _) = serial.decide(&te.x, 1);
+        let (dv_all_par, _) = par.decide(&te.x, 4);
+        assert_eq!(dv_all_serial, dv_all_par);
+        let (dv_warm, s2) = par.decide(&te.x, 1);
+        assert_eq!(dv_all_par, dv_warm);
+        assert_eq!(s2.rows_computed, 0);
     }
 
     #[test]

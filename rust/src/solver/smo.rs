@@ -59,8 +59,10 @@ pub struct SmoConfig {
     /// [`KernelContext::compute_rows`]). Amortizes the per-call overhead of
     /// the PJRT backend (the working set stabilizes early — paper Figure 2
     /// — so prefetched rows get reused). 1 disables; 0 = auto: 64 when the
-    /// backend `prefers_batched_rows()`, else 1 (speculative rows are
-    /// wasted work on the native backend — bench_ablations A5).
+    /// backend `prefers_batched_rows()`; else the context's thread budget
+    /// when the batched dispatch is large enough to fan out over row
+    /// panels (`dispatch_fanout`), and 1 otherwise (serial speculative
+    /// rows are wasted work on the native backend — bench_ablations A5).
     pub row_batch: usize,
 }
 
@@ -350,8 +352,23 @@ impl<'a> SmoSolver<'a> {
         // solve can prefetch k× deeper than a full-row solve.
         let ctx = self.view.ctx();
         let cache = ctx.cache();
-        let row_bytes = (self.view.row_len() * 4).max(1);
-        let auto = if ctx.kernel().prefers_batched_rows() { 64 } else { 1 };
+        let row_len = self.view.row_len();
+        let row_bytes = (row_len * 4).max(1);
+        let auto = if ctx.kernel().prefers_batched_rows() {
+            64
+        } else {
+            // A row-panel-parallel dispatch computes a small speculative
+            // batch in roughly the wall-clock of one row, so batch up to
+            // the thread budget — but only where the backend would
+            // actually fan out; below its parallel threshold speculation
+            // stays off (it is pure waste there — bench_ablations A5).
+            let t = ctx.threads().min(8);
+            if ctx.kernel().dispatch_fanout(t, row_len, ctx.dim(), t) > 1 {
+                t
+            } else {
+                1
+            }
+        };
         let batch = (if self.cfg.row_batch == 0 { auto } else { self.cfg.row_batch })
             .min((cache.budget_bytes() / 8 / row_bytes).max(1))
             .min((cache.min_shard_budget_bytes() / row_bytes).max(1))

@@ -256,6 +256,87 @@ fn shared_context_prewarms_conquer_solve() {
     assert!(dc.cache_hits > 0);
 }
 
+/// Acceptance (ISSUE): warm prefetch groups stitchable rows by
+/// segment-coverage pattern, so it performs strictly fewer gathered
+/// dispatches than rows stitched — while every assembled row stays
+/// bit-identical to the per-row stitching path.
+#[test]
+fn warm_prefetch_groups_stitch_dispatches() {
+    let mut rng = Pcg64::new(150);
+    let ds = generate(&covtype_like(), 240, &mut rng);
+    let kern = NativeKernel::new(kind());
+    let grouped = KernelContext::new(&ds, &kern, 64 << 20);
+    let perrow = KernelContext::new(&ds, &kern, 64 << 20);
+    let n = ds.len();
+    // Divide-phase shape: a cluster partition whose segment rows are warm
+    // (each row holds its own cluster's partial entry), then a batched
+    // warm prefetch over every row — the conquer solve's prewarm pattern.
+    let k = 4usize;
+    for ctx in [&grouped, &perrow] {
+        for c in 0..k {
+            let members: Vec<usize> = (0..n).filter(|i| i % k == c).collect();
+            let seg = ctx.register_segment(&members);
+            assert_eq!(ctx.compute_segment_rows(&seg, &members), members.len());
+        }
+    }
+    let all: Vec<usize> = (0..n).collect();
+    assert_eq!(grouped.compute_rows(&all), n);
+    for &p in &all {
+        perrow.row(p); // the old path: one gathered dispatch per row
+    }
+    for &p in &all {
+        let a = grouped.row(p);
+        let b = perrow.row(p);
+        for j in 0..n {
+            assert_eq!(a[j].to_bits(), b[j].to_bits(), "row {p} col {j}");
+        }
+    }
+    let gv = grouped.value_stats();
+    let pv = perrow.value_stats();
+    assert_eq!(gv.stitched_rows, n as u64);
+    assert_eq!(gv.stitch_groups, k as u64, "one dispatch per coverage pattern");
+    assert!(
+        gv.stitch_groups < gv.stitched_rows,
+        "grouping did not reduce gathered dispatches: {} vs {} rows",
+        gv.stitch_groups,
+        gv.stitched_rows
+    );
+    assert_eq!(pv.stitch_groups, pv.stitched_rows, "per-row pays 1 dispatch/row");
+    assert_eq!(gv.values_computed, pv.values_computed, "grouping changed kernel work");
+}
+
+/// Acceptance (ISSUE): the whole pipeline — divide, refine, conquer,
+/// prediction — is bit-identical between single- and multi-threaded
+/// dispatch: same final α, same test decisions.
+#[test]
+fn multithreaded_training_bit_identical_end_to_end() {
+    let (tr, te) = generate_split(&covtype_like(), 450, 120, 31);
+    let kern = NativeKernel::new(kind());
+    let mut cfg = DcSvmConfig {
+        kind: kind(),
+        c: 4.0,
+        levels: 2,
+        k_base: 4,
+        sample_m: 64,
+        eps_final: 1e-5,
+        ..Default::default()
+    };
+    cfg.threads = 1;
+    let single = train(&tr, &kern, &cfg);
+    cfg.threads = 4;
+    let multi = train(&tr, &kern, &cfg);
+    assert_eq!(single.alpha, multi.alpha, "thread count changed the final α");
+    assert_eq!(single.final_iterations, multi.final_iterations);
+    let m1 = SvmModel::from_alpha(&tr, &single.alpha, kind());
+    let m4 = SvmModel::from_alpha(&tr, &multi.alpha, kind());
+    let norms = te.sq_norms();
+    let d1 = m1.decision_batch(&te.x, &norms, &kern);
+    let d4 = m4.decision_batch_par(&te.x, &norms, &kern, 4);
+    for (i, (a, b)) in d1.iter().zip(&d4).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "decision {i} differs across threads");
+    }
+}
+
 /// Acceptance regression (ISSUE): with cluster-aligned segments the divide
 /// phase computes ≥ 2× fewer kernel values at k ≥ 4 than the full-row
 /// baseline (`segment_views = false`), with bit-identical final α and

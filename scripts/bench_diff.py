@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Perf-trajectory guard over BENCH_ci.json (ROADMAP "Perf-trajectory
+tracking" item). Two subcommands:
+
+  bench_diff.py diff --baseline PREV.json --current CUR.json [--tolerance 0.25]
+
+    Compare the current CI perf-smoke record against the previous run's
+    artifact and FAIL on counter regressions — e.g. `train.divide_values`
+    growing back toward the full-row baseline. Direction-aware: watched
+    counters declare whether lower or higher is better, and a relative
+    tolerance absorbs noise. A missing baseline (first run, expired cache)
+    or a baseline missing a newly added counter is skipped with a note,
+    never failed — the guard must not brick CI on its own introduction.
+
+  bench_diff.py identical A.json B.json --fields serve.decisions train.svs ...
+
+    Assert that dotted-path fields are exactly equal between two records.
+    CI uses it to pin thread-invariance: bench_smoke at --threads 1 and
+    --threads 2 must produce bit-identical serve decisions (decision lines
+    are printed in round-trip decimal, so string equality is bit equality)
+    and identical model shape/accuracy.
+
+Wall-clock fields are deliberately NOT watched: CI machines vary too much
+for a tolerance that is both useful and quiet. The counters are the
+machine-independent perf trajectory.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# (dotted path, direction) — direction is which way REGRESSION points:
+#   lower-better: fail if current > baseline * (1 + tolerance)
+#   higher-better: fail if current < baseline * (1 - tolerance)
+#   zero: fail unless current == 0 (tolerance-free invariants)
+WATCHED = [
+    ("train.divide_values", "lower-better"),
+    ("train.final_rows", "lower-better"),
+    ("train.stitched_values", "higher-better"),
+    ("train.cache_hit_rate", "higher-better"),
+    ("serve.warm.rows_computed", "zero"),
+]
+
+
+def fail(msg: str) -> None:
+    print(f"bench_diff: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read {path}: {e}")
+        raise AssertionError  # unreachable; keeps type checkers calm
+
+
+# Sentinel distinguishing a missing key from a legitimate JSON null value
+# (e.g. `objective` is null for early-stop runs): null == null must compare
+# equal in `identical` mode, while an absent field is an error.
+_MISSING = object()
+
+
+def lookup(obj, dotted: str):
+    """Resolve a dotted path; returns _MISSING when any hop is absent."""
+    cur = obj
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return _MISSING
+        cur = cur[part]
+    return cur
+
+
+def cmd_diff(args) -> None:
+    if not os.path.exists(args.baseline):
+        print(f"bench_diff: no baseline at {args.baseline}; nothing to diff (first run?)")
+        return
+    base = load(args.baseline)
+    cur = load(args.current)
+    tol = args.tolerance
+    failures = []
+    print(f"bench_diff: {args.current} vs baseline {args.baseline} (tolerance {tol:.0%})")
+    for path, direction in WATCHED:
+        b, c = lookup(base, path), lookup(cur, path)
+        if c is _MISSING or c is None:
+            failures.append(f"{path}: missing or null in current record")
+            continue
+        if b is _MISSING or b is None:
+            print(f"  {path}: no baseline value (new counter?) — skipped")
+            continue
+        if direction == "zero":
+            ok = c == 0
+            verdict = "ok" if ok else "REGRESSION (must stay 0)"
+        elif direction == "lower-better":
+            ok = float(c) <= float(b) * (1.0 + tol)
+            verdict = "ok" if ok else f"REGRESSION (> baseline +{tol:.0%})"
+        else:  # higher-better
+            ok = float(c) >= float(b) * (1.0 - tol)
+            verdict = "ok" if ok else f"REGRESSION (< baseline -{tol:.0%})"
+        print(f"  {path}: baseline={b} current={c} [{direction}] {verdict}")
+        if not ok:
+            failures.append(f"{path}: baseline={b} current={c} ({direction})")
+    if failures:
+        fail("counter regressions:\n  " + "\n  ".join(failures))
+    print("bench_diff: OK — no counter regressions")
+
+
+def cmd_identical(args) -> None:
+    a, b = load(args.a), load(args.b)
+    failures = []
+    for path in args.fields:
+        va, vb = lookup(a, path), lookup(b, path)
+        if va is _MISSING or vb is _MISSING:
+            failures.append(
+                f"{path}: absent ({args.a}: {va is not _MISSING}, {args.b}: {vb is not _MISSING})"
+            )
+        elif va != vb:
+            failures.append(f"{path}: differs\n    {args.a}: {json.dumps(va)[:200]}\n    {args.b}: {json.dumps(vb)[:200]}")
+        else:
+            print(f"  {path}: identical")
+    if failures:
+        fail("records differ:\n  " + "\n  ".join(failures))
+    print(f"bench_diff: OK — {len(args.fields)} field(s) bit-identical")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    d = sub.add_parser("diff", help="diff current BENCH_ci.json against a baseline")
+    d.add_argument("--baseline", required=True)
+    d.add_argument("--current", required=True)
+    d.add_argument("--tolerance", type=float, default=0.25,
+                   help="relative slack before a counter move counts as a regression")
+    d.set_defaults(func=cmd_diff)
+
+    i = sub.add_parser("identical", help="assert dotted fields are equal across two records")
+    i.add_argument("a")
+    i.add_argument("b")
+    i.add_argument("--fields", nargs="+", required=True)
+    i.set_defaults(func=cmd_identical)
+
+    args = ap.parse_args()
+    args.func(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,14 @@ and exits non-zero if any REQUIRED counter is missing or null — a CI guard
 that the instrumentation the perf trajectory depends on never silently
 disappears.
 
+`--threads N` pins the worker/dispatch thread count for BOTH the train and
+serve runs (train `--threads`, serve `--workers`, `DCSVM_THREADS`), and the
+serve decision lines land in `serve.decisions` — CI runs the script at 1
+and 2 threads and asserts the decisions are bit-identical
+(`scripts/bench_diff.py identical`).
+
 Usage: bench_smoke.py [--binary target/release/dcsvm] [--out BENCH_ci.json]
+                      [--threads 2]
 """
 
 import argparse
@@ -45,6 +52,9 @@ REQUIRED_TRAIN = [
     "segment_rows",
     "divide_values",
     "stitched_values",
+    "parallel_dispatches",
+    "stitch_groups",
+    "registry_bytes",
 ]
 # Per-batch serving stats fields (see rust/src/serving BatchStats::to_json).
 REQUIRED_SERVE = ["rows", "latency_ms", "cache_hits", "cache_misses", "rows_computed", "hit_rate"]
@@ -96,6 +106,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--binary", default="target/release/dcsvm")
     ap.add_argument("--out", default="BENCH_ci.json")
+    ap.add_argument("--threads", type=int, default=2,
+                    help="worker/dispatch threads for train and serve")
     args = ap.parse_args()
 
     if not os.path.exists(args.binary):
@@ -104,12 +116,14 @@ def main() -> None:
     workdir = tempfile.mkdtemp(prefix="dcsvm_bench_smoke_")
     results_dir = os.path.join(workdir, "results")
     model_path = os.path.join(workdir, "model.json")
-    env = dict(os.environ, DCSVM_RESULTS_DIR=results_dir, DCSVM_THREADS="2")
+    threads = str(max(1, args.threads))
+    env = dict(os.environ, DCSVM_RESULTS_DIR=results_dir, DCSVM_THREADS=threads)
 
     # ---- train (harness path; records results.jsonl) ---------------------
     t0 = time.monotonic()
     p = run(
-        [args.binary, "train", *TRAIN_FLAGS, "--save-model", model_path],
+        [args.binary, "train", *TRAIN_FLAGS, "--threads", threads,
+         "--save-model", model_path],
         env=env,
         capture_output=True,
         text=True,
@@ -141,8 +155,8 @@ def main() -> None:
         fail(f"model.json has no usable dim (got {dim!r})")
     batch = libsvm_batch(dim, 64)
     p = run(
-        [args.binary, "serve", "--model", model_path, "--batch", "64", "--workers", "2",
-         "--backend", "native"],
+        [args.binary, "serve", "--model", model_path, "--batch", "64",
+         "--workers", threads, "--backend", "native"],
         env=env,
         input=batch + batch,  # same 64-row batch twice: cold, then warm
         capture_output=True,
@@ -169,12 +183,19 @@ def main() -> None:
         fail(f"warm replay computed {warm['rows_computed']} rows; cross-request cache broken")
     if cold["rows_computed"] <= 0:
         fail("cold batch computed no rows; stats are not being recorded")
+    # The decision lines themselves (round-trip decimal, so string equality
+    # is bit equality): the thread-invariance CI step compares them between
+    # a 1-thread and an N-thread run of this script.
+    decisions = [line.strip() for line in p.stdout.splitlines() if line.strip()]
+    if len(decisions) != 128:
+        fail(f"expected 128 decision lines (2 × 64-row batches), got {len(decisions)}")
 
     bench = {
         "suite": "ci-perf-smoke",
         "dataset": "covtype-like",
+        "threads": int(threads),
         "train": train_stats,
-        "serve": {"cold": cold, "warm": warm},
+        "serve": {"cold": cold, "warm": warm, "decisions": decisions},
     }
     with open(args.out, "w", encoding="utf-8") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
