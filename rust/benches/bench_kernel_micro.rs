@@ -4,7 +4,8 @@
 
 use dcsvm::bench::{banner, fmt_secs, time_fn, Table};
 use dcsvm::harness;
-use dcsvm::kernel::{native::NativeKernel, BlockKernel, KernelKind};
+use dcsvm::kernel::native::{dot_detected, dot_scalar, NativeKernel};
+use dcsvm::kernel::{simd_tier, BlockKernel, KernelKind};
 use dcsvm::util::prng::Pcg64;
 use dcsvm::util::threadpool::default_threads;
 
@@ -113,4 +114,57 @@ fn main() {
         ]);
     }
     ts.print();
+
+    // ---- ISSUE tentpole: inner-dot SIMD tier vs forced scalar -----------
+    // Single-thread throughput of the innermost `dot1` both ways. The two
+    // paths are bit-identical by construction (lane structure + reduction
+    // order match); asserted on every sweep before timing. Acceptance on an
+    // AVX2 host: ≥4× on the long-vector rows. `DCSVM_FORCE_SCALAR=1` pins
+    // the tier, making the ratio column report 1.00x.
+    let tier = simd_tier().name();
+    banner(
+        "inner dot tiers",
+        &format!("dot1 scalar vs detected tier ({tier}), single thread, bit-identical"),
+    );
+    let mut td = Table::new(&["dim", "scalar GF/s", &format!("{tier} GF/s"), "speedup"]);
+    for &d in &[54usize, 128, 300, 784, 2048] {
+        // One query row against a resident panel of rows: the solver's
+        // row-fetch shape, small enough to stay cache-hot so the timer sees
+        // arithmetic, not memory.
+        let nd = (1 << 20) / d.max(1); // ~4 MB of f32 panel rows total
+        let (q, _) = rand_rows(&mut rng, 1, d);
+        let (xd, _) = rand_rows(&mut rng, nd, d);
+        for row in xd.chunks_exact(d) {
+            let a = dot_scalar(&q, row);
+            let b = dot_detected(&q, row);
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "dot tiers disagree at dim {d}: {a} vs {b}"
+            );
+        }
+        let flops = 2.0 * nd as f64 * d as f64;
+        let mut sink = 0f32;
+        let sc = time_fn(1, 5, || {
+            sink = xd.chunks_exact(d).map(|row| dot_scalar(&q, row)).sum();
+        });
+        let sc_sink = sink;
+        let dt = time_fn(1, 5, || {
+            sink = xd.chunks_exact(d).map(|row| dot_detected(&q, row)).sum();
+        });
+        assert!(sc_sink.to_bits() == sink.to_bits(), "tier sweep sums diverge");
+        td.row(&[
+            format!("{d}"),
+            format!("{:.2}", flops / sc.median_s / 1e9),
+            format!("{:.2}", flops / dt.median_s / 1e9),
+            format!("{:.2}x", sc.median_s / dt.median_s),
+        ]);
+    }
+    td.print();
+    println!(
+        "\nreading: tier = {tier} (runtime-detected once per process; \
+         DCSVM_FORCE_SCALAR=1 forces scalar). Both columns run the same \
+         8-lane accumulator layout and pairwise reduction, so values are \
+         bit-identical — only throughput moves. EXPERIMENTS.md records the \
+         per-host table."
+    );
 }

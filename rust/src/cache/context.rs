@@ -67,6 +67,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::Dataset;
+use crate::kernel::quant::QuantizedRows;
 use crate::kernel::{BlockKernel, KernelKind};
 use crate::util::threadpool::default_threads;
 
@@ -99,11 +100,17 @@ fn seg_key(seg: u32, row: usize) -> u64 {
 struct GatheredCols {
     xs: Vec<f32>,
     norms: Vec<f32>,
+    /// Int8-quantized shadow of `xs` (per-row scale+zero-point), built only
+    /// when the context runs with `--quant-route`. Exact dispatches never
+    /// read it — it serves approximation-tolerant consumers (routing /
+    /// early prediction) that want the 4×-smaller operand.
+    quant: Option<QuantizedRows>,
 }
 
 impl GatheredCols {
     fn bytes(&self) -> usize {
         (self.xs.len() + self.norms.len()) * 4
+            + self.quant.as_ref().map(|q| q.bytes()).unwrap_or(0)
     }
 }
 
@@ -120,6 +127,12 @@ pub struct SegmentData {
     gathered: Mutex<Option<Arc<GatheredCols>>>,
     /// Column count (cached; `ds.len()` for the full span).
     len: usize,
+    /// Registry generation this segment was last (re)gathered in — see
+    /// [`KernelContext::begin_registry_generation`]. Segments stamped with
+    /// the current generation belong to the live level's working set and
+    /// are exempt from the byte-cap GC, so a level whose own registrations
+    /// exceed the cap cannot thrash re-gathers against itself.
+    gen: AtomicU64,
 }
 
 impl SegmentData {
@@ -145,6 +158,17 @@ impl SegmentData {
     /// diagnostics; the full span never gathers).
     pub fn has_gathered(&self) -> bool {
         self.gathered.lock().unwrap().is_some()
+    }
+
+    /// Whether the resident gathered copy carries an int8-quantized shadow
+    /// (quant-route contexts only; tests / diagnostics).
+    pub fn has_quant(&self) -> bool {
+        self.gathered
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|g| g.quant.is_some())
+            .unwrap_or(false)
     }
 
     /// Drop the gathered feature copy (registry GC); returns the bytes
@@ -184,6 +208,10 @@ pub struct ValueStats {
     pub stitch_groups: u64,
     /// Backend dispatches that fanned out over row panels (> 1 worker).
     pub parallel_dispatches: u64,
+    /// Kernel entries evaluated against int8-quantized operands on the
+    /// approximation-tolerant routing/early-prediction paths (a subset of
+    /// [`Self::values_computed`], which stays the honest whole-run total).
+    pub quantized_values: u64,
 }
 
 impl ValueStats {
@@ -199,6 +227,7 @@ impl ValueStats {
             parallel_dispatches: self
                 .parallel_dispatches
                 .saturating_sub(earlier.parallel_dispatches),
+            quantized_values: self.quantized_values.saturating_sub(earlier.quantized_values),
         }
     }
 }
@@ -212,6 +241,7 @@ struct ValueCounters {
     stitched_rows: AtomicU64,
     stitch_groups: AtomicU64,
     parallel_dispatches: AtomicU64,
+    quantized_values: AtomicU64,
 }
 
 /// Kernel-access context for one dataset: rows, norms, backend, shared
@@ -236,6 +266,13 @@ pub struct KernelContext<'a> {
     registry_peak: AtomicUsize,
     /// Segments whose gathered features were dropped and rebuilt on demand.
     regathers: AtomicU64,
+    /// Current registry generation (0 = generations never marked; the GC
+    /// then falls back to plain oldest-first). Bumped once per divide
+    /// level by [`Self::begin_registry_generation`].
+    registry_gen: AtomicU64,
+    /// Build int8-quantized shadows alongside gathered segment features
+    /// for the approximation-tolerant routing paths (`--quant-route`).
+    quant_route: bool,
 }
 
 impl<'a> KernelContext<'a> {
@@ -258,6 +295,7 @@ impl<'a> KernelContext<'a> {
             cols: None,
             gathered: Mutex::new(None),
             len: ds.len(),
+            gen: AtomicU64::new(0),
         });
         KernelContext {
             ds,
@@ -271,6 +309,8 @@ impl<'a> KernelContext<'a> {
             registry_bytes: AtomicUsize::new(0),
             registry_peak: AtomicUsize::new(0),
             regathers: AtomicU64::new(0),
+            registry_gen: AtomicU64::new(0),
+            quant_route: false,
         }
     }
 
@@ -320,6 +360,32 @@ impl<'a> KernelContext<'a> {
     /// How many times a GC-dropped segment had to re-gather its features.
     pub fn segment_regathers(&self) -> u64 {
         self.regathers.load(Ordering::Relaxed)
+    }
+
+    /// Build int8-quantized shadows alongside gathered segment features —
+    /// the storage behind the `--quant-route` approximation-tolerant
+    /// routing/early-prediction paths. Exact dispatches never read them.
+    pub fn with_quant_route(mut self, on: bool) -> Self {
+        self.quant_route = on;
+        self
+    }
+
+    /// Whether quantized routing operands are enabled for this context.
+    pub fn quant_route(&self) -> bool {
+        self.quant_route
+    }
+
+    /// Open a new registry generation: segments registered (or re-gathered)
+    /// from now on are the *live level's working set* and exempt from the
+    /// byte-cap GC, which only evicts segments of earlier generations. This
+    /// floors `--registry-cap-mb` at the live level's working set, so a
+    /// deep run whose current level alone exceeds the cap degrades to
+    /// "over cap until the next level" instead of thrashing re-gathers
+    /// within the level. The driver calls this once per divide level (and
+    /// once before refine registrations). Never calling it (generation
+    /// stays 0) keeps the legacy oldest-first behavior.
+    pub fn begin_registry_generation(&self) {
+        self.registry_gen.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn ds(&self) -> &'a Dataset {
@@ -399,6 +465,7 @@ impl<'a> KernelContext<'a> {
                 cols: Some(cols.to_vec()),
                 gathered: Mutex::new(Some(Arc::new(gathered))),
                 len: cols.len(),
+                gen: AtomicU64::new(self.registry_gen.load(Ordering::Relaxed)),
             });
             reg.push(Arc::clone(&seg));
             seg
@@ -416,7 +483,12 @@ impl<'a> KernelContext<'a> {
             xs.extend_from_slice(self.ds.row(c));
             norms.push(self.norms[c]);
         }
-        GatheredCols { xs, norms }
+        let quant = if self.quant_route {
+            Some(QuantizedRows::from_rows(&xs, dim))
+        } else {
+            None
+        };
+        GatheredCols { xs, norms, quant }
     }
 
     fn add_registry_bytes(&self, bytes: usize) {
@@ -437,6 +509,9 @@ impl<'a> KernelContext<'a> {
             let g = Arc::new(self.gather_cols(cols));
             self.add_registry_bytes(g.bytes());
             self.regathers.fetch_add(1, Ordering::Relaxed);
+            // A re-gathered segment is live again: pull it into the current
+            // generation so the GC stops treating it as evictable history.
+            seg.gen.store(self.registry_gen.load(Ordering::Relaxed), Ordering::Relaxed);
             *slot = Some(Arc::clone(&g));
             g
         };
@@ -449,16 +524,29 @@ impl<'a> KernelContext<'a> {
     /// divide phase registers one generation of segments per level, so by
     /// the time a new level's registrations overflow the cap, the oldest
     /// generations are already solved. `keep` (the segment that triggered
-    /// enforcement) is never dropped.
+    /// enforcement) is never dropped — and neither is any segment of the
+    /// **current** registry generation (the live level's working set; see
+    /// [`Self::begin_registry_generation`]), so the cap is effectively
+    /// floored at the live level and cannot thrash re-gathers within it.
+    /// When generations were never marked (`registry_gen == 0`) every
+    /// partial segment is a candidate, preserving the legacy behavior.
     fn enforce_registry_cap(&self, keep: u32) {
         if self.registry_cap == 0
             || self.registry_bytes.load(Ordering::Relaxed) <= self.registry_cap
         {
             return;
         }
+        let cur_gen = self.registry_gen.load(Ordering::Relaxed);
         let candidates: Vec<SegmentRef> = {
             let reg = self.segments.lock().unwrap();
-            reg.iter().skip(1).filter(|s| s.id != keep).cloned().collect()
+            reg.iter()
+                .skip(1)
+                .filter(|s| {
+                    s.id != keep
+                        && (cur_gen == 0 || s.gen.load(Ordering::Relaxed) < cur_gen)
+                })
+                .cloned()
+                .collect()
         };
         for seg in candidates {
             if self.registry_bytes.load(Ordering::Relaxed) <= self.registry_cap {
@@ -818,6 +906,14 @@ impl<'a> KernelContext<'a> {
         self.counters.values_computed.fetch_add(entries, Ordering::Relaxed);
     }
 
+    /// Record kernel entries evaluated against int8-quantized operands
+    /// (quantized routing / early-prediction block passes). These entries
+    /// are *also* reported through [`Self::count_external_values`] by
+    /// their callers; this counter tracks what fraction ran quantized.
+    pub fn count_quantized_values(&self, entries: u64) {
+        self.counters.quantized_values.fetch_add(entries, Ordering::Relaxed);
+    }
+
     pub fn stats(&self) -> CacheStats {
         self.cache.stats()
     }
@@ -832,6 +928,7 @@ impl<'a> KernelContext<'a> {
             stitched_rows: self.counters.stitched_rows.load(Ordering::Relaxed),
             stitch_groups: self.counters.stitch_groups.load(Ordering::Relaxed),
             parallel_dispatches: self.counters.parallel_dispatches.load(Ordering::Relaxed),
+            quantized_values: self.counters.quantized_values.load(Ordering::Relaxed),
         }
     }
 
@@ -1375,6 +1472,74 @@ mod tests {
         assert_eq!(&*row_capped, &*row_uncapped);
         assert!(ctx.segment_regathers() >= 1, "re-gather not counted");
         assert_eq!(uncapped.segment_regathers(), 0);
+    }
+
+    /// Satellite (registry GC pressure fix): segments of the **current**
+    /// registry generation are exempt from the byte cap — the cap is
+    /// floored at the live level's working set, so a level that alone
+    /// exceeds the cap serves all its rows without a single re-gather.
+    /// Opening the next generation makes the old level evictable again.
+    #[test]
+    fn registry_generation_floor_protects_live_level() {
+        let (ds, k) = setup(32);
+        let n = ds.len();
+        let seg_bytes = 16 * (ds.dim + 1) * 4;
+        // Cap below the live level's 3-segment working set.
+        let ctx = KernelContext::new(&ds, &k, 4 << 20).with_registry_cap(seg_bytes * 3 / 2);
+        ctx.begin_registry_generation();
+        let halves: Vec<Vec<usize>> = vec![
+            (0..n).filter(|i| i % 2 == 0).collect(),
+            (0..n).filter(|i| i % 2 == 1).collect(),
+            (0..n).filter(|i| i / 2 % 2 == 0).collect(),
+        ];
+        let segs: Vec<SegmentRef> =
+            halves.iter().map(|m| ctx.register_segment(m)).collect();
+        // The whole live level keeps its gathered features despite the cap…
+        for (si, seg) in segs.iter().enumerate() {
+            assert!(seg.has_gathered(), "live-level segment {si} was evicted");
+        }
+        // …so serving every segment's rows never re-gathers.
+        for seg in &segs {
+            ctx.segment_row(seg, 3);
+        }
+        assert_eq!(ctx.segment_regathers(), 0, "live level thrashed re-gathers");
+        // Next level: the old generation becomes evictable history.
+        ctx.begin_registry_generation();
+        let next: Vec<usize> = (0..n).filter(|i| i % 3 == 0).collect();
+        let seg_next = ctx.register_segment(&next);
+        assert!(seg_next.has_gathered(), "new live segment evicted");
+        assert!(
+            segs.iter().any(|s| !s.has_gathered()),
+            "previous generation survived enforcement over cap"
+        );
+    }
+
+    /// Tentpole storage: a `--quant-route` context stores an int8 shadow
+    /// alongside each gathered segment (accounted in registry bytes);
+    /// exact dispatches are bit-identical with and without it.
+    #[test]
+    fn quant_route_stores_quantized_shadows_in_registry() {
+        let (ds, k) = setup(24);
+        let n = ds.len();
+        let plain = KernelContext::new(&ds, &k, 4 << 20);
+        let quant = KernelContext::new(&ds, &k, 4 << 20).with_quant_route(true);
+        assert!(quant.quant_route() && !plain.quant_route());
+        let members: Vec<usize> = (0..n).filter(|i| i % 2 == 0).collect();
+        let sp = plain.register_segment(&members);
+        let sq = quant.register_segment(&members);
+        assert!(sq.has_quant() && !sp.has_quant());
+        assert!(
+            quant.registry_bytes() > plain.registry_bytes(),
+            "quantized shadow not accounted: {} vs {}",
+            quant.registry_bytes(),
+            plain.registry_bytes()
+        );
+        // The exact dispatch path never reads the shadow.
+        assert_eq!(&*quant.segment_row(&sq, 7), &*plain.segment_row(&sp, 7));
+        // The quantized counter is caller-driven and starts at zero.
+        assert_eq!(quant.value_stats().quantized_values, 0);
+        quant.count_quantized_values(42);
+        assert_eq!(quant.value_stats().quantized_values, 42);
     }
 
     /// Large dispatches fan out over row panels (counted), bit-identically

@@ -106,6 +106,10 @@ pub struct RunConfig {
     /// Cap (in MB) on gathered segment features (`--registry-cap-mb`;
     /// 0 = keep every solved level's gathered copy — the default).
     pub registry_cap_mb: usize,
+    /// Route kmeans assignment / early-prediction routing through int8-
+    /// quantized sample operands (`--quant-route`; exact solves are
+    /// unaffected).
+    pub quant_route: bool,
     pub save_model: Option<String>,
 }
 
@@ -131,6 +135,7 @@ impl Default for RunConfig {
             budget: 64,
             segment_views: true,
             registry_cap_mb: 0,
+            quant_route: false,
             save_model: None,
         }
     }
@@ -178,6 +183,13 @@ impl RunConfig {
                 }
             }
             "registry_cap_mb" | "registry-cap-mb" => self.registry_cap_mb = val.parse()?,
+            "quant_route" | "quant-route" => {
+                self.quant_route = match val {
+                    "1" => true,
+                    "0" => false,
+                    other => other.parse()?,
+                }
+            }
             "save_model" | "save-model" => self.save_model = Some(val.to_string()),
             other => bail!("unknown config key '{other}'"),
         }
@@ -225,6 +237,7 @@ impl RunConfig {
             keep_level_alphas: false,
             segment_views: self.segment_views,
             registry_cap_bytes: self.registry_cap_mb << 20,
+            quant_route: self.quant_route,
         })
     }
 
@@ -247,6 +260,7 @@ impl RunConfig {
             ("budget", Json::from(self.budget)),
             ("segments", Json::from(self.segment_views)),
             ("registry_cap_mb", Json::from(self.registry_cap_mb)),
+            ("quant_route", Json::from(self.quant_route)),
         ])
     }
 }
@@ -329,6 +343,21 @@ mod tests {
         assert_eq!(cfg.dcsvm_config().unwrap().registry_cap_bytes, 8 << 20);
         assert_eq!(cfg.to_json().get("registry_cap_mb").as_usize(), Some(8));
         assert!(cfg.apply("registry_cap_mb", "lots").is_err());
+    }
+
+    #[test]
+    fn quant_route_flag_parses_and_flows() {
+        let mut cfg = RunConfig::default();
+        assert!(!cfg.quant_route, "quantized routing defaults off");
+        assert!(!cfg.dcsvm_config().unwrap().quant_route);
+        cfg.apply("quant-route", "true").unwrap();
+        assert!(cfg.quant_route);
+        assert!(cfg.dcsvm_config().unwrap().quant_route);
+        cfg.apply("quant_route", "0").unwrap();
+        assert!(!cfg.quant_route);
+        assert!(cfg.apply("quant-route", "sometimes").is_err());
+        cfg.apply("quant-route", "1").unwrap();
+        assert_eq!(cfg.to_json().get("quant_route").as_bool(), Some(true));
     }
 
     #[test]

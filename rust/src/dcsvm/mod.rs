@@ -81,7 +81,18 @@ pub struct DcSvmConfig {
     /// unlimited): once a level is solved and the next level's
     /// registrations push past the cap, the oldest segments drop their
     /// gathered copies (column lists stay, so stitching is unaffected).
+    /// The cap is floored at the live level's working set — the driver
+    /// marks each level as a registry generation
+    /// ([`KernelContext::begin_registry_generation`]), and the GC only
+    /// evicts earlier generations, so a level that alone exceeds the cap
+    /// cannot thrash re-gathers against itself.
     pub registry_cap_bytes: usize,
+    /// Route kmeans assignment passes through int8-quantized sample
+    /// operands (`--quant-route`). Approximation-tolerant paths only —
+    /// cluster/refine/final solves stay exact; the early model's router
+    /// stays quantized for prediction. Decision flips vs the f32 path are
+    /// gated in CI.
+    pub quant_route: bool,
 }
 
 impl Default for DcSvmConfig {
@@ -105,6 +116,7 @@ impl Default for DcSvmConfig {
             keep_level_alphas: false,
             segment_views: true,
             registry_cap_bytes: 0,
+            quant_route: false,
         }
     }
 }
@@ -180,6 +192,13 @@ pub struct DcSvmResult {
     /// GC's high-water mark; equals the total gathered bytes when no cap
     /// is set).
     pub registry_peak_bytes: u64,
+    /// Times a GC-dropped segment had to re-gather its features. With the
+    /// per-level generation floor this stays 0 in a normal run even under
+    /// a tight `registry_cap_bytes` (`tests/dcsvm_e2e.rs`).
+    pub segment_regathers: u64,
+    /// Kernel entries evaluated against int8-quantized routing operands
+    /// (0 unless `quant_route`).
+    pub quantized_values: u64,
     /// Shared-cache counters over the whole run (note/bench reporting).
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -219,7 +238,8 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
     let mut rng = Pcg64::new(cfg.seed);
     let ctx = KernelContext::new(ds, kernel, cfg.cache_bytes)
         .with_threads(cfg.threads)
-        .with_registry_cap(cfg.registry_cap_bytes);
+        .with_registry_cap(cfg.registry_cap_bytes)
+        .with_quant_route(cfg.quant_route);
 
     let mut alpha = vec![0f64; n];
     let mut levels = Vec::new();
@@ -231,6 +251,9 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
     for level in (1..=cfg.levels).rev() {
         let k = cfg.k_base.pow(level as u32).min(n.max(1));
         let tl = Instant::now();
+        // This level's cluster segments are the live working set: the
+        // registry GC may evict earlier levels but never this one.
+        ctx.begin_registry_generation();
 
         // Adaptive sampling pool: SVs of the level below (paper Alg. 1).
         let sv_pool: Option<Vec<usize>> = if cfg.adaptive && level < cfg.levels {
@@ -343,6 +366,8 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
             parallel_dispatches: vs.parallel_dispatches,
             stitch_groups: vs.stitch_groups,
             registry_peak_bytes: ctx.registry_peak_bytes() as u64,
+            segment_regathers: ctx.segment_regathers(),
+            quantized_values: vs.quantized_values,
             cache_hits: cs.hits,
             cache_misses: cs.misses,
             pre_final_alpha: None,
@@ -358,6 +383,9 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         let tr = Instant::now();
         let sv_idx: Vec<usize> = (0..n).filter(|&i| alpha[i] > 0.0).collect();
         if sv_idx.len() >= 2 && sv_idx.len() < n {
+            // The SV segment is the new live working set; divide-phase
+            // segments become evictable history.
+            ctx.begin_registry_generation();
             let a0: Vec<f64> = sv_idx.iter().map(|&i| alpha[i]).collect();
             // The refine solve gets its own SV-set segment: it computes
             // K(SV, SV) instead of K(SV, ·), and the final solve stitches
@@ -411,6 +439,8 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         parallel_dispatches: vs.parallel_dispatches,
         stitch_groups: vs.stitch_groups,
         registry_peak_bytes: ctx.registry_peak_bytes() as u64,
+        segment_regathers: ctx.segment_regathers(),
+        quantized_values: vs.quantized_values,
         cache_hits: cs.hits,
         cache_misses: cs.misses,
         pre_final_alpha,

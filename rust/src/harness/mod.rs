@@ -81,6 +81,16 @@ pub struct Outcome {
     /// Peak bytes of gathered segment features (the registry-GC
     /// high-water mark; DC-SVM runs).
     pub registry_bytes: Option<u64>,
+    /// Inner-kernel dispatch tier the process selected at startup
+    /// ("scalar" | "avx2" | "neon"; [`crate::kernel::simd_tier`]) — lets
+    /// bench diffs pin which tier produced a record.
+    pub simd_tier: &'static str,
+    /// Kernel entries evaluated against int8-quantized routing operands
+    /// (DC-SVM runs; 0 unless `--quant-route`).
+    pub quantized_values: Option<u64>,
+    /// Times a GC-dropped segment re-gathered its features (DC-SVM runs;
+    /// stays 0 under the per-level generation floor).
+    pub segment_regathers: Option<u64>,
     /// Free-text extras (iteration counts, per-algo details). Structured
     /// metrics live in the typed fields above, not here.
     pub note: String,
@@ -129,6 +139,15 @@ impl Outcome {
             (
                 "registry_bytes",
                 self.registry_bytes.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            ("simd_tier", Json::from(self.simd_tier)),
+            (
+                "quantized_values",
+                self.quantized_values.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "segment_regathers",
+                self.segment_regathers.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
             ),
             ("note", Json::from(self.note.as_str())),
         ])
@@ -181,6 +200,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
         _ => Some(KernelContext::new(te, kernel.as_ref(), 1 << 20).with_threads(cfg.threads)),
     };
     let t0 = std::time::Instant::now();
+    // Resolved once per process ([`crate::kernel::simd_tier`]); recorded on
+    // every outcome so bench artifacts pin the tier they were produced on.
+    let tier = crate::kernel::simd_tier().name();
 
     let outcome = match cfg.algo {
         Algo::Libsvm => {
@@ -204,6 +226,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 parallel_dispatches: Some(vs.parallel_dispatches),
                 stitch_groups: Some(vs.stitch_groups),
                 registry_bytes: None,
+                simd_tier: tier,
+                quantized_values: None,
+                segment_regathers: None,
                 note: format!("iters={}", res.iterations),
             }
         }
@@ -243,6 +268,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 parallel_dispatches: Some(res.parallel_dispatches),
                 stitch_groups: Some(res.stitch_groups),
                 registry_bytes: Some(res.registry_peak_bytes),
+                simd_tier: tier,
+                quantized_values: Some(res.quantized_values),
+                segment_regathers: Some(res.segment_regathers),
                 note,
             }
         }
@@ -273,6 +301,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 parallel_dispatches: None,
                 stitch_groups: None,
                 registry_bytes: None,
+                simd_tier: tier,
+                quantized_values: None,
+                segment_regathers: None,
                 note: format!("levels={:?}", res.level_sv_counts),
             }
         }
@@ -303,6 +334,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 parallel_dispatches: None,
                 stitch_groups: None,
                 registry_bytes: None,
+                simd_tier: tier,
+                quantized_values: None,
+                segment_regathers: None,
                 note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
             }
         }
@@ -334,6 +368,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 parallel_dispatches: None,
                 stitch_groups: None,
                 registry_bytes: None,
+                simd_tier: tier,
+                quantized_values: None,
+                segment_regathers: None,
                 note: format!("landmarks={}", cfg.budget),
             }
         }
@@ -361,6 +398,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 parallel_dispatches: None,
                 stitch_groups: None,
                 registry_bytes: None,
+                simd_tier: tier,
+                quantized_values: None,
+                segment_regathers: None,
                 note: format!("features={}", cfg.budget * 8),
             }
         }
@@ -388,6 +428,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 parallel_dispatches: None,
                 stitch_groups: None,
                 registry_bytes: None,
+                simd_tier: tier,
+                quantized_values: None,
+                segment_regathers: None,
                 note: format!("units={}", cfg.budget),
             }
         }
@@ -420,6 +463,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 parallel_dispatches: None,
                 stitch_groups: None,
                 registry_bytes: None,
+                simd_tier: tier,
+                quantized_values: None,
+                segment_regathers: None,
                 note: format!("basis={}", model.basis_size),
             }
         }
@@ -521,6 +567,17 @@ mod tests {
             "registry peak not recorded: {:?}",
             out.registry_bytes
         );
+        assert!(
+            ["scalar", "avx2", "neon"].contains(&out.simd_tier),
+            "bad tier {}",
+            out.simd_tier
+        );
+        assert_eq!(
+            out.quantized_values,
+            Some(0),
+            "quantized_values must be 0 without --quant-route"
+        );
+        assert_eq!(out.segment_regathers, Some(0), "generation floor regathered");
         let j = out.to_json();
         assert_eq!(j.get("cache_hit_rate").as_f64(), Some(hit));
         assert!(j.get("final_rows").as_f64().is_some());
@@ -530,6 +587,9 @@ mod tests {
         assert!(j.get("parallel_dispatches").as_f64().is_some());
         assert!(j.get("stitch_groups").as_f64().is_some());
         assert!(j.get("registry_bytes").as_f64().is_some());
+        assert_eq!(j.get("simd_tier").as_str(), Some(out.simd_tier));
+        assert_eq!(j.get("quantized_values").as_f64(), Some(0.0));
+        assert_eq!(j.get("segment_regathers").as_f64(), Some(0.0));
     }
 
     #[test]

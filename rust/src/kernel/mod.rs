@@ -12,6 +12,9 @@
 //!   artifacts via PJRT — the production hot path.
 
 pub mod native;
+pub mod quant;
+
+pub use native::{simd_tier, SimdTier};
 
 use crate::util::threadpool::scope_map;
 

@@ -5,6 +5,16 @@
 //! dimension, followed by the elementwise kernel transform. Used as the
 //! always-available backend, the oracle the PJRT backend is property-tested
 //! against, and the comparator in `bench_kernel_micro`.
+//!
+//! The inner dot product runs on one of three instruction tiers, detected
+//! once per process ([`simd_tier`]): explicit AVX2 intrinsics on x86_64,
+//! explicit NEON intrinsics on aarch64, and the portable scalar
+//! lane-accumulator kernel everywhere else (or when `DCSVM_FORCE_SCALAR=1`).
+//! All three tiers share the [`LANES`]-lane accumulator layout and the
+//! exact pairwise reduction order, so kernel values are bit-identical
+//! across tiers — the scalar-vs-SIMD CI gate pins it.
+
+use std::sync::OnceLock;
 
 use super::{BlockKernel, KernelKind};
 use crate::util::threadpool::scope_map;
@@ -14,9 +24,63 @@ use crate::util::threadpool::scope_map;
 /// this so every chunk panels exactly like the serial sweep.
 const PANEL: usize = 4;
 
-/// Independent accumulator lanes of [`dot1`] (fixed — part of the
-/// arithmetic contract, see the `dot1` docs).
-const LANES: usize = 4;
+/// Independent accumulator lanes of the inner dot kernel (fixed — part of
+/// the arithmetic contract, see the [`dot1_scalar`] docs). 8 lanes = one
+/// AVX2 `f32x8` register = two NEON `f32x4` registers, so on every tier
+/// the same lane accumulates the same products.
+const LANES: usize = 8;
+
+/// Inner-kernel instruction tier selected once per process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable lane-accumulator loop (always available; forced by
+    /// `DCSVM_FORCE_SCALAR=1`).
+    Scalar,
+    /// Explicit `std::arch` AVX2 intrinsics (x86_64 with runtime support).
+    Avx2,
+    /// Explicit `std::arch` NEON intrinsics (aarch64 with runtime support).
+    Neon,
+}
+
+impl SimdTier {
+    /// Stable lowercase tag ("scalar" / "avx2" / "neon") — recorded in the
+    /// harness outcome so BENCH_ci.json says which tier produced a run.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+}
+
+/// The process-wide inner-kernel tier: detected on first use, constant
+/// afterwards (one relaxed atomic load per block dispatch, never per dot).
+/// `DCSVM_FORCE_SCALAR=1` pins the scalar tier — CI runs the exact-path
+/// smoke twice, forced-scalar and auto, and asserts bit-identical results.
+pub fn simd_tier() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(detect_tier)
+}
+
+fn detect_tier() -> SimdTier {
+    if std::env::var("DCSVM_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        return SimdTier::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdTier::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdTier::Neon;
+        }
+    }
+    SimdTier::Scalar
+}
 
 /// Multiply-add count (`nq · nd · dim`) below which a block dispatch stays
 /// single-threaded: small dispatches (the solver's per-row fetches, tiny
@@ -54,14 +118,17 @@ impl NativeKernel {
 
 /// One dot product `<q, d>` — THE inner kernel every block evaluation in
 /// this backend funnels through, whatever the dispatch shape, panel
-/// position, or thread. `chunks_exact` gives the compiler fixed-length
-/// bounds-check-free bodies it can unroll/vectorize, and the [`LANES`]
-/// independent accumulators (reduced pairwise, then the remainder added
-/// sequentially) make the accumulation order a pure function of
+/// position, thread, or instruction tier. `chunks_exact` gives the compiler
+/// fixed-length bounds-check-free bodies it can unroll/vectorize, and the
+/// [`LANES`] independent accumulators (reduced pairwise, then the remainder
+/// added sequentially) make the accumulation order a pure function of
 /// `(q, d, dim)` — which is exactly why kernel entries are bit-identical
-/// across full-row vs segment dispatches and 1 vs N threads.
+/// across full-row vs segment dispatches and 1 vs N threads. The SIMD
+/// tiers (`dot1_avx2`, `dot1_neon`) perform these exact per-lane
+/// operations in vector registers (separate mul then add — no FMA, which
+/// would skip the intermediate rounding), so they are bit-identical too.
 #[inline]
-fn dot1(q: &[f32], d: &[f32]) -> f32 {
+fn dot1_scalar(q: &[f32], d: &[f32]) -> f32 {
     debug_assert_eq!(q.len(), d.len());
     let mut lanes = [0f32; LANES];
     let mut qc = q.chunks_exact(LANES);
@@ -71,18 +138,133 @@ fn dot1(q: &[f32], d: &[f32]) -> f32 {
             *lane += qv * dv;
         }
     }
-    let mut acc = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    let mut acc = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
     for (&qv, &dv) in qc.remainder().iter().zip(dc.remainder()) {
         acc += qv * dv;
     }
     acc
 }
 
+/// AVX2 `dot1`: one `f32x8` accumulator is exactly the scalar kernel's 8
+/// lanes; `_mm256_mul_ps` + `_mm256_add_ps` (NOT fused) round per lane the
+/// way the scalar `*` and `+=` do, and the reduction extracts the lanes and
+/// adds them in the scalar kernel's pairwise order — bit-identical output.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 (guarded by [`simd_tier`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot1_avx2(q: &[f32], d: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(q.len(), d.len());
+    let n = q.len();
+    let chunks = n / LANES;
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let qv = _mm256_loadu_ps(q.as_ptr().add(i * LANES));
+        let dv = _mm256_loadu_ps(d.as_ptr().add(i * LANES));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(qv, dv));
+    }
+    let mut lanes = [0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    for j in chunks * LANES..n {
+        s += *q.get_unchecked(j) * *d.get_unchecked(j);
+    }
+    s
+}
+
+/// NEON `dot1`: two `f32x4` accumulators are the scalar kernel's lanes
+/// 0..4 and 4..8; `vmulq_f32` + `vaddq_f32` (not `vfmaq`) round per lane
+/// like the scalar kernel, and the reduction reads the 8 lanes back and
+/// adds them in the same pairwise order — bit-identical output.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON (guarded by [`simd_tier`]).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot1_neon(q: &[f32], d: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(q.len(), d.len());
+    let n = q.len();
+    let chunks = n / LANES;
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let qp = q.as_ptr().add(i * LANES);
+        let dp = d.as_ptr().add(i * LANES);
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(qp), vld1q_f32(dp)));
+        acc_hi = vaddq_f32(acc_hi, vmulq_f32(vld1q_f32(qp.add(4)), vld1q_f32(dp.add(4))));
+    }
+    let mut lanes = [0f32; LANES];
+    vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+    let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    for j in chunks * LANES..n {
+        s += *q.get_unchecked(j) * *d.get_unchecked(j);
+    }
+    s
+}
+
+/// Bind `$f` to the process's detected inner-dot function and run `$body`.
+/// The tier match happens ONCE per macro use (i.e. once per block dispatch,
+/// not once per dot), and each arm monomorphizes `$body` for its dot — the
+/// `#[target_feature]` kernels stay behind the one `unsafe` closure here.
+macro_rules! with_dot {
+    ($f:ident => $body:expr) => {
+        match simd_tier() {
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx2 => {
+                // SAFETY: simd_tier() returns Avx2 only when the running
+                // CPU reports AVX2 support.
+                let $f = |q: &[f32], d: &[f32]| unsafe { dot1_avx2(q, d) };
+                $body
+            }
+            #[cfg(target_arch = "aarch64")]
+            SimdTier::Neon => {
+                // SAFETY: simd_tier() returns Neon only when the running
+                // CPU reports NEON support.
+                let $f = |q: &[f32], d: &[f32]| unsafe { dot1_neon(q, d) };
+                $body
+            }
+            _ => {
+                let $f = dot1_scalar;
+                $body
+            }
+        }
+    };
+}
+
+/// The scalar-tier dot product, callable regardless of the detected tier —
+/// the comparator side of the scalar-vs-SIMD bit-identity gate and the
+/// `bench_kernel_micro` per-tier baseline.
+pub fn dot_scalar(q: &[f32], d: &[f32]) -> f32 {
+    dot1_scalar(q, d)
+}
+
+/// The detected-tier dot product (what every block dispatch runs inside).
+/// Bit-identical to [`dot_scalar`] on every tier — asserted in tests and
+/// per bench run.
+pub fn dot_detected(q: &[f32], d: &[f32]) -> f32 {
+    with_dot!(f => f(q, d))
+}
+
 /// Register-blocked dot-product panel: computes `out[i*nd+j] = <q_i, d_j>`
 /// for a 4-row query panel — `dj` stays hot in L1 across the 4 rows. Each
-/// row's arithmetic is [`dot1`], so panel membership never changes a bit.
+/// row's arithmetic is the tier dot `f`, so panel membership never changes
+/// a bit.
 #[inline]
-fn dot_panel4(xq: &[f32], xd: &[f32], dim: usize, nd: usize, out: &mut [f32]) {
+fn dot_panel4_impl<F: Fn(&[f32], &[f32]) -> f32 + Copy>(
+    f: F,
+    xq: &[f32],
+    xd: &[f32],
+    dim: usize,
+    nd: usize,
+    out: &mut [f32],
+) {
     // xq: [4, dim], out: [4, nd]
     let q0 = &xq[0..dim];
     let q1 = &xq[dim..2 * dim];
@@ -90,21 +272,70 @@ fn dot_panel4(xq: &[f32], xd: &[f32], dim: usize, nd: usize, out: &mut [f32]) {
     let q3 = &xq[3 * dim..4 * dim];
     for j in 0..nd {
         let dj = &xd[j * dim..(j + 1) * dim];
-        out[j] = dot1(q0, dj);
-        out[nd + j] = dot1(q1, dj);
-        out[2 * nd + j] = dot1(q2, dj);
-        out[3 * nd + j] = dot1(q3, dj);
+        out[j] = f(q0, dj);
+        out[nd + j] = f(q1, dj);
+        out[2 * nd + j] = f(q2, dj);
+        out[3 * nd + j] = f(q3, dj);
     }
 }
 
 #[inline]
-fn dot_row(q: &[f32], xd: &[f32], dim: usize, nd: usize, out: &mut [f32]) {
+fn dot_row_impl<F: Fn(&[f32], &[f32]) -> f32 + Copy>(
+    f: F,
+    q: &[f32],
+    xd: &[f32],
+    dim: usize,
+    nd: usize,
+    out: &mut [f32],
+) {
     for j in 0..nd {
-        out[j] = dot1(q, &xd[j * dim..(j + 1) * dim]);
+        out[j] = f(q, &xd[j * dim..(j + 1) * dim]);
     }
 }
 
-/// Fill `out` ([nq, nd]) with the raw cross products Xq·Xdᵀ.
+/// Single-row sweep on the detected tier (the panel-tail path, exposed for
+/// the panel-vs-tail bit-identity test).
+fn dot_row(q: &[f32], xd: &[f32], dim: usize, nd: usize, out: &mut [f32]) {
+    with_dot!(f => dot_row_impl(f, q, xd, dim, nd, out))
+}
+
+fn cross_products_impl<F: Fn(&[f32], &[f32]) -> f32 + Copy>(
+    f: F,
+    xq: &[f32],
+    nq: usize,
+    xd: &[f32],
+    nd: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    let mut i = 0;
+    while i + 4 <= nq {
+        dot_panel4_impl(
+            f,
+            &xq[i * dim..(i + 4) * dim],
+            xd,
+            dim,
+            nd,
+            &mut out[i * nd..(i + 4) * nd],
+        );
+        i += 4;
+    }
+    while i < nq {
+        dot_row_impl(
+            f,
+            &xq[i * dim..(i + 1) * dim],
+            xd,
+            dim,
+            nd,
+            &mut out[i * nd..(i + 1) * nd],
+        );
+        i += 1;
+    }
+}
+
+/// Fill `out` ([nq, nd]) with the raw cross products Xq·Xdᵀ on the
+/// detected instruction tier. The tier is resolved once per call, and every
+/// tier's arithmetic is bit-identical (see [`dot1_scalar`]).
 pub fn cross_products(
     xq: &[f32],
     nq: usize,
@@ -116,21 +347,7 @@ pub fn cross_products(
     debug_assert_eq!(xq.len(), nq * dim);
     debug_assert_eq!(xd.len(), nd * dim);
     debug_assert_eq!(out.len(), nq * nd);
-    let mut i = 0;
-    while i + 4 <= nq {
-        dot_panel4(
-            &xq[i * dim..(i + 4) * dim],
-            xd,
-            dim,
-            nd,
-            &mut out[i * nd..(i + 4) * nd],
-        );
-        i += 4;
-    }
-    while i < nq {
-        dot_row(&xq[i * dim..(i + 1) * dim], xd, dim, nd, &mut out[i * nd..(i + 1) * nd]);
-        i += 1;
-    }
+    with_dot!(f => cross_products_impl(f, xq, nq, xd, nd, dim, out))
 }
 
 #[allow(clippy::too_many_arguments)] // flat block ABI; see the trait docs
@@ -153,7 +370,7 @@ impl BlockKernel for NativeKernel {
     /// [`PANEL`]-aligned chunks and each chunk runs the ordinary
     /// [`BlockKernel::block`] on its own scoped worker, writing a disjoint
     /// `&mut` slice of `out`. Every row's arithmetic funnels through
-    /// [`dot1`] regardless of chunk or thread, so the result is
+    /// the same tier dot regardless of chunk or thread, so the result is
     /// bit-identical to the single-threaded sweep (property-tested below).
     fn block_par(
         &self,
@@ -193,25 +410,42 @@ impl BlockKernel for NativeKernel {
         let nq = q_norms.len();
         let nd = d_norms.len();
         cross_products(xq, nq, xd, nd, dim, out);
-        match self.kind {
-            KernelKind::Rbf { gamma } => {
-                for i in 0..nq {
-                    let qn = q_norms[i];
-                    let row = &mut out[i * nd..(i + 1) * nd];
-                    for (j, v) in row.iter_mut().enumerate() {
-                        let d2 = (qn + d_norms[j] - 2.0 * *v).max(0.0);
-                        *v = (-gamma * d2).exp();
-                    }
+        kernel_transform(self.kind, q_norms, d_norms, out);
+    }
+}
+
+/// Elementwise kernel transform over a cross-product block (`out[i*nd+j]`
+/// holds `<q_i, d_j>` on entry, `K(q_i, d_j)` on exit). Shared by the exact
+/// [`NativeKernel::block`] and the quantized routing path
+/// ([`crate::kernel::quant::QuantizedRows::block`]), so the two differ ONLY
+/// in how the cross products were produced.
+pub(crate) fn kernel_transform(
+    kind: KernelKind,
+    q_norms: &[f32],
+    d_norms: &[f32],
+    out: &mut [f32],
+) {
+    let nq = q_norms.len();
+    let nd = d_norms.len();
+    debug_assert_eq!(out.len(), nq * nd);
+    match kind {
+        KernelKind::Rbf { gamma } => {
+            for i in 0..nq {
+                let qn = q_norms[i];
+                let row = &mut out[i * nd..(i + 1) * nd];
+                for (j, v) in row.iter_mut().enumerate() {
+                    let d2 = (qn + d_norms[j] - 2.0 * *v).max(0.0);
+                    *v = (-gamma * d2).exp();
                 }
             }
-            KernelKind::Poly { gamma, eta } => {
-                for v in out.iter_mut() {
-                    let g = gamma * *v + eta;
-                    *v = g * g * g;
-                }
-            }
-            KernelKind::Linear => {}
         }
+        KernelKind::Poly { gamma, eta } => {
+            for v in out.iter_mut() {
+                let g = gamma * *v + eta;
+                *v = g * g * g;
+            }
+        }
+        KernelKind::Linear => {}
     }
 }
 
@@ -274,6 +508,35 @@ mod tests {
                 assert_eq!(out[i * nd + j].to_bits(), row[j].to_bits(), "[{i},{j}]");
             }
         }
+    }
+
+    /// Tentpole gate: the detected SIMD tier computes bit-identical dots to
+    /// the scalar kernel across lengths that hit every chunk/remainder
+    /// combination (on a scalar-only host both sides are the same kernel
+    /// and the assert is vacuous — CI exercises the SIMD side on x86_64).
+    #[test]
+    fn simd_and_scalar_dot_bit_identical() {
+        let mut rng = Pcg64::new(9);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 64, 100, 257] {
+            let q: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let d: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let s = dot_scalar(&q, &d);
+            let v = dot_detected(&q, &d);
+            assert_eq!(
+                s.to_bits(),
+                v.to_bits(),
+                "len={len} tier={}: scalar {s} vs detected {v}",
+                simd_tier().name()
+            );
+        }
+    }
+
+    /// The detected tier is one of the named tiers and stable across calls.
+    #[test]
+    fn simd_tier_is_stable_and_named() {
+        let t = simd_tier();
+        assert_eq!(t, simd_tier());
+        assert!(["scalar", "avx2", "neon"].contains(&t.name()));
     }
 
     /// Tentpole guarantee: the row-panel parallel dispatch is bit-identical

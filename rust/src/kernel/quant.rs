@@ -1,0 +1,297 @@
+//! Error-bounded int8 row quantization for approximation-tolerant paths.
+//!
+//! The paper's early-prediction argument (Hsieh, Si & Dhillon, ICML 2014,
+//! §5) already accepts approximate predictions from level-ℓ subproblem
+//! models; routing a query to its kernel-kmeans cluster is likewise robust
+//! to small kernel perturbations (the argmin over cluster distances moves
+//! only for queries near a cluster boundary). That licenses a quantized
+//! fast path for **routing and early prediction only** — the exact solver
+//! path never touches this module, which is why the scalar-vs-SIMD and
+//! 1-vs-N-thread bit-identity gates are unaffected by `--quant-route`.
+//!
+//! Each row is quantized independently with an affine (scale, zero-point)
+//! code: `v ≈ zero + scale · q` with `q ∈ [-127, 127]`. `scale` maps the
+//! row's exact `[min, max]` range onto the 254-step grid, so every value
+//! lands within half a step of a code point and the reconstruction error
+//! is bounded by `scale / 2` **per element** ([`QuantizedRows::error_bound`]
+//! — property-tested in this module). A constant row gets `scale = 0` and
+//! is carried exactly by its zero-point.
+//!
+//! Kernel blocks against quantized rows reuse the identity
+//! `<q, d̂_j> = zero_j · Σ_t q_t + scale_j · Σ_t q_t · data_jt`, then apply
+//! the SAME elementwise transform as the exact backend
+//! ([`super::native::kernel_transform`]) with the **exact** stored row
+//! norms — so the only approximation is the cross term, and its error is
+//! bounded by `error_bound(j) · ‖q‖₁`.
+
+use super::native::kernel_transform;
+use super::KernelKind;
+
+/// Int8-quantized row-major matrix with per-row affine codes. Stored
+/// alongside the exact `GatheredCols` features in the segment registry and
+/// inside the kmeans `Router` when `--quant-route` is on.
+#[derive(Clone, Debug)]
+pub struct QuantizedRows {
+    /// `[n, dim]` row-major int8 codes.
+    data: Vec<i8>,
+    /// Per-row step size (`(max - min) / 254`; 0 for constant rows).
+    scale: Vec<f32>,
+    /// Per-row zero-point (`(max + min) / 2` — the range midpoint, so the
+    /// codes are symmetric in `[-127, 127]`).
+    zero: Vec<f32>,
+    dim: usize,
+}
+
+impl QuantizedRows {
+    /// Quantize `x` (`[n, dim]` row-major f32) row by row.
+    pub fn from_rows(x: &[f32], dim: usize) -> QuantizedRows {
+        assert!(dim > 0 || x.is_empty(), "dim 0 with non-empty data");
+        let n = if dim == 0 { 0 } else { x.len() / dim };
+        assert_eq!(x.len(), n * dim, "row data not a multiple of dim");
+        let mut data = Vec::with_capacity(n * dim);
+        let mut scale = Vec::with_capacity(n);
+        let mut zero = Vec::with_capacity(n);
+        for r in 0..n {
+            let row = &x[r * dim..(r + 1) * dim];
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in row {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let (z, s) = if hi > lo {
+                ((hi + lo) * 0.5, (hi - lo) / 254.0)
+            } else {
+                // Constant row: the zero-point carries the value exactly.
+                (lo, 0.0)
+            };
+            for &v in row {
+                let q = if s == 0.0 {
+                    0i8
+                } else {
+                    ((v - z) / s).round().clamp(-127.0, 127.0) as i8
+                };
+                data.push(q);
+            }
+            scale.push(s);
+            zero.push(z);
+        }
+        QuantizedRows { data, scale, zero, dim }
+    }
+
+    /// Number of quantized rows.
+    pub fn len(&self) -> usize {
+        self.scale.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scale.is_empty()
+    }
+
+    /// Features per row.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Heap bytes of the quantized store (counted against the segment
+    /// registry cap next to the f32 features it shadows).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + (self.scale.len() + self.zero.len()) * 4
+    }
+
+    /// Per-element reconstruction error bound of row `r`: every dequantized
+    /// value is within `scale / 2` of the original (the row range maps onto
+    /// the ±127 grid exactly, so clamping never adds error).
+    pub fn error_bound(&self, r: usize) -> f32 {
+        self.scale[r] * 0.5
+    }
+
+    /// Reconstruct row `r` (`zero + scale · q` per element).
+    pub fn dequantize_row(&self, r: usize) -> Vec<f32> {
+        let z = self.zero[r];
+        let s = self.scale[r];
+        self.data[r * self.dim..(r + 1) * self.dim]
+            .iter()
+            .map(|&q| z + s * q as f32)
+            .collect()
+    }
+
+    /// Kernel block `out[i*n + j] = K(q_i, d̂_j)` of f32 queries against the
+    /// quantized rows: the cross term expands the affine code
+    /// (`zero_j · Σ_t q_t` is hoisted per query), then the exact backend's
+    /// elementwise transform runs with the **exact** `d_norms` the caller
+    /// stored at quantization time. Deterministic and thread-invariant —
+    /// each `(i, j)` value is a pure function of the query and the codes.
+    pub fn block(
+        &self,
+        kind: KernelKind,
+        xq: &[f32],
+        q_norms: &[f32],
+        d_norms: &[f32],
+        out: &mut [f32],
+    ) {
+        let nq = q_norms.len();
+        let nd = self.len();
+        let dim = self.dim;
+        debug_assert_eq!(xq.len(), nq * dim);
+        debug_assert_eq!(d_norms.len(), nd);
+        debug_assert_eq!(out.len(), nq * nd);
+        for i in 0..nq {
+            let q = &xq[i * dim..(i + 1) * dim];
+            let qsum: f32 = q.iter().sum();
+            let row = &mut out[i * nd..(i + 1) * nd];
+            for (j, v) in row.iter_mut().enumerate() {
+                let codes = &self.data[j * dim..(j + 1) * dim];
+                let mut s = 0f32;
+                for (&qt, &ct) in q.iter().zip(codes) {
+                    s += qt * ct as f32;
+                }
+                *v = self.zero[j] * qsum + self.scale[j] * s;
+            }
+        }
+        kernel_transform(kind, q_norms, d_norms, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::native::NativeKernel;
+    use crate::kernel::BlockKernel;
+    use crate::prop_assert;
+    use crate::util::prng::Pcg64;
+    use crate::util::proptest::check;
+
+    /// Satellite: int8 quantize→dequantize of random rows stays within the
+    /// derived per-row bound `scale / 2` (plus f32 arithmetic slack).
+    #[test]
+    fn prop_quantize_dequantize_within_error_bound() {
+        check("int8-quant-error-bound", 20, |rng: &mut Pcg64| {
+            let n = 1 + rng.below(10);
+            let dim = 1 + rng.below(48);
+            // Sweep magnitudes across four decades so the bound is checked
+            // where f32 granularity actually varies.
+            let mag = 10f64.powf(rng.next_f64() * 4.0 - 2.0);
+            let x: Vec<f32> =
+                (0..n * dim).map(|_| (rng.next_gaussian() * mag) as f32).collect();
+            let qr = QuantizedRows::from_rows(&x, dim);
+            prop_assert!(qr.len() == n, "expected {n} rows, got {}", qr.len());
+            for r in 0..n {
+                let row = &x[r * dim..(r + 1) * dim];
+                let back = qr.dequantize_row(r);
+                let bound = qr.error_bound(r) as f64;
+                let vmax =
+                    row.iter().fold(0f32, |m, &v| m.max(v.abs())) as f64;
+                let tol = bound * (1.0 + 1e-5) + 1e-6 * vmax + 1e-12;
+                for (t, (&v, &w)) in row.iter().zip(&back).enumerate() {
+                    prop_assert!(
+                        ((v as f64) - (w as f64)).abs() <= tol,
+                        "row {r} col {t}: |{v} - {w}| exceeds bound {bound} (tol {tol})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_and_single_element_rows_are_exact() {
+        let x = vec![3.5f32, 3.5, 3.5, -2.0, -2.0, -2.0];
+        let qr = QuantizedRows::from_rows(&x, 3);
+        assert_eq!(qr.len(), 2);
+        assert_eq!(qr.error_bound(0), 0.0);
+        assert_eq!(qr.dequantize_row(0), vec![3.5, 3.5, 3.5]);
+        assert_eq!(qr.dequantize_row(1), vec![-2.0, -2.0, -2.0]);
+        let one = QuantizedRows::from_rows(&[7.25], 1);
+        assert_eq!(one.dequantize_row(0), vec![7.25]);
+    }
+
+    #[test]
+    fn empty_input_quantizes_to_empty() {
+        let qr = QuantizedRows::from_rows(&[], 5);
+        assert!(qr.is_empty());
+        assert_eq!(qr.len(), 0);
+        assert_eq!(qr.bytes(), 0);
+    }
+
+    /// RBF/poly blocks from quantized rows stay within the bound the cross
+    /// term implies: `|ΔK| ≤ L · 2 · error_bound(j) · ‖q_i‖₁` where `L` is
+    /// the transform's Lipschitz constant in the cross product (γ for RBF
+    /// via d², checked here), since the stored norms are exact.
+    #[test]
+    fn prop_quantized_rbf_block_within_derived_bound() {
+        check("int8-quant-rbf-block-bound", 12, |rng: &mut Pcg64| {
+            let nq = 1 + rng.below(6);
+            let nd = 1 + rng.below(8);
+            let dim = 1 + rng.below(24);
+            let gamma = (0.1 + rng.next_f64()) as f32;
+            let kind = KernelKind::Rbf { gamma };
+            let xq: Vec<f32> =
+                (0..nq * dim).map(|_| rng.next_gaussian() as f32).collect();
+            let xd: Vec<f32> =
+                (0..nd * dim).map(|_| rng.next_gaussian() as f32).collect();
+            let norms = |x: &[f32]| -> Vec<f32> {
+                x.chunks(dim).map(|r| r.iter().map(|&v| v * v).sum()).collect()
+            };
+            let (qn, dn) = (norms(&xq), norms(&xd));
+            let exact_kernel = NativeKernel::new(kind);
+            let mut exact = vec![0f32; nq * nd];
+            exact_kernel.block(&xq, &qn, &xd, &dn, dim, &mut exact);
+            let qr = QuantizedRows::from_rows(&xd, dim);
+            let mut approx = vec![0f32; nq * nd];
+            qr.block(kind, &xq, &qn, &dn, &mut approx);
+            for i in 0..nq {
+                let l1: f64 = xq[i * dim..(i + 1) * dim]
+                    .iter()
+                    .map(|&v| v.abs() as f64)
+                    .sum();
+                for j in 0..nd {
+                    // |Δd²| = 2|Δcross| ≤ 2 · bound_j · ‖q‖₁ and
+                    // |exp(-γa) − exp(-γb)| ≤ γ|a − b| for a, b ≥ 0.
+                    let bound = 2.0 * gamma as f64 * qr.error_bound(j) as f64 * l1
+                        + 1e-4;
+                    let diff =
+                        (exact[i * nd + j] as f64 - approx[i * nd + j] as f64).abs();
+                    prop_assert!(
+                        diff <= bound,
+                        "[{i},{j}] |ΔK| = {diff} exceeds derived bound {bound}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Linear-kernel sanity: with scale-0 (constant) rows the codes are
+    /// exact, so the quantized block matches the exact block up to f32
+    /// summation-order noise (bit-identity is NOT claimed — the affine
+    /// expansion sums in a different order than `dot1`).
+    #[test]
+    fn exact_rows_give_near_exact_linear_block() {
+        let dim = 7;
+        let xd = vec![2.0f32; 3 * dim]; // constant rows → scale 0, exact codes
+        let xq: Vec<f32> = (0..2 * dim).map(|t| (t as f32) * 0.25 - 1.0).collect();
+        let norms = |x: &[f32]| -> Vec<f32> {
+            x.chunks(dim).map(|r| r.iter().map(|&v| v * v).sum()).collect()
+        };
+        let (qn, dn) = (norms(&xq), norms(&xd));
+        let kind = KernelKind::Linear;
+        let exact_kernel = NativeKernel::new(kind);
+        let mut exact = vec![0f32; 2 * 3];
+        exact_kernel.block(&xq, &qn, &xd, &dn, dim, &mut exact);
+        let qr = QuantizedRows::from_rows(&xd, dim);
+        let mut approx = vec![0f32; 2 * 3];
+        qr.block(kind, &xq, &qn, &dn, &mut approx);
+        for (a, b) in exact.iter().zip(&approx) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bytes_accounts_codes_and_codebooks() {
+        let x: Vec<f32> = (0..4 * 6).map(|t| t as f32).collect();
+        let qr = QuantizedRows::from_rows(&x, 6);
+        assert_eq!(qr.dim(), 6);
+        assert_eq!(qr.bytes(), 4 * 6 + 2 * 4 * 4); // codes + scale/zero f32s
+    }
+}

@@ -15,6 +15,7 @@
 //! *test* points (paper eq. 11) with whatever kernel backend serves them.
 
 use crate::cache::KernelContext;
+use crate::kernel::quant::QuantizedRows;
 use crate::kernel::BlockKernel;
 use crate::util::prng::Pcg64;
 
@@ -34,6 +35,13 @@ pub struct Router {
     /// Per-cluster constant term of the kernel distance.
     self_term: Vec<f64>,
     pub k: usize,
+    /// Int8-quantized sample rows (`--quant-route`): when present, every
+    /// assignment pass evaluates its K(rows, sample) block against the
+    /// quantized operand instead of `sample_x`. Routing is approximation-
+    /// tolerant (the paper's early-prediction argument), and the flip rate
+    /// vs the f32 path is gated in CI. Never serialized — a loaded router
+    /// routes exactly until [`Self::set_quant_route`] re-enables it.
+    quant: Option<QuantizedRows>,
 }
 
 impl Router {
@@ -70,6 +78,7 @@ impl Router {
             counts: sc.counts,
             self_term: sc.self_term,
             k: sc.k,
+            quant: None,
         }
     }
 
@@ -77,14 +86,39 @@ impl Router {
         self.sample_norms.len()
     }
 
+    /// Enable (or disable) the int8-quantized routing operand: quantizes
+    /// the sample rows per-row (scale + zero-point) once; subsequent
+    /// assignment passes run against the 4×-smaller codes. The exact
+    /// `sample_x` stays resident — disabling restores bit-exact routing.
+    pub fn set_quant_route(&mut self, on: bool) {
+        self.quant = if on {
+            Some(QuantizedRows::from_rows(&self.sample_x, self.dim))
+        } else {
+            None
+        };
+    }
+
+    /// Whether assignment passes currently run against quantized operands.
+    pub fn quant_route(&self) -> bool {
+        self.quant.is_some()
+    }
+
     /// Assign a batch of rows ([n, dim] row-major with norms) to clusters.
-    /// One K(rows, sample) block pass, chunked.
+    /// One K(rows, sample) block pass, chunked. With
+    /// [`Self::set_quant_route`] enabled the pass runs against the int8
+    /// sample codes (kernel backend supplies only the kernel kind).
     pub fn assign_rows(
         &self,
         x: &[f32],
         norms: &[f32],
         kernel: &dyn BlockKernel,
     ) -> Vec<u16> {
+        if let Some(q) = &self.quant {
+            let kind = kernel.kind();
+            return self.assign_rows_impl(x, norms, |xq, qn, out| {
+                q.block(kind, xq, qn, &self.sample_norms, out)
+            });
+        }
         self.assign_rows_impl(x, norms, |xq, qn, out| {
             kernel.block(xq, qn, &self.sample_x, &self.sample_norms, self.dim, out)
         })
@@ -93,7 +127,8 @@ impl Router {
     /// [`Self::assign_rows`] with an in-process thread budget: large
     /// K(rows, sample) chunks fan out over row panels
     /// ([`BlockKernel::block_par`]). Assignments are bit-identical for any
-    /// `threads` value.
+    /// `threads` value. The quantized operand runs on the calling thread —
+    /// the sample block is small and the codes make it 4× smaller still.
     pub fn assign_rows_par(
         &self,
         x: &[f32],
@@ -101,6 +136,10 @@ impl Router {
         kernel: &dyn BlockKernel,
         threads: usize,
     ) -> Vec<u16> {
+        if self.quant.is_some() {
+            let _ = threads;
+            return self.assign_rows(x, norms, kernel);
+        }
         self.assign_rows_impl(x, norms, |xq, qn, out| {
             kernel.block_par(xq, qn, &self.sample_x, &self.sample_norms, self.dim, threads, out);
         })
@@ -160,6 +199,13 @@ impl Router {
         // One K(all, sample) pass outside the row cache — counted so
         // `ValueStats::values_computed` reflects the whole run.
         ctx.count_external_values((ctx.len() * self.sample_size()) as u64);
+        if let Some(q) = &self.quant {
+            ctx.count_quantized_values((ctx.len() * self.sample_size()) as u64);
+            let kind = ctx.kind();
+            return self.assign_rows_impl(&ctx.ds().x, ctx.norms(), |xq, qn, out| {
+                q.block(kind, xq, qn, &self.sample_norms, out)
+            });
+        }
         self.assign_rows_impl(&ctx.ds().x, ctx.norms(), |xq, qn, out| {
             ctx.block_dispatch(xq, qn, &self.sample_x, &self.sample_norms, self.dim, out)
         })
@@ -237,7 +283,16 @@ impl Router {
             .chunks(dim)
             .map(|r| r.iter().map(|&v| v * v).sum())
             .collect();
-        Ok(Router { sample_x, sample_norms, dim, sample_assign, counts, self_term, k })
+        Ok(Router {
+            sample_x,
+            sample_norms,
+            dim,
+            sample_assign,
+            counts,
+            self_term,
+            k,
+            quant: None,
+        })
     }
 }
 
@@ -287,7 +342,10 @@ pub fn two_step_partition(
         Some(pool) => picked.iter().map(|&i| pool[i]).collect(),
         None => picked,
     };
-    let router = Router::fit(ctx, &sample_idx, k, 30, rng);
+    let mut router = Router::fit(ctx, &sample_idx, k, 30, rng);
+    if ctx.quant_route() {
+        router.set_quant_route(true);
+    }
     let assign = router.assign_all(ctx);
     let part = Partition::from_assign(assign, router.k);
     (router, part)
@@ -434,6 +492,51 @@ mod tests {
         assert!(
             Router::from_json(&crate::util::json::Json::parse(&broken).unwrap()).is_err()
         );
+    }
+
+    /// Tentpole: quantized routing flips few decisions vs the f32 path —
+    /// on well-separated blobs the per-row int8 error (≤ scale/2 per
+    /// feature) is far below the inter-cluster kernel-distance margin, so
+    /// assignments should be identical; on the noisier covtype-like data
+    /// the flip rate must stay under the CI gate threshold.
+    #[test]
+    fn quant_route_flips_stay_under_gate() {
+        // Well-separated blobs: zero flips expected.
+        let ds = blobs(400, 11);
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 0.5 });
+        let ctx = KernelContext::new(&ds, &kern, 1 << 20);
+        let mut rng = Pcg64::new(12);
+        let (router, _) = two_step_partition(&ctx, 4, 64, None, &mut rng);
+        let norms = ds.sq_norms();
+        let exact = router.assign_rows(&ds.x, &norms, &kern);
+        let mut qrouter = router.clone();
+        qrouter.set_quant_route(true);
+        assert!(qrouter.quant_route() && !router.quant_route());
+        let quant = qrouter.assign_rows(&ds.x, &norms, &kern);
+        let flips = exact.iter().zip(&quant).filter(|(a, b)| a != b).count();
+        assert_eq!(flips, 0, "{flips} routing flips on well-separated blobs");
+        // The par entry point routes identically through the quant operand.
+        assert_eq!(quant, qrouter.assign_rows_par(&ds.x, &norms, &kern, 4));
+
+        // Noisy data: flips allowed, but bounded by the gate threshold.
+        let mut rng = Pcg64::new(13);
+        let ds = generate(&covtype_like(), 300, &mut rng);
+        let kern = NativeKernel::new(KernelKind::Rbf { gamma: 16.0 });
+        let qctx = KernelContext::new(&ds, &kern, 1 << 20).with_quant_route(true);
+        let (qrouter, _) = two_step_partition(&qctx, 8, 100, None, &mut rng);
+        assert!(qrouter.quant_route(), "quant-route context must arm the router");
+        assert!(
+            qctx.value_stats().quantized_values >= (ds.len() * qrouter.sample_size()) as u64,
+            "quantized assignment pass not counted"
+        );
+        let norms = ds.sq_norms();
+        let quant = qrouter.assign_rows(&ds.x, &norms, &kern);
+        let mut exact_router = qrouter.clone();
+        exact_router.set_quant_route(false);
+        let exact = exact_router.assign_rows(&ds.x, &norms, &kern);
+        let flips = exact.iter().zip(&quant).filter(|(a, b)| a != b).count();
+        let rate = flips as f64 / ds.len() as f64;
+        assert!(rate <= 0.2, "routing flip rate {rate:.3} above gate (0.2)");
     }
 
     #[test]

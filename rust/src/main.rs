@@ -82,6 +82,8 @@ fn print_usage() {
          \x20 --cache-mb MB\n\
          \x20 --segments {{true,false}} (segment-granular divide cache; default true)\n\
          \x20 --registry-cap-mb MB (gathered segment-feature cap; 0 = unlimited)\n\
+         \x20 --quant-route {{true,false}} (int8-quantized routing/early prediction;\n\
+         \x20              exact solves untouched; default false)\n\
          \x20 --save-model FILE"
     );
 }
@@ -356,6 +358,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut conns = 8usize;
     let mut cache_mb = 64usize;
     let mut backend = "auto".to_string();
+    let mut quant_route = false;
     let mut i = 0;
     while i < args.len() {
         let key = args[i].as_str();
@@ -368,7 +371,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if !matches!(
             key,
             "--model" | "--listen" | "--batch" | "--workers" | "--conns" | "--cache-mb"
-                | "--backend"
+                | "--backend" | "--quant-route"
         ) {
             bail!("serve: unknown flag '{key}'\n{usage}");
         }
@@ -392,6 +395,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--conns" => conns = positive("--conns")?,
             "--cache-mb" => cache_mb = positive("--cache-mb")?,
             "--backend" => backend = val.clone(),
+            "--quant-route" => {
+                quant_route = val.parse().map_err(|_| {
+                    anyhow!("serve: --quant-route needs true or false, got '{val}'\n{usage}")
+                })?;
+            }
             _ => unreachable!("flag allow-list above covers every match arm"),
         }
         i += 2;
@@ -401,15 +409,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     let text = std::fs::read_to_string(&model_path)
         .with_context(|| format!("read {model_path}"))?;
-    let model = ServingModel::from_json(&Json::parse(&text)?)?;
+    let mut model = ServingModel::from_json(&Json::parse(&text)?)?;
+    model.set_quant_route(quant_route);
     let kernel = harness::make_kernel(model.kind(), &backend, model.dim())?;
     let ctx = ServingContext::new(model, kernel, cache_mb << 20);
     eprintln!(
-        "serving {} model {} ({} SVs, dim {}), {workers} workers, cache {cache_mb} MB",
+        "serving {} model {} ({} SVs, dim {}), {workers} workers, cache {cache_mb} MB{}",
         ctx.model().describe(),
         model_path,
         ctx.num_svs(),
-        ctx.dim()
+        ctx.dim(),
+        if ctx.model().quant_route() { ", quantized routing" } else { "" }
     );
     let core = ServeCore::new(ctx, workers);
     match &listen {

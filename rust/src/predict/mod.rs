@@ -254,6 +254,7 @@ impl SvmModel {
 }
 
 /// Early prediction (paper eq. 11): local model of the routed cluster only.
+#[derive(Clone)]
 pub struct EarlyModel {
     pub router: Router,
     /// One local model per cluster (possibly empty: no SVs in cluster).
@@ -264,6 +265,19 @@ impl EarlyModel {
     /// Build from a partition's cluster models.
     pub fn new(router: Router, locals: Vec<SvmModel>) -> EarlyModel {
         EarlyModel { router, locals }
+    }
+
+    /// Enable (or disable) the int8-quantized routing operand for this
+    /// model's router ([`Router::set_quant_route`]). Routing is the
+    /// approximation-tolerant half of early prediction; the per-cluster
+    /// local decisions stay exact either way.
+    pub fn set_quant_route(&mut self, on: bool) {
+        self.router.set_quant_route(on);
+    }
+
+    /// Whether routing currently runs against quantized operands.
+    pub fn quant_route(&self) -> bool {
+        self.router.quant_route()
     }
 
     /// ±1 predictions: each query is routed to its cluster and evaluated

@@ -143,6 +143,26 @@ impl ServingModel {
             ServingModel::Early(em) => format!("early(k={})", em.locals.len()),
         }
     }
+
+    /// Enable (or disable) int8-quantized routing for an early model
+    /// (`--quant-route`). Routing is the only approximation-tolerant stage
+    /// of the serving path, so this never touches decision evaluation: an
+    /// exact model has no router and the call is a no-op. Must be set
+    /// before the model is moved into a [`ServingContext`].
+    pub fn set_quant_route(&mut self, on: bool) {
+        match self {
+            ServingModel::Exact(_) => {}
+            ServingModel::Early(em) => em.set_quant_route(on),
+        }
+    }
+
+    /// Whether quantized routing is armed (always false for exact models).
+    pub fn quant_route(&self) -> bool {
+        match self {
+            ServingModel::Exact(_) => false,
+            ServingModel::Early(em) => em.quant_route(),
+        }
+    }
 }
 
 /// Per-request-batch serving statistics: one [`ServingContext::decide`]

@@ -104,6 +104,12 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
         default: "auto",
         help: "kernel backend: auto, native, or pjrt",
     },
+    FlagSpec {
+        flag: "--quant-route",
+        value: "BOOL",
+        default: "false",
+        help: "early models: route batches with int8-quantized sample rows (decisions stay exact per cluster)",
+    },
 ];
 
 /// The `dcsvm serve` usage text, rendered from [`SERVE_FLAGS`].

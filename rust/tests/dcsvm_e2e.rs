@@ -382,3 +382,99 @@ fn divide_phase_segment_savings_at_k4() {
         full.divide_values_computed
     );
 }
+
+/// Acceptance (ISSUE satellite): a deep run whose live level's gathered
+/// working set alone exceeds `registry_cap_bytes` must NOT thrash
+/// re-gathers. The per-level generation floor exempts the live level from
+/// the byte-cap GC — only earlier generations are evicted — so
+/// `segment_regathers` stays 0 and the solution is bit-identical to the
+/// uncapped run, while the capped peak stays well below the uncapped one.
+#[test]
+fn tight_registry_cap_never_regathers_live_level() {
+    let (tr, _) = generate_split(&covtype_like(), 700, 100, 23);
+    let kern = NativeKernel::new(kind());
+    let mut cfg = DcSvmConfig {
+        kind: kind(),
+        c: 4.0,
+        levels: 3,
+        k_base: 4,
+        sample_m: 64,
+        eps_sub: 1e-3,
+        eps_final: 1e-5,
+        ..Default::default()
+    };
+    let full = train(&tr, &kern, &cfg);
+    assert_eq!(full.segment_regathers, 0, "uncapped run re-gathered?!");
+    assert!(full.registry_peak_bytes > 0);
+
+    // 32 KiB is far below even one level's gathered working set
+    // (~n·(dim+1)·4 ≈ 154 KiB here), so every generation boundary evicts
+    // the previous level's segments — but never the live level's.
+    cfg.registry_cap_bytes = 32 << 10;
+    let capped = train(&tr, &kern, &cfg);
+    assert_eq!(
+        capped.segment_regathers, 0,
+        "tight registry cap re-gathered the live level {} times",
+        capped.segment_regathers
+    );
+    assert_eq!(full.alpha, capped.alpha, "registry GC changed the final α");
+    assert_eq!(full.final_iterations, capped.final_iterations);
+    assert!(
+        capped.registry_peak_bytes < full.registry_peak_bytes,
+        "cap never evicted anything: capped peak {} vs uncapped {}",
+        capped.registry_peak_bytes,
+        full.registry_peak_bytes
+    );
+}
+
+/// Acceptance (ISSUE): int8-quantized routing (`--quant-route`) on the
+/// smoke dataset. Training with quantization routes every kmeans
+/// assignment through the int8 shadows (counted by `quantized_values`)
+/// yet still reaches the same global optimum (the conquer solve is exact
+/// either way); early-prediction label flips between the f32 router and
+/// its quantized twin stay under the decision-flip gate.
+#[test]
+fn quant_route_early_prediction_flips_bounded() {
+    let (tr, te) = generate_split(&covtype_like(), 600, 150, 17);
+    let kern = NativeKernel::new(kind());
+    let mut cfg = DcSvmConfig {
+        kind: kind(),
+        c: 4.0,
+        levels: 2,
+        k_base: 4,
+        sample_m: 64,
+        eps_final: 1e-5,
+        ..Default::default()
+    };
+    let exact = train(&tr, &kern, &cfg);
+    cfg.quant_route = true;
+    let quant = train(&tr, &kern, &cfg);
+
+    // The exact run routes nothing through int8; the quant run routes
+    // every assignment pass through it.
+    assert_eq!(exact.quantized_values, 0, "quantization leaked into an exact run");
+    assert!(quant.quantized_values > 0, "quant run never used the int8 shadows");
+
+    // Routing only shapes the divide partition (convergence speed); the
+    // final solve is exact in both runs, so the optima coincide.
+    let (fo, qo) = (exact.objective.unwrap(), quant.objective.unwrap());
+    let rel = (fo - qo).abs() / (1.0 + fo.abs());
+    assert!(rel < 1e-3, "quant routing moved the optimum: rel {rel}");
+
+    // Early-prediction decision flips, f32 router vs its quantized twin,
+    // on the same trained model: bounded by the gate.
+    let em = exact.early_model.as_ref().expect("early model");
+    let mut em_q = em.clone();
+    em_q.set_quant_route(true);
+    assert!(em_q.quant_route() && !em.quant_route());
+    let norms = te.sq_norms();
+    let p_exact = em.predict_batch_par(&te.x, &norms, &kern, 2);
+    let p_quant = em_q.predict_batch_par(&te.x, &norms, &kern, 2);
+    let flips = p_exact.iter().zip(&p_quant).filter(|(a, b)| a != b).count();
+    let rate = flips as f64 / te.len() as f64;
+    assert!(
+        rate <= 0.2,
+        "quantized routing flipped {flips}/{} early predictions ({rate:.2})",
+        te.len()
+    );
+}

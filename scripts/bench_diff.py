@@ -40,6 +40,12 @@ WATCHED = [
     ("train.stitched_values", "higher-better"),
     ("train.cache_hit_rate", "higher-better"),
     ("serve.warm.rows_computed", "zero"),
+    # The smoke train run never passes --quant-route and never caps the
+    # registry, so quantized kernel values and segment re-gathers must both
+    # be exactly 0 — quantization leaking into an exact path, or GC
+    # thrashing the live level's working set, fails here.
+    ("train.quantized_values", "zero"),
+    ("train.segment_regathers", "zero"),
 ]
 
 
@@ -87,13 +93,20 @@ def cmd_diff(args) -> None:
         if c is _MISSING or c is None:
             failures.append(f"{path}: missing or null in current record")
             continue
+        if direction == "zero":
+            # Tolerance-free invariant on the CURRENT record alone — no
+            # baseline needed, so it is never skipped on a first run or
+            # when the counter is newer than the cached baseline.
+            ok = c == 0
+            verdict = "ok" if ok else "REGRESSION (must stay 0)"
+            print(f"  {path}: current={c} [{direction}] {verdict}")
+            if not ok:
+                failures.append(f"{path}: current={c} (must stay 0)")
+            continue
         if b is _MISSING or b is None:
             print(f"  {path}: no baseline value (new counter?) — skipped")
             continue
-        if direction == "zero":
-            ok = c == 0
-            verdict = "ok" if ok else "REGRESSION (must stay 0)"
-        elif direction == "lower-better":
+        if direction == "lower-better":
             ok = float(c) <= float(b) * (1.0 + tol)
             verdict = "ok" if ok else f"REGRESSION (> baseline +{tol:.0%})"
         else:  # higher-better

@@ -26,8 +26,15 @@ disappears.
 `--threads N` pins the worker/dispatch thread count for BOTH the train and
 serve runs (train `--threads`, serve `--workers`, `DCSVM_THREADS`), and the
 serve decision lines land in `serve.decisions` — CI runs the script at 1
-and 2 threads and asserts the decisions are bit-identical
-(`scripts/bench_diff.py identical`).
+and 2 threads, with the SIMD tier auto-detected and with
+`DCSVM_FORCE_SCALAR=1`, and asserts the decisions are bit-identical across
+all four runs (`scripts/bench_diff.py identical`).
+
+The script also gates `--quant-route`: it trains an early-prediction model,
+serves the same 64-row batch with the exact f32 router and with the
+int8-quantized router, and fails if the fraction of flipped predicted
+labels exceeds QUANT_FLIP_GATE. The result lands in the `quant` section of
+BENCH_ci.json.
 
 Usage: bench_smoke.py [--binary target/release/dcsvm] [--out BENCH_ci.json]
                       [--threads 2]
@@ -55,9 +62,19 @@ REQUIRED_TRAIN = [
     "parallel_dispatches",
     "stitch_groups",
     "registry_bytes",
+    "simd_tier",
+    "quantized_values",
+    "segment_regathers",
 ]
 # Per-batch serving stats fields (see rust/src/serving BatchStats::to_json).
 REQUIRED_SERVE = ["rows", "latency_ms", "cache_hits", "cache_misses", "rows_computed", "hit_rate"]
+
+# Max fraction of the 64 quant-gate rows whose predicted label may flip
+# when routing goes through the int8-quantized sample rows. The per-row
+# quantization error bound is scale/2 ≈ (hi-lo)/508, far below the routing
+# margins of all but boundary rows — a loose gate that still catches a
+# broken quantizer (which flips ~half the batch) without being flaky.
+QUANT_FLIP_GATE = 0.15
 
 TRAIN_FLAGS = [
     "--algo", "dcsvm",
@@ -190,12 +207,63 @@ def main() -> None:
     if len(decisions) != 128:
         fail(f"expected 128 decision lines (2 × 64-row batches), got {len(decisions)}")
 
+    # ---- quant-route gate (early model: int8 routing vs exact f32) -------
+    # Train an early-prediction model (router + per-cluster locals), then
+    # serve the SAME 64-row batch twice — once with the exact f32 router,
+    # once with `--quant-route true`. Routing through int8-quantized sample
+    # rows may flip which cluster a boundary row lands in (and hence its
+    # predicted label); the gate bounds how many rows that may touch.
+    early_flags = list(TRAIN_FLAGS)
+    early_flags[early_flags.index("dcsvm")] = "early"
+    early_model = os.path.join(workdir, "early_model.json")
+    p = run(
+        [args.binary, "train", *early_flags, "--threads", threads,
+         "--save-model", early_model],
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+    if p.returncode != 0:
+        fail(f"early train exited {p.returncode}\nstderr:\n{p.stderr}")
+
+    def serve_labels(quant: bool):
+        cmd = [args.binary, "serve", "--model", early_model, "--batch", "64",
+               "--workers", threads, "--backend", "native"]
+        if quant:
+            cmd += ["--quant-route", "true"]
+        q = run(cmd, env=env, input=batch, capture_output=True, text=True)
+        if q.returncode != 0:
+            fail(f"quant-gate serve (quant={quant}) exited {q.returncode}\nstderr:\n{q.stderr}")
+        labels = [line.split()[0] for line in q.stdout.splitlines() if line.strip()]
+        if len(labels) != 64:
+            fail(f"quant-gate serve (quant={quant}): expected 64 decision lines, got {len(labels)}")
+        return labels
+
+    exact_labels = serve_labels(False)
+    quant_labels = serve_labels(True)
+    flips = sum(1 for a, b in zip(exact_labels, quant_labels) if a != b)
+    flip_rate = flips / 64.0
+    print(
+        f"bench_smoke: quant-route gate: {flips}/64 label flips "
+        f"({flip_rate:.1%}, gate {QUANT_FLIP_GATE:.0%})",
+        file=sys.stderr,
+    )
+    if flip_rate > QUANT_FLIP_GATE:
+        fail(f"quant-route flipped {flips}/64 predicted labels "
+             f"(rate {flip_rate:.2f} > gate {QUANT_FLIP_GATE})")
+
     bench = {
         "suite": "ci-perf-smoke",
         "dataset": "covtype-like",
         "threads": int(threads),
         "train": train_stats,
         "serve": {"cold": cold, "warm": warm, "decisions": decisions},
+        "quant": {
+            "rows": 64,
+            "flips": flips,
+            "flip_rate": round(flip_rate, 4),
+            "gate": QUANT_FLIP_GATE,
+        },
     }
     with open(args.out, "w", encoding="utf-8") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
