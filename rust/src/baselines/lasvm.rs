@@ -13,6 +13,12 @@
 //!
 //! Kernel rows are computed only against the current expansion, so the
 //! memory footprint is O(|S|²) like the original.
+//!
+//! The PROCESS/EVICT insertion–removal scheme is promoted to a first-class
+//! batch primitive in [`crate::dcsvm::update`]: `dcsvm update` gates the
+//! appended rows through the same margin test (batched over a cached SV
+//! segment) and lets one warm-started SMO run play the REPROCESS/FINISH
+//! role, evicting members whose α falls to 0.
 
 use std::time::Instant;
 

@@ -81,7 +81,10 @@ pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
 /// serializing on fills without oversharding tiny budgets.
 const DEFAULT_SHARDS: usize = 16;
 
-/// The full-span segment id (columns `0..n`).
+/// The full-span segment id of a freshly built context (columns `0..n`).
+/// [`KernelContext::extended`] retires the full span into a prefix
+/// segment and registers a new one, so consumers must go through
+/// `KernelContext::full_key` / `full_id` instead of this constant.
 const FULL_SEGMENT: u32 = 0;
 
 /// Compose the cache key of segment `seg`, row `row`. Row indices occupy
@@ -251,8 +254,12 @@ pub struct KernelContext<'a> {
     kernel: &'a dyn BlockKernel,
     norms: Vec<f32>,
     cache: ShardedRowCache,
-    /// Registered segments; index = id; `[0]` is always the full span.
+    /// Registered segments; index = id. `[full_id]` is the live full span
+    /// (`[0]` on a fresh context; [`Self::extended`] retires it and
+    /// registers a new one).
     segments: Mutex<Vec<SegmentRef>>,
+    /// Id of the live full-span segment.
+    full_id: u32,
     counters: ValueCounters,
     /// Worker budget for row-panel-parallel backend dispatches
     /// ([`crate::kernel::BlockKernel::block_par`]); 1 = always serial.
@@ -303,6 +310,7 @@ impl<'a> KernelContext<'a> {
             norms,
             cache,
             segments: Mutex::new(vec![full]),
+            full_id: FULL_SEGMENT,
             counters: ValueCounters::default(),
             threads: AtomicUsize::new(default_threads()),
             registry_cap: 0,
@@ -432,14 +440,20 @@ impl<'a> KernelContext<'a> {
         &self.cache
     }
 
+    /// Cache key of the live full-span row of `i`.
+    #[inline]
+    fn full_key(&self, i: usize) -> u64 {
+        seg_key(self.full_id, i)
+    }
+
     /// Whether the **full-span** row of `i` is resident.
     pub fn is_row_cached(&self, i: usize) -> bool {
-        self.cache.contains(seg_key(FULL_SEGMENT, i))
+        self.cache.contains(self.full_key(i))
     }
 
     /// The always-present full-span segment.
     pub fn full_segment(&self) -> SegmentRef {
-        Arc::clone(&self.segments.lock().unwrap()[0])
+        Arc::clone(&self.segments.lock().unwrap()[self.full_id as usize])
     }
 
     /// Register (or find) the segment with exactly these columns. `cols`
@@ -453,7 +467,7 @@ impl<'a> KernelContext<'a> {
         let seg = {
             let mut reg = self.segments.lock().unwrap();
             if identity {
-                return Arc::clone(&reg[0]);
+                return Arc::clone(&reg[self.full_id as usize]);
             }
             if let Some(existing) = reg.iter().find(|s| s.cols.as_deref() == Some(cols)) {
                 return Arc::clone(existing);
@@ -540,9 +554,9 @@ impl<'a> KernelContext<'a> {
         let candidates: Vec<SegmentRef> = {
             let reg = self.segments.lock().unwrap();
             reg.iter()
-                .skip(1)
                 .filter(|s| {
-                    s.id != keep
+                    !s.is_full()
+                        && s.id != keep
                         && (cur_gen == 0 || s.gen.load(Ordering::Relaxed) < cur_gen)
                 })
                 .cloned()
@@ -638,7 +652,7 @@ impl<'a> KernelContext<'a> {
     /// entries of row i cover their columns by copy (bit-identical), and
     /// only the uncovered columns enter the backend dispatch.
     pub fn row(&self, i: usize) -> Arc<[f32]> {
-        let key = seg_key(FULL_SEGMENT, i);
+        let key = self.full_key(i);
         if let Some(row) = self.cache.get(key) {
             return row;
         }
@@ -651,7 +665,7 @@ impl<'a> KernelContext<'a> {
         let mut covered_n = 0usize;
         let partials: Vec<SegmentRef> = {
             let reg = self.segments.lock().unwrap();
-            reg.iter().skip(1).cloned().collect()
+            reg.iter().filter(|s| !s.is_full()).cloned().collect()
         };
         for seg in &partials {
             if covered_n == n {
@@ -721,6 +735,101 @@ impl<'a> KernelContext<'a> {
         row
     }
 
+    /// Rebuild this context over `new_ds`, which must **extend** the
+    /// current dataset: same `dim`, same labels, and the old rows as a
+    /// bit-identical prefix. The cache, segment registry and every counter
+    /// move over, so *appending rows never invalidates existing segment
+    /// entries* (property-tested below):
+    ///
+    /// - partial-segment entries keep their keys and values verbatim —
+    ///   their columns are global indices into the unchanged prefix;
+    /// - the old full span is **retired** into a partial segment over
+    ///   `0..old_n` under its old id, so its resident rows stay reachable
+    ///   — and become stitch sources: a warm full-row request after the
+    ///   append computes only the appended columns;
+    /// - a fresh full-span segment over `0..new_n` takes over
+    ///   [`Self::row`] / [`Self::view_full`].
+    ///
+    /// An equal-length `new_ds` (empty append) keeps the registry as-is.
+    /// Panics if `new_ds` does not extend the old dataset.
+    pub fn extended(self, new_ds: &'a Dataset) -> KernelContext<'a> {
+        let old_n = self.ds.len();
+        assert!(
+            new_ds.len() >= old_n,
+            "extended(): new dataset has {} rows < old {}",
+            new_ds.len(),
+            old_n
+        );
+        assert_eq!(new_ds.dim, self.ds.dim, "extended(): dimension changed");
+        assert!(
+            new_ds.y[..old_n] == self.ds.y[..]
+                && new_ds.x[..old_n * new_ds.dim]
+                    .iter()
+                    .zip(&self.ds.x)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "extended(): old rows are not a bit-identical prefix of the new dataset"
+        );
+        let norms = new_ds.sq_norms();
+        debug_assert!(
+            norms[..old_n].iter().zip(&self.norms).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "prefix norms drifted"
+        );
+        let KernelContext {
+            ds: _,
+            kernel,
+            norms: _,
+            cache,
+            segments,
+            full_id,
+            counters,
+            threads,
+            registry_cap,
+            registry_bytes,
+            registry_peak,
+            regathers,
+            registry_gen,
+            quant_route,
+        } = self;
+        let mut reg = segments.into_inner().unwrap();
+        let mut new_full_id = full_id;
+        if new_ds.len() > old_n {
+            let gen = registry_gen.load(Ordering::Relaxed);
+            // Retire the old full span: same id, explicit prefix columns,
+            // features gathered lazily (stitching only needs the columns).
+            reg[full_id as usize] = Arc::new(SegmentData {
+                id: full_id,
+                cols: Some((0..old_n).collect()),
+                gathered: Mutex::new(None),
+                len: old_n,
+                gen: AtomicU64::new(gen),
+            });
+            new_full_id = reg.len() as u32;
+            reg.push(Arc::new(SegmentData {
+                id: new_full_id,
+                cols: None,
+                gathered: Mutex::new(None),
+                len: new_ds.len(),
+                gen: AtomicU64::new(gen),
+            }));
+        }
+        KernelContext {
+            ds: new_ds,
+            kernel,
+            norms,
+            cache,
+            segments: Mutex::new(reg),
+            full_id: new_full_id,
+            counters,
+            threads,
+            registry_cap,
+            registry_bytes,
+            registry_peak,
+            regathers,
+            registry_gen,
+            quant_route,
+        }
+    }
+
     /// Compute all currently uncached **full-span** rows of `rows`. Rows
     /// with no cached partial coverage go into ONE backend dispatch (the
     /// batched prefetch path — on the PJRT backend one call amortizes the
@@ -735,14 +844,14 @@ impl<'a> KernelContext<'a> {
         let missing: Vec<usize> = rows
             .iter()
             .copied()
-            .filter(|&p| !self.cache.contains(seg_key(FULL_SEGMENT, p)))
+            .filter(|&p| !self.cache.contains(self.full_key(p)))
             .collect();
         if missing.is_empty() {
             return 0;
         }
         let partials: Vec<SegmentRef> = {
             let reg = self.segments.lock().unwrap();
-            reg.iter().skip(1).cloned().collect()
+            reg.iter().filter(|s| !s.is_full()).cloned().collect()
         };
         // Bucket rows by coverage pattern (the ordered list of segment ids
         // holding a resident entry for the row). Entry handles are pinned
@@ -781,8 +890,7 @@ impl<'a> KernelContext<'a> {
             let mut block = vec![0f32; cold.len() * n];
             self.block_dispatch(&xq, &qn, &self.ds.x, &self.norms, dim, &mut block);
             for (t, &p) in cold.iter().enumerate() {
-                self.cache
-                    .insert_computed(seg_key(FULL_SEGMENT, p), &block[t * n..(t + 1) * n]);
+                self.cache.insert_computed(self.full_key(p), &block[t * n..(t + 1) * n]);
             }
             self.counters
                 .values_computed
@@ -853,7 +961,7 @@ impl<'a> KernelContext<'a> {
             for (u, &c) in missing_cols.iter().enumerate() {
                 buf[c] = fills[t * m + u];
             }
-            self.cache.insert_computed(seg_key(FULL_SEGMENT, *p), &buf);
+            self.cache.insert_computed(self.full_key(*p), &buf);
         }
         self.counters
             .values_stitched
@@ -1540,6 +1648,121 @@ mod tests {
         assert_eq!(quant.value_stats().quantized_values, 0);
         quant.count_quantized_values(42);
         assert_eq!(quant.value_stats().quantized_values, 42);
+    }
+
+    /// Tentpole (streaming update): extending a context retires the old
+    /// full span into a prefix segment, so warm full rows become stitch
+    /// sources — a post-append full-row request computes **only the
+    /// appended columns** — and the new full span serves new-length rows.
+    #[test]
+    fn extended_context_stitches_appends_from_retired_full_span() {
+        let (ds, k) = setup(20);
+        let n = ds.len();
+        let mut rng = Pcg64::new(17);
+        let extra = generate(&covtype_like(), 6, &mut rng);
+        let ds2 = ds.appended(&extra, "appended");
+        let ctx = KernelContext::new(&ds, &k, 4 << 20);
+        let warm_row = ctx.row(3);
+        assert_eq!(warm_row.len(), n);
+        let ctx2 = ctx.extended(&ds2);
+        assert_eq!(ctx2.len(), n + 6);
+        assert_eq!(ctx2.full_segment().len(), n + 6);
+        assert!(!ctx2.is_row_cached(3), "old-length row resident under new full key");
+        let before = ctx2.value_stats();
+        let row2 = ctx2.row(3);
+        let d = ctx2.value_stats().since(&before);
+        assert_eq!(row2.len(), n + 6);
+        assert_eq!(d.values_computed, 6, "recomputed prefix columns on append");
+        assert_eq!(d.values_stitched, n as u64);
+        for j in 0..n {
+            assert_eq!(row2[j].to_bits(), warm_row[j].to_bits(), "prefix col {j}");
+        }
+        // The stitched row agrees with a cold context over the new data.
+        let cold = KernelContext::new(&ds2, &k, 4 << 20);
+        let want = cold.row(3);
+        for j in 0..n + 6 {
+            assert_eq!(row2[j].to_bits(), want[j].to_bits(), "col {j}");
+        }
+        assert_eq!(ctx2.segment_regathers(), 0);
+        // Empty append keeps the registry untouched.
+        let segs = ctx2.segment_count();
+        let ctx3 = ctx2.extended(&ds2);
+        assert_eq!(ctx3.segment_count(), segs);
+        assert!(ctx3.is_row_cached(3));
+    }
+
+    /// Property (ISSUE satellite): appending rows to a `KernelContext`
+    /// never invalidates existing segment entries — every cached
+    /// `(segment, row)` value is bit-identical before and after the
+    /// append, `segment_regathers` stays 0, and post-append rows are
+    /// bit-identical to a cold context over the extended dataset.
+    #[test]
+    fn prop_extended_preserves_segment_entries_bit_identical() {
+        check("extend-preserves-entries", 10, |rng: &mut Pcg64| {
+            let n = 10 + rng.below(30);
+            let ds = generate(&covtype_like(), n, rng);
+            let extra = generate(&covtype_like(), 1 + rng.below(12), rng);
+            let ds2 = ds.appended(&extra, "appended");
+            let k = NativeKernel::new(KernelKind::Rbf {
+                gamma: (0.5 + 8.0 * rng.next_f64()) as f32,
+            });
+            let ctx = KernelContext::new(&ds, &k, 8 << 20);
+            // Register 1–3 random segments and warm random rows of each,
+            // plus a few full rows.
+            let mut segs = Vec::new();
+            for _ in 0..1 + rng.below(3) {
+                let members: Vec<usize> = (0..n).filter(|_| rng.next_f64() < 0.4).collect();
+                if members.is_empty() || members.len() == n {
+                    continue;
+                }
+                let warm: Vec<usize> = (0..n).filter(|_| rng.next_f64() < 0.5).collect();
+                let seg = ctx.register_segment(&members);
+                ctx.compute_segment_rows(&seg, &warm);
+                segs.push(seg);
+            }
+            let full_warm: Vec<usize> = (0..n).filter(|_| rng.next_f64() < 0.3).collect();
+            ctx.compute_rows(&full_warm);
+            // Snapshot every resident (segment, row) entry, full span
+            // included (it survives the append as the retired prefix).
+            let mut snap: Vec<(u64, Arc<[f32]>)> = Vec::new();
+            let full = ctx.full_segment();
+            for seg in segs.iter().chain(std::iter::once(&full)) {
+                for i in 0..n {
+                    if let Some(e) = ctx.cache().get_quiet(seg_key(seg.id(), i)) {
+                        snap.push((seg_key(seg.id(), i), e));
+                    }
+                }
+            }
+            let regathers_before = ctx.segment_regathers();
+            let ctx2 = ctx.extended(&ds2);
+            for (key, want) in &snap {
+                let got = ctx2.cache().get_quiet(*key);
+                prop_assert!(got.is_some(), "entry {key:#x} evicted by append");
+                let got = got.unwrap();
+                prop_assert!(
+                    got.len() == want.len()
+                        && got.iter().zip(want.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "entry {key:#x} not bit-identical after append"
+                );
+            }
+            // Post-append reads: segment rows and stitched full rows match
+            // a cold context over the extended dataset, bit-for-bit.
+            let cold = KernelContext::new(&ds2, &k, 8 << 20);
+            let probe = rng.below(ds2.len());
+            let a = ctx2.row(probe);
+            let b = cold.row(probe);
+            for j in 0..ds2.len() {
+                prop_assert!(
+                    a[j].to_bits() == b[j].to_bits(),
+                    "extended row {probe} col {j} differs"
+                );
+            }
+            prop_assert!(
+                ctx2.segment_regathers() == regathers_before,
+                "append triggered re-gathers"
+            );
+            Ok(())
+        });
     }
 
     /// Large dispatches fan out over row panels (counted), bit-identically

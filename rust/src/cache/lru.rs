@@ -161,6 +161,27 @@ impl RowCache {
         self.insert_new(key, row);
     }
 
+    /// Insert an entry, **replacing** any resident one (counter-free, like
+    /// [`Self::put_arc`]). The keep-existing policy of `put_arc` assumes
+    /// entry contents are a pure function of the key; the serving layer's
+    /// hot-swap path breaks that assumption on purpose (a model swap
+    /// changes what a tagged entry under an unchanged key must contain),
+    /// so it needs an overwrite primitive. Byte accounting follows the
+    /// length change; the budget is re-enforced afterwards.
+    pub fn replace_arc(&mut self, key: u64, row: Arc<[f32]>) {
+        if let Some(&slot) = self.map.get(&key) {
+            self.used_bytes -= entry_bytes(&self.slots[slot].row);
+            self.used_bytes += entry_bytes(&row);
+            self.slots[slot].row = row;
+            self.slots[slot].referenced = true;
+            while self.used_bytes > self.budget_bytes && self.map.len() > 1 {
+                self.evict_one();
+            }
+            return;
+        }
+        self.insert_new(key, row);
+    }
+
     /// Insert an externally computed entry (batched fill path). Counts a
     /// miss when the key is new — the caller did compute it — and a hit
     /// when already resident, in which case the existing entry is kept.
@@ -374,6 +395,27 @@ mod tests {
         c.put_arc(5, row(&[5.0]));
         assert_eq!(&*c.get_quiet(5).unwrap(), &[5.0]);
         assert_eq!((c.hits, c.misses), (0, 0));
+    }
+
+    #[test]
+    fn replace_arc_overwrites_and_tracks_bytes() {
+        let mut c = RowCache::new(1024);
+        c.put_arc(3, row(&[1.0, 2.0]));
+        assert_eq!(c.bytes_used(), 8);
+        c.replace_arc(3, row(&[9.0, 8.0, 7.0]));
+        assert_eq!(c.peek(3).unwrap(), &[9.0, 8.0, 7.0]);
+        assert_eq!(c.bytes_used(), 12);
+        assert_eq!((c.hits, c.misses), (0, 0)); // counter-free, like put_arc
+        // Absent key behaves like a plain insert.
+        c.replace_arc(4, row(&[4.0]));
+        assert_eq!(c.peek(4).unwrap(), &[4.0]);
+        // Growing a resident entry past the budget re-enforces it.
+        let mut small = RowCache::new(3 * 4);
+        small.put_arc(0, row(&[0.0]));
+        small.put_arc(1, row(&[1.0]));
+        small.replace_arc(0, row(&[5.0, 5.0, 5.0]));
+        assert!(small.bytes_used() <= small.budget_bytes() || small.len() == 1);
+        assert_eq!(small.peek(0).map(|r| r.len()), Some(3).filter(|_| small.contains(0)));
     }
 
     #[test]

@@ -213,6 +213,15 @@ impl ShardedRowCache {
         self.shard(key).lock().unwrap().put_arc(key, row);
     }
 
+    /// Store an entry, **replacing** any resident one (counter-free). The
+    /// keep-existing policy of [`Self::put`] assumes contents are a pure
+    /// function of the key; the serving hot-swap path overwrites stale
+    /// entries whose model block changed under an unchanged key, so it
+    /// needs this overwrite primitive.
+    pub fn put_replace(&self, key: u64, row: Arc<[f32]>) {
+        self.shard(key).lock().unwrap().replace_arc(key, row);
+    }
+
     pub fn stats(&self) -> CacheStats {
         let mut s = CacheStats::default();
         for shard in &self.shards {
@@ -371,6 +380,17 @@ mod tests {
         c.put(3, vec![3.0f32].into());
         assert_eq!(&*c.get_quiet(3).unwrap(), &[3.0]);
         assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn put_replace_overwrites_resident_entry() {
+        let c = ShardedRowCache::new(1 << 20, 2);
+        c.put(3, vec![1.0f32, 2.0].into());
+        c.put(3, vec![9.0f32, 9.0].into()); // keep-existing policy
+        assert_eq!(&*c.get_quiet(3).unwrap(), &[1.0, 2.0]);
+        c.put_replace(3, vec![9.0f32, 8.0, 7.0].into());
+        assert_eq!(&*c.get_quiet(3).unwrap(), &[9.0, 8.0, 7.0]);
+        assert_eq!(c.stats(), CacheStats::default()); // counter-free
     }
 
     #[test]

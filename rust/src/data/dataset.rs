@@ -59,6 +59,19 @@ impl Dataset {
         Dataset { x, y, dim: self.dim, name: name.into() }
     }
 
+    /// A new dataset whose rows are `self`'s followed by `other`'s — the
+    /// streaming-update append. Dimensions must match; `self`'s rows are a
+    /// bit-identical prefix of the result (what
+    /// `cache::KernelContext::extended` requires).
+    pub fn appended(&self, other: &Dataset, name: impl Into<String>) -> Dataset {
+        assert_eq!(self.dim, other.dim, "appended(): dimension mismatch");
+        let mut x = self.x.clone();
+        x.extend_from_slice(&other.x);
+        let mut y = self.y.clone();
+        y.extend_from_slice(&other.y);
+        Dataset { x, y, dim: self.dim, name: name.into() }
+    }
+
     /// Random train/test split with the given train fraction.
     pub fn split(&self, train_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
         let n = self.len();
@@ -155,5 +168,17 @@ mod tests {
     #[should_panic(expected = "labels must be ±1")]
     fn rejects_bad_labels() {
         Dataset::new(vec![0.0], vec![2], 1, "bad");
+    }
+
+    #[test]
+    fn appended_keeps_prefix_bit_identical() {
+        let d = tiny();
+        let extra = Dataset::new(vec![6.0, 7.0, 8.0, 9.0], vec![-1, 1], 2, "extra");
+        let all = d.appended(&extra, "all");
+        assert_eq!(all.len(), 5);
+        assert_eq!(&all.x[..d.x.len()], &d.x[..]);
+        assert_eq!(&all.y[..d.len()], &d.y[..]);
+        assert_eq!(all.row(3), extra.row(0));
+        assert_eq!(all.y[4], 1);
     }
 }

@@ -28,6 +28,8 @@
 //! Early stopping after any level yields the early-prediction model
 //! (eq. 11): the level's router + per-cluster local models.
 
+pub mod update;
+
 use std::time::Instant;
 
 use crate::cache::KernelContext;

@@ -1,0 +1,351 @@
+//! Streaming model updates: `dcsvm update` — warm-started incremental
+//! re-solves seeded from a trained model's SV set.
+//!
+//! The paper's key primitive is that a solver warm-started from a smaller
+//! problem's support vectors converges in few iterations (the conquer step
+//! of Algorithm 1, paper Theorem 2: the SV set is essentially identified
+//! early). An update applies the same primitive to *data drift*: the
+//! current model's SVs **are** the compressed memory of everything trained
+//! so far, so `update` rebuilds the dual problem over `SVs ∪ delta` —
+//! orders of magnitude smaller than the cumulative raw stream — and
+//! warm-starts SMO from the model's own α (reconstructed from `coef`,
+//! since `coef_i = α_i y_i`).
+//!
+//! The online PROCESS/EVICT idea of [`crate::baselines::lasvm`] is
+//! promoted to first class here, in batch form:
+//!
+//! - **process gate**: each delta row's kernel values against the current
+//!   SV set are computed in one batched segment dispatch (the SV prefix is
+//!   a registered [`crate::cache::KernelContext`] segment, so the rows
+//!   stay cached and stitch into the solve's full rows — none of the gate
+//!   work is thrown away). Its gradient `g_p = y_p f(x_p) − 1` classifies
+//!   the row as margin-violating (an active insertion, LaSVM PROCESS) or
+//!   margin-satisfied (enters at α=0 and is shrunk out almost
+//!   immediately);
+//! - **warm solve**: one SMO run over `SVs ∪ delta`, warm-started from
+//!   the reconstructed α — the conquer-step machinery unchanged;
+//! - **evict**: rows ending at α=0 leave the expansion (LaSVM REMOVE) —
+//!   [`SvmModel::from_ctx_alpha`] keeps only α>0 rows, and the
+//!   [`UpdateResult::svs_dropped`] / [`UpdateResult::svs_added`] counters
+//!   report the churn.
+//!
+//! An **empty delta is a bit-identical no-op**: the caller's model passes
+//! through untouched and every counter stays 0 (`scripts/bench_diff.py`
+//! gates this invariant in CI; the CLI additionally copies the model file
+//! bytes verbatim so the emitted JSON is byte-identical).
+//!
+//! `tests/streaming_update.rs` drives the drift scenario end-to-end:
+//! accuracy recovers after each drift chunk, and every warm update
+//! computes strictly fewer kernel values than a cold retrain on the same
+//! cumulative data ([`cold_solve`] is the comparator, and the
+//! `--compare-cold` CLI flag gates the same claim in `bench-smoke` CI).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::cache::KernelContext;
+use crate::data::Dataset;
+use crate::kernel::BlockKernel;
+use crate::predict::SvmModel;
+use crate::solver::objective::projected_violation;
+use crate::solver::{SmoConfig, SmoSolver};
+use crate::util::threadpool::default_threads;
+
+/// Configuration of one incremental update (and of its cold comparator).
+#[derive(Clone, Debug)]
+pub struct UpdateConfig {
+    /// Box constraint C. Seed α from the model are clamped into `[0, C]`.
+    pub c: f64,
+    /// KKT stopping tolerance.
+    pub eps: f64,
+    /// Hard iteration cap (0 = unlimited).
+    pub max_iter: usize,
+    /// Byte budget of the update's kernel-row cache.
+    pub cache_bytes: usize,
+    /// Worker budget for panel-parallel kernel dispatches (0 = all cores).
+    pub threads: usize,
+}
+
+impl Default for UpdateConfig {
+    fn default() -> Self {
+        UpdateConfig {
+            c: 1.0,
+            eps: 1e-3,
+            max_iter: 0,
+            cache_bytes: crate::cache::DEFAULT_CACHE_BYTES,
+            threads: 0,
+        }
+    }
+}
+
+/// Outcome of one incremental update.
+#[derive(Clone, Debug)]
+pub struct UpdateResult {
+    /// The updated model (SVs of the warm re-solve).
+    pub model: SvmModel,
+    /// Dual objective of the update subproblem (`SVs ∪ delta`).
+    pub objective: f64,
+    pub iterations: usize,
+    pub elapsed_s: f64,
+    /// Kernel entries evaluated during the whole update (process gate +
+    /// warm solve) — the `update_values_computed` counter of the harness
+    /// `Outcome` and `BENCH_ci.json`.
+    pub values_computed: u64,
+    /// Delta rows that ended as support vectors.
+    pub svs_added: u64,
+    /// Old SVs whose α fell to 0 (evicted from the expansion).
+    pub svs_dropped: u64,
+    /// Delta rows violating the old model's margin (LaSVM PROCESS
+    /// insertions); the rest entered margin-satisfied at α=0.
+    pub margin_violations: u64,
+    /// True when the delta was empty and the model passed through
+    /// untouched (all counters 0).
+    pub noop: bool,
+}
+
+impl UpdateResult {
+    fn noop(model: SvmModel) -> UpdateResult {
+        UpdateResult {
+            model,
+            objective: 0.0,
+            iterations: 0,
+            elapsed_s: 0.0,
+            values_computed: 0,
+            svs_added: 0,
+            svs_dropped: 0,
+            margin_violations: 0,
+            noop: true,
+        }
+    }
+}
+
+/// Reconstruct the dual seed of a model: each SV becomes a dataset row
+/// labeled `sign(coef)`, with `α = |coef|` clamped into `[0, c]`
+/// (`coef_i = α_i y_i`, so the pair is exact up to the clamp when the
+/// update's C differs from the training C).
+pub fn seed_from_model(model: &SvmModel, c: f64) -> (Dataset, Vec<f64>) {
+    let n_sv = model.num_svs();
+    let mut y = Vec::with_capacity(n_sv);
+    let mut alpha = Vec::with_capacity(n_sv);
+    for &cf in &model.coef {
+        y.push(if cf >= 0.0 { 1i8 } else { -1i8 });
+        alpha.push((cf.abs() as f64).clamp(0.0, c));
+    }
+    let ds = Dataset::new(model.sv_x.clone(), y, model.dim, "update-seed");
+    (ds, alpha)
+}
+
+/// Apply one incremental update: warm-started SMO over `SVs(model) ∪
+/// delta`, through one [`KernelContext`] whose SV-prefix segment caches
+/// the process-gate rows for the solve's stitching path.
+pub fn update(
+    model: &SvmModel,
+    delta: &Dataset,
+    kernel: &dyn BlockKernel,
+    cfg: &UpdateConfig,
+) -> Result<UpdateResult> {
+    if kernel.kind() != model.kind {
+        bail!("update: kernel {:?} does not match model {:?}", kernel.kind(), model.kind);
+    }
+    if delta.is_empty() {
+        return Ok(UpdateResult::noop(model.clone()));
+    }
+    if delta.dim != model.dim {
+        bail!("update: delta dim {} does not match model dim {}", delta.dim, model.dim);
+    }
+    let t0 = Instant::now();
+    let (seed_ds, seed_alpha) = seed_from_model(model, cfg.c);
+    let n_sv = seed_ds.len();
+    let working = seed_ds.appended(delta, "update-working");
+    let n = working.len();
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let ctx = KernelContext::new(&working, kernel, cfg.cache_bytes).with_threads(threads);
+
+    // LaSVM PROCESS gate, batched: kernel rows of every delta point against
+    // the SV prefix in one segment dispatch. The segment entries stay
+    // cached, so the solve's full rows stitch them back in — the gate's
+    // kernel work is reused, not repeated.
+    let mut margin_violations = 0u64;
+    if n_sv > 0 {
+        let sv_cols: Vec<usize> = (0..n_sv).collect();
+        let seg = ctx.register_segment(&sv_cols);
+        let delta_rows: Vec<usize> = (n_sv..n).collect();
+        ctx.compute_segment_rows(&seg, &delta_rows);
+        for &p in &delta_rows {
+            let krow = ctx.segment_row(&seg, p);
+            // g_p = y_p Σ_j coef_j K_pj − 1  (coef_j = α_j y_j).
+            let yp = working.y[p] as f64;
+            let mut g = -1.0;
+            for (t, &cf) in model.coef.iter().enumerate() {
+                g += yp * cf as f64 * krow[t] as f64;
+            }
+            if projected_violation(0.0, g, cfg.c) > 0.0 {
+                margin_violations += 1;
+            }
+        }
+    }
+
+    // Warm conquer-style solve over the whole expansion.
+    let mut alpha0 = seed_alpha;
+    alpha0.resize(n, 0.0);
+    let smo = SmoConfig {
+        c: cfg.c,
+        eps: cfg.eps,
+        max_iter: cfg.max_iter,
+        shrinking: true,
+        report_every: 0,
+        row_batch: 0,
+    };
+    let res = SmoSolver::new(ctx.view_full(), smo).solve_warm(Some(&alpha0), &mut |_| {});
+
+    let svs_dropped = (0..n_sv).filter(|&i| res.alpha[i] == 0.0).count() as u64;
+    let svs_added = (n_sv..n).filter(|&i| res.alpha[i] > 0.0).count() as u64;
+    let updated = SvmModel::from_ctx_alpha(&ctx, &res.alpha);
+    Ok(UpdateResult {
+        model: updated,
+        objective: res.objective,
+        iterations: res.iterations,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        values_computed: ctx.value_stats().values_computed,
+        svs_added,
+        svs_dropped,
+        margin_violations,
+        noop: false,
+    })
+}
+
+/// Outcome of a cold from-scratch solve (the comparator a warm update is
+/// measured against).
+#[derive(Clone, Debug)]
+pub struct ColdResult {
+    pub model: SvmModel,
+    pub objective: f64,
+    pub iterations: usize,
+    pub elapsed_s: f64,
+    /// Kernel entries evaluated by the cold solve.
+    pub values_computed: u64,
+}
+
+/// Cold comparator: solve `data` from scratch (no warm seed) with the
+/// same solver settings, counting kernel values. The drift e2e and the
+/// `--compare-cold` CLI flag assert a warm [`update`] computes strictly
+/// fewer values than this on the same cumulative data.
+pub fn cold_solve(data: &Dataset, kernel: &dyn BlockKernel, cfg: &UpdateConfig) -> ColdResult {
+    let t0 = Instant::now();
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let ctx = KernelContext::new(data, kernel, cfg.cache_bytes).with_threads(threads);
+    let smo = SmoConfig {
+        c: cfg.c,
+        eps: cfg.eps,
+        max_iter: cfg.max_iter,
+        shrinking: true,
+        report_every: 0,
+        row_batch: 0,
+    };
+    let res = SmoSolver::new(ctx.view_full(), smo).solve();
+    ColdResult {
+        model: SvmModel::from_ctx_alpha(&ctx, &res.alpha),
+        objective: res.objective,
+        iterations: res.iterations,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        values_computed: ctx.value_stats().values_computed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{covtype_like, generate};
+    use crate::kernel::native::NativeKernel;
+    use crate::kernel::KernelKind;
+    use crate::util::prng::Pcg64;
+
+    fn setup(n: usize, seed: u64) -> (Dataset, NativeKernel) {
+        let mut rng = Pcg64::new(seed);
+        let ds = generate(&covtype_like(), n, &mut rng);
+        let k = NativeKernel::new(KernelKind::Rbf { gamma: 8.0 });
+        (ds, k)
+    }
+
+    fn train_base(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &UpdateConfig) -> SvmModel {
+        cold_solve(ds, kernel, cfg).model
+    }
+
+    #[test]
+    fn empty_delta_is_a_noop() {
+        let (ds, k) = setup(60, 5);
+        let cfg = UpdateConfig { cache_bytes: 8 << 20, threads: 1, ..UpdateConfig::default() };
+        let model = train_base(&ds, &k, &cfg);
+        let empty = Dataset::new(Vec::new(), Vec::new(), ds.dim, "empty");
+        let res = update(&model, &empty, &k, &cfg).unwrap();
+        assert!(res.noop);
+        assert_eq!(res.values_computed, 0);
+        assert_eq!((res.svs_added, res.svs_dropped), (0, 0));
+        // Bit-identical pass-through, JSON included.
+        assert_eq!(res.model.to_json().to_string(), model.to_json().to_string());
+        assert_eq!(
+            res.model.sv_x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            model.sv_x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn update_learns_the_delta_and_counts_work() {
+        let (ds, k) = setup(90, 6);
+        let cfg = UpdateConfig { cache_bytes: 8 << 20, threads: 1, ..UpdateConfig::default() };
+        let (base, rest) = {
+            let idx_a: Vec<usize> = (0..60).collect();
+            let idx_b: Vec<usize> = (60..90).collect();
+            (ds.subset(&idx_a, "base"), ds.subset(&idx_b, "delta"))
+        };
+        let model = train_base(&base, &k, &cfg);
+        let res = update(&model, &rest, &k, &cfg).unwrap();
+        assert!(!res.noop);
+        assert!(res.values_computed > 0);
+        assert!(res.model.num_svs() > 0);
+        assert_eq!(
+            res.model.num_svs() as u64,
+            model.num_svs() as u64 + res.svs_added - res.svs_dropped
+        );
+        // The updated model classifies the delta at least as well as the
+        // stale one (it trained on it).
+        let stale = model.accuracy(&rest, &k);
+        let fresh = res.model.accuracy(&rest, &k);
+        assert!(
+            fresh >= stale - 1e-9,
+            "update hurt delta accuracy: {fresh} < {stale}"
+        );
+    }
+
+    #[test]
+    fn warm_update_beats_cold_on_kernel_values() {
+        let (ds, k) = setup(120, 7);
+        let cfg = UpdateConfig { cache_bytes: 8 << 20, threads: 1, ..UpdateConfig::default() };
+        let base_idx: Vec<usize> = (0..90).collect();
+        let delta_idx: Vec<usize> = (90..120).collect();
+        let base = ds.subset(&base_idx, "base");
+        let delta = ds.subset(&delta_idx, "delta");
+        let model = train_base(&base, &k, &cfg);
+        let warm = update(&model, &delta, &k, &cfg).unwrap();
+        let cold = cold_solve(&ds, &k, &cfg);
+        assert!(
+            warm.values_computed < cold.values_computed,
+            "warm update ({}) did not beat cold retrain ({})",
+            warm.values_computed,
+            cold.values_computed
+        );
+    }
+
+    #[test]
+    fn rejects_mismatched_kernel_and_dim() {
+        let (ds, k) = setup(40, 8);
+        let cfg = UpdateConfig { cache_bytes: 8 << 20, threads: 1, ..UpdateConfig::default() };
+        let model = train_base(&ds, &k, &cfg);
+        let other = NativeKernel::new(KernelKind::Rbf { gamma: 2.0 });
+        let delta = ds.subset(&[0, 1], "delta");
+        assert!(update(&model, &delta, &other, &cfg).is_err());
+        let bad_dim = Dataset::new(vec![0.0; 4], vec![1, -1], 2, "bad");
+        assert!(update(&model, &bad_dim, &k, &cfg).is_err());
+    }
+}

@@ -91,6 +91,15 @@ pub struct Outcome {
     /// Times a GC-dropped segment re-gathered its features (DC-SVM runs;
     /// stays 0 under the per-level generation floor).
     pub segment_regathers: Option<u64>,
+    /// Kernel entries evaluated by a `dcsvm update` warm re-solve
+    /// (streaming runs; strictly lower than a cold retrain on the same
+    /// cumulative data, and exactly 0 for an empty-delta no-op).
+    pub update_values_computed: Option<u64>,
+    /// Delta rows that became support vectors in a `dcsvm update` run
+    /// (0 for a no-op).
+    pub svs_added: Option<u64>,
+    /// Prior SVs evicted (α → 0) by a `dcsvm update` run (0 for a no-op).
+    pub svs_dropped: Option<u64>,
     /// Free-text extras (iteration counts, per-algo details). Structured
     /// metrics live in the typed fields above, not here.
     pub note: String,
@@ -148,6 +157,18 @@ impl Outcome {
             (
                 "segment_regathers",
                 self.segment_regathers.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "update_values_computed",
+                self.update_values_computed.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "svs_added",
+                self.svs_added.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "svs_dropped",
+                self.svs_dropped.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
             ),
             ("note", Json::from(self.note.as_str())),
         ])
@@ -229,6 +250,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 simd_tier: tier,
                 quantized_values: None,
                 segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
                 note: format!("iters={}", res.iterations),
             }
         }
@@ -271,6 +295,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 simd_tier: tier,
                 quantized_values: Some(res.quantized_values),
                 segment_regathers: Some(res.segment_regathers),
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
                 note,
             }
         }
@@ -304,6 +331,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 simd_tier: tier,
                 quantized_values: None,
                 segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
                 note: format!("levels={:?}", res.level_sv_counts),
             }
         }
@@ -337,6 +367,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 simd_tier: tier,
                 quantized_values: None,
                 segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
                 note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
             }
         }
@@ -371,6 +404,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 simd_tier: tier,
                 quantized_values: None,
                 segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
                 note: format!("landmarks={}", cfg.budget),
             }
         }
@@ -401,6 +437,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 simd_tier: tier,
                 quantized_values: None,
                 segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
                 note: format!("features={}", cfg.budget * 8),
             }
         }
@@ -431,6 +470,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 simd_tier: tier,
                 quantized_values: None,
                 segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
                 note: format!("units={}", cfg.budget),
             }
         }
@@ -466,6 +508,9 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 simd_tier: tier,
                 quantized_values: None,
                 segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
                 note: format!("basis={}", model.basis_size),
             }
         }

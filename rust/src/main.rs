@@ -46,6 +46,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "datasets" => cmd_datasets(),
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
+        "update" => cmd_update(rest),
         "kmeans" => cmd_kmeans(rest),
         "sweep" => cmd_sweep(rest),
         "serve" => cmd_serve(rest),
@@ -66,6 +67,9 @@ fn print_usage() {
          \x20 datasets                      dataset statistics (Table 2)\n\
          \x20 train    [--flags]            train one algorithm, report time/acc\n\
          \x20 predict  --model M [--flags]  load a saved model, evaluate\n\
+         \x20 update   --model M --data F   warm-started incremental update from\n\
+         \x20                               new labeled LIBSVM rows (flags:\n\
+         \x20                               `dcsvm update --help`)\n\
          \x20 kmeans   [--flags]            two-step kernel kmeans report\n\
          \x20 sweep    [--flags]            (C, γ) grid (Tables 7–10 style)\n\
          \x20 serve    --model M [--flags]  persistent server: LIBSVM rows on stdin\n\
@@ -250,6 +254,240 @@ fn cmd_predict(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `dcsvm update` flag table: (flag, value placeholder, default, help) —
+/// [`update_usage`] renders the usage text from it, mirroring the
+/// serve-flag convention ([`dcsvm::serving::transport::SERVE_FLAGS`]).
+const UPDATE_FLAGS: &[(&str, &str, &str, &str)] = &[
+    ("--model", "FILE", "required", "model JSON to update (train --save-model or a previous update)"),
+    ("--data", "FILE", "required", "new labeled rows, LIBSVM format (empty file = bit-identical no-op)"),
+    ("--out", "FILE", "--model (in place)", "where to write the updated model JSON"),
+    ("--c", "C", "1", "box constraint of the warm re-solve"),
+    ("--eps", "E", "1e-3", "KKT stopping tolerance"),
+    ("--max-iter", "N", "0 (unlimited)", "iteration cap of the warm re-solve"),
+    ("--cache-mb", "MB", "64", "kernel-row cache budget of the update solve"),
+    ("--backend", "KIND", "auto", "kernel backend: auto, native, or pjrt"),
+    ("--threads", "N", "all cores", "worker budget for kernel dispatches"),
+    ("--compare-cold", "FILE", "off", "also cold-retrain on FILE (cumulative LIBSVM data) and report its kernel-value count"),
+];
+
+/// The `dcsvm update` usage text, rendered from [`UPDATE_FLAGS`].
+fn update_usage() -> String {
+    let mut s = String::from("usage: dcsvm update --model FILE --data FILE [flags]\n");
+    for (flag, value, default, help) in UPDATE_FLAGS {
+        let head = format!("{flag} {value}");
+        s.push_str(&format!("  {head:<26} {help}  [{default}]\n"));
+    }
+    s
+}
+
+/// Warm-started incremental model update (`dcsvm update`): load a trained
+/// model JSON plus new labeled rows, re-solve over `SVs ∪ delta` seeded
+/// from the model's α ([`dcsvm::dcsvm::update`]), and write the updated
+/// model. Emits one JSON line with the update counters on stdout (the
+/// bench-smoke CI leg parses it); human-readable notes go to stderr. An
+/// empty delta copies the model file through byte-identically.
+fn cmd_update(args: &[String]) -> Result<()> {
+    use dcsvm::dcsvm::update::{cold_solve, update, UpdateConfig};
+
+    let usage = update_usage();
+    let mut model_path: Option<String> = None;
+    let mut data_path: Option<String> = None;
+    let mut out_path: Option<String> = None;
+    let mut c = 1.0f64;
+    let mut eps = 1e-3f64;
+    let mut max_iter = 0usize;
+    let mut cache_mb = 64usize;
+    let mut backend = "auto".to_string();
+    let mut threads = 0usize;
+    let mut cold_path: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i].as_str();
+        if matches!(key, "--help" | "-h" | "help") {
+            println!("{usage}");
+            return Ok(());
+        }
+        // Reject unknown flags before demanding a value (the serve-flag
+        // convention): `--verbose` errors as unknown, not "needs a value".
+        if !UPDATE_FLAGS.iter().any(|(flag, ..)| *flag == key) {
+            bail!("update: unknown flag '{key}'\n{usage}");
+        }
+        let Some(val) = args.get(i + 1) else {
+            bail!("update: flag {key} needs a value\n{usage}");
+        };
+        let positive = |flag: &str| -> Result<usize> {
+            let n: usize = val.parse().map_err(|_| {
+                anyhow!("update: {flag} needs a positive integer, got '{val}'\n{usage}")
+            })?;
+            if n == 0 {
+                bail!("update: {flag} must be at least 1\n{usage}");
+            }
+            Ok(n)
+        };
+        let count = |flag: &str| -> Result<usize> {
+            val.parse().map_err(|_| {
+                anyhow!("update: {flag} needs a non-negative integer, got '{val}'\n{usage}")
+            })
+        };
+        let positive_f = |flag: &str| -> Result<f64> {
+            let f: f64 = val.parse().map_err(|_| {
+                anyhow!("update: {flag} needs a positive number, got '{val}'\n{usage}")
+            })?;
+            if !f.is_finite() || f <= 0.0 {
+                bail!("update: {flag} must be positive\n{usage}");
+            }
+            Ok(f)
+        };
+        match key {
+            "--model" => model_path = Some(val.clone()),
+            "--data" => data_path = Some(val.clone()),
+            "--out" => out_path = Some(val.clone()),
+            "--c" => c = positive_f("--c")?,
+            "--eps" => eps = positive_f("--eps")?,
+            "--max-iter" => max_iter = count("--max-iter")?,
+            "--cache-mb" => cache_mb = positive("--cache-mb")?,
+            "--backend" => backend = val.clone(),
+            "--threads" => threads = count("--threads")?,
+            "--compare-cold" => cold_path = Some(val.clone()),
+            _ => unreachable!("UPDATE_FLAGS covers every match arm"),
+        }
+        i += 2;
+    }
+    let Some(model_path) = model_path else {
+        bail!("update requires --model FILE\n{usage}");
+    };
+    let Some(data_path) = data_path else {
+        bail!("update requires --data FILE\n{usage}");
+    };
+    let out_path = out_path.unwrap_or_else(|| model_path.clone());
+
+    let text = std::fs::read_to_string(&model_path)
+        .with_context(|| format!("read {model_path}"))?;
+    let model = SvmModel::from_json(&Json::parse(&text)?)?;
+    let file = std::fs::File::open(&data_path)
+        .with_context(|| format!("read {data_path}"))?;
+    let delta = dcsvm::data::libsvm::parse_libsvm(
+        std::io::BufReader::new(file),
+        Some(model.dim),
+        format!("delta:{data_path}"),
+    )?;
+    let kernel = harness::make_kernel(model.kind, &backend, model.dim)?;
+    let cfg = UpdateConfig { c, eps, max_iter, cache_bytes: cache_mb << 20, threads };
+    eprintln!(
+        "updating {model_path} ({} SVs, dim {}) with {} delta rows from {data_path}",
+        model.num_svs(),
+        model.dim,
+        delta.len()
+    );
+    let res = update(&model, &delta, kernel.as_ref(), &cfg)?;
+
+    // Persist. An empty delta is a bit-identical no-op: copy the input
+    // file bytes through verbatim (a JSON re-serialization round-trip is
+    // NOT guaranteed byte-stable).
+    if res.noop {
+        if out_path != model_path {
+            std::fs::write(&out_path, &text)
+                .with_context(|| format!("write {out_path}"))?;
+        }
+    } else {
+        std::fs::write(&out_path, res.model.to_json().to_string())
+            .with_context(|| format!("write {out_path}"))?;
+    }
+
+    let mut pairs = vec![
+        ("algo", Json::from("update")),
+        ("noop", Json::from(res.noop)),
+        ("svs", Json::from(res.model.num_svs())),
+        ("update_values_computed", Json::from(res.values_computed as f64)),
+        ("svs_added", Json::from(res.svs_added as f64)),
+        ("svs_dropped", Json::from(res.svs_dropped as f64)),
+        ("margin_violations", Json::from(res.margin_violations as f64)),
+        ("objective", Json::from(res.objective)),
+        ("iterations", Json::from(res.iterations)),
+        ("elapsed_s", Json::from(res.elapsed_s)),
+        ("out", Json::from(out_path.as_str())),
+    ];
+    if let Some(cold_path) = &cold_path {
+        let file = std::fs::File::open(cold_path)
+            .with_context(|| format!("read {cold_path}"))?;
+        let all = dcsvm::data::libsvm::parse_libsvm(
+            std::io::BufReader::new(file),
+            Some(model.dim),
+            format!("cold:{cold_path}"),
+        )?;
+        let cold = cold_solve(&all, kernel.as_ref(), &cfg);
+        eprintln!(
+            "cold retrain on {} cumulative rows: {} kernel values (warm update: {})",
+            all.len(),
+            cold.values_computed,
+            res.values_computed
+        );
+        pairs.push(("cold_values_computed", Json::from(cold.values_computed as f64)));
+        pairs.push(("cold_objective", Json::from(cold.objective)));
+        pairs.push((
+            "warm_beats_cold",
+            Json::from(res.values_computed < cold.values_computed),
+        ));
+    }
+    println!("{}", Json::obj(pairs));
+
+    // Thread the update counters into the structured results file when a
+    // bench collects one (same env contract as harness::run).
+    if let Ok(dir) = std::env::var("DCSVM_RESULTS_DIR") {
+        if !dir.is_empty() {
+            let (kname, gamma) = match model.kind {
+                dcsvm::kernel::KernelKind::Rbf { gamma } => ("rbf", gamma as f64),
+                dcsvm::kernel::KernelKind::Poly { gamma, .. } => ("poly", gamma as f64),
+                dcsvm::kernel::KernelKind::Linear => ("linear", 0.0),
+            };
+            let rc = RunConfig {
+                dataset: data_path.clone(),
+                kernel: kname.to_string(),
+                gamma,
+                c,
+                eps,
+                cache_mb,
+                backend: backend.clone(),
+                threads,
+                ..RunConfig::default()
+            };
+            let accuracy = if delta.is_empty() {
+                0.0
+            } else {
+                res.model.accuracy(&delta, kernel.as_ref())
+            };
+            let outcome = harness::Outcome {
+                algo: "update",
+                train_s: res.elapsed_s,
+                accuracy,
+                objective: Some(res.objective),
+                svs: res.model.num_svs(),
+                cache_hit_rate: None,
+                final_rows: None,
+                segment_rows: None,
+                divide_values: None,
+                stitched_values: None,
+                parallel_dispatches: None,
+                stitch_groups: None,
+                registry_bytes: None,
+                simd_tier: dcsvm::kernel::simd_tier().name(),
+                quantized_values: None,
+                segment_regathers: None,
+                update_values_computed: Some(res.values_computed),
+                svs_added: Some(res.svs_added),
+                svs_dropped: Some(res.svs_dropped),
+                note: format!("margin_violations={}", res.margin_violations),
+            };
+            let _ = harness::record_result_to(
+                std::path::Path::new(&dir),
+                &rc,
+                &outcome,
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_kmeans(args: &[String]) -> Result<()> {
     let cfg = parse_cfg(args)?;
     let (tr, _) = harness::load_dataset(&cfg)?;
@@ -359,6 +597,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut cache_mb = 64usize;
     let mut backend = "auto".to_string();
     let mut quant_route = false;
+    let mut allow_swap = false;
     let mut i = 0;
     while i < args.len() {
         let key = args[i].as_str();
@@ -371,7 +610,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if !matches!(
             key,
             "--model" | "--listen" | "--batch" | "--workers" | "--conns" | "--cache-mb"
-                | "--backend" | "--quant-route"
+                | "--backend" | "--quant-route" | "--allow-swap"
         ) {
             bail!("serve: unknown flag '{key}'\n{usage}");
         }
@@ -400,6 +639,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                     anyhow!("serve: --quant-route needs true or false, got '{val}'\n{usage}")
                 })?;
             }
+            "--allow-swap" => {
+                allow_swap = val.parse().map_err(|_| {
+                    anyhow!("serve: --allow-swap needs true or false, got '{val}'\n{usage}")
+                })?;
+            }
             _ => unreachable!("flag allow-list above covers every match arm"),
         }
         i += 2;
@@ -421,7 +665,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         ctx.dim(),
         if ctx.model().quant_route() { ", quantized routing" } else { "" }
     );
-    let core = ServeCore::new(ctx, workers);
+    let mut core = ServeCore::new(ctx, workers);
+    if allow_swap {
+        // Swapped-in models rebuild their kernel through the same backend
+        // selection as the initial load (the factory keeps the serving
+        // layer free of a harness dependency).
+        let backend = backend.clone();
+        let factory: transport::KernelFactory =
+            Box::new(move |kind, dim| harness::make_kernel(kind, &backend, dim));
+        core = core.with_swap(factory, cache_mb << 20);
+        eprintln!("hot swap enabled: {{\"swap_model\": FILE}} requests accepted");
+    }
     match &listen {
         Some(addr) => {
             let listener = std::net::TcpListener::bind(addr.as_str())

@@ -59,6 +59,23 @@
 //! so N concurrent connections share ONE context — kernel rows computed
 //! for one client warm the cache for every other client (PROTOCOL.md
 //! documents the wire format).
+//!
+//! **Hot swap** (`dcsvm update` → zero-downtime serving): a context can be
+//! rebuilt around an updated model with [`ServingContext::adopt_from`],
+//! which *shares* the predecessor's per-component caches (they are
+//! `Arc`ed) and revalidates them block by block. Every cache entry starts
+//! with a **block tag** — `[tag | query (dim) | K(block)]` — and each
+//! `(component, block)` pair owns one tag. Adoption keeps a block's tag
+//! iff its SV slice is bit-identical in the new model (same block size,
+//! same span, same feature bits; coefficients are read at fold time and
+//! may change freely), and allocates a fresh tag otherwise, so stale
+//! entries under unchanged keys fail the tag check, miss, and are
+//! recomputed in place ([`ShardedRowCache::put_replace`]). A warm client
+//! replaying a query after a swap therefore recomputes rows **only for
+//! changed blocks** — the unchanged prefix of an incrementally updated SV
+//! set keeps hitting (`tests/serve_socket.rs` counts it). The early-model
+//! routing cache is shared iff the router (sample set + centroids) is
+//! JSON-identical, and rebuilt otherwise.
 
 pub mod transport;
 
@@ -253,13 +270,37 @@ pub struct ServingContext {
     sv_block: usize,
     /// One cache per decision component: index 0 for an exact model, index
     /// c for early-model cluster c. Entry layout, per SV block b:
-    /// `[query (dim) | K(query, sv_{b·B} .. sv_{min((b+1)·B, s)})]`.
-    caches: Vec<ShardedRowCache>,
+    /// `[tag | query (dim) | K(query, sv_{b·B} .. sv_{min((b+1)·B, s)})]`.
+    /// `Arc`ed so a hot-swapped successor context can adopt them in place
+    /// ([`Self::adopt_from`]).
+    caches: Vec<Arc<ShardedRowCache>>,
+    /// Block tags: `block_tags[c][b]` is the generation tag entries of
+    /// component `c`, SV block `b` must carry to be valid for THIS
+    /// context. Adoption preserves tags of bit-identical blocks and bumps
+    /// the rest, so stale entries in a shared cache become inert misses.
+    block_tags: Vec<Vec<u32>>,
+    /// First unused tag (tags stay `< 2^24` so `tag as f32` is exact).
+    next_tag: u32,
     /// Early-model routing cache: `[query (dim) | component id]`, keyed by
     /// the same content fingerprint as the row caches (stored query
     /// verified on hit). `None` for exact models — their routing is
-    /// trivial.
-    route_cache: Option<ShardedRowCache>,
+    /// trivial. Untagged: adoption shares it only when the router is
+    /// identical, and rebuilds it otherwise.
+    route_cache: Option<Arc<ShardedRowCache>>,
+}
+
+/// What a hot swap ([`ServingContext::adopt_from`]) preserved: the serve
+/// transport reports these in the swap response, and the concurrency test
+/// pins `blocks_kept` to the unchanged-SV-block count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwapStats {
+    /// SV blocks of the new context (all components).
+    pub blocks_total: usize,
+    /// Blocks whose tag — and therefore whose resident cache entries —
+    /// survived the swap.
+    pub blocks_kept: usize,
+    /// Whether the early-model routing cache was carried over.
+    pub route_kept: bool,
 }
 
 impl ServingContext {
@@ -296,12 +337,12 @@ impl ServingContext {
             ServingModel::Exact(m) => vec![m.num_svs()],
             ServingModel::Early(em) => em.locals.iter().map(|m| m.num_svs()).collect(),
         };
-        // Per-query entry bytes of a component: one [query | K-block] entry
-        // per SV block. Early models also carry a routing cache
+        // Per-query entry bytes of a component: one [tag | query | K-block]
+        // entry per SV block. Early models also carry a routing cache
         // (`[query | component]`, row length dim+1); it takes its
         // proportional — tiny — share of the same byte budget.
         let blocks = |svs: usize| svs.div_ceil(sv_block).max(1);
-        let comp_len = |svs: usize| blocks(svs) * dim + svs;
+        let comp_len = |svs: usize| blocks(svs) * (dim + 1) + svs;
         let route_len = match &model {
             ServingModel::Exact(_) => None,
             ServingModel::Early(_) => Some(dim + 1),
@@ -314,11 +355,108 @@ impl ServingContext {
         };
         let caches = comp_svs
             .iter()
-            .map(|&s| ShardedRowCache::new(share(comp_len(s)), SERVE_SHARDS))
+            .map(|&s| Arc::new(ShardedRowCache::new(share(comp_len(s)), SERVE_SHARDS)))
             .collect();
         let route_cache =
-            route_len.map(|len| ShardedRowCache::new(share(len), SERVE_SHARDS));
-        ServingContext { model, kernel, dim, sv_block, caches, route_cache }
+            route_len.map(|len| Arc::new(ShardedRowCache::new(share(len), SERVE_SHARDS)));
+        // Fresh contexts number every (component, block) tag sequentially
+        // from 1 (0 is reserved so a zeroed entry never verifies).
+        let mut next_tag = 1u32;
+        let block_tags = comp_svs
+            .iter()
+            .map(|&s| {
+                (0..blocks(s))
+                    .map(|_| {
+                        let t = next_tag;
+                        next_tag += 1;
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+        ServingContext {
+            model,
+            kernel,
+            dim,
+            sv_block,
+            caches,
+            block_tags,
+            next_tag,
+            route_cache,
+        }
+    }
+
+    /// Build a context around `model` that **adopts** `prev`'s caches: the
+    /// zero-downtime half of `dcsvm update`. Per-component caches are
+    /// shared (`Arc`) with `prev`, and each SV block keeps its tag — so
+    /// its resident entries keep verifying — iff its SV slice is
+    /// bit-identical in the new model (same block size, same span, same
+    /// `f32` bits; coefficients may differ, they are folded at read time).
+    /// Changed or new blocks get fresh tags: their stale entries miss on
+    /// the tag check and are recomputed in place. Nothing is adopted when
+    /// the kernel kind (γ included) or query dimension changed — then this
+    /// degrades to a cold [`Self::with_block_size`] context.
+    ///
+    /// `prev` may keep serving concurrently: its in-flight fills write
+    /// entries under its own tags, which this context treats as misses
+    /// (and vice versa) — wrong answers are structurally impossible, the
+    /// cost of a racing fill is one recompute.
+    pub fn adopt_from(
+        model: ServingModel,
+        kernel: Box<dyn BlockKernel>,
+        cache_bytes: usize,
+        prev: &ServingContext,
+    ) -> (ServingContext, SwapStats) {
+        let mut fresh = Self::with_block_size(model, kernel, cache_bytes, prev.sv_block);
+        let mut stats = SwapStats {
+            blocks_total: fresh.block_tags.iter().map(Vec::len).sum(),
+            ..SwapStats::default()
+        };
+        if fresh.dim != prev.dim || fresh.model.kind() != prev.model.kind() {
+            return (fresh, stats);
+        }
+        // Tags issued by this context must never collide with live ones
+        // from the chain of contexts sharing these caches.
+        let mut next_tag = prev.next_tag.max(fresh.next_tag);
+        let dim = fresh.dim;
+        let n_comps = fresh.caches.len().min(prev.caches.len());
+        for c in 0..n_comps {
+            // Share the predecessor's cache (its resident entries are the
+            // point); the block tags below decide which entries still
+            // verify. The fresh cache built above is dropped — budgets
+            // follow the adopted cache.
+            fresh.caches[c] = Arc::clone(&prev.caches[c]);
+            let (new_sv, _, new_coef) = component_of(&fresh.model, c);
+            let (old_sv, _, old_coef) = component_of(&prev.model, c);
+            let b_count = fresh.block_tags[c].len();
+            for b in 0..b_count {
+                let b_lo = (b * fresh.sv_block).min(new_coef.len());
+                let b_hi = ((b + 1) * fresh.sv_block).min(new_coef.len());
+                let o_hi = ((b + 1) * fresh.sv_block).min(old_coef.len());
+                let kept = b < prev.block_tags[c].len()
+                    && b_hi == o_hi
+                    && bits_eq(&new_sv[b_lo * dim..b_hi * dim], &old_sv[b_lo * dim..b_hi * dim]);
+                if kept {
+                    fresh.block_tags[c][b] = prev.block_tags[c][b];
+                    stats.blocks_kept += 1;
+                } else {
+                    fresh.block_tags[c][b] = next_tag;
+                    next_tag += 1;
+                }
+            }
+        }
+        fresh.next_tag = next_tag;
+        // Routing entries encode only the router's geometry (sample set +
+        // centroids), so they survive iff the router is identical.
+        if let (ServingModel::Early(new_em), ServingModel::Early(old_em), Some(rc)) =
+            (&fresh.model, &prev.model, &prev.route_cache)
+        {
+            if new_em.router.to_json().to_string() == old_em.router.to_json().to_string() {
+                fresh.route_cache = Some(Arc::clone(rc));
+                stats.route_kept = true;
+            }
+        }
+        (fresh, stats)
     }
 
     /// Number of SV blocks of a component with `n_svs` support vectors
@@ -502,11 +640,13 @@ impl ServingContext {
 
     /// SV rows / norms / coefficients of decision component `c`.
     fn component(&self, c: usize) -> (&[f32], &[f32], &[f32]) {
-        let m = match &self.model {
-            ServingModel::Exact(m) => m,
-            ServingModel::Early(em) => &em.locals[c],
-        };
-        (&m.sv_x, &m.sv_norms, &m.coef)
+        component_of(&self.model, c)
+    }
+
+    /// The tag entries of component `c`, SV block `b` must open with to
+    /// verify under this context (exposed for swap tests).
+    pub fn block_tag(&self, c: usize, b: usize) -> u32 {
+        self.block_tags[c][b]
     }
 
     /// Decide queries `lo..hi` (one worker's micro-batch): per SV block of
@@ -548,21 +688,24 @@ impl ServingContext {
                 let b_lo = (b * self.sv_block).min(n_svs);
                 let b_hi = ((b + 1) * self.sv_block).min(n_svs);
                 let blen = b_hi - b_lo;
+                let tag_f = self.block_tags[c][b] as f32;
 
-                // Probe pass: resident entries (verified against the
-                // stored query prefix) are reused; the rest are batched
-                // misses.
+                // Probe pass: resident entries (verified against this
+                // context's block tag and the stored query prefix) are
+                // reused; the rest are batched misses. A stale-tag entry
+                // — left by a predecessor context across a hot swap — is
+                // a miss, recomputed and overwritten below.
                 let mut rows: Vec<Option<Arc<[f32]>>> = vec![None; idx.len()];
                 let mut missing: Vec<usize> = Vec::new(); // positions into idx
                 for (t, &i) in idx.iter().enumerate() {
                     let q = &x[i * dim..(i + 1) * dim];
                     if let Some(entry) = cache.get(block_key(fps[t], b)) {
-                        if &entry[..dim] == q {
+                        if entry[0] == tag_f && &entry[1..1 + dim] == q {
                             rs.hits += 1;
                             rows[t] = Some(entry);
                             continue;
                         }
-                        // Fingerprint collision: recompute below, uncached.
+                        // Stale tag or fingerprint collision: recompute.
                     }
                     rs.misses += 1;
                     missing.push(t);
@@ -611,11 +754,15 @@ impl ServingContext {
                     let mut entries: Vec<Arc<[f32]>> = Vec::with_capacity(uniq.len());
                     for (s, &t) in uniq.iter().enumerate() {
                         let q = query(t);
-                        let mut entry = Vec::with_capacity(dim + blen);
+                        let mut entry = Vec::with_capacity(1 + dim + blen);
+                        entry.push(tag_f);
                         entry.extend_from_slice(q);
                         entry.extend_from_slice(&kblock[s * blen..(s + 1) * blen]);
                         let entry: Arc<[f32]> = entry.into();
-                        cache.put(block_key(fps[t], b), Arc::clone(&entry));
+                        // put_replace, not put: a stale-tag entry from a
+                        // pre-swap context may be resident under this key
+                        // and must be overwritten, not kept.
+                        cache.put_replace(block_key(fps[t], b), Arc::clone(&entry));
                         entries.push(entry);
                     }
                     for (&t, &u) in missing.iter().zip(&rep) {
@@ -628,7 +775,7 @@ impl ServingContext {
                 let bcoef = &coef[b_lo..b_hi];
                 for (t, slot) in rows.iter().enumerate() {
                     let entry = slot.as_ref().expect("serving block filled");
-                    let krow = &entry[dim..];
+                    let krow = &entry[1 + dim..];
                     let mut a = acc[t];
                     for (&k, &w) in krow.iter().zip(bcoef) {
                         a += k * w;
@@ -660,6 +807,25 @@ struct RouteStats {
     hits: u64,
     misses: u64,
     dispatches: u64,
+}
+
+/// SV rows / norms / coefficients of decision component `c` of a model
+/// (free function so [`ServingContext::adopt_from`] can read two models'
+/// components while mutating its own tag table).
+fn component_of(model: &ServingModel, c: usize) -> (&[f32], &[f32], &[f32]) {
+    let m = match model {
+        ServingModel::Exact(m) => m,
+        ServingModel::Early(em) => &em.locals[c],
+    };
+    (&m.sv_x, &m.sv_norms, &m.coef)
+}
+
+/// Bit-level equality of two f32 slices (the adoption criterion: cached
+/// kernel values are a function of the SV bits, so bit-equal blocks have
+/// bit-equal entries; `==` on f32 would wrongly unify -0.0/0.0 and
+/// disqualify NaN payloads).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 /// FNV-1a over the query's f32 bit patterns: the stable content key of the
@@ -969,6 +1135,149 @@ mod tests {
         assert_eq!(a.routing_hits, 2);
         assert_eq!(a.routing_misses, 3);
         assert_eq!(a.routing_dispatches, 1);
+    }
+
+    /// Hand-built exact model over `svs` explicit SV rows (dim 2): swap
+    /// tests need exact control over which SV blocks change.
+    fn toy_model(svs: &[([f32; 2], f32)]) -> SvmModel {
+        let mut sv_x = Vec::new();
+        let mut coef = Vec::new();
+        for (row, w) in svs {
+            sv_x.extend_from_slice(row);
+            coef.push(*w);
+        }
+        let sv_norms = sv_x.chunks(2).map(|r| r.iter().map(|&v| v * v).sum()).collect();
+        SvmModel {
+            sv_x,
+            sv_norms,
+            coef,
+            dim: 2,
+            kind: KernelKind::Rbf { gamma: 4.0 },
+        }
+    }
+
+    fn toy_ctx(model: SvmModel, sv_block: usize) -> ServingContext {
+        let kern = NativeKernel::new(model.kind);
+        ServingContext::with_block_size(
+            ServingModel::Exact(model),
+            Box::new(kern),
+            4 << 20,
+            sv_block,
+        )
+    }
+
+    /// Tentpole: adoption keeps the tags — and so the resident entries —
+    /// of SV blocks whose slices are bit-identical, and a post-swap replay
+    /// recomputes ONLY the changed/new blocks.
+    #[test]
+    fn hot_swap_adoption_recomputes_only_changed_blocks() {
+        let old_svs: Vec<([f32; 2], f32)> =
+            vec![([0.1, 0.2], 0.5), ([0.3, 0.4], -0.25), ([0.5, 0.6], 0.75), ([0.7, 0.8], -0.5), ([0.9, 1.0], 0.25)];
+        let old_model = toy_model(&old_svs);
+        // Block size 2 over 5 SVs: blocks [0,2) [2,4) [4,5).
+        let old_ctx = toy_ctx(old_model, 2);
+        let queries: Vec<f32> = vec![0.15, 0.25, 0.55, 0.45, 0.85, 0.95];
+        let (dv_old, s1) = old_ctx.decide(&queries, 1);
+        assert_eq!(s1.rows_computed, 3 * 3, "3 queries × 3 blocks, cold");
+
+        // Update: same first 5 SVs bit-identical (coef of SV 0 changes —
+        // legal, coefs fold at read time), plus 2 appended SVs. New blocks:
+        // [0,2) [2,4) [4,6) [6,7) — the old partial tail [4,5) grew, so
+        // only the first two blocks survive.
+        let mut new_svs = old_svs.clone();
+        new_svs[0].1 = 1.5;
+        new_svs.push(([1.1, 1.2], 0.4));
+        new_svs.push(([1.3, 1.4], -0.3));
+        let new_model = toy_model(&new_svs);
+        let kern = NativeKernel::new(new_model.kind);
+        let (new_ctx, swap) = ServingContext::adopt_from(
+            ServingModel::Exact(new_model.clone()),
+            Box::new(kern),
+            4 << 20,
+            &old_ctx,
+        );
+        assert_eq!(swap.blocks_total, 4);
+        assert_eq!(swap.blocks_kept, 2);
+        assert_eq!(new_ctx.block_tag(0, 0), old_ctx.block_tag(0, 0));
+        assert_eq!(new_ctx.block_tag(0, 1), old_ctx.block_tag(0, 1));
+        assert_ne!(new_ctx.block_tag(0, 2), old_ctx.block_tag(0, 2));
+
+        // Replay the same queries on the adopted context: the two kept
+        // blocks hit, the changed tail + new block recompute.
+        let (dv_new, s2) = new_ctx.decide(&queries, 1);
+        assert_eq!(s2.cache_hits, 3 * 2, "kept blocks must keep hitting");
+        assert_eq!(s2.rows_computed, 3 * 2, "only changed/new blocks recompute");
+        // Decisions equal the new model evaluated from scratch,
+        // bit-for-bit (kept entries + fresh fills fold identically).
+        let norms: Vec<f32> =
+            queries.chunks(2).map(|q| q.iter().map(|&v| v * v).sum()).collect();
+        let kern2 = NativeKernel::new(new_model.kind);
+        let want = new_model.decision_batch(&queries, &norms, &kern2);
+        assert_eq!(dv_new, want);
+        assert_ne!(dv_old, dv_new, "updated coef must change decisions");
+
+        // The predecessor context still serves correctly over the shared
+        // cache: its tags ignore the successor's fresh entries.
+        let (dv_old2, _) = old_ctx.decide(&queries, 1);
+        assert_eq!(dv_old, dv_old2, "pre-swap context torn by the swap");
+
+        // Warm replay on the new context computes nothing at all.
+        let (dv_new2, s3) = new_ctx.decide(&queries, 1);
+        assert_eq!(dv_new, dv_new2);
+        assert_eq!(s3.rows_computed, 0);
+    }
+
+    /// A coefficient-only update keeps every block: zero recomputation
+    /// after the swap, decisions change to the new weights.
+    #[test]
+    fn coef_only_swap_recomputes_nothing() {
+        let svs: Vec<([f32; 2], f32)> =
+            vec![([0.1, 0.9], 0.5), ([0.4, 0.3], -0.5), ([0.8, 0.2], 0.25)];
+        let old_ctx = toy_ctx(toy_model(&svs), 2);
+        let queries: Vec<f32> = vec![0.2, 0.7, 0.6, 0.1];
+        let (dv_old, _) = old_ctx.decide(&queries, 1);
+        let mut new_svs = svs.clone();
+        for s in &mut new_svs {
+            s.1 *= -1.0;
+        }
+        let new_model = toy_model(&new_svs);
+        let kern = NativeKernel::new(new_model.kind);
+        let (new_ctx, swap) = ServingContext::adopt_from(
+            ServingModel::Exact(new_model),
+            Box::new(kern),
+            4 << 20,
+            &old_ctx,
+        );
+        assert_eq!(swap.blocks_kept, swap.blocks_total);
+        let (dv_new, s) = new_ctx.decide(&queries, 1);
+        assert_eq!(s.rows_computed, 0, "coef-only swap must not recompute");
+        assert_eq!(s.cache_hits, 2 * 2);
+        // Flipped coefficients negate every decision exactly.
+        let want: Vec<f32> = dv_old.iter().map(|&d| -d).collect();
+        assert_eq!(dv_new, want);
+    }
+
+    /// Kernel-parameter (γ) or dimension changes adopt nothing: every
+    /// cached value is a function of γ and the query layout.
+    #[test]
+    fn kernel_change_adopts_no_blocks() {
+        let svs: Vec<([f32; 2], f32)> = vec![([0.1, 0.9], 0.5), ([0.4, 0.3], -0.5)];
+        let old_ctx = toy_ctx(toy_model(&svs), 2);
+        let queries = [0.2f32, 0.7];
+        let _ = old_ctx.decide(&queries, 1);
+        let mut hotter = toy_model(&svs);
+        hotter.kind = KernelKind::Rbf { gamma: 32.0 };
+        let kern = NativeKernel::new(hotter.kind);
+        let (new_ctx, swap) = ServingContext::adopt_from(
+            ServingModel::Exact(hotter),
+            Box::new(kern),
+            4 << 20,
+            &old_ctx,
+        );
+        assert_eq!(swap.blocks_kept, 0);
+        let (_, s) = new_ctx.decide(&queries, 1);
+        assert_eq!(s.cache_hits, 0, "γ changed: nothing may hit");
+        assert_eq!(s.rows_computed, 1);
     }
 
     #[test]

@@ -37,12 +37,13 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{BatchStats, ServingContext};
+use super::{BatchStats, ServingContext, ServingModel, SwapStats};
+use crate::kernel::{BlockKernel, KernelKind};
 use crate::util::json::Json;
 use crate::util::threadpool::WorkQueue;
 
@@ -110,6 +111,12 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
         default: "false",
         help: "early models: route batches with int8-quantized sample rows (decisions stay exact per cluster)",
     },
+    FlagSpec {
+        flag: "--allow-swap",
+        value: "BOOL",
+        default: "false",
+        help: "accept {\"swap_model\": FILE} requests: hot-swap to an updated model with zero downtime (see PROTOCOL.md)",
+    },
 ];
 
 /// The `dcsvm serve` usage text, rendered from [`SERVE_FLAGS`].
@@ -137,9 +144,14 @@ pub const ERR_PARSE: &str = "parse";
 pub const ERR_BAD_REQUEST: &str = "bad_request";
 /// A query row's length does not match the served model's dimension.
 pub const ERR_DIM_MISMATCH: &str = "dim_mismatch";
+/// A `swap_model` request could not be honored: swaps disabled
+/// (`--allow-swap false`, the default), unreadable/invalid model file, or
+/// no kernel backend for the new model. The served model is untouched.
+pub const ERR_SWAP_FAILED: &str = "swap_failed";
 /// Every `code` an error object can carry; PROTOCOL.md catalogues each
 /// (`tests/docs_sync.rs` enforces the catalogue).
-pub const ERROR_CODES: &[&str] = &[ERR_PARSE, ERR_BAD_REQUEST, ERR_DIM_MISMATCH];
+pub const ERROR_CODES: &[&str] =
+    &[ERR_PARSE, ERR_BAD_REQUEST, ERR_DIM_MISMATCH, ERR_SWAP_FAILED];
 
 /// Hard cap on one socket request line. A client exceeding it gets a
 /// `bad_request` error object and its connection is closed (line framing
@@ -177,12 +189,35 @@ fn error_response(id: Json, code: &str, message: &str) -> Json {
 // ---------------------------------------------------------------------------
 // The shared request core.
 
-/// Transport-independent serving state: ONE [`ServingContext`] plus the
-/// process-lifetime counters every transport reports. Built once by
+/// Builds a kernel backend for a hot-swapped model (kind, dim) — set by
+/// the CLI to `harness::make_kernel` with the configured `--backend`, so
+/// the serving crate never depends on the harness.
+pub type KernelFactory =
+    Box<dyn Fn(KernelKind, usize) -> Result<Box<dyn BlockKernel>> + Send + Sync>;
+
+/// What one accepted `swap_model` request did (the response fields).
+pub struct SwapOutcome {
+    pub stats: SwapStats,
+    /// SV count of the model now being served.
+    pub svs: usize,
+    /// [`ServingModel::describe`] of the new model.
+    pub describe: String,
+}
+
+/// Transport-independent serving state: ONE [`ServingContext`] slot plus
+/// the process-lifetime counters every transport reports. Built once by
 /// `cmd_serve` (or a test) and shared by reference across all connection
 /// workers — it is `Sync` because the context is.
+///
+/// The context lives in an `RwLock<Arc<...>>` swap slot: request handling
+/// clones the `Arc` out ([`Self::ctx`]) and works on that snapshot, so a
+/// concurrent [`Self::swap_from_file`] never blocks or tears an in-flight
+/// batch — each batch is answered entirely by the model it started with,
+/// and the next batch picks up the new one. Swapping is opt-in
+/// (`--allow-swap`) and requires a [`KernelFactory`]
+/// ([`Self::with_swap`]).
 pub struct ServeCore {
-    ctx: ServingContext,
+    ctx: RwLock<Arc<ServingContext>>,
     workers: usize,
     t0: Instant,
     /// Global batch-index allocator; total queries served comes from
@@ -191,33 +226,91 @@ pub struct ServeCore {
     conn_ids: AtomicUsize,
     totals: Mutex<BatchStats>,
     shutdown: AtomicBool,
+    /// `Some` iff `swap_model` requests are allowed (`--allow-swap true`):
+    /// the factory that builds the new model's kernel backend, and the
+    /// cache byte budget for contexts that cannot adopt (kind/dim change).
+    swap: Option<(KernelFactory, usize)>,
+    swaps: AtomicUsize,
 }
 
 impl ServeCore {
     /// Wrap a serving context; `workers` is the per-batch micro-batching
-    /// width handed to [`ServingContext::decide`].
+    /// width handed to [`ServingContext::decide`]. Swapping starts
+    /// disabled — see [`Self::with_swap`].
     pub fn new(ctx: ServingContext, workers: usize) -> ServeCore {
         ServeCore {
-            ctx,
+            ctx: RwLock::new(Arc::new(ctx)),
             workers: workers.max(1),
             t0: Instant::now(),
             batches: AtomicUsize::new(0),
             conn_ids: AtomicUsize::new(0),
             totals: Mutex::new(BatchStats::default()),
             shutdown: AtomicBool::new(false),
+            swap: None,
+            swaps: AtomicUsize::new(0),
         }
     }
 
-    /// The shared serving context.
-    pub fn ctx(&self) -> &ServingContext {
-        &self.ctx
+    /// Enable `swap_model` requests (`--allow-swap true`): `factory`
+    /// builds the kernel backend for swapped-in models, `cache_bytes` is
+    /// the budget for non-adopting swaps.
+    pub fn with_swap(mut self, factory: KernelFactory, cache_bytes: usize) -> ServeCore {
+        self.swap = Some((factory, cache_bytes));
+        self
+    }
+
+    /// A snapshot of the current serving context. Callers hold the `Arc`
+    /// for at most one batch, so a swap's old context is dropped as soon
+    /// as the last in-flight batch finishes.
+    pub fn ctx(&self) -> Arc<ServingContext> {
+        Arc::clone(&self.ctx.read().unwrap())
+    }
+
+    /// Whether `swap_model` requests are accepted.
+    pub fn swap_allowed(&self) -> bool {
+        self.swap.is_some()
+    }
+
+    /// Completed model swaps.
+    pub fn swaps(&self) -> usize {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Hot-swap to the model in `path`: load + parse the model JSON, build
+    /// its kernel, adopt the current context's caches
+    /// ([`ServingContext::adopt_from`] — unchanged SV blocks keep their
+    /// entries), and publish the new context. In-flight batches finish on
+    /// the old context; requests arriving after the publish see the new
+    /// one. On any error the served model is untouched.
+    pub fn swap_from_file(&self, path: &str) -> Result<SwapOutcome> {
+        let Some((factory, cache_bytes)) = &self.swap else {
+            bail!("swaps are disabled (start the server with --allow-swap true)");
+        };
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let mut model = ServingModel::from_json(&Json::parse(&text)?)?;
+        let old = self.ctx();
+        model.set_quant_route(old.model().quant_route());
+        let kernel = factory(model.kind(), model.dim())?;
+        let (ctx, stats) = ServingContext::adopt_from(model, kernel, *cache_bytes, &old);
+        let outcome = SwapOutcome {
+            stats,
+            svs: ctx.num_svs(),
+            describe: ctx.model().describe(),
+        };
+        *self.ctx.write().unwrap() = Arc::new(ctx);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(outcome)
     }
 
     /// Decide one query batch through the shared context, assign it the
     /// next global batch index, and fold its counters into the process
-    /// totals. Every transport routes every batch through here.
+    /// totals. Every transport routes every batch through here. The
+    /// context snapshot is taken once per batch: a swap landing mid-batch
+    /// never mixes two models' decisions.
     pub fn decide_tracked(&self, x: &[f32]) -> (Vec<f32>, BatchStats, usize) {
-        let (dv, stats) = self.ctx.decide(x, self.workers);
+        let ctx = self.ctx();
+        let (dv, stats) = ctx.decide(x, self.workers);
         let index = self.batches.fetch_add(1, Ordering::Relaxed);
         self.totals.lock().unwrap().merge(&stats);
         (dv, stats, index)
@@ -242,12 +335,13 @@ impl ServeCore {
     /// aggregated per-batch counters.
     pub fn summary_json(&self) -> Json {
         let dt = self.t0.elapsed().as_secs_f64();
-        let cache = self.ctx.stats();
+        let cache = self.ctx().stats();
         let totals = *self.totals.lock().unwrap();
         let served = totals.rows;
         Json::obj(vec![
             ("batches", Json::from(self.batches.load(Ordering::Relaxed))),
             ("served", Json::from(served)),
+            ("swaps", Json::from(self.swaps())),
             ("total_s", Json::from(dt)),
             ("pred_per_s", Json::from(served as f64 / dt.max(1e-9))),
             ("cache_hits", Json::from(cache.hits as f64)),
@@ -319,11 +413,27 @@ pub fn handle_request(core: &ServeCore, line: &str) -> RequestOutcome {
     if req.get("stats").as_bool() == Some(true) {
         return outcome(with_id(id, vec![("stats_total", core.summary_json())]));
     }
+    if let Some(path) = req.get("swap_model").as_str() {
+        return match core.swap_from_file(path) {
+            Ok(s) => outcome(with_id(
+                id,
+                vec![
+                    ("swapped", Json::from(true)),
+                    ("model", Json::from(s.describe.as_str())),
+                    ("svs", Json::from(s.svs)),
+                    ("blocks_total", Json::from(s.stats.blocks_total)),
+                    ("blocks_kept", Json::from(s.stats.blocks_kept)),
+                    ("route_kept", Json::from(s.stats.route_kept)),
+                ],
+            )),
+            Err(e) => outcome(error_response(id, ERR_SWAP_FAILED, &format!("{e:#}"))),
+        };
+    }
     let Some(rows) = req.get("x").as_arr() else {
         return outcome(error_response(
             id,
             ERR_BAD_REQUEST,
-            "request needs \"x\": [[f32; dim], ...] (or \"shutdown\"/\"stats\")",
+            "request needs \"x\": [[f32; dim], ...] (or \"shutdown\"/\"stats\"/\"swap_model\")",
         ));
     };
     let dim = core.ctx().dim();
@@ -681,6 +791,12 @@ impl ServeClient {
     pub fn shutdown_server(&mut self) -> Result<Json> {
         self.request(&Json::obj(vec![("shutdown", Json::from(true))]))
     }
+
+    /// Ask the server to hot-swap to the model file at `path` (requires
+    /// `--allow-swap true` on the server).
+    pub fn swap_model(&mut self, path: &str) -> Result<Json> {
+        self.request(&Json::obj(vec![("swap_model", Json::from(path))]))
+    }
 }
 
 #[cfg(test)]
@@ -801,6 +917,69 @@ mod tests {
         assert_eq!(total.get("batches").as_usize(), Some(1));
         assert_eq!(total.get("served").as_usize(), Some(1));
         assert_eq!(out.response.get("id").as_str(), Some("s"));
+    }
+
+    #[test]
+    fn swap_requests_rejected_unless_enabled() {
+        let core = tiny_core();
+        let out = handle_request(&core, r#"{"id": 1, "swap_model": "/nope.json"}"#);
+        assert_eq!(
+            out.response.get("error").get("code").as_str(),
+            Some(ERR_SWAP_FAILED)
+        );
+        assert!(out
+            .response
+            .get("error")
+            .get("message")
+            .as_str()
+            .unwrap()
+            .contains("--allow-swap"));
+        assert_eq!(out.response.get("id").as_f64(), Some(1.0));
+        assert_eq!(core.swaps(), 0);
+    }
+
+    #[test]
+    fn swap_replaces_the_served_model_and_counts() {
+        let (tr, _) = generate_split(&covtype_like(), 60, 10, 2);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let zero = SvmModel::from_alpha(&tr, &vec![0.0; tr.len()], kind);
+        let ctx = ServingContext::new(
+            ServingModel::Exact(zero),
+            Box::new(NativeKernel::new(kind)),
+            1 << 20,
+        );
+        let factory: KernelFactory =
+            Box::new(|kind, _dim| Ok(Box::new(NativeKernel::new(kind))));
+        let core = ServeCore::new(ctx, 1).with_swap(factory, 1 << 20);
+        assert!(core.swap_allowed());
+        assert_eq!(core.ctx().num_svs(), 0);
+
+        // A model with SVs, written to disk like `dcsvm update --out`.
+        let trained = SvmModel::from_alpha(&tr, &vec![0.5; tr.len()], kind);
+        let dir = std::env::temp_dir().join("dcsvm-swap-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("swapped.json");
+        std::fs::write(&path, trained.to_json().to_string()).unwrap();
+
+        let line = format!("{{\"swap_model\": {}}}", Json::from(path.to_str().unwrap()));
+        let out = handle_request(&core, &line);
+        assert_eq!(out.response.get("error"), &Json::Null, "{}", out.response);
+        assert_eq!(out.response.get("swapped").as_bool(), Some(true));
+        assert_eq!(out.response.get("svs").as_usize(), Some(trained.num_svs()));
+        assert!(out.response.get("blocks_total").as_usize().unwrap() >= 1);
+        assert_eq!(core.swaps(), 1);
+        assert_eq!(core.ctx().num_svs(), trained.num_svs());
+        assert_eq!(core.summary_json().get("swaps").as_usize(), Some(1));
+
+        // A bad file leaves the swapped model serving.
+        let out = handle_request(&core, r#"{"swap_model": "/no/such/file.json"}"#);
+        assert_eq!(
+            out.response.get("error").get("code").as_str(),
+            Some(ERR_SWAP_FAILED)
+        );
+        assert_eq!(core.swaps(), 1);
+        assert_eq!(core.ctx().num_svs(), trained.num_svs());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -183,6 +183,56 @@ fn serve_rejects_bad_flags() {
 }
 
 #[test]
+fn update_rejects_bad_flags() {
+    // Missing required flags: strict usage bail, not a file error.
+    let (ok, text) = run(&["update"]);
+    assert!(!ok);
+    assert!(text.contains("requires --model"), "{text}");
+    let (ok, text) = run(&["update", "--model", "m.json"]);
+    assert!(!ok);
+    assert!(text.contains("requires --data"), "{text}");
+    // A known flag with a missing value errors as such, never "unknown".
+    let (ok, text) = run(&["update", "--model", "m.json", "--data"]);
+    assert!(!ok);
+    assert!(text.contains("needs a value"), "{text}");
+    assert!(!text.contains("unknown flag"), "{text}");
+    // Unparsable numerics name the flag and print the usage.
+    let (ok, text) = run(&["update", "--model", "m.json", "--data", "d", "--c", "abc"]);
+    assert!(!ok);
+    assert!(text.contains("--c"), "{text}");
+    assert!(text.contains("usage:"), "{text}");
+    let (ok, text) =
+        run(&["update", "--model", "m.json", "--data", "d", "--cache-mb", "0"]);
+    assert!(!ok);
+    assert!(text.contains("--cache-mb"), "{text}");
+    // Unknown flags are rejected up front.
+    let (ok, text) = run(&["update", "--model", "m.json", "--data", "d", "--bogus", "1"]);
+    assert!(!ok);
+    assert!(text.contains("unknown flag"), "{text}");
+}
+
+#[test]
+fn update_help_prints_the_full_flag_table() {
+    let (ok, text) = run(&["update", "--help"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("usage: dcsvm update"), "{text}");
+    for flag in [
+        "--model",
+        "--data",
+        "--out",
+        "--c",
+        "--eps",
+        "--max-iter",
+        "--cache-mb",
+        "--backend",
+        "--threads",
+        "--compare-cold",
+    ] {
+        assert!(text.contains(flag), "usage missing {flag}: {text}");
+    }
+}
+
+#[test]
 fn serve_help_lists_every_flag_from_the_shared_table() {
     let (ok, text) = run(&["serve", "--help"]);
     assert!(ok, "{text}");

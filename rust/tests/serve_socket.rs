@@ -172,6 +172,166 @@ fn warm_early_batches_skip_routing_dispatch_over_socket() {
     server.join().unwrap().unwrap();
 }
 
+/// Hand-built exact model over explicit dim-2 SV rows: the hot-swap test
+/// needs exact control over which SV blocks change across the swap.
+fn toy_model(svs: &[([f32; 2], f32)]) -> SvmModel {
+    let mut sv_x = Vec::new();
+    let mut coef = Vec::new();
+    for (row, w) in svs {
+        sv_x.extend_from_slice(row);
+        coef.push(*w);
+    }
+    let sv_norms = sv_x.chunks(2).map(|r| r.iter().map(|&v| v * v).sum()).collect();
+    SvmModel { sv_x, sv_norms, coef, dim: 2, kind: KernelKind::Rbf { gamma: 4.0 } }
+}
+
+fn expected_bits(model: &SvmModel, queries: &[f32]) -> Vec<u32> {
+    let norms: Vec<f32> =
+        queries.chunks(2).map(|q| q.iter().map(|&v| v * v).sum()).collect();
+    let kern = NativeKernel::new(model.kind);
+    model
+        .decision_batch(queries, &norms, &kern)
+        .iter()
+        .map(|d| d.to_bits())
+        .collect()
+}
+
+/// ISSUE 7 acceptance: clients hammer the TCP front-end while a
+/// `swap_model` request lands. Every response must be bit-identical to
+/// either the OLD model's decisions or the NEW model's decisions — never
+/// a torn mix — and each connection flips old→new at most once (the
+/// context snapshot is per batch). After the swap, replaying a pre-swap
+/// query recomputes kernel rows ONLY for the SV blocks the update
+/// changed; the unchanged blocks' cache entries survive the swap.
+#[test]
+fn hot_swap_under_load_is_never_torn_and_keeps_unchanged_blocks() {
+    // Old model: 4 SVs, sv_block=2 → 2 FULL blocks [0,2) [2,4). The new
+    // model keeps both bit-identical and appends 2 SVs as block [4,6),
+    // exactly the shape `dcsvm update` produces when no old SV is
+    // evicted: surviving SVs stay as the prefix, insertions append.
+    let old_svs: Vec<([f32; 2], f32)> =
+        vec![([0.1, 0.2], 0.5), ([0.3, 0.4], -0.25), ([0.5, 0.6], 0.75), ([0.7, 0.8], -0.5)];
+    let mut new_svs = old_svs.clone();
+    new_svs[1].1 = -0.6; // coef drift on a kept block: tags only pin SV rows
+    new_svs.push(([1.1, 1.2], 0.4));
+    new_svs.push(([1.3, 1.4], -0.3));
+    let old_model = toy_model(&old_svs);
+    let new_model = toy_model(&new_svs);
+
+    let hammer: Vec<f32> = vec![0.15, 0.25, 0.65, 0.75]; // 2 queries
+    let replay: Vec<f32> = vec![0.35, 0.45, 0.55, 0.05, 0.95, 0.85]; // 3 queries
+    let old_hammer_bits = expected_bits(&old_model, &hammer);
+    let new_hammer_bits = expected_bits(&new_model, &hammer);
+    let new_replay_bits = expected_bits(&new_model, &replay);
+    assert_ne!(old_hammer_bits, new_hammer_bits, "swap must be observable");
+
+    // Serve the old model with swaps enabled.
+    let ctx = ServingContext::with_block_size(
+        ServingModel::Exact(old_model),
+        Box::new(NativeKernel::new(KernelKind::Rbf { gamma: 4.0 })),
+        4 << 20,
+        2,
+    );
+    let factory: transport::KernelFactory =
+        Box::new(|kind, _dim| Ok(Box::new(NativeKernel::new(kind))));
+    let core = Arc::new(ServeCore::new(ctx, 2).with_swap(factory, 4 << 20));
+    let (addr, server) = spawn_server(&core, 4);
+
+    // Write the updated model where the server can load it.
+    let dir = std::env::temp_dir().join(format!("dcsvm-swap-socket-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("updated.json");
+    std::fs::write(&model_path, new_model.to_json().to_string()).unwrap();
+
+    // Pre-swap: warm the replay batch on the old context (cold: 3 queries
+    // × 2 blocks all computed).
+    let mut warm = ServeClient::connect(addr).unwrap();
+    let r0 = warm.decide(&rows_of(&replay, 2)).unwrap();
+    assert_eq!(r0.get("error"), &Json::Null, "{r0}");
+    assert_eq!(r0.get("stats").get("rows_computed").as_f64(), Some(6.0));
+
+    // Hammer threads: replay the same batch back-to-back across the swap.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hammers: Vec<_> = (0..3)
+        .map(|_| {
+            let stop = Arc::clone(&stop);
+            let rows = rows_of(&hammer, 2);
+            std::thread::spawn(move || {
+                let mut client = ServeClient::connect(addr).unwrap();
+                let mut seen = Vec::new();
+                // Iteration cap: never hang the suite if the main thread
+                // dies before flipping `stop`.
+                for _ in 0..100_000 {
+                    let resp = client.decide(&rows).unwrap();
+                    assert_eq!(resp.get("error"), &Json::Null, "{resp}");
+                    seen.push(decision_bits(&resp));
+                    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
+                }
+                seen
+            })
+        })
+        .collect();
+
+    // Let the hammers land some old-model batches, then swap mid-load.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let mut swapper = ServeClient::connect(addr).unwrap();
+    let sw = swapper.swap_model(model_path.to_str().unwrap()).unwrap();
+    assert_eq!(sw.get("swapped").as_bool(), Some(true), "{sw}");
+    assert_eq!(sw.get("svs").as_usize(), Some(6));
+    assert_eq!(sw.get("blocks_total").as_usize(), Some(3));
+    assert_eq!(sw.get("blocks_kept").as_usize(), Some(2), "both full old blocks survive");
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+
+    // Never torn: every response is exactly the old model's bits or
+    // exactly the new model's, and each connection transitions at most
+    // once (a later batch can never see an earlier model).
+    for h in hammers {
+        let seen = h.join().unwrap();
+        assert!(!seen.is_empty());
+        let mut switched = false;
+        for bits in &seen {
+            if *bits == new_hammer_bits {
+                switched = true;
+            } else {
+                assert_eq!(*bits, &old_hammer_bits[..], "torn response");
+                assert!(!switched, "old-model response AFTER a new-model response");
+            }
+        }
+    }
+
+    // Post-swap replay of the pre-swap query: the two unchanged SV blocks
+    // are served from the entries warmed BEFORE the swap (zero recomputed
+    // rows for them); only the appended block computes.
+    let r1 = warm.decide(&rows_of(&replay, 2)).unwrap();
+    assert_eq!(r1.get("error"), &Json::Null, "{r1}");
+    assert_eq!(
+        r1.get("stats").get("cache_hits").as_f64(),
+        Some(6.0),
+        "unchanged blocks must survive the swap: {r1}"
+    );
+    assert_eq!(
+        r1.get("stats").get("rows_computed").as_f64(),
+        Some(3.0),
+        "only the appended SV block recomputes: {r1}"
+    );
+    assert_eq!(decision_bits(&r1), new_replay_bits, "replay serves the NEW model");
+
+    // And a warm re-replay computes nothing at all.
+    let r2 = warm.decide(&rows_of(&replay, 2)).unwrap();
+    assert_eq!(r2.get("stats").get("rows_computed").as_f64(), Some(0.0));
+
+    let bye = warm.shutdown_server().unwrap();
+    assert_eq!(bye.get("shutdown").as_bool(), Some(true));
+    drop(warm);
+    drop(swapper);
+    server.join().unwrap().unwrap();
+    assert_eq!(core.swaps(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn malformed_requests_get_error_objects_not_disconnects() {
     use std::io::{BufRead, BufReader, Write};

@@ -1,0 +1,261 @@
+//! Integration (ISSUE 7 acceptance): the streaming-update drift scenario.
+//!
+//! A synthetic label-drifting stream — the labeling rule flips at every
+//! chunk boundary — is consumed chunk by chunk with warm [`update`]s
+//! seeded from the previous model. The harness proves the three claims
+//! `dcsvm update` makes:
+//!
+//! (a) accuracy on each drifted chunk RECOVERS after its update (the
+//!     stale model scores badly on the new rule, the updated one well);
+//! (b) every warm update computes STRICTLY FEWER kernel values than a
+//!     cold retrain on the same cumulative data ([`cold_solve`] is the
+//!     comparator, `--compare-cold` gates the same claim in bench CI);
+//! (c) an empty delta is a bit-identical no-op on the model JSON —
+//!     checked at the CLI level, where `dcsvm update` must copy the model
+//!     file bytes through verbatim.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use dcsvm::data::synthetic::{covtype_like, generate};
+use dcsvm::data::Dataset;
+use dcsvm::dcsvm::update::{cold_solve, seed_from_model, update, UpdateConfig};
+use dcsvm::kernel::native::NativeKernel;
+use dcsvm::kernel::KernelKind;
+use dcsvm::predict::SvmModel;
+use dcsvm::util::json::Json;
+use dcsvm::util::prng::Pcg64;
+
+fn flipped(ds: &Dataset, name: &str) -> Dataset {
+    Dataset::new(ds.x.clone(), ds.y.iter().map(|&l| -l).collect(), ds.dim, name)
+}
+
+fn test_cfg() -> UpdateConfig {
+    UpdateConfig { c: 4.0, cache_bytes: 8 << 20, threads: 1, ..UpdateConfig::default() }
+}
+
+/// (a) + (b): three chunks, the labeling rule flips at every boundary.
+/// Each update must recover accuracy on its chunk AND cost strictly less
+/// kernel work than retraining from scratch on everything seen so far.
+#[test]
+fn drift_stream_recovers_accuracy_with_fewer_kernel_values_than_retrain() {
+    let spec = covtype_like();
+    let mut rng = Pcg64::new(17);
+    let kern = NativeKernel::new(KernelKind::Rbf { gamma: 16.0 });
+    let cfg = test_cfg();
+
+    // chunk 0: base rule; chunk 1: rule flipped; chunk 2: flipped back.
+    let base = generate(&spec, 120, &mut rng);
+    let drift1 = flipped(&generate(&spec, 120, &mut rng), "drift-1");
+    let drift2 = generate(&spec, 120, &mut rng);
+
+    let mut model = cold_solve(&base, &kern, &cfg).model;
+    assert!(model.num_svs() > 0);
+    let mut cumulative = base;
+
+    for (step, chunk) in [&drift1, &drift2].into_iter().enumerate() {
+        let stale = model.accuracy(chunk, &kern);
+        let res = update(&model, chunk, &kern, &cfg)
+            .unwrap_or_else(|e| panic!("update at drift {step}: {e:#}"));
+        assert!(!res.noop);
+        let fresh = res.model.accuracy(chunk, &kern);
+
+        // (a) the update absorbs the flipped rule: the stale model is at
+        // or below chance-ish on the drifted chunk, the fresh one is not.
+        assert!(
+            fresh >= 0.7,
+            "drift {step}: updated model did not learn its chunk (acc {fresh})"
+        );
+        assert!(
+            fresh > stale + 0.1,
+            "drift {step}: no recovery margin (stale {stale}, fresh {fresh})"
+        );
+
+        // (b) warm vs cold on the same cumulative stream.
+        cumulative = cumulative.appended(chunk, "cumulative");
+        let cold = cold_solve(&cumulative, &kern, &cfg);
+        assert!(
+            res.values_computed < cold.values_computed,
+            "drift {step}: warm update ({}) must beat cold retrain ({}) on {} rows",
+            res.values_computed,
+            cold.values_computed,
+            cumulative.len()
+        );
+
+        // SV bookkeeping holds across the whole stream.
+        assert_eq!(
+            res.model.num_svs() as u64,
+            model.num_svs() as u64 + res.svs_added - res.svs_dropped
+        );
+        model = res.model;
+    }
+}
+
+/// The warm solve is not an approximation: on the SAME subproblem
+/// (`SVs ∪ delta`, reconstructed via [`seed_from_model`]) a warm-started
+/// solve and a cold solve converge to the same dual objective within
+/// ±1e-6 (relative) once both run to a tight KKT tolerance.
+#[test]
+fn warm_solve_matches_cold_objective_on_the_same_subproblem() {
+    let spec = covtype_like();
+    let mut rng = Pcg64::new(23);
+    let kern = NativeKernel::new(KernelKind::Rbf { gamma: 16.0 });
+    let cfg = UpdateConfig { eps: 1e-9, ..test_cfg() };
+
+    let base = generate(&spec, 90, &mut rng);
+    let delta = generate(&spec, 30, &mut rng);
+    let model = cold_solve(&base, &kern, &cfg).model;
+
+    let warm = update(&model, &delta, &kern, &cfg).unwrap();
+    let (seed_ds, _) = seed_from_model(&model, cfg.c);
+    let working = seed_ds.appended(&delta, "working");
+    let cold = cold_solve(&working, &kern, &cfg);
+
+    let scale = 1.0 + warm.objective.abs().max(cold.objective.abs());
+    assert!(
+        (warm.objective - cold.objective).abs() <= 1e-6 * scale,
+        "objectives diverge: warm {} vs cold {}",
+        warm.objective,
+        cold.objective
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI-level checks: the `dcsvm update` binary round-trip.
+
+fn bin() -> PathBuf {
+    // target dir of the test binary: target/debug/deps/... → target/debug
+    let mut p = std::env::current_exe().unwrap();
+    p.pop();
+    if p.ends_with("deps") {
+        p.pop();
+    }
+    p.join("dcsvm")
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .env("DCSVM_LOG", "warn")
+        .output()
+        .expect("spawn dcsvm");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// The one JSON line `dcsvm update` prints on stdout.
+fn stdout_json(stdout: &str) -> Json {
+    let line = stdout
+        .lines()
+        .find(|l| l.trim_start().starts_with('{'))
+        .unwrap_or_else(|| panic!("no JSON line on stdout: {stdout}"));
+    Json::parse(line.trim()).expect("update stdout parses as JSON")
+}
+
+/// (c) empty delta → `--out` is BYTE-identical to `--model`, and every
+/// update counter is zero (`bench_diff.py` gates the same invariant on
+/// the bench-smoke no-op leg).
+#[test]
+fn cli_empty_delta_copies_the_model_file_byte_identically() {
+    let dir = std::env::temp_dir().join("dcsvm_cli_update_noop");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("model.json");
+    let delta_path = dir.join("empty.libsvm");
+    let out_path = dir.join("updated.json");
+
+    let spec = covtype_like();
+    let mut rng = Pcg64::new(31);
+    let base = generate(&spec, 80, &mut rng);
+    let kern = NativeKernel::new(KernelKind::Rbf { gamma: 16.0 });
+    let model = cold_solve(&base, &kern, &test_cfg()).model;
+    std::fs::write(&model_path, model.to_json().to_string()).unwrap();
+    std::fs::write(&delta_path, "").unwrap();
+
+    let (ok, stdout, stderr) = run(&[
+        "update",
+        "--model",
+        model_path.to_str().unwrap(),
+        "--data",
+        delta_path.to_str().unwrap(),
+        "--out",
+        out_path.to_str().unwrap(),
+        "--backend",
+        "native",
+    ]);
+    assert!(ok, "{stdout}{stderr}");
+
+    let j = stdout_json(&stdout);
+    assert_eq!(j.get("noop").as_bool(), Some(true), "{j}");
+    assert_eq!(j.get("update_values_computed").as_f64(), Some(0.0), "{j}");
+    assert_eq!(j.get("svs_added").as_f64(), Some(0.0), "{j}");
+    assert_eq!(j.get("svs_dropped").as_f64(), Some(0.0), "{j}");
+
+    let original = std::fs::read(&model_path).unwrap();
+    let copied = std::fs::read(&out_path).unwrap();
+    assert_eq!(original, copied, "no-op update must be byte-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The full CLI drift leg bench-smoke runs in CI: update with a drifted
+/// delta, `--compare-cold` on the cumulative data, and assert the warm
+/// update reports strictly fewer kernel values than the cold retrain.
+#[test]
+fn cli_update_with_compare_cold_reports_warm_beats_cold() {
+    let dir = std::env::temp_dir().join("dcsvm_cli_update_cold");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("model.json");
+    let delta_path = dir.join("delta.libsvm");
+    let cumulative_path = dir.join("cumulative.libsvm");
+    let out_path = dir.join("updated.json");
+
+    let spec = covtype_like();
+    let mut rng = Pcg64::new(37);
+    let kern = NativeKernel::new(KernelKind::Rbf { gamma: 16.0 });
+    let base = generate(&spec, 100, &mut rng);
+    let delta = flipped(&generate(&spec, 50, &mut rng), "drift");
+    let model = cold_solve(&base, &kern, &test_cfg()).model;
+
+    std::fs::write(&model_path, model.to_json().to_string()).unwrap();
+    std::fs::write(&delta_path, dcsvm::data::libsvm::format_libsvm(&delta)).unwrap();
+    let cumulative = base.appended(&delta, "cumulative");
+    std::fs::write(&cumulative_path, dcsvm::data::libsvm::format_libsvm(&cumulative))
+        .unwrap();
+
+    let (ok, stdout, stderr) = run(&[
+        "update",
+        "--model",
+        model_path.to_str().unwrap(),
+        "--data",
+        delta_path.to_str().unwrap(),
+        "--out",
+        out_path.to_str().unwrap(),
+        "--c",
+        "4",
+        "--backend",
+        "native",
+        "--compare-cold",
+        cumulative_path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}{stderr}");
+
+    let j = stdout_json(&stdout);
+    assert_eq!(j.get("noop").as_bool(), Some(false), "{j}");
+    let warm = j.get("update_values_computed").as_f64().unwrap();
+    let cold = j.get("cold_values_computed").as_f64().unwrap();
+    assert!(warm > 0.0, "{j}");
+    assert!(warm < cold, "warm {warm} !< cold {cold}: {j}");
+    assert_eq!(j.get("warm_beats_cold").as_bool(), Some(true), "{j}");
+
+    // The emitted model loads and still serves the drifted chunk well.
+    let text = std::fs::read_to_string(&out_path).unwrap();
+    let updated = SvmModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert!(updated.num_svs() > 0);
+    assert!(
+        updated.accuracy(&delta, &kern) >= 0.7,
+        "updated model forgot its delta"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -46,6 +46,17 @@ WATCHED = [
     # thrashing the live level's working set, fails here.
     ("train.quantized_values", "zero"),
     ("train.segment_regathers", "zero"),
+    # Streaming-update trajectory: the warm update's kernel work must not
+    # creep back toward the cold-retrain baseline it is measured against.
+    ("update.update_values_computed", "lower-better"),
+    ("update.cold_values_computed", "lower-better"),
+    # No-op invariants (ISSUE 7): an empty-delta `dcsvm update` run must
+    # report exactly zero work of every kind, and a replayed batch across a
+    # block-preserving hot swap must recompute zero kernel rows.
+    ("update.noop.update_values_computed", "zero"),
+    ("update.noop.svs_added", "zero"),
+    ("update.noop.svs_dropped", "zero"),
+    ("serve_swap.post_swap_rows_computed", "zero"),
 ]
 
 

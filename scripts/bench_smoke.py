@@ -30,6 +30,17 @@ and 2 threads, with the SIMD tier auto-detected and with
 `DCSVM_FORCE_SCALAR=1`, and asserts the decisions are bit-identical across
 all four runs (`scripts/bench_diff.py identical`).
 
+The script also drives the streaming-update legs (ISSUE 7): a zero-SV seed
+model is bootstrapped over a labeled history chunk via `dcsvm update`, a
+label-flipped drift chunk is absorbed warm with `--compare-cold` retraining
+on the cumulative file (gate: the warm update computes strictly fewer
+kernel values), an empty-delta update must be a byte-identical no-op with
+all counters zero, and a socket server started with `--allow-swap true` is
+hot-swapped mid-session — a self-swap keeps every SV block, so the replayed
+batch must recompute zero rows. Results land in the REQUIRED `update` and
+`serve_swap` sections of BENCH_ci.json, whose zero-invariants
+`bench_diff.py` re-checks on every run.
+
 The script also gates `--quant-route`: it trains an early-prediction model,
 serves the same 64-row batch with the exact f32 router and with the
 int8-quantized router, and fails if the fraction of flipped predicted
@@ -68,6 +79,20 @@ REQUIRED_TRAIN = [
 ]
 # Per-batch serving stats fields (see rust/src/serving BatchStats::to_json).
 REQUIRED_SERVE = ["rows", "latency_ms", "cache_hits", "cache_misses", "rows_computed", "hit_rate"]
+
+# Counters the `dcsvm update` stdout JSON must carry on the warm drift leg
+# (the `--compare-cold` comparator included). bench_diff.py additionally
+# holds the no-op leg's counters to exactly zero.
+REQUIRED_UPDATE = [
+    "update_values_computed",
+    "svs_added",
+    "svs_dropped",
+    "margin_violations",
+    "objective",
+    "svs",
+    "cold_values_computed",
+    "warm_beats_cold",
+]
 
 # Max fraction of the 64 quant-gate rows whose predicted label may flip
 # when routing goes through the int8-quantized sample rows. The per-row
@@ -117,6 +142,40 @@ def libsvm_batch(dim: int, rows: int) -> str:
         feats = " ".join(f"{j + 1}:{((r * 31 + j * 7) % 19 - 9) / 10.0:.1f}" for j in range(dim))
         lines.append(f"{1 if r % 2 == 0 else -1} {feats}")
     return "\n".join(lines) + "\n"
+
+
+def stream_feats(r: int, dim: int):
+    """Deterministic pseudo-random feature row in [-1, 1) for stream row r."""
+    return [((r * 2654435761 + j * 40503) % 1000) / 500.0 - 1.0 for j in range(dim)]
+
+
+def libsvm_stream(dim: int, rows: int, start: int = 0, flip: bool = False) -> str:
+    """Deterministic LABELED stream rows for the update leg: the label is a
+    function of the features (sign of the first three coordinates' sum), so
+    the warm/cold solves exercise a real SV structure. `flip` inverts the
+    rule — the drift event the warm update has to absorb."""
+    lines = []
+    for r in range(start, start + rows):
+        feats = stream_feats(r, dim)
+        label = 1 if sum(feats[:3]) >= 0.0 else -1
+        if flip:
+            label = -label
+        cols = " ".join(f"{j + 1}:{v:.3f}" for j, v in enumerate(feats))
+        lines.append(f"{label} {cols}")
+    return "\n".join(lines) + "\n"
+
+
+def update_stdout_json(p, what: str) -> dict:
+    """The one JSON line `dcsvm update` prints on stdout."""
+    for line in p.stdout.splitlines():
+        line = line.strip()
+        if line.startswith("{"):
+            try:
+                return json.loads(line)
+            except json.JSONDecodeError:
+                continue
+    fail(f"{what}: no JSON line on stdout\nstdout:\n{p.stdout}\nstderr:\n{p.stderr}")
+    raise AssertionError  # unreachable
 
 
 def main() -> None:
@@ -252,12 +311,172 @@ def main() -> None:
         fail(f"quant-route flipped {flips}/64 predicted labels "
              f"(rate {flip_rate:.2f} > gate {QUANT_FLIP_GATE})")
 
+    # ---- streaming update leg (train -> update -> no-op update) ----------
+    # A self-contained labeled stream: bootstrap a model from a zero-SV
+    # seed over the history chunk (a warm solve over 0 SVs ∪ history IS a
+    # cold train, through the same `dcsvm update` machinery), then absorb a
+    # label-flipped drift chunk warm, with `--compare-cold` retraining on
+    # the cumulative file as the comparator. Gates: the warm update must
+    # compute strictly fewer kernel values than the cold retrain, and an
+    # empty-delta update must be a byte-identical no-op with every counter
+    # at zero (bench_diff.py re-checks the zeros against this artifact).
+    sdim = 8
+    history = libsvm_stream(sdim, 192)
+    drift = libsvm_stream(sdim, 64, start=192, flip=True)
+    history_path = os.path.join(workdir, "history.libsvm")
+    drift_path = os.path.join(workdir, "drift.libsvm")
+    cumulative_path = os.path.join(workdir, "cumulative.libsvm")
+    empty_path = os.path.join(workdir, "empty.libsvm")
+    seed_model = os.path.join(workdir, "update_seed.json")
+    model1 = os.path.join(workdir, "update_model1.json")
+    model2 = os.path.join(workdir, "update_model2.json")
+    noop_out = os.path.join(workdir, "update_noop.json")
+    with open(history_path, "w", encoding="utf-8") as f:
+        f.write(history)
+    with open(drift_path, "w", encoding="utf-8") as f:
+        f.write(drift)
+    with open(cumulative_path, "w", encoding="utf-8") as f:
+        f.write(history + drift)
+    with open(empty_path, "w", encoding="utf-8") as f:
+        f.write("")
+    with open(seed_model, "w", encoding="utf-8") as f:
+        json.dump({"type": "svm", "kernel": "rbf", "gamma": 0.5, "eta": 0.0,
+                   "dim": sdim, "coef": [], "sv_x": []}, f)
+
+    update_base = [args.binary, "update", "--c", "4", "--backend", "native",
+                   "--threads", threads]
+    p = run([*update_base, "--model", seed_model, "--data", history_path,
+             "--out", model1], env=env, capture_output=True, text=True)
+    if p.returncode != 0:
+        fail(f"bootstrap update exited {p.returncode}\nstderr:\n{p.stderr}")
+    boot = update_stdout_json(p, "bootstrap update")
+    if not boot.get("svs"):
+        fail(f"bootstrap update produced no SVs: {json.dumps(boot)}")
+
+    p = run([*update_base, "--model", model1, "--data", drift_path,
+             "--out", model2, "--compare-cold", cumulative_path],
+            env=env, capture_output=True, text=True)
+    if p.returncode != 0:
+        fail(f"warm update exited {p.returncode}\nstderr:\n{p.stderr}")
+    warm_update = require(update_stdout_json(p, "warm update"), REQUIRED_UPDATE,
+                          "warm update")
+    if warm_update["warm_beats_cold"] is not True:
+        fail(f"warm update did not beat the cold retrain: {json.dumps(warm_update)}")
+    if warm_update["update_values_computed"] <= 0:
+        fail("warm update computed no kernel values; counters are not recorded")
+    if warm_update["margin_violations"] <= 0:
+        fail("label-flipped drift produced no margin violations; the PROCESS gate is dead")
+
+    p = run([*update_base, "--model", model2, "--data", empty_path,
+             "--out", noop_out], env=env, capture_output=True, text=True)
+    if p.returncode != 0:
+        fail(f"no-op update exited {p.returncode}\nstderr:\n{p.stderr}")
+    noop = update_stdout_json(p, "no-op update")
+    if noop.get("noop") is not True:
+        fail(f"empty delta was not reported as a no-op: {json.dumps(noop)}")
+    with open(model2, "rb") as f:
+        model2_bytes = f.read()
+    with open(noop_out, "rb") as f:
+        noop_bytes = f.read()
+    if model2_bytes != noop_bytes:
+        fail("no-op update did not copy the model file byte-identically")
+    noop_counters = require(
+        noop, ["update_values_computed", "svs_added", "svs_dropped"], "no-op update")
+    noop_counters["byte_identical"] = True
+
+    # ---- hot-swap serve leg (socket transport, --allow-swap) -------------
+    # Serve the history model over a socket, swap to the drift-updated
+    # model mid-session, then self-swap: a self-swap keeps EVERY SV block
+    # bit-identical, so the replayed batch must recompute zero rows — the
+    # cache entries provably survive the swap.
+    import socket as socketlib
+
+    swap_queries = [stream_feats(r, sdim) for r in range(5000, 5032)]
+    serve_cmd = [args.binary, "serve", "--model", model1, "--backend", "native",
+                 "--workers", threads, "--listen", "127.0.0.1:0",
+                 "--allow-swap", "true"]
+    print("bench_smoke: $", " ".join(serve_cmd), file=sys.stderr)
+    server = subprocess.Popen(serve_cmd, env=env, stdin=subprocess.DEVNULL,
+                              stdout=subprocess.DEVNULL, stderr=subprocess.PIPE,
+                              text=True)
+    try:
+        addr = None
+        for _ in range(64):
+            line = server.stderr.readline()
+            if not line:
+                break
+            line = line.strip()
+            if line.startswith("{"):
+                try:
+                    addr = json.loads(line).get("listening")
+                except json.JSONDecodeError:
+                    continue
+                if addr:
+                    break
+        if not addr:
+            fail("swap serve never announced a listening address")
+        host, _, port = addr.rpartition(":")
+        conn = socketlib.create_connection((host, int(port)), timeout=30)
+        rfile = conn.makefile("r", encoding="utf-8")
+
+        def req(obj, what):
+            conn.sendall((json.dumps(obj) + "\n").encode("utf-8"))
+            line = rfile.readline()
+            if not line:
+                fail(f"{what}: server closed the connection")
+            resp = json.loads(line)
+            if resp.get("error"):
+                fail(f"{what}: error response {json.dumps(resp)[:300]}")
+            return resp
+
+        cold_swap = req({"x": swap_queries}, "pre-swap decide")
+        first_swap = req({"swap_model": model2}, "swap to updated model")
+        if first_swap.get("swapped") is not True:
+            fail(f"swap did not land: {json.dumps(first_swap)}")
+        post_first = req({"x": swap_queries}, "post-swap decide")
+        self_swap = req({"swap_model": model2}, "self-swap")
+        if self_swap.get("blocks_kept") != self_swap.get("blocks_total"):
+            fail(f"self-swap must keep every SV block: {json.dumps(self_swap)}")
+        replay = req({"x": swap_queries}, "post-self-swap replay")
+        replay_rows = replay.get("stats", {}).get("rows_computed")
+        if replay_rows != 0:
+            fail(f"replay across a block-preserving swap recomputed {replay_rows} rows")
+        totals = req({"stats": True}, "stats").get("stats_total", {})
+        if totals.get("swaps") != 2:
+            fail(f"server counted {totals.get('swaps')} swaps, expected 2")
+        req({"shutdown": True}, "shutdown")
+        rfile.close()
+        conn.close()
+        server.wait(timeout=30)
+    finally:
+        if server.poll() is None:
+            server.kill()
+
+    serve_swap = {
+        "queries": len(swap_queries),
+        "cold_rows_computed": cold_swap.get("stats", {}).get("rows_computed"),
+        "first_swap": {k: first_swap.get(k)
+                       for k in ("blocks_total", "blocks_kept", "route_kept", "svs")},
+        "self_swap": {k: self_swap.get(k)
+                      for k in ("blocks_total", "blocks_kept", "route_kept")},
+        "post_swap_rows_computed": replay_rows,
+        "post_first_swap_rows_computed":
+            post_first.get("stats", {}).get("rows_computed"),
+        "swaps": totals.get("swaps"),
+    }
+
     bench = {
         "suite": "ci-perf-smoke",
         "dataset": "covtype-like",
         "threads": int(threads),
         "train": train_stats,
         "serve": {"cold": cold, "warm": warm, "decisions": decisions},
+        "update": {
+            **{k: warm_update[k] for k in REQUIRED_UPDATE},
+            "bootstrap_svs": boot.get("svs"),
+            "noop": noop_counters,
+        },
+        "serve_swap": serve_swap,
         "quant": {
             "rows": 64,
             "flips": flips,
