@@ -42,7 +42,8 @@ bench-diff: build
 	python3 scripts/bench_smoke.py --binary target/release/dcsvm --out BENCH_ci.json --threads 2
 	python3 scripts/bench_smoke.py --binary target/release/dcsvm --out BENCH_ci_t1.json --threads 1
 	python3 scripts/bench_diff.py identical BENCH_ci_t1.json BENCH_ci.json \
-	  --fields serve.decisions train.accuracy train.svs train.objective
+	  --fields serve.decisions train.accuracy train.svs train.objective \
+	  multiclass.serve.lines multiclass.train.accuracy
 
 # AOT-compile the Pallas/XLA kernel artifacts (requires the python/ stack;
 # the Rust side runs on the native backend without them).

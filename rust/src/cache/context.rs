@@ -280,6 +280,11 @@ pub struct KernelContext<'a> {
     /// Build int8-quantized shadows alongside gathered segment features
     /// for the approximation-tolerant routing paths (`--quant-route`).
     quant_route: bool,
+    /// Opt-in **segment-row stitching** (see
+    /// [`Self::with_segment_stitching`]): partial-segment row fills copy
+    /// columns already resident in the full row or another partial
+    /// segment's entry, dispatching only the uncovered rest.
+    segment_stitching: bool,
 }
 
 impl<'a> KernelContext<'a> {
@@ -319,6 +324,7 @@ impl<'a> KernelContext<'a> {
             regathers: AtomicU64::new(0),
             registry_gen: AtomicU64::new(0),
             quant_route: false,
+            segment_stitching: false,
         }
     }
 
@@ -381,6 +387,29 @@ impl<'a> KernelContext<'a> {
     /// Whether quantized routing operands are enabled for this context.
     pub fn quant_route(&self) -> bool {
         self.quant_route
+    }
+
+    /// Opt into **segment-row stitching**: a partial-segment row request
+    /// that misses first copies every column already resident in the cached
+    /// full-span row — or another partial segment's entry for the same row,
+    /// consulted in registration order (first-writer-wins, the full-row
+    /// stitcher's precedence) — and dispatches only the uncovered columns.
+    /// Off by default: the classic path computes the whole segment row in
+    /// one contiguous dispatch, and every pre-existing consumer keeps its
+    /// exact dispatch shapes and counters. Stitched values are bitwise
+    /// copies of pure kernel entries, so row *values* are identical either
+    /// way — only the `values_computed` / `values_stitched` split moves.
+    /// The OVO multiclass driver turns this on: pairs (a,b) and (a,c)
+    /// register overlapping member segments, so the second pair's rows are
+    /// mostly assembled from the first pair's cached columns.
+    pub fn with_segment_stitching(mut self, on: bool) -> Self {
+        self.segment_stitching = on;
+        self
+    }
+
+    /// Whether segment-row stitching is enabled for this context.
+    pub fn segment_stitching(&self) -> bool {
+        self.segment_stitching
     }
 
     /// Open a new registry generation: segments registered (or re-gathered)
@@ -630,6 +659,9 @@ impl<'a> KernelContext<'a> {
         if seg.is_full() {
             return self.row(i);
         }
+        if self.segment_stitching {
+            return self.segment_row_stitched(seg, i);
+        }
         let g = self.gathered(seg);
         self.cache.get_or_compute(seg_key(seg.id, i), seg.len, |out| {
             self.kernel.block(
@@ -645,6 +677,121 @@ impl<'a> KernelContext<'a> {
                 .fetch_add(seg.len as u64, Ordering::Relaxed);
             self.counters.segment_rows.fetch_add(1, Ordering::Relaxed);
         })
+    }
+
+    /// Cover the columns of partial segment `seg`'s row `i` from entries
+    /// already resident in the cache: the full-span row covers everything
+    /// at once; otherwise the other partial segments' entries are consulted
+    /// in registration order (first-writer-wins — the full-row stitcher's
+    /// precedence; overlapping segments hold identical values anyway, since
+    /// kernel entries are pure in `(x_i, x_j)`). Fills `buf[t]` and sets
+    /// `covered[t]` for each covered target position; returns the count.
+    fn cover_segment_from_cache(
+        &self,
+        seg: &SegmentData,
+        i: usize,
+        buf: &mut [f32],
+        covered: &mut [bool],
+    ) -> usize {
+        let cols = seg.cols.as_ref().expect("partial segment has columns");
+        if let Some(full) = self.cache.get_quiet(self.full_key(i)) {
+            for (t, &c) in cols.iter().enumerate() {
+                buf[t] = full[c];
+                covered[t] = true;
+            }
+            return cols.len();
+        }
+        let others: Vec<SegmentRef> = {
+            let reg = self.segments.lock().unwrap();
+            reg.iter().filter(|s| !s.is_full() && s.id != seg.id).cloned().collect()
+        };
+        if others.is_empty() {
+            return 0;
+        }
+        let pos: std::collections::HashMap<usize, usize> =
+            cols.iter().enumerate().map(|(t, &c)| (c, t)).collect();
+        let mut covered_n = 0usize;
+        for other in &others {
+            if covered_n == cols.len() {
+                break;
+            }
+            let Some(entry) = self.cache.get_quiet(seg_key(other.id, i)) else {
+                continue;
+            };
+            let ocols = other.cols.as_ref().expect("partial segment has columns");
+            for (u, &c) in ocols.iter().enumerate() {
+                if let Some(&t) = pos.get(&c) {
+                    if !covered[t] {
+                        buf[t] = entry[u];
+                        covered[t] = true;
+                        covered_n += 1;
+                    }
+                }
+            }
+        }
+        covered_n
+    }
+
+    /// One gathered dispatch filling the `targets` (local segment
+    /// positions) of segment `seg` for every global row of `rows`. Returns
+    /// the row-major `[rows.len(), targets.len()]` fills and counts the
+    /// computed entries. Operands come straight out of the segment's
+    /// gathered feature copy, so no dataset columns are re-gathered.
+    fn fill_segment_cols(&self, seg: &SegmentRef, rows: &[usize], targets: &[usize]) -> Vec<f32> {
+        let dim = self.ds.dim;
+        let g = self.gathered(seg);
+        let m = targets.len();
+        let mut xs = Vec::with_capacity(m * dim);
+        let mut tnorms = Vec::with_capacity(m);
+        for &t in targets {
+            xs.extend_from_slice(&g.xs[t * dim..(t + 1) * dim]);
+            tnorms.push(g.norms[t]);
+        }
+        let mut xq = Vec::with_capacity(rows.len() * dim);
+        let mut qn = Vec::with_capacity(rows.len());
+        for &p in rows {
+            xq.extend_from_slice(self.ds.row(p));
+            qn.push(self.norms[p]);
+        }
+        let mut out = vec![0f32; rows.len() * m];
+        self.block_dispatch(&xq, &qn, &xs, &tnorms, dim, &mut out);
+        self.counters
+            .values_computed
+            .fetch_add((rows.len() * m) as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// [`Self::segment_row`] with segment-row stitching on: copy the
+    /// covered columns out of resident entries, dispatch only the rest.
+    /// Assembled outside any shard lock (stitch probes touch other shards
+    /// — never nest shard locks), so concurrent fetches of the same row may
+    /// duplicate work: values are pure per `(x_i, x_j)`, so only counters
+    /// can differ — exactly the [`Self::row`] contract.
+    fn segment_row_stitched(&self, seg: &SegmentRef, i: usize) -> Arc<[f32]> {
+        let key = seg_key(seg.id, i);
+        if let Some(row) = self.cache.get(key) {
+            return row;
+        }
+        let mut buf = vec![0f32; seg.len];
+        let mut covered = vec![false; seg.len];
+        let covered_n = self.cover_segment_from_cache(seg, i, &mut buf, &mut covered);
+        if covered_n < seg.len {
+            let missing: Vec<usize> = (0..seg.len).filter(|&t| !covered[t]).collect();
+            let fills = self.fill_segment_cols(seg, &[i], &missing);
+            for (u, &t) in missing.iter().enumerate() {
+                buf[t] = fills[u];
+            }
+            if covered_n > 0 {
+                // A partial cover pays one gathered stitch-fill dispatch,
+                // like the per-row full-span path.
+                self.counters.stitch_groups.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.counters.values_stitched.fetch_add(covered_n as u64, Ordering::Relaxed);
+        self.counters.segment_rows.fetch_add(1, Ordering::Relaxed);
+        let row: Arc<[f32]> = buf.into();
+        self.cache.put(key, Arc::clone(&row));
+        row
     }
 
     /// Full kernel row K(x_i, ·) against the whole dataset, through the
@@ -789,6 +936,7 @@ impl<'a> KernelContext<'a> {
             regathers,
             registry_gen,
             quant_route,
+            segment_stitching,
         } = self;
         let mut reg = segments.into_inner().unwrap();
         let mut new_full_id = full_id;
@@ -827,6 +975,7 @@ impl<'a> KernelContext<'a> {
             regathers,
             registry_gen,
             quant_route,
+            segment_stitching,
         }
     }
 
@@ -984,26 +1133,78 @@ impl<'a> KernelContext<'a> {
         if missing.is_empty() {
             return 0;
         }
+        // With segment stitching on, rows whose columns are partly resident
+        // (in the full row or a sibling segment's entry) copy the covered
+        // part and batch-dispatch only the uncovered columns, grouped by
+        // missing-column pattern so each group pays ONE gathered dispatch.
+        // Rows with zero coverage fall through to the contiguous cold batch
+        // below, identical to the non-stitching path.
+        let cold: Vec<usize> = if self.segment_stitching {
+            let mut cold = Vec::new();
+            let mut groups: std::collections::BTreeMap<Vec<usize>, Vec<(usize, Vec<f32>)>> =
+                std::collections::BTreeMap::new();
+            for &p in &missing {
+                let mut buf = vec![0f32; seg.len];
+                let mut covered = vec![false; seg.len];
+                let covered_n = self.cover_segment_from_cache(seg, p, &mut buf, &mut covered);
+                if covered_n == 0 {
+                    cold.push(p);
+                } else if covered_n == seg.len {
+                    self.cache.insert_computed(seg_key(seg.id, p), &buf);
+                    self.counters
+                        .values_stitched
+                        .fetch_add(seg.len as u64, Ordering::Relaxed);
+                    self.counters.segment_rows.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    let targets: Vec<usize> = (0..seg.len).filter(|&t| !covered[t]).collect();
+                    groups.entry(targets).or_default().push((p, buf));
+                }
+            }
+            for (targets, rows) in groups {
+                let m = targets.len();
+                let grows: Vec<usize> = rows.iter().map(|&(p, _)| p).collect();
+                let fills = self.fill_segment_cols(seg, &grows, &targets);
+                for (t, (p, mut buf)) in rows.into_iter().enumerate() {
+                    for (u, &c) in targets.iter().enumerate() {
+                        buf[c] = fills[t * m + u];
+                    }
+                    self.cache.insert_computed(seg_key(seg.id, p), &buf);
+                }
+                self.counters.stitch_groups.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .values_stitched
+                    .fetch_add((grows.len() * (seg.len - m)) as u64, Ordering::Relaxed);
+                self.counters
+                    .segment_rows
+                    .fetch_add(grows.len() as u64, Ordering::Relaxed);
+            }
+            cold
+        } else {
+            missing.clone()
+        };
+        if cold.is_empty() {
+            return missing.len();
+        }
         let dim = self.ds.dim;
         let g = self.gathered(seg);
-        let mut xq = Vec::with_capacity(missing.len() * dim);
-        let mut qn = Vec::with_capacity(missing.len());
-        for &p in &missing {
+        let mut xq = Vec::with_capacity(cold.len() * dim);
+        let mut qn = Vec::with_capacity(cold.len());
+        for &p in &cold {
             xq.extend_from_slice(self.ds.row(p));
             qn.push(self.norms[p]);
         }
-        let mut block = vec![0f32; missing.len() * seg.len];
+        let mut block = vec![0f32; cold.len() * seg.len];
         self.block_dispatch(&xq, &qn, &g.xs, &g.norms, dim, &mut block);
-        for (t, &p) in missing.iter().enumerate() {
+        for (t, &p) in cold.iter().enumerate() {
             self.cache
                 .insert_computed(seg_key(seg.id, p), &block[t * seg.len..(t + 1) * seg.len]);
         }
         self.counters
             .values_computed
-            .fetch_add((missing.len() * seg.len) as u64, Ordering::Relaxed);
+            .fetch_add((cold.len() * seg.len) as u64, Ordering::Relaxed);
         self.counters
             .segment_rows
-            .fetch_add(missing.len() as u64, Ordering::Relaxed);
+            .fetch_add(cold.len() as u64, Ordering::Relaxed);
         missing.len()
     }
 
@@ -1048,7 +1249,7 @@ impl<'a> KernelContext<'a> {
     /// conquer solve, the LIBSVM comparator). Rows are full-span (stitched
     /// from divide-phase segments where cached).
     pub fn view_full(&self) -> KernelView<'_> {
-        KernelView { ctx: self, map: None, seg: None }
+        KernelView { ctx: self, map: None, seg: None, label_override: None }
     }
 
     /// Segmented subset view for a cluster subproblem: local index t ↦
@@ -1060,9 +1261,14 @@ impl<'a> KernelContext<'a> {
         if seg.is_full() {
             // Identity member set: behave exactly like the full view, but
             // keep the map so local/global bookkeeping stays valid.
-            return KernelView { ctx: self, map: Some(members.to_vec()), seg: None };
+            return KernelView {
+                ctx: self,
+                map: Some(members.to_vec()),
+                seg: None,
+                label_override: None,
+            };
         }
-        KernelView { ctx: self, map: Some(members.to_vec()), seg: Some(seg) }
+        KernelView { ctx: self, map: Some(members.to_vec()), seg: Some(seg), label_override: None }
     }
 
     /// v1-style subset view: full dataset-length rows under the full-span
@@ -1071,7 +1277,7 @@ impl<'a> KernelContext<'a> {
     /// whole rows through a subset lens.
     pub fn view_unsegmented(&self, members: &[usize]) -> KernelView<'_> {
         debug_assert!(members.iter().all(|&i| i < self.ds.len()));
-        KernelView { ctx: self, map: Some(members.to_vec()), seg: None }
+        KernelView { ctx: self, map: Some(members.to_vec()), seg: None, label_override: None }
     }
 }
 
@@ -1089,6 +1295,9 @@ pub struct KernelView<'a> {
     map: Option<Vec<usize>>,
     /// Segment backing this view's rows; `None` = full-span rows.
     seg: Option<SegmentRef>,
+    /// Per-local-index label override (see [`Self::with_labels`]); `None`
+    /// = read labels through the dataset.
+    label_override: Option<Vec<i8>>,
 }
 
 impl<'a> KernelView<'a> {
@@ -1165,11 +1374,27 @@ impl<'a> KernelView<'a> {
 
     #[inline]
     pub fn label(&self, local: usize) -> i8 {
-        self.ctx.ds.y[self.global(local)]
+        match &self.label_override {
+            Some(l) => l[local],
+            None => self.ctx.ds.y[self.global(local)],
+        }
+    }
+
+    /// Replace this view's labels with `labels` (one per LOCAL index).
+    /// Lets many consumers with different ±1 labelings of the same rows —
+    /// the k(k−1)/2 OVO pairs — share ONE context (and thus one segment
+    /// cache) over a dataset stored with placeholder labels.
+    pub fn with_labels(mut self, labels: Vec<i8>) -> Self {
+        assert_eq!(labels.len(), self.len(), "label override length mismatch");
+        self.label_override = Some(labels);
+        self
     }
 
     /// All local labels, gathered (hot-loop friendly).
     pub fn labels(&self) -> Vec<i8> {
+        if let Some(l) = &self.label_override {
+            return l.clone();
+        }
         match &self.map {
             Some(m) => m.iter().map(|&g| self.ctx.ds.y[g]).collect(),
             None => self.ctx.ds.y.clone(),

@@ -26,6 +26,8 @@ pub enum Algo {
     Fastfood,
     Ltpu,
     Spsvm,
+    /// One-vs-one multiclass DC-SVM over one shared kernel context.
+    Ovo,
 }
 
 impl Algo {
@@ -40,6 +42,7 @@ impl Algo {
             "fastfood" | "rff" => Algo::Fastfood,
             "ltpu" => Algo::Ltpu,
             "spsvm" => Algo::Spsvm,
+            "ovo" | "multiclass" => Algo::Ovo,
             other => bail!("unknown algo '{other}'"),
         })
     }
@@ -55,10 +58,11 @@ impl Algo {
             Algo::Fastfood => "FastFood",
             Algo::Ltpu => "LTPU",
             Algo::Spsvm => "SpSVM",
+            Algo::Ovo => "OVO",
         }
     }
 
-    pub fn all() -> [Algo; 9] {
+    pub fn all() -> [Algo; 10] {
         [
             Algo::DcSvmEarly,
             Algo::DcSvm,
@@ -69,6 +73,7 @@ impl Algo {
             Algo::Fastfood,
             Algo::Spsvm,
             Algo::Ltpu,
+            Algo::Ovo,
         ]
     }
 }
@@ -365,6 +370,14 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.apply("algo", "early").unwrap();
         assert_eq!(cfg.dcsvm_config().unwrap().stop_after_level, Some(1));
+    }
+
+    #[test]
+    fn ovo_algo_parses_and_names() {
+        assert_eq!(Algo::parse("ovo").unwrap(), Algo::Ovo);
+        assert_eq!(Algo::parse("multiclass").unwrap(), Algo::Ovo);
+        assert_eq!(Algo::Ovo.name(), "OVO");
+        assert!(Algo::all().contains(&Algo::Ovo));
     }
 
     #[test]

@@ -75,6 +75,102 @@ pub fn parse_libsvm<R: BufRead>(
     Ok(Dataset::new(x, labels, dim, name))
 }
 
+/// Parse multi-label LIBSVM text: labels are kept as integer class ids
+/// (`0, 1, 2, …`) instead of being binarized by sign. Returns
+/// `(row-major features, class labels, dim)` — the raw parts, so the data
+/// layer stays independent of the multiclass module
+/// ([`crate::multiclass::MulticlassDataset::from_libsvm`] wraps them).
+pub fn parse_libsvm_multiclass<R: BufRead>(
+    reader: R,
+    dim_hint: Option<usize>,
+) -> Result<(Vec<f32>, Vec<u16>, usize)> {
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut labels: Vec<u16> = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        if label < 0.0 || label.fract() != 0.0 || label > u16::MAX as f64 {
+            bail!(
+                "line {}: multiclass labels must be integers in 0..={} (got {label})",
+                lineno + 1,
+                u16::MAX
+            );
+        }
+        labels.push(label as u16);
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair '{tok}'", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: bad index", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: indices are 1-based", lineno + 1);
+            }
+            let val: f32 = val
+                .parse()
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push(feats);
+    }
+
+    let dim = dim_hint.unwrap_or(max_idx).max(max_idx);
+    if dim == 0 {
+        bail!("empty dataset: no features found");
+    }
+    let mut x = vec![0f32; rows.len() * dim];
+    for (i, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x[i * dim + j] = v;
+        }
+    }
+    Ok((x, labels, dim))
+}
+
+/// [`parse_libsvm_multiclass`] over a file.
+pub fn read_libsvm_multiclass(
+    path: &Path,
+    dim_hint: Option<usize>,
+) -> Result<(Vec<f32>, Vec<u16>, usize)> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    parse_libsvm_multiclass(BufReader::new(file), dim_hint)
+}
+
+/// Render multiclass rows as LIBSVM text (`label idx:val ...`, zeros
+/// omitted, 1-based) — the writer counterpart of
+/// [`parse_libsvm_multiclass`], used by benches/tests to stage multiclass
+/// train files for the CLI.
+pub fn format_libsvm_multiclass(x: &[f32], labels: &[u16], dim: usize) -> String {
+    use std::fmt::Write as _;
+    assert_eq!(x.len(), labels.len() * dim);
+    let mut out = String::new();
+    for (i, &label) in labels.iter().enumerate() {
+        let _ = write!(out, "{label}");
+        for (j, &v) in x[i * dim..(i + 1) * dim].iter().enumerate() {
+            if v != 0.0 {
+                let _ = write!(out, " {}:{}", j + 1, v);
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
 /// Append one LIBSVM line (`±1 idx:val ...\n`, zeros omitted, 1-based):
 /// the single row serializer behind [`format_libsvm`] and [`write_libsvm`].
 fn format_libsvm_row(out: &mut String, y: i8, row: &[f32]) {
@@ -148,6 +244,33 @@ mod tests {
     fn rejects_zero_index() {
         let txt = "+1 0:1\n";
         assert!(parse_libsvm(Cursor::new(txt), None, "t".into()).is_err());
+    }
+
+    #[test]
+    fn multiclass_parse_keeps_class_ids() {
+        let txt = "0 1:0.5\n3 2:1.0\n# comment\n7 1:1 3:2\n";
+        let (x, labels, dim) = parse_libsvm_multiclass(Cursor::new(txt), None).unwrap();
+        assert_eq!(labels, vec![0, 3, 7]);
+        assert_eq!(dim, 3);
+        assert_eq!(&x[0..3], &[0.5, 0.0, 0.0]);
+        assert_eq!(&x[6..9], &[1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn multiclass_rejects_negative_and_fractional_labels() {
+        assert!(parse_libsvm_multiclass(Cursor::new("-1 1:1\n"), None).is_err());
+        assert!(parse_libsvm_multiclass(Cursor::new("1.5 1:1\n"), None).is_err());
+    }
+
+    #[test]
+    fn multiclass_format_parse_roundtrip() {
+        let x = vec![1.0f32, 0.0, 0.25, 0.0, 2.0, -3.0];
+        let labels = vec![4u16, 0];
+        let txt = format_libsvm_multiclass(&x, &labels, 3);
+        let (bx, blabels, bdim) = parse_libsvm_multiclass(Cursor::new(txt), Some(3)).unwrap();
+        assert_eq!(bx, x);
+        assert_eq!(blabels, labels);
+        assert_eq!(bdim, 3);
     }
 
     #[test]

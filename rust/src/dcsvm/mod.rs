@@ -35,7 +35,7 @@ use std::time::Instant;
 use crate::cache::KernelContext;
 use crate::data::Dataset;
 use crate::kernel::{BlockKernel, KernelKind};
-use crate::kmeans::{two_step_partition, Partition, Router};
+use crate::kmeans::{two_step_partition, two_step_partition_restricted, Partition, Router};
 use crate::predict::{EarlyModel, SvmModel};
 use crate::solver::{SmoConfig, SmoSolver};
 use crate::util::prng::Pcg64;
@@ -448,6 +448,167 @@ pub fn train(ds: &Dataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> DcSvm
         pre_final_alpha,
         early_model,
         trace,
+        early_stopped: false,
+    }
+}
+
+/// Outcome of a [`train_restricted`] run (a member-subset DC-SVM solve
+/// over a caller-owned shared context). Indices are LOCAL to the member
+/// set; the caller maps them back through its member list.
+pub struct RestrictedResult {
+    /// Final α over the member subset (local order).
+    pub alpha: Vec<f64>,
+    /// Objective of the final restricted solve (None if early-stopped).
+    pub objective: Option<f64>,
+    pub final_iterations: usize,
+    pub sub_iterations: usize,
+    pub early_stopped: bool,
+}
+
+/// [`train`] restricted to a member subset of a **caller-owned**
+/// [`KernelContext`] — the one-shared-context multi-class path: every OVO
+/// pair trains through this over the SAME context, so kernel rows cached
+/// for one pair's segments are stitched into every later pair's.
+///
+/// Mirrors [`train`] phase-for-phase over LOCAL indices (levels → refine →
+/// final), with three deliberate differences:
+///
+/// * **Labels come from `labels`** (one ±1 per LOCAL member, via
+///   [`crate::cache::KernelView::with_labels`]) — the context's dataset
+///   carries placeholder labels shared by all pairs.
+/// * **Never touches the context's thread budget**: `cfg.threads` here IS
+///   this subproblem's dispatch budget, already split by the caller's
+///   concurrent-pairs rule, so `--threads N` never nests. Cluster
+///   subproblems within the pair run serially on the calling thread
+///   (`scope_map(1, ..)` semantics via the budget: the pair-level fan-out
+///   is the parallel axis).
+/// * **Never starts a registry generation**: generation policy is
+///   value-neutral (GC only drops re-gatherable features) and belongs to
+///   whoever owns the context's lifecycle.
+///
+/// Bit-identity with a materialized per-pair run (`tests/multiclass_e2e.rs`)
+/// holds because the rng draw sequence depends only on LOCAL pool lengths,
+/// sample rows gathered by global index are bitwise the rows a copy would
+/// hold, and kernel values are pure per `(x_i, x_j)` at any dispatch shape.
+pub fn train_restricted(
+    ctx: &KernelContext,
+    members: &[usize],
+    labels: &[i8],
+    cfg: &DcSvmConfig,
+) -> RestrictedResult {
+    assert_eq!(ctx.kind(), cfg.kind, "kernel backend kind mismatch");
+    assert_eq!(members.len(), labels.len(), "one label per member");
+    let n = members.len();
+    let mut rng = Pcg64::new(cfg.seed);
+
+    let mut alpha = vec![0f64; n];
+    let mut sub_iterations = 0usize;
+    let mut early_stopped = false;
+
+    // ---------------- divide phase: levels l_max .. 1 ----------------------
+    for level in (1..=cfg.levels).rev() {
+        let k = cfg.k_base.pow(level as u32).min(n.max(1));
+
+        let sv_pool: Option<Vec<usize>> = if cfg.adaptive && level < cfg.levels {
+            let pool: Vec<usize> = (0..n).filter(|&i| alpha[i] > 0.0).collect();
+            if pool.len() >= cfg.k_base { Some(pool) } else { None }
+        } else {
+            None
+        };
+        let (_router, part) = two_step_partition_restricted(
+            ctx,
+            k,
+            cfg.sample_m,
+            members,
+            sv_pool.as_deref(),
+            &mut rng,
+        );
+
+        let scfg = solver_cfg(cfg, cfg.eps_sub, cfg.max_iter_sub, 0);
+        let jobs: Vec<Vec<usize>> =
+            part.members.iter().filter(|m| !m.is_empty()).cloned().collect();
+        let alpha_ref = &alpha;
+        let segment_views = cfg.segment_views;
+        let results: Vec<(Vec<usize>, Vec<f64>, usize)> =
+            scope_map(cfg.threads, jobs, |_, locals| {
+                let a0: Vec<f64> = locals.iter().map(|&t| alpha_ref[t]).collect();
+                let warm = a0.iter().any(|&a| a != 0.0);
+                let globals: Vec<usize> = locals.iter().map(|&t| members[t]).collect();
+                let cluster_labels: Vec<i8> = locals.iter().map(|&t| labels[t]).collect();
+                let view = if segment_views {
+                    ctx.view(&globals).with_labels(cluster_labels)
+                } else {
+                    ctx.view_unsegmented(&globals).with_labels(cluster_labels)
+                };
+                let res = SmoSolver::new(view, scfg.clone()).solve_warm(
+                    if warm { Some(&a0) } else { None },
+                    &mut |_| {},
+                );
+                (locals, res.alpha, res.iterations)
+            });
+        for (locals, sub_alpha, iters) in results {
+            sub_iterations += iters;
+            for (t, &i) in locals.iter().enumerate() {
+                alpha[i] = sub_alpha[t];
+            }
+        }
+
+        if cfg.stop_after_level == Some(level) {
+            early_stopped = true;
+            break;
+        }
+    }
+
+    if early_stopped {
+        return RestrictedResult {
+            alpha,
+            objective: None,
+            final_iterations: 0,
+            sub_iterations,
+            early_stopped: true,
+        };
+    }
+
+    // ---------------- refine step: solve on level-1 SVs --------------------
+    if cfg.refine {
+        let sv_idx: Vec<usize> = (0..n).filter(|&i| alpha[i] > 0.0).collect();
+        if sv_idx.len() >= 2 && sv_idx.len() < n {
+            let a0: Vec<f64> = sv_idx.iter().map(|&i| alpha[i]).collect();
+            let globals: Vec<usize> = sv_idx.iter().map(|&t| members[t]).collect();
+            let sv_labels: Vec<i8> = sv_idx.iter().map(|&t| labels[t]).collect();
+            let refine_view = if cfg.segment_views {
+                ctx.view(&globals).with_labels(sv_labels)
+            } else {
+                ctx.view_unsegmented(&globals).with_labels(sv_labels)
+            };
+            let res = SmoSolver::new(
+                refine_view,
+                solver_cfg(cfg, cfg.eps_sub, cfg.max_iter_sub, 0),
+            )
+            .solve_warm(Some(&a0), &mut |_| {});
+            for (t, &i) in sv_idx.iter().enumerate() {
+                alpha[i] = res.alpha[t];
+            }
+        }
+    }
+
+    // ---------------- conquer: final member-set solve ----------------------
+    let final_view = if cfg.segment_views {
+        ctx.view(members).with_labels(labels.to_vec())
+    } else {
+        ctx.view_unsegmented(members).with_labels(labels.to_vec())
+    };
+    let res = SmoSolver::new(
+        final_view,
+        solver_cfg(cfg, cfg.eps_final, cfg.max_iter_final, 0),
+    )
+    .solve_warm(Some(&alpha), &mut |_| {});
+
+    RestrictedResult {
+        alpha: res.alpha,
+        objective: Some(res.objective),
+        final_iterations: res.iterations,
+        sub_iterations,
         early_stopped: false,
     }
 }

@@ -100,6 +100,12 @@ pub struct Outcome {
     pub svs_added: Option<u64>,
     /// Prior SVs evicted (α → 0) by a `dcsvm update` run (0 for a no-op).
     pub svs_dropped: Option<u64>,
+    /// Pairwise OVO machines trained over the shared context (`--algo
+    /// ovo`; k(k−1)/2 over the present classes).
+    pub pair_dispatches: Option<u64>,
+    /// Pairwise votes cast evaluating the test set (`--algo ovo`;
+    /// rows × machines).
+    pub votes: Option<u64>,
     /// Free-text extras (iteration counts, per-algo details). Structured
     /// metrics live in the typed fields above, not here.
     pub note: String,
@@ -170,6 +176,14 @@ impl Outcome {
                 "svs_dropped",
                 self.svs_dropped.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
             ),
+            (
+                "pair_dispatches",
+                self.pair_dispatches.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "votes",
+                self.votes.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
             ("note", Json::from(self.note.as_str())),
         ])
     }
@@ -217,7 +231,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
     // side, so the budget is nominal). The random-feature baselines
     // (fastfood/ltpu) never consume test norms, so skip it for them.
     let te_ctx_opt = match cfg.algo {
-        Algo::Fastfood | Algo::Ltpu => None,
+        Algo::Fastfood | Algo::Ltpu | Algo::Ovo => None,
         _ => Some(KernelContext::new(te, kernel.as_ref(), 1 << 20).with_threads(cfg.threads)),
     };
     let t0 = std::time::Instant::now();
@@ -253,6 +267,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 update_values_computed: None,
                 svs_added: None,
                 svs_dropped: None,
+                pair_dispatches: None,
+                votes: None,
                 note: format!("iters={}", res.iterations),
             }
         }
@@ -298,6 +314,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 update_values_computed: None,
                 svs_added: None,
                 svs_dropped: None,
+                pair_dispatches: None,
+                votes: None,
                 note,
             }
         }
@@ -334,6 +352,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 update_values_computed: None,
                 svs_added: None,
                 svs_dropped: None,
+                pair_dispatches: None,
+                votes: None,
                 note: format!("levels={:?}", res.level_sv_counts),
             }
         }
@@ -370,6 +390,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 update_values_computed: None,
                 svs_added: None,
                 svs_dropped: None,
+                pair_dispatches: None,
+                votes: None,
                 note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
             }
         }
@@ -407,6 +429,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 update_values_computed: None,
                 svs_added: None,
                 svs_dropped: None,
+                pair_dispatches: None,
+                votes: None,
                 note: format!("landmarks={}", cfg.budget),
             }
         }
@@ -440,6 +464,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 update_values_computed: None,
                 svs_added: None,
                 svs_dropped: None,
+                pair_dispatches: None,
+                votes: None,
                 note: format!("features={}", cfg.budget * 8),
             }
         }
@@ -473,6 +499,8 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 update_values_computed: None,
                 svs_added: None,
                 svs_dropped: None,
+                pair_dispatches: None,
+                votes: None,
                 note: format!("units={}", cfg.budget),
             }
         }
@@ -511,7 +539,49 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 update_values_computed: None,
                 svs_added: None,
                 svs_dropped: None,
+                pair_dispatches: None,
+                votes: None,
                 note: format!("basis={}", model.basis_size),
+            }
+        }
+        Algo::Ovo => {
+            // The harness's synthetic datasets are binary; run them as a
+            // 2-class OVO problem so `--algo ovo` slots into the same
+            // apples-to-apples comparison table. Real multiclass data
+            // enters through the CLI's LIBSVM / `mc<K>` paths.
+            let mc_tr = crate::multiclass::MulticlassDataset::from_binary(tr);
+            let mc_te = crate::multiclass::MulticlassDataset::from_binary(te);
+            let dcfg = cfg.dcsvm_config()?;
+            let res = crate::multiclass::train_ovo_shared(&mc_tr, kernel.as_ref(), &dcfg);
+            let vs = res.value_stats;
+            let machines = res.model.machines.len() as u64;
+            Outcome {
+                algo: cfg.algo.name(),
+                train_s: res.train_s,
+                accuracy: res.model.accuracy(&mc_te, kernel.as_ref()),
+                objective: None,
+                svs: res.model.num_svs(),
+                cache_hit_rate: None,
+                final_rows: None,
+                segment_rows: Some(vs.segment_rows),
+                divide_values: None,
+                stitched_values: Some(vs.values_stitched),
+                parallel_dispatches: Some(vs.parallel_dispatches),
+                stitch_groups: Some(vs.stitch_groups),
+                registry_bytes: None,
+                simd_tier: tier,
+                quantized_values: Some(vs.quantized_values),
+                segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
+                pair_dispatches: Some(res.pair_dispatches),
+                votes: Some(machines * mc_te.len() as u64),
+                note: format!(
+                    "classes={} machines={}",
+                    res.model.present.len(),
+                    machines
+                ),
             }
         }
     };
@@ -635,6 +705,24 @@ mod tests {
         assert_eq!(j.get("simd_tier").as_str(), Some(out.simd_tier));
         assert_eq!(j.get("quantized_values").as_f64(), Some(0.0));
         assert_eq!(j.get("segment_regathers").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn ovo_harness_reports_pair_counters() {
+        let cfg = small_cfg(Algo::Ovo);
+        let (tr, te) = load_dataset(&cfg).unwrap();
+        let out = run(&cfg, &tr, &te).unwrap();
+        // Binary data viewed as 2 classes → exactly one pairwise machine.
+        assert_eq!(out.pair_dispatches, Some(1), "2 classes → 1 machine");
+        assert_eq!(out.votes, Some(te.len() as u64));
+        assert!(out.note.contains("classes=2"), "note: {}", out.note);
+        let j = out.to_json();
+        assert_eq!(j.get("pair_dispatches").as_f64(), Some(1.0));
+        assert_eq!(j.get("votes").as_f64(), Some(te.len() as f64));
+        // Binary algos leave the multiclass counters null.
+        let bin = run(&small_cfg(Algo::DcSvm), &tr, &te).unwrap();
+        assert_eq!(bin.pair_dispatches, None);
+        assert_eq!(bin.votes, None);
     }
 
     #[test]

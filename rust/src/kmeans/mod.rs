@@ -5,4 +5,6 @@
 pub mod kernel_kmeans;
 pub mod twostep;
 
-pub use twostep::{off_diagonal_mass, two_step_partition, Partition, Router};
+pub use twostep::{
+    off_diagonal_mass, two_step_partition, two_step_partition_restricted, Partition, Router,
+};

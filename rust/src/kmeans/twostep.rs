@@ -351,6 +351,61 @@ pub fn two_step_partition(
     (router, part)
 }
 
+/// [`two_step_partition`] restricted to a member subset (LOCAL indices
+/// throughout): the sampling pool, the returned [`Partition`], and
+/// `sample_from` are all in `members`-local coordinates, so a caller that
+/// restricts one shared [`KernelContext`] to a subproblem (the OVO
+/// pairwise trainer) draws the *same* rng sequence and produces the *same*
+/// clustering as a solver handed a materialized copy of those rows —
+/// `rng.sample_indices` draw counts depend on the pool length, which here
+/// is the LOCAL length. Only the member features/norms are gathered into a
+/// transient scratch for the assignment pass (O(|members|·dim), freed on
+/// return); no `Dataset` is ever materialized.
+pub fn two_step_partition_restricted(
+    ctx: &KernelContext,
+    k: usize,
+    m: usize,
+    members: &[usize],
+    sample_from: Option<&[usize]>,
+    rng: &mut Pcg64,
+) -> (Router, Partition) {
+    let pool_len = sample_from.map(|s| s.len()).unwrap_or(members.len());
+    let m_eff = m.min(pool_len).max(1);
+    let picked = rng.sample_indices(pool_len, m_eff);
+    let sample_idx: Vec<usize> = match sample_from {
+        Some(pool) => picked.iter().map(|&i| members[pool[i]]).collect(),
+        None => picked.iter().map(|&i| members[i]).collect(),
+    };
+    let mut router = Router::fit(ctx, &sample_idx, k, 30, rng);
+    if ctx.quant_route() {
+        router.set_quant_route(true);
+    }
+    let ds = ctx.ds();
+    let dim = ds.dim;
+    let mut xs = Vec::with_capacity(members.len() * dim);
+    let mut norms = Vec::with_capacity(members.len());
+    for &g in members {
+        xs.extend_from_slice(ds.row(g));
+        norms.push(ctx.norm(g));
+    }
+    // One K(members, sample) pass outside the row cache — counted like
+    // `Router::assign_all` so whole-run `values_computed` stays honest.
+    ctx.count_external_values((members.len() * router.sample_size()) as u64);
+    let assign = if let Some(q) = &router.quant {
+        ctx.count_quantized_values((members.len() * router.sample_size()) as u64);
+        let kind = ctx.kind();
+        router.assign_rows_impl(&xs, &norms, |xq, qn, out| {
+            q.block(kind, xq, qn, &router.sample_norms, out)
+        })
+    } else {
+        router.assign_rows_impl(&xs, &norms, |xq, qn, out| {
+            ctx.block_dispatch(xq, qn, &router.sample_x, &router.sample_norms, router.dim, out)
+        })
+    };
+    let part = Partition::from_assign(assign, router.k);
+    (router, part)
+}
+
 /// Between-cluster kernel mass D(π) = Σ_{π(i)≠π(j)} |K_ij| (Theorem 1).
 /// O(n²) — bench/test use on small subsets only.
 pub fn off_diagonal_mass(ctx: &KernelContext, assign: &[u16]) -> f64 {

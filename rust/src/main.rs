@@ -77,7 +77,10 @@ fn print_usage() {
          \x20                               (flags: `dcsvm serve --help`)\n\
          \x20 info                          backend / artifact status\n\
          \n\
-         common flags: --algo {{dcsvm,early,libsvm,cascade,lasvm,llsvm,fastfood,ltpu,spsvm}}\n\
+         common flags: --algo {{dcsvm,early,libsvm,cascade,lasvm,llsvm,fastfood,ltpu,spsvm,ovo}}\n\
+         \x20 (--algo ovo trains one-vs-one multiclass over one shared kernel\n\
+         \x20  context; --dataset accepts mc<K> synthetic mixtures, e.g. mc4,\n\
+         \x20  or a multi-label LIBSVM file path — binary specs run as 2 classes)\n\
          \x20 --dataset NAME --n-train N --n-test N --kernel {{rbf,poly,linear}}\n\
          \x20 --gamma G --c C --eps E --levels L --k-base K --sample-m M\n\
          \x20 --backend {{auto,native,pjrt}} --budget B --seed S --config FILE\n\
@@ -144,6 +147,9 @@ fn cmd_datasets() -> Result<()> {
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let cfg = parse_cfg(args)?;
+    if cfg.algo == Algo::Ovo {
+        return cmd_train_ovo(&cfg);
+    }
     let (tr, te) = harness::load_dataset(&cfg)?;
     println!(
         "training {} on {} (n={}, d={}, kernel={} γ={} C={}, backend={})",
@@ -212,8 +218,146 @@ fn train_model_for_save(
             let svs = em.total_svs();
             Ok((em.to_json(), svs))
         }
-        _ => bail!("--save-model supports kernel-expansion algos (dcsvm, early, libsvm)"),
+        _ => bail!("--save-model supports kernel-expansion algos (dcsvm, early, libsvm, ovo)"),
     }
+}
+
+/// Resolve the train/test pair for `--algo ovo`, multiclass-first:
+/// `mc<K>` (e.g. `mc4`) names a synthetic K-class mixture split by seed,
+/// an existing file path is read as multi-label LIBSVM rows (the last
+/// `--n-test` rows held out; 0 reports training accuracy), and any binary
+/// synthetic spec is viewed as a 2-class problem.
+fn load_multiclass(
+    cfg: &RunConfig,
+) -> Result<(dcsvm::multiclass::MulticlassDataset, dcsvm::multiclass::MulticlassDataset)> {
+    use dcsvm::multiclass::{synthetic_multiclass, MulticlassDataset};
+    if let Some(k) = cfg.dataset.strip_prefix("mc").and_then(|s| s.parse::<usize>().ok()) {
+        if k < 2 {
+            bail!("--dataset mc<K> needs K >= 2, got mc{k}");
+        }
+        let ntr = cfg.n_train.unwrap_or(400);
+        let nte = cfg.n_test.unwrap_or(120);
+        let dim = 4;
+        let tr = synthetic_multiclass(k, ntr, dim, cfg.seed);
+        let te = synthetic_multiclass(k, nte, dim, cfg.seed.wrapping_add(1));
+        return Ok((tr, te));
+    }
+    let path = std::path::Path::new(&cfg.dataset);
+    if path.exists() {
+        let ds = MulticlassDataset::from_libsvm(path, None)?;
+        let hold = cfg.n_test.unwrap_or(0).min(ds.len().saturating_sub(1));
+        if hold == 0 {
+            let te = MulticlassDataset::new(ds.x.clone(), ds.labels.clone(), ds.dim);
+            return Ok((ds, te));
+        }
+        let (cut, dim) = (ds.len() - hold, ds.dim);
+        let tr = MulticlassDataset::new(
+            ds.x[..cut * dim].to_vec(),
+            ds.labels[..cut].to_vec(),
+            dim,
+        );
+        let te = MulticlassDataset::new(
+            ds.x[cut * dim..].to_vec(),
+            ds.labels[cut..].to_vec(),
+            dim,
+        );
+        return Ok((tr, te));
+    }
+    let (tr, te) = harness::load_dataset(cfg)?;
+    Ok((
+        MulticlassDataset::from_binary(&tr),
+        MulticlassDataset::from_binary(&te),
+    ))
+}
+
+/// `dcsvm train --algo ovo`: all k(k−1)/2 pairwise DC-SVM machines over
+/// ONE shared kernel context (pair restriction via segment views — cached
+/// kernel columns computed for one pair are stitched into every later
+/// pair that shares a class). `--save-model` writes the whole ensemble as
+/// a single JSON that `dcsvm serve` loads and serves with per-class
+/// SV blocks.
+fn cmd_train_ovo(cfg: &RunConfig) -> Result<()> {
+    let (tr, te) = load_multiclass(cfg)?;
+    if tr.is_empty() {
+        bail!("--algo ovo: empty training set from --dataset {}", cfg.dataset);
+    }
+    let kind = cfg.kernel_kind()?;
+    let kernel = harness::make_kernel(kind, &cfg.backend, tr.dim)?;
+    println!(
+        "training OVO on {} (n={}, d={}, classes={}, kernel={} γ={} C={}, backend={})",
+        cfg.dataset,
+        tr.len(),
+        tr.dim,
+        tr.present_classes().len(),
+        cfg.kernel,
+        cfg.gamma,
+        cfg.c,
+        cfg.backend
+    );
+    let res = dcsvm::multiclass::train_ovo_shared(&tr, kernel.as_ref(), &cfg.dcsvm_config()?);
+    let machines = res.model.machines.len();
+    let votes = machines as u64 * te.len() as u64;
+    let acc = res.model.accuracy(&te, kernel.as_ref());
+    println!(
+        "OVO: time={} acc={:.2}% svs={} machines={} pair_dispatches={} votes={}",
+        fmt_secs(res.train_s),
+        100.0 * acc,
+        res.model.num_svs(),
+        machines,
+        res.pair_dispatches,
+        votes
+    );
+    if res.pair_values_exact && machines > 1 {
+        let parts: Vec<String> = res
+            .pair_values
+            .iter()
+            .map(|(a, b, v)| format!("({a},{b})={v}"))
+            .collect();
+        println!("per-pair kernel values (shared-context reuse): {}", parts.join(" "));
+    }
+    if let Some(path) = &cfg.save_model {
+        std::fs::write(path, res.model.to_json().to_string())?;
+        println!(
+            "model saved to {path} ({} SVs, {machines} machines)",
+            res.model.num_svs()
+        );
+    }
+    // Same env contract as harness::run — benches collect the multiclass
+    // counters from results.jsonl.
+    if let Ok(dir) = std::env::var("DCSVM_RESULTS_DIR") {
+        if !dir.is_empty() {
+            let vs = res.value_stats;
+            let outcome = harness::Outcome {
+                algo: cfg.algo.name(),
+                train_s: res.train_s,
+                accuracy: acc,
+                objective: None,
+                svs: res.model.num_svs(),
+                cache_hit_rate: None,
+                final_rows: None,
+                segment_rows: Some(vs.segment_rows),
+                divide_values: None,
+                stitched_values: Some(vs.values_stitched),
+                parallel_dispatches: Some(vs.parallel_dispatches),
+                stitch_groups: Some(vs.stitch_groups),
+                registry_bytes: None,
+                simd_tier: dcsvm::kernel::simd_tier().name(),
+                quantized_values: Some(vs.quantized_values),
+                segment_regathers: None,
+                update_values_computed: None,
+                svs_added: None,
+                svs_dropped: None,
+                pair_dispatches: Some(res.pair_dispatches),
+                votes: Some(votes),
+                note: format!(
+                    "classes={} machines={machines}",
+                    res.model.present.len()
+                ),
+            };
+            let _ = harness::record_result_to(std::path::Path::new(&dir), cfg, &outcome);
+        }
+    }
+    Ok(())
 }
 
 fn cmd_predict(args: &[String]) -> Result<()> {
@@ -476,6 +620,8 @@ fn cmd_update(args: &[String]) -> Result<()> {
                 update_values_computed: Some(res.values_computed),
                 svs_added: Some(res.svs_added),
                 svs_dropped: Some(res.svs_dropped),
+                pair_dispatches: None,
+                votes: None,
                 note: format!("margin_violations={}", res.margin_violations),
             };
             let _ = harness::record_result_to(

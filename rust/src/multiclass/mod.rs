@@ -1,15 +1,40 @@
-//! Multiclass support: one-vs-one DC-SVM (the LIBSVM convention).
+//! Multiclass support: one-vs-one DC-SVM (the LIBSVM convention) over ONE
+//! shared [`KernelContext`].
 //!
 //! The paper binarizes mnist8m/cifar for its experiments, but the released
 //! DC-SVM code — like LIBSVM — handles multiclass by training k(k−1)/2
-//! pairwise binary machines and predicting by vote. Each pairwise machine
-//! is a full DC-SVM (so the divide-and-conquer speedup applies per pair),
-//! and ties break toward the smaller class id (LIBSVM's rule).
+//! pairwise binary machines and predicting by vote (ties break toward the
+//! smaller class id, LIBSVM's rule). Each pairwise machine is a full
+//! DC-SVM ([`crate::dcsvm::train_restricted`]), so the divide-and-conquer
+//! speedup applies per pair — and, because every pair trains through a
+//! member view of the *same* context with segment-row stitching on
+//! ([`KernelContext::with_segment_stitching`]), the kernel columns pair
+//! (a,b) computed for class a's rows are copied — not recomputed — when
+//! pairs (a,c), (a,d), … ask for them. The pairwise SV sets overlap
+//! heavily (the DCSVM multi-class paper's observation), so each marginal
+//! pair gets strictly cheaper (counter-asserted in
+//! `tests/multiclass_e2e.rs`).
+//!
+//! Pairs fan out over the worker pool under the same budget-split rule as
+//! the divide phase: N concurrent pair solves each get `threads/N` dispatch
+//! workers, so `--threads N` never nests.
+//!
+//! The trained ensemble is ONE [`OvoModel`]: per-class SV blocks (the
+//! ascending-global-index union of each class's SVs across all pairs) plus
+//! per-machine coefficient vectors indexed into those blocks. A query's
+//! kernel row against class a's block is computed once and folded by every
+//! machine that votes with class a — offline ([`OvoModel::predict_batch`])
+//! and in serving, which reuses the same [`OvoModel::machine_decisions`]
+//! fold so decisions are bit-identical between the two paths.
 
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use crate::cache::{KernelContext, ValueStats};
 use crate::data::Dataset;
 use crate::dcsvm::{self, DcSvmConfig};
-use crate::kernel::BlockKernel;
-use crate::predict::SvmModel;
+use crate::kernel::{BlockKernel, KernelKind};
+use crate::util::threadpool::scope_map;
 
 /// A multiclass dataset: dense rows + integer class labels.
 #[derive(Clone, Debug)]
@@ -17,6 +42,8 @@ pub struct MulticlassDataset {
     pub x: Vec<f32>,
     pub labels: Vec<u16>,
     pub dim: usize,
+    /// `max(label) + 1` — class ids need not be contiguous; absent ids
+    /// simply never train a machine (see [`Self::present_classes`]).
     pub num_classes: usize,
 }
 
@@ -25,6 +52,25 @@ impl MulticlassDataset {
         assert_eq!(x.len(), labels.len() * dim);
         let num_classes = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
         MulticlassDataset { x, labels, dim, num_classes }
+    }
+
+    /// Load a multi-label LIBSVM file (labels mapped to dense-row u16
+    /// class ids as written — no remapping, so non-contiguous ids stay
+    /// non-contiguous).
+    pub fn from_libsvm(
+        path: &std::path::Path,
+        dim_hint: Option<usize>,
+    ) -> anyhow::Result<Self> {
+        let (x, labels, dim) = crate::data::libsvm::read_libsvm_multiclass(path, dim_hint)?;
+        Ok(MulticlassDataset::new(x, labels, dim))
+    }
+
+    /// View a binary ±1 dataset as a 2-class problem (−1 ↦ class 0,
+    /// +1 ↦ class 1) — how the harness runs `--algo ovo` on its binary
+    /// synthetic datasets for apples-to-apples algo comparisons.
+    pub fn from_binary(ds: &Dataset) -> Self {
+        let labels = ds.y.iter().map(|&y| if y > 0 { 1u16 } else { 0 }).collect();
+        MulticlassDataset::new(ds.x.clone(), labels, ds.dim)
     }
 
     pub fn len(&self) -> usize {
@@ -39,58 +85,188 @@ impl MulticlassDataset {
         &self.x[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Binary restriction to classes (a, b): labels a → +1, b → −1.
-    fn pair_view(&self, a: u16, b: u16) -> (Dataset, Vec<usize>) {
-        let mut x = Vec::new();
-        let mut y = Vec::new();
-        let mut idx = Vec::new();
-        for i in 0..self.len() {
-            if self.labels[i] == a || self.labels[i] == b {
-                x.extend_from_slice(self.row(i));
-                y.push(if self.labels[i] == a { 1 } else { -1 });
-                idx.push(i);
-            }
-        }
-        (Dataset::new(x, y, self.dim, format!("pair-{a}-{b}")), idx)
+    /// Class ids that actually occur, ascending. Pairs are formed over
+    /// these only: a dataset with labels {0, 5} trains one machine, and a
+    /// single-class dataset trains none (prediction returns the lone
+    /// class).
+    pub fn present_classes(&self) -> Vec<u16> {
+        let set: BTreeSet<u16> = self.labels.iter().copied().collect();
+        set.into_iter().collect()
     }
 }
 
-/// One-vs-one ensemble of binary DC-SVM models.
+/// Global member indices (ascending) and ±1 labels (+1 = class `a`) of the
+/// pair (a, b) restriction — the index set a pair's machine trains on.
+/// This is bookkeeping only: no feature row is copied here (the pre-PR-8
+/// `pair_view` materialized a full per-pair `Dataset`; the shared-context
+/// trainer restricts via [`KernelContext::view`] instead).
+pub fn pair_members(ds: &MulticlassDataset, a: u16, b: u16) -> (Vec<usize>, Vec<i8>) {
+    let mut members = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..ds.len() {
+        if ds.labels[i] == a || ds.labels[i] == b {
+            members.push(i);
+            labels.push(if ds.labels[i] == a { 1 } else { -1 });
+        }
+    }
+    (members, labels)
+}
+
+/// One pairwise machine of an [`OvoModel`]: `a` (+1) vs `b` (−1), with
+/// coefficients indexed into the model's per-class SV blocks (an SV of
+/// this machine that sits at position j of class a's block contributes
+/// `coef_a[j]`; block positions this machine has no SV at carry 0).
+#[derive(Clone, Debug)]
+pub struct OvoMachine {
+    pub a: u16,
+    pub b: u16,
+    pub coef_a: Vec<f32>,
+    pub coef_b: Vec<f32>,
+}
+
+/// One-vs-one ensemble over per-class SV blocks.
+#[derive(Clone, Debug)]
 pub struct OvoModel {
-    /// (class_a, class_b, model): model decides a (+1) vs b (−1).
-    pub machines: Vec<(u16, u16, SvmModel)>,
     pub num_classes: usize,
+    pub dim: usize,
+    pub kind: KernelKind,
+    /// Per-class SV rows, row-major (ascending global training index —
+    /// the union over all machines touching the class). Classes with no
+    /// SVs (absent ids) hold empty blocks.
+    pub class_sv_x: Vec<Vec<f32>>,
+    pub class_sv_norms: Vec<Vec<f32>>,
+    pub machines: Vec<OvoMachine>,
+    /// Class ids present at training time, ascending (the vote domain).
+    pub present: Vec<u16>,
+}
+
+/// LIBSVM's OVO vote rule: most votes wins, ties break toward the
+/// *smaller* class id. `present` is the ascending candidate list; an empty
+/// list returns 0, a single class returns that class unconditionally.
+pub fn vote_argmax(votes: &[u32], present: &[u16]) -> u16 {
+    let mut best: Option<u16> = None;
+    for &c in present {
+        let v = votes[c as usize];
+        match best {
+            // Strict `>`: on a tie the earlier (smaller) id sticks.
+            Some(bc) if v > votes[bc as usize] => best = Some(c),
+            None => best = Some(c),
+            _ => {}
+        }
+    }
+    best.unwrap_or(0)
 }
 
 impl OvoModel {
-    /// Predict a batch of rows by pairwise vote.
-    pub fn predict_batch(
+    /// Total SVs across the class blocks.
+    pub fn num_svs(&self) -> usize {
+        self.class_sv_norms.iter().map(|n| n.len()).sum()
+    }
+
+    /// Decision value of every machine for ONE query, given the query's
+    /// kernel row against each class block (`class_rows[c].len()` =
+    /// class c's SV count). This is THE fold — offline prediction and the
+    /// serving layer both funnel through it, so a machine's decision is
+    /// bit-identical wherever the class rows came from (one contiguous
+    /// block pass here, stitched SV-block cache entries in serving):
+    /// accumulation runs class-a block ascending then class-b block
+    /// ascending, in f64.
+    pub fn machine_decisions(&self, class_rows: &[&[f32]]) -> Vec<f32> {
+        self.machines
+            .iter()
+            .map(|m| {
+                let mut acc = 0f64;
+                let ra = class_rows[m.a as usize];
+                for (j, &c) in m.coef_a.iter().enumerate() {
+                    acc += c as f64 * ra[j] as f64;
+                }
+                let rb = class_rows[m.b as usize];
+                for (j, &c) in m.coef_b.iter().enumerate() {
+                    acc += c as f64 * rb[j] as f64;
+                }
+                acc as f32
+            })
+            .collect()
+    }
+
+    /// Vote over one query's machine decisions: the winning label plus the
+    /// vote margin (winner votes − best other class's votes; the serving
+    /// layer reports the margin as the query's `decision`).
+    pub fn vote(&self, decisions: &[f32]) -> (u16, f32) {
+        let mut votes = vec![0u32; self.num_classes.max(1)];
+        for (m, &d) in self.machines.iter().zip(decisions) {
+            let w = if d >= 0.0 { m.a } else { m.b };
+            votes[w as usize] += 1;
+        }
+        let label = vote_argmax(&votes, &self.present);
+        let best = votes.get(label as usize).copied().unwrap_or(0);
+        let runner = self
+            .present
+            .iter()
+            .filter(|&&c| c != label)
+            .map(|&c| votes[c as usize])
+            .max()
+            .unwrap_or(0);
+        (label, best as f32 - runner as f32)
+    }
+
+    /// Per-class kernel blocks K(batch, class SVs): one backend dispatch
+    /// per non-empty class — the rows every machine's vote folds over.
+    fn class_kernel_blocks(
         &self,
         x: &[f32],
         norms: &[f32],
         kernel: &dyn BlockKernel,
-    ) -> Vec<u16> {
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(kernel.kind(), self.kind);
         let n = norms.len();
-        let mut votes = vec![0u32; n * self.num_classes];
-        for (a, b, model) in &self.machines {
-            let dv = model.decision_batch(x, norms, kernel);
-            for (i, &d) in dv.iter().enumerate() {
-                let winner = if d >= 0.0 { *a } else { *b };
-                votes[i * self.num_classes + winner as usize] += 1;
-            }
-        }
+        (0..self.num_classes)
+            .map(|c| {
+                let svs = self.class_sv_norms[c].len();
+                let mut block = vec![0f32; n * svs];
+                if svs > 0 {
+                    kernel.block(
+                        x,
+                        norms,
+                        &self.class_sv_x[c],
+                        &self.class_sv_norms[c],
+                        self.dim,
+                        &mut block,
+                    );
+                }
+                block
+            })
+            .collect()
+    }
+
+    /// Labels + vote margins for a row-major batch.
+    pub fn predict_with_margins(
+        &self,
+        x: &[f32],
+        norms: &[f32],
+        kernel: &dyn BlockKernel,
+    ) -> Vec<(u16, f32)> {
+        let n = norms.len();
+        let blocks = self.class_kernel_blocks(x, norms, kernel);
         (0..n)
             .map(|i| {
-                let row = &votes[i * self.num_classes..(i + 1) * self.num_classes];
-                // max vote, ties toward the smaller class id
-                let mut best = 0u16;
-                for (c, &v) in row.iter().enumerate() {
-                    if v > row[best as usize] {
-                        best = c as u16;
-                    }
-                }
-                best
+                let rows: Vec<&[f32]> = (0..self.num_classes)
+                    .map(|c| {
+                        let svs = self.class_sv_norms[c].len();
+                        &blocks[c][i * svs..(i + 1) * svs]
+                    })
+                    .collect();
+                let dv = self.machine_decisions(&rows);
+                self.vote(&dv)
             })
+            .collect()
+    }
+
+    /// Predict a batch of rows by pairwise vote.
+    pub fn predict_batch(&self, x: &[f32], norms: &[f32], kernel: &dyn BlockKernel) -> Vec<u16> {
+        self.predict_with_margins(x, norms, kernel)
+            .into_iter()
+            .map(|(label, _)| label)
             .collect()
     }
 
@@ -99,41 +275,353 @@ impl OvoModel {
             .map(|i| test.row(i).iter().map(|&v| v * v).sum())
             .collect();
         let preds = self.predict_batch(&test.x, &norms, kernel);
-        let correct = preds
-            .iter()
-            .zip(&test.labels)
-            .filter(|(p, y)| p == y)
-            .count();
+        let correct = preds.iter().zip(&test.labels).filter(|(p, y)| p == y).count();
         correct as f64 / test.len().max(1) as f64
+    }
+
+    /// Serialize for model persistence (`train --algo ovo --save-model`).
+    /// The `"machines"` key distinguishes OVO ensembles from plain
+    /// [`crate::predict::SvmModel`] / early-model files when loading.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let (kname, gamma, eta) = match self.kind {
+            KernelKind::Rbf { gamma } => ("rbf", gamma as f64, 0.0),
+            KernelKind::Poly { gamma, eta } => ("poly", gamma as f64, eta as f64),
+            KernelKind::Linear => ("linear", 0.0, 0.0),
+        };
+        Json::obj(vec![
+            ("type", Json::from("ovo")),
+            ("kernel", Json::from(kname)),
+            ("gamma", Json::from(gamma)),
+            ("eta", Json::from(eta)),
+            ("dim", Json::from(self.dim)),
+            ("num_classes", Json::from(self.num_classes)),
+            (
+                "present",
+                Json::arr_f64(&self.present.iter().map(|&c| c as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "class_sv_x",
+                Json::Arr(
+                    self.class_sv_x
+                        .iter()
+                        .map(|xs| {
+                            Json::arr_f64(&xs.iter().map(|&v| v as f64).collect::<Vec<_>>())
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "machines",
+                Json::Arr(
+                    self.machines
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("a", Json::from(m.a as usize)),
+                                ("b", Json::from(m.b as usize)),
+                                (
+                                    "coef_a",
+                                    Json::arr_f64(
+                                        &m.coef_a.iter().map(|&c| c as f64).collect::<Vec<_>>(),
+                                    ),
+                                ),
+                                (
+                                    "coef_b",
+                                    Json::arr_f64(
+                                        &m.coef_b.iter().map(|&c| c as f64).collect::<Vec<_>>(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize a model saved by [`OvoModel::to_json`]. SV norms are
+    /// recomputed exactly as training computed them, so a round-tripped
+    /// model votes identically.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<OvoModel> {
+        use anyhow::{anyhow, bail};
+        let dim = j.get("dim").as_usize().ok_or_else(|| anyhow!("ovo model: missing dim"))?;
+        if dim == 0 {
+            bail!("ovo model: dim must be positive");
+        }
+        let num_classes = j
+            .get("num_classes")
+            .as_usize()
+            .ok_or_else(|| anyhow!("ovo model: missing num_classes"))?;
+        let gamma = j.get("gamma").as_f64().unwrap_or(0.0) as f32;
+        let eta = j.get("eta").as_f64().unwrap_or(0.0) as f32;
+        let kind = match j.get("kernel").as_str() {
+            Some("rbf") => KernelKind::Rbf { gamma },
+            Some("poly") => KernelKind::Poly { gamma, eta },
+            Some("linear") => KernelKind::Linear,
+            other => bail!("ovo model: bad kernel {other:?}"),
+        };
+        let present: Vec<u16> = j
+            .get("present")
+            .as_arr()
+            .ok_or_else(|| anyhow!("ovo model: missing present"))?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as u16)
+            .collect();
+        if present.iter().any(|&c| c as usize >= num_classes) {
+            bail!("ovo model: present class out of range");
+        }
+        if present.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("ovo model: present classes must be ascending and distinct");
+        }
+        let class_sv_x: Vec<Vec<f32>> = j
+            .get("class_sv_x")
+            .as_arr()
+            .ok_or_else(|| anyhow!("ovo model: missing class_sv_x"))?
+            .iter()
+            .map(|block| {
+                block
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("ovo model: class_sv_x block not an array"))
+                    .map(|a| a.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect())
+            })
+            .collect::<anyhow::Result<_>>()?;
+        if class_sv_x.len() != num_classes {
+            bail!("ovo model: class_sv_x/num_classes inconsistent");
+        }
+        if class_sv_x.iter().any(|xs: &Vec<f32>| xs.len() % dim != 0) {
+            bail!("ovo model: class block not a multiple of dim");
+        }
+        let class_sv_norms: Vec<Vec<f32>> = class_sv_x
+            .iter()
+            .map(|xs| xs.chunks(dim).map(|r| r.iter().map(|&v| v * v).sum()).collect())
+            .collect();
+        let machines: Vec<OvoMachine> = j
+            .get("machines")
+            .as_arr()
+            .ok_or_else(|| anyhow!("ovo model: missing machines"))?
+            .iter()
+            .map(|mj| -> anyhow::Result<OvoMachine> {
+                let a = mj.get("a").as_usize().ok_or_else(|| anyhow!("machine: missing a"))?;
+                let b = mj.get("b").as_usize().ok_or_else(|| anyhow!("machine: missing b"))?;
+                if a >= b || b >= num_classes {
+                    bail!("machine: bad class pair ({a}, {b})");
+                }
+                let coefs = |key: &str| -> anyhow::Result<Vec<f32>> {
+                    Ok(mj
+                        .get(key)
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("machine: missing {key}"))?
+                        .iter()
+                        .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                        .collect())
+                };
+                let coef_a = coefs("coef_a")?;
+                let coef_b = coefs("coef_b")?;
+                if coef_a.len() != class_sv_norms[a].len()
+                    || coef_b.len() != class_sv_norms[b].len()
+                {
+                    bail!("machine ({a}, {b}): coef length != class block SV count");
+                }
+                Ok(OvoMachine { a: a as u16, b: b as u16, coef_a, coef_b })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Ok(OvoModel {
+            num_classes,
+            dim,
+            kind,
+            class_sv_x,
+            class_sv_norms,
+            machines,
+            present,
+        })
     }
 }
 
-/// Train one-vs-one DC-SVM.
-pub fn train_ovo(
+/// A solved pairwise subproblem: the inputs [`build_ovo_model`] assembles
+/// machines from. Public so tests can build a reference ensemble from
+/// independently solved (e.g. materialized per-pair) α and compare votes
+/// through the exact same machine-construction and fold code.
+pub struct TrainedPair {
+    pub a: u16,
+    pub b: u16,
+    /// Global row indices, ascending.
+    pub members: Vec<usize>,
+    /// ±1 per member (+1 = class `a`).
+    pub labels: Vec<i8>,
+    /// Solved α, one per member (local order).
+    pub alpha: Vec<f64>,
+}
+
+/// Assemble the ensemble: per-class SV blocks (ascending-global union
+/// across pairs) + per-machine coefficients at block positions.
+pub fn build_ovo_model(
+    ds: &MulticlassDataset,
+    kind: KernelKind,
+    pairs: &[TrainedPair],
+    present: &[u16],
+) -> OvoModel {
+    let nc = ds.num_classes;
+    let mut sv_sets: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); nc];
+    for p in pairs {
+        for (t, &g) in p.members.iter().enumerate() {
+            if p.alpha[t] > 0.0 {
+                sv_sets[ds.labels[g] as usize].insert(g);
+            }
+        }
+    }
+    let class_svs: Vec<Vec<usize>> =
+        sv_sets.into_iter().map(|s| s.into_iter().collect()).collect();
+    let class_pos: Vec<std::collections::HashMap<usize, usize>> = class_svs
+        .iter()
+        .map(|svs| svs.iter().enumerate().map(|(t, &g)| (g, t)).collect())
+        .collect();
+    let mut class_sv_x = Vec::with_capacity(nc);
+    let mut class_sv_norms = Vec::with_capacity(nc);
+    for svs in &class_svs {
+        let mut xs = Vec::with_capacity(svs.len() * ds.dim);
+        let mut norms = Vec::with_capacity(svs.len());
+        for &g in svs {
+            let row = ds.row(g);
+            xs.extend_from_slice(row);
+            norms.push(row.iter().map(|&v| v * v).sum());
+        }
+        class_sv_x.push(xs);
+        class_sv_norms.push(norms);
+    }
+    let machines: Vec<OvoMachine> = pairs
+        .iter()
+        .map(|p| {
+            let (a, b) = (p.a as usize, p.b as usize);
+            let mut coef_a = vec![0f32; class_svs[a].len()];
+            let mut coef_b = vec![0f32; class_svs[b].len()];
+            for (t, &g) in p.members.iter().enumerate() {
+                if p.alpha[t] > 0.0 {
+                    let c = ds.labels[g] as usize;
+                    let coef = (p.alpha[t] * p.labels[t] as f64) as f32;
+                    if c == a {
+                        coef_a[class_pos[a][&g]] = coef;
+                    } else {
+                        coef_b[class_pos[b][&g]] = coef;
+                    }
+                }
+            }
+            OvoMachine { a: p.a, b: p.b, coef_a, coef_b }
+        })
+        .collect();
+    OvoModel {
+        num_classes: nc,
+        dim: ds.dim,
+        kind,
+        class_sv_x,
+        class_sv_norms,
+        machines,
+        present: present.to_vec(),
+    }
+}
+
+/// Shared-context OVO training outcome.
+pub struct OvoTrainResult {
+    pub model: OvoModel,
+    /// Pairwise machines trained (= k(k−1)/2 over present classes).
+    pub pair_dispatches: u64,
+    /// Kernel entries computed per pair `(a, b, values_computed)`, in
+    /// training order — the cross-pair-reuse evidence: with segment
+    /// stitching, later pairs copy the columns earlier pairs computed.
+    pub pair_values: Vec<(u16, u16, u64)>,
+    /// Whether `pair_values` deltas are exact: pairs solved concurrently
+    /// interleave on the shared counters, so per-pair attribution is only
+    /// exact at one concurrent pair (`threads == 1`). Totals are always
+    /// exact.
+    pub pair_values_exact: bool,
+    /// Whole-run counters of the shared context.
+    pub value_stats: ValueStats,
+    pub train_s: f64,
+}
+
+/// Train one-vs-one DC-SVM over ONE shared [`KernelContext`].
+///
+/// The context is built over the rows with placeholder labels (every
+/// pair's ±1 labeling rides in through
+/// [`crate::cache::KernelView::with_labels`]) and segment-row stitching
+/// on, so a pair's segment rows are assembled from whatever overlapping
+/// columns earlier pairs left in the cache. Pairs fan out over the worker
+/// pool; concurrent pair solves split the dispatch budget
+/// (`threads / concurrent` each) exactly like the divide phase's cluster
+/// fan-out, so `--threads N` never nests.
+pub fn train_ovo_shared(
     ds: &MulticlassDataset,
     kernel: &dyn BlockKernel,
     cfg: &DcSvmConfig,
-) -> OvoModel {
-    let mut machines = Vec::new();
-    for a in 0..ds.num_classes as u16 {
-        for b in (a + 1)..ds.num_classes as u16 {
-            let (pair, _) = ds.pair_view(a, b);
-            if pair.is_empty() || pair.pos_frac() == 0.0 || pair.pos_frac() == 1.0 {
-                continue;
-            }
+) -> OvoTrainResult {
+    assert_eq!(kernel.kind(), cfg.kind, "kernel backend kind mismatch");
+    let t0 = Instant::now();
+    let n = ds.len();
+    let present = ds.present_classes();
+    // One context for every pair: rows + norms + cache are shared; labels
+    // are per-view overrides, so the dataset's own labels are placeholders.
+    let shared = Dataset::new(ds.x.clone(), vec![1i8; n], ds.dim, "ovo-shared");
+    let ctx = KernelContext::new(&shared, kernel, cfg.cache_bytes)
+        .with_threads(cfg.threads)
+        .with_registry_cap(cfg.registry_cap_bytes)
+        .with_quant_route(cfg.quant_route)
+        .with_segment_stitching(true);
+
+    let mut jobs: Vec<(u16, u16, Vec<usize>, Vec<i8>, DcSvmConfig)> = Vec::new();
+    for (ai, &a) in present.iter().enumerate() {
+        for &b in &present[ai + 1..] {
+            let (members, labels) = pair_members(ds, a, b);
             // Scale the divide schedule to the pair size: tiny pairs don't
             // need multilevel treatment.
             let mut pcfg = cfg.clone();
             while pcfg.levels > 1
-                && pair.len() / pcfg.k_base.pow(pcfg.levels as u32) < 32
+                && members.len() / pcfg.k_base.pow(pcfg.levels as u32) < 32
             {
                 pcfg.levels -= 1;
             }
-            let res = dcsvm::train(&pair, kernel, &pcfg);
-            machines.push((a, b, SvmModel::from_alpha(&pair, &res.alpha, cfg.kind)));
+            jobs.push((a, b, members, labels, pcfg));
         }
     }
-    OvoModel { machines, num_classes: ds.num_classes }
+
+    // Budget split (the PR 5 rule): N concurrent pair solves each get
+    // threads/N dispatch workers — the pair fan-out is the parallel axis,
+    // so a pair's own cluster solves run serially within its budget.
+    let concurrent = cfg.threads.min(jobs.len()).max(1);
+    let per_pair = (cfg.threads / concurrent).max(1);
+    ctx.set_threads(per_pair);
+    let pair_values_exact = concurrent == 1;
+    let ctx_ref = &ctx;
+    let results: Vec<(TrainedPair, u64)> =
+        scope_map(cfg.threads, jobs, |_, (a, b, members, labels, mut pcfg)| {
+            pcfg.threads = per_pair;
+            let v0 = ctx_ref.value_stats();
+            let res = dcsvm::train_restricted(ctx_ref, &members, &labels, &pcfg);
+            let dv = ctx_ref.value_stats().since(&v0).values_computed;
+            (TrainedPair { a, b, members, labels, alpha: res.alpha }, dv)
+        });
+    ctx.set_threads(cfg.threads);
+
+    let mut pairs = Vec::with_capacity(results.len());
+    let mut pair_values = Vec::with_capacity(results.len());
+    for (p, dv) in results {
+        pair_values.push((p.a, p.b, dv));
+        pairs.push(p);
+    }
+    let model = build_ovo_model(ds, cfg.kind, &pairs, &present);
+    OvoTrainResult {
+        model,
+        pair_dispatches: pairs.len() as u64,
+        pair_values,
+        pair_values_exact,
+        value_stats: ctx.value_stats(),
+        train_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Train one-vs-one DC-SVM (ensemble only; [`train_ovo_shared`] exposes
+/// the counters).
+pub fn train_ovo(ds: &MulticlassDataset, kernel: &dyn BlockKernel, cfg: &DcSvmConfig) -> OvoModel {
+    train_ovo_shared(ds, kernel, cfg).model
 }
 
 /// Synthetic multiclass mixture (digit-modes style) for tests/benches.
@@ -176,20 +664,23 @@ mod tests {
             sample_m: 48,
             ..Default::default()
         };
-        let model = train_ovo(&tr, &kern, &cfg);
-        assert_eq!(model.machines.len(), 6); // 4·3/2
-        let acc = model.accuracy(&te, &kern);
+        let res = train_ovo_shared(&tr, &kern, &cfg);
+        assert_eq!(res.model.machines.len(), 6); // 4·3/2
+        assert_eq!(res.pair_dispatches, 6);
+        assert_eq!(res.model.present, vec![0, 1, 2, 3]);
+        let acc = res.model.accuracy(&te, &kern);
         assert!(acc > 0.9, "ovo acc {acc}");
     }
 
     #[test]
-    fn pair_view_extracts_classes() {
+    fn pair_members_extracts_classes() {
         let ds = synthetic_multiclass(3, 90, 2, 2);
-        let (pair, idx) = ds.pair_view(0, 2);
-        assert_eq!(pair.len(), idx.len());
-        for (t, &i) in idx.iter().enumerate() {
+        let (members, labels) = pair_members(&ds, 0, 2);
+        assert_eq!(members.len(), labels.len());
+        assert!(members.windows(2).all(|w| w[0] < w[1]), "members not ascending");
+        for (t, &i) in members.iter().enumerate() {
             let want: i8 = if ds.labels[i] == 0 { 1 } else { -1 };
-            assert_eq!(pair.y[t], want);
+            assert_eq!(labels[t], want);
             assert!(ds.labels[i] == 0 || ds.labels[i] == 2);
         }
     }
@@ -202,5 +693,53 @@ mod tests {
         let cfg = DcSvmConfig { kind, c: 1.0, levels: 1, sample_m: 32, ..Default::default() };
         let model = train_ovo(&ds, &kern, &cfg);
         assert_eq!(model.machines.len(), 1);
+    }
+
+    #[test]
+    fn vote_argmax_breaks_ties_to_smaller_class() {
+        // 2 vs 2 tie between classes 1 and 3 → 1 wins (smaller id).
+        assert_eq!(vote_argmax(&[0, 2, 1, 2], &[0, 1, 2, 3]), 1);
+        // Clear winner.
+        assert_eq!(vote_argmax(&[0, 1, 3, 2], &[0, 1, 2, 3]), 2);
+        // Single class: unconditional.
+        assert_eq!(vote_argmax(&[0, 0, 0], &[2]), 2);
+        // Empty domain.
+        assert_eq!(vote_argmax(&[], &[]), 0);
+        // Non-contiguous present ids: absent classes never win.
+        assert_eq!(vote_argmax(&[5, 0, 0, 0, 0, 5], &[0, 5]), 0);
+    }
+
+    #[test]
+    fn ovo_json_roundtrip_votes_identically() {
+        let tr = synthetic_multiclass(3, 240, 4, 5);
+        let te = synthetic_multiclass(3, 80, 4, 5);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = DcSvmConfig { kind, c: 4.0, levels: 1, sample_m: 32, ..Default::default() };
+        let model = train_ovo(&tr, &kern, &cfg);
+        let text = model.to_json().to_string();
+        let back = OvoModel::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.num_classes, model.num_classes);
+        assert_eq!(back.present, model.present);
+        assert_eq!(back.num_svs(), model.num_svs());
+        let norms: Vec<f32> = (0..te.len())
+            .map(|i| te.row(i).iter().map(|&v| v * v).sum())
+            .collect();
+        assert_eq!(
+            back.predict_with_margins(&te.x, &norms, &kern),
+            model.predict_with_margins(&te.x, &norms, &kern)
+        );
+    }
+
+    #[test]
+    fn ovo_from_json_rejects_inconsistent_shapes() {
+        let tr = synthetic_multiclass(3, 120, 3, 6);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = DcSvmConfig { kind, c: 1.0, levels: 1, sample_m: 24, ..Default::default() };
+        let model = train_ovo(&tr, &kern, &cfg);
+        let good = model.to_json().to_string();
+        let broken = good.replace("\"machines\"", "\"nope\"");
+        assert!(OvoModel::from_json(&crate::util::json::Json::parse(&broken).unwrap()).is_err());
     }
 }

@@ -86,6 +86,7 @@ use anyhow::Result;
 
 use crate::cache::{CacheStats, ShardedRowCache};
 use crate::kernel::{BlockKernel, KernelKind};
+use crate::multiclass::OvoModel;
 use crate::predict::{EarlyModel, SvmModel};
 use crate::util::json::Json;
 use crate::util::threadpool::scope_map;
@@ -115,14 +116,22 @@ pub enum ServingModel {
     /// The paper's early-prediction model (eq. 11): route to a cluster,
     /// evaluate only that cluster's local model.
     Early(EarlyModel),
+    /// One-vs-one multiclass ensemble: one decision component per class
+    /// (the per-class SV block), every machine's vote folded from the same
+    /// cached class rows ([`OvoModel::machine_decisions`]).
+    Ovo(OvoModel),
 }
 
 impl ServingModel {
-    /// Load from model-file JSON. Early-model files carry a `"router"`
-    /// object ([`EarlyModel::to_json`]); everything else parses as a plain
-    /// [`SvmModel`] (including pre-`"type"`-field files).
+    /// Load from model-file JSON. OVO ensembles carry a `"machines"`
+    /// array ([`OvoModel::to_json`]) — checked first; early-model files
+    /// carry a `"router"` object ([`EarlyModel::to_json`]); everything
+    /// else parses as a plain [`SvmModel`] (including pre-`"type"`-field
+    /// files).
     pub fn from_json(j: &Json) -> Result<ServingModel> {
-        if j.get("router").as_obj().is_some() {
+        if j.get("machines").as_arr().is_some() {
+            Ok(ServingModel::Ovo(OvoModel::from_json(j)?))
+        } else if j.get("router").as_obj().is_some() {
             Ok(ServingModel::Early(EarlyModel::from_json(j)?))
         } else {
             Ok(ServingModel::Exact(SvmModel::from_json(j)?))
@@ -134,6 +143,7 @@ impl ServingModel {
         match self {
             ServingModel::Exact(m) => m.dim,
             ServingModel::Early(em) => em.dim(),
+            ServingModel::Ovo(m) => m.dim,
         }
     }
 
@@ -142,41 +152,49 @@ impl ServingModel {
         match self {
             ServingModel::Exact(m) => m.kind,
             ServingModel::Early(em) => em.kind(),
+            ServingModel::Ovo(m) => m.kind,
         }
     }
 
-    /// Total support vectors (across locals for an early model).
+    /// Total support vectors (across locals for an early model, across
+    /// class blocks for an OVO ensemble).
     pub fn num_svs(&self) -> usize {
         match self {
             ServingModel::Exact(m) => m.num_svs(),
             ServingModel::Early(em) => em.total_svs(),
+            ServingModel::Ovo(m) => m.num_svs(),
         }
     }
 
-    /// Short human-readable tag for logs ("exact" / "early(k=16)").
+    /// Short human-readable tag for logs ("exact" / "early(k=16)" /
+    /// "ovo(classes=7, machines=21)").
     pub fn describe(&self) -> String {
         match self {
             ServingModel::Exact(_) => "exact".to_string(),
             ServingModel::Early(em) => format!("early(k={})", em.locals.len()),
+            ServingModel::Ovo(m) => {
+                format!("ovo(classes={}, machines={})", m.present.len(), m.machines.len())
+            }
         }
     }
 
     /// Enable (or disable) int8-quantized routing for an early model
     /// (`--quant-route`). Routing is the only approximation-tolerant stage
     /// of the serving path, so this never touches decision evaluation: an
-    /// exact model has no router and the call is a no-op. Must be set
-    /// before the model is moved into a [`ServingContext`].
+    /// exact or OVO model has no router and the call is a no-op. Must be
+    /// set before the model is moved into a [`ServingContext`].
     pub fn set_quant_route(&mut self, on: bool) {
         match self {
-            ServingModel::Exact(_) => {}
+            ServingModel::Exact(_) | ServingModel::Ovo(_) => {}
             ServingModel::Early(em) => em.set_quant_route(on),
         }
     }
 
-    /// Whether quantized routing is armed (always false for exact models).
+    /// Whether quantized routing is armed (always false for exact/OVO
+    /// models).
     pub fn quant_route(&self) -> bool {
         match self {
-            ServingModel::Exact(_) => false,
+            ServingModel::Exact(_) | ServingModel::Ovo(_) => false,
             ServingModel::Early(em) => em.quant_route(),
         }
     }
@@ -208,6 +226,14 @@ pub struct BatchStats {
     /// A fully warm early-model batch — and every exact-model batch —
     /// dispatches none.
     pub routing_dispatches: u64,
+    /// OVO pairwise machines evaluated this batch (= `machines.len()` for
+    /// a non-empty multiclass batch; 0 for binary models). Each machine's
+    /// decision folds the batch's cached per-class kernel rows — this
+    /// counts the fan-out, not extra kernel work.
+    pub pair_dispatches: u64,
+    /// OVO pairwise votes cast this batch (= rows × machines; 0 for
+    /// binary models).
+    pub votes: u64,
 }
 
 impl BatchStats {
@@ -241,6 +267,8 @@ impl BatchStats {
             ("routing_hits", Json::from(self.routing_hits as f64)),
             ("routing_misses", Json::from(self.routing_misses as f64)),
             ("routing_dispatches", Json::from(self.routing_dispatches as f64)),
+            ("pair_dispatches", Json::from(self.pair_dispatches as f64)),
+            ("votes", Json::from(self.votes as f64)),
         ])
     }
 
@@ -256,6 +284,8 @@ impl BatchStats {
         self.routing_hits += other.routing_hits;
         self.routing_misses += other.routing_misses;
         self.routing_dispatches += other.routing_dispatches;
+        self.pair_dispatches += other.pair_dispatches;
+        self.votes += other.votes;
     }
 }
 
@@ -336,6 +366,10 @@ impl ServingContext {
         let comp_svs: Vec<usize> = match &model {
             ServingModel::Exact(m) => vec![m.num_svs()],
             ServingModel::Early(em) => em.locals.iter().map(|m| m.num_svs()).collect(),
+            // One decision component per class: a query's row against a
+            // class block is computed once and folded by EVERY machine
+            // touching that class.
+            ServingModel::Ovo(m) => m.class_sv_norms.iter().map(Vec::len).collect(),
         };
         // Per-query entry bytes of a component: one [tag | query | K-block]
         // entry per SV block. Early models also carry a routing cache
@@ -344,7 +378,7 @@ impl ServingContext {
         let blocks = |svs: usize| svs.div_ceil(sv_block).max(1);
         let comp_len = |svs: usize| blocks(svs) * (dim + 1) + svs;
         let route_len = match &model {
-            ServingModel::Exact(_) => None,
+            ServingModel::Exact(_) | ServingModel::Ovo(_) => None,
             ServingModel::Early(_) => Some(dim + 1),
         };
         let total_len: usize = (comp_svs.iter().map(|&s| comp_len(s)).sum::<usize>()
@@ -426,13 +460,13 @@ impl ServingContext {
             // verify. The fresh cache built above is dropped — budgets
             // follow the adopted cache.
             fresh.caches[c] = Arc::clone(&prev.caches[c]);
-            let (new_sv, _, new_coef) = component_of(&fresh.model, c);
-            let (old_sv, _, old_coef) = component_of(&prev.model, c);
+            let (new_sv, new_norms) = component_svs_of(&fresh.model, c);
+            let (old_sv, old_norms) = component_svs_of(&prev.model, c);
             let b_count = fresh.block_tags[c].len();
             for b in 0..b_count {
-                let b_lo = (b * fresh.sv_block).min(new_coef.len());
-                let b_hi = ((b + 1) * fresh.sv_block).min(new_coef.len());
-                let o_hi = ((b + 1) * fresh.sv_block).min(old_coef.len());
+                let b_lo = (b * fresh.sv_block).min(new_norms.len());
+                let b_hi = ((b + 1) * fresh.sv_block).min(new_norms.len());
+                let o_hi = ((b + 1) * fresh.sv_block).min(old_norms.len());
                 let kept = b < prev.block_tags[c].len()
                     && b_hi == o_hi
                     && bits_eq(&new_sv[b_lo * dim..b_hi * dim], &old_sv[b_lo * dim..b_hi * dim]);
@@ -495,14 +529,30 @@ impl ServingContext {
     /// Decision values for a row-major query batch (`x.len() == n · dim`).
     /// Queries are routed (early models), micro-batched across `workers`
     /// threads, and answered through the persistent serving cache; outputs
-    /// are in input order for any worker count.
+    /// are in input order for any worker count. For an OVO model the
+    /// decision value is the vote *margin*; [`Self::decide_full`] also
+    /// returns the voted labels.
     pub fn decide(&self, x: &[f32], workers: usize) -> (Vec<f32>, BatchStats) {
+        let (dv, _, stats) = self.decide_full(x, workers);
+        (dv, stats)
+    }
+
+    /// [`Self::decide`] plus the per-query class labels: `Some` for an OVO
+    /// model (the winning class of each query's pairwise vote), `None` for
+    /// binary models, whose label is the sign of the decision value.
+    pub fn decide_full(
+        &self,
+        x: &[f32],
+        workers: usize,
+    ) -> (Vec<f32>, Option<Vec<u16>>, BatchStats) {
         let t0 = std::time::Instant::now();
         assert_eq!(x.len() % self.dim.max(1), 0, "query batch/dim mismatch");
         let n = x.len() / self.dim.max(1);
+        let is_ovo = matches!(self.model, ServingModel::Ovo(_));
         if n == 0 {
             return (
                 Vec::new(),
+                is_ovo.then(Vec::new),
                 BatchStats { latency_s: t0.elapsed().as_secs_f64(), ..Default::default() },
             );
         }
@@ -526,23 +576,40 @@ impl ServingContext {
         // full budget — its single dispatch runs before the split.
         let fill_threads = (budget / jobs.len().max(1)).max(1);
         let assign_ref = &assign;
-        let parts: Vec<(Vec<f32>, RangeStats)> = scope_map(workers, jobs, |_, (lo, hi)| {
-            self.decide_range(x, assign_ref, lo, hi, fill_threads)
-        });
+        let parts: Vec<(Vec<f32>, Option<Vec<u16>>, RangeStats)> =
+            scope_map(workers, jobs, |_, (lo, hi)| match &self.model {
+                ServingModel::Ovo(m) => {
+                    let (dv, labels, rs) = self.decide_range_ovo(m, x, lo, hi, fill_threads);
+                    (dv, Some(labels), rs)
+                }
+                _ => {
+                    let (dv, rs) = self.decide_range(x, assign_ref, lo, hi, fill_threads);
+                    (dv, None, rs)
+                }
+            });
 
         // Counters are threaded per worker (not derived from global cache
         // deltas), so concurrent decide() calls on the shared context each
         // report only their own batch's hits/misses.
         let mut dv = Vec::with_capacity(n);
+        let mut labels = is_ovo.then(|| Vec::with_capacity(n));
         let mut agg = RangeStats::default();
-        for (part, rs) in parts {
+        for (part, part_labels, rs) in parts {
             dv.extend_from_slice(&part);
+            if let (Some(all), Some(part)) = (labels.as_mut(), part_labels) {
+                all.extend_from_slice(&part);
+            }
             agg.computed += rs.computed;
             agg.hits += rs.hits;
             agg.misses += rs.misses;
         }
+        let machines = match &self.model {
+            ServingModel::Ovo(m) => m.machines.len() as u64,
+            _ => 0,
+        };
         (
             dv,
+            labels,
             BatchStats {
                 rows: n,
                 latency_s: t0.elapsed().as_secs_f64(),
@@ -552,6 +619,8 @@ impl ServingContext {
                 routing_hits: route.hits,
                 routing_misses: route.misses,
                 routing_dispatches: route.dispatches,
+                pair_dispatches: machines,
+                votes: machines * n as u64,
             },
         )
     }
@@ -566,7 +635,11 @@ impl ServingContext {
     /// transport.
     fn route(&self, x: &[f32], n: usize, threads: usize) -> (Vec<u16>, RouteStats) {
         let em = match &self.model {
-            ServingModel::Exact(_) => return (vec![0u16; n], RouteStats::default()),
+            // Exact models have one component; OVO queries visit EVERY
+            // class component, so neither routes.
+            ServingModel::Exact(_) | ServingModel::Ovo(_) => {
+                return (vec![0u16; n], RouteStats::default())
+            }
             ServingModel::Early(em) => em,
         };
         let dim = self.dim;
@@ -790,6 +863,130 @@ impl ServingContext {
         }
         (dv, rs)
     }
+
+    /// OVO twin of [`Self::decide_range`]: assemble each query's kernel
+    /// row against EVERY class block from the per-(class, block) cache —
+    /// probe / dedupe / one `block_par` fill per block, identical entry
+    /// layout and discipline — then fold all machines' decisions and the
+    /// vote from the assembled rows ([`OvoModel::machine_decisions`], the
+    /// same fold offline prediction uses, so labels and margins are
+    /// bit-identical to [`OvoModel::predict_with_margins`]). The rows are
+    /// per-class, not per-machine: a row computed for one pairwise vote is
+    /// reused by every other machine touching that class, this batch and
+    /// every warm batch after it.
+    fn decide_range_ovo(
+        &self,
+        m: &OvoModel,
+        x: &[f32],
+        lo: usize,
+        hi: usize,
+        fill_threads: usize,
+    ) -> (Vec<f32>, Vec<u16>, RangeStats) {
+        let dim = self.dim;
+        let nq = hi - lo;
+        let mut rs = RangeStats::default();
+        let query = |t: usize| &x[(lo + t) * dim..(lo + t + 1) * dim];
+        let fps: Vec<u64> = (0..nq).map(|t| fingerprint(query(t))).collect();
+        // Contiguous per-class rows (row t of class c at [t·svs, (t+1)·svs)),
+        // scattered from cache entries block by block.
+        let mut class_rows: Vec<Vec<f32>> = (0..m.num_classes)
+            .map(|c| vec![0f32; nq * m.class_sv_norms[c].len()])
+            .collect();
+        for c in 0..m.num_classes {
+            let sv_x = &m.class_sv_x[c];
+            let sv_norms = &m.class_sv_norms[c];
+            let n_svs = sv_norms.len();
+            let rows_c = &mut class_rows[c];
+            let cache = &self.caches[c];
+            for b in 0..self.component_blocks(n_svs) {
+                let b_lo = (b * self.sv_block).min(n_svs);
+                let b_hi = ((b + 1) * self.sv_block).min(n_svs);
+                let blen = b_hi - b_lo;
+                let tag_f = self.block_tags[c][b] as f32;
+
+                let mut missing: Vec<usize> = Vec::new();
+                for t in 0..nq {
+                    let q = query(t);
+                    if let Some(entry) = cache.get(block_key(fps[t], b)) {
+                        if entry[0] == tag_f && &entry[1..1 + dim] == q {
+                            rs.hits += 1;
+                            rows_c[t * n_svs + b_lo..t * n_svs + b_hi]
+                                .copy_from_slice(&entry[1 + dim..]);
+                            continue;
+                        }
+                        // Stale tag or fingerprint collision: recompute.
+                    }
+                    rs.misses += 1;
+                    missing.push(t);
+                }
+
+                if !missing.is_empty() {
+                    let mut first: HashMap<u64, usize> = HashMap::new(); // fp -> uniq slot
+                    let mut uniq: Vec<usize> = Vec::new();
+                    let mut rep: Vec<usize> = Vec::with_capacity(missing.len());
+                    for &t in &missing {
+                        let fp = fps[t];
+                        match first.get(&fp).copied() {
+                            Some(u) if query(uniq[u]) == query(t) => rep.push(u),
+                            _ => {
+                                first.insert(fp, uniq.len());
+                                uniq.push(t);
+                                rep.push(uniq.len() - 1);
+                            }
+                        }
+                    }
+                    rs.computed += uniq.len() as u64;
+                    let mut xq = Vec::with_capacity(uniq.len() * dim);
+                    let mut qn = Vec::with_capacity(uniq.len());
+                    for &t in &uniq {
+                        let q = query(t);
+                        xq.extend_from_slice(q);
+                        qn.push(q.iter().map(|&v| v * v).sum());
+                    }
+                    let mut kblock = vec![0f32; uniq.len() * blen];
+                    if blen > 0 {
+                        self.kernel.block_par(
+                            &xq,
+                            &qn,
+                            &sv_x[b_lo * dim..b_hi * dim],
+                            &sv_norms[b_lo..b_hi],
+                            dim,
+                            fill_threads,
+                            &mut kblock,
+                        );
+                    }
+                    for (s, &t) in uniq.iter().enumerate() {
+                        let q = query(t);
+                        let mut entry = Vec::with_capacity(1 + dim + blen);
+                        entry.push(tag_f);
+                        entry.extend_from_slice(q);
+                        entry.extend_from_slice(&kblock[s * blen..(s + 1) * blen]);
+                        cache.put_replace(block_key(fps[t], b), entry.into());
+                    }
+                    for (&t, &u) in missing.iter().zip(&rep) {
+                        rows_c[t * n_svs + b_lo..t * n_svs + b_hi]
+                            .copy_from_slice(&kblock[u * blen..(u + 1) * blen]);
+                    }
+                }
+            }
+        }
+
+        let mut dv = vec![0f32; nq];
+        let mut labels = vec![0u16; nq];
+        for t in 0..nq {
+            let rows: Vec<&[f32]> = (0..m.num_classes)
+                .map(|c| {
+                    let svs = m.class_sv_norms[c].len();
+                    &class_rows[c][t * svs..(t + 1) * svs]
+                })
+                .collect();
+            let decisions = m.machine_decisions(&rows);
+            let (label, margin) = m.vote(&decisions);
+            labels[t] = label;
+            dv[t] = margin;
+        }
+        (dv, labels, rs)
+    }
 }
 
 /// Per-micro-batch counters, threaded through `decide_range` so a batch's
@@ -816,8 +1013,23 @@ fn component_of(model: &ServingModel, c: usize) -> (&[f32], &[f32], &[f32]) {
     let m = match model {
         ServingModel::Exact(m) => m,
         ServingModel::Early(em) => &em.locals[c],
+        // OVO machines weight a class block pairwise; there is no single
+        // per-component coefficient vector. OVO decisions go through
+        // `decide_range_ovo`, never here.
+        ServingModel::Ovo(_) => unreachable!("OVO components carry no single coef vector"),
     };
     (&m.sv_x, &m.sv_norms, &m.coef)
+}
+
+/// SV rows / norms of decision component `c` — the coefficient-free subset
+/// of [`component_of`] that is total over every model family (adoption
+/// compares SV bits and never needs coefficients).
+fn component_svs_of(model: &ServingModel, c: usize) -> (&[f32], &[f32]) {
+    match model {
+        ServingModel::Exact(m) => (&m.sv_x, &m.sv_norms),
+        ServingModel::Early(em) => (&em.locals[c].sv_x, &em.locals[c].sv_norms),
+        ServingModel::Ovo(m) => (&m.class_sv_x[c], &m.class_sv_norms[c]),
+    }
 }
 
 /// Bit-level equality of two f32 slices (the adoption criterion: cached
@@ -1088,6 +1300,8 @@ mod tests {
             routing_hits: 7,
             routing_misses: 3,
             routing_dispatches: 1,
+            pair_dispatches: 6,
+            votes: 60,
         };
         let j = s.to_json(3);
         assert_eq!(j.get("batch").as_usize(), Some(3));
@@ -1098,6 +1312,8 @@ mod tests {
         assert_eq!(j.get("routing_hits").as_f64(), Some(7.0));
         assert_eq!(j.get("routing_misses").as_f64(), Some(3.0));
         assert_eq!(j.get("routing_dispatches").as_f64(), Some(1.0));
+        assert_eq!(j.get("pair_dispatches").as_f64(), Some(6.0));
+        assert_eq!(j.get("votes").as_f64(), Some(60.0));
         // Emits as a single parseable line.
         let line = j.to_string();
         assert!(!line.contains('\n'));
@@ -1115,6 +1331,8 @@ mod tests {
             routing_hits: 2,
             routing_misses: 0,
             routing_dispatches: 0,
+            pair_dispatches: 3,
+            votes: 6,
         };
         let b = BatchStats {
             rows: 3,
@@ -1125,6 +1343,8 @@ mod tests {
             routing_hits: 0,
             routing_misses: 3,
             routing_dispatches: 1,
+            pair_dispatches: 3,
+            votes: 9,
         };
         a.merge(&b);
         assert_eq!(a.rows, 5);
@@ -1135,6 +1355,8 @@ mod tests {
         assert_eq!(a.routing_hits, 2);
         assert_eq!(a.routing_misses, 3);
         assert_eq!(a.routing_dispatches, 1);
+        assert_eq!(a.pair_dispatches, 6);
+        assert_eq!(a.votes, 15);
     }
 
     /// Hand-built exact model over `svs` explicit SV rows (dim 2): swap
@@ -1314,6 +1536,98 @@ mod tests {
         let (_, s3) = ctx.decide(all, 2);
         assert_eq!(s3.routing_dispatches, 0);
         assert_eq!(s3.routing_hits, te.len() as u64);
+        assert_eq!(s3.rows_computed, 0);
+    }
+
+    /// Tentpole (multiclass serving): an OVO ensemble loads from its JSON,
+    /// serves labels + margins bit-identical to offline prediction, and
+    /// its kernel rows are per CLASS, not per machine — one row per
+    /// (query, class) feeds every pairwise vote touching that class, and a
+    /// warm replay computes nothing.
+    #[test]
+    fn ovo_serves_votes_like_offline_and_shares_rows_across_machines() {
+        use crate::multiclass::{synthetic_multiclass, train_ovo};
+        let tr = synthetic_multiclass(4, 400, 5, 21);
+        let te = synthetic_multiclass(4, 60, 5, 21);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = crate::dcsvm::DcSvmConfig {
+            kind,
+            c: 4.0,
+            levels: 1,
+            sample_m: 32,
+            ..Default::default()
+        };
+        let model = train_ovo(&tr, &kern, &cfg);
+        let norms: Vec<f32> = (0..te.len())
+            .map(|i| te.row(i).iter().map(|&v| v * v).sum())
+            .collect();
+        let want = model.predict_with_margins(&te.x, &norms, &kern);
+        let machines = model.machines.len() as u64;
+
+        // Roundtrip through JSON, as the CLI does: the "machines" key
+        // discriminates OVO files.
+        let text = model.to_json().to_string();
+        let back = ServingModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(matches!(back, ServingModel::Ovo(_)));
+        assert_eq!(back.num_svs(), model.num_svs());
+        let ctx = serve_ctx(back);
+        let (dv, labels, s1) = ctx.decide_full(&te.x, 2);
+        let labels = labels.expect("ovo serving must return labels");
+        for (t, &(l, m)) in want.iter().enumerate() {
+            assert_eq!(labels[t], l, "label mismatch at {t}");
+            assert_eq!(dv[t], m, "margin mismatch at {t}");
+        }
+        // 4 classes, each one SV block: a cold query computes 4 class
+        // rows, not 6 machines × 2 half-rows — counter-visible reuse.
+        assert_eq!(s1.rows_computed, (te.len() * 4) as u64);
+        assert_eq!(s1.pair_dispatches, machines);
+        assert_eq!(s1.votes, machines * te.len() as u64);
+        assert_eq!(s1.routing_dispatches, 0, "ovo never routes");
+        // Warm replay: zero kernel work, bit-identical votes.
+        let (dv2, labels2, s2) = ctx.decide_full(&te.x, 2);
+        assert_eq!(dv, dv2);
+        assert_eq!(labels, labels2.unwrap());
+        assert_eq!(s2.rows_computed, 0);
+        assert_eq!(s2.cache_hits, (te.len() * 4) as u64);
+        // decide() is the same evaluation minus the labels.
+        let (dv3, s3) = ctx.decide(&te.x, 3);
+        assert_eq!(dv, dv3);
+        assert_eq!(s3.rows_computed, 0);
+    }
+
+    /// OVO decisions are bit-identical for every SV-block size and worker
+    /// count (the class rows are assembled from block entries, the fold is
+    /// one pass over the assembled row).
+    #[test]
+    fn ovo_block_size_and_workers_do_not_change_votes() {
+        use crate::multiclass::{synthetic_multiclass, train_ovo};
+        let tr = synthetic_multiclass(3, 240, 4, 22);
+        let te = synthetic_multiclass(3, 40, 4, 22);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = crate::dcsvm::DcSvmConfig {
+            kind,
+            c: 4.0,
+            levels: 1,
+            sample_m: 32,
+            ..Default::default()
+        };
+        let model = train_ovo(&tr, &kern, &cfg);
+        let single = serve_ctx(ServingModel::Ovo(model.clone()));
+        let blocked = ServingContext::with_block_size(
+            ServingModel::Ovo(model),
+            Box::new(NativeKernel::new(kind)),
+            8 << 20,
+            3,
+        );
+        let (dv1, l1, _) = single.decide_full(&te.x, 1);
+        let (dv2, l2, s2) = blocked.decide_full(&te.x, 4);
+        assert_eq!(dv1, dv2, "block size changed vote margins");
+        assert_eq!(l1.unwrap(), l2.unwrap(), "block size changed labels");
+        assert!(s2.rows_computed > (te.len() * 3) as u64, "blocks must multiply fills");
+        let (dv3, _, s3) = blocked.decide_full(&te.x, 1);
+        assert_eq!(dv2, dv3);
         assert_eq!(s3.rows_computed, 0);
     }
 }

@@ -309,11 +309,21 @@ impl ServeCore {
     /// context snapshot is taken once per batch: a swap landing mid-batch
     /// never mixes two models' decisions.
     pub fn decide_tracked(&self, x: &[f32]) -> (Vec<f32>, BatchStats, usize) {
+        let (dv, _, stats, index) = self.decide_tracked_full(x);
+        (dv, stats, index)
+    }
+
+    /// [`Self::decide_tracked`] plus the voted class labels (`Some` iff an
+    /// OVO model is being served — [`ServingContext::decide_full`]).
+    pub fn decide_tracked_full(
+        &self,
+        x: &[f32],
+    ) -> (Vec<f32>, Option<Vec<u16>>, BatchStats, usize) {
         let ctx = self.ctx();
-        let (dv, stats) = ctx.decide(x, self.workers);
+        let (dv, labels, stats) = ctx.decide_full(x, self.workers);
         let index = self.batches.fetch_add(1, Ordering::Relaxed);
         self.totals.lock().unwrap().merge(&stats);
-        (dv, stats, index)
+        (dv, labels, stats, index)
     }
 
     /// Request a graceful server stop: the socket accept loop stops taking
@@ -351,6 +361,8 @@ impl ServeCore {
             ("routing_hits", Json::from(totals.routing_hits as f64)),
             ("routing_misses", Json::from(totals.routing_misses as f64)),
             ("routing_dispatches", Json::from(totals.routing_dispatches as f64)),
+            ("pair_dispatches", Json::from(totals.pair_dispatches as f64)),
+            ("votes", Json::from(totals.votes as f64)),
             ("workers", Json::from(self.workers)),
         ])
     }
@@ -470,7 +482,7 @@ pub fn handle_request(core: &ServeCore, line: &str) -> RequestOutcome {
             x.push(f as f32);
         }
     }
-    let (dv, stats, index) = core.decide_tracked(&x);
+    let (dv, labels, stats, index) = core.decide_tracked_full(&x);
     let predictions = Json::Arr(
         dv.iter().map(|&d| Json::from(if d >= 0.0 { 1.0 } else { -1.0 })).collect(),
     );
@@ -483,15 +495,19 @@ pub fn handle_request(core: &ServeCore, line: &str) -> RequestOutcome {
             .map(|&d| if d.is_finite() { Json::from(d as f64) } else { Json::Null })
             .collect(),
     );
+    let mut fields = vec![("predictions", predictions), ("decisions", decisions)];
+    // Multiclass (OVO) models also report the voted class label per row;
+    // their "decisions" carry the vote margins. Binary responses omit the
+    // key entirely (PROTOCOL.md).
+    if let Some(labels) = labels {
+        fields.push((
+            "labels",
+            Json::Arr(labels.iter().map(|&l| Json::from(l as usize)).collect()),
+        ));
+    }
+    fields.push(("stats", stats.to_json(index)));
     RequestOutcome {
-        response: with_id(
-            id,
-            vec![
-                ("predictions", predictions),
-                ("decisions", decisions),
-                ("stats", stats.to_json(index)),
-            ],
-        ),
+        response: with_id(id, fields),
         stats: Some(stats),
         shutdown: false,
     }
@@ -726,10 +742,20 @@ pub fn run_stdio_io<R: BufRead, W: Write, E: Write>(
             Some(core.ctx().dim()),
             "stdin".into(),
         )?;
-        let (dv, stats, index) = core.decide_tracked(&ds.x);
+        let (dv, labels, stats, index) = core.decide_tracked_full(&ds.x);
         let mut text = String::new();
-        for &d in &dv {
-            text.push_str(&format!("{} {}\n", if d >= 0.0 { "+1" } else { "-1" }, d));
+        match &labels {
+            // OVO: one "label margin" line per row (labels are class ids).
+            Some(labels) => {
+                for (&l, &d) in labels.iter().zip(&dv) {
+                    text.push_str(&format!("{l} {d}\n"));
+                }
+            }
+            None => {
+                for &d in &dv {
+                    text.push_str(&format!("{} {}\n", if d >= 0.0 { "+1" } else { "-1" }, d));
+                }
+            }
         }
         if let Err(e) = out.write_all(text.as_bytes()).and_then(|()| out.flush()) {
             if e.kind() == std::io::ErrorKind::BrokenPipe {
@@ -893,6 +919,89 @@ mod tests {
         assert!(preds.iter().all(|p| matches!(p.as_f64(), Some(v) if v.abs() == 1.0)));
         assert_eq!(out.response.get("stats").get("rows").as_usize(), Some(2));
         assert!(out.stats.is_some());
+        // Binary responses never carry a labels key (PROTOCOL.md).
+        assert_eq!(out.response.get("labels"), &Json::Null);
+    }
+
+    /// A core serving a small OVO ensemble (multiclass request tests).
+    fn ovo_core() -> (ServeCore, crate::multiclass::OvoModel, crate::multiclass::MulticlassDataset)
+    {
+        use crate::multiclass::{synthetic_multiclass, train_ovo};
+        let tr = synthetic_multiclass(3, 180, 3, 4);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let kern = NativeKernel::new(kind);
+        let cfg = crate::dcsvm::DcSvmConfig {
+            kind,
+            c: 4.0,
+            levels: 1,
+            sample_m: 24,
+            ..Default::default()
+        };
+        let model = train_ovo(&tr, &kern, &cfg);
+        let ctx = ServingContext::new(
+            ServingModel::Ovo(model.clone()),
+            Box::new(NativeKernel::new(kind)),
+            1 << 20,
+        );
+        (ServeCore::new(ctx, 1), model, tr)
+    }
+
+    #[test]
+    fn ovo_requests_return_voted_labels() {
+        let (core, model, tr) = ovo_core();
+        let kern = NativeKernel::new(model.kind);
+        let nq = 3usize;
+        let dim = core.ctx().dim();
+        let norms: Vec<f32> = (0..nq)
+            .map(|i| tr.row(i).iter().map(|&v| v * v).sum())
+            .collect();
+        let want = model.predict_with_margins(&tr.x[..nq * dim], &norms, &kern);
+        let rows: Vec<Vec<f32>> =
+            (0..nq).map(|i| tr.x[i * dim..(i + 1) * dim].to_vec()).collect();
+        let out = handle_request(&core, &decide_request(None, &rows).to_string());
+        assert_eq!(out.response.get("error"), &Json::Null, "{}", out.response);
+        let labels = out.response.get("labels").as_arr().unwrap();
+        let decisions = out.response.get("decisions").as_arr().unwrap();
+        assert_eq!(labels.len(), nq);
+        for (t, &(l, m)) in want.iter().enumerate() {
+            assert_eq!(labels[t].as_usize(), Some(l as usize), "label mismatch at {t}");
+            assert_eq!(decisions[t].as_f64().map(|v| v as f32), Some(m));
+        }
+        let stats = out.response.get("stats");
+        assert_eq!(
+            stats.get("pair_dispatches").as_f64(),
+            Some(model.machines.len() as f64)
+        );
+        assert_eq!(stats.get("votes").as_f64(), Some((model.machines.len() * nq) as f64));
+        // The lifetime summary aggregates the new counters too.
+        let total = core.summary_json();
+        assert_eq!(total.get("pair_dispatches").as_f64(), Some(model.machines.len() as f64));
+        assert!(total.get("votes").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ovo_stdio_lines_are_label_then_margin() {
+        let (core, model, tr) = ovo_core();
+        let kern = NativeKernel::new(model.kind);
+        let dim = core.ctx().dim();
+        let nq = 4usize;
+        let norms: Vec<f32> = (0..nq)
+            .map(|i| tr.row(i).iter().map(|&v| v * v).sum())
+            .collect();
+        let want = model.predict_with_margins(&tr.x[..nq * dim], &norms, &kern);
+        let text =
+            crate::data::libsvm::format_libsvm_multiclass(&tr.x[..nq * dim], &tr.labels[..nq], dim);
+        let mut out = Vec::new();
+        let mut err = Vec::new();
+        run_stdio_io(&core, 8, std::io::Cursor::new(text), &mut out, &mut err).unwrap();
+        let out = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), nq, "{out}");
+        for (t, line) in lines.iter().enumerate() {
+            let (label, margin) = line.split_once(' ').unwrap();
+            assert_eq!(label.parse::<u16>().unwrap(), want[t].0, "line {t}: {line}");
+            assert_eq!(margin.parse::<f32>().unwrap(), want[t].1, "line {t}: {line}");
+        }
     }
 
     #[test]

@@ -530,6 +530,129 @@ fn train_saves_and_serves_early_model() {
     std::fs::remove_file(&model).ok();
 }
 
+/// ISSUE satellite: strict `--algo` parsing — `ovo` accepted, junk
+/// rejected with a named error, missing values rejected, usage names ovo,
+/// and the `mc<K>` dataset pattern is validated.
+#[test]
+fn train_algo_flag_is_strict_and_knows_ovo() {
+    let (ok, text) = run(&["train", "--algo", "bogus"]);
+    assert!(!ok);
+    assert!(text.contains("unknown algo"), "{text}");
+    let (ok, text) = run(&["train", "--algo"]);
+    assert!(!ok);
+    assert!(text.contains("needs a value"), "{text}");
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    assert!(text.contains("ovo"), "usage must name --algo ovo: {text}");
+    // mc<K> needs at least 2 classes.
+    let (ok, text) =
+        run(&["train", "--algo", "ovo", "--dataset", "mc1", "--backend", "native"]);
+    assert!(!ok);
+    assert!(text.contains("mc<K>"), "{text}");
+}
+
+/// ISSUE tentpole (CLI leg): `train --algo ovo --save-model` writes ONE
+/// ensemble JSON that `dcsvm serve` loads and serves — stdout lines are
+/// `label margin`, the model describes itself as ovo, and a replayed
+/// batch is served entirely from the cross-request cache.
+#[test]
+fn ovo_train_save_serve_roundtrip() {
+    use std::io::Write;
+    use std::process::{Command, Stdio};
+
+    let dir = std::env::temp_dir().join("dcsvm_cli_ovo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("ovo_model.json");
+    let (ok, text) = run(&[
+        "train",
+        "--algo",
+        "ovo",
+        "--dataset",
+        "mc4",
+        "--n-train",
+        "320",
+        "--n-test",
+        "80",
+        "--gamma",
+        "2",
+        "--c",
+        "4",
+        "--levels",
+        "1",
+        "--sample-m",
+        "32",
+        "--backend",
+        "native",
+        "--save-model",
+        model.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("machines=6"), "4 classes → 6 machines: {text}");
+    assert!(text.contains("pair_dispatches=6"), "{text}");
+    assert!(text.contains("model saved"), "{text}");
+
+    // Multiclass query rows (same dim-4 space as mc4), sent TWICE.
+    let qs = dcsvm::multiclass::synthetic_multiclass(4, 12, 4, 9);
+    let batch =
+        dcsvm::data::libsvm::format_libsvm_multiclass(&qs.x, &qs.labels, qs.dim);
+    let n = qs.len();
+    let mut child = Command::new(bin())
+        .args([
+            "serve",
+            "--model",
+            model.to_str().unwrap(),
+            "--batch",
+            &n.to_string(),
+            "--workers",
+            "2",
+            "--backend",
+            "native",
+        ])
+        .env("DCSVM_LOG", "warn")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn dcsvm serve (ovo)");
+    {
+        let mut stdin = child.stdin.take().unwrap();
+        stdin.write_all(batch.as_bytes()).unwrap();
+        stdin.write_all(batch.as_bytes()).unwrap();
+    } // dropped → EOF
+    let out = child.wait_with_output().unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "{stderr}");
+    assert!(stderr.contains("ovo(classes=4, machines=6)"), "{stderr}");
+
+    // 2n `label margin` lines, labels valid class ids, batches identical.
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = stdout.lines().collect();
+    assert_eq!(lines.len(), 2 * n, "{stdout}");
+    for line in &lines {
+        let (l, m) = line.split_once(' ').expect("label margin");
+        let label: u16 = l.parse().expect("class id label");
+        assert!(label < 4, "label {label} out of range: {line}");
+        let margin: f32 = m.parse().expect("margin");
+        assert!(margin >= 0.0, "vote margins are non-negative: {line}");
+    }
+    assert_eq!(&lines[..n], &lines[n..], "replayed batch must vote identically");
+
+    // Batch stats: cold pays per-class rows, warm replay computes none;
+    // the multiclass counters ride along.
+    let stats: Vec<dcsvm::util::json::Json> = stderr
+        .lines()
+        .filter(|l| l.starts_with('{'))
+        .map(|l| dcsvm::util::json::Json::parse(l).expect("stats line parses"))
+        .collect();
+    assert!(stats.len() >= 3, "expected 2 batch lines + summary: {stderr}");
+    let (b0, b1) = (&stats[0], &stats[1]);
+    assert_eq!(b0.get("pair_dispatches").as_f64(), Some(6.0), "{stderr}");
+    assert_eq!(b0.get("votes").as_f64(), Some(6.0 * n as f64), "{stderr}");
+    assert!(b0.get("rows_computed").as_f64().unwrap() > 0.0, "{stderr}");
+    assert_eq!(b1.get("rows_computed").as_f64(), Some(0.0), "{stderr}");
+    std::fs::remove_file(&model).ok();
+}
+
 #[test]
 fn unknown_command_fails_cleanly() {
     let (ok, text) = run(&["frobnicate"]);

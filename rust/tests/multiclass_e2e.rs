@@ -1,0 +1,266 @@
+//! ISSUE co-headline: multi-class OVO DC-SVM over ONE shared
+//! [`KernelContext`], locked down end to end —
+//!
+//! (a) the shared-context trainer is bit-identical (machine coefficients
+//!     = α·y, SV blocks, and votes) to the old materialized per-pair path,
+//! (b) cross-pair kernel reuse is counter-visible: later pairs compute
+//!     strictly fewer kernel entries than the first,
+//! (c) the LIBSVM tie-break-to-smaller-class rule holds as a property
+//!     over randomized vote tables,
+//!
+//! plus the `MulticlassDataset` edge cases (empty, single-class,
+//! non-contiguous class ids) and the no-per-pair-materialization cost
+//! regression that replaced the deleted `pair_view` path.
+
+use dcsvm::data::Dataset;
+use dcsvm::dcsvm::{train, DcSvmConfig};
+use dcsvm::kernel::{native::NativeKernel, KernelKind};
+use dcsvm::multiclass::{
+    build_ovo_model, pair_members, synthetic_multiclass, train_ovo, train_ovo_shared,
+    vote_argmax, MulticlassDataset, TrainedPair,
+};
+use dcsvm::util::prng::Pcg64;
+
+fn kind() -> KernelKind {
+    KernelKind::Rbf { gamma: 2.0 }
+}
+
+/// threads = 1 so per-pair kernel-value attribution is exact and the
+/// materialized baseline sees the identical dispatch budget.
+fn cfg1() -> DcSvmConfig {
+    DcSvmConfig {
+        kind: kind(),
+        c: 4.0,
+        levels: 1,
+        sample_m: 32,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+/// Exactly `per` rows per class, round-robin — removes class-size noise
+/// from the counter assertions.
+fn balanced_multiclass(classes: usize, per: usize, dim: usize, seed: u64) -> MulticlassDataset {
+    let mut rng = Pcg64::new(seed);
+    let centers: Vec<f64> = (0..classes * dim).map(|_| rng.range_f64(0.0, 4.0)).collect();
+    let mut x = Vec::with_capacity(classes * per * dim);
+    let mut labels = Vec::with_capacity(classes * per);
+    for i in 0..classes * per {
+        let c = i % classes;
+        for j in 0..dim {
+            x.push((centers[c * dim + j] + 0.35 * rng.next_gaussian()) as f32);
+        }
+        labels.push(c as u16);
+    }
+    MulticlassDataset::new(x, labels, dim)
+}
+
+fn norms_of(ds: &MulticlassDataset) -> Vec<f32> {
+    (0..ds.len())
+        .map(|i| ds.row(i).iter().map(|&v| v * v).sum())
+        .collect()
+}
+
+/// Tentpole (a): training every pair through member views of ONE shared
+/// context yields bit-for-bit the ensemble the old path built by
+/// materializing each pair into its own `Dataset` + context — same SV
+/// blocks, same per-machine coefficients (α·y as stored), same votes and
+/// margins on held-out queries.
+#[test]
+fn shared_context_ovo_bit_identical_to_materialized_pairs() {
+    let tr = synthetic_multiclass(4, 400, 4, 21);
+    let te = synthetic_multiclass(4, 100, 4, 22);
+    let kern = NativeKernel::new(kind());
+    let cfg = cfg1();
+    let shared = train_ovo_shared(&tr, &kern, &cfg);
+
+    // The pre-PR-8 path: one materialized ±1 Dataset per pair, each with
+    // its own cold context, assembled through the same model builder.
+    let present = tr.present_classes();
+    let mut pairs = Vec::new();
+    for (ai, &a) in present.iter().enumerate() {
+        for &b in &present[ai + 1..] {
+            let (members, labels) = pair_members(&tr, a, b);
+            let mut x = Vec::with_capacity(members.len() * tr.dim);
+            for &g in &members {
+                x.extend_from_slice(tr.row(g));
+            }
+            let ds = Dataset::new(x, labels.clone(), tr.dim, format!("pair-{a}-{b}"));
+            let res = train(&ds, &kern, &cfg);
+            pairs.push(TrainedPair { a, b, members, labels, alpha: res.alpha });
+        }
+    }
+    let baseline = build_ovo_model(&tr, kind(), &pairs, &present);
+
+    assert_eq!(shared.model.machines.len(), baseline.machines.len());
+    assert_eq!(shared.pair_dispatches, 6);
+    for (m, n) in shared.model.machines.iter().zip(&baseline.machines) {
+        assert_eq!((m.a, m.b), (n.a, n.b));
+        assert_eq!(m.coef_a, n.coef_a, "pair ({},{}): coef_a (α·y) differs", m.a, m.b);
+        assert_eq!(m.coef_b, n.coef_b, "pair ({},{}): coef_b (α·y) differs", m.a, m.b);
+    }
+    assert_eq!(shared.model.class_sv_x, baseline.class_sv_x, "per-class SV blocks differ");
+    assert_eq!(shared.model.present, baseline.present);
+
+    let norms = norms_of(&te);
+    let got = shared.model.predict_with_margins(&te.x, &norms, &kern);
+    let want = baseline.predict_with_margins(&te.x, &norms, &kern);
+    assert_eq!(got, want, "votes/margins differ between shared and materialized");
+}
+
+/// Tentpole (b): with segment-row stitching on, the columns pair (a, b)
+/// computed for class a's rows are copied — not recomputed — by every
+/// later pair touching a. Counter-asserted: the LAST pair trained (whose
+/// within-class blocks are both fully cached) computes strictly fewer
+/// kernel entries than the FIRST (fully cold), at exact attribution
+/// (threads = 1) over a perfectly balanced 4-class problem.
+#[test]
+fn later_pairs_compute_strictly_fewer_kernel_values() {
+    let tr = balanced_multiclass(4, 120, 4, 31);
+    let kern = NativeKernel::new(kind());
+    let res = train_ovo_shared(&tr, &kern, &cfg1());
+    assert!(res.pair_values_exact, "threads=1 must attribute values exactly");
+    assert_eq!(res.pair_values.len(), 6, "4·3/2 pairs");
+
+    let (fa, fb, first) = res.pair_values[0];
+    let (la, lb, last) = *res.pair_values.last().unwrap();
+    assert_eq!((fa, fb), (0, 1));
+    assert_eq!((la, lb), (2, 3));
+    assert!(first > 0, "first pair computed nothing");
+    assert!(
+        last < first,
+        "pair ({la},{lb}) computed {last} kernel values — not strictly fewer \
+         than pair ({fa},{fb})'s {first}: cross-pair reuse is broken"
+    );
+    // The reuse mechanism itself left tracks: stitched values were copied
+    // out of earlier pairs' cached columns.
+    assert!(
+        res.value_stats.values_stitched > 0,
+        "no kernel value was ever stitched from an earlier pair's cache"
+    );
+}
+
+/// Satellite: `pair_members` is bookkeeping only — the shared-context run
+/// must be strictly cheaper in total kernel values than solving each pair
+/// as its own freshly materialized 2-class problem (the deleted
+/// `pair_view` path's cost shape: every pair pays a cold cache).
+#[test]
+fn shared_context_beats_per_pair_materialization_on_kernel_values() {
+    let tr = balanced_multiclass(3, 110, 4, 41);
+    let kern = NativeKernel::new(kind());
+    let cfg = cfg1();
+    let shared = train_ovo_shared(&tr, &kern, &cfg);
+
+    let present = tr.present_classes();
+    let mut independent = 0u64;
+    for (ai, &a) in present.iter().enumerate() {
+        for &b in &present[ai + 1..] {
+            let (members, _) = pair_members(&tr, a, b);
+            let mut x = Vec::with_capacity(members.len() * tr.dim);
+            let mut labels = Vec::with_capacity(members.len());
+            for &g in &members {
+                x.extend_from_slice(tr.row(g));
+                labels.push(tr.labels[g]);
+            }
+            let solo = train_ovo_shared(&MulticlassDataset::new(x, labels, tr.dim), &kern, &cfg);
+            independent += solo.value_stats.values_computed;
+        }
+    }
+    assert!(
+        shared.value_stats.values_computed < independent,
+        "one shared context ({}) did not beat per-pair materialization ({})",
+        shared.value_stats.values_computed,
+        independent
+    );
+}
+
+/// Tentpole (c): LIBSVM's tie-break rule as a property over randomized
+/// vote tables — `vote_argmax` always returns the smallest class id among
+/// the maximum-vote present classes, and never a non-present class.
+#[test]
+fn vote_tie_break_property_over_random_tables() {
+    let mut rng = Pcg64::new(77);
+    for trial in 0..200 {
+        let nc = 2 + rng.below(9); // 2..=10 classes in the table
+        let mut present: Vec<u16> = (0..nc as u16).filter(|_| rng.below(2) == 1).collect();
+        if present.is_empty() {
+            present.push(rng.below(nc) as u16);
+        }
+        // Small vote range to force frequent ties.
+        let votes: Vec<u32> = (0..nc).map(|_| rng.below(4) as u32).collect();
+        let got = vote_argmax(&votes, &present);
+        let best = present.iter().map(|&c| votes[c as usize]).max().unwrap();
+        let want = *present.iter().find(|&&c| votes[c as usize] == best).unwrap();
+        assert_eq!(
+            got, want,
+            "trial {trial}: votes {votes:?} present {present:?} — \
+             expected smallest max-vote class"
+        );
+        assert!(present.contains(&got), "trial {trial}: winner not present");
+    }
+}
+
+/// Satellite: empty dataset — 0 classes, 0 machines, 0 SVs; prediction
+/// degrades to the empty-domain convention (class 0, zero margin).
+#[test]
+fn empty_dataset_trains_nothing_and_predicts_convention() {
+    let ds = MulticlassDataset::new(vec![], vec![], 3);
+    assert_eq!(ds.num_classes, 0);
+    assert!(ds.is_empty());
+    assert!(ds.present_classes().is_empty());
+    let kern = NativeKernel::new(kind());
+    let model = train_ovo(&ds, &kern, &cfg1());
+    assert_eq!(model.machines.len(), 0);
+    assert_eq!(model.num_svs(), 0);
+    let q = vec![0.5f32, -0.5, 1.0];
+    let norms = vec![q.iter().map(|&v| v * v).sum::<f32>()];
+    assert_eq!(model.predict_with_margins(&q, &norms, &kern), vec![(0u16, 0.0f32)]);
+}
+
+/// Satellite: single class — 0 pairs, and every prediction returns the
+/// lone class unconditionally.
+#[test]
+fn single_class_trains_zero_pairs_and_predicts_lone_class() {
+    let base = synthetic_multiclass(1, 60, 3, 51);
+    // Relabel to class 2 so the lone class is not the id-0 fallback.
+    let ds = MulticlassDataset::new(base.x.clone(), vec![2u16; base.len()], base.dim);
+    assert_eq!(ds.present_classes(), vec![2]);
+    let kern = NativeKernel::new(kind());
+    let model = train_ovo(&ds, &kern, &cfg1());
+    assert_eq!(model.machines.len(), 0, "single class trains no machine");
+    assert_eq!(model.present, vec![2]);
+    let qs = synthetic_multiclass(1, 10, 3, 52);
+    let norms = norms_of(&qs);
+    for (label, margin) in model.predict_with_margins(&qs.x, &norms, &kern) {
+        assert_eq!(label, 2, "lone class must win every vote");
+        assert_eq!(margin, 0.0);
+    }
+}
+
+/// Satellite: non-contiguous class ids {0, 5} — one machine, `present`
+/// keeps the raw ids, predictions stay inside {0, 5}, and absent ids
+/// never win.
+#[test]
+fn non_contiguous_class_ids_train_one_machine() {
+    let two = balanced_multiclass(2, 60, 3, 61);
+    // Map class 1 → 5, leaving ids 1..=4 absent.
+    let labels: Vec<u16> = two.labels.iter().map(|&l| if l == 1 { 5 } else { 0 }).collect();
+    let ds = MulticlassDataset::new(two.x.clone(), labels, two.dim);
+    assert_eq!(ds.num_classes, 6, "num_classes = max id + 1");
+    assert_eq!(ds.present_classes(), vec![0, 5]);
+    let kern = NativeKernel::new(kind());
+    let res = train_ovo_shared(&ds, &kern, &cfg1());
+    assert_eq!(res.pair_dispatches, 1, "{{0, 5}} is one pair");
+    assert_eq!(res.model.machines.len(), 1);
+    assert_eq!((res.model.machines[0].a, res.model.machines[0].b), (0, 5));
+    for c in 1..5 {
+        assert!(res.model.class_sv_norms[c].is_empty(), "absent class {c} holds SVs");
+    }
+    let norms = norms_of(&ds);
+    for label in res.model.predict_batch(&ds.x, &norms, &kern) {
+        assert!(label == 0 || label == 5, "absent class id {label} won a vote");
+    }
+    // The trained model classifies its own separable blobs well.
+    let acc = res.model.accuracy(&ds, &kern);
+    assert!(acc > 0.9, "2-class accuracy {acc}");
+}

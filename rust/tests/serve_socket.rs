@@ -172,6 +172,93 @@ fn warm_early_batches_skip_routing_dispatch_over_socket() {
     server.join().unwrap().unwrap();
 }
 
+/// ISSUE satellite: the OVO ensemble over both transports. Socket
+/// responses carry a `labels` array; the stdio transport emits
+/// `label margin` lines — same model, bit-identical labels AND margins
+/// across transports, and a second client's replayed batch computes zero
+/// SV-block kernel rows.
+#[test]
+fn ovo_socket_and_stdio_transports_vote_identically() {
+    use dcsvm::multiclass::{synthetic_multiclass, train_ovo};
+
+    let tr = synthetic_multiclass(3, 240, 3, 13);
+    let te = synthetic_multiclass(3, 40, 3, 14);
+    let kind = KernelKind::Rbf { gamma: 2.0 };
+    let kern = NativeKernel::new(kind);
+    let cfg = DcSvmConfig { kind, c: 4.0, levels: 1, sample_m: 32, ..Default::default() };
+    let model = train_ovo(&tr, &kern, &cfg);
+    assert_eq!(model.machines.len(), 3);
+    let json = Json::parse(&model.to_json().to_string()).unwrap();
+    let n = te.len();
+
+    // Stdio reference: one "label margin" line per query row.
+    let stdio_core = ServeCore::new(context_from_json(&json, 16), 2);
+    let mut out = Vec::new();
+    let mut err = Vec::new();
+    transport::run_stdio_io(
+        &stdio_core,
+        n,
+        std::io::Cursor::new(dcsvm::data::libsvm::format_libsvm_multiclass(
+            &te.x, &te.labels, te.dim,
+        )),
+        &mut out,
+        &mut err,
+    )
+    .unwrap();
+    let stdio_text = String::from_utf8(out).unwrap();
+    let mut stdio_labels = Vec::new();
+    let mut stdio_margin_bits = Vec::new();
+    for line in stdio_text.lines() {
+        let (l, m) = line.split_once(' ').expect("label margin");
+        stdio_labels.push(l.parse::<u16>().expect("class id label"));
+        stdio_margin_bits.push(m.parse::<f32>().unwrap().to_bits());
+    }
+    assert_eq!(stdio_labels.len(), n);
+
+    // Socket transport, two clients sharing one context.
+    let core = Arc::new(ServeCore::new(context_from_json(&json, 16), 2));
+    let (addr, server) = spawn_server(&core, 2);
+    let rows = rows_of(&te.x, te.dim);
+    let mut c1 = ServeClient::connect(addr).unwrap();
+    let mut c2 = ServeClient::connect(addr).unwrap();
+    let r1 = c1.decide(&rows).unwrap();
+    let r2 = c2.decide(&rows).unwrap();
+    assert_eq!(r1.get("error"), &Json::Null, "{r1}");
+
+    let socket_labels = |r: &Json| -> Vec<u16> {
+        r.get("labels")
+            .as_arr()
+            .expect("ovo response carries labels")
+            .iter()
+            .map(|v| v.as_f64().unwrap() as u16)
+            .collect()
+    };
+    assert_eq!(socket_labels(&r1), stdio_labels, "socket vs stdio labels");
+    assert_eq!(decision_bits(&r1), stdio_margin_bits, "socket vs stdio margins");
+    assert_eq!(socket_labels(&r2), stdio_labels, "second client's labels");
+    assert_eq!(decision_bits(&r2), decision_bits(&r1));
+
+    // Client 1 paid the per-class kernel rows; client 2's replay computed
+    // ZERO SV-block rows — pure cache, across all three class blocks.
+    let computed1 = r1.get("stats").get("rows_computed").as_f64().unwrap();
+    assert!(computed1 > 0.0);
+    assert_eq!(r2.get("stats").get("rows_computed").as_f64(), Some(0.0));
+    assert_eq!(r2.get("stats").get("cache_hits").as_f64(), Some(computed1));
+    // Multiclass counters flow over the wire.
+    assert_eq!(r1.get("stats").get("pair_dispatches").as_f64(), Some(3.0));
+    assert_eq!(r1.get("stats").get("votes").as_f64(), Some(3.0 * n as f64));
+    assert_eq!(r1.get("stats").get("routing_dispatches").as_f64(), Some(0.0));
+
+    let bye = c1.shutdown_server().unwrap();
+    assert_eq!(bye.get("shutdown").as_bool(), Some(true));
+    drop(c1);
+    drop(c2);
+    server.join().unwrap().unwrap();
+    let summary = core.summary_json();
+    assert_eq!(summary.get("pair_dispatches").as_f64(), Some(6.0), "{summary}");
+    assert_eq!(summary.get("votes").as_f64(), Some(2.0 * 3.0 * n as f64), "{summary}");
+}
+
 /// Hand-built exact model over explicit dim-2 SV rows: the hot-swap test
 /// needs exact control over which SV blocks change across the swap.
 fn toy_model(svs: &[([f32; 2], f32)]) -> SvmModel {

@@ -6,6 +6,7 @@
 use dcsvm::data::synthetic::{covtype_like, generate_split};
 use dcsvm::dcsvm::DcSvmConfig;
 use dcsvm::kernel::{native::NativeKernel, KernelKind};
+use dcsvm::multiclass::{synthetic_multiclass, train_ovo};
 use dcsvm::predict::SvmModel;
 use dcsvm::serving::{ServingContext, ServingModel};
 use dcsvm::util::json::Json;
@@ -78,6 +79,82 @@ fn early_model_reuses_kernel_rows_across_request_batches() {
     let em = res.early_model.expect("early model");
     let json = Json::parse(&em.to_json().to_string()).unwrap();
     serve_roundtrip(json, &te.x, 3);
+}
+
+/// ISSUE satellite: an OVO ensemble behind the same persistent context —
+/// a replayed batch computes ZERO SV-block rows while every decision
+/// (vote margin) stays bit-identical.
+#[test]
+fn ovo_model_reuses_kernel_rows_across_request_batches() {
+    let tr = synthetic_multiclass(4, 320, 4, 9);
+    let te = synthetic_multiclass(4, 60, 4, 10);
+    let kind = KernelKind::Rbf { gamma: 2.0 };
+    let kern = NativeKernel::new(kind);
+    let cfg = DcSvmConfig { kind, c: 4.0, levels: 1, sample_m: 32, ..Default::default() };
+    let model = train_ovo(&tr, &kern, &cfg);
+    assert_eq!(model.machines.len(), 6);
+    let json = Json::parse(&model.to_json().to_string()).unwrap();
+    serve_roundtrip(json, &te.x, 2);
+}
+
+/// ISSUE satellite: serving an OVO model returns the same labels and vote
+/// margins the offline predictor computes — the serving fold IS the
+/// offline fold, with kernel rows assembled per class block.
+#[test]
+fn ovo_serving_labels_match_offline_votes() {
+    let tr = synthetic_multiclass(3, 240, 4, 11);
+    let te = synthetic_multiclass(3, 50, 4, 12);
+    let kind = KernelKind::Rbf { gamma: 2.0 };
+    let kern = NativeKernel::new(kind);
+    let cfg = DcSvmConfig { kind, c: 4.0, levels: 1, sample_m: 32, ..Default::default() };
+    let model = train_ovo(&tr, &kern, &cfg);
+    let norms: Vec<f32> = te
+        .x
+        .chunks(te.dim)
+        .map(|r| r.iter().map(|&v| v * v).sum())
+        .collect();
+    let offline = model.predict_with_margins(&te.x, &norms, &kern);
+
+    let serving =
+        ServingModel::from_json(&Json::parse(&model.to_json().to_string()).unwrap()).unwrap();
+    let ctx = ServingContext::new(serving, Box::new(NativeKernel::new(kind)), 8 << 20);
+    let (dv, labels, stats) = ctx.decide_full(&te.x, 2);
+    let labels = labels.expect("OVO batches carry voted labels");
+    assert_eq!(labels.len(), te.len());
+    for (i, &(want_l, want_m)) in offline.iter().enumerate() {
+        assert_eq!(labels[i], want_l, "query {i}: label");
+        assert_eq!(dv[i].to_bits(), want_m.to_bits(), "query {i}: margin");
+    }
+    // Multiclass counters: every machine voted on every row.
+    assert_eq!(stats.pair_dispatches, model.machines.len() as u64);
+    assert_eq!(stats.votes, (model.machines.len() * te.len()) as u64);
+    // Binary models leave them zero.
+    let (_, no_labels, bstats) = {
+        let (trb, teb) = generate_split(&covtype_like(), 120, 20, 3);
+        let res = dcsvm::dcsvm::train(
+            &trb,
+            &NativeKernel::new(KernelKind::Rbf { gamma: 16.0 }),
+            &DcSvmConfig {
+                kind: KernelKind::Rbf { gamma: 16.0 },
+                c: 4.0,
+                levels: 1,
+                sample_m: 32,
+                ..Default::default()
+            },
+        );
+        let m = SvmModel::from_alpha(&trb, &res.alpha, KernelKind::Rbf { gamma: 16.0 });
+        let sm = ServingModel::from_json(&Json::parse(&m.to_json().to_string()).unwrap())
+            .unwrap();
+        let bctx = ServingContext::new(
+            sm,
+            Box::new(NativeKernel::new(KernelKind::Rbf { gamma: 16.0 })),
+            4 << 20,
+        );
+        bctx.decide_full(&teb.x, 1)
+    };
+    assert!(no_labels.is_none(), "binary batches carry no labels");
+    assert_eq!(bstats.pair_dispatches, 0);
+    assert_eq!(bstats.votes, 0);
 }
 
 /// The serving path must agree with the offline prediction path on signs

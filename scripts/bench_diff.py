@@ -57,6 +57,14 @@ WATCHED = [
     ("update.noop.svs_added", "zero"),
     ("update.noop.svs_dropped", "zero"),
     ("serve_swap.post_swap_rows_computed", "zero"),
+    # Multiclass (OVO) trajectory (ISSUE 8): the shared-context ensemble's
+    # vote accuracy must not decay, the pairwise machine count must not
+    # creep (k(k-1)/2 is structural), and a replayed batch against the
+    # per-class SV-block cache must compute zero kernel rows.
+    ("multiclass.train.accuracy", "higher-better"),
+    ("multiclass.train.pair_dispatches", "lower-better"),
+    ("multiclass.serve.cold.pair_dispatches", "lower-better"),
+    ("multiclass.serve.warm.rows_computed", "zero"),
 ]
 
 

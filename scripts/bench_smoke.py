@@ -47,6 +47,15 @@ int8-quantized router, and fails if the fraction of flipped predicted
 labels exceeds QUANT_FLIP_GATE. The result lands in the `quant` section of
 BENCH_ci.json.
 
+The multiclass leg (ISSUE 8) trains a 4-class OVO ensemble over the shared
+kernel context (`--algo ovo --dataset mc4`), requires the harness record to
+carry the `pair_dispatches`/`votes` counters and the ensemble's
+vote-accuracy, then serves the saved model over stdio: every batch must
+report `pair_dispatches == k(k-1)/2` machines and `votes == machines×rows`,
+output lines must be `LABEL margin` with a valid class id, and the warm
+replay must compute zero SV-block rows. Results land in the REQUIRED
+`multiclass` section of BENCH_ci.json, watched by `bench_diff.py`.
+
 Usage: bench_smoke.py [--binary target/release/dcsvm] [--out BENCH_ci.json]
                       [--threads 2]
 """
@@ -93,6 +102,14 @@ REQUIRED_UPDATE = [
     "cold_values_computed",
     "warm_beats_cold",
 ]
+
+# Multiclass (OVO) harness-outcome fields: the shared-context pair counters
+# must be recorded alongside the usual quality numbers.
+REQUIRED_OVO_TRAIN = ["train_s", "accuracy", "svs", "pair_dispatches", "votes"]
+# Per-batch serving stats the OVO legs additionally require.
+REQUIRED_OVO_SERVE = REQUIRED_SERVE + ["pair_dispatches", "votes"]
+OVO_CLASSES = 4
+OVO_MACHINES = OVO_CLASSES * (OVO_CLASSES - 1) // 2
 
 # Max fraction of the 64 quant-gate rows whose predicted label may flip
 # when routing goes through the int8-quantized sample rows. The per-row
@@ -311,6 +328,85 @@ def main() -> None:
         fail(f"quant-route flipped {flips}/64 predicted labels "
              f"(rate {flip_rate:.2f} > gate {QUANT_FLIP_GATE})")
 
+    # ---- multiclass (OVO) leg: shared-context train -> ensemble serve ----
+    # Train all k(k-1)/2 pairwise machines over ONE KernelContext on the
+    # synthetic 4-class workload, then serve the saved ensemble: per-batch
+    # stats must make the pairwise work visible (pair_dispatches, votes)
+    # and a warm replay must compute zero SV-block rows.
+    ovo_model = os.path.join(workdir, "ovo_model.json")
+    p = run(
+        [args.binary, "train", "--algo", "ovo", "--dataset", f"mc{OVO_CLASSES}",
+         "--n-train", "400", "--n-test", "120", "--gamma", "2", "--c", "4",
+         "--levels", "1", "--sample-m", "32", "--backend", "native",
+         "--seed", "0", "--threads", threads, "--save-model", ovo_model],
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+    if p.returncode != 0:
+        fail(f"ovo train exited {p.returncode}\nstdout:\n{p.stdout}\nstderr:\n{p.stderr}")
+    with open(results_path, encoding="utf-8") as f:
+        records = [json.loads(line) for line in f if line.strip()]
+    ovo_outcome = records[-1].get("outcome")
+    if not isinstance(ovo_outcome, dict) or ovo_outcome.get("algo") != "ovo":
+        fail(f"ovo train recorded no outcome: {json.dumps(records[-1])[:400]}")
+    ovo_train = require(ovo_outcome, REQUIRED_OVO_TRAIN, "ovo train outcome")
+    if ovo_train["pair_dispatches"] != OVO_MACHINES:
+        fail(f"ovo train dispatched {ovo_train['pair_dispatches']} pairs, "
+             f"expected {OVO_MACHINES} for {OVO_CLASSES} classes")
+
+    with open(ovo_model, encoding="utf-8") as f:
+        ovo_dim = json.load(f).get("dim")
+    if not isinstance(ovo_dim, int) or ovo_dim <= 0:
+        fail(f"ovo model has no usable dim (got {ovo_dim!r})")
+    ovo_batch = libsvm_batch(ovo_dim, 64)
+    p = run(
+        [args.binary, "serve", "--model", ovo_model, "--batch", "64",
+         "--workers", threads, "--backend", "native"],
+        env=env,
+        input=ovo_batch + ovo_batch,  # same batch twice: cold, then warm
+        capture_output=True,
+        text=True,
+    )
+    if p.returncode != 0:
+        fail(f"ovo serve exited {p.returncode}\nstderr:\n{p.stderr}")
+    ovo_stats = []
+    for line in p.stderr.splitlines():
+        line = line.strip()
+        if not line.startswith("{"):
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if "batch" in obj and "rows" in obj:
+            ovo_stats.append(obj)
+    if len(ovo_stats) < 2:
+        fail(f"ovo serve: expected 2 per-batch stats lines, got {len(ovo_stats)}:\n{p.stderr}")
+    ovo_cold = require(ovo_stats[0], REQUIRED_OVO_SERVE, "ovo cold serve batch")
+    ovo_warm = require(ovo_stats[1], REQUIRED_OVO_SERVE, "ovo warm serve batch")
+    for name, st in (("cold", ovo_cold), ("warm", ovo_warm)):
+        if st["pair_dispatches"] != OVO_MACHINES:
+            fail(f"ovo {name} batch evaluated {st['pair_dispatches']} machines, "
+                 f"expected {OVO_MACHINES}")
+        if st["votes"] != OVO_MACHINES * 64:
+            fail(f"ovo {name} batch cast {st['votes']} votes, "
+                 f"expected {OVO_MACHINES * 64}")
+    if ovo_warm["rows_computed"] != 0:
+        fail(f"ovo warm replay computed {ovo_warm['rows_computed']} rows; "
+             "per-class SV-block cache broken")
+    if ovo_cold["rows_computed"] <= 0:
+        fail("ovo cold batch computed no rows; stats are not being recorded")
+    ovo_lines = [line.strip() for line in p.stdout.splitlines() if line.strip()]
+    if len(ovo_lines) != 128:
+        fail(f"ovo serve: expected 128 output lines, got {len(ovo_lines)}")
+    if ovo_lines[:64] != ovo_lines[64:]:
+        fail("ovo replay produced different labels/margins than the cold batch")
+    for line in ovo_lines[:64]:
+        parts = line.split()
+        if len(parts) != 2 or not parts[0].isdigit() or int(parts[0]) >= OVO_CLASSES:
+            fail(f"ovo output line is not 'LABEL margin' with a valid class id: {line!r}")
+
     # ---- streaming update leg (train -> update -> no-op update) ----------
     # A self-contained labeled stream: bootstrap a model from a zero-SV
     # seed over the history chunk (a warm solve over 0 SVs ∪ history IS a
@@ -477,6 +573,13 @@ def main() -> None:
             "noop": noop_counters,
         },
         "serve_swap": serve_swap,
+        "multiclass": {
+            "classes": OVO_CLASSES,
+            "machines": OVO_MACHINES,
+            "train": ovo_train,
+            "serve": {"cold": ovo_cold, "warm": ovo_warm,
+                      "lines": ovo_lines[:64]},
+        },
         "quant": {
             "rows": 64,
             "flips": flips,
