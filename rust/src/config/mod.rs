@@ -116,6 +116,18 @@ pub struct RunConfig {
     /// unaffected).
     pub quant_route: bool,
     pub save_model: Option<String>,
+    /// Train via distributed parallel block minimization
+    /// (`--distributed true`; see [`crate::distributed`]).
+    pub distributed: bool,
+    /// Local worker processes to spawn when `workers_addr` is not set
+    /// (`--workers`).
+    pub dist_workers: usize,
+    /// Comma-separated addresses of already-running `dcsvm worker`
+    /// processes (`--workers-addr`). CLI-only: never serialized, because a
+    /// config file naming live endpoints would go stale.
+    pub workers_addr: Option<String>,
+    /// Block-minimization rounds before the conquer solve (`--rounds`).
+    pub rounds: usize,
 }
 
 impl Default for RunConfig {
@@ -142,6 +154,10 @@ impl Default for RunConfig {
             registry_cap_mb: 0,
             quant_route: false,
             save_model: None,
+            distributed: false,
+            dist_workers: 2,
+            workers_addr: None,
+            rounds: 2,
         }
     }
 }
@@ -196,6 +212,16 @@ impl RunConfig {
                 }
             }
             "save_model" | "save-model" => self.save_model = Some(val.to_string()),
+            "distributed" => {
+                self.distributed = match val {
+                    "1" => true,
+                    "0" => false,
+                    other => other.parse()?,
+                }
+            }
+            "workers" | "dist_workers" | "dist-workers" => self.dist_workers = val.parse()?,
+            "workers_addr" | "workers-addr" => self.workers_addr = Some(val.to_string()),
+            "rounds" => self.rounds = val.parse()?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -266,6 +292,9 @@ impl RunConfig {
             ("segments", Json::from(self.segment_views)),
             ("registry_cap_mb", Json::from(self.registry_cap_mb)),
             ("quant_route", Json::from(self.quant_route)),
+            ("distributed", Json::from(self.distributed)),
+            ("dist_workers", Json::from(self.dist_workers)),
+            ("rounds", Json::from(self.rounds)),
         ])
     }
 }
@@ -363,6 +392,33 @@ mod tests {
         assert!(cfg.apply("quant-route", "sometimes").is_err());
         cfg.apply("quant-route", "1").unwrap();
         assert_eq!(cfg.to_json().get("quant_route").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn distributed_flags_parse_and_flow() {
+        let mut cfg = RunConfig::default();
+        assert!(!cfg.distributed, "distributed defaults off");
+        assert_eq!(cfg.dist_workers, 2);
+        assert_eq!(cfg.rounds, 2);
+        assert!(cfg.workers_addr.is_none());
+        cfg.apply("distributed", "true").unwrap();
+        cfg.apply("workers", "3").unwrap();
+        cfg.apply("rounds", "4").unwrap();
+        cfg.apply("workers-addr", "127.0.0.1:4100,127.0.0.1:4101").unwrap();
+        assert!(cfg.distributed);
+        assert_eq!(cfg.dist_workers, 3);
+        assert_eq!(cfg.rounds, 4);
+        assert_eq!(cfg.workers_addr.as_deref(), Some("127.0.0.1:4100,127.0.0.1:4101"));
+        cfg.apply("distributed", "0").unwrap();
+        assert!(!cfg.distributed);
+        assert!(cfg.apply("distributed", "maybe").is_err());
+        assert!(cfg.apply("rounds", "many").is_err());
+        // Round-trips through a config file — but live endpoints do not.
+        let j = cfg.to_json();
+        assert_eq!(j.get("dist_workers").as_usize(), Some(3));
+        assert_eq!(j.get("rounds").as_usize(), Some(4));
+        assert_eq!(j.get("distributed").as_bool(), Some(false));
+        assert_eq!(j.get("workers_addr"), &Json::Null);
     }
 
     #[test]

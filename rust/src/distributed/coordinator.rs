@@ -1,0 +1,319 @@
+//! The coordinator side of distributed block minimization: shard the
+//! problem, drive the rounds, gather the α summaries, conquer locally.
+//!
+//! Endpoints come from `--workers-addr` (already-running `dcsvm worker`
+//! processes, possibly on other machines) or are spawned as local child
+//! processes of the current binary. Either way the coordinator speaks the
+//! worker wire protocol over [`crate::util::wire::Codec`]s, and the sum of
+//! their byte counters IS the run's `comm_bytes` — the quantity the
+//! communication-efficient scheme (arXiv:1608.02010) minimizes, and the
+//! number the e2e test pins far below one serialized kernel block.
+//!
+//! A worker connection that closes or errors mid-round aborts the run
+//! with a structured [`super::ERR_WORKER_LOST`] error within one
+//! read-poll tick: remaining connections are dropped and spawned children
+//! are killed (the [`Spawned`] guard), never hung.
+
+use std::io::{BufRead, BufReader};
+use std::net::TcpStream;
+use std::process::{Child, ChildStderr, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cache::KernelContext;
+use crate::config::RunConfig;
+use crate::data::Dataset;
+use crate::harness::{make_kernel, Outcome};
+use crate::predict::SvmModel;
+use crate::solver::{SmoConfig, SmoSolver};
+use crate::util::json::Json;
+use crate::util::wire::{self, Frame, TcpCodec};
+
+use super::{ids_json, parse_f64s, parse_ids, Hello, ERR_PROTOCOL, ERR_WORKER_LOST};
+
+/// Child-process guard: whatever path exits [`train_distributed`] —
+/// success, worker loss, protocol error — spawned workers are killed and
+/// reaped, never leaked.
+struct Spawned {
+    children: Vec<Child>,
+    /// Held open so a worker writing to stderr after its announce line
+    /// never hits a closed pipe.
+    _logs: Vec<BufReader<ChildStderr>>,
+}
+
+impl Drop for Spawned {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Spawn `count` local `dcsvm worker` processes (the current binary) on
+/// ephemeral ports and return their announced addresses.
+fn spawn_local_workers(cfg: &RunConfig, count: usize, guard: &mut Spawned) -> Result<Vec<String>> {
+    let exe = std::env::current_exe().context("locate the dcsvm binary for local workers")?;
+    // Split the coordinator's thread budget so P workers don't put
+    // P × threads dispatch workers on the machine.
+    let per_worker = (cfg.threads / count.max(1)).max(1);
+    let mut addrs = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut child = Command::new(&exe)
+            .arg("worker")
+            .arg("--listen")
+            .arg("127.0.0.1:0")
+            .arg("--threads")
+            .arg(per_worker.to_string())
+            .arg("--cache-mb")
+            .arg(cfg.cache_mb.max(1).to_string())
+            .arg("--backend")
+            .arg(&cfg.backend)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::piped())
+            .spawn()
+            .context("spawn local worker")?;
+        let mut log = BufReader::new(child.stderr.take().expect("piped stderr"));
+        let mut line = String::new();
+        log.read_line(&mut line).context("read worker announce line")?;
+        let addr = Json::parse(line.trim())
+            .ok()
+            .and_then(|j| j.get("worker_listening").as_str().map(str::to_string));
+        guard.children.push(child);
+        guard._logs.push(log);
+        let Some(addr) = addr else {
+            bail!("worker did not announce a listening address (got {line:?})");
+        };
+        addrs.push(addr);
+    }
+    Ok(addrs)
+}
+
+/// Connect with retry (externally-started workers may still be binding).
+fn connect_retry(addr: &str, deadline: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(_) if t0.elapsed() < deadline => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => return Err(anyhow!("connect worker {addr}: {e}")),
+        }
+    }
+}
+
+/// Write one message; an I/O failure means the worker is gone.
+fn send(codec: &mut TcpCodec, w: usize, msg: &Json) -> Result<()> {
+    codec
+        .write_json(msg)
+        .map_err(|e| anyhow!("[{ERR_WORKER_LOST}] worker {w}: write failed: {e}"))
+}
+
+/// Read one parsed message; EOF or a transport error mid-session is a
+/// structured worker-lost failure (surfaced within one read-poll tick of
+/// the OS seeing the close — the coordinator never hangs on a dead peer).
+fn recv(codec: &mut TcpCodec, w: usize) -> Result<Json> {
+    loop {
+        match codec.read_frame() {
+            Ok(Frame::Line(line)) => {
+                let t = line.trim();
+                if t.is_empty() {
+                    continue;
+                }
+                return Json::parse(t)
+                    .map_err(|e| anyhow!("[{ERR_PROTOCOL}] worker {w}: bad response line: {e}"));
+            }
+            Ok(Frame::Idle) => continue,
+            Ok(Frame::Eof) => {
+                bail!("[{ERR_WORKER_LOST}] worker {w}: connection closed mid-session")
+            }
+            Ok(Frame::Overflow) | Ok(Frame::NotUtf8) => {
+                bail!("[{ERR_PROTOCOL}] worker {w}: unreadable response line")
+            }
+            Err(e) => bail!("[{ERR_WORKER_LOST}] worker {w}: {e}"),
+        }
+    }
+}
+
+/// Fail on a structured error reply; otherwise require `"ok": true`.
+fn expect_ok(reply: &Json, w: usize, stage: &str) -> Result<()> {
+    if reply.get("error") != &Json::Null {
+        bail!(
+            "worker {w} rejected {stage}: [{}] {}",
+            reply.get("error").get("code").as_str().unwrap_or("?"),
+            reply.get("error").get("message").as_str().unwrap_or("?")
+        );
+    }
+    if reply.get("ok").as_bool() != Some(true) {
+        bail!("[{ERR_PROTOCOL}] worker {w}: expected ok to {stage}, got {reply}");
+    }
+    Ok(())
+}
+
+/// Train `(tr, te)` by parallel block minimization over worker processes,
+/// then conquer locally. Workers regenerate the split from `cfg`'s
+/// dataset spec, so `tr`/`te` MUST come from that spec (the harness
+/// loader) — only α summaries and row ids cross the wire.
+pub fn train_distributed(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
+    let t0 = Instant::now();
+    let n = tr.len();
+    let rounds = cfg.rounds.max(1);
+    let mut guard = Spawned { children: Vec::new(), _logs: Vec::new() };
+
+    // --- endpoints --------------------------------------------------------
+    let addrs: Vec<String> = match &cfg.workers_addr {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => spawn_local_workers(cfg, cfg.dist_workers.max(1), &mut guard)?,
+    };
+    if addrs.is_empty() {
+        bail!("distributed: no worker addresses (--workers-addr was empty)");
+    }
+    let p = addrs.len();
+    let mut codecs: Vec<TcpCodec> = Vec::with_capacity(p);
+    for addr in &addrs {
+        let stream = connect_retry(addr, Duration::from_secs(10))?;
+        codecs.push(wire::tcp_codec(stream).context("worker codec")?);
+    }
+
+    // --- handshake: dataset spec only, never data -------------------------
+    let hello = Hello {
+        dataset: cfg.dataset.clone(),
+        n_train: tr.len(),
+        n_test: te.len(),
+        seed: cfg.seed,
+        kernel: cfg.kernel.clone(),
+        gamma: cfg.gamma,
+        eta: cfg.eta,
+        c: cfg.c,
+        // Block sub-problems run at a looser tolerance (the conquer solve
+        // enforces cfg.eps on the whole problem) — same policy as the
+        // DC-SVM divide phase.
+        eps: cfg.eps.max(1e-3),
+    };
+    let hello_msg = Json::obj(vec![("hello", hello.to_json())]);
+    for (w, codec) in codecs.iter_mut().enumerate() {
+        send(codec, w, &hello_msg)?;
+    }
+    for (w, codec) in codecs.iter_mut().enumerate() {
+        let reply = recv(codec, w)?;
+        expect_ok(&reply, w, "hello")?;
+        if reply.get("n").as_usize() != Some(n) {
+            bail!("[{ERR_PROTOCOL}] worker {w}: regenerated n {} != {n}", reply.get("n"));
+        }
+    }
+
+    // --- shard ownership: round-robin i mod P -----------------------------
+    let shards: Vec<Vec<usize>> = (0..p).map(|w| (w..n).step_by(p).collect()).collect();
+    for (w, codec) in codecs.iter_mut().enumerate() {
+        send(codec, w, &Json::obj(vec![("shard", ids_json(&shards[w]))]))?;
+    }
+    for (w, codec) in codecs.iter_mut().enumerate() {
+        let reply = recv(codec, w)?;
+        expect_ok(&reply, w, "shard")?;
+    }
+
+    // --- rounds: broadcast external summaries, gather block solutions ----
+    let mut sv: Vec<(Vec<usize>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); p];
+    let mut worker_values = 0u64;
+    let mut worker_iters = 0u64;
+    for r in 1..=rounds {
+        // Jacobi-style: every worker sees the *previous* round's summaries
+        // from its peers, so all P block solves run concurrently.
+        for w in 0..p {
+            let mut ext_ids = Vec::new();
+            let mut ext_alpha = Vec::new();
+            for (o, (ids, al)) in sv.iter().enumerate() {
+                if o != w {
+                    ext_ids.extend_from_slice(ids);
+                    ext_alpha.extend_from_slice(al);
+                }
+            }
+            let msg = Json::obj(vec![
+                ("round", Json::from(r)),
+                ("ext_ids", ids_json(&ext_ids)),
+                ("ext_alpha", Json::arr_f64(&ext_alpha)),
+            ]);
+            send(&mut codecs[w], w, &msg)?;
+        }
+        for w in 0..p {
+            let reply = recv(&mut codecs[w], w)?;
+            if reply.get("error") != &Json::Null {
+                bail!(
+                    "worker {w} failed round {r}: [{}] {}",
+                    reply.get("error").get("code").as_str().unwrap_or("?"),
+                    reply.get("error").get("message").as_str().unwrap_or("?")
+                );
+            }
+            if reply.get("round").as_usize() != Some(r) {
+                bail!("[{ERR_PROTOCOL}] worker {w}: round echo mismatch in {reply}");
+            }
+            let ids = parse_ids(reply.get("ids"))
+                .map_err(|e| anyhow!("[{ERR_PROTOCOL}] worker {w}: {e}"))?;
+            let al = parse_f64s(reply.get("alpha"))
+                .map_err(|e| anyhow!("[{ERR_PROTOCOL}] worker {w}: {e}"))?;
+            if ids.len() != al.len() || ids.iter().any(|&i| i >= n || i % p != w) {
+                bail!("[{ERR_PROTOCOL}] worker {w}: summary ids outside its shard");
+            }
+            worker_values += reply.get("values_computed").as_f64().unwrap_or(0.0) as u64;
+            worker_iters += reply.get("iterations").as_f64().unwrap_or(0.0) as u64;
+            sv[w] = (ids, al);
+        }
+    }
+
+    // --- release workers (best effort; the run already has everything).
+    // The ok reply is consumed so workers finish their session before the
+    // coordinator closes the sockets (no write-after-close races).
+    for (w, codec) in codecs.iter_mut().enumerate() {
+        if codec.write_json(&Json::obj(vec![("shutdown", Json::from(true))])).is_ok() {
+            let _ = recv(codec, w);
+        }
+    }
+    let comm_bytes: u64 = codecs.iter().map(|c| c.bytes_in() + c.bytes_out()).sum();
+    drop(codecs);
+
+    // --- conquer: gather α, one warm-started exact solve at cfg.eps ------
+    let mut alpha = vec![0f64; n];
+    for (ids, al) in &sv {
+        for (&i, &a) in ids.iter().zip(al) {
+            alpha[i] = a;
+        }
+    }
+    let kind = cfg.kernel_kind()?;
+    let kernel = make_kernel(kind, &cfg.backend, tr.dim)?;
+    let ctx = KernelContext::new(tr, kernel.as_ref(), (cfg.cache_mb.max(1)) << 20)
+        .with_threads(cfg.threads);
+    let mut solver = SmoSolver::new(
+        ctx.view_full(),
+        SmoConfig { c: cfg.c, eps: cfg.eps, ..SmoConfig::default() },
+    );
+    let res = solver.solve_warm(Some(alpha.as_slice()), &mut |_| {});
+    let model = SvmModel::from_ctx_alpha(&ctx, &res.alpha);
+    let te_ctx = KernelContext::new(te, kernel.as_ref(), 1 << 20).with_threads(cfg.threads);
+    let accuracy = model.accuracy_ctx(&te_ctx);
+
+    Ok(Outcome {
+        algo: "Distributed",
+        train_s: t0.elapsed().as_secs_f64(),
+        accuracy,
+        objective: Some(res.objective),
+        svs: res.sv_count,
+        cache_hit_rate: Some(res.cache_hit_rate),
+        simd_tier: crate::kernel::simd_tier().name(),
+        comm_bytes: Some(comm_bytes),
+        rounds: Some(rounds as u64),
+        worker_values_computed: Some(worker_values),
+        note: format!(
+            "workers={p} spawned={} conquer_iters={} worker_iters={worker_iters}",
+            !guard.children.is_empty(),
+            res.iterations
+        ),
+        ..Default::default()
+    })
+}

@@ -1,0 +1,279 @@
+//! Distributed parallel block minimization over the shared wire layer.
+//!
+//! `dcsvm train --distributed true` trains the same dual problem as the
+//! single-process solvers, but across worker *processes* (or any TCP
+//! endpoints running `dcsvm worker --listen ADDR`), following the
+//! communication-efficient parallel block minimization scheme of
+//! arXiv:1608.02010 adapted to this crate's DC-SVM machinery:
+//!
+//! 1. **Shard.** The coordinator round-robins training-row ownership
+//!    across P workers (`i mod P`). No feature data crosses the wire:
+//!    the hello message carries only the *dataset spec* (name, sizes,
+//!    seed, kernel), and every worker regenerates its bit-identical copy
+//!    locally ([`crate::data::synthetic::generate_split`] is
+//!    deterministic per seed).
+//! 2. **Local block minimization.** Each round, every worker re-solves
+//!    its block's dual sub-problem against its own [`crate::cache::KernelContext`]
+//!    and segment cache, with the out-of-block variables frozen into a
+//!    linear offset ([`crate::solver::SmoSolver::with_linear_offset`]):
+//!    `q_i = y_i Σ_{j∉B} ᾱ_j y_j K(x_i, x_j)`, warm-started from its own
+//!    previous α.
+//! 3. **Summary exchange.** Workers return only (support-vector global
+//!    id, α) pairs — never kernel rows or matrices — and the coordinator
+//!    broadcasts each worker the *other* workers' summaries for the next
+//!    round. Total traffic is the `comm_bytes` counter (the wire
+//!    [`crate::util::wire::Codec`] byte counts, both directions).
+//! 4. **Conquer.** After the last round the coordinator gathers the full
+//!    α and runs one warm-started exact solve at the final tolerance on
+//!    its own context — so the returned model satisfies the same ε-KKT
+//!    conditions as a single-process solve (the e2e equivalence test
+//!    pins the objectives to 1e-6 relative).
+//!
+//! Framing is one JSON object per line over the same [`crate::util::wire`]
+//! codec the serve transport uses; PROTOCOL.md §"Worker wire protocol"
+//! documents every message and error code (`tests/docs_sync.rs` pins the
+//! catalogue).
+
+use anyhow::{bail, Result};
+
+use crate::util::flags::{FlagSet, FlagSpec};
+use crate::util::json::Json;
+
+pub mod coordinator;
+pub mod worker;
+
+pub use coordinator::train_distributed;
+pub use worker::{run_worker, serve_session, WorkerOptions};
+
+// ---------------------------------------------------------------------------
+// Error codes (PROTOCOL.md catalogues each; docs_sync.rs enforces it).
+
+/// A request line was not valid JSON (or not valid UTF-8).
+pub const ERR_PARSE: &str = "parse";
+/// A message arrived out of protocol order or with missing/mistyped
+/// fields (e.g. a `round` before `shard`, or `ext_ids`/`ext_alpha` of
+/// different lengths).
+pub const ERR_PROTOCOL: &str = "protocol";
+/// A well-formed message carried unusable values (unknown dataset or
+/// kernel, out-of-range row ids, oversized line).
+pub const ERR_BAD_REQUEST: &str = "bad_request";
+/// Coordinator-synthesized (never sent on the wire): a worker connection
+/// closed or errored mid-session. The coordinator aborts the run cleanly
+/// — remaining workers are dropped and spawned children are killed.
+pub const ERR_WORKER_LOST: &str = "worker_lost";
+
+/// Every `code` a worker error object (or a coordinator-side distributed
+/// failure) can carry.
+pub const WORKER_ERROR_CODES: &[&str] =
+    &[ERR_PARSE, ERR_PROTOCOL, ERR_BAD_REQUEST, ERR_WORKER_LOST];
+
+// ---------------------------------------------------------------------------
+// Flag tables (rendered into `--help` and README.md; docs_sync.rs pins the
+// README rows, cli_roundtrip.rs pins the strict parse).
+
+/// `dcsvm worker` flag table.
+pub const WORKER_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        flag: "--listen",
+        value: "ADDR",
+        default: "required",
+        help: "TCP address to bind (port 0 = ephemeral; announced on stderr)",
+    },
+    FlagSpec {
+        flag: "--threads",
+        value: "N",
+        default: "all cores",
+        help: "kernel-dispatch worker budget of this worker process",
+    },
+    FlagSpec {
+        flag: "--cache-mb",
+        value: "MB",
+        default: "256",
+        help: "kernel-row cache budget of the worker's shard context",
+    },
+    FlagSpec {
+        flag: "--backend",
+        value: "KIND",
+        default: "native",
+        help: "kernel backend: auto, native, or pjrt",
+    },
+];
+
+/// The `dcsvm worker` flag surface (usage text + strict parser).
+pub const WORKER_FLAG_SET: FlagSet =
+    FlagSet { cmd: "worker", required: "--listen ADDR", flags: WORKER_FLAGS };
+
+/// The distributed flags `dcsvm train` accepts (they flow through
+/// [`crate::config::RunConfig::apply`] like every train flag; this table
+/// renders the README rows and keeps help text in one place).
+pub const DIST_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        flag: "--distributed",
+        value: "BOOL",
+        default: "false",
+        help: "train via parallel block minimization over worker processes",
+    },
+    FlagSpec {
+        flag: "--workers",
+        value: "N",
+        default: "2",
+        help: "local `dcsvm worker` processes to spawn when --workers-addr is not given",
+    },
+    FlagSpec {
+        flag: "--workers-addr",
+        value: "LIST",
+        default: "spawn local",
+        help: "comma-separated addresses of already-running workers",
+    },
+    FlagSpec {
+        flag: "--rounds",
+        value: "R",
+        default: "2",
+        help: "block-minimization rounds before the conquer solve",
+    },
+];
+
+// ---------------------------------------------------------------------------
+// Messages. One JSON object per line; builders/parsers shared by both ends
+// so the two sides cannot drift.
+
+/// The handshake: everything a worker needs to regenerate the training
+/// split and configure its local solver. Carries the dataset *spec*, not
+/// data — workers rebuild the split deterministically from the seed.
+#[derive(Clone, Debug)]
+pub struct Hello {
+    pub dataset: String,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub seed: u64,
+    /// "rbf" | "poly" | "linear"
+    pub kernel: String,
+    pub gamma: f64,
+    pub eta: f64,
+    /// Box constraint of the block sub-problems.
+    pub c: f64,
+    /// KKT tolerance of the block sub-problems (the conquer solve runs at
+    /// the coordinator's final tolerance, not this one).
+    pub eps: f64,
+}
+
+impl Hello {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::from(self.dataset.as_str())),
+            ("n_train", Json::from(self.n_train)),
+            ("n_test", Json::from(self.n_test)),
+            ("seed", Json::from(self.seed as f64)),
+            ("kernel", Json::from(self.kernel.as_str())),
+            ("gamma", Json::from(self.gamma)),
+            ("eta", Json::from(self.eta)),
+            ("c", Json::from(self.c)),
+            ("eps", Json::from(self.eps)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Hello> {
+        let field = |k: &str| -> Result<f64> {
+            j.get(k).as_f64().ok_or_else(|| anyhow::anyhow!("hello: missing number '{k}'"))
+        };
+        Ok(Hello {
+            dataset: j
+                .get("dataset")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("hello: missing 'dataset'"))?
+                .to_string(),
+            n_train: j
+                .get("n_train")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("hello: missing 'n_train'"))?,
+            n_test: j
+                .get("n_test")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("hello: missing 'n_test'"))?,
+            seed: field("seed")? as u64,
+            kernel: j
+                .get("kernel")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("hello: missing 'kernel'"))?
+                .to_string(),
+            gamma: field("gamma")?,
+            eta: field("eta")?,
+            c: field("c")?,
+            eps: field("eps")?,
+        })
+    }
+}
+
+/// Row-id list as a JSON array.
+pub fn ids_json(ids: &[usize]) -> Json {
+    Json::Arr(ids.iter().map(|&i| Json::from(i)).collect())
+}
+
+/// Parse a JSON array of row ids.
+pub fn parse_ids(j: &Json) -> Result<Vec<usize>> {
+    let Some(arr) = j.as_arr() else { bail!("expected an id array") };
+    arr.iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("ids must be non-negative integers")))
+        .collect()
+}
+
+/// Parse a JSON array of numbers.
+pub fn parse_f64s(j: &Json) -> Result<Vec<f64>> {
+    let Some(arr) = j.as_arr() else { bail!("expected a number array") };
+    arr.iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("alpha entries must be numbers")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrips() {
+        let h = Hello {
+            dataset: "covtype-like".into(),
+            n_train: 300,
+            n_test: 100,
+            seed: 7,
+            kernel: "rbf".into(),
+            gamma: 16.0,
+            eta: 0.0,
+            c: 4.0,
+            eps: 1e-3,
+        };
+        let back = Hello::from_json(&h.to_json()).unwrap();
+        assert_eq!(back.dataset, h.dataset);
+        assert_eq!(back.n_train, h.n_train);
+        assert_eq!(back.n_test, h.n_test);
+        assert_eq!(back.seed, h.seed);
+        assert_eq!(back.kernel, h.kernel);
+        assert_eq!(back.gamma, h.gamma);
+        assert_eq!(back.c, h.c);
+        assert_eq!(back.eps, h.eps);
+        assert!(Hello::from_json(&Json::obj(vec![("dataset", Json::from("x"))])).is_err());
+    }
+
+    #[test]
+    fn id_and_alpha_arrays_roundtrip() {
+        let ids = vec![0usize, 7, 42];
+        let back = parse_ids(&ids_json(&ids)).unwrap();
+        assert_eq!(back, ids);
+        let al = [0.5f64, 1.25];
+        assert_eq!(parse_f64s(&Json::arr_f64(&al)).unwrap(), al);
+        assert!(parse_ids(&Json::from(3usize)).is_err());
+        assert!(parse_ids(&Json::Arr(vec![Json::from(-1.0)])).is_err());
+    }
+
+    #[test]
+    fn worker_flag_set_is_strict() {
+        let u = WORKER_FLAG_SET.usage();
+        assert!(u.starts_with("usage: dcsvm worker --listen ADDR [flags]\n"), "{u}");
+        for f in WORKER_FLAGS {
+            assert!(u.contains(f.flag) && u.contains(f.help), "{u}");
+        }
+        let args: Vec<String> = ["--bogus", "x"].iter().map(|s| s.to_string()).collect();
+        let e = WORKER_FLAG_SET.parse(&args).unwrap_err().to_string();
+        assert!(e.contains("worker: unknown flag '--bogus'"), "{e}");
+    }
+}

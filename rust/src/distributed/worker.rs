@@ -1,0 +1,268 @@
+//! The worker side of distributed block minimization: one process, one
+//! shard, one local [`KernelContext`].
+//!
+//! A worker serves exactly one coordinator session: `hello` (regenerate
+//! the training split from its spec), `shard` (the row ids this worker
+//! owns), then `round` messages — each re-solves the block dual with the
+//! coordinator-supplied external α frozen into a linear offset
+//! ([`SmoSolver::with_linear_offset`]), warm-started from the worker's own
+//! previous α — until `done`/`shutdown`. Replies carry only (global id, α)
+//! support-vector summaries; kernel values never leave the process.
+
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{Context, Result};
+
+use crate::cache::KernelContext;
+use crate::data::synthetic::all_specs;
+use crate::data::Dataset;
+use crate::harness::make_kernel;
+use crate::kernel::KernelKind;
+use crate::solver::{SmoConfig, SmoSolver};
+use crate::util::json::Json;
+use crate::util::wire::{self, error_response, Frame, TcpCodec};
+
+use super::{parse_f64s, parse_ids, Hello, ERR_BAD_REQUEST, ERR_PARSE, ERR_PROTOCOL};
+
+/// Per-process worker settings (`dcsvm worker` flags).
+pub struct WorkerOptions {
+    /// Kernel-dispatch thread budget (0 = the context default: all cores).
+    pub threads: usize,
+    /// Kernel-row cache budget of the shard context, in MB.
+    pub cache_mb: usize,
+    /// "native" | "pjrt" | "auto"
+    pub backend: String,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions { threads: 0, cache_mb: 256, backend: "native".into() }
+    }
+}
+
+/// Serve one coordinator session on `listener`. The bound address is
+/// announced first as one parseable stderr line
+/// (`{"worker_listening": ADDR}`) — binding port 0 picks an ephemeral
+/// port, and a spawning coordinator discovers it from this line. Returns
+/// after the session ends (shutdown, done, or coordinator EOF).
+pub fn run_worker(listener: TcpListener, opts: &WorkerOptions) -> Result<()> {
+    let addr = listener.local_addr().context("worker: local_addr")?;
+    eprintln!(
+        "{}",
+        Json::obj(vec![("worker_listening", Json::from(addr.to_string()))])
+    );
+    let (stream, _) = listener.accept().context("worker: accept")?;
+    serve_session(stream, opts)
+}
+
+/// Read frames until one parses as JSON; `None` on EOF. Invalid JSON gets
+/// a structured `parse` error reply and the read continues (framing is
+/// intact); an over-cap line is unrecoverable and ends the session.
+fn read_msg(codec: &mut TcpCodec) -> Result<Option<Json>> {
+    loop {
+        match codec.read_frame().context("worker: read")? {
+            Frame::Line(line) => {
+                let t = line.trim();
+                if t.is_empty() {
+                    continue;
+                }
+                match Json::parse(t) {
+                    Ok(j) => return Ok(Some(j)),
+                    Err(e) => codec.write_json(&error_response(
+                        Json::Null,
+                        ERR_PARSE,
+                        &format!("invalid request JSON: {e}"),
+                    ))?,
+                }
+            }
+            Frame::Idle => continue,
+            Frame::Eof => return Ok(None),
+            Frame::Overflow => {
+                codec.write_json(&error_response(
+                    Json::Null,
+                    ERR_BAD_REQUEST,
+                    &format!("request line exceeds {} bytes", wire::MAX_FRAME_BYTES),
+                ))?;
+                return Ok(None);
+            }
+            Frame::NotUtf8 => {
+                codec.write_json(&error_response(
+                    Json::Null,
+                    ERR_PARSE,
+                    "request line is not valid UTF-8",
+                ))?;
+            }
+        }
+    }
+}
+
+/// Reply with a structured error object. Returns `Ok(())` so callers can
+/// decide whether the session continues.
+fn send_error(codec: &mut TcpCodec, code: &str, message: &str) -> Result<()> {
+    codec.write_json(&error_response(Json::Null, code, message))?;
+    Ok(())
+}
+
+/// Serve one coordinator connection end to end.
+pub fn serve_session(stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
+    let mut codec = wire::tcp_codec(stream).context("worker: codec")?;
+
+    // --- hello: regenerate the training split from its spec --------------
+    let Some(msg) = read_msg(&mut codec)? else { return Ok(()) };
+    let hello_obj = msg.get("hello");
+    if hello_obj == &Json::Null {
+        return send_error(&mut codec, ERR_PROTOCOL, "expected a hello message first");
+    }
+    let hello = match Hello::from_json(hello_obj) {
+        Ok(h) => h,
+        Err(e) => return send_error(&mut codec, ERR_BAD_REQUEST, &format!("{e}")),
+    };
+    let Some(spec) = all_specs().into_iter().find(|s| s.name == hello.dataset) else {
+        return send_error(
+            &mut codec,
+            ERR_BAD_REQUEST,
+            &format!("unknown dataset '{}'", hello.dataset),
+        );
+    };
+    let kind = match hello.kernel.as_str() {
+        "rbf" => KernelKind::Rbf { gamma: hello.gamma as f32 },
+        "poly" => KernelKind::Poly { gamma: hello.gamma as f32, eta: hello.eta as f32 },
+        "linear" => KernelKind::Linear,
+        other => {
+            return send_error(
+                &mut codec,
+                ERR_BAD_REQUEST,
+                &format!("unknown kernel '{other}'"),
+            )
+        }
+    };
+    // Deterministic per seed: this split is bit-identical to the
+    // coordinator's (and every other worker's) copy.
+    let (tr, _te) =
+        crate::data::synthetic::generate_split(&spec, hello.n_train, hello.n_test, hello.seed);
+    codec.write_json(&Json::obj(vec![
+        ("ok", Json::from(true)),
+        ("n", Json::from(tr.len())),
+    ]))?;
+
+    // --- shard: the row ids this worker owns ------------------------------
+    let Some(msg) = read_msg(&mut codec)? else { return Ok(()) };
+    let shard = match parse_ids(msg.get("shard")) {
+        Ok(ids) if !ids.is_empty() && ids.iter().all(|&i| i < tr.len()) => ids,
+        Ok(_) => {
+            return send_error(&mut codec, ERR_BAD_REQUEST, "shard ids empty or out of range")
+        }
+        Err(_) => return send_error(&mut codec, ERR_PROTOCOL, "expected a shard message"),
+    };
+    codec.write_json(&Json::obj(vec![
+        ("ok", Json::from(true)),
+        ("rows", Json::from(shard.len())),
+    ]))?;
+
+    // --- rounds over this shard's own kernel context ----------------------
+    let kernel = make_kernel(kind, &opts.backend, tr.dim)
+        .map_err(|e| anyhow::anyhow!("worker: kernel backend: {e}"))?;
+    let ctx = KernelContext::new(&tr, kernel.as_ref(), opts.cache_mb << 20);
+    if opts.threads > 0 {
+        ctx.set_threads(opts.threads);
+    }
+    let smo_cfg = SmoConfig { c: hello.c, eps: hello.eps, ..SmoConfig::default() };
+    let mut alpha_local = vec![0f64; shard.len()];
+
+    loop {
+        let Some(msg) = read_msg(&mut codec)? else { return Ok(()) };
+        if msg.get("shutdown") != &Json::Null || msg.get("done") != &Json::Null {
+            codec.write_json(&Json::obj(vec![("ok", Json::from(true))]))?;
+            return Ok(());
+        }
+        let Some(r) = msg.get("round").as_usize() else {
+            send_error(&mut codec, ERR_PROTOCOL, "expected round, done, or shutdown")?;
+            continue;
+        };
+        let (ext_ids, ext_alpha) =
+            match (parse_ids(msg.get("ext_ids")), parse_f64s(msg.get("ext_alpha"))) {
+                (Ok(i), Ok(a)) if i.len() == a.len() => (i, a),
+                _ => {
+                    send_error(
+                        &mut codec,
+                        ERR_PROTOCOL,
+                        "round needs matching ext_ids/ext_alpha arrays",
+                    )?;
+                    continue;
+                }
+            };
+        if ext_ids.iter().any(|&j| j >= tr.len()) {
+            send_error(&mut codec, ERR_BAD_REQUEST, "external ids out of range")?;
+            continue;
+        }
+
+        // Frozen external α enters as the linear offset
+        // q_i = y_i Σ_ext ᾱ_j y_j K(x_i, x_j): one fused decision
+        // dispatch, |shard|×|ext| kernel entries.
+        let mut values = 0u64;
+        let mut solver = SmoSolver::new(ctx.view(&shard), smo_cfg.clone());
+        if !ext_ids.is_empty() {
+            let q = external_offset(&ctx, &tr, &shard, &ext_ids, &ext_alpha);
+            let entries = (shard.len() as u64) * (ext_ids.len() as u64);
+            ctx.count_external_values(entries);
+            values += entries;
+            solver = solver.with_linear_offset(q);
+        }
+        let warm = alpha_local.iter().any(|&a| a != 0.0);
+        let res = solver.solve_warm(warm.then_some(alpha_local.as_slice()), &mut |_| {});
+        values += res.values_computed;
+        alpha_local = res.alpha;
+
+        // Summary reply: only the nonzero α, by global id.
+        let mut ids = Vec::new();
+        let mut al = Vec::new();
+        for (t, &a) in alpha_local.iter().enumerate() {
+            if a != 0.0 {
+                ids.push(shard[t]);
+                al.push(a);
+            }
+        }
+        codec.write_json(&Json::obj(vec![
+            ("round", Json::from(r)),
+            ("ids", super::ids_json(&ids)),
+            ("alpha", Json::arr_f64(&al)),
+            ("objective", Json::from(res.objective)),
+            ("values_computed", Json::from(values as f64)),
+            ("iterations", Json::from(res.iterations)),
+        ]))?;
+    }
+}
+
+/// The linear offset of the block sub-problem: for each shard-local i,
+/// `q_i = y_i Σ_j ᾱ_j y_j K(x_i, x_j)` over the external (id, α) pairs —
+/// one fused decision dispatch with coefficients `ᾱ_j y_j`.
+fn external_offset(
+    ctx: &KernelContext,
+    tr: &Dataset,
+    shard: &[usize],
+    ext_ids: &[usize],
+    ext_alpha: &[f64],
+) -> Vec<f64> {
+    let dim = tr.dim;
+    let mut xq = Vec::with_capacity(shard.len() * dim);
+    let mut qn = Vec::with_capacity(shard.len());
+    for &i in shard {
+        xq.extend_from_slice(tr.row(i));
+        qn.push(ctx.norm(i));
+    }
+    let mut xd = Vec::with_capacity(ext_ids.len() * dim);
+    let mut dn = Vec::with_capacity(ext_ids.len());
+    let mut coef = Vec::with_capacity(ext_ids.len());
+    for (&j, &a) in ext_ids.iter().zip(ext_alpha) {
+        xd.extend_from_slice(tr.row(j));
+        dn.push(ctx.norm(j));
+        coef.push((a * tr.y[j] as f64) as f32);
+    }
+    let mut dv = vec![0f32; shard.len()];
+    ctx.decision_dispatch(&xq, &qn, &xd, &dn, dim, &coef, &mut dv);
+    shard
+        .iter()
+        .zip(&dv)
+        .map(|(&i, &d)| tr.y[i] as f64 * d as f64)
+        .collect()
+}

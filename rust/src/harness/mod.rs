@@ -106,9 +106,55 @@ pub struct Outcome {
     /// Pairwise votes cast evaluating the test set (`--algo ovo`;
     /// rows × machines).
     pub votes: Option<u64>,
+    /// Total bytes on the coordinator↔worker wire, both directions
+    /// (`--distributed` runs; [`crate::distributed`]) — the
+    /// communication-efficiency headline: α summaries only, orders of
+    /// magnitude below one serialized kernel block.
+    pub comm_bytes: Option<u64>,
+    /// Block-minimization rounds the distributed run executed.
+    pub rounds: Option<u64>,
+    /// Kernel entries evaluated across all worker processes
+    /// (`--distributed` runs; each worker's local solves + external-offset
+    /// dispatches).
+    pub worker_values_computed: Option<u64>,
     /// Free-text extras (iteration counts, per-algo details). Structured
     /// metrics live in the typed fields above, not here.
     pub note: String,
+}
+
+/// All counters absent, `simd_tier` "scalar": outcome sites name the
+/// fields their algorithm actually measures and spread the rest, so adding
+/// a counter means touching only the algorithms that produce it.
+impl Default for Outcome {
+    fn default() -> Self {
+        Outcome {
+            algo: "",
+            train_s: 0.0,
+            accuracy: 0.0,
+            objective: None,
+            svs: 0,
+            cache_hit_rate: None,
+            final_rows: None,
+            segment_rows: None,
+            divide_values: None,
+            stitched_values: None,
+            parallel_dispatches: None,
+            stitch_groups: None,
+            registry_bytes: None,
+            simd_tier: "scalar",
+            quantized_values: None,
+            segment_regathers: None,
+            update_values_computed: None,
+            svs_added: None,
+            svs_dropped: None,
+            pair_dispatches: None,
+            votes: None,
+            comm_bytes: None,
+            rounds: None,
+            worker_values_computed: None,
+            note: String::new(),
+        }
+    }
 }
 
 impl Outcome {
@@ -183,6 +229,18 @@ impl Outcome {
             (
                 "votes",
                 self.votes.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "comm_bytes",
+                self.comm_bytes.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "rounds",
+                self.rounds.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "worker_values_computed",
+                self.worker_values_computed.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
             ),
             ("note", Json::from(self.note.as_str())),
         ])
@@ -270,6 +328,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 pair_dispatches: None,
                 votes: None,
                 note: format!("iters={}", res.iterations),
+                ..Default::default()
             }
         }
         Algo::DcSvm | Algo::DcSvmEarly => {
@@ -317,6 +376,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 pair_dispatches: None,
                 votes: None,
                 note,
+                ..Default::default()
             }
         }
         Algo::Cascade => {
@@ -355,6 +415,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 pair_dispatches: None,
                 votes: None,
                 note: format!("levels={:?}", res.level_sv_counts),
+                ..Default::default()
             }
         }
         Algo::LaSvm => {
@@ -393,6 +454,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 pair_dispatches: None,
                 votes: None,
                 note: format!("proc={} reproc={}", res.process_steps, res.reprocess_steps),
+                ..Default::default()
             }
         }
         Algo::Llsvm => {
@@ -432,6 +494,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 pair_dispatches: None,
                 votes: None,
                 note: format!("landmarks={}", cfg.budget),
+                ..Default::default()
             }
         }
         Algo::Fastfood => {
@@ -467,6 +530,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 pair_dispatches: None,
                 votes: None,
                 note: format!("features={}", cfg.budget * 8),
+                ..Default::default()
             }
         }
         Algo::Ltpu => {
@@ -502,6 +566,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 pair_dispatches: None,
                 votes: None,
                 note: format!("units={}", cfg.budget),
+                ..Default::default()
             }
         }
         Algo::Spsvm => {
@@ -542,6 +607,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                 pair_dispatches: None,
                 votes: None,
                 note: format!("basis={}", model.basis_size),
+                ..Default::default()
             }
         }
         Algo::Ovo => {
@@ -582,6 +648,7 @@ pub fn run(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
                     res.model.present.len(),
                     machines
                 ),
+                ..Default::default()
             }
         }
     };

@@ -35,6 +35,7 @@ pub mod runtime;
 pub mod runtime;
 pub mod solver;
 pub mod data;
+pub mod distributed;
 pub mod harness;
 pub mod kernel;
 pub mod dcsvm;

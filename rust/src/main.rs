@@ -7,6 +7,7 @@
 //! dcsvm kmeans  [--dataset ...] [--k-base 4] # partition quality report
 //! dcsvm sweep   [--dataset ...]          # (C, γ) grid, Tables 7–10 style
 //! dcsvm serve   --model m.json [--listen ADDR] [--batch 256] [--workers 4]
+//! dcsvm worker  --listen ADDR            # distributed-training worker
 //! dcsvm info                             # backend/artifact status
 //! ```
 //!
@@ -23,6 +24,7 @@ use dcsvm::harness;
 use dcsvm::kernel::BlockKernel;
 use dcsvm::predict::SvmModel;
 use dcsvm::serving::{ServingContext, ServingModel};
+use dcsvm::util::flags::{FlagSet, FlagSpec};
 use dcsvm::util::json::Json;
 use dcsvm::util::logging;
 use dcsvm::util::prng::Pcg64;
@@ -50,6 +52,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "kmeans" => cmd_kmeans(rest),
         "sweep" => cmd_sweep(rest),
         "serve" => cmd_serve(rest),
+        "worker" => cmd_worker(rest),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -75,6 +78,9 @@ fn print_usage() {
          \x20 serve    --model M [--flags]  persistent server: LIBSVM rows on stdin\n\
          \x20                               or NDJSON over TCP with --listen ADDR\n\
          \x20                               (flags: `dcsvm serve --help`)\n\
+         \x20 worker   --listen ADDR        distributed-training worker: serves one\n\
+         \x20                               coordinator session over the wire\n\
+         \x20                               protocol (flags: `dcsvm worker --help`)\n\
          \x20 info                          backend / artifact status\n\
          \n\
          common flags: --algo {{dcsvm,early,libsvm,cascade,lasvm,llsvm,fastfood,ltpu,spsvm,ovo}}\n\
@@ -91,7 +97,11 @@ fn print_usage() {
          \x20 --registry-cap-mb MB (gathered segment-feature cap; 0 = unlimited)\n\
          \x20 --quant-route {{true,false}} (int8-quantized routing/early prediction;\n\
          \x20              exact solves untouched; default false)\n\
-         \x20 --save-model FILE"
+         \x20 --save-model FILE\n\
+         \x20 --distributed {{true,false}} --workers N --workers-addr LIST --rounds R\n\
+         \x20              (parallel block minimization over worker processes;\n\
+         \x20               spawns N local workers unless --workers-addr names\n\
+         \x20               running `dcsvm worker` endpoints)"
     );
 }
 
@@ -150,6 +160,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if cfg.algo == Algo::Ovo {
         return cmd_train_ovo(&cfg);
     }
+    if cfg.distributed || cfg.workers_addr.is_some() {
+        return cmd_train_distributed(&cfg);
+    }
     let (tr, te) = harness::load_dataset(&cfg)?;
     println!(
         "training {} on {} (n={}, d={}, kernel={} γ={} C={}, backend={})",
@@ -190,6 +203,82 @@ fn cmd_train(args: &[String]) -> Result<()> {
         println!("model saved to {path} ({svs} SVs)");
     }
     Ok(())
+}
+
+/// `dcsvm train --distributed true` (or `--workers-addr ...`): parallel
+/// block minimization over worker processes
+/// ([`dcsvm::distributed::train_distributed`]) — only α summaries cross
+/// the wire, and the structured counters (`comm_bytes`, `rounds`,
+/// `worker_values_computed`) land in the same results.jsonl contract the
+/// benches collect.
+fn cmd_train_distributed(cfg: &RunConfig) -> Result<()> {
+    if cfg.save_model.is_some() {
+        bail!("--save-model is not supported with --distributed (train single-process to save)");
+    }
+    let (tr, te) = harness::load_dataset(cfg)?;
+    println!(
+        "training distributed block minimization on {} (n={}, d={}, kernel={} γ={} C={}, rounds={})",
+        cfg.dataset,
+        tr.len(),
+        tr.dim,
+        cfg.kernel,
+        cfg.gamma,
+        cfg.c,
+        cfg.rounds.max(1)
+    );
+    let out = dcsvm::distributed::train_distributed(cfg, &tr, &te)?;
+    println!(
+        "{}: time={} acc={:.2}% svs={} comm_bytes={} rounds={} worker_values={} {}",
+        out.algo,
+        fmt_secs(out.train_s),
+        100.0 * out.accuracy,
+        out.svs,
+        out.comm_bytes.unwrap_or(0),
+        out.rounds.unwrap_or(0),
+        out.worker_values_computed.unwrap_or(0),
+        out.note
+    );
+    if let Some(obj) = out.objective {
+        println!("objective f(α) = {obj:.6}");
+    }
+    // Same env contract as harness::run — benches collect the distributed
+    // counters from results.jsonl.
+    if let Ok(dir) = std::env::var("DCSVM_RESULTS_DIR") {
+        if !dir.is_empty() {
+            let _ = harness::record_result_to(std::path::Path::new(&dir), cfg, &out);
+        }
+    }
+    Ok(())
+}
+
+/// `dcsvm worker`: serve one distributed-training coordinator session
+/// ([`dcsvm::distributed::run_worker`]). Binds `--listen` (port 0 picks an
+/// ephemeral port) and announces the bound address as one parseable
+/// stderr line, `{"worker_listening": ADDR}`.
+fn cmd_worker(args: &[String]) -> Result<()> {
+    use dcsvm::distributed::{run_worker, WorkerOptions, WORKER_FLAG_SET};
+    let set = &WORKER_FLAG_SET;
+    let Some(pairs) = set.parse(args)? else {
+        println!("{}", set.usage());
+        return Ok(());
+    };
+    let mut listen: Option<String> = None;
+    let mut opts = WorkerOptions::default();
+    for (flag, val) in pairs {
+        match flag {
+            "--listen" => listen = Some(val.to_string()),
+            "--threads" => opts.threads = set.count("--threads", val)?,
+            "--cache-mb" => opts.cache_mb = set.positive("--cache-mb", val)?,
+            "--backend" => opts.backend = val.to_string(),
+            _ => unreachable!("WORKER_FLAGS covers every match arm"),
+        }
+    }
+    let Some(listen) = listen else {
+        bail!("worker requires --listen ADDR\n{}", set.usage());
+    };
+    let listener = std::net::TcpListener::bind(listen.as_str())
+        .with_context(|| format!("worker: bind {listen}"))?;
+    run_worker(listener, &opts)
 }
 
 /// Train and serialize the model `--save-model` writes: an exact
@@ -353,6 +442,7 @@ fn cmd_train_ovo(cfg: &RunConfig) -> Result<()> {
                     "classes={} machines={machines}",
                     res.model.present.len()
                 ),
+                ..Default::default()
             };
             let _ = harness::record_result_to(std::path::Path::new(&dir), cfg, &outcome);
         }
@@ -398,31 +488,70 @@ fn cmd_predict(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `dcsvm update` flag table: (flag, value placeholder, default, help) —
-/// [`update_usage`] renders the usage text from it, mirroring the
-/// serve-flag convention ([`dcsvm::serving::transport::SERVE_FLAGS`]).
-const UPDATE_FLAGS: &[(&str, &str, &str, &str)] = &[
-    ("--model", "FILE", "required", "model JSON to update (train --save-model or a previous update)"),
-    ("--data", "FILE", "required", "new labeled rows, LIBSVM format (empty file = bit-identical no-op)"),
-    ("--out", "FILE", "--model (in place)", "where to write the updated model JSON"),
-    ("--c", "C", "1", "box constraint of the warm re-solve"),
-    ("--eps", "E", "1e-3", "KKT stopping tolerance"),
-    ("--max-iter", "N", "0 (unlimited)", "iteration cap of the warm re-solve"),
-    ("--cache-mb", "MB", "64", "kernel-row cache budget of the update solve"),
-    ("--backend", "KIND", "auto", "kernel backend: auto, native, or pjrt"),
-    ("--threads", "N", "all cores", "worker budget for kernel dispatches"),
-    ("--compare-cold", "FILE", "off", "also cold-retrain on FILE (cumulative LIBSVM data) and report its kernel-value count"),
+/// `dcsvm update` flag table — usage text, README rows, and the strict
+/// parser all render from this one [`FlagSpec`] table (the serve-flag
+/// convention, generalized by [`dcsvm::util::flags`]).
+const UPDATE_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        flag: "--model",
+        value: "FILE",
+        default: "required",
+        help: "model JSON to update (train --save-model or a previous update)",
+    },
+    FlagSpec {
+        flag: "--data",
+        value: "FILE",
+        default: "required",
+        help: "new labeled rows, LIBSVM format (empty file = bit-identical no-op)",
+    },
+    FlagSpec {
+        flag: "--out",
+        value: "FILE",
+        default: "--model (in place)",
+        help: "where to write the updated model JSON",
+    },
+    FlagSpec {
+        flag: "--c",
+        value: "C",
+        default: "1",
+        help: "box constraint of the warm re-solve",
+    },
+    FlagSpec { flag: "--eps", value: "E", default: "1e-3", help: "KKT stopping tolerance" },
+    FlagSpec {
+        flag: "--max-iter",
+        value: "N",
+        default: "0 (unlimited)",
+        help: "iteration cap of the warm re-solve",
+    },
+    FlagSpec {
+        flag: "--cache-mb",
+        value: "MB",
+        default: "64",
+        help: "kernel-row cache budget of the update solve",
+    },
+    FlagSpec {
+        flag: "--backend",
+        value: "KIND",
+        default: "auto",
+        help: "kernel backend: auto, native, or pjrt",
+    },
+    FlagSpec {
+        flag: "--threads",
+        value: "N",
+        default: "all cores",
+        help: "worker budget for kernel dispatches",
+    },
+    FlagSpec {
+        flag: "--compare-cold",
+        value: "FILE",
+        default: "off",
+        help: "also cold-retrain on FILE (cumulative LIBSVM data) and report its kernel-value count",
+    },
 ];
 
-/// The `dcsvm update` usage text, rendered from [`UPDATE_FLAGS`].
-fn update_usage() -> String {
-    let mut s = String::from("usage: dcsvm update --model FILE --data FILE [flags]\n");
-    for (flag, value, default, help) in UPDATE_FLAGS {
-        let head = format!("{flag} {value}");
-        s.push_str(&format!("  {head:<26} {help}  [{default}]\n"));
-    }
-    s
-}
+/// The `dcsvm update` flag surface (usage text + strict parser).
+const UPDATE_FLAG_SET: FlagSet =
+    FlagSet { cmd: "update", required: "--model FILE --data FILE", flags: UPDATE_FLAGS };
 
 /// Warm-started incremental model update (`dcsvm update`): load a trained
 /// model JSON plus new labeled rows, re-solve over `SVs ∪ delta` seeded
@@ -433,7 +562,14 @@ fn update_usage() -> String {
 fn cmd_update(args: &[String]) -> Result<()> {
     use dcsvm::dcsvm::update::{cold_solve, update, UpdateConfig};
 
-    let usage = update_usage();
+    let set = &UPDATE_FLAG_SET;
+    let usage = set.usage();
+    // Strict table-driven parse: unknown flags rejected before a value is
+    // demanded, `--help` anywhere prints usage.
+    let Some(pairs) = set.parse(args)? else {
+        println!("{usage}");
+        return Ok(());
+    };
     let mut model_path: Option<String> = None;
     let mut data_path: Option<String> = None;
     let mut out_path: Option<String> = None;
@@ -444,58 +580,20 @@ fn cmd_update(args: &[String]) -> Result<()> {
     let mut backend = "auto".to_string();
     let mut threads = 0usize;
     let mut cold_path: Option<String> = None;
-    let mut i = 0;
-    while i < args.len() {
-        let key = args[i].as_str();
-        if matches!(key, "--help" | "-h" | "help") {
-            println!("{usage}");
-            return Ok(());
-        }
-        // Reject unknown flags before demanding a value (the serve-flag
-        // convention): `--verbose` errors as unknown, not "needs a value".
-        if !UPDATE_FLAGS.iter().any(|(flag, ..)| *flag == key) {
-            bail!("update: unknown flag '{key}'\n{usage}");
-        }
-        let Some(val) = args.get(i + 1) else {
-            bail!("update: flag {key} needs a value\n{usage}");
-        };
-        let positive = |flag: &str| -> Result<usize> {
-            let n: usize = val.parse().map_err(|_| {
-                anyhow!("update: {flag} needs a positive integer, got '{val}'\n{usage}")
-            })?;
-            if n == 0 {
-                bail!("update: {flag} must be at least 1\n{usage}");
-            }
-            Ok(n)
-        };
-        let count = |flag: &str| -> Result<usize> {
-            val.parse().map_err(|_| {
-                anyhow!("update: {flag} needs a non-negative integer, got '{val}'\n{usage}")
-            })
-        };
-        let positive_f = |flag: &str| -> Result<f64> {
-            let f: f64 = val.parse().map_err(|_| {
-                anyhow!("update: {flag} needs a positive number, got '{val}'\n{usage}")
-            })?;
-            if !f.is_finite() || f <= 0.0 {
-                bail!("update: {flag} must be positive\n{usage}");
-            }
-            Ok(f)
-        };
-        match key {
-            "--model" => model_path = Some(val.clone()),
-            "--data" => data_path = Some(val.clone()),
-            "--out" => out_path = Some(val.clone()),
-            "--c" => c = positive_f("--c")?,
-            "--eps" => eps = positive_f("--eps")?,
-            "--max-iter" => max_iter = count("--max-iter")?,
-            "--cache-mb" => cache_mb = positive("--cache-mb")?,
-            "--backend" => backend = val.clone(),
-            "--threads" => threads = count("--threads")?,
-            "--compare-cold" => cold_path = Some(val.clone()),
+    for (flag, val) in pairs {
+        match flag {
+            "--model" => model_path = Some(val.to_string()),
+            "--data" => data_path = Some(val.to_string()),
+            "--out" => out_path = Some(val.to_string()),
+            "--c" => c = set.positive_f("--c", val)?,
+            "--eps" => eps = set.positive_f("--eps", val)?,
+            "--max-iter" => max_iter = set.count("--max-iter", val)?,
+            "--cache-mb" => cache_mb = set.positive("--cache-mb", val)?,
+            "--backend" => backend = val.to_string(),
+            "--threads" => threads = set.count("--threads", val)?,
+            "--compare-cold" => cold_path = Some(val.to_string()),
             _ => unreachable!("UPDATE_FLAGS covers every match arm"),
         }
-        i += 2;
     }
     let Some(model_path) = model_path else {
         bail!("update requires --model FILE\n{usage}");
@@ -623,6 +721,7 @@ fn cmd_update(args: &[String]) -> Result<()> {
                 pair_dispatches: None,
                 votes: None,
                 note: format!("margin_violations={}", res.margin_violations),
+                ..Default::default()
             };
             let _ = harness::record_result_to(
                 std::path::Path::new(&dir),
@@ -734,7 +833,14 @@ fn cmd_info() -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     use dcsvm::serving::transport::{self, ServeCore};
 
+    let set = &transport::SERVE_FLAG_SET;
     let usage = transport::serve_usage();
+    // Strict table-driven parse against SERVE_FLAGS: unknown flags are
+    // rejected before a value is demanded, `--help` anywhere prints usage.
+    let Some(pairs) = set.parse(args)? else {
+        println!("{usage}");
+        return Ok(());
+    };
     let mut model_path: Option<String> = None;
     let mut listen: Option<String> = None;
     let mut batch = 256usize;
@@ -744,55 +850,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut backend = "auto".to_string();
     let mut quant_route = false;
     let mut allow_swap = false;
-    let mut i = 0;
-    while i < args.len() {
-        let key = args[i].as_str();
-        if matches!(key, "--help" | "-h" | "help") {
-            println!("{usage}");
-            return Ok(());
+    for (flag, val) in pairs {
+        match flag {
+            "--model" => model_path = Some(val.to_string()),
+            "--listen" => listen = Some(val.to_string()),
+            "--batch" => batch = set.positive("--batch", val)?,
+            "--workers" => workers = set.positive("--workers", val)?,
+            "--conns" => conns = set.positive("--conns", val)?,
+            "--cache-mb" => cache_mb = set.positive("--cache-mb", val)?,
+            "--backend" => backend = val.to_string(),
+            "--quant-route" => quant_route = set.boolean("--quant-route", val)?,
+            "--allow-swap" => allow_swap = set.boolean("--allow-swap", val)?,
+            _ => unreachable!("SERVE_FLAGS covers every match arm"),
         }
-        // Reject unknown flags before demanding a value, so `--verbose`
-        // errors as unknown rather than "needs a value".
-        if !matches!(
-            key,
-            "--model" | "--listen" | "--batch" | "--workers" | "--conns" | "--cache-mb"
-                | "--backend" | "--quant-route" | "--allow-swap"
-        ) {
-            bail!("serve: unknown flag '{key}'\n{usage}");
-        }
-        let Some(val) = args.get(i + 1) else {
-            bail!("serve: flag {key} needs a value\n{usage}");
-        };
-        let positive = |flag: &str| -> Result<usize> {
-            let n: usize = val.parse().map_err(|_| {
-                anyhow!("serve: {flag} needs a positive integer, got '{val}'\n{usage}")
-            })?;
-            if n == 0 {
-                bail!("serve: {flag} must be at least 1\n{usage}");
-            }
-            Ok(n)
-        };
-        match key {
-            "--model" => model_path = Some(val.clone()),
-            "--listen" => listen = Some(val.clone()),
-            "--batch" => batch = positive("--batch")?,
-            "--workers" => workers = positive("--workers")?,
-            "--conns" => conns = positive("--conns")?,
-            "--cache-mb" => cache_mb = positive("--cache-mb")?,
-            "--backend" => backend = val.clone(),
-            "--quant-route" => {
-                quant_route = val.parse().map_err(|_| {
-                    anyhow!("serve: --quant-route needs true or false, got '{val}'\n{usage}")
-                })?;
-            }
-            "--allow-swap" => {
-                allow_swap = val.parse().map_err(|_| {
-                    anyhow!("serve: --allow-swap needs true or false, got '{val}'\n{usage}")
-                })?;
-            }
-            _ => unreachable!("flag allow-list above covers every match arm"),
-        }
-        i += 2;
     }
     let Some(model_path) = model_path else {
         bail!("serve requires --model FILE\n{usage}");

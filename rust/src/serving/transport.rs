@@ -33,8 +33,13 @@
 //! usage text ([`serve_usage`]) and README's flag table ([`readme_row`])
 //! are both rendered from that one table, and `tests/docs_sync.rs` fails
 //! the build when they drift.
+//!
+//! The line framing itself — read-poll accumulation, the
+//! [`MAX_REQUEST_BYTES`] cap, UTF-8 validation, structured error objects —
+//! lives in [`crate::util::wire`], shared with the distributed worker
+//! protocol; this module maps each [`Frame`] to serve policy.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -44,19 +49,18 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::{BatchStats, ServingContext, ServingModel, SwapStats};
 use crate::kernel::{BlockKernel, KernelKind};
+use crate::util::flags::FlagSet;
 use crate::util::json::Json;
 use crate::util::threadpool::WorkQueue;
+use crate::util::wire::{self, error_response, with_id, Codec, Frame};
 
 // ---------------------------------------------------------------------------
 // Flag table — the single source of truth for `dcsvm serve` flags.
 
-/// One `dcsvm serve` flag: name, value placeholder, default, one-line help.
-pub struct FlagSpec {
-    pub flag: &'static str,
-    pub value: &'static str,
-    pub default: &'static str,
-    pub help: &'static str,
-}
+// The generic spec/table machinery now lives in `util::flags` (shared with
+// `update`, `train`, and the distributed `worker` subcommand); the serve
+// names re-export from here so existing imports keep working.
+pub use crate::util::flags::{readme_row, FlagSpec};
 
 /// Every `dcsvm serve` flag. The CLI usage text ([`serve_usage`]) and the
 /// README flag table ([`readme_row`]) are both rendered from this list, so
@@ -119,20 +123,14 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
     },
 ];
 
+/// The serve flag surface as a parseable [`FlagSet`]: `cmd_serve` parses
+/// against it, [`serve_usage`] and the README table render from it.
+pub const SERVE_FLAG_SET: FlagSet =
+    FlagSet { cmd: "serve", required: "--model FILE", flags: SERVE_FLAGS };
+
 /// The `dcsvm serve` usage text, rendered from [`SERVE_FLAGS`].
 pub fn serve_usage() -> String {
-    let mut s = String::from("usage: dcsvm serve --model FILE [flags]\n");
-    for f in SERVE_FLAGS {
-        let head = format!("{} {}", f.flag, f.value);
-        s.push_str(&format!("  {head:<26} {}  [{}]\n", f.help, f.default));
-    }
-    s
-}
-
-/// One README flag-table row, rendered from a [`FlagSpec`]. README.md must
-/// contain this exact line for every flag (`tests/docs_sync.rs`).
-pub fn readme_row(f: &FlagSpec) -> String {
-    format!("| `{} {}` | {} | {} |", f.flag, f.value, f.default, f.help)
+    SERVE_FLAG_SET.usage()
 }
 
 // ---------------------------------------------------------------------------
@@ -153,38 +151,10 @@ pub const ERR_SWAP_FAILED: &str = "swap_failed";
 pub const ERROR_CODES: &[&str] =
     &[ERR_PARSE, ERR_BAD_REQUEST, ERR_DIM_MISMATCH, ERR_SWAP_FAILED];
 
-/// Hard cap on one socket request line. A client exceeding it gets a
-/// `bad_request` error object and its connection is closed (line framing
-/// is unrecoverable mid-line), so a single malicious or buggy client
-/// cannot grow the server's read buffer without bound (PROTOCOL.md §2).
-pub const MAX_REQUEST_BYTES: usize = 8 << 20;
-
-/// How often a connection worker's blocking read wakes to re-check the
-/// shutdown flag: bounds how long an idle connection can delay a graceful
-/// shutdown (PROTOCOL.md §2).
-pub const READ_POLL: Duration = Duration::from_millis(250);
-
-/// Response-object builder applying the id-echo rule once: the request's
-/// `id` is included iff the request carried one (absent → no `"id"` key,
-/// never a spurious null).
-fn with_id(id: Json, rest: Vec<(&str, Json)>) -> Json {
-    let mut pairs = Vec::with_capacity(rest.len() + 1);
-    if !matches!(id, Json::Null) {
-        pairs.push(("id", id));
-    }
-    pairs.extend(rest);
-    Json::obj(pairs)
-}
-
-fn error_response(id: Json, code: &str, message: &str) -> Json {
-    with_id(
-        id,
-        vec![(
-            "error",
-            Json::obj(vec![("code", Json::from(code)), ("message", Json::from(message))]),
-        )],
-    )
-}
+// The per-line byte cap and the read-poll interval are wire-layer
+// properties now (shared with the worker protocol); the serve-side names
+// are kept as re-exports.
+pub use crate::util::wire::{MAX_FRAME_BYTES as MAX_REQUEST_BYTES, READ_POLL};
 
 // ---------------------------------------------------------------------------
 // The shared request core.
@@ -525,96 +495,63 @@ fn handle_connection(core: &ServeCore, stream: TcpStream, conn_id: usize) {
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".to_string());
-    let Ok(read_half) = stream.try_clone() else { return };
-    let _ = read_half.set_read_timeout(Some(READ_POLL));
-    let mut reader = BufReader::new(read_half);
-    let mut writer = stream;
+    let Ok(mut codec) = wire::tcp_codec(stream) else { return };
     let mut conn_totals = BatchStats::default();
     let mut requests = 0u64;
-    // Raw bytes, not a String: `read_line`'s UTF-8 guard would DISCARD
-    // bytes already consumed from the socket if a read-timeout tick fired
-    // while the buffer ended mid-multibyte character. `read_until` keeps
-    // every consumed byte across ticks; UTF-8 is validated once per
-    // complete line.
-    let mut buf: Vec<u8> = Vec::new();
-    'conn: loop {
-        // A back-to-back sender never hits the read-timeout branch, so the
+    loop {
+        // A back-to-back sender never produces an Idle frame, so the
         // shutdown flag must also be checked between served requests or a
-        // busy client could stall a graceful shutdown forever.
+        // busy client could stall a graceful shutdown forever. An Idle
+        // frame (read-poll tick) loops back here too — that is how an
+        // idle connection notices a shutdown requested elsewhere.
         if core.shutdown_requested() {
             break;
         }
-        buf.clear();
-        // Read one request line: accumulate across read-timeout ticks
-        // (partial reads stay in `buf`), bail out on shutdown while
-        // idle, and cap the line length.
-        loop {
-            let budget = (MAX_REQUEST_BYTES - buf.len()) as u64 + 1;
-            match reader.by_ref().take(budget).read_until(b'\n', &mut buf) {
-                Ok(0) => {
-                    if buf.is_empty() {
-                        break 'conn; // clean EOF between requests
-                    }
-                    break; // final request line without trailing newline
-                }
-                Ok(_) => {
-                    if buf.len() > MAX_REQUEST_BYTES {
-                        let resp = error_response(
-                            Json::Null,
-                            ERR_BAD_REQUEST,
-                            &format!("request line exceeds {MAX_REQUEST_BYTES} bytes"),
-                        );
-                        let mut text = resp.to_string();
-                        text.push('\n');
-                        let _ = writer.write_all(text.as_bytes());
-                        break 'conn; // line framing lost mid-line: close
-                    }
-                    if buf.ends_with(b"\n") {
-                        break;
-                    }
-                    // No newline and under budget: EOF mid-line — the next
-                    // read returns Ok(0) and serves this final line.
-                }
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    ) =>
-                {
-                    if core.shutdown_requested() {
-                        break 'conn; // idle at shutdown: close and drain
-                    }
-                }
-                Err(_) => break 'conn,
-            }
-        }
-        let Ok(line) = std::str::from_utf8(&buf) else {
-            // Framing is intact (we read to a newline), so answer with a
-            // structured error and keep the connection usable.
-            let resp =
-                error_response(Json::Null, ERR_PARSE, "request line is not valid UTF-8");
-            let mut text = resp.to_string();
-            text.push('\n');
-            if writer.write_all(text.as_bytes()).is_err() || writer.flush().is_err() {
-                break;
-            }
-            continue;
+        let frame = match codec.read_frame() {
+            Ok(f) => f,
+            Err(_) => break,
         };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let out = handle_request(core, line);
-        if let Some(stats) = &out.stats {
-            conn_totals.merge(stats);
-        }
-        requests += 1;
-        let mut text = out.response.to_string();
-        text.push('\n');
-        if writer.write_all(text.as_bytes()).is_err() || writer.flush().is_err() {
-            break;
-        }
-        if out.shutdown {
-            break;
+        match frame {
+            Frame::Eof => break, // clean EOF between requests
+            Frame::Idle => continue,
+            Frame::Overflow => {
+                let resp = error_response(
+                    Json::Null,
+                    ERR_BAD_REQUEST,
+                    &format!("request line exceeds {MAX_REQUEST_BYTES} bytes"),
+                );
+                let _ = codec.write_json(&resp);
+                break; // line framing lost mid-line: close
+            }
+            Frame::NotUtf8 => {
+                // Framing is intact (the codec read to a newline), so
+                // answer with a structured error and keep the connection
+                // usable.
+                let resp = error_response(
+                    Json::Null,
+                    ERR_PARSE,
+                    "request line is not valid UTF-8",
+                );
+                if codec.write_json(&resp).is_err() {
+                    break;
+                }
+            }
+            Frame::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let out = handle_request(core, &line);
+                if let Some(stats) = &out.stats {
+                    conn_totals.merge(stats);
+                }
+                requests += 1;
+                if codec.write_json(&out.response).is_err() {
+                    break;
+                }
+                if out.shutdown {
+                    break;
+                }
+            }
         }
     }
     eprintln!(
@@ -781,8 +718,7 @@ pub fn run_stdio(core: &ServeCore, batch: usize) -> Result<()> {
 /// one response line back. Test and example harness — not a production
 /// SDK (no timeouts, no reconnects).
 pub struct ServeClient {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    codec: Codec<BufReader<TcpStream>, TcpStream>,
 }
 
 impl ServeClient {
@@ -790,22 +726,29 @@ impl ServeClient {
         let stream = TcpStream::connect(addr).context("connect to serve socket")?;
         let reader =
             BufReader::new(stream.try_clone().context("clone serve socket")?);
-        Ok(ServeClient { reader, writer: stream })
+        // No read timeout (the client blocks until its server answers) and
+        // no response cap (it trusts its own server), matching read_line.
+        Ok(ServeClient {
+            codec: Codec::new(reader, stream).with_max_bytes(usize::MAX),
+        })
     }
 
     /// One request/response round trip; returns the parsed response object
     /// (which may be an error object — the caller inspects `"error"`).
     pub fn request(&mut self, req: &Json) -> Result<Json> {
-        let mut line = req.to_string();
-        line.push('\n');
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.flush()?;
-        let mut resp = String::new();
-        let n = self.reader.read_line(&mut resp)?;
-        if n == 0 {
-            bail!("server closed the connection");
+        self.codec.write_json(req)?;
+        loop {
+            match self.codec.read_frame()? {
+                Frame::Line(line) => {
+                    return Json::parse(line.trim_end())
+                        .map_err(|e| anyhow!("bad response line: {e}"));
+                }
+                Frame::Eof => bail!("server closed the connection"),
+                Frame::Idle => continue, // reachable only with a timeout set
+                Frame::Overflow => bail!("response line exceeds the frame cap"),
+                Frame::NotUtf8 => bail!("response line is not valid UTF-8"),
+            }
         }
-        Json::parse(resp.trim_end()).map_err(|e| anyhow!("bad response line: {e}"))
     }
 
     /// Decide a batch of query rows (each of the served model's dim).

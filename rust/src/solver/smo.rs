@@ -117,12 +117,45 @@ pub struct SmoSolver<'a> {
     /// Local labels, gathered once (hot-loop friendly).
     y: Vec<i8>,
     cfg: SmoConfig,
+    /// Optional fixed linear term: solve
+    /// `min ½αᵀQα − eᵀα + qᵀα  s.t. 0 ≤ α ≤ C` instead of the plain dual.
+    /// This is the restricted block subproblem of parallel block
+    /// minimization (arXiv:1608.02010): freezing the out-of-block
+    /// variables ᾱ adds the constant-gradient term
+    /// `q_i = y_i Σ_{j∉B} ᾱ_j y_j K(x_i, x_j)` to block B's dual. The
+    /// maintained gradient becomes `g = Qα − e + q`; every KKT test reads
+    /// `g` unchanged, and the reported objective adds `½ qᵀα` on top of
+    /// the [`objective_from_grad`] identity.
+    linear_offset: Option<Vec<f64>>,
 }
 
 impl<'a> SmoSolver<'a> {
     pub fn new(view: KernelView<'a>, cfg: SmoConfig) -> Self {
         let y = view.labels();
-        SmoSolver { view, y, cfg }
+        SmoSolver { view, y, cfg, linear_offset: None }
+    }
+
+    /// Solve with a fixed linear term `q` added to the dual gradient (one
+    /// entry per view-local variable): the distributed block subproblem.
+    /// An all-zero `q` is bit-identical to the plain solve.
+    pub fn with_linear_offset(mut self, q: Vec<f64>) -> Self {
+        assert_eq!(q.len(), self.view.len(), "linear offset length != view length");
+        self.linear_offset = Some(q);
+        self
+    }
+
+    /// The true objective of the problem being solved: the plain dual
+    /// identity from the maintained gradient, plus the `½ qᵀα` correction
+    /// when a linear offset is active (there `g = Qα − e + q`, so
+    /// `½ Σ α(g−1)` counts only half the linear term).
+    fn objective_value(&self, alpha: &[f64], grad: &[f64]) -> f64 {
+        let base = objective_from_grad(alpha, grad);
+        match &self.linear_offset {
+            Some(q) => {
+                base + 0.5 * alpha.iter().zip(q).map(|(&a, &qi)| a * qi).sum::<f64>()
+            }
+            None => base,
+        }
     }
 
     /// Solve from zero.
@@ -150,7 +183,11 @@ impl<'a> SmoSolver<'a> {
             }
             None => vec![0f64; n],
         };
-        let mut grad = vec![-1f64; n];
+        // g = Qα − e (+ q with a linear offset); at α = 0 that is q − e.
+        let mut grad: Vec<f64> = match &self.linear_offset {
+            Some(q) => q.iter().map(|&qi| qi - 1.0).collect(),
+            None => vec![-1f64; n],
+        };
         if alpha.iter().any(|&a| a != 0.0) {
             self.init_gradient_from(&alpha, &mut grad);
         }
@@ -163,9 +200,11 @@ impl<'a> SmoSolver<'a> {
 
         // Incrementally-maintained objective (exact: each coordinate step
         // changes f by δ·g_i + ½δ²Q_ii even under shrinking, where g_i is
-        // the pre-update gradient). Used for progress reporting; the final
-        // result recomputes from the reconstructed gradient.
-        let mut obj = objective_from_grad(&alpha, &grad);
+        // the pre-update gradient — with a linear offset, g_i carries the
+        // constant q_i so the same increment stays exact). Used for
+        // progress reporting; the final result recomputes from the
+        // reconstructed gradient.
+        let mut obj = self.objective_value(&alpha, &grad);
 
         // Warm-start shrink: when ᾱ comes from the divide phase the SV set
         // is already ~identified (paper Theorem 2 / Figure 2), so variables
@@ -300,7 +339,7 @@ impl<'a> SmoSolver<'a> {
             self.reconstruct_gradient(&alpha, &mut grad, &active);
         }
 
-        let objective = objective_from_grad(&alpha, &grad);
+        let objective = self.objective_value(&alpha, &grad);
         let final_violation = max_violation(&alpha, &grad, c);
         let sv_count = alpha.iter().filter(|&&a| a > 0.0).count();
         let bounded = alpha.iter().filter(|&&a| a >= c).count();
@@ -400,6 +439,11 @@ impl<'a> SmoSolver<'a> {
         for (j, g) in grad.iter_mut().enumerate() {
             *g = (self.y[j] as f64) * *g - 1.0;
         }
+        if let Some(q) = &self.linear_offset {
+            for (g, &qi) in grad.iter_mut().zip(q) {
+                *g += qi;
+            }
+        }
     }
 
     /// Rebuild grad for variables outside `active` (the shrunk ones).
@@ -416,8 +460,9 @@ impl<'a> SmoSolver<'a> {
         let sv: Vec<usize> = (0..n).filter(|&i| alpha[i] != 0.0).collect();
         let mut dv = vec![0f64; todo.len()];
         self.decision_into(&sv, alpha, &todo, &mut dv);
+        let q = self.linear_offset.as_deref();
         for (t, &j) in todo.iter().enumerate() {
-            grad[j] = (self.y[j] as f64) * dv[t] - 1.0;
+            grad[j] = (self.y[j] as f64) * dv[t] - 1.0 + q.map_or(0.0, |q| q[j]);
         }
     }
 
@@ -648,6 +693,90 @@ mod tests {
         for (a, b) in via_view.alpha.iter().zip(&via_subset.alpha) {
             assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
+    }
+
+    /// An all-zero linear offset must not change the solve at all — same
+    /// trajectory, bit-identical α and objective.
+    #[test]
+    fn zero_linear_offset_is_bit_identical() {
+        let mut rng = Pcg64::new(21);
+        let ds = generate(&covtype_like(), 100, &mut rng);
+        let k = kernel();
+        let ctx = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
+        let plain = SmoSolver::new(ctx.view_full(), cfg(2.0, 1e-7)).solve();
+        let ctx2 = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
+        let offset = SmoSolver::new(ctx2.view_full(), cfg(2.0, 1e-7))
+            .with_linear_offset(vec![0.0; ds.len()])
+            .solve();
+        assert_eq!(plain.iterations, offset.iterations);
+        assert_eq!(plain.alpha, offset.alpha);
+        assert_eq!(plain.objective, offset.objective);
+    }
+
+    /// The restricted block subproblem (external ᾱ frozen into a linear
+    /// offset — the distributed round's local solve) must match a dense
+    /// projected-gradient oracle on the same offset problem.
+    #[test]
+    fn linear_offset_matches_dense_oracle() {
+        let mut rng = Pcg64::new(22);
+        let n = 90;
+        let ds = generate(&covtype_like(), n, &mut rng);
+        let k = kernel();
+        let c = 2.0;
+        let members: Vec<usize> = (0..n).filter(|i| i % 2 == 0).collect();
+        let ext: Vec<usize> = (0..n).filter(|i| i % 2 == 1).collect();
+        let q_full = dense_q(&ds, &k);
+        let mut aext = vec![0f64; n];
+        for (t, &j) in ext.iter().enumerate() {
+            aext[j] = (0.1 + 0.02 * t as f64).min(c);
+        }
+        // q_i = Σ_{j external} ᾱ_j Q_ij for block members i.
+        let q_off: Vec<f64> = members
+            .iter()
+            .map(|&i| ext.iter().map(|&j| aext[j] * q_full[i * n + j]).sum())
+            .collect();
+        let ctx = KernelContext::new(&ds, &k, DEFAULT_CACHE_BYTES);
+        let res = SmoSolver::new(ctx.view(&members), cfg(c, 1e-8))
+            .with_linear_offset(q_off.clone())
+            .solve();
+        // Dense oracle: projected gradient with the gradient seeded at
+        // q − e (same loop as ProjGradRef, plus the offset).
+        let sub = ds.subset(&members, "blk");
+        let qb = dense_q(&sub, &k);
+        let nb = members.len();
+        let lip = (0..nb)
+            .map(|i| qb[i * nb..(i + 1) * nb].iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+            .max(1e-12);
+        let step = 1.0 / lip;
+        let mut alpha = vec![0f64; nb];
+        let mut grad: Vec<f64> = q_off.iter().map(|&q| q - 1.0).collect();
+        for _ in 0..200_000 {
+            let mut moved = 0.0f64;
+            for i in 0..nb {
+                let target = (alpha[i] - step * grad[i]).clamp(0.0, c);
+                let delta = target - alpha[i];
+                if delta != 0.0 {
+                    alpha[i] = target;
+                    moved = moved.max(delta.abs());
+                    for j in 0..nb {
+                        grad[j] += delta * qb[j * nb + i];
+                    }
+                }
+            }
+            if moved < 1e-10 {
+                break;
+            }
+        }
+        let ref_obj = objective_from_grad(&alpha, &grad)
+            + 0.5 * alpha.iter().zip(&q_off).map(|(&a, &q)| a * q).sum::<f64>();
+        assert!(
+            (res.objective - ref_obj).abs() < 1e-5 * (1.0 + ref_obj.abs()),
+            "smo-with-offset {} vs oracle {}",
+            res.objective,
+            ref_obj
+        );
+        assert!(res.final_violation < 1e-8 * 10.0, "viol {}", res.final_violation);
     }
 
     /// Property: on random small problems the solver is feasible, ε-optimal,

@@ -1,0 +1,189 @@
+//! Declarative CLI flag specs — one table per subcommand.
+//!
+//! `dcsvm serve` proved the pattern out: a single `&[FlagSpec]` table is
+//! the source of truth for the usage text, the README flag table, AND the
+//! strict parser (unknown flags rejected before a value is demanded, so
+//! `--verbose` errors as unknown rather than "needs a value"). This
+//! module generalizes it so `serve`, `update`, `worker`, and the
+//! distributed `train` flags all render and parse from one definition
+//! each — `tests/docs_sync.rs` and `tests/cli_roundtrip.rs` pin both
+//! sides.
+
+use anyhow::{anyhow, bail, Result};
+
+/// One CLI flag: name, value placeholder, default, one-line help.
+pub struct FlagSpec {
+    pub flag: &'static str,
+    pub value: &'static str,
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+/// One README flag-table row, rendered from a [`FlagSpec`]. README.md must
+/// contain this exact line for every flag of a documented table
+/// (`tests/docs_sync.rs`).
+pub fn readme_row(f: &FlagSpec) -> String {
+    format!("| `{} {}` | {} | {} |", f.flag, f.value, f.default, f.help)
+}
+
+/// A subcommand's complete flag surface: the command name (error-message
+/// prefix), the required-flags fragment of the usage line, and the table.
+pub struct FlagSet {
+    pub cmd: &'static str,
+    /// Rendered between the command and `[flags]` in the usage line, e.g.
+    /// `"--model FILE"`; empty when every flag is optional.
+    pub required: &'static str,
+    pub flags: &'static [FlagSpec],
+}
+
+impl FlagSet {
+    /// The `dcsvm {cmd} --help` text, rendered from the table.
+    pub fn usage(&self) -> String {
+        let mut s = if self.required.is_empty() {
+            format!("usage: dcsvm {} [flags]\n", self.cmd)
+        } else {
+            format!("usage: dcsvm {} {} [flags]\n", self.cmd, self.required)
+        };
+        for f in self.flags {
+            let head = format!("{} {}", f.flag, f.value);
+            s.push_str(&format!("  {head:<26} {}  [{}]\n", f.help, f.default));
+        }
+        s
+    }
+
+    /// Strict `--key value` parse against the table: `Ok(None)` when help
+    /// was requested (the caller prints [`Self::usage`]), otherwise the
+    /// `(flag, value)` pairs in argument order. Unknown flags are rejected
+    /// BEFORE a value is demanded; a known flag with no value errors as
+    /// such.
+    pub fn parse<'a>(&self, args: &'a [String]) -> Result<Option<Vec<(&'static str, &'a str)>>> {
+        let mut pairs = Vec::with_capacity(args.len() / 2);
+        let mut i = 0;
+        while i < args.len() {
+            let key = args[i].as_str();
+            if matches!(key, "--help" | "-h" | "help") {
+                return Ok(None);
+            }
+            let Some(spec) = self.flags.iter().find(|f| f.flag == key) else {
+                bail!("{}: unknown flag '{key}'\n{}", self.cmd, self.usage());
+            };
+            let Some(val) = args.get(i + 1) else {
+                bail!("{}: flag {key} needs a value\n{}", self.cmd, self.usage());
+            };
+            pairs.push((spec.flag, val.as_str()));
+            i += 2;
+        }
+        Ok(Some(pairs))
+    }
+
+    // --- shared value validators (error text embeds cmd + usage) ---
+
+    /// A positive integer (≥ 1).
+    pub fn positive(&self, flag: &str, val: &str) -> Result<usize> {
+        let n: usize = val.parse().map_err(|_| {
+            anyhow!(
+                "{}: {flag} needs a positive integer, got '{val}'\n{}",
+                self.cmd,
+                self.usage()
+            )
+        })?;
+        if n == 0 {
+            bail!("{}: {flag} must be at least 1\n{}", self.cmd, self.usage());
+        }
+        Ok(n)
+    }
+
+    /// A non-negative integer (0 allowed — "unlimited"/"default" counts).
+    pub fn count(&self, flag: &str, val: &str) -> Result<usize> {
+        val.parse().map_err(|_| {
+            anyhow!(
+                "{}: {flag} needs a non-negative integer, got '{val}'\n{}",
+                self.cmd,
+                self.usage()
+            )
+        })
+    }
+
+    /// A finite positive float.
+    pub fn positive_f(&self, flag: &str, val: &str) -> Result<f64> {
+        let f: f64 = val.parse().map_err(|_| {
+            anyhow!(
+                "{}: {flag} needs a positive number, got '{val}'\n{}",
+                self.cmd,
+                self.usage()
+            )
+        })?;
+        if !f.is_finite() || f <= 0.0 {
+            bail!("{}: {flag} must be positive\n{}", self.cmd, self.usage());
+        }
+        Ok(f)
+    }
+
+    /// A `true`/`false` literal.
+    pub fn boolean(&self, flag: &str, val: &str) -> Result<bool> {
+        val.parse().map_err(|_| {
+            anyhow!(
+                "{}: {flag} needs true or false, got '{val}'\n{}",
+                self.cmd,
+                self.usage()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SET: FlagSet = FlagSet {
+        cmd: "demo",
+        required: "--in FILE",
+        flags: &[
+            FlagSpec { flag: "--in", value: "FILE", default: "required", help: "input file" },
+            FlagSpec { flag: "--n", value: "N", default: "4", help: "a count" },
+        ],
+    };
+
+    fn args(a: &[&str]) -> Vec<String> {
+        a.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn usage_lists_every_flag() {
+        let u = SET.usage();
+        assert!(u.starts_with("usage: dcsvm demo --in FILE [flags]\n"), "{u}");
+        for f in SET.flags {
+            assert!(u.contains(f.flag) && u.contains(f.help), "{u}");
+        }
+    }
+
+    #[test]
+    fn parse_is_strict_and_ordered() {
+        let a = args(&["--n", "2", "--in", "x"]);
+        let pairs = SET.parse(&a).unwrap().unwrap();
+        assert_eq!(pairs, vec![("--n", "2"), ("--in", "x")]);
+        assert!(SET.parse(&args(&["--help"])).unwrap().is_none());
+        // Unknown flags are rejected before a value is demanded.
+        let e = SET.parse(&args(&["--bogus"])).unwrap_err().to_string();
+        assert!(e.contains("demo: unknown flag '--bogus'"), "{e}");
+        assert!(e.contains("usage:"), "{e}");
+        let e = SET.parse(&args(&["--n"])).unwrap_err().to_string();
+        assert!(e.contains("demo: flag --n needs a value"), "{e}");
+    }
+
+    #[test]
+    fn validators_name_flag_and_print_usage() {
+        assert_eq!(SET.positive("--n", "3").unwrap(), 3);
+        let e = SET.positive("--n", "0").unwrap_err().to_string();
+        assert!(e.contains("--n must be at least 1") && e.contains("usage:"), "{e}");
+        let e = SET.positive("--n", "abc").unwrap_err().to_string();
+        assert!(e.contains("positive integer"), "{e}");
+        assert_eq!(SET.count("--n", "0").unwrap(), 0);
+        assert_eq!(SET.positive_f("--n", "0.5").unwrap(), 0.5);
+        assert!(SET.positive_f("--n", "-1").is_err());
+        assert!(SET.positive_f("--n", "inf").is_err());
+        assert!(SET.boolean("--n", "true").unwrap());
+        let e = SET.boolean("--n", "yes").unwrap_err().to_string();
+        assert!(e.contains("needs true or false"), "{e}");
+    }
+}

@@ -1,11 +1,14 @@
 //! Self-contained substrates the offline environment forces us to carry:
 //! PRNG (`prng`), JSON (`json`), thread pool (`threadpool`), timers
-//! (`timer`), logging (`logging`), and a mini property-test harness
-//! (`proptest`).
+//! (`timer`), logging (`logging`), a mini property-test harness
+//! (`proptest`), the shared NDJSON wire layer (`wire`), and declarative
+//! CLI flag tables (`flags`).
 
+pub mod flags;
 pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod proptest;
 pub mod threadpool;
 pub mod timer;
+pub mod wire;

@@ -1,0 +1,276 @@
+//! Shared newline-delimited-JSON wire layer.
+//!
+//! One line, one message: every TCP protocol in this crate — the serve
+//! front-end (`serving/transport.rs`) and the distributed worker protocol
+//! (`distributed/`) — frames messages as newline-terminated JSON objects.
+//! This module owns the framing so the two protocols cannot drift:
+//!
+//! - [`Codec`] — a reader/writer pair with the line-accumulation loop:
+//!   reads poll on a timeout (so a blocked reader can notice a shutdown
+//!   flag), partial reads survive across poll ticks, line length is
+//!   capped ([`MAX_FRAME_BYTES`]), and UTF-8 is validated once per
+//!   complete line. Both directions count bytes ([`Codec::bytes_in`] /
+//!   [`Codec::bytes_out`]) — the distributed coordinator's `comm_bytes`
+//!   counter is exactly these totals.
+//! - [`Frame`] — what one read attempt produced: a complete [`Frame::Line`],
+//!   end-of-stream, an idle poll tick, an over-cap line, or invalid UTF-8.
+//!   The *consumer* decides policy (error object? close? retry?); the codec
+//!   only frames.
+//! - [`with_id`] / [`error_response`] — the structured response/error
+//!   object builders shared by every protocol (PROTOCOL.md).
+//!
+//! The loop here is the one the PR-3 socket transport proved out; the
+//! serve transport's behavior on top of it is bit-identical to the
+//! pre-extraction code (`tests/serve_socket.rs` pins it).
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Hard cap on one wire line. A peer exceeding it gets a structured error
+/// and its connection is closed (line framing is unrecoverable mid-line),
+/// so a single malicious or buggy peer cannot grow a read buffer without
+/// bound (PROTOCOL.md §2).
+pub const MAX_FRAME_BYTES: usize = 8 << 20;
+
+/// How often a blocking read wakes to let the caller re-check its
+/// shutdown/abort flag: bounds how long an idle connection can delay a
+/// graceful shutdown (PROTOCOL.md §2).
+pub const READ_POLL: Duration = Duration::from_millis(250);
+
+/// What one [`Codec::read_frame`] call produced. Only `Line` carries a
+/// message; the other variants are connection states the caller turns
+/// into policy (close, error object, re-check a flag and retry).
+#[derive(Debug)]
+pub enum Frame {
+    /// One complete line, UTF-8 valid, trailing newline preserved (a final
+    /// line at EOF may lack it). May be blank — callers skip empty lines.
+    Line(String),
+    /// Clean end of stream between lines.
+    Eof,
+    /// A poll tick fired with no complete line; partial bytes stay
+    /// buffered in the codec. Re-check shutdown flags and call again.
+    Idle,
+    /// The line exceeded the codec's byte cap. The buffer was discarded —
+    /// framing is lost mid-line, so the connection should close after an
+    /// error response.
+    Overflow,
+    /// A complete line arrived but was not valid UTF-8. The buffer was
+    /// discarded; framing is intact, so the connection stays usable.
+    NotUtf8,
+}
+
+/// A framed reader/writer pair. `read_frame` accumulates raw bytes (NOT a
+/// `String`: `read_line`'s UTF-8 guard would discard bytes already
+/// consumed from the socket if a read-timeout tick fired while the buffer
+/// ended mid-multibyte character; `read_until` keeps every consumed byte
+/// across ticks), `write_json` writes one message per line, and both
+/// directions are byte-counted.
+pub struct Codec<R, W> {
+    reader: R,
+    writer: W,
+    buf: Vec<u8>,
+    max_bytes: usize,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+/// The [`Codec`] shape every TCP protocol in the crate uses ([`tcp_codec`]).
+pub type TcpCodec = Codec<BufReader<TcpStream>, TcpStream>;
+
+/// Wrap a TCP stream in a codec: the read half polls on [`READ_POLL`]
+/// (errors setting the timeout are ignored — the loop then simply blocks,
+/// which only delays shutdown detection), the write half is the stream
+/// itself.
+pub fn tcp_codec(stream: TcpStream) -> io::Result<TcpCodec> {
+    let read_half = stream.try_clone()?;
+    let _ = read_half.set_read_timeout(Some(READ_POLL));
+    Ok(Codec::new(BufReader::new(read_half), stream))
+}
+
+impl<R: BufRead, W: Write> Codec<R, W> {
+    /// A codec over arbitrary reader/writer halves, capped at
+    /// [`MAX_FRAME_BYTES`] per line.
+    pub fn new(reader: R, writer: W) -> Codec<R, W> {
+        Codec {
+            reader,
+            writer,
+            buf: Vec::new(),
+            max_bytes: MAX_FRAME_BYTES,
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+
+    /// Override the per-line byte cap (`usize::MAX` effectively uncaps —
+    /// the blocking client uses that to trust its own server).
+    pub fn with_max_bytes(mut self, max_bytes: usize) -> Codec<R, W> {
+        self.max_bytes = max_bytes;
+        self
+    }
+
+    /// Read until one [`Frame`] is available. `Idle` (a read-timeout tick
+    /// with no complete line) returns with partial bytes still buffered,
+    /// so the caller can re-check its shutdown flag and call again without
+    /// losing data. `Err` is a real transport error — the connection is
+    /// gone.
+    pub fn read_frame(&mut self) -> io::Result<Frame> {
+        loop {
+            // Budget: one byte past the remaining cap, so an over-long
+            // line is detected (len > max) without unbounded buffering.
+            let budget =
+                self.max_bytes.saturating_sub(self.buf.len()).saturating_add(1) as u64;
+            match self.reader.by_ref().take(budget).read_until(b'\n', &mut self.buf) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(Frame::Eof); // clean EOF between lines
+                    }
+                    return Ok(self.take_line()); // final line, no newline
+                }
+                Ok(n) => {
+                    self.bytes_in += n as u64;
+                    if self.buf.len() > self.max_bytes {
+                        self.buf.clear(); // framing lost mid-line
+                        return Ok(Frame::Overflow);
+                    }
+                    if self.buf.ends_with(b"\n") {
+                        return Ok(self.take_line());
+                    }
+                    // No newline and under budget: EOF mid-line — the next
+                    // read returns Ok(0) and serves this final line.
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(Frame::Idle);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn take_line(&mut self) -> Frame {
+        match String::from_utf8(std::mem::take(&mut self.buf)) {
+            Ok(line) => Frame::Line(line),
+            Err(_) => Frame::NotUtf8,
+        }
+    }
+
+    /// Write one message as one line (`{json}\n`) and flush.
+    pub fn write_json(&mut self, msg: &Json) -> io::Result<()> {
+        let mut text = msg.to_string();
+        text.push('\n');
+        self.writer.write_all(text.as_bytes())?;
+        self.writer.flush()?;
+        self.bytes_out += text.len() as u64;
+        Ok(())
+    }
+
+    /// Bytes consumed from the reader (including partial lines and
+    /// discarded over-cap/invalid lines).
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    /// Bytes successfully written (messages plus their newlines).
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structured response objects (shared by every line protocol).
+
+/// Response-object builder applying the id-echo rule once: the request's
+/// `id` is included iff the request carried one (absent → no `"id"` key,
+/// never a spurious null).
+pub fn with_id(id: Json, rest: Vec<(&str, Json)>) -> Json {
+    let mut pairs = Vec::with_capacity(rest.len() + 1);
+    if !matches!(id, Json::Null) {
+        pairs.push(("id", id));
+    }
+    pairs.extend(rest);
+    Json::obj(pairs)
+}
+
+/// The structured error object every protocol answers malformed input
+/// with: `{"error": {"code": ..., "message": ...}}`, id echoed per
+/// [`with_id`]. Codes are protocol-specific (PROTOCOL.md catalogues
+/// them).
+pub fn error_response(id: Json, code: &str, message: &str) -> Json {
+    with_id(
+        id,
+        vec![(
+            "error",
+            Json::obj(vec![("code", Json::from(code)), ("message", Json::from(message))]),
+        )],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn codec_over(input: &[u8]) -> Codec<Cursor<Vec<u8>>, Vec<u8>> {
+        Codec::new(Cursor::new(input.to_vec()), Vec::new())
+    }
+
+    #[test]
+    fn frames_lines_then_eof() {
+        let mut c = codec_over(b"{\"a\": 1}\n\n{\"b\": 2}");
+        let Ok(Frame::Line(l1)) = c.read_frame() else { panic!() };
+        assert_eq!(l1, "{\"a\": 1}\n");
+        let Ok(Frame::Line(blank)) = c.read_frame() else { panic!() };
+        assert_eq!(blank, "\n", "blank lines are frames; callers skip them");
+        // Final line without a trailing newline is still served...
+        let Ok(Frame::Line(l2)) = c.read_frame() else { panic!() };
+        assert_eq!(l2, "{\"b\": 2}");
+        // ...and the stream then reports clean EOF.
+        assert!(matches!(c.read_frame(), Ok(Frame::Eof)));
+        assert_eq!(c.bytes_in(), 18);
+    }
+
+    #[test]
+    fn overflow_discards_and_reports() {
+        let big = vec![b'x'; 64];
+        let mut c = codec_over(&big).with_max_bytes(16);
+        assert!(matches!(c.read_frame(), Ok(Frame::Overflow)));
+    }
+
+    #[test]
+    fn invalid_utf8_is_survivable() {
+        let mut c = codec_over(b"\xff\xfe\n{\"ok\": true}\n");
+        assert!(matches!(c.read_frame(), Ok(Frame::NotUtf8)));
+        // Framing is intact: the next line still parses.
+        let Ok(Frame::Line(l)) = c.read_frame() else { panic!() };
+        assert_eq!(l.trim_end(), "{\"ok\": true}");
+    }
+
+    #[test]
+    fn write_json_counts_bytes() {
+        let mut c = codec_over(b"");
+        let msg = Json::obj(vec![("ok", Json::from(true))]);
+        c.write_json(&msg).unwrap();
+        let text = String::from_utf8(c.writer.clone()).unwrap();
+        assert_eq!(text, format!("{msg}\n"));
+        assert_eq!(c.bytes_out(), text.len() as u64);
+    }
+
+    #[test]
+    fn id_echo_rule() {
+        let r = with_id(Json::from(7usize), vec![("ok", Json::from(true))]);
+        assert_eq!(r.get("id").as_usize(), Some(7));
+        let r = with_id(Json::Null, vec![("ok", Json::from(true))]);
+        assert_eq!(r.get("id"), &Json::Null);
+        let e = error_response(Json::from("q"), "parse", "nope");
+        assert_eq!(e.get("error").get("code").as_str(), Some("parse"));
+        assert_eq!(e.get("error").get("message").as_str(), Some("nope"));
+        assert_eq!(e.get("id").as_str(), Some("q"));
+    }
+}

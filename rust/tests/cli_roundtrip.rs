@@ -653,6 +653,81 @@ fn ovo_train_save_serve_roundtrip() {
     std::fs::remove_file(&model).ok();
 }
 
+/// ISSUE satellite: `dcsvm worker` parses its flags from the shared
+/// declarative table — strict unknown-flag rejection, missing-value
+/// errors, required `--listen`, and a `--help` listing every flag.
+#[test]
+fn worker_flags_are_strict_and_table_driven() {
+    let (ok, text) = run(&["worker"]);
+    assert!(!ok);
+    assert!(text.contains("requires --listen"), "{text}");
+    let (ok, text) = run(&["worker", "--listen"]);
+    assert!(!ok);
+    assert!(text.contains("needs a value"), "{text}");
+    assert!(!text.contains("unknown flag"), "{text}");
+    let (ok, text) = run(&["worker", "--bogus", "1"]);
+    assert!(!ok);
+    assert!(text.contains("worker: unknown flag '--bogus'"), "{text}");
+    let (ok, text) = run(&["worker", "--listen", "127.0.0.1:0", "--cache-mb", "0"]);
+    assert!(!ok);
+    assert!(text.contains("--cache-mb"), "{text}");
+    assert!(text.contains("usage:"), "{text}");
+    let (ok, text) = run(&["worker", "--help"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("usage: dcsvm worker --listen ADDR"), "{text}");
+    for f in dcsvm::distributed::WORKER_FLAGS {
+        assert!(text.contains(f.flag), "usage missing {}: {text}", f.flag);
+        assert!(text.contains(f.help), "usage missing help for {}: {text}", f.flag);
+    }
+}
+
+/// ISSUE tentpole (CLI leg): `train --distributed true` spawns local
+/// `dcsvm worker` child processes of the real binary, trains over the
+/// wire protocol, and reports the communication counters.
+#[test]
+fn distributed_train_spawns_local_workers_end_to_end() {
+    let (ok, text) = run(&[
+        "train",
+        "--distributed",
+        "true",
+        "--workers",
+        "2",
+        "--rounds",
+        "2",
+        "--dataset",
+        "covtype-like",
+        "--n-train",
+        "200",
+        "--n-test",
+        "60",
+        "--gamma",
+        "16",
+        "--c",
+        "4",
+        "--backend",
+        "native",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Distributed:"), "{text}");
+    assert!(text.contains("comm_bytes="), "{text}");
+    assert!(text.contains("rounds=2"), "{text}");
+    assert!(text.contains("workers=2 spawned=true"), "{text}");
+    assert!(text.contains("objective"), "{text}");
+
+    // Flag validation flows through RunConfig like every train flag.
+    let (ok, text) = run(&["train", "--distributed", "maybe"]);
+    assert!(!ok);
+    assert!(text.contains("--distributed"), "{text}");
+    let (ok, text) = run(&["train", "--rounds", "many"]);
+    assert!(!ok);
+    assert!(text.contains("--rounds"), "{text}");
+    // Saving a model needs the single-process path.
+    let (ok, text) =
+        run(&["train", "--distributed", "true", "--save-model", "/tmp/m.json"]);
+    assert!(!ok);
+    assert!(text.contains("--save-model is not supported"), "{text}");
+}
+
 #[test]
 fn unknown_command_fails_cleanly() {
     let (ok, text) = run(&["frobnicate"]);

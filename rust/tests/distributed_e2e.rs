@@ -1,0 +1,242 @@
+//! Distributed parallel block minimization, end to end over real sockets:
+//! a loopback protocol round-trip, the 2-worker vs single-process
+//! equivalence gate (same dual objective, same accuracy, α summaries only
+//! on the wire), and the worker-loss abort path.
+//!
+//! Workers run as in-process threads on ephemeral listeners
+//! (`run_worker` serves one session per process in production; the
+//! spawn-local child-process path is exercised by `cli_roundtrip.rs`,
+//! which drives the real binary).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+
+use dcsvm::cache::KernelContext;
+use dcsvm::config::RunConfig;
+use dcsvm::distributed::{ids_json, run_worker, train_distributed, Hello, WorkerOptions};
+use dcsvm::harness;
+use dcsvm::predict::SvmModel;
+use dcsvm::solver::{SmoConfig, SmoSolver};
+use dcsvm::util::json::Json;
+use dcsvm::util::wire::{self, Frame, TcpCodec};
+
+/// A real worker on an ephemeral loopback port, serving one session.
+fn spawn_worker() -> (String, JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = WorkerOptions { threads: 2, cache_mb: 64, backend: "native".into() };
+    let h = std::thread::spawn(move || run_worker(listener, &opts).unwrap());
+    (addr, h)
+}
+
+fn dist_cfg(addrs: &[String], n_train: usize, n_test: usize, eps: f64) -> RunConfig {
+    RunConfig {
+        dataset: "covtype-like".into(),
+        n_train: Some(n_train),
+        n_test: Some(n_test),
+        gamma: 16.0,
+        c: 4.0,
+        eps,
+        backend: "native".into(),
+        distributed: true,
+        rounds: 2,
+        workers_addr: Some(addrs.join(",")),
+        ..RunConfig::default()
+    }
+}
+
+fn read_json(codec: &mut TcpCodec) -> Json {
+    loop {
+        match codec.read_frame().unwrap() {
+            Frame::Line(l) => {
+                let t = l.trim();
+                if t.is_empty() {
+                    continue;
+                }
+                return Json::parse(t).unwrap();
+            }
+            Frame::Idle => continue,
+            other => panic!("unexpected frame: {other:?}"),
+        }
+    }
+}
+
+/// Loopback unit round-trip: hello → shard → round → structured protocol
+/// error → shutdown, one worker, manual coordinator side.
+#[test]
+fn loopback_worker_session_roundtrip() {
+    let (addr, h) = spawn_worker();
+    let mut codec = wire::tcp_codec(TcpStream::connect(&addr).unwrap()).unwrap();
+
+    let hello = Hello {
+        dataset: "covtype-like".into(),
+        n_train: 120,
+        n_test: 40,
+        seed: 0,
+        kernel: "rbf".into(),
+        gamma: 16.0,
+        eta: 0.0,
+        c: 4.0,
+        eps: 1e-3,
+    };
+    codec.write_json(&Json::obj(vec![("hello", hello.to_json())])).unwrap();
+    let r = read_json(&mut codec);
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("n").as_usize(), Some(120), "{r}");
+
+    let shard: Vec<usize> = (0..120).step_by(2).collect();
+    codec.write_json(&Json::obj(vec![("shard", ids_json(&shard))])).unwrap();
+    let r = read_json(&mut codec);
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("rows").as_usize(), Some(60), "{r}");
+
+    // Round 1: no external summaries yet — a plain block solve.
+    codec
+        .write_json(&Json::obj(vec![
+            ("round", Json::from(1usize)),
+            ("ext_ids", Json::Arr(vec![])),
+            ("ext_alpha", Json::Arr(vec![])),
+        ]))
+        .unwrap();
+    let r = read_json(&mut codec);
+    assert_eq!(r.get("round").as_usize(), Some(1), "{r}");
+    let ids = r.get("ids").as_arr().unwrap();
+    let al = r.get("alpha").as_arr().unwrap();
+    assert_eq!(ids.len(), al.len());
+    assert!(!ids.is_empty(), "a solved block has support vectors");
+    for v in ids {
+        let i = v.as_usize().unwrap();
+        assert!(shard.contains(&i), "summary id {i} outside the shard");
+    }
+    assert!(r.get("objective").as_f64().is_some(), "{r}");
+    assert!(r.get("values_computed").as_f64().unwrap() > 0.0, "{r}");
+
+    // Mismatched ext arrays → structured protocol error, session continues.
+    codec
+        .write_json(&Json::obj(vec![
+            ("round", Json::from(2usize)),
+            ("ext_ids", ids_json(&[0usize])),
+            ("ext_alpha", Json::Arr(vec![])),
+        ]))
+        .unwrap();
+    let r = read_json(&mut codec);
+    assert_eq!(r.get("error").get("code").as_str(), Some("protocol"), "{r}");
+
+    codec.write_json(&Json::obj(vec![("shutdown", Json::from(true))])).unwrap();
+    let r = read_json(&mut codec);
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    drop(codec);
+    h.join().unwrap();
+}
+
+/// The equivalence gate: a 2-worker distributed run must land on the same
+/// ε-KKT solution as a single-process solve — same dual objective (1e-6
+/// relative), same test accuracy — while moving only α summaries over the
+/// wire (orders of magnitude below one serialized kernel block).
+#[test]
+fn two_worker_run_matches_single_process() {
+    let (a0, h0) = spawn_worker();
+    let (a1, h1) = spawn_worker();
+    let cfg = dist_cfg(&[a0, a1], 300, 100, 1e-8);
+    let (tr, te) = harness::load_dataset(&cfg).unwrap();
+
+    let out = train_distributed(&cfg, &tr, &te).unwrap();
+    h0.join().unwrap();
+    h1.join().unwrap();
+
+    // Single-process comparator at the same final tolerance.
+    let kind = cfg.kernel_kind().unwrap();
+    let kernel = harness::make_kernel(kind, "native", tr.dim).unwrap();
+    let ctx = KernelContext::new(&tr, kernel.as_ref(), 64 << 20).with_threads(2);
+    let res = SmoSolver::new(
+        ctx.view_full(),
+        SmoConfig { c: cfg.c, eps: cfg.eps, ..SmoConfig::default() },
+    )
+    .solve();
+    let model = SvmModel::from_ctx_alpha(&ctx, &res.alpha);
+    let te_ctx = KernelContext::new(&te, kernel.as_ref(), 1 << 20).with_threads(2);
+    let acc_single = model.accuracy_ctx(&te_ctx);
+
+    let (od, os) = (out.objective.unwrap(), res.objective);
+    assert!(
+        (od - os).abs() <= 1e-6 * (1.0 + os.abs()),
+        "distributed objective {od} vs single-process {os}"
+    );
+    assert_eq!(
+        out.accuracy, acc_single,
+        "distributed and single-process models must classify identically"
+    );
+
+    // Communication efficiency: the whole run's wire traffic stays far
+    // below ONE serialized kernel block (n² f32 entries).
+    let comm = out.comm_bytes.expect("comm_bytes recorded");
+    let kernel_block_bytes = (tr.len() * tr.len() * 4) as u64;
+    assert!(comm > 0);
+    assert!(
+        comm < kernel_block_bytes / 4,
+        "comm_bytes {comm} not ≪ kernel block {kernel_block_bytes}"
+    );
+    assert_eq!(out.rounds, Some(2));
+    assert!(out.worker_values_computed.expect("worker values recorded") > 0);
+    assert_eq!(out.algo, "Distributed");
+    assert!(out.note.contains("workers=2"), "note: {}", out.note);
+    assert!(out.note.contains("spawned=false"), "note: {}", out.note);
+}
+
+/// A protocol-fluent stub that dies between rounds: answers hello and
+/// shard, reads round 1, then drops the connection without replying.
+fn spawn_stub_worker_dying_mid_round(n: usize) -> (String, JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut write = stream;
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // hello
+        writeln!(
+            write,
+            "{}",
+            Json::obj(vec![("ok", Json::from(true)), ("n", Json::from(n))])
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap(); // shard
+        writeln!(
+            write,
+            "{}",
+            Json::obj(vec![("ok", Json::from(true)), ("rows", Json::from(1usize))])
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap(); // round 1 — die without replying
+    });
+    (addr, h)
+}
+
+/// Losing a worker mid-round must abort the run with a structured
+/// `worker_lost` error promptly (within read-poll ticks, not a hang) and
+/// release the surviving worker cleanly.
+#[test]
+fn lost_worker_aborts_the_run_with_a_structured_error() {
+    let (a0, h0) = spawn_worker();
+    let (a1, h1) = spawn_stub_worker_dying_mid_round(100);
+    let cfg = dist_cfg(&[a0, a1], 100, 40, 1e-4);
+    let (tr, te) = harness::load_dataset(&cfg).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let err = train_distributed(&cfg, &tr, &te).unwrap_err().to_string();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(20),
+        "coordinator hung on a dead worker: {:?}",
+        t0.elapsed()
+    );
+    assert!(err.contains("worker_lost"), "{err}");
+    assert!(err.contains("worker 1"), "{err}");
+
+    // The surviving worker's session ends on coordinator EOF; the stub
+    // already exited. Neither thread leaks.
+    h0.join().unwrap();
+    h1.join().unwrap();
+}

@@ -3,6 +3,7 @@
 //! in the code (`serving::transport`); these tests fail the build when a
 //! top-level doc drifts from it.
 
+use dcsvm::distributed::{DIST_FLAGS, WORKER_ERROR_CODES, WORKER_FLAGS};
 use dcsvm::serving::transport::{readme_row, ERROR_CODES, SERVE_FLAGS};
 use dcsvm::serving::BatchStats;
 
@@ -53,6 +54,40 @@ fn protocol_doc_catalogues_every_error_code() {
         assert!(
             proto.contains(&format!("`{code}`")),
             "PROTOCOL.md error catalogue is missing `{code}`"
+        );
+    }
+}
+
+/// README's worker and distributed-train flag tables must contain the
+/// exact rows rendered from the code tables (`dcsvm::distributed`), the
+/// same tables `dcsvm worker --help` is generated from.
+#[test]
+fn readme_worker_and_distributed_flag_tables_match_the_cli_tables() {
+    let readme = repo_file("README.md");
+    for f in WORKER_FLAGS.iter().chain(DIST_FLAGS) {
+        let row = readme_row(f);
+        assert!(
+            readme.contains(&row),
+            "README.md worker/distributed flag table is stale; expected the exact row:\n{row}\n\
+             (regenerate from dcsvm::distributed::{{WORKER_FLAGS, DIST_FLAGS}})"
+        );
+    }
+}
+
+/// PROTOCOL.md must document the worker wire protocol: a dedicated
+/// section plus every error code a worker session (or a coordinator-side
+/// distributed failure) can carry.
+#[test]
+fn protocol_doc_catalogues_the_worker_wire_protocol() {
+    let proto = repo_file("PROTOCOL.md");
+    assert!(
+        proto.contains("Worker wire protocol"),
+        "PROTOCOL.md is missing the \"Worker wire protocol\" section"
+    );
+    for code in WORKER_ERROR_CODES {
+        assert!(
+            proto.contains(&format!("`{code}`")),
+            "PROTOCOL.md worker error catalogue is missing `{code}`"
         );
     }
 }

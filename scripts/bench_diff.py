@@ -65,6 +65,12 @@ WATCHED = [
     ("multiclass.train.pair_dispatches", "lower-better"),
     ("multiclass.serve.cold.pair_dispatches", "lower-better"),
     ("multiclass.serve.warm.rows_computed", "zero"),
+    # Distributed trajectory (ISSUE 9): wire traffic is the resource the
+    # α-summary-only exchange exists to minimize — it must not creep back
+    # toward shipping kernel blocks — and the distributed solution must
+    # keep matching the single-process one on held-out accuracy.
+    ("distributed.comm_bytes", "lower-better"),
+    ("distributed.accuracy", "higher-better"),
 ]
 
 

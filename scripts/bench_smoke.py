@@ -56,6 +56,15 @@ output lines must be `LABEL margin` with a valid class id, and the warm
 replay must compute zero SV-block rows. Results land in the REQUIRED
 `multiclass` section of BENCH_ci.json, watched by `bench_diff.py`.
 
+The distributed leg (ISSUE 9) runs `train --distributed true` — the
+coordinator spawns 2 local `dcsvm worker` processes, shards the rows,
+runs 2 block-minimization rounds exchanging only α summaries, and
+conquers — and requires the harness record to carry the `comm_bytes`/
+`rounds`/`worker_values_computed` counters with `comm_bytes` staying far
+below one serialized kernel block. Results land in the REQUIRED
+`distributed` section of BENCH_ci.json; `bench_diff.py` watches
+`distributed.comm_bytes` lower-better.
+
 Usage: bench_smoke.py [--binary target/release/dcsvm] [--out BENCH_ci.json]
                       [--threads 2]
 """
@@ -102,6 +111,15 @@ REQUIRED_UPDATE = [
     "cold_values_computed",
     "warm_beats_cold",
 ]
+
+# Distributed-train harness-outcome fields: the wire-efficiency counters
+# are the whole point of the leg and must always be recorded.
+REQUIRED_DIST = ["train_s", "accuracy", "objective", "comm_bytes", "rounds",
+                 "worker_values_computed"]
+DIST_WORKERS = 2
+DIST_ROUNDS = 2
+DIST_N_TRAIN = 300
+DIST_N_TEST = 100
 
 # Multiclass (OVO) harness-outcome fields: the shared-context pair counters
 # must be recorded alongside the usual quality numbers.
@@ -407,6 +425,45 @@ def main() -> None:
         if len(parts) != 2 or not parts[0].isdigit() or int(parts[0]) >= OVO_CLASSES:
             fail(f"ovo output line is not 'LABEL margin' with a valid class id: {line!r}")
 
+    # ---- distributed leg: coordinator + 2 spawned workers ----------------
+    # Parallel block minimization end to end through the real binary: the
+    # coordinator spawns DIST_WORKERS local `dcsvm worker` processes,
+    # shards rows round-robin, exchanges only per-round α summaries, and
+    # conquers. Gates: the wire counters exist, comm_bytes stays far below
+    # one serialized n×n kernel block (f32), and the worker side actually
+    # computed kernel values.
+    p = run(
+        [args.binary, "train", "--distributed", "true",
+         "--workers", str(DIST_WORKERS), "--rounds", str(DIST_ROUNDS),
+         "--dataset", "covtype-like", "--n-train", str(DIST_N_TRAIN),
+         "--n-test", str(DIST_N_TEST), "--gamma", "16", "--c", "4",
+         "--backend", "native", "--seed", "0", "--threads", threads],
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+    if p.returncode != 0:
+        fail(f"distributed train exited {p.returncode}\n"
+             f"stdout:\n{p.stdout}\nstderr:\n{p.stderr}")
+    with open(results_path, encoding="utf-8") as f:
+        records = [json.loads(line) for line in f if line.strip()]
+    dist_outcome = records[-1].get("outcome")
+    if not isinstance(dist_outcome, dict) or dist_outcome.get("algo") != "Distributed":
+        fail(f"distributed train recorded no outcome: {json.dumps(records[-1])[:400]}")
+    dist_stats = require(dist_outcome, REQUIRED_DIST, "distributed outcome")
+    kernel_block_bytes = DIST_N_TRAIN * DIST_N_TRAIN * 4
+    if not 0 < dist_stats["comm_bytes"] < kernel_block_bytes / 4:
+        fail(f"distributed comm_bytes {dist_stats['comm_bytes']} not in "
+             f"(0, {kernel_block_bytes // 4}): α-summary-only exchange broken")
+    if dist_stats["rounds"] != DIST_ROUNDS:
+        fail(f"distributed run reported {dist_stats['rounds']} rounds, "
+             f"expected {DIST_ROUNDS}")
+    if dist_stats["worker_values_computed"] <= 0:
+        fail("distributed workers computed no kernel values; "
+             "worker counters are not flowing back")
+    dist_stats["workers"] = DIST_WORKERS
+    dist_stats["kernel_block_bytes"] = kernel_block_bytes
+
     # ---- streaming update leg (train -> update -> no-op update) ----------
     # A self-contained labeled stream: bootstrap a model from a zero-SV
     # seed over the history chunk (a warm solve over 0 SVs ∪ history IS a
@@ -573,6 +630,7 @@ def main() -> None:
             "noop": noop_counters,
         },
         "serve_swap": serve_swap,
+        "distributed": dist_stats,
         "multiclass": {
             "classes": OVO_CLASSES,
             "machines": OVO_MACHINES,
