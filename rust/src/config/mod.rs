@@ -128,6 +128,18 @@ pub struct RunConfig {
     pub workers_addr: Option<String>,
     /// Block-minimization rounds before the conquer solve (`--rounds`).
     pub rounds: usize,
+    /// Per-round reply deadline in seconds (`--round-timeout`): a worker
+    /// whose round reply takes longer is declared lost and recovered
+    /// from (respawn/re-shard), bounding how long a hung worker can
+    /// stall the run.
+    pub round_timeout: f64,
+    /// Deadline in seconds for connecting to each worker address
+    /// (`--connect-timeout`).
+    pub connect_timeout: f64,
+    /// Respawn attempts for a lost locally-spawned worker before its rows
+    /// are re-sharded onto survivors (`--worker-retries`; 0 = straight to
+    /// re-sharding).
+    pub worker_retries: usize,
 }
 
 impl Default for RunConfig {
@@ -158,6 +170,9 @@ impl Default for RunConfig {
             dist_workers: 2,
             workers_addr: None,
             rounds: 2,
+            round_timeout: 60.0,
+            connect_timeout: 10.0,
+            worker_retries: 0,
         }
     }
 }
@@ -222,6 +237,21 @@ impl RunConfig {
             "workers" | "dist_workers" | "dist-workers" => self.dist_workers = val.parse()?,
             "workers_addr" | "workers-addr" => self.workers_addr = Some(val.to_string()),
             "rounds" => self.rounds = val.parse()?,
+            "round_timeout" | "round-timeout" => {
+                let secs: f64 = val.parse()?;
+                if !secs.is_finite() || secs <= 0.0 {
+                    bail!("round_timeout must be a positive number of seconds, got '{val}'");
+                }
+                self.round_timeout = secs;
+            }
+            "connect_timeout" | "connect-timeout" => {
+                let secs: f64 = val.parse()?;
+                if !secs.is_finite() || secs <= 0.0 {
+                    bail!("connect_timeout must be a positive number of seconds, got '{val}'");
+                }
+                self.connect_timeout = secs;
+            }
+            "worker_retries" | "worker-retries" => self.worker_retries = val.parse()?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -295,6 +325,9 @@ impl RunConfig {
             ("distributed", Json::from(self.distributed)),
             ("dist_workers", Json::from(self.dist_workers)),
             ("rounds", Json::from(self.rounds)),
+            ("round_timeout", Json::from(self.round_timeout)),
+            ("connect_timeout", Json::from(self.connect_timeout)),
+            ("worker_retries", Json::from(self.worker_retries)),
         ])
     }
 }
@@ -419,6 +452,31 @@ mod tests {
         assert_eq!(j.get("rounds").as_usize(), Some(4));
         assert_eq!(j.get("distributed").as_bool(), Some(false));
         assert_eq!(j.get("workers_addr"), &Json::Null);
+    }
+
+    #[test]
+    fn recovery_flags_parse_validate_and_flow() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.round_timeout, 60.0, "round deadline defaults to 60s");
+        assert_eq!(cfg.connect_timeout, 10.0, "connect deadline defaults to 10s");
+        assert_eq!(cfg.worker_retries, 0, "respawn defaults off (straight to re-shard)");
+        cfg.apply("round-timeout", "2.5").unwrap();
+        cfg.apply("connect_timeout", "1.5").unwrap();
+        cfg.apply("worker-retries", "3").unwrap();
+        assert_eq!(cfg.round_timeout, 2.5);
+        assert_eq!(cfg.connect_timeout, 1.5);
+        assert_eq!(cfg.worker_retries, 3);
+        // Deadlines must be positive finite seconds.
+        assert!(cfg.apply("round_timeout", "0").is_err());
+        assert!(cfg.apply("round-timeout", "-1").is_err());
+        assert!(cfg.apply("round-timeout", "soon").is_err());
+        assert!(cfg.apply("connect-timeout", "0").is_err());
+        assert!(cfg.apply("worker_retries", "-1").is_err());
+        // And they round-trip through a config file.
+        let j = cfg.to_json();
+        assert_eq!(j.get("round_timeout").as_f64(), Some(2.5));
+        assert_eq!(j.get("connect_timeout").as_f64(), Some(1.5));
+        assert_eq!(j.get("worker_retries").as_usize(), Some(3));
     }
 
     #[test]

@@ -9,11 +9,32 @@
 //! communication-efficient scheme (arXiv:1608.02010) minimizes, and the
 //! number the e2e test pins far below one serialized kernel block.
 //!
-//! A worker connection that closes or errors mid-round aborts the run
-//! with a structured [`super::ERR_WORKER_LOST`] error within one
-//! read-poll tick: remaining connections are dropped and spawned children
-//! are killed (the [`Spawned`] guard), never hung.
+//! # Recovery state machine
+//!
+//! A worker that closes its connection, errors, replies with garbage, or
+//! stalls past the per-round deadline (`--round-timeout`, counted in
+//! read-poll ticks via [`Codec::read_frame_deadline`]) is *retired*, and
+//! the interrupted round replays:
+//!
+//! 1. **Detect** — EOF/garbage within one read-poll tick, stalls at the
+//!    round deadline. The failed attempt's replies are discarded.
+//! 2. **Respawn** (locally-spawned workers only) — up to
+//!    `--worker-retries` attempts with linear backoff: a fresh child gets
+//!    the same hello and the same shard and the round replays. Its warm
+//!    start is lost; the solution is not (each block solve is determined
+//!    by the frozen external α, not the starting point).
+//! 3. **Re-shard** — otherwise the lost rows are appended round-robin to
+//!    the survivors via `reshard` messages, seeded with the lost worker's
+//!    last committed α so the warm start survives the move. A survivor
+//!    failing mid-re-shard joins the dead set and distribution restarts
+//!    over the remainder.
+//! 4. **Replay** — the round that was interrupted runs again with the
+//!    new ownership. P degrades toward 1 (single-process training); only
+//!    losing *every* worker aborts the run, with a structured
+//!    [`super::ERR_WORKER_LOST`] error, never a hang. Spawned children
+//!    are killed and reaped on every exit path (the [`Roster`] guard).
 
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader};
 use std::net::TcpStream;
 use std::process::{Child, ChildStderr, Command, Stdio};
@@ -30,68 +51,125 @@ use crate::solver::{SmoConfig, SmoSolver};
 use crate::util::json::Json;
 use crate::util::wire::{self, Frame, TcpCodec};
 
-use super::{ids_json, parse_f64s, parse_ids, Hello, ERR_PROTOCOL, ERR_WORKER_LOST};
+use super::{
+    ids_json, parse_f64s, parse_ids, FaultPlan, FaultSpec, Hello, ERR_PROTOCOL, ERR_WORKER_LOST,
+    FAULT_ENV, FAULT_SELF_ENV,
+};
 
-/// Child-process guard: whatever path exits [`train_distributed`] —
-/// success, worker loss, protocol error — spawned workers are killed and
-/// reaped, never leaked.
-struct Spawned {
-    children: Vec<Child>,
+/// One worker endpoint's full lifecycle state. `codec: None` means the
+/// worker has been retired (lost and not respawned); its rows and last
+/// committed summary move to survivors during re-sharding.
+struct WorkerState {
+    addr: String,
+    codec: Option<TcpCodec>,
+    /// Rows this worker currently owns (arbitrary after re-sharding —
+    /// round-robin `i mod P` only at startup).
+    shard: Vec<usize>,
+    /// `shard` as a set, for validating summary ids.
+    owned: HashSet<usize>,
+    /// Last *committed* round summary (global id, α): what peers see as
+    /// external α, and the warm seed if this worker's rows move.
+    summary: (Vec<usize>, Vec<f64>),
+    /// The child process, when locally spawned (respawn candidates).
+    child: Option<Child>,
     /// Held open so a worker writing to stderr after its announce line
     /// never hits a closed pipe.
-    _logs: Vec<BufReader<ChildStderr>>,
+    _log: Option<BufReader<ChildStderr>>,
+    /// Spawned by this coordinator (killable, respawnable)?
+    local: bool,
+    /// Respawn attempts remaining (`--worker-retries`; local only).
+    retries_left: usize,
 }
 
-impl Drop for Spawned {
+/// Worker guard: whatever path exits [`train_distributed`] — success,
+/// all-workers-lost, protocol error — spawned children are killed and
+/// reaped, never leaked, and retired codecs' bytes stay counted.
+struct Roster {
+    workers: Vec<WorkerState>,
+    /// `bytes_in + bytes_out` of codecs already dropped by [`Roster::retire`].
+    retired_bytes: u64,
+}
+
+impl Drop for Roster {
     fn drop(&mut self) {
-        for c in &mut self.children {
-            let _ = c.kill();
-            let _ = c.wait();
+        for w in &mut self.workers {
+            if let Some(c) = &mut w.child {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
         }
     }
 }
 
-/// Spawn `count` local `dcsvm worker` processes (the current binary) on
-/// ephemeral ports and return their announced addresses.
-fn spawn_local_workers(cfg: &RunConfig, count: usize, guard: &mut Spawned) -> Result<Vec<String>> {
-    let exe = std::env::current_exe().context("locate the dcsvm binary for local workers")?;
-    // Split the coordinator's thread budget so P workers don't put
-    // P × threads dispatch workers on the machine.
-    let per_worker = (cfg.threads / count.max(1)).max(1);
-    let mut addrs = Vec::with_capacity(count);
-    for _ in 0..count {
-        let mut child = Command::new(&exe)
-            .arg("worker")
-            .arg("--listen")
-            .arg("127.0.0.1:0")
-            .arg("--threads")
-            .arg(per_worker.to_string())
-            .arg("--cache-mb")
-            .arg(cfg.cache_mb.max(1).to_string())
-            .arg("--backend")
-            .arg(&cfg.backend)
-            .stdin(Stdio::null())
-            .stdout(Stdio::null())
-            .stderr(Stdio::piped())
-            .spawn()
-            .context("spawn local worker")?;
-        let mut log = BufReader::new(child.stderr.take().expect("piped stderr"));
-        let mut line = String::new();
-        log.read_line(&mut line).context("read worker announce line")?;
-        let addr = Json::parse(line.trim())
-            .ok()
-            .and_then(|j| j.get("worker_listening").as_str().map(str::to_string));
-        guard.children.push(child);
-        guard._logs.push(log);
-        let Some(addr) = addr else {
-            bail!("worker did not announce a listening address (got {line:?})");
-        };
-        addrs.push(addr);
+impl Roster {
+    /// Indices of workers still holding a live connection.
+    fn live(&self) -> Vec<usize> {
+        (0..self.workers.len()).filter(|&w| self.workers[w].codec.is_some()).collect()
     }
-    Ok(addrs)
+
+    /// Retire worker `w`: drop its connection (keeping its byte counts),
+    /// kill and reap its child if locally spawned. Its shard/summary stay
+    /// for the respawn or re-shard step to consume.
+    fn retire(&mut self, w: usize) {
+        let ws = &mut self.workers[w];
+        if let Some(codec) = ws.codec.take() {
+            self.retired_bytes += codec.bytes_in() + codec.bytes_out();
+        }
+        if let Some(mut child) = ws.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
 }
 
-/// Connect with retry (externally-started workers may still be binding).
+/// Spawn one local `dcsvm worker` process (the current binary) on an
+/// ephemeral port and return it with its announced address. `fault`
+/// plants the injected-fault plan in the child's environment (initial
+/// spawns only — respawned replacements always run clean, and any
+/// coordinator-level [`FAULT_ENV`] is stripped so children can't
+/// misread it).
+fn spawn_one(
+    cfg: &RunConfig,
+    threads: usize,
+    fault: Option<&FaultPlan>,
+) -> Result<(Child, BufReader<ChildStderr>, String)> {
+    let exe = std::env::current_exe().context("locate the dcsvm binary for local workers")?;
+    let mut cmd = Command::new(&exe);
+    cmd.arg("worker")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--threads")
+        .arg(threads.to_string())
+        .arg("--cache-mb")
+        .arg(cfg.cache_mb.max(1).to_string())
+        .arg("--backend")
+        .arg(&cfg.backend)
+        .env_remove(FAULT_ENV)
+        .env_remove(FAULT_SELF_ENV)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped());
+    if let Some(f) = fault {
+        cmd.env(FAULT_SELF_ENV, f.spec_string());
+    }
+    let mut child = cmd.spawn().context("spawn local worker")?;
+    let mut log = BufReader::new(child.stderr.take().expect("piped stderr"));
+    let mut line = String::new();
+    log.read_line(&mut line).context("read worker announce line")?;
+    let addr = Json::parse(line.trim())
+        .ok()
+        .and_then(|j| j.get("worker_listening").as_str().map(str::to_string));
+    let Some(addr) = addr else {
+        let _ = child.kill();
+        let _ = child.wait();
+        bail!("worker did not announce a listening address (got {line:?})");
+    };
+    Ok((child, log, addr))
+}
+
+/// Connect with retry (externally-started workers may still be binding)
+/// under the `--connect-timeout` deadline; the error names the address
+/// that could not be reached.
 fn connect_retry(addr: &str, deadline: Duration) -> Result<TcpStream> {
     let t0 = Instant::now();
     loop {
@@ -100,7 +178,12 @@ fn connect_retry(addr: &str, deadline: Duration) -> Result<TcpStream> {
             Err(_) if t0.elapsed() < deadline => {
                 std::thread::sleep(Duration::from_millis(50));
             }
-            Err(e) => return Err(anyhow!("connect worker {addr}: {e}")),
+            Err(e) => {
+                return Err(anyhow!(
+                    "connect worker {addr}: {e} (gave up after {:.1}s; see --connect-timeout)",
+                    t0.elapsed().as_secs_f64()
+                ))
+            }
         }
     }
 }
@@ -112,30 +195,51 @@ fn send(codec: &mut TcpCodec, w: usize, msg: &Json) -> Result<()> {
         .map_err(|e| anyhow!("[{ERR_WORKER_LOST}] worker {w}: write failed: {e}"))
 }
 
-/// Read one parsed message; EOF or a transport error mid-session is a
-/// structured worker-lost failure (surfaced within one read-poll tick of
-/// the OS seeing the close — the coordinator never hangs on a dead peer).
-fn recv(codec: &mut TcpCodec, w: usize) -> Result<Json> {
+/// Read one parsed message before `deadline`. `Ok(None)` means the
+/// deadline passed with no complete reply — the caller decides whether
+/// that retires the worker (round gather) or fails the stage (setup).
+/// EOF or a transport error is a structured worker-lost failure,
+/// surfaced within one read-poll tick of the OS seeing the close — the
+/// coordinator never hangs on a dead peer.
+fn recv_deadline(codec: &mut TcpCodec, w: usize, deadline: Instant) -> Result<Option<Json>> {
     loop {
-        match codec.read_frame() {
-            Ok(Frame::Line(line)) => {
+        match codec.read_frame_deadline(deadline) {
+            Ok(Some(Frame::Line(line))) => {
                 let t = line.trim();
                 if t.is_empty() {
                     continue;
                 }
                 return Json::parse(t)
+                    .map(Some)
                     .map_err(|e| anyhow!("[{ERR_PROTOCOL}] worker {w}: bad response line: {e}"));
             }
-            Ok(Frame::Idle) => continue,
-            Ok(Frame::Eof) => {
+            Ok(Some(Frame::Idle)) => continue, // read_frame_deadline consumes these
+            Ok(Some(Frame::Eof)) => {
                 bail!("[{ERR_WORKER_LOST}] worker {w}: connection closed mid-session")
             }
-            Ok(Frame::Overflow) | Ok(Frame::NotUtf8) => {
+            Ok(Some(Frame::Overflow)) | Ok(Some(Frame::NotUtf8)) => {
                 bail!("[{ERR_PROTOCOL}] worker {w}: unreadable response line")
             }
+            Ok(None) => return Ok(None),
             Err(e) => bail!("[{ERR_WORKER_LOST}] worker {w}: {e}"),
         }
     }
+}
+
+/// [`recv_deadline`] that treats the deadline as fatal (setup stages,
+/// where there is no lost-worker recovery to fall back on).
+fn recv_required(
+    codec: &mut TcpCodec,
+    w: usize,
+    stage: &str,
+    timeout: Duration,
+) -> Result<Json> {
+    recv_deadline(codec, w, Instant::now() + timeout)?.ok_or_else(|| {
+        anyhow!(
+            "[{ERR_WORKER_LOST}] worker {w}: no {stage} reply within {:.1}s",
+            timeout.as_secs_f64()
+        )
+    })
 }
 
 /// Fail on a structured error reply; otherwise require `"ok": true`.
@@ -153,33 +257,135 @@ fn expect_ok(reply: &Json, w: usize, stage: &str) -> Result<()> {
     Ok(())
 }
 
+/// Full session setup over one connection: hello (spec regeneration,
+/// checked against `n`) then the shard assignment. Used worker-by-worker
+/// on the respawn path; initial setup pipelines the same messages across
+/// all workers instead.
+fn handshake(
+    codec: &mut TcpCodec,
+    w: usize,
+    hello_msg: &Json,
+    n: usize,
+    shard: &[usize],
+    reply_timeout: Duration,
+) -> Result<()> {
+    send(codec, w, hello_msg)?;
+    let reply = recv_required(codec, w, "hello", reply_timeout)?;
+    expect_ok(&reply, w, "hello")?;
+    if reply.get("n").as_usize() != Some(n) {
+        bail!("[{ERR_PROTOCOL}] worker {w}: regenerated n {} != {n}", reply.get("n"));
+    }
+    send(codec, w, &Json::obj(vec![("shard", ids_json(shard))]))?;
+    let reply = recv_required(codec, w, "shard", reply_timeout)?;
+    expect_ok(&reply, w, "shard")
+}
+
+/// One worker's round reply, validated: round echo, matching id/α arrays,
+/// every id inside the worker's *current* ownership set (arbitrary after
+/// re-sharding). Any unusable reply — deadline, EOF, error object,
+/// garbage — is an `Err` that retires the worker.
+fn gather_round_reply(
+    codec: &mut TcpCodec,
+    w: usize,
+    r: usize,
+    n: usize,
+    owned: &HashSet<usize>,
+    deadline: Instant,
+) -> Result<(Vec<usize>, Vec<f64>, u64, u64)> {
+    let Some(reply) = recv_deadline(codec, w, deadline)? else {
+        bail!(
+            "[{ERR_WORKER_LOST}] worker {w}: no round-{r} reply within the --round-timeout deadline"
+        );
+    };
+    if reply.get("error") != &Json::Null {
+        bail!(
+            "worker {w} failed round {r}: [{}] {}",
+            reply.get("error").get("code").as_str().unwrap_or("?"),
+            reply.get("error").get("message").as_str().unwrap_or("?")
+        );
+    }
+    if reply.get("round").as_usize() != Some(r) {
+        bail!("[{ERR_PROTOCOL}] worker {w}: round echo mismatch in {reply}");
+    }
+    let ids =
+        parse_ids(reply.get("ids")).map_err(|e| anyhow!("[{ERR_PROTOCOL}] worker {w}: {e}"))?;
+    let al = parse_f64s(reply.get("alpha"))
+        .map_err(|e| anyhow!("[{ERR_PROTOCOL}] worker {w}: {e}"))?;
+    if ids.len() != al.len() || ids.iter().any(|i| *i >= n || !owned.contains(i)) {
+        bail!("[{ERR_PROTOCOL}] worker {w}: summary ids outside its shard");
+    }
+    let values = reply.get("values_computed").as_f64().unwrap_or(0.0) as u64;
+    let iters = reply.get("iterations").as_f64().unwrap_or(0.0) as u64;
+    Ok((ids, al, values, iters))
+}
+
 /// Train `(tr, te)` by parallel block minimization over worker processes,
 /// then conquer locally. Workers regenerate the split from `cfg`'s
 /// dataset spec, so `tr`/`te` MUST come from that spec (the harness
-/// loader) — only α summaries and row ids cross the wire.
+/// loader) — only α summaries and row ids cross the wire. Worker loss
+/// mid-round recovers per the module-level state machine.
 pub fn train_distributed(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<Outcome> {
     let t0 = Instant::now();
     let n = tr.len();
     let rounds = cfg.rounds.max(1);
-    let mut guard = Spawned { children: Vec::new(), _logs: Vec::new() };
+    let round_timeout = Duration::from_secs_f64(cfg.round_timeout.max(1e-3));
+    let connect_timeout = Duration::from_secs_f64(cfg.connect_timeout.max(1e-3));
+    // Injected fault directive (tests and the bench fault leg): parsed
+    // here, delivered only to the targeted spawned child's environment.
+    let fault = FaultSpec::from_env()?;
+
+    let mut roster = Roster { workers: Vec::new(), retired_bytes: 0 };
 
     // --- endpoints --------------------------------------------------------
-    let addrs: Vec<String> = match &cfg.workers_addr {
-        Some(list) => list
-            .split(',')
-            .map(|s| s.trim().to_string())
-            .filter(|s| !s.is_empty())
-            .collect(),
-        None => spawn_local_workers(cfg, cfg.dist_workers.max(1), &mut guard)?,
+    let local = cfg.workers_addr.is_none();
+    let count = match &cfg.workers_addr {
+        Some(list) => list.split(',').filter(|s| !s.trim().is_empty()).count(),
+        None => cfg.dist_workers.max(1),
     };
-    if addrs.is_empty() {
+    // Split the coordinator's thread budget so P workers don't put
+    // P × threads dispatch workers on the machine.
+    let per_worker = (cfg.threads / count.max(1)).max(1);
+    match &cfg.workers_addr {
+        Some(list) => {
+            for addr in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                roster.workers.push(WorkerState {
+                    addr: addr.to_string(),
+                    codec: None,
+                    shard: Vec::new(),
+                    owned: HashSet::new(),
+                    summary: (Vec::new(), Vec::new()),
+                    child: None,
+                    _log: None,
+                    local: false,
+                    retries_left: 0,
+                });
+            }
+        }
+        None => {
+            for i in 0..count {
+                let plan = fault.as_ref().filter(|f| f.worker == i).map(|f| &f.plan);
+                let (child, log, addr) = spawn_one(cfg, per_worker, plan)?;
+                roster.workers.push(WorkerState {
+                    addr,
+                    codec: None,
+                    shard: Vec::new(),
+                    owned: HashSet::new(),
+                    summary: (Vec::new(), Vec::new()),
+                    child: Some(child),
+                    _log: Some(log),
+                    local: true,
+                    retries_left: cfg.worker_retries,
+                });
+            }
+        }
+    }
+    if roster.workers.is_empty() {
         bail!("distributed: no worker addresses (--workers-addr was empty)");
     }
-    let p = addrs.len();
-    let mut codecs: Vec<TcpCodec> = Vec::with_capacity(p);
-    for addr in &addrs {
-        let stream = connect_retry(addr, Duration::from_secs(10))?;
-        codecs.push(wire::tcp_codec(stream).context("worker codec")?);
+    let p = roster.workers.len();
+    for w in 0..p {
+        let stream = connect_retry(&roster.workers[w].addr, connect_timeout)?;
+        roster.workers[w].codec = Some(wire::tcp_codec(stream).context("worker codec")?);
     }
 
     // --- handshake: dataset spec only, never data -------------------------
@@ -198,41 +404,56 @@ pub fn train_distributed(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<
         eps: cfg.eps.max(1e-3),
     };
     let hello_msg = Json::obj(vec![("hello", hello.to_json())]);
-    for (w, codec) in codecs.iter_mut().enumerate() {
-        send(codec, w, &hello_msg)?;
+    for w in 0..p {
+        send(roster.workers[w].codec.as_mut().expect("connected"), w, &hello_msg)?;
     }
-    for (w, codec) in codecs.iter_mut().enumerate() {
-        let reply = recv(codec, w)?;
+    for w in 0..p {
+        let codec = roster.workers[w].codec.as_mut().expect("connected");
+        let reply = recv_required(codec, w, "hello", round_timeout)?;
         expect_ok(&reply, w, "hello")?;
         if reply.get("n").as_usize() != Some(n) {
             bail!("[{ERR_PROTOCOL}] worker {w}: regenerated n {} != {n}", reply.get("n"));
         }
     }
 
-    // --- shard ownership: round-robin i mod P -----------------------------
-    let shards: Vec<Vec<usize>> = (0..p).map(|w| (w..n).step_by(p).collect()).collect();
-    for (w, codec) in codecs.iter_mut().enumerate() {
-        send(codec, w, &Json::obj(vec![("shard", ids_json(&shards[w]))]))?;
+    // --- shard ownership: round-robin i mod P at startup ------------------
+    for w in 0..p {
+        let shard: Vec<usize> = (w..n).step_by(p).collect();
+        roster.workers[w].owned = shard.iter().copied().collect();
+        roster.workers[w].shard = shard;
     }
-    for (w, codec) in codecs.iter_mut().enumerate() {
-        let reply = recv(codec, w)?;
+    for w in 0..p {
+        let msg = Json::obj(vec![("shard", ids_json(&roster.workers[w].shard))]);
+        send(roster.workers[w].codec.as_mut().expect("connected"), w, &msg)?;
+    }
+    for w in 0..p {
+        let codec = roster.workers[w].codec.as_mut().expect("connected");
+        let reply = recv_required(codec, w, "shard", round_timeout)?;
         expect_ok(&reply, w, "shard")?;
     }
 
-    // --- rounds: broadcast external summaries, gather block solutions ----
-    let mut sv: Vec<(Vec<usize>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); p];
+    // --- rounds: broadcast external summaries, gather block solutions,
+    //     recover from losses, replay interrupted rounds -------------------
     let mut worker_values = 0u64;
     let mut worker_iters = 0u64;
-    for r in 1..=rounds {
-        // Jacobi-style: every worker sees the *previous* round's summaries
-        // from its peers, so all P block solves run concurrently.
-        for w in 0..p {
+    let mut workers_lost = 0u64;
+    let mut resharded_rows = 0u64;
+    let mut rounds_replayed = 0u64;
+    let mut respawns = 0u64;
+    let mut r = 1;
+    while r <= rounds {
+        let live = roster.live();
+        // Jacobi-style: every worker sees the *previous* round's committed
+        // summaries from its live peers, so all block solves run
+        // concurrently. A send failure retires the worker immediately.
+        let mut lost: Vec<(usize, String)> = Vec::new();
+        for &w in &live {
             let mut ext_ids = Vec::new();
             let mut ext_alpha = Vec::new();
-            for (o, (ids, al)) in sv.iter().enumerate() {
+            for &o in &live {
                 if o != w {
-                    ext_ids.extend_from_slice(ids);
-                    ext_alpha.extend_from_slice(al);
+                    ext_ids.extend_from_slice(&roster.workers[o].summary.0);
+                    ext_alpha.extend_from_slice(&roster.workers[o].summary.1);
                 }
             }
             let msg = Json::obj(vec![
@@ -240,51 +461,189 @@ pub fn train_distributed(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<
                 ("ext_ids", ids_json(&ext_ids)),
                 ("ext_alpha", Json::arr_f64(&ext_alpha)),
             ]);
-            send(&mut codecs[w], w, &msg)?;
+            let codec = roster.workers[w].codec.as_mut().expect("live");
+            if let Err(e) = send(codec, w, &msg) {
+                lost.push((w, e.to_string()));
+            }
         }
-        for w in 0..p {
-            let reply = recv(&mut codecs[w], w)?;
-            if reply.get("error") != &Json::Null {
+        // One absolute deadline for the whole gather: the round, not each
+        // reply, is deadline-bounded (replies buffer while earlier ones
+        // are read, so one stalled worker costs at most one timeout).
+        let deadline = Instant::now() + round_timeout;
+        let mut fresh: Vec<(usize, Vec<usize>, Vec<f64>, u64, u64)> = Vec::new();
+        for &w in &live {
+            if lost.iter().any(|(l, _)| *l == w) {
+                continue;
+            }
+            let WorkerState { codec, owned, .. } = &mut roster.workers[w];
+            match gather_round_reply(codec.as_mut().expect("live"), w, r, n, owned, deadline) {
+                Ok(summary) => fresh.push((w, summary.0, summary.1, summary.2, summary.3)),
+                Err(e) => lost.push((w, e.to_string())),
+            }
+        }
+        if lost.is_empty() {
+            for (w, ids, al, values, iters) in fresh {
+                worker_values += values;
+                worker_iters += iters;
+                roster.workers[w].summary = (ids, al);
+            }
+            r += 1;
+            continue;
+        }
+
+        // --- recovery: this attempt's replies are discarded wholesale and
+        // round r replays once ownership is consistent again.
+        workers_lost += lost.len() as u64;
+        let mut need_rows: Vec<usize> = Vec::new();
+        for (w, reason) in lost {
+            eprintln!(
+                "[distributed] worker {w} ({}) lost in round {r}: {reason}",
+                roster.workers[w].addr
+            );
+            roster.retire(w);
+            let mut recovered = false;
+            let total_retries = cfg.worker_retries;
+            while roster.workers[w].local && roster.workers[w].retries_left > 0 {
+                let attempt = total_retries - roster.workers[w].retries_left + 1;
+                roster.workers[w].retries_left -= 1;
+                match respawn_worker(
+                    cfg,
+                    per_worker,
+                    &hello_msg,
+                    n,
+                    w,
+                    &mut roster.workers[w],
+                    connect_timeout,
+                    round_timeout,
+                ) {
+                    Ok(()) => {
+                        eprintln!(
+                            "[distributed] worker {w} respawned at {} (attempt {attempt}/{total_retries})",
+                            roster.workers[w].addr
+                        );
+                        respawns += 1;
+                        recovered = true;
+                        break;
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[distributed] respawn attempt {attempt}/{total_retries} for worker {w} failed: {e:#}"
+                        );
+                        // Linear backoff before the next attempt.
+                        std::thread::sleep(Duration::from_millis(100 * attempt as u64));
+                    }
+                }
+            }
+            if !recovered {
+                need_rows.push(w);
+            }
+        }
+
+        // --- re-shard: move the dead workers' rows (with their last
+        // committed α as warm seeds) onto survivors, round-robin.
+        let mut pending: Vec<(usize, f64)> = Vec::new();
+        for &w in &need_rows {
+            let ws = &mut roster.workers[w];
+            let seeds: HashMap<usize, f64> =
+                ws.summary.0.iter().copied().zip(ws.summary.1.iter().copied()).collect();
+            for &i in &ws.shard {
+                pending.push((i, seeds.get(&i).copied().unwrap_or(0.0)));
+            }
+            ws.shard.clear();
+            ws.owned.clear();
+            ws.summary = (Vec::new(), Vec::new());
+        }
+        while !pending.is_empty() {
+            let survivors = roster.live();
+            if survivors.is_empty() {
                 bail!(
-                    "worker {w} failed round {r}: [{}] {}",
-                    reply.get("error").get("code").as_str().unwrap_or("?"),
-                    reply.get("error").get("message").as_str().unwrap_or("?")
+                    "[{ERR_WORKER_LOST}] all {p} workers lost (round {r}): \
+                     nothing left to re-shard onto"
                 );
             }
-            if reply.get("round").as_usize() != Some(r) {
-                bail!("[{ERR_PROTOCOL}] worker {w}: round echo mismatch in {reply}");
+            let mut per: Vec<Vec<(usize, f64)>> = vec![Vec::new(); survivors.len()];
+            for (k, row) in pending.drain(..).enumerate() {
+                per[k % survivors.len()].push(row);
             }
-            let ids = parse_ids(reply.get("ids"))
-                .map_err(|e| anyhow!("[{ERR_PROTOCOL}] worker {w}: {e}"))?;
-            let al = parse_f64s(reply.get("alpha"))
-                .map_err(|e| anyhow!("[{ERR_PROTOCOL}] worker {w}: {e}"))?;
-            if ids.len() != al.len() || ids.iter().any(|&i| i >= n || i % p != w) {
-                bail!("[{ERR_PROTOCOL}] worker {w}: summary ids outside its shard");
+            for (k, rows) in per.into_iter().enumerate() {
+                if rows.is_empty() {
+                    continue;
+                }
+                let s = survivors[k];
+                let expect = roster.workers[s].shard.len() + rows.len();
+                let codec = roster.workers[s].codec.as_mut().expect("live");
+                match send_reshard(codec, s, &rows, expect, round_timeout) {
+                    Ok(()) => {
+                        resharded_rows += rows.len() as u64;
+                        let ws = &mut roster.workers[s];
+                        for (i, _seed) in rows {
+                            ws.shard.push(i);
+                            ws.owned.insert(i);
+                        }
+                    }
+                    Err(e) => {
+                        // The survivor died mid-re-shard: retire it and
+                        // put both its own rows and this batch back.
+                        eprintln!(
+                            "[distributed] worker {s} ({}) lost during re-shard: {e}",
+                            roster.workers[s].addr
+                        );
+                        workers_lost += 1;
+                        roster.retire(s);
+                        let ws = &mut roster.workers[s];
+                        let seeds: HashMap<usize, f64> = ws
+                            .summary
+                            .0
+                            .iter()
+                            .copied()
+                            .zip(ws.summary.1.iter().copied())
+                            .collect();
+                        for &i in &ws.shard {
+                            pending.push((i, seeds.get(&i).copied().unwrap_or(0.0)));
+                        }
+                        ws.shard.clear();
+                        ws.owned.clear();
+                        ws.summary = (Vec::new(), Vec::new());
+                        pending.extend(rows);
+                    }
+                }
             }
-            worker_values += reply.get("values_computed").as_f64().unwrap_or(0.0) as u64;
-            worker_iters += reply.get("iterations").as_f64().unwrap_or(0.0) as u64;
-            sv[w] = (ids, al);
         }
+        if roster.live().is_empty() {
+            bail!("[{ERR_WORKER_LOST}] all {p} workers lost (round {r})");
+        }
+        rounds_replayed += 1;
+        eprintln!(
+            "[distributed] replaying round {r} over {} surviving worker(s)",
+            roster.live().len()
+        );
     }
 
     // --- release workers (best effort; the run already has everything).
     // The ok reply is consumed so workers finish their session before the
     // coordinator closes the sockets (no write-after-close races).
-    for (w, codec) in codecs.iter_mut().enumerate() {
+    for w in roster.live() {
+        let codec = roster.workers[w].codec.as_mut().expect("live");
         if codec.write_json(&Json::obj(vec![("shutdown", Json::from(true))])).is_ok() {
-            let _ = recv(codec, w);
+            let _ = recv_deadline(codec, w, Instant::now() + Duration::from_secs(5));
         }
     }
-    let comm_bytes: u64 = codecs.iter().map(|c| c.bytes_in() + c.bytes_out()).sum();
-    drop(codecs);
+    let comm_bytes: u64 = roster.retired_bytes
+        + roster
+            .workers
+            .iter()
+            .filter_map(|w| w.codec.as_ref())
+            .map(|c| c.bytes_in() + c.bytes_out())
+            .sum::<u64>();
 
     // --- conquer: gather α, one warm-started exact solve at cfg.eps ------
     let mut alpha = vec![0f64; n];
-    for (ids, al) in &sv {
-        for (&i, &a) in ids.iter().zip(al) {
+    for ws in &roster.workers {
+        for (&i, &a) in ws.summary.0.iter().zip(&ws.summary.1) {
             alpha[i] = a;
         }
     }
+    drop(roster);
     let kind = cfg.kernel_kind()?;
     let kernel = make_kernel(kind, &cfg.backend, tr.dim)?;
     let ctx = KernelContext::new(tr, kernel.as_ref(), (cfg.cache_mb.max(1)) << 20)
@@ -309,11 +668,75 @@ pub fn train_distributed(cfg: &RunConfig, tr: &Dataset, te: &Dataset) -> Result<
         comm_bytes: Some(comm_bytes),
         rounds: Some(rounds as u64),
         worker_values_computed: Some(worker_values),
+        workers_lost: Some(workers_lost),
+        resharded_rows: Some(resharded_rows),
+        rounds_replayed: Some(rounds_replayed),
+        respawns: Some(respawns),
         note: format!(
-            "workers={p} spawned={} conquer_iters={} worker_iters={worker_iters}",
-            !guard.children.is_empty(),
+            "workers={p} spawned={local} conquer_iters={} worker_iters={worker_iters}",
             res.iterations
         ),
         ..Default::default()
     })
+}
+
+/// One respawn attempt for worker `w`: fresh child (never with a fault
+/// plan), connect, hello, same shard. On failure the partially-started
+/// child is killed; the caller decides whether to retry or re-shard.
+#[allow(clippy::too_many_arguments)]
+fn respawn_worker(
+    cfg: &RunConfig,
+    threads: usize,
+    hello_msg: &Json,
+    n: usize,
+    w: usize,
+    ws: &mut WorkerState,
+    connect_timeout: Duration,
+    reply_timeout: Duration,
+) -> Result<()> {
+    let (mut child, log, addr) = spawn_one(cfg, threads, None)?;
+    let setup = (|| -> Result<TcpCodec> {
+        let stream = connect_retry(&addr, connect_timeout)?;
+        let mut codec = wire::tcp_codec(stream).context("worker codec")?;
+        handshake(&mut codec, w, hello_msg, n, &ws.shard, reply_timeout)?;
+        Ok(codec)
+    })();
+    match setup {
+        Ok(codec) => {
+            ws.addr = addr;
+            ws.child = Some(child);
+            ws._log = Some(log);
+            ws.codec = Some(codec);
+            Ok(())
+        }
+        Err(e) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            Err(e)
+        }
+    }
+}
+
+/// Hand `rows` (id, warm-seed α) to survivor `s` via a `reshard` message
+/// and verify the acknowledged shard size.
+fn send_reshard(
+    codec: &mut TcpCodec,
+    s: usize,
+    rows: &[(usize, f64)],
+    expect_rows: usize,
+    reply_timeout: Duration,
+) -> Result<()> {
+    let ids: Vec<usize> = rows.iter().map(|(i, _)| *i).collect();
+    let seeds: Vec<f64> = rows.iter().map(|(_, a)| *a).collect();
+    let msg = Json::obj(vec![("reshard", ids_json(&ids)), ("alpha", Json::arr_f64(&seeds))]);
+    send(codec, s, &msg)?;
+    let reply = recv_required(codec, s, "reshard", reply_timeout)?;
+    expect_ok(&reply, s, "reshard")?;
+    if reply.get("rows").as_usize() != Some(expect_rows) {
+        bail!(
+            "[{ERR_PROTOCOL}] worker {s}: reshard acknowledged {} rows, expected {expect_rows}",
+            reply.get("rows")
+        );
+    }
+    Ok(())
 }

@@ -28,6 +28,15 @@
 //!    its own context — so the returned model satisfies the same ε-KKT
 //!    conditions as a single-process solve (the e2e equivalence test
 //!    pins the objectives to 1e-6 relative).
+//! 5. **Recover.** A worker that dies, stalls past `--round-timeout`, or
+//!    returns garbage mid-round is retired: locally-spawned workers get
+//!    bounded respawn attempts (`--worker-retries`), otherwise the lost
+//!    rows are re-sharded onto survivors (the `reshard` message — pure
+//!    engineering, since every worker's context covers the full training
+//!    set) and the interrupted round replays. The run degrades from P
+//!    workers down to 1 and aborts only when all workers are gone. The
+//!    [`FaultPlan`] layer ([`FAULT_ENV`]) injects deterministic faults so
+//!    tests can pin this machinery.
 //!
 //! Framing is one JSON object per line over the same [`crate::util::wire`]
 //! codec the serve transport uses; PROTOCOL.md §"Worker wire protocol"
@@ -58,8 +67,11 @@ pub const ERR_PROTOCOL: &str = "protocol";
 /// kernel, out-of-range row ids, oversized line).
 pub const ERR_BAD_REQUEST: &str = "bad_request";
 /// Coordinator-synthesized (never sent on the wire): a worker connection
-/// closed or errored mid-session. The coordinator aborts the run cleanly
-/// — remaining workers are dropped and spawned children are killed.
+/// closed, errored, stalled past `--round-timeout`, or returned garbage
+/// mid-session. The coordinator *recovers* — it respawns locally-spawned
+/// workers (`--worker-retries`), re-shards the lost rows onto survivors,
+/// and replays the interrupted round — and only aborts with this code
+/// when every worker is gone.
 pub const ERR_WORKER_LOST: &str = "worker_lost";
 
 /// Every `code` a worker error object (or a coordinator-side distributed
@@ -130,6 +142,24 @@ pub const DIST_FLAGS: &[FlagSpec] = &[
         value: "R",
         default: "2",
         help: "block-minimization rounds before the conquer solve",
+    },
+    FlagSpec {
+        flag: "--round-timeout",
+        value: "SECS",
+        default: "60",
+        help: "declare a worker lost if its round reply takes longer than this",
+    },
+    FlagSpec {
+        flag: "--connect-timeout",
+        value: "SECS",
+        default: "10",
+        help: "deadline for connecting to each worker address",
+    },
+    FlagSpec {
+        flag: "--worker-retries",
+        value: "N",
+        default: "0",
+        help: "respawn attempts for a lost locally-spawned worker before re-sharding",
     },
 ];
 
@@ -204,6 +234,129 @@ impl Hello {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Deterministic fault injection (tests + bench fault leg only).
+
+/// Env var the *coordinator* reads: `worker:W,round:R,kind:KIND` injects a
+/// fault into locally-spawned worker `W` at round `R`. The coordinator
+/// strips it from child environments and hands the targeted worker its
+/// plan via [`FAULT_SELF_ENV`], so respawned replacements run clean.
+pub const FAULT_ENV: &str = "DCSVM_FAULT";
+
+/// Env var a *worker* process reads: `round:R,kind:KIND` (set by the
+/// coordinator on the one targeted child, never by hand).
+pub const FAULT_SELF_ENV: &str = "DCSVM_FAULT_SELF";
+
+/// How an injected fault manifests at the pinned round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Close the session without replying (a crashed worker: the
+    /// coordinator sees EOF within one read-poll tick).
+    Exit,
+    /// Stop replying but hold the connection open (a hung worker: only
+    /// the `--round-timeout` deadline can detect it). The worker unblocks
+    /// and exits once the coordinator drops the connection.
+    Stall,
+    /// Reply with a non-protocol frame (a corrupted worker: the
+    /// coordinator must treat the reply as unusable, not crash on it).
+    Garbage,
+}
+
+/// One deterministic injected fault: at the round message numbered
+/// `round`, misbehave per `kind` instead of solving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub round: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultPlan {
+    /// Parse `round:R,kind:exit|stall|garbage` (the [`FAULT_SELF_ENV`]
+    /// format; key order is free).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut round = None;
+        let mut kind = None;
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match part.split_once(':') {
+                Some(("round", v)) => {
+                    round = Some(v.trim().parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!("fault spec: round must be an integer, got '{v}'")
+                    })?)
+                }
+                Some(("kind", v)) => {
+                    kind = Some(match v.trim() {
+                        "exit" => FaultKind::Exit,
+                        "stall" => FaultKind::Stall,
+                        "garbage" => FaultKind::Garbage,
+                        other => bail!("fault spec: unknown kind '{other}' (exit|stall|garbage)"),
+                    })
+                }
+                _ => bail!("fault spec: unknown part '{part}' (want round:R,kind:K)"),
+            }
+        }
+        Ok(FaultPlan {
+            round: round.ok_or_else(|| anyhow::anyhow!("fault spec: missing round:R"))?,
+            kind: kind.ok_or_else(|| anyhow::anyhow!("fault spec: missing kind:K"))?,
+        })
+    }
+
+    /// The `round:R,kind:K` string [`FaultPlan::parse`] accepts.
+    pub fn spec_string(&self) -> String {
+        let kind = match self.kind {
+            FaultKind::Exit => "exit",
+            FaultKind::Stall => "stall",
+            FaultKind::Garbage => "garbage",
+        };
+        format!("round:{},kind:{kind}", self.round)
+    }
+
+    /// The worker-side plan from [`FAULT_SELF_ENV`], if set.
+    pub fn from_self_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(FAULT_SELF_ENV) {
+            Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// The coordinator-side fault directive: which spawned worker gets which
+/// [`FaultPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub worker: usize,
+    pub plan: FaultPlan,
+}
+
+impl FaultSpec {
+    /// Parse `worker:W,round:R,kind:K` (the [`FAULT_ENV`] format).
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let mut worker = None;
+        let mut rest = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match part.split_once(':') {
+                Some(("worker", v)) => {
+                    worker = Some(v.trim().parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!("fault spec: worker must be an index, got '{v}'")
+                    })?)
+                }
+                _ => rest.push(part),
+            }
+        }
+        Ok(FaultSpec {
+            worker: worker.ok_or_else(|| anyhow::anyhow!("fault spec: missing worker:W"))?,
+            plan: FaultPlan::parse(&rest.join(","))?,
+        })
+    }
+
+    /// The coordinator-side directive from [`FAULT_ENV`], if set.
+    pub fn from_env() -> Result<Option<FaultSpec>> {
+        match std::env::var(FAULT_ENV) {
+            Ok(s) if !s.trim().is_empty() => FaultSpec::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+}
+
 /// Row-id list as a JSON array.
 pub fn ids_json(ids: &[usize]) -> Json {
     Json::Arr(ids.iter().map(|&i| Json::from(i)).collect())
@@ -263,6 +416,25 @@ mod tests {
         assert_eq!(parse_f64s(&Json::arr_f64(&al)).unwrap(), al);
         assert!(parse_ids(&Json::from(3usize)).is_err());
         assert!(parse_ids(&Json::Arr(vec![Json::from(-1.0)])).is_err());
+    }
+
+    #[test]
+    fn fault_specs_parse_and_roundtrip() {
+        let s = FaultSpec::parse("worker:1,round:2,kind:exit").unwrap();
+        assert_eq!(s.worker, 1);
+        assert_eq!(s.plan, FaultPlan { round: 2, kind: FaultKind::Exit });
+        // Key order is free; the plan round-trips through its spec string.
+        let s = FaultSpec::parse("kind:stall, worker:0, round:3").unwrap();
+        assert_eq!(s.plan.kind, FaultKind::Stall);
+        assert_eq!(FaultPlan::parse(&s.plan.spec_string()).unwrap(), s.plan);
+        assert_eq!(
+            FaultPlan::parse("round:1,kind:garbage").unwrap().kind,
+            FaultKind::Garbage
+        );
+        assert!(FaultPlan::parse("round:1,kind:melt").is_err());
+        assert!(FaultPlan::parse("round:1").is_err());
+        assert!(FaultSpec::parse("round:1,kind:exit").is_err(), "worker index required");
+        assert!(FaultSpec::parse("worker:x,round:1,kind:exit").is_err());
     }
 
     #[test]

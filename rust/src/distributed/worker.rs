@@ -22,7 +22,9 @@ use crate::solver::{SmoConfig, SmoSolver};
 use crate::util::json::Json;
 use crate::util::wire::{self, error_response, Frame, TcpCodec};
 
-use super::{parse_f64s, parse_ids, Hello, ERR_BAD_REQUEST, ERR_PARSE, ERR_PROTOCOL};
+use super::{
+    parse_f64s, parse_ids, FaultKind, FaultPlan, Hello, ERR_BAD_REQUEST, ERR_PARSE, ERR_PROTOCOL,
+};
 
 /// Per-process worker settings (`dcsvm worker` flags).
 pub struct WorkerOptions {
@@ -32,11 +34,14 @@ pub struct WorkerOptions {
     pub cache_mb: usize,
     /// "native" | "pjrt" | "auto"
     pub backend: String,
+    /// Deterministic injected fault ([`super::FAULT_SELF_ENV`]); tests and
+    /// the bench fault leg only — production workers run with `None`.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for WorkerOptions {
     fn default() -> Self {
-        WorkerOptions { threads: 0, cache_mb: 256, backend: "native".into() }
+        WorkerOptions { threads: 0, cache_mb: 256, backend: "native".into(), fault: None }
     }
 }
 
@@ -147,7 +152,7 @@ pub fn serve_session(stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
 
     // --- shard: the row ids this worker owns ------------------------------
     let Some(msg) = read_msg(&mut codec)? else { return Ok(()) };
-    let shard = match parse_ids(msg.get("shard")) {
+    let mut shard = match parse_ids(msg.get("shard")) {
         Ok(ids) if !ids.is_empty() && ids.iter().all(|&i| i < tr.len()) => ids,
         Ok(_) => {
             return send_error(&mut codec, ERR_BAD_REQUEST, "shard ids empty or out of range")
@@ -175,10 +180,76 @@ pub fn serve_session(stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
             codec.write_json(&Json::obj(vec![("ok", Json::from(true))]))?;
             return Ok(());
         }
+        // Re-shard: adopt rows from a worker the coordinator lost. The
+        // context already covers the full training set (hello regenerated
+        // it), so extending ownership is pure bookkeeping; optional
+        // `alpha` seeds warm-start the adopted rows from the lost
+        // worker's last committed summary.
+        if msg.get("reshard") != &Json::Null {
+            let ids = match parse_ids(msg.get("reshard")) {
+                Ok(ids) => ids,
+                Err(_) => {
+                    send_error(&mut codec, ERR_PROTOCOL, "reshard needs an id array")?;
+                    continue;
+                }
+            };
+            if ids.is_empty() || ids.iter().any(|&i| i >= tr.len() || shard.contains(&i)) {
+                send_error(
+                    &mut codec,
+                    ERR_BAD_REQUEST,
+                    "reshard ids empty, out of range, or already owned",
+                )?;
+                continue;
+            }
+            let seeds = if msg.get("alpha") != &Json::Null {
+                match parse_f64s(msg.get("alpha")) {
+                    Ok(a) if a.len() == ids.len() => a,
+                    _ => {
+                        send_error(
+                            &mut codec,
+                            ERR_PROTOCOL,
+                            "reshard alpha must match the id array",
+                        )?;
+                        continue;
+                    }
+                }
+            } else {
+                vec![0.0; ids.len()]
+            };
+            shard.extend_from_slice(&ids);
+            alpha_local.extend_from_slice(&seeds);
+            codec.write_json(&Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("rows", Json::from(shard.len())),
+            ]))?;
+            continue;
+        }
         let Some(r) = msg.get("round").as_usize() else {
-            send_error(&mut codec, ERR_PROTOCOL, "expected round, done, or shutdown")?;
+            send_error(&mut codec, ERR_PROTOCOL, "expected round, reshard, done, or shutdown")?;
             continue;
         };
+        // Injected fault at the pinned round (tests/bench only).
+        if let Some(fault) = opts.fault.filter(|f| f.round == r) {
+            match fault.kind {
+                // Crash: drop the connection without replying.
+                FaultKind::Exit => return Ok(()),
+                // Hang: never reply, but unblock once the coordinator
+                // gives up on us and closes the connection.
+                FaultKind::Stall => loop {
+                    match codec.read_frame() {
+                        Ok(Frame::Eof) | Err(_) => return Ok(()),
+                        Ok(_) => continue,
+                    }
+                },
+                // Corruption: a syntactically-valid line that is not a
+                // round reply; the next read ends the session when the
+                // coordinator drops us.
+                FaultKind::Garbage => {
+                    codec.write_json(&Json::from("garbage-frame"))?;
+                    continue;
+                }
+            }
+        }
         let (ext_ids, ext_alpha) =
             match (parse_ids(msg.get("ext_ids")), parse_f64s(msg.get("ext_alpha"))) {
                 (Ok(i), Ok(a)) if i.len() == a.len() => (i, a),

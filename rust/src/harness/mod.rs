@@ -117,6 +117,20 @@ pub struct Outcome {
     /// (`--distributed` runs; each worker's local solves + external-offset
     /// dispatches).
     pub worker_values_computed: Option<u64>,
+    /// Workers declared lost mid-run — dead, stalled past
+    /// `--round-timeout`, or garbling the protocol (`--distributed` runs;
+    /// 0 for a clean run).
+    pub workers_lost: Option<u64>,
+    /// Rows moved from lost workers onto survivors via `reshard` messages
+    /// (`--distributed` runs; 0 when nothing was lost or respawn
+    /// recovered every loss).
+    pub resharded_rows: Option<u64>,
+    /// Interrupted rounds that were replayed after recovery
+    /// (`--distributed` runs; 0 for a clean run).
+    pub rounds_replayed: Option<u64>,
+    /// Lost locally-spawned workers successfully respawned under
+    /// `--worker-retries` (`--distributed` runs).
+    pub respawns: Option<u64>,
     /// Free-text extras (iteration counts, per-algo details). Structured
     /// metrics live in the typed fields above, not here.
     pub note: String,
@@ -152,6 +166,10 @@ impl Default for Outcome {
             comm_bytes: None,
             rounds: None,
             worker_values_computed: None,
+            workers_lost: None,
+            resharded_rows: None,
+            rounds_replayed: None,
+            respawns: None,
             note: String::new(),
         }
     }
@@ -241,6 +259,22 @@ impl Outcome {
             (
                 "worker_values_computed",
                 self.worker_values_computed.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "workers_lost",
+                self.workers_lost.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "resharded_rows",
+                self.resharded_rows.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "rounds_replayed",
+                self.rounds_replayed.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "respawns",
+                self.respawns.map(|r| Json::from(r as f64)).unwrap_or(Json::Null),
             ),
             ("note", Json::from(self.note.as_str())),
         ])

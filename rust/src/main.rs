@@ -101,7 +101,11 @@ fn print_usage() {
          \x20 --distributed {{true,false}} --workers N --workers-addr LIST --rounds R\n\
          \x20              (parallel block minimization over worker processes;\n\
          \x20               spawns N local workers unless --workers-addr names\n\
-         \x20               running `dcsvm worker` endpoints)"
+         \x20               running `dcsvm worker` endpoints)\n\
+         \x20 --round-timeout SECS --connect-timeout SECS --worker-retries N\n\
+         \x20              (fault tolerance: a worker that dies, garbles, or\n\
+         \x20               stalls past the round deadline is respawned or its\n\
+         \x20               rows re-shard onto survivors and the round replays)"
     );
 }
 
@@ -228,7 +232,8 @@ fn cmd_train_distributed(cfg: &RunConfig) -> Result<()> {
     );
     let out = dcsvm::distributed::train_distributed(cfg, &tr, &te)?;
     println!(
-        "{}: time={} acc={:.2}% svs={} comm_bytes={} rounds={} worker_values={} {}",
+        "{}: time={} acc={:.2}% svs={} comm_bytes={} rounds={} worker_values={} \
+         workers_lost={} resharded={} replays={} respawns={} {}",
         out.algo,
         fmt_secs(out.train_s),
         100.0 * out.accuracy,
@@ -236,6 +241,10 @@ fn cmd_train_distributed(cfg: &RunConfig) -> Result<()> {
         out.comm_bytes.unwrap_or(0),
         out.rounds.unwrap_or(0),
         out.worker_values_computed.unwrap_or(0),
+        out.workers_lost.unwrap_or(0),
+        out.resharded_rows.unwrap_or(0),
+        out.rounds_replayed.unwrap_or(0),
+        out.respawns.unwrap_or(0),
         out.note
     );
     if let Some(obj) = out.objective {
@@ -276,6 +285,9 @@ fn cmd_worker(args: &[String]) -> Result<()> {
     let Some(listen) = listen else {
         bail!("worker requires --listen ADDR\n{}", set.usage());
     };
+    // Injected-fault plan, planted by the coordinator on this one child
+    // (tests and the bench fault leg; never set by hand).
+    opts.fault = dcsvm::distributed::FaultPlan::from_self_env()?;
     let listener = std::net::TcpListener::bind(listen.as_str())
         .with_context(|| format!("worker: bind {listen}"))?;
     run_worker(listener, &opts)
@@ -850,6 +862,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut backend = "auto".to_string();
     let mut quant_route = false;
     let mut allow_swap = false;
+    let mut request_timeout: Option<f64> = None;
     for (flag, val) in pairs {
         match flag {
             "--model" => model_path = Some(val.to_string()),
@@ -861,6 +874,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--backend" => backend = val.to_string(),
             "--quant-route" => quant_route = set.boolean("--quant-route", val)?,
             "--allow-swap" => allow_swap = set.boolean("--allow-swap", val)?,
+            "--request-timeout" => {
+                request_timeout = Some(set.positive_f("--request-timeout", val)?)
+            }
             _ => unreachable!("SERVE_FLAGS covers every match arm"),
         }
     }
@@ -891,6 +907,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Box::new(move |kind, dim| harness::make_kernel(kind, &backend, dim));
         core = core.with_swap(factory, cache_mb << 20);
         eprintln!("hot swap enabled: {{\"swap_model\": FILE}} requests accepted");
+    }
+    if let Some(secs) = request_timeout {
+        core = core.with_request_timeout(std::time::Duration::from_secs_f64(secs));
+        eprintln!("request timeout: idle connections closed after {secs}s");
     }
     match &listen {
         Some(addr) => {

@@ -121,6 +121,12 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
         default: "false",
         help: "accept {\"swap_model\": FILE} requests: hot-swap to an updated model with zero downtime (see PROTOCOL.md)",
     },
+    FlagSpec {
+        flag: "--request-timeout",
+        value: "SECS",
+        default: "off",
+        help: "socket mode: close a connection idle past this deadline with a structured timeout error",
+    },
 ];
 
 /// The serve flag surface as a parseable [`FlagSet`]: `cmd_serve` parses
@@ -146,10 +152,14 @@ pub const ERR_DIM_MISMATCH: &str = "dim_mismatch";
 /// (`--allow-swap false`, the default), unreadable/invalid model file, or
 /// no kernel backend for the new model. The served model is untouched.
 pub const ERR_SWAP_FAILED: &str = "swap_failed";
+/// The connection sat idle past the server's `--request-timeout`
+/// deadline; the server answers with this error object and closes the
+/// connection cleanly instead of holding a handler thread forever.
+pub const ERR_TIMEOUT: &str = "timeout";
 /// Every `code` an error object can carry; PROTOCOL.md catalogues each
 /// (`tests/docs_sync.rs` enforces the catalogue).
 pub const ERROR_CODES: &[&str] =
-    &[ERR_PARSE, ERR_BAD_REQUEST, ERR_DIM_MISMATCH, ERR_SWAP_FAILED];
+    &[ERR_PARSE, ERR_BAD_REQUEST, ERR_DIM_MISMATCH, ERR_SWAP_FAILED, ERR_TIMEOUT];
 
 // The per-line byte cap and the read-poll interval are wire-layer
 // properties now (shared with the worker protocol); the serve-side names
@@ -201,6 +211,10 @@ pub struct ServeCore {
     /// cache byte budget for contexts that cannot adopt (kind/dim change).
     swap: Option<(KernelFactory, usize)>,
     swaps: AtomicUsize,
+    /// `Some` iff `--request-timeout` was set: a socket connection idle
+    /// past this (measured from its last completed request or its accept)
+    /// is answered with a structured [`ERR_TIMEOUT`] object and closed.
+    request_timeout: Option<Duration>,
 }
 
 impl ServeCore {
@@ -218,6 +232,7 @@ impl ServeCore {
             shutdown: AtomicBool::new(false),
             swap: None,
             swaps: AtomicUsize::new(0),
+            request_timeout: None,
         }
     }
 
@@ -226,6 +241,15 @@ impl ServeCore {
     /// the budget for non-adopting swaps.
     pub fn with_swap(mut self, factory: KernelFactory, cache_bytes: usize) -> ServeCore {
         self.swap = Some((factory, cache_bytes));
+        self
+    }
+
+    /// Enable the per-connection idle deadline (`--request-timeout`): a
+    /// socket connection that goes `t` without completing a request gets a
+    /// structured [`ERR_TIMEOUT`] error object and a clean close.
+    /// Detection granularity is one [`READ_POLL`] tick.
+    pub fn with_request_timeout(mut self, t: Duration) -> ServeCore {
+        self.request_timeout = Some(t);
         self
     }
 
@@ -485,9 +509,10 @@ pub fn handle_request(core: &ServeCore, line: &str) -> RequestOutcome {
 
 /// Serve one accepted connection to completion: one response line per
 /// request line, until EOF, a write failure (client went away — the
-/// SIGPIPE-as-EPIPE path), an oversized request line, or a shutdown
-/// request. Reads poll on [`READ_POLL`] so a worker parked on an idle
-/// connection still notices a shutdown requested elsewhere, and line
+/// SIGPIPE-as-EPIPE path), an oversized request line, an idle deadline
+/// (`--request-timeout` → structured [`ERR_TIMEOUT`] + close), or a
+/// shutdown request. Reads poll on [`READ_POLL`] so a worker parked on an
+/// idle connection still notices a shutdown requested elsewhere, and line
 /// length is bounded by [`MAX_REQUEST_BYTES`]. Emits a per-connection
 /// stats summary line on stderr when the connection ends.
 fn handle_connection(core: &ServeCore, stream: TcpStream, conn_id: usize) {
@@ -498,6 +523,10 @@ fn handle_connection(core: &ServeCore, stream: TcpStream, conn_id: usize) {
     let Ok(mut codec) = wire::tcp_codec(stream) else { return };
     let mut conn_totals = BatchStats::default();
     let mut requests = 0u64;
+    // Idle-deadline clock (`--request-timeout`): reset whenever a request
+    // completes, so the deadline bounds gaps between requests, not
+    // connection lifetime.
+    let mut last_activity = Instant::now();
     loop {
         // A back-to-back sender never produces an Idle frame, so the
         // shutdown flag must also be checked between served requests or a
@@ -513,7 +542,26 @@ fn handle_connection(core: &ServeCore, stream: TcpStream, conn_id: usize) {
         };
         match frame {
             Frame::Eof => break, // clean EOF between requests
-            Frame::Idle => continue,
+            Frame::Idle => {
+                // Read-poll tick with no bytes: the only place an idle
+                // deadline can fire (a mid-request stall surfaces here
+                // too, since partial lines never complete a frame).
+                if let Some(t) = core.request_timeout {
+                    if last_activity.elapsed() >= t {
+                        let resp = error_response(
+                            Json::Null,
+                            ERR_TIMEOUT,
+                            &format!(
+                                "connection idle past the {:.1}s --request-timeout deadline",
+                                t.as_secs_f64()
+                            ),
+                        );
+                        let _ = codec.write_json(&resp);
+                        break;
+                    }
+                }
+                continue;
+            }
             Frame::Overflow => {
                 let resp = error_response(
                     Json::Null,
@@ -535,6 +583,7 @@ fn handle_connection(core: &ServeCore, stream: TcpStream, conn_id: usize) {
                 if codec.write_json(&resp).is_err() {
                     break;
                 }
+                last_activity = Instant::now();
             }
             Frame::Line(line) => {
                 if line.trim().is_empty() {
@@ -548,6 +597,7 @@ fn handle_connection(core: &ServeCore, stream: TcpStream, conn_id: usize) {
                 if codec.write_json(&out.response).is_err() {
                     break;
                 }
+                last_activity = Instant::now();
                 if out.shutdown {
                     break;
                 }
@@ -956,6 +1006,50 @@ mod tests {
         assert!(core.shutdown_requested());
         assert_eq!(out.response.get("ok").as_bool(), Some(true));
         assert_eq!(out.response.get("shutdown").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn idle_connection_times_out_with_structured_error_and_close() {
+        use std::io::BufRead as _;
+        let core = tiny_core().with_request_timeout(Duration::from_millis(300));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let server = s.spawn(|| {
+                let (stream, _) = listener.accept().unwrap();
+                handle_connection(&core, stream, 0);
+            });
+            let client = TcpStream::connect(addr).unwrap();
+            let mut reader = std::io::BufReader::new(client.try_clone().unwrap());
+            // A request served before the deadline resets the idle clock —
+            // the timeout bounds gaps between requests, not connection age.
+            let dim = core.ctx().dim();
+            let line = decide_request(Some(Json::from(1usize)), &[vec![0.5f32; dim]]).to_string();
+            {
+                let mut w = client.try_clone().unwrap();
+                writeln!(w, "{line}").unwrap();
+            }
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let resp = Json::parse(&resp).unwrap();
+            assert_eq!(resp.get("error"), &Json::Null, "{resp}");
+            // Now go silent: the server must answer with a structured
+            // timeout error and close, not hold the handler forever.
+            let t0 = Instant::now();
+            let mut err_line = String::new();
+            reader.read_line(&mut err_line).unwrap();
+            let err = Json::parse(&err_line).unwrap();
+            assert_eq!(err.get("error").get("code").as_str(), Some(ERR_TIMEOUT), "{err}");
+            assert!(
+                err.get("error").get("message").as_str().unwrap().contains("--request-timeout"),
+                "{err}"
+            );
+            // ... followed by a clean EOF (read_line returns 0 bytes).
+            let mut eof = String::new();
+            assert_eq!(reader.read_line(&mut eof).unwrap(), 0, "{eof:?}");
+            assert!(t0.elapsed() < Duration::from_secs(10), "timeout took {:?}", t0.elapsed());
+            server.join().unwrap();
+        });
     }
 
     #[test]

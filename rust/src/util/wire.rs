@@ -25,7 +25,7 @@
 
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 
@@ -154,6 +154,26 @@ impl<R: BufRead, W: Write> Codec<R, W> {
         }
     }
 
+    /// [`Codec::read_frame`] with an absolute deadline: idle poll ticks
+    /// are consumed internally (partial bytes stay buffered across them)
+    /// until a complete frame arrives or the deadline passes — `Ok(None)`
+    /// means the deadline expired with no complete frame. The deadline's
+    /// granularity is one [`READ_POLL`] tick; `Idle` never surfaces to the
+    /// caller. This is the primitive round/request deadlines are built on
+    /// (distributed `--round-timeout`, serve `--request-timeout`).
+    pub fn read_frame_deadline(&mut self, deadline: Instant) -> io::Result<Option<Frame>> {
+        loop {
+            match self.read_frame()? {
+                Frame::Idle => {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                }
+                frame => return Ok(Some(frame)),
+            }
+        }
+    }
+
     fn take_line(&mut self) -> Frame {
         match String::from_utf8(std::mem::take(&mut self.buf)) {
             Ok(line) => Frame::Line(line),
@@ -250,6 +270,37 @@ mod tests {
         // Framing is intact: the next line still parses.
         let Ok(Frame::Line(l)) = c.read_frame() else { panic!() };
         assert_eq!(l.trim_end(), "{\"ok\": true}");
+    }
+
+    /// A reader that never has data, like a socket whose read timeout
+    /// keeps firing.
+    struct AlwaysBlocks;
+    impl std::io::Read for AlwaysBlocks {
+        fn read(&mut self, _: &mut [u8]) -> io::Result<usize> {
+            Err(io::Error::from(io::ErrorKind::WouldBlock))
+        }
+    }
+
+    #[test]
+    fn read_frame_deadline_expires_on_idle_and_serves_ready_lines() {
+        // A peer that produces nothing: the deadline expires as Ok(None).
+        let mut c = Codec::new(BufReader::new(AlwaysBlocks), Vec::new());
+        let t0 = std::time::Instant::now();
+        let got = c.read_frame_deadline(t0 + Duration::from_millis(20)).unwrap();
+        assert!(got.is_none(), "idle reader must time out");
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+
+        // A ready line is served immediately, well before the deadline.
+        let mut c = codec_over(b"{\"ok\": true}\n");
+        let got = c
+            .read_frame_deadline(std::time::Instant::now() + Duration::from_secs(60))
+            .unwrap();
+        assert!(matches!(got, Some(Frame::Line(l)) if l.trim_end() == "{\"ok\": true}"));
+        // EOF is a frame, not a timeout.
+        let got = c
+            .read_frame_deadline(std::time::Instant::now() + Duration::from_secs(60))
+            .unwrap();
+        assert!(matches!(got, Some(Frame::Eof)));
     }
 
     #[test]

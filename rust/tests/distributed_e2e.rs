@@ -1,12 +1,17 @@
 //! Distributed parallel block minimization, end to end over real sockets:
 //! a loopback protocol round-trip, the 2-worker vs single-process
 //! equivalence gate (same dual objective, same accuracy, α summaries only
-//! on the wire), and the worker-loss abort path.
+//! on the wire), and the fault matrix — a worker that exits, stalls past
+//! `--round-timeout`, or garbles mid-round is re-sharded onto survivors
+//! and the run still matches the single-process solve; losing every
+//! worker aborts with a structured error (never a hang); a killed
+//! locally-spawned worker is respawned under `--worker-retries`.
 //!
 //! Workers run as in-process threads on ephemeral listeners
-//! (`run_worker` serves one session per process in production; the
-//! spawn-local child-process path is exercised by `cli_roundtrip.rs`,
-//! which drives the real binary).
+//! (`run_worker` serves one session per process in production), with
+//! deterministic faults injected via [`WorkerOptions::fault`]. The
+//! respawn path needs a real child process to kill and replace, so that
+//! test drives the actual binary with the [`FAULT_ENV`] directive.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -14,20 +19,27 @@ use std::thread::JoinHandle;
 
 use dcsvm::cache::KernelContext;
 use dcsvm::config::RunConfig;
-use dcsvm::distributed::{ids_json, run_worker, train_distributed, Hello, WorkerOptions};
+use dcsvm::distributed::{
+    ids_json, run_worker, train_distributed, FaultKind, FaultPlan, Hello, WorkerOptions,
+};
 use dcsvm::harness;
 use dcsvm::predict::SvmModel;
 use dcsvm::solver::{SmoConfig, SmoSolver};
 use dcsvm::util::json::Json;
 use dcsvm::util::wire::{self, Frame, TcpCodec};
 
-/// A real worker on an ephemeral loopback port, serving one session.
-fn spawn_worker() -> (String, JoinHandle<()>) {
+/// A real worker on an ephemeral loopback port, serving one session,
+/// optionally with a deterministic injected fault.
+fn spawn_worker_with(fault: Option<FaultPlan>) -> (String, JoinHandle<()>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let opts = WorkerOptions { threads: 2, cache_mb: 64, backend: "native".into() };
+    let opts = WorkerOptions { threads: 2, cache_mb: 64, backend: "native".into(), fault };
     let h = std::thread::spawn(move || run_worker(listener, &opts).unwrap());
     (addr, h)
+}
+
+fn spawn_worker() -> (String, JoinHandle<()>) {
+    spawn_worker_with(None)
 }
 
 fn dist_cfg(addrs: &[String], n_train: usize, n_test: usize, eps: f64) -> RunConfig {
@@ -46,6 +58,23 @@ fn dist_cfg(addrs: &[String], n_train: usize, n_test: usize, eps: f64) -> RunCon
     }
 }
 
+/// The single-process comparator: one exact solve at `cfg.eps` on the
+/// same split, returning (objective, accuracy).
+fn single_process_reference(cfg: &RunConfig) -> (f64, f64) {
+    let (tr, te) = harness::load_dataset(cfg).unwrap();
+    let kind = cfg.kernel_kind().unwrap();
+    let kernel = harness::make_kernel(kind, "native", tr.dim).unwrap();
+    let ctx = KernelContext::new(&tr, kernel.as_ref(), 64 << 20).with_threads(2);
+    let res = SmoSolver::new(
+        ctx.view_full(),
+        SmoConfig { c: cfg.c, eps: cfg.eps, ..SmoConfig::default() },
+    )
+    .solve();
+    let model = SvmModel::from_ctx_alpha(&ctx, &res.alpha);
+    let te_ctx = KernelContext::new(&te, kernel.as_ref(), 1 << 20).with_threads(2);
+    (res.objective, model.accuracy_ctx(&te_ctx))
+}
+
 fn read_json(codec: &mut TcpCodec) -> Json {
     loop {
         match codec.read_frame().unwrap() {
@@ -62,8 +91,8 @@ fn read_json(codec: &mut TcpCodec) -> Json {
     }
 }
 
-/// Loopback unit round-trip: hello → shard → round → structured protocol
-/// error → shutdown, one worker, manual coordinator side.
+/// Loopback unit round-trip: hello → shard → round → reshard → structured
+/// protocol error → shutdown, one worker, manual coordinator side.
 #[test]
 fn loopback_worker_session_roundtrip() {
     let (addr, h) = spawn_worker();
@@ -112,10 +141,43 @@ fn loopback_worker_session_roundtrip() {
     assert!(r.get("objective").as_f64().is_some(), "{r}");
     assert!(r.get("values_computed").as_f64().unwrap() > 0.0, "{r}");
 
-    // Mismatched ext arrays → structured protocol error, session continues.
+    // Re-shard: adopt the odd rows (with warm seeds), as the coordinator
+    // does when their previous owner is lost. The ack reports the NEW
+    // total shard size.
+    let adopted: Vec<usize> = (1..120).step_by(2).collect();
+    codec
+        .write_json(&Json::obj(vec![
+            ("reshard", ids_json(&adopted)),
+            ("alpha", Json::arr_f64(&vec![0.5; adopted.len()])),
+        ]))
+        .unwrap();
+    let r = read_json(&mut codec);
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("rows").as_usize(), Some(120), "{r}");
+
+    // Re-sharding a row the worker already owns is a structured error
+    // (the session continues).
+    codec.write_json(&Json::obj(vec![("reshard", ids_json(&[0usize]))])).unwrap();
+    let r = read_json(&mut codec);
+    assert_eq!(r.get("error").get("code").as_str(), Some("bad_request"), "{r}");
+
+    // The next round solves the grown shard: summaries may now cover any
+    // of the 120 rows.
     codec
         .write_json(&Json::obj(vec![
             ("round", Json::from(2usize)),
+            ("ext_ids", Json::Arr(vec![])),
+            ("ext_alpha", Json::Arr(vec![])),
+        ]))
+        .unwrap();
+    let r = read_json(&mut codec);
+    assert_eq!(r.get("round").as_usize(), Some(2), "{r}");
+    assert!(!r.get("ids").as_arr().unwrap().is_empty(), "{r}");
+
+    // Mismatched ext arrays → structured protocol error, session continues.
+    codec
+        .write_json(&Json::obj(vec![
+            ("round", Json::from(3usize)),
             ("ext_ids", ids_json(&[0usize])),
             ("ext_alpha", Json::Arr(vec![])),
         ]))
@@ -145,20 +207,8 @@ fn two_worker_run_matches_single_process() {
     h0.join().unwrap();
     h1.join().unwrap();
 
-    // Single-process comparator at the same final tolerance.
-    let kind = cfg.kernel_kind().unwrap();
-    let kernel = harness::make_kernel(kind, "native", tr.dim).unwrap();
-    let ctx = KernelContext::new(&tr, kernel.as_ref(), 64 << 20).with_threads(2);
-    let res = SmoSolver::new(
-        ctx.view_full(),
-        SmoConfig { c: cfg.c, eps: cfg.eps, ..SmoConfig::default() },
-    )
-    .solve();
-    let model = SvmModel::from_ctx_alpha(&ctx, &res.alpha);
-    let te_ctx = KernelContext::new(&te, kernel.as_ref(), 1 << 20).with_threads(2);
-    let acc_single = model.accuracy_ctx(&te_ctx);
-
-    let (od, os) = (out.objective.unwrap(), res.objective);
+    let (os, acc_single) = single_process_reference(&cfg);
+    let od = out.objective.unwrap();
     assert!(
         (od - os).abs() <= 1e-6 * (1.0 + os.abs()),
         "distributed objective {od} vs single-process {os}"
@@ -182,6 +232,110 @@ fn two_worker_run_matches_single_process() {
     assert_eq!(out.algo, "Distributed");
     assert!(out.note.contains("workers=2"), "note: {}", out.note);
     assert!(out.note.contains("spawned=false"), "note: {}", out.note);
+
+    // A clean run records the recovery counters as explicit zeros.
+    assert_eq!(out.workers_lost, Some(0));
+    assert_eq!(out.resharded_rows, Some(0));
+    assert_eq!(out.rounds_replayed, Some(0));
+    assert_eq!(out.respawns, Some(0));
+}
+
+/// Fault matrix, exit: worker 1 closes its connection mid-round-2 without
+/// replying. The coordinator re-shards its rows onto worker 0, replays
+/// the round, and the run still matches the single-process solve to 1e-6
+/// relative objective and exact accuracy.
+#[test]
+fn worker_exit_mid_round_reshards_and_matches_single_process() {
+    let (a0, h0) = spawn_worker();
+    let (a1, h1) =
+        spawn_worker_with(Some(FaultPlan { round: 2, kind: FaultKind::Exit }));
+    let cfg = dist_cfg(&[a0, a1], 300, 100, 1e-8);
+    let (tr, te) = harness::load_dataset(&cfg).unwrap();
+
+    let out = train_distributed(&cfg, &tr, &te).unwrap();
+    h0.join().unwrap();
+    h1.join().unwrap();
+
+    assert_eq!(out.workers_lost, Some(1), "note: {}", out.note);
+    assert!(
+        out.resharded_rows.unwrap() > 0,
+        "the lost worker's rows must move to the survivor"
+    );
+    assert!(out.rounds_replayed.unwrap() >= 1, "the interrupted round must replay");
+    assert_eq!(out.respawns, Some(0), "attached workers are never respawned");
+    assert_eq!(out.rounds, Some(2));
+
+    let (os, acc_single) = single_process_reference(&cfg);
+    let od = out.objective.unwrap();
+    assert!(
+        (od - os).abs() <= 1e-6 * (1.0 + os.abs()),
+        "post-recovery objective {od} vs single-process {os}"
+    );
+    assert_eq!(
+        out.accuracy, acc_single,
+        "a run that lost a worker must still classify identically"
+    );
+}
+
+/// Fault matrix, stall: worker 1 stops replying mid-round-2 but holds its
+/// connection open — only the `--round-timeout` deadline can catch it.
+/// Recovery and the equivalence gates are identical to the exit case.
+#[test]
+fn worker_stall_past_round_timeout_reshards_and_matches() {
+    let (a0, h0) = spawn_worker();
+    let (a1, h1) =
+        spawn_worker_with(Some(FaultPlan { round: 2, kind: FaultKind::Stall }));
+    let mut cfg = dist_cfg(&[a0, a1], 240, 80, 1e-8);
+    cfg.round_timeout = 2.0; // stall detection = deadline, not EOF
+
+    let (tr, te) = harness::load_dataset(&cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    let out = train_distributed(&cfg, &tr, &te).unwrap();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "stall recovery took {:?}",
+        t0.elapsed()
+    );
+    // Retiring the stalled worker closes its connection, which unblocks
+    // the stalled thread — both joins must return promptly.
+    h0.join().unwrap();
+    h1.join().unwrap();
+
+    assert_eq!(out.workers_lost, Some(1), "note: {}", out.note);
+    assert!(out.resharded_rows.unwrap() > 0);
+    assert!(out.rounds_replayed.unwrap() >= 1);
+    assert_eq!(out.respawns, Some(0));
+
+    let (os, acc_single) = single_process_reference(&cfg);
+    let od = out.objective.unwrap();
+    assert!(
+        (od - os).abs() <= 1e-6 * (1.0 + os.abs()),
+        "post-recovery objective {od} vs single-process {os}"
+    );
+    assert_eq!(out.accuracy, acc_single);
+}
+
+/// Fault matrix, garbage: worker 1 answers round 1 with a syntactically
+/// valid line that is not a round reply. The coordinator must treat it as
+/// a lost worker (not crash, not accept it) and recover by re-sharding.
+#[test]
+fn worker_garbage_reply_is_retired_and_the_run_recovers() {
+    let (a0, h0) = spawn_worker();
+    let (a1, h1) =
+        spawn_worker_with(Some(FaultPlan { round: 1, kind: FaultKind::Garbage }));
+    let cfg = dist_cfg(&[a0, a1], 160, 60, 1e-4);
+    let (tr, te) = harness::load_dataset(&cfg).unwrap();
+
+    let out = train_distributed(&cfg, &tr, &te).unwrap();
+    h0.join().unwrap();
+    h1.join().unwrap();
+
+    assert_eq!(out.workers_lost, Some(1), "note: {}", out.note);
+    // Lost in round 1: no committed summary yet, so the moved rows carry
+    // zero seeds — but they all move.
+    assert_eq!(out.resharded_rows, Some(80));
+    assert!(out.rounds_replayed.unwrap() >= 1);
+    assert!(out.accuracy > 0.5, "recovered run must still train a real model");
 }
 
 /// A protocol-fluent stub that dies between rounds: answers hello and
@@ -215,12 +369,12 @@ fn spawn_stub_worker_dying_mid_round(n: usize) -> (String, JoinHandle<()>) {
     (addr, h)
 }
 
-/// Losing a worker mid-round must abort the run with a structured
-/// `worker_lost` error promptly (within read-poll ticks, not a hang) and
-/// release the surviving worker cleanly.
+/// Losing EVERY worker is the one unrecoverable case: with nothing left
+/// to re-shard onto, the run must abort with a structured `worker_lost`
+/// error promptly (within read-poll ticks, not a hang).
 #[test]
-fn lost_worker_aborts_the_run_with_a_structured_error() {
-    let (a0, h0) = spawn_worker();
+fn losing_all_workers_aborts_with_a_structured_error() {
+    let (a0, h0) = spawn_stub_worker_dying_mid_round(100);
     let (a1, h1) = spawn_stub_worker_dying_mid_round(100);
     let cfg = dist_cfg(&[a0, a1], 100, 40, 1e-4);
     let (tr, te) = harness::load_dataset(&cfg).unwrap();
@@ -229,14 +383,89 @@ fn lost_worker_aborts_the_run_with_a_structured_error() {
     let err = train_distributed(&cfg, &tr, &te).unwrap_err().to_string();
     assert!(
         t0.elapsed() < std::time::Duration::from_secs(20),
-        "coordinator hung on a dead worker: {:?}",
+        "coordinator hung on dead workers: {:?}",
         t0.elapsed()
     );
     assert!(err.contains("worker_lost"), "{err}");
-    assert!(err.contains("worker 1"), "{err}");
+    assert!(err.contains("all 2 workers lost"), "{err}");
 
-    // The surviving worker's session ends on coordinator EOF; the stub
-    // already exited. Neither thread leaks.
     h0.join().unwrap();
     h1.join().unwrap();
+}
+
+/// The respawn path needs a real child process to kill and replace, so
+/// this test drives the actual binary: spawn-local 2-worker train with an
+/// injected exit in worker 1 and `--worker-retries 2`. The coordinator
+/// must respawn the worker (same shard, clean environment) rather than
+/// re-shard, and the run completes.
+#[test]
+fn respawn_recovers_a_killed_local_worker() {
+    // target dir of the test binary: target/debug/deps/... → target/debug
+    let mut bin = std::env::current_exe().unwrap();
+    bin.pop();
+    if bin.ends_with("deps") {
+        bin.pop();
+    }
+    let bin = bin.join("dcsvm");
+    if !bin.exists() {
+        panic!("dcsvm binary not built at {}", bin.display());
+    }
+    let dir = std::env::temp_dir().join("dcsvm_respawn_e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let out = std::process::Command::new(&bin)
+        .args([
+            "train",
+            "--distributed",
+            "true",
+            "--workers",
+            "2",
+            "--rounds",
+            "2",
+            "--dataset",
+            "covtype-like",
+            "--n-train",
+            "200",
+            "--n-test",
+            "60",
+            "--gamma",
+            "16",
+            "--c",
+            "4",
+            "--backend",
+            "native",
+            "--threads",
+            "2",
+            "--worker-retries",
+            "2",
+        ])
+        .env("DCSVM_FAULT", "worker:1,round:2,kind:exit")
+        .env("DCSVM_RESULTS_DIR", dir.to_str().unwrap())
+        .output()
+        .expect("spawn dcsvm train --distributed");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(out.status.success(), "respawn run failed:\n{text}");
+
+    let results = std::fs::read_to_string(dir.join("results.jsonl")).unwrap();
+    let last = results.lines().last().expect("one result line");
+    let outcome = Json::parse(last).unwrap();
+    let outcome = outcome.get("outcome");
+    assert!(
+        outcome.get("respawns").as_f64().unwrap() >= 1.0,
+        "worker must be respawned, not re-sharded:\n{text}"
+    );
+    assert!(outcome.get("workers_lost").as_f64().unwrap() >= 1.0, "{text}");
+    assert_eq!(
+        outcome.get("resharded_rows").as_f64(),
+        Some(0.0),
+        "respawn keeps the shard in place:\n{text}"
+    );
+    assert!(outcome.get("rounds_replayed").as_f64().unwrap() >= 1.0, "{text}");
+    assert!(outcome.get("accuracy").as_f64().unwrap() > 0.5, "{text}");
+    assert!(text.contains("respawned"), "stderr should log the respawn:\n{text}");
 }

@@ -91,3 +91,18 @@ fn protocol_doc_catalogues_the_worker_wire_protocol() {
         );
     }
 }
+
+/// PROTOCOL.md must document the fault-recovery surface: the `reshard`
+/// message workers accept during recovery, and the deadline flags the
+/// coordinator's detection is built on.
+#[test]
+fn protocol_doc_covers_recovery_semantics() {
+    let proto = repo_file("PROTOCOL.md");
+    for needle in ["`reshard`", "`--round-timeout`", "`--worker-retries`", "`--request-timeout`"]
+    {
+        assert!(
+            proto.contains(needle),
+            "PROTOCOL.md recovery/timeout documentation is missing {needle}"
+        );
+    }
+}

@@ -71,6 +71,20 @@ WATCHED = [
     # keep matching the single-process one on held-out accuracy.
     ("distributed.comm_bytes", "lower-better"),
     ("distributed.accuracy", "higher-better"),
+    # Fault-tolerance invariants (ISSUE 10): a clean distributed run must
+    # never trip the recovery machinery — every recovery counter stays 0 —
+    # while the fault leg (worker 1 killed mid-round) must keep recovering
+    # to the clean run's quality without its recovery cost creeping up
+    # (extra replayed rounds or re-shard churn mean detection got slower or
+    # the re-shard planner got sloppier).
+    ("distributed.workers_lost", "zero"),
+    ("distributed.resharded_rows", "zero"),
+    ("distributed.rounds_replayed", "zero"),
+    ("distributed.respawns", "zero"),
+    ("distributed_fault.accuracy", "higher-better"),
+    ("distributed_fault.comm_bytes", "lower-better"),
+    ("distributed_fault.rounds_replayed", "lower-better"),
+    ("distributed_fault.resharded_rows", "lower-better"),
 ]
 
 

@@ -63,7 +63,19 @@ conquers — and requires the harness record to carry the `comm_bytes`/
 `rounds`/`worker_values_computed` counters with `comm_bytes` staying far
 below one serialized kernel block. Results land in the REQUIRED
 `distributed` section of BENCH_ci.json; `bench_diff.py` watches
-`distributed.comm_bytes` lower-better.
+`distributed.comm_bytes` lower-better, and holds the recovery counters
+(`workers_lost`, `resharded_rows`, `rounds_replayed`, `respawns`) to
+exactly zero on the clean leg.
+
+The fault leg (ISSUE 10) proves recovery end to end through the real
+binary: a clean 3-worker reference run at tight eps, then the identical
+config with `DCSVM_FAULT=worker:1,round:2,kind:exit` so worker 1 kills
+itself mid-round. Gates: the faulted run still exits 0, reports exactly
+one lost worker, re-shards its rows (> 0) onto the survivors, replays
+the interrupted round, matches the clean run's test accuracy exactly
+and its objective within 1e-6 relative. Results land in the REQUIRED
+`distributed_fault` section of BENCH_ci.json, watched by
+`bench_diff.py`.
 
 Usage: bench_smoke.py [--binary target/release/dcsvm] [--out BENCH_ci.json]
                       [--threads 2]
@@ -113,13 +125,24 @@ REQUIRED_UPDATE = [
 ]
 
 # Distributed-train harness-outcome fields: the wire-efficiency counters
-# are the whole point of the leg and must always be recorded.
+# are the whole point of the leg, and the fault-recovery counters (ISSUE
+# 10) must be recorded on EVERY distributed run — zero when clean — so a
+# silent counter removal fails here, not in a postmortem.
 REQUIRED_DIST = ["train_s", "accuracy", "objective", "comm_bytes", "rounds",
-                 "worker_values_computed"]
+                 "worker_values_computed", "workers_lost", "resharded_rows",
+                 "rounds_replayed", "respawns"]
 DIST_WORKERS = 2
 DIST_ROUNDS = 2
 DIST_N_TRAIN = 300
 DIST_N_TEST = 100
+# Fault leg: 3 spawned workers, worker 1 killed at round 2 via DCSVM_FAULT;
+# the run must re-shard onto the survivors and still match the clean
+# reference run (exact accuracy, objective within FAULT_OBJ_RTOL relative).
+# Tight eps so both conquer solves converge to the same objective.
+FAULT_WORKERS = 3
+FAULT_SPEC = "worker:1,round:2,kind:exit"
+FAULT_EPS = "1e-8"
+FAULT_OBJ_RTOL = 1e-6
 
 # Multiclass (OVO) harness-outcome fields: the shared-context pair counters
 # must be recorded alongside the usual quality numbers.
@@ -463,6 +486,74 @@ def main() -> None:
              "worker counters are not flowing back")
     dist_stats["workers"] = DIST_WORKERS
     dist_stats["kernel_block_bytes"] = kernel_block_bytes
+    for counter in ("workers_lost", "resharded_rows", "rounds_replayed", "respawns"):
+        if dist_stats[counter] != 0:
+            fail(f"clean distributed run reported {counter}={dist_stats[counter]}; "
+                 "recovery machinery fired without a fault")
+
+    # ---- fault leg: kill worker 1 mid-round, assert full recovery --------
+    # The same distributed config run twice at tight eps: once clean (the
+    # reference), once with DCSVM_FAULT making worker 1 exit at round 2.
+    # The faulted run must survive by re-sharding the lost rows onto the
+    # survivors and replaying the round — and the recovered result must
+    # match the reference exactly on accuracy and within FAULT_OBJ_RTOL
+    # relative on the dual objective (recovery never costs correctness).
+    fault_flags = [args.binary, "train", "--distributed", "true",
+                   "--workers", str(FAULT_WORKERS), "--rounds", str(DIST_ROUNDS),
+                   "--dataset", "covtype-like", "--n-train", str(DIST_N_TRAIN),
+                   "--n-test", str(DIST_N_TEST), "--gamma", "16", "--c", "4",
+                   "--eps", FAULT_EPS, "--backend", "native", "--seed", "0",
+                   "--threads", threads]
+
+    def dist_record(run_env, what):
+        q = run(fault_flags, env=run_env, capture_output=True, text=True)
+        if q.returncode != 0:
+            fail(f"{what} exited {q.returncode}\nstdout:\n{q.stdout}\nstderr:\n{q.stderr}")
+        with open(results_path, encoding="utf-8") as f:
+            recs = [json.loads(line) for line in f if line.strip()]
+        out = recs[-1].get("outcome")
+        if not isinstance(out, dict) or out.get("algo") != "Distributed":
+            fail(f"{what} recorded no outcome: {json.dumps(recs[-1])[:400]}")
+        return require(out, REQUIRED_DIST, what)
+
+    clean_ref = dist_record(env, "fault-leg clean reference")
+    faulted = dist_record(dict(env, DCSVM_FAULT=FAULT_SPEC), "faulted distributed train")
+    if faulted["workers_lost"] != 1:
+        fail(f"faulted run lost {faulted['workers_lost']} workers, expected exactly 1")
+    if faulted["resharded_rows"] <= 0:
+        fail("faulted run re-sharded no rows; the lost shard was dropped, not recovered")
+    if faulted["rounds_replayed"] < 1:
+        fail("faulted run replayed no rounds; the interrupted round was not recovered")
+    if faulted["respawns"] != 0:
+        fail(f"faulted run respawned {faulted['respawns']} workers with "
+             "--worker-retries at its 0 default")
+    if faulted["accuracy"] != clean_ref["accuracy"]:
+        fail(f"fault recovery changed test accuracy: clean {clean_ref['accuracy']} "
+             f"vs faulted {faulted['accuracy']}")
+    obj_rel = abs(faulted["objective"] - clean_ref["objective"]) / max(
+        1.0, abs(clean_ref["objective"]))
+    if obj_rel > FAULT_OBJ_RTOL:
+        fail(f"fault recovery moved the objective by {obj_rel:.2e} relative "
+             f"(gate {FAULT_OBJ_RTOL:.0e}): clean {clean_ref['objective']} "
+             f"vs faulted {faulted['objective']}")
+    print(
+        f"bench_smoke: fault leg: lost {faulted['workers_lost']:.0f} worker, "
+        f"re-sharded {faulted['resharded_rows']:.0f} rows, replayed "
+        f"{faulted['rounds_replayed']:.0f} round(s); objective rel diff "
+        f"{obj_rel:.2e}, accuracy match",
+        file=sys.stderr,
+    )
+    fault_stats = {
+        "workers": FAULT_WORKERS,
+        "fault": FAULT_SPEC,
+        "clean": clean_ref,
+        "faulted": faulted,
+        "objective_rel_diff": obj_rel,
+        "accuracy": faulted["accuracy"],
+        "comm_bytes": faulted["comm_bytes"],
+        "resharded_rows": faulted["resharded_rows"],
+        "rounds_replayed": faulted["rounds_replayed"],
+    }
 
     # ---- streaming update leg (train -> update -> no-op update) ----------
     # A self-contained labeled stream: bootstrap a model from a zero-SV
@@ -631,6 +722,7 @@ def main() -> None:
         },
         "serve_swap": serve_swap,
         "distributed": dist_stats,
+        "distributed_fault": fault_stats,
         "multiclass": {
             "classes": OVO_CLASSES,
             "machines": OVO_MACHINES,
